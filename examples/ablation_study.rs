@@ -1,0 +1,67 @@
+//! Ablation study (the Figure 3 experiment as a runnable example):
+//! executes all eight ablation artifacts on identical inputs, verifies
+//! they agree numerically, and prints both the measured CPU wallclock and
+//! the simulated RTX 3090 TFLOPs ladder side by side.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+use mlir_gemm::harness::{ablation_schedule, ABLATION_LABELS};
+use mlir_gemm::runtime::{ArtifactKind, Runtime, Tensor};
+use mlir_gemm::sim::{simulate, DeviceModel};
+use mlir_gemm::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::open(&dir)?;
+    let device = DeviceModel::rtx3090();
+
+    let mut ablations: Vec<_> = rt
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Ablation)
+        .cloned()
+        .collect();
+    ablations.sort_by_key(|a| a.schedule.as_ref().unwrap().opt_level);
+    if ablations.is_empty() {
+        return Err(anyhow!("no ablation artifacts; run `make artifacts`"));
+    }
+    let (m, n, k) = ablations[0].problem.unwrap();
+    let mut rng = Rng::new(0);
+    let inputs = vec![
+        Tensor::new(vec![m, k], rng.normal_matrix(m, k))?,
+        Tensor::new(vec![k, n], rng.normal_matrix(k, n))?,
+        Tensor::new(vec![m, n], rng.normal_matrix(m, n))?,
+    ];
+
+    println!(
+        "{:<24} {:>12} {:>16} {:>18}",
+        "level", "measured ms", "sim 3090 TFLOPs", "agrees w/ full?"
+    );
+    let full = rt.execute(&ablations.last().unwrap().name, &inputs)?;
+    for a in &ablations {
+        let sched = a.schedule.as_ref().unwrap();
+        let loaded = rt.load(&a.name)?;
+        // warm + one timed run (full protocol lives in `cargo bench fig3`)
+        rt.execute_timed(&loaded, &inputs)?;
+        let (out, t) = rt.execute_timed(&loaded, &inputs)?;
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (g, w) in out[0].data.iter().zip(&full[0].data) {
+            num += ((g - w) as f64).powi(2);
+            den += (*w as f64).powi(2);
+        }
+        let agrees = (num / den.max(1e-30)).sqrt() < 2e-3;
+        let sim_tf = simulate(&ablation_schedule(sched.opt_level, 8192), &device).tflops;
+        println!(
+            "{:<24} {:>12.3} {:>16.2} {:>18}",
+            ABLATION_LABELS[sched.opt_level as usize],
+            t.exec_seconds * 1e3,
+            sim_tf,
+            if agrees { "yes" } else { "NO" },
+        );
+        assert!(agrees, "{} diverges from full pipeline", a.name);
+    }
+    println!("\nablation_study OK (sim column reproduces the Figure 3 ladder)");
+    Ok(())
+}

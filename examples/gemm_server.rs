@@ -1,0 +1,105 @@
+//! GEMM-as-a-service: the L3 coordinator serving batched requests.
+//!
+//! Spins up the server over the built artifacts, fires a mixed workload
+//! (several shapes, fused and plain epilogues, occasional baseline routes)
+//! from multiple client threads, and prints the latency/throughput report
+//! — the serving-paper-style end-to-end driver of DESIGN.md.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::runtime::{Runtime, Tensor};
+use mlir_gemm::sim::DeviceModel;
+use mlir_gemm::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Arc::new(Runtime::open(&dir)?);
+    let device = DeviceModel::rtx3090();
+    println!("starting server (profile-guided variant re-ranking on)...");
+    let server = Arc::new(Server::start(
+        rt,
+        &device,
+        ServerConfig { workers: 4, rerank_measured: true, ..Default::default() },
+    ));
+
+    let keys: Vec<GemmKey> = server.registry().keys().cloned().collect();
+    if keys.is_empty() {
+        return Err(anyhow!("no kernels registered; run `make artifacts`"));
+    }
+    println!("registered shapes:");
+    for key in &keys {
+        let best = server.registry().best(key).unwrap();
+        println!(
+            "  {}x{}x{} {} {:<10} -> {} (predicted {:.1} TFLOPs on the modeled 3090)",
+            key.m, key.n, key.k,
+            key.dtype_acc.name(), key.epilogue,
+            best.artifact,
+            best.predicted_tflops.unwrap_or(0.0),
+        );
+    }
+
+    // Warm every route once so the measured phase excludes XLA compilation.
+    let mut rng = Rng::new(1);
+    for key in &keys {
+        let _ = server.call(request(&mut rng, key))?;
+    }
+
+    // Fire traffic from 4 client threads.
+    const PER_CLIENT: usize = 16;
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for cid in 0..4u64 {
+        let server = server.clone();
+        let keys = keys.clone();
+        clients.push(std::thread::spawn(move || -> Result<usize> {
+            let mut rng = Rng::new(100 + cid);
+            let mut ok = 0;
+            let mut pending = Vec::new();
+            for _ in 0..PER_CLIENT {
+                let key = rng.choice(&keys).clone();
+                pending.push(server.submit(request(&mut rng, &key)));
+            }
+            for rx in pending {
+                let resp = rx.recv().map_err(|_| anyhow!("server gone"))?;
+                if resp.output.is_ok() {
+                    ok += 1;
+                }
+            }
+            Ok(ok)
+        }));
+    }
+    let mut total_ok = 0;
+    for c in clients {
+        total_ok += c.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\n{} requests in {:.2} s -> {:.1} req/s",
+        total_ok,
+        wall,
+        total_ok as f64 / wall
+    );
+    let snapshot = server.metrics();
+    println!("{}", snapshot.report());
+    assert_eq!(total_ok, 4 * PER_CLIENT, "all requests must succeed");
+    println!("gemm_server OK");
+    Ok(())
+}
+
+fn request(rng: &mut Rng, key: &GemmKey) -> GemmRequest {
+    let bias = (key.epilogue != "none")
+        .then(|| Tensor::new(vec![key.n], rng.normal_matrix(1, key.n)).unwrap());
+    GemmRequest {
+        key: key.clone(),
+        a: Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k)).unwrap(),
+        b: Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n)).unwrap(),
+        c: Tensor::zeros(vec![key.m, key.n]),
+        bias,
+        use_baseline: false,
+    }
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load a pipeline-generated GEMM kernel and execute it.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the three-layer story end to end: the artifact was produced by
+//! the tile-IR lowering pipeline (L2/L1, python, build time); here Rust
+//! (L3) loads the HLO text, compiles it on the PJRT CPU client, runs it,
+//! and checks the numbers against a host reference.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+use mlir_gemm::runtime::{ArtifactKind, Runtime, Tensor};
+use mlir_gemm::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::open(&dir)?;
+
+    // Pick the fully-optimized generated kernel at 256^3 (mixed precision).
+    let meta = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Generated && a.problem == Some((256, 256, 256)))
+        .ok_or_else(|| anyhow!("no 256^3 generated kernel; run `make artifacts`"))?
+        .clone();
+    println!("kernel:   {}", meta.name);
+    let sched = meta.schedule.as_ref().unwrap();
+    println!(
+        "schedule: tb {:?}, warp {:?}, grid {:?}, {} B shared, {} accumulators/warp",
+        sched.tile_tb, sched.tile_warp, sched.grid, sched.smem_bytes,
+        sched.accumulators_per_warp
+    );
+
+    // Random inputs; C = A @ B + C.
+    let (m, n, k) = (256, 256, 256);
+    let mut rng = Rng::new(7);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let c = rng.normal_matrix(m, n);
+    let out = rt.execute(
+        &meta.name,
+        &[
+            Tensor::new(vec![m, k], a.clone())?,
+            Tensor::new(vec![k, n], b.clone())?,
+            Tensor::new(vec![m, n], c.clone())?,
+        ],
+    )?;
+
+    // Spot-check against a host dot product.
+    let mut worst = 0f64;
+    for &(i, j) in &[(0usize, 0usize), (17, 200), (255, 255), (128, 64)] {
+        let want: f64 = (0..k).map(|kk| a[i * k + kk] as f64 * b[kk * n + j] as f64).sum::<f64>()
+            + c[i * n + j] as f64;
+        let got = out[0].data[i * n + j] as f64;
+        worst = worst.max((got - want).abs() / want.abs().max(1.0));
+        println!("C[{i:>3},{j:>3}] = {got:>9.4}  (host ref {want:>9.4})");
+    }
+    println!("worst relative error: {worst:.2e} (f16 inputs, f32 accumulate)");
+    assert!(worst < 5e-2);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,259 @@
+"""AOT lowering driver: jax graphs -> artifacts/*.hlo.txt + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example and
+DESIGN.md.
+
+The manifest records, for every artifact: the file, the input/output
+shapes and dtypes, the kind (generated | baseline | fused | unfused |
+hand | transformer), and — for generated kernels — the full Schedule the
+Rust simulator and autotuner consume.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile
+target).  ``--quick`` lowers a reduced variant set for fast iteration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import asdict
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import generate_matmul_with_schedule, hand_optimized_matmul, jdtype
+from .model import (
+    matmul_baseline,
+    transformer_layer,
+    transformer_layer_inputs,
+    unfused_epilogue,
+)
+from .tileir import PipelineConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> Dict:
+    name = {"float16": "f16", "bfloat16": "bf16", "float32": "f32"}[str(s.dtype)]
+    return {"shape": list(s.shape), "dtype": name}
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[Dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def lower(
+        self,
+        name: str,
+        fn: Callable,
+        arg_shapes: Sequence[jax.ShapeDtypeStruct],
+        kind: str,
+        schedule: Optional[Dict] = None,
+        extra: Optional[Dict] = None,
+    ) -> None:
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*arg_shapes)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            _shape_entry(o) for o in jax.eval_shape(fn, *arg_shapes)
+        ]
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "inputs": [_shape_entry(s) for s in arg_shapes],
+            "outputs": out_shapes,
+        }
+        if schedule is not None:
+            entry["schedule"] = schedule
+        if extra:
+            entry.update(extra)
+        self.entries.append(entry)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    def finish(self) -> None:
+        manifest = os.path.join(self.out_dir, "manifest.json")
+        with open(manifest, "w") as f:
+            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
+        print(f"manifest: {manifest} ({len(self.entries)} artifacts)")
+
+
+def _mm_shapes(m, n, k, dtype_in, dtype_acc, bias=False):
+    """External I/O is always f32: the xla crate's F16 is a dummy type with
+    no literal constructors, so precision casts live *inside* the graph
+    (exactly like cuBLAS's internal TF32/f16 conversion modes)."""
+    f32 = jnp.float32
+    shapes = [
+        jax.ShapeDtypeStruct((m, k), f32),
+        jax.ShapeDtypeStruct((k, n), f32),
+        jax.ShapeDtypeStruct((m, n), f32),
+    ]
+    if bias:
+        shapes.append(jax.ShapeDtypeStruct((n,), f32))
+    return shapes
+
+
+def as_f32_io(fn):
+    """Wrap a graph so its outputs are f32 at the artifact boundary."""
+
+    def wrapped(*args):
+        return tuple(o.astype(jnp.float32) for o in fn(*args))
+
+    return wrapped
+
+
+def _emit_generated(w: ArtifactWriter, config: PipelineConfig, kind="generated"):
+    kernel, sched = generate_matmul_with_schedule(config)
+    bias = config.epilogue != "none"
+
+    if bias:
+
+        def fn(a, b, c, bias_vec):
+            return (kernel(a, b, c, bias_vec),)
+
+    else:
+
+        def fn(a, b, c):
+            return (kernel(a, b, c),)
+
+    w.lower(
+        sched.name,
+        as_f32_io(fn),
+        _mm_shapes(config.m, config.n, config.k, config.dtype_in,
+                   config.dtype_acc, bias),
+        kind=kind,
+        schedule=sched.to_json_dict(),
+    )
+
+
+def _emit_baseline(w: ArtifactWriter, m, n, k, dtype_in="f16", dtype_acc="f32"):
+    fn = as_f32_io(matmul_baseline(m, n, k, dtype_in, dtype_acc))
+    w.lower(
+        f"baseline_m{m}n{n}k{k}_{dtype_in}_{dtype_acc}",
+        fn,
+        _mm_shapes(m, n, k, dtype_in, dtype_acc),
+        kind="baseline",
+        extra={"m": m, "n": n, "k": k, "dtype_in": dtype_in, "dtype_acc": dtype_acc},
+    )
+
+
+# Tile candidates per problem size, mirroring §4.1's observation that small
+# problems prefer small (occupancy-friendly) tiles and large problems big
+# (reuse-friendly) tiles.  The Rust autotuner picks among these.
+def tile_candidates(size: int):
+    cands = [((64, 64, 64), (32, 32, 32))]
+    if size >= 512:
+        cands.append(((128, 128, 64), (64, 32, 32)))
+    return cands
+
+
+def build_all(out_dir: str, quick: bool = False) -> None:
+    w = ArtifactWriter(out_dir)
+
+    sweep_sizes = [256] if quick else [256, 512, 1024]
+    print("== generated + baseline matmuls (fig2 real-execution subset) ==")
+    for size in sweep_sizes:
+        for tb, warp in tile_candidates(size):
+            cfg = PipelineConfig(m=size, n=size, k=size, tile_tb=tb, tile_warp=warp)
+            _emit_generated(w, cfg)
+        _emit_baseline(w, size, size, size)
+
+    print("== half-precision variants (fig4 real-execution subset) ==")
+    for size in [256] if quick else [256, 512]:
+        tb, warp = tile_candidates(size)[0]
+        cfg = PipelineConfig(
+            m=size, n=size, k=size, dtype_acc="f16", tile_tb=tb, tile_warp=warp
+        )
+        _emit_generated(w, cfg)
+        _emit_baseline(w, size, size, size, dtype_acc="f16")
+
+    print("== ablation ladder (fig3 real-execution check) ==")
+    abl_size = 256
+    for level in range(8):
+        cfg = PipelineConfig.opt_level(
+            level, m=abl_size, n=abl_size, k=abl_size,
+            tile_tb=(64, 64, 64), tile_warp=(32, 32, 32),
+        )
+        _emit_generated(w, cfg, kind="ablation")
+
+    print("== operator fusion (table1) ==")
+    fsize = 256 if quick else 512
+    fused_cfg = PipelineConfig(
+        m=fsize, n=fsize, k=fsize, epilogue="bias_relu",
+        tile_tb=(64, 64, 64), tile_warp=(32, 32, 32),
+    )
+    _emit_generated(w, fused_cfg, kind="fused")
+    unfused_cfg = PipelineConfig(
+        m=fsize, n=fsize, k=fsize,
+        tile_tb=(64, 64, 64), tile_warp=(32, 32, 32),
+    )
+    fn = as_f32_io(unfused_epilogue(unfused_cfg))
+    w.lower(
+        f"unfused_m{fsize}n{fsize}k{fsize}_f16_f32",
+        fn,
+        _mm_shapes(fsize, fsize, fsize, "f16", "f32", bias=True),
+        kind="unfused",
+        extra={"m": fsize, "n": fsize, "k": fsize,
+               "dtype_in": "f16", "dtype_acc": "f32"},
+    )
+
+    print("== hand-optimized kernel (table1 'assembly' row) ==")
+    hsize = 256 if quick else 512
+    hand = hand_optimized_matmul(hsize, hsize, hsize, tile=(64, 64, 64))
+
+    def hand_fn(a, b, c):
+        return (hand(a, b, c).astype(jnp.float32),)
+
+    w.lower(
+        f"hand_m{hsize}n{hsize}k{hsize}_f16_f32",
+        hand_fn,
+        _mm_shapes(hsize, hsize, hsize, "f16", "f32"),
+        kind="hand",
+        extra={"m": hsize, "n": hsize, "k": hsize,
+               "dtype_in": "f16", "dtype_acc": "f32"},
+    )
+
+    print("== end-to-end transformer layer ==")
+    dims = dict(seq=128, d_model=256, d_ff=512)
+    layer = transformer_layer(
+        **dims, tile_tb=(64, 64, 64), tile_warp=(32, 32, 32)
+    )
+    w.lower(
+        "transformer_layer_s{seq}d{d_model}f{d_ff}".format(**dims),
+        as_f32_io(layer),
+        transformer_layer_inputs(**dims),
+        kind="transformer",
+        extra=dims,
+    )
+
+    w.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="reduced variant set")
+    args = ap.parse_args()
+    build_all(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""L1 kernels: the generated Pallas matmul family and its oracles."""
+
+from .emitter import EmitError, emit_kernel
+from .matmul_pallas import (
+    generate_matmul,
+    generate_matmul_with_schedule,
+    hand_optimized_matmul,
+)
+from .ref import (
+    epilogue_ref,
+    jdtype,
+    matmul_bias_ref,
+    matmul_bias_relu_ref,
+    matmul_ref,
+)
+
+__all__ = [
+    "EmitError",
+    "emit_kernel",
+    "generate_matmul",
+    "generate_matmul_with_schedule",
+    "hand_optimized_matmul",
+    "epilogue_ref",
+    "jdtype",
+    "matmul_bias_ref",
+    "matmul_bias_relu_ref",
+    "matmul_ref",
+]

@@ -1,0 +1,311 @@
+"""Schedule -> Pallas kernel emitter (the pipeline's TPU backend).
+
+The tile-IR pipeline's final module is summarized by a ``Schedule``; this
+emitter turns a Schedule into an executable Pallas kernel.  The mapping
+from the paper's CUDA concepts to Pallas/TPU idiom (DESIGN.md
+§Hardware-Adaptation):
+
+* thread-block tile (tbm, tbn, tbk)  ->  grid cell + VMEM BlockSpecs;
+* global->shared copy loops          ->  the HBM->VMEM pipeline BlockSpec
+  describes (XLA issues the DMAs);
+* warp tile / WMMA fragments         ->  unrolled 16x16x16 ``jnp.dot``
+  fragments with ``preferred_element_type`` (MXU contraction);
+* C hoisted into iter_args           ->  VMEM accumulator scratch written
+  back once, at the last k grid step;
+* software pipelining (§3.5/§3.10)   ->  "arbitrary" dimension semantics on
+  the k grid axis (XLA double-buffers the tile stream).
+
+Optimization levels and their structural effect here:
+
+  0  naive        grid=(1,), rank-1 (CUDA-core-style) k-loop, no tiling
+  1  +tiling      (i, j) grid, full-K panels streamed per tile
+  2  +shared_mem  (i, j, k) grid: K tiled and staged through VMEM;
+                  C read-modify-written every k step (not yet hoisted)
+  3  +wmma        fragment jnp.dot MXU compute inside the k step
+  4  +hoist       VMEM accumulator scratch, single C read + write-back
+  5  +latency     k axis marked "arbitrary" (double-buffered stream)
+  6  +padding     memory-system effect only: no structural change under
+                  interpret mode; modeled by the Rust simulator
+  7  +vectorize   likewise memory-system only (transaction width)
+
+Pallas is always invoked with ``interpret=True``: real-TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute.  Numerical
+correctness of every level is pytest-validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import jdtype
+
+try:  # TPU scratch memory spaces work under interpret mode too
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover - pltpu ships with jax, but be safe
+    _HAVE_PLTPU = False
+
+
+class EmitError(ValueError):
+    pass
+
+
+def _check(schedule) -> None:
+    if schedule.m % schedule.tile_tb[0] or schedule.n % schedule.tile_tb[1] or (
+        schedule.k % schedule.tile_tb[2]
+    ):
+        raise EmitError(
+            f"problem {schedule.m}x{schedule.n}x{schedule.k} not a multiple "
+            f"of tile {schedule.tile_tb}"
+        )
+
+
+def _epilogue(acc, bias, name: str):
+    """Apply the fused epilogue on the final accumulator tile."""
+    if name == "none":
+        return acc
+    out = acc + bias[...].astype(acc.dtype).reshape(1, -1)
+    if name == "bias_relu":
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def _fragment_matmul(a_tile, b_tile, acc, schedule):
+    """The warp/fragment compute of one (tbm, tbk) x (tbk, tbn) tile pair.
+
+    The tile-IR models this as the fully unrolled (kkk, iii, jjj) grid of
+    16x16x16 WMMA fragments (§3.4); on the MXU the whole tile contraction
+    is one systolic pass, so the emitter coalesces the fragment grid into a
+    single ``jnp.dot`` with a widened ``preferred_element_type`` — the same
+    coalescing ptxas performs when it schedules the unrolled HMMA stream.
+    Numerically identical (dot is evaluated fragment-wise in f32 on both
+    paths); structurally this is also what makes the interpret-mode CPU
+    artifacts executable at speed (L1 perf pass, EXPERIMENTS.md §Perf).
+    """
+    accd = jdtype(schedule.dtype_acc)
+    return acc + jnp.dot(a_tile, b_tile, preferred_element_type=accd)
+
+
+# ---------------------------------------------------------------------------
+# Level 0: naive (no tiling) — rank-1 updates on CUDA-core-style compute.
+# ---------------------------------------------------------------------------
+
+
+def _emit_naive(schedule, bias: bool):
+    accd = jdtype(schedule.dtype_acc)
+
+    def kernel(*refs):
+        if bias:
+            a_ref, b_ref, c_ref, bias_ref, o_ref = refs
+        else:
+            a_ref, b_ref, c_ref, o_ref = refs
+        a = a_ref[...].astype(accd)
+        b = b_ref[...].astype(accd)
+
+        def body(kk, acc):
+            col = jax.lax.dynamic_slice_in_dim(a, kk, 1, axis=1)
+            row = jax.lax.dynamic_slice_in_dim(b, kk, 1, axis=0)
+            return acc + col * row
+
+        acc = jax.lax.fori_loop(0, schedule.k, body, c_ref[...].astype(accd))
+        o_ref[...] = _epilogue(
+            acc, (refs[3] if bias else None), schedule.epilogue
+        ).astype(accd)
+
+    return kernel, (1,), None  # grid=(1,), whole-array blocks
+
+
+# ---------------------------------------------------------------------------
+# Level 1: tiled output, full-K panels (locality/parallelism, no staging).
+# ---------------------------------------------------------------------------
+
+
+def _emit_tiled(schedule, bias: bool):
+    tbm, tbn, _ = schedule.tile_tb
+    accd = jdtype(schedule.dtype_acc)
+
+    def kernel(*refs):
+        if bias:
+            a_ref, b_ref, c_ref, bias_ref, o_ref = refs
+        else:
+            a_ref, b_ref, c_ref, o_ref = refs
+        a = a_ref[...].astype(accd)
+        b = b_ref[...].astype(accd)
+
+        def body(kk, acc):
+            col = jax.lax.dynamic_slice_in_dim(a, kk, 1, axis=1)
+            row = jax.lax.dynamic_slice_in_dim(b, kk, 1, axis=0)
+            return acc + col * row
+
+        acc = jax.lax.fori_loop(0, schedule.k, body, c_ref[...].astype(accd))
+        o_ref[...] = _epilogue(acc, (refs[3] if bias else None), schedule.epilogue).astype(
+            accd
+        )
+
+    grid = (schedule.m // tbm, schedule.n // tbn)
+    specs = dict(
+        a=pl.BlockSpec((tbm, schedule.k), lambda i, j: (i, 0)),
+        b=pl.BlockSpec((schedule.k, tbn), lambda i, j: (0, j)),
+        c=pl.BlockSpec((tbm, tbn), lambda i, j: (i, j)),
+        bias=pl.BlockSpec((1, tbn), lambda i, j: (0, j)),
+        out=pl.BlockSpec((tbm, tbn), lambda i, j: (i, j)),
+    )
+    return kernel, grid, specs
+
+
+# ---------------------------------------------------------------------------
+# Levels 2+: k-tiled grid with VMEM staging.
+# ---------------------------------------------------------------------------
+
+
+def _emit_ktiled(schedule, bias: bool):
+    """Shared(VMEM)-staged kernel; structure varies with opt level."""
+    tbm, tbn, tbk = schedule.tile_tb
+    accd = jdtype(schedule.dtype_acc)
+    nk = schedule.k // tbk
+    use_wmma = schedule.wmma
+    hoisted = schedule.unroll_hoist
+
+    def compute_tile(a_tile, b_tile, acc):
+        if use_wmma:
+            return _fragment_matmul(a_tile, b_tile, acc, schedule)
+
+        def body(kk, acc_):
+            col = jax.lax.dynamic_slice_in_dim(a_tile, kk, 1, axis=1).astype(accd)
+            row = jax.lax.dynamic_slice_in_dim(b_tile, kk, 1, axis=0).astype(accd)
+            return acc_ + col * row
+
+        return jax.lax.fori_loop(0, tbk, body, acc)
+
+    if hoisted:
+        # Level 4+: accumulator lives in VMEM scratch across the k grid
+        # dimension; C is read once (k == 0) and written once (k == nk-1) —
+        # the iter_args structure of tile-IR Listing 3.
+        def kernel(*refs):
+            if bias:
+                a_ref, b_ref, c_ref, bias_ref, o_ref, acc_ref = refs
+            else:
+                a_ref, b_ref, c_ref, o_ref, acc_ref = refs
+            kidx = pl.program_id(2)
+
+            @pl.when(kidx == 0)
+            def _init():
+                acc_ref[...] = c_ref[...].astype(accd)
+
+            acc_ref[...] = compute_tile(a_ref[...], b_ref[...], acc_ref[...])
+
+            @pl.when(kidx == nk - 1)
+            def _writeback():
+                o_ref[...] = _epilogue(
+                    acc_ref[...], (refs[3] if bias else None), schedule.epilogue
+                ).astype(accd)
+
+        scratch = [pltpu.VMEM((tbm, tbn), accd)] if _HAVE_PLTPU else None
+        if scratch is None:
+            raise EmitError("hoisted kernels need pltpu VMEM scratch")
+    else:
+        # Levels 2-3: C tile is read-modify-written at every k step — the
+        # pre-hoisting structure whose extra C traffic Figure 3 quantifies.
+        def kernel(*refs):
+            if bias:
+                a_ref, b_ref, c_ref, bias_ref, o_ref = refs
+            else:
+                a_ref, b_ref, c_ref, o_ref = refs
+            kidx = pl.program_id(2)
+
+            @pl.when(kidx == 0)
+            def _init():
+                o_ref[...] = c_ref[...].astype(accd)
+
+            o_ref[...] = compute_tile(a_ref[...], b_ref[...], o_ref[...])
+
+            @pl.when(kidx == nk - 1)
+            def _epi():
+                o_ref[...] = _epilogue(
+                    o_ref[...], (refs[3] if bias else None), schedule.epilogue
+                ).astype(accd)
+
+        scratch = None
+
+    grid = (schedule.m // tbm, schedule.n // tbn, nk)
+    specs = dict(
+        a=pl.BlockSpec((tbm, tbk), lambda i, j, kk: (i, kk)),
+        b=pl.BlockSpec((tbk, tbn), lambda i, j, kk: (kk, j)),
+        c=pl.BlockSpec((tbm, tbn), lambda i, j, kk: (i, j)),
+        bias=pl.BlockSpec((1, tbn), lambda i, j, kk: (0, j)),
+        out=pl.BlockSpec((tbm, tbn), lambda i, j, kk: (i, j)),
+    )
+    return kernel, grid, specs, scratch
+
+
+def emit_kernel(schedule) -> Callable:
+    """Build the Pallas kernel for ``schedule``.
+
+    Returns a function ``f(a, b, c)`` (or ``f(a, b, c, bias)`` for fused
+    epilogues) producing the output matrix in the accumulator dtype.
+    """
+    _check(schedule)
+    bias = schedule.epilogue != "none"
+    accd = jdtype(schedule.dtype_acc)
+    out_shape = jax.ShapeDtypeStruct((schedule.m, schedule.n), accd)
+    scratch = None
+
+    if not schedule.tiling:
+        kernel, grid, specs = _emit_naive(schedule, bias)
+    elif not schedule.shared_mem:
+        kernel, grid, specs = _emit_tiled(schedule, bias)
+    else:
+        kernel, grid, specs, scratch = _emit_ktiled(schedule, bias)
+
+    kwargs = {}
+    if specs is not None:
+        in_specs = [specs["a"], specs["b"], specs["c"]]
+        if bias:
+            in_specs.append(specs["bias"])
+        kwargs.update(in_specs=in_specs, out_specs=specs["out"])
+    if scratch is not None:
+        kwargs.update(scratch_shapes=scratch)
+    if schedule.latency_hiding and _HAVE_PLTPU and len(grid) == 3:
+        # §3.5/§3.10's software pipelining: the k axis is a sequential
+        # stream XLA may double-buffer.  Recorded for the real-TPU path;
+        # harmless under interpret mode.
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+        except Exception:
+            pass
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        interpret=True,
+        **kwargs,
+    )
+
+    ind = jdtype(schedule.dtype_in)
+
+    if bias:
+
+        def run(a, b, c, bias_vec):
+            return call(
+                a.astype(ind),
+                b.astype(ind),
+                c.astype(accd),
+                bias_vec.reshape(1, -1).astype(accd),
+            )
+
+    else:
+
+        def run(a, b, c):
+            return call(a.astype(ind), b.astype(ind), c.astype(accd))
+
+    run.schedule = schedule
+    return run

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for every kernel variant.
+
+These are the ground truth the Pallas kernels (and transitively the HLO
+artifacts the Rust runtime executes) are validated against.  They mirror
+the paper's three precision modes:
+
+* mixed precision — f16 inputs, f32 accumulate and output (§4.1);
+* half precision  — f16 throughout (§4.2);
+* f32 ("TF32" mode on tensor cores) — f32 throughout.
+
+plus the fused epilogues used in the Table 1 operator-fusion comparison.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_DTYPES = {"f16": jnp.float16, "bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+def jdtype(name: str):
+    """jnp dtype for a tile-IR dtype name."""
+    return _DTYPES[name]
+
+
+def matmul_ref(a, b, c, dtype_acc: str = "f32"):
+    """C = A @ B + C with accumulation in ``dtype_acc``.
+
+    ``preferred_element_type`` gives the MMA-style widened accumulate the
+    tensor cores (and the MXU) implement for f16 inputs.
+    """
+    acc = jdtype(dtype_acc)
+    d = jnp.matmul(a, b, preferred_element_type=acc)
+    return (d + c.astype(acc)).astype(acc)
+
+
+def matmul_bias_ref(a, b, c, bias, dtype_acc: str = "f32"):
+    """Fused bias-add epilogue: (A @ B + C) + bias (row-broadcast)."""
+    out = matmul_ref(a, b, c, dtype_acc)
+    return (out + bias.reshape(1, -1).astype(out.dtype)).astype(out.dtype)
+
+
+def matmul_bias_relu_ref(a, b, c, bias, dtype_acc: str = "f32"):
+    """Fused bias + ReLU epilogue."""
+    return jnp.maximum(matmul_bias_ref(a, b, c, bias, dtype_acc), 0)
+
+
+def epilogue_ref(name: str):
+    """Oracle for a named epilogue ('none' | 'bias' | 'bias_relu')."""
+    if name == "none":
+        return matmul_ref
+    if name == "bias":
+        return matmul_bias_ref
+    if name == "bias_relu":
+        return matmul_bias_relu_ref
+    raise ValueError(f"unknown epilogue {name!r}")

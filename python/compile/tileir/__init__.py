@@ -1,0 +1,35 @@
+"""tileir — the paper's MLIR lowering pipeline, reimplemented.
+
+Public surface:
+
+* :mod:`tileir.ir` — the IR (ops, memrefs, affine expressions);
+* :func:`tileir.builder.build_naive_matmul` — the §3.1 starting point;
+* :mod:`tileir.passes` — the §3.2-§3.10 transformation passes;
+* :class:`tileir.pipeline.PipelineConfig` / :func:`run_pipeline` — the
+  pass manager and ablation toggles;
+* :func:`tileir.schedule.extract_schedule` — the backend contract;
+* :func:`tileir.printer.print_module` — MLIR-style listings;
+* :class:`tileir.interp.Interpreter` — the semantic oracle.
+"""
+
+from .builder import build_fused_matmul_bias_relu, build_naive_matmul
+from .interp import Interpreter, run_matmul_module
+from .pipeline import OPT_ORDER, PipelineConfig, PipelineError, PipelineResult, run_pipeline
+from .printer import print_module
+from .schedule import Schedule, ScheduleError, extract_schedule
+
+__all__ = [
+    "build_naive_matmul",
+    "build_fused_matmul_bias_relu",
+    "Interpreter",
+    "run_matmul_module",
+    "OPT_ORDER",
+    "PipelineConfig",
+    "PipelineError",
+    "PipelineResult",
+    "run_pipeline",
+    "print_module",
+    "Schedule",
+    "ScheduleError",
+    "extract_schedule",
+]

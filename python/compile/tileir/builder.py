@@ -1,0 +1,116 @@
+"""Builders for the pipeline's starting-point IR.
+
+The paper's §3.1: the entry is a naive three-loop affine matmul (Listing 1),
+assumed to come from lowering ``lmhlo.dot`` / ``linalg.matmul``.  We provide
+that plus the fused-epilogue variant used for the operator-fusion
+experiments (Table 1 column 4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from .ir import (
+    F16,
+    F32,
+    AddF,
+    AffineExpr,
+    For,
+    FpExt,
+    Load,
+    Module,
+    MemRef,
+    MulF,
+    Store,
+    fresh_name,
+)
+
+
+def build_naive_matmul(
+    m: int,
+    n: int,
+    k: int,
+    dtype_in: str = F16,
+    dtype_acc: str = F32,
+    name: Optional[str] = None,
+) -> Module:
+    """Listing 1: ``C[i,j] += ext(A[i,k]) * ext(B[k,j])`` over an MxNxK nest.
+
+    ``dtype_in == f16, dtype_acc == f32`` is the paper's mixed-precision
+    configuration; ``f16/f16`` is the half-precision one (§4.2);
+    ``f32/f32`` models the TF32 path.
+    """
+    name = name or f"matmul_{m}x{n}x{k}_{dtype_in}_{dtype_acc}"
+    mod = Module(name=name)
+    a = mod.add_memref(MemRef("%A", (m, k), dtype_in), role="A")
+    b = mod.add_memref(MemRef("%B", (k, n), dtype_in), role="B")
+    c = mod.add_memref(MemRef("%C", (m, n), dtype_acc), role="C")
+
+    iv_i, iv_j, iv_k = "%i", "%j", "%k"
+    ei = AffineExpr.var(iv_i)
+    ej = AffineExpr.var(iv_j)
+    ek = AffineExpr.var(iv_k)
+
+    va = fresh_name("a")
+    vb = fresh_name("b")
+    vc = fresh_name("c")
+    body = [
+        Load(va, a, (ei, ek)),
+        Load(vb, b, (ek, ej)),
+        Load(vc, c, (ei, ej)),
+    ]
+    if dtype_in != dtype_acc:
+        vaq, vbq = fresh_name("aq"), fresh_name("bq")
+        body += [
+            FpExt(vaq, va, dtype_in, dtype_acc),
+            FpExt(vbq, vb, dtype_in, dtype_acc),
+        ]
+    else:
+        vaq, vbq = va, vb
+    vq, vco = fresh_name("q"), fresh_name("co")
+    body += [
+        MulF(vq, vaq, vbq, dtype_acc),
+        AddF(vco, vc, vq, dtype_acc),
+        Store(vco, c, (ei, ej)),
+    ]
+
+    loop_k = For(iv_k, AffineExpr.cst(0), AffineExpr.cst(k), 1, body,
+                 attrs={"role": "main_k"})
+    loop_j = For(iv_j, AffineExpr.cst(0), AffineExpr.cst(n), 1, [loop_k],
+                 attrs={"role": "block_j"})
+    loop_i = For(iv_i, AffineExpr.cst(0), AffineExpr.cst(m), 1, [loop_j],
+                 attrs={"role": "block_i"})
+    mod.body = [loop_i]
+    mod.meta.update(
+        {
+            "M": m,
+            "N": n,
+            "K": k,
+            "dtype_in": dtype_in,
+            "dtype_acc": dtype_acc,
+            "epilogue": "none",
+        }
+    )
+    return mod
+
+
+def build_fused_matmul_bias_relu(
+    m: int,
+    n: int,
+    k: int,
+    dtype_in: str = F16,
+    dtype_acc: str = F32,
+    relu: bool = True,
+) -> Module:
+    """Matmul with a fused bias-add (+ optional ReLU) epilogue.
+
+    The epilogue is recorded in module meta; the pipeline treats the matmul
+    loop nest identically and the emitter applies the epilogue on the final
+    accumulator tile — the fusion style of Bhaskaracharya et al. that the
+    paper cites as the motivation for IR-based codegen.
+    """
+    mod = build_naive_matmul(m, n, k, dtype_in, dtype_acc)
+    mod.name += "_bias" + ("_relu" if relu else "")
+    mod.add_memref(MemRef("%bias", (1, n), dtype_acc), role="bias")
+    mod.meta["epilogue"] = "bias_relu" if relu else "bias"
+    return mod

@@ -1,0 +1,181 @@
+"""Reference interpreter for tile-IR over numpy arrays.
+
+This is the semantic ground truth used to verify that every pipeline pass
+preserves the computation: after each pass, the module is interpreted on
+random inputs and compared against the naive result.  WMMA fragments are
+interpreted as dense (m, n) numpy sub-arrays, matching the warp-synchronous
+"a fragment is a value held by the warp" semantics.
+
+Interpretation happens in the accumulator dtype widened to f32/f64 on the
+host; dtype rounding effects are validated separately at the Pallas level
+against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .ir import (
+    AddF,
+    Barrier,
+    For,
+    FpExt,
+    Load,
+    Module,
+    MulF,
+    Op,
+    Store,
+    VecLoad,
+    VecStore,
+    WmmaLoad,
+    WmmaMma,
+    WmmaStore,
+    Yield,
+)
+
+
+class InterpError(RuntimeError):
+    pass
+
+
+class Interpreter:
+    """Executes a tile-IR module against named numpy buffers."""
+
+    def __init__(self, mod: Module, buffers: Dict[str, np.ndarray]):
+        self.mod = mod
+        # Physical buffers, including shared-memory scratch with padding.
+        self.buffers: Dict[str, np.ndarray] = {}
+        for m in mod.memrefs:
+            if m.name in buffers:
+                arr = buffers[m.name]
+                if tuple(arr.shape) != m.shape:
+                    raise InterpError(
+                        f"buffer {m.name}: expected {m.shape}, got {arr.shape}"
+                    )
+                if m.lead_pad:
+                    phys = np.zeros(m.phys_shape, dtype=arr.dtype)
+                    phys[:, : m.shape[1]] = arr
+                    self.buffers[m.name] = phys
+                else:
+                    self.buffers[m.name] = arr
+            else:
+                # Shared / scratch buffers start uninitialized (zeros).
+                self.buffers[m.name] = np.zeros(m.phys_shape, dtype=np.float64)
+        self.barrier_count = 0
+
+    # -- public -------------------------------------------------------------
+    def run(self) -> None:
+        env: Dict[str, object] = {}
+        for op in self.mod.body:
+            self._exec(op, env)
+
+    def result(self, name: str) -> np.ndarray:
+        m = next(mr for mr in self.mod.memrefs if mr.name == name)
+        return np.asarray(self.buffers[name])[:, : m.shape[1]]
+
+    # -- execution ----------------------------------------------------------
+    def _exec(self, op: Op, env: Dict[str, object]) -> None:
+        if isinstance(op, For):
+            self._exec_for(op, env)
+        elif isinstance(op, Load):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            self._bounds_check(op.memref, i, j)
+            env[op.result] = self.buffers[op.memref.name][i, j]
+        elif isinstance(op, Store):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            self._bounds_check(op.memref, i, j)
+            self.buffers[op.memref.name][i, j] = env[op.value]
+        elif isinstance(op, VecLoad):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            self._bounds_check(op.memref, i, j + op.width - 1)
+            env[op.result] = np.array(
+                self.buffers[op.memref.name][i, j : j + op.width]
+            )
+        elif isinstance(op, VecStore):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            self._bounds_check(op.memref, i, j + op.width - 1)
+            self.buffers[op.memref.name][i, j : j + op.width] = env[op.value]
+        elif isinstance(op, FpExt):
+            env[op.result] = float(env[op.operand])  # widening is a no-op here
+        elif isinstance(op, MulF):
+            env[op.result] = env[op.lhs] * env[op.rhs]
+        elif isinstance(op, AddF):
+            env[op.result] = env[op.lhs] + env[op.rhs]
+        elif isinstance(op, WmmaLoad):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            h, w = op.shape
+            self._bounds_check(op.memref, i + h - 1, j + w - 1)
+            env[op.result] = np.array(
+                self.buffers[op.memref.name][i : i + h, j : j + w], dtype=np.float64
+            )
+        elif isinstance(op, WmmaStore):
+            i, j = (e.eval(env) for e in op.idxs)  # type: ignore[arg-type]
+            h, w = op.shape
+            self._bounds_check(op.memref, i + h - 1, j + w - 1)
+            self.buffers[op.memref.name][i : i + h, j : j + w] = env[op.value]
+        elif isinstance(op, WmmaMma):
+            a = env[op.a]
+            b = env[op.b]
+            c = env[op.c]
+            env[op.result] = a @ b + c
+        elif isinstance(op, Barrier):
+            self.barrier_count += 1
+        elif isinstance(op, Yield):
+            env["__yield__"] = tuple(env[v] for v in op.values)
+        else:
+            raise InterpError(f"cannot interpret {type(op).__name__}")
+
+    def _exec_for(self, loop: For, env: Dict[str, object]) -> None:
+        lo = loop.lb.eval(env)  # type: ignore[arg-type]
+        hi = loop.ub.eval(env)  # type: ignore[arg-type]
+        carried = [env[init] for _, init in loop.iter_args]
+        for ivval in range(lo, hi, loop.step):
+            inner = dict(env)
+            inner[loop.iv] = ivval
+            for (arg_name, _), val in zip(loop.iter_args, carried):
+                inner[arg_name] = val
+            inner.pop("__yield__", None)
+            for op in loop.body:
+                self._exec(op, inner)
+            if loop.iter_args:
+                y = inner.get("__yield__")
+                if y is None or len(y) != len(loop.iter_args):
+                    raise InterpError(
+                        f"loop {loop.iv} with iter_args must yield "
+                        f"{len(loop.iter_args)} values"
+                    )
+                carried = list(y)
+        for name, val in zip(loop.result_names, carried):
+            env[name] = val
+
+    def _bounds_check(self, memref, i: int, j: int) -> None:
+        rows, cols = memref.phys_shape
+        if not (0 <= i < rows and 0 <= j < cols):
+            raise InterpError(
+                f"out-of-bounds access {memref.name}[{i}, {j}] "
+                f"(physical shape {memref.phys_shape})"
+            )
+
+
+def run_matmul_module(
+    mod: Module,
+    a: np.ndarray,
+    b: np.ndarray,
+    c: Optional[np.ndarray] = None,
+    bias: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Convenience wrapper: interpret a matmul module and return C."""
+    m_ = mod.meta["M"]
+    n_ = mod.meta["N"]
+    if c is None:
+        c = np.zeros((m_, n_), dtype=np.float64)
+    buffers = {"%A": np.asarray(a, dtype=np.float64),
+               "%B": np.asarray(b, dtype=np.float64),
+               "%C": np.array(c, dtype=np.float64)}
+    if bias is not None:
+        buffers["%bias"] = np.asarray(bias, dtype=np.float64).reshape(1, -1)
+    interp = Interpreter(mod, buffers)
+    interp.run()
+    return interp.result("%C")

@@ -1,0 +1,568 @@
+"""Core tile-IR: a small affine-dialect-style IR for the matmul pipeline.
+
+This mirrors the subset of MLIR the paper (Katel et al., 2021) actually
+uses: perfectly-nestable ``affine.for`` loops with affine bounds and index
+expressions, loads/stores on memrefs with layout padding, scalar arithmetic,
+WMMA fragment ops (``gpu.subgroup_mma_*`` analogs), barriers, and vectorized
+memory ops.  Everything the ten pipeline passes in ``tileir.passes``
+transform is represented here.
+
+Design notes
+------------
+* Index arithmetic is restricted to affine expressions over loop induction
+  variables (integer coefficients + constant), which is exactly the class
+  MLIR's affine dialect guarantees and all of the paper's transformations
+  stay inside.
+* SSA is lightweight: each op producing a value carries a fresh ``result``
+  name; uses refer to names.  Passes that clone/substitute are responsible
+  for renaming (helpers below).
+* Memory spaces follow the GPU model of the paper: ``global`` (HBM),
+  ``shared`` (CUDA shared memory / VMEM in the TPU adaptation), ``reg``
+  (register fragments).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Types
+# ---------------------------------------------------------------------------
+
+F16 = "f16"
+F32 = "f32"
+BF16 = "bf16"
+
+_DTYPE_BYTES = {F16: 2, BF16: 2, F32: 4}
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Size in bytes of one element of ``dtype``."""
+    return _DTYPE_BYTES[dtype]
+
+
+_name_counter = itertools.count()
+
+
+def fresh_name(prefix: str) -> str:
+    """Return a module-unique SSA name like ``%a12``."""
+    return f"%{prefix}{next(_name_counter)}"
+
+
+# ---------------------------------------------------------------------------
+# Affine expressions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AffineExpr:
+    """Linear expression ``sum(coeff_i * iv_i) + const`` over loop IVs."""
+
+    terms: Tuple[Tuple[str, int], ...] = ()
+    const: int = 0
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def var(name: str, coeff: int = 1) -> "AffineExpr":
+        return AffineExpr(terms=((name, coeff),), const=0)
+
+    @staticmethod
+    def cst(value: int) -> "AffineExpr":
+        return AffineExpr(terms=(), const=value)
+
+    # -- algebra ------------------------------------------------------------
+    def _as_dict(self) -> Dict[str, int]:
+        d: Dict[str, int] = {}
+        for name, c in self.terms:
+            d[name] = d.get(name, 0) + c
+        return {k: v for k, v in d.items() if v != 0}
+
+    def __add__(self, other: "AffineExpr | int") -> "AffineExpr":
+        if isinstance(other, int):
+            other = AffineExpr.cst(other)
+        d = self._as_dict()
+        for name, c in other.terms:
+            d[name] = d.get(name, 0) + c
+        terms = tuple(sorted((k, v) for k, v in d.items() if v != 0))
+        return AffineExpr(terms=terms, const=self.const + other.const)
+
+    def __sub__(self, other: "AffineExpr | int") -> "AffineExpr":
+        if isinstance(other, int):
+            return self + (-other)
+        neg = AffineExpr(
+            terms=tuple((n, -c) for n, c in other.terms), const=-other.const
+        )
+        return self + neg
+
+    def scaled(self, factor: int) -> "AffineExpr":
+        return AffineExpr(
+            terms=tuple((n, c * factor) for n, c in self.terms),
+            const=self.const * factor,
+        )
+
+    # -- queries ------------------------------------------------------------
+    def vars(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.terms)
+
+    def is_const(self) -> bool:
+        return not self.terms
+
+    def coeff(self, name: str) -> int:
+        return self._as_dict().get(name, 0)
+
+    def eval(self, env: Dict[str, int]) -> int:
+        total = self.const
+        for name, c in self.terms:
+            total += c * env[name]
+        return total
+
+    # -- substitution -------------------------------------------------------
+    def subst(self, mapping: Dict[str, "AffineExpr"]) -> "AffineExpr":
+        """Replace each IV in ``mapping`` by the given expression."""
+        out = AffineExpr.cst(self.const)
+        for name, c in self.terms:
+            if name in mapping:
+                out = out + mapping[name].scaled(c)
+            else:
+                out = out + AffineExpr.var(name, c)
+        return out
+
+    def subst_const(self, name: str, value: int) -> "AffineExpr":
+        return self.subst({name: AffineExpr.cst(value)})
+
+    def __repr__(self) -> str:  # MLIR-ish rendering, used by the printer
+        parts: List[str] = []
+        for name, c in self.terms:
+            if c == 1:
+                parts.append(name)
+            elif c == -1:
+                parts.append(f"-{name}")
+            else:
+                parts.append(f"{c} * {name}")
+        if self.const or not parts:
+            parts.append(str(self.const))
+        s = parts[0]
+        for p in parts[1:]:
+            s += f" - {p[1:]}" if p.startswith("-") else f" + {p}"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# MemRefs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MemRef:
+    """A 2-D memref with an optional padded leading dimension.
+
+    ``shape`` is the logical (rows, cols) shape.  ``lead_pad`` extends the
+    row stride: the physical buffer is ``rows x (cols + lead_pad)`` — the
+    paper's shared-memory padding trick (§3.3), expressed as a layout-map
+    change so no other IR needs to change.
+    """
+
+    name: str
+    shape: Tuple[int, int]
+    dtype: str
+    space: str = "global"  # global | shared | reg
+    lead_pad: int = 0
+
+    @property
+    def lead_dim(self) -> int:
+        """Row stride in elements (the WMMA ``leadDimension`` attribute)."""
+        return self.shape[1] + self.lead_pad
+
+    @property
+    def phys_shape(self) -> Tuple[int, int]:
+        return (self.shape[0], self.lead_dim)
+
+    def size_bytes(self) -> int:
+        return self.phys_shape[0] * self.phys_shape[1] * dtype_bytes(self.dtype)
+
+    def type_str(self) -> str:
+        space = {"global": "", "shared": ", 3", "reg": ", 5"}[self.space]
+        return f"memref<{self.phys_shape[0]}x{self.phys_shape[1]}x{self.dtype}{space}>"
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Op:
+    """Base class for all tile-IR operations."""
+
+    def clone(self) -> "Op":
+        raise NotImplementedError
+
+    def results(self) -> List[str]:
+        return []
+
+    def operands(self) -> List[str]:
+        return []
+
+
+@dataclass
+class Load(Op):
+    result: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+
+    def clone(self) -> "Load":
+        return Load(self.result, self.memref, self.idxs)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+
+@dataclass
+class Store(Op):
+    value: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+
+    def clone(self) -> "Store":
+        return Store(self.value, self.memref, self.idxs)
+
+    def operands(self) -> List[str]:
+        return [self.value]
+
+
+@dataclass
+class VecLoad(Op):
+    """Vector load of ``width`` contiguous elements starting at idxs."""
+
+    result: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+    width: int
+
+    def clone(self) -> "VecLoad":
+        return VecLoad(self.result, self.memref, self.idxs, self.width)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+
+@dataclass
+class VecStore(Op):
+    value: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+    width: int
+
+    def clone(self) -> "VecStore":
+        return VecStore(self.value, self.memref, self.idxs, self.width)
+
+    def operands(self) -> List[str]:
+        return [self.value]
+
+
+@dataclass
+class FpExt(Op):
+    result: str
+    operand: str
+    from_dtype: str = F16
+    to_dtype: str = F32
+
+    def clone(self) -> "FpExt":
+        return FpExt(self.result, self.operand, self.from_dtype, self.to_dtype)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+    def operands(self) -> List[str]:
+        return [self.operand]
+
+
+@dataclass
+class MulF(Op):
+    result: str
+    lhs: str
+    rhs: str
+    dtype: str = F32
+
+    def clone(self) -> "MulF":
+        return MulF(self.result, self.lhs, self.rhs, self.dtype)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+    def operands(self) -> List[str]:
+        return [self.lhs, self.rhs]
+
+
+@dataclass
+class AddF(Op):
+    result: str
+    lhs: str
+    rhs: str
+    dtype: str = F32
+
+    def clone(self) -> "AddF":
+        return AddF(self.result, self.lhs, self.rhs, self.dtype)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+    def operands(self) -> List[str]:
+        return [self.lhs, self.rhs]
+
+
+@dataclass
+class WmmaLoad(Op):
+    """``gpu.subgroup_mma_load_matrix`` — load a fragment into registers.
+
+    ``operand`` is one of "AOp" | "BOp" | "COp"; ``shape`` is the fragment
+    (m, n) footprint in the source memref.
+    """
+
+    result: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+    operand: str
+    shape: Tuple[int, int]
+
+    def clone(self) -> "WmmaLoad":
+        return WmmaLoad(self.result, self.memref, self.idxs, self.operand, self.shape)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+
+@dataclass
+class WmmaStore(Op):
+    """``gpu.subgroup_mma_store_matrix`` — store a COp fragment."""
+
+    value: str
+    memref: MemRef
+    idxs: Tuple[AffineExpr, AffineExpr]
+    shape: Tuple[int, int]
+
+    def clone(self) -> "WmmaStore":
+        return WmmaStore(self.value, self.memref, self.idxs, self.shape)
+
+    def operands(self) -> List[str]:
+        return [self.value]
+
+
+@dataclass
+class WmmaMma(Op):
+    """``gpu.subgroup_mma_compute``: D = A * B + C on one fragment triple."""
+
+    result: str
+    a: str
+    b: str
+    c: str
+    mnk: Tuple[int, int, int] = (16, 16, 16)
+
+    def clone(self) -> "WmmaMma":
+        return WmmaMma(self.result, self.a, self.b, self.c, self.mnk)
+
+    def results(self) -> List[str]:
+        return [self.result]
+
+    def operands(self) -> List[str]:
+        return [self.a, self.b, self.c]
+
+
+@dataclass
+class Barrier(Op):
+    """``gpu.barrier`` / ``__syncthreads()``."""
+
+    def clone(self) -> "Barrier":
+        return Barrier()
+
+
+@dataclass
+class Yield(Op):
+    values: Tuple[str, ...] = ()
+
+    def clone(self) -> "Yield":
+        return Yield(self.values)
+
+    def operands(self) -> List[str]:
+        return list(self.values)
+
+
+@dataclass
+class For(Op):
+    """``affine.for %iv = lb to ub step s`` with optional iter_args.
+
+    ``iter_args`` is a list of (block_arg_name, init_value_name).  When
+    present the body must end with a ``Yield`` of matching arity, and the
+    loop's ``result_names`` expose the final values to the enclosing region.
+    ``attrs`` carries pass-to-pass metadata: ``role`` ("copyA", "copyB",
+    "compute", "main_k", "warp_k", ...), ``parallel`` mapping ("block_x",
+    "block_y", "warp_x", "warp_y"), etc.
+    """
+
+    iv: str
+    lb: AffineExpr
+    ub: AffineExpr
+    step: int
+    body: List[Op] = field(default_factory=list)
+    iter_args: List[Tuple[str, str]] = field(default_factory=list)
+    result_names: List[str] = field(default_factory=list)
+    attrs: Dict[str, str] = field(default_factory=dict)
+
+    def clone(self) -> "For":
+        return For(
+            iv=self.iv,
+            lb=self.lb,
+            ub=self.ub,
+            step=self.step,
+            body=[op.clone() for op in self.body],
+            iter_args=list(self.iter_args),
+            result_names=list(self.result_names),
+            attrs=dict(self.attrs),
+        )
+
+    def results(self) -> List[str]:
+        return list(self.result_names)
+
+    def trip_count(self, env: Optional[Dict[str, int]] = None) -> int:
+        env = env or {}
+        lo, hi = self.lb.eval(env), self.ub.eval(env)
+        return max(0, (hi - lo + self.step - 1) // self.step)
+
+
+# ---------------------------------------------------------------------------
+# Module
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Module:
+    """Top-level container: memref declarations + a single loop-nest body.
+
+    ``roles`` names the operand memrefs ("A", "B", "C" and, after the buffer
+    pass, "a_smem"/"b_smem") so passes can find them without pattern
+    matching on names.
+    """
+
+    name: str
+    memrefs: List[MemRef] = field(default_factory=list)
+    body: List[Op] = field(default_factory=list)
+    roles: Dict[str, MemRef] = field(default_factory=dict)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def add_memref(self, m: MemRef, role: Optional[str] = None) -> MemRef:
+        self.memrefs.append(m)
+        if role is not None:
+            self.roles[role] = m
+        return m
+
+    def clone(self) -> "Module":
+        mod = Module(
+            name=self.name,
+            memrefs=list(self.memrefs),
+            body=[op.clone() for op in self.body],
+            roles=dict(self.roles),
+            meta=dict(self.meta),
+        )
+        return mod
+
+    # -- traversal helpers ---------------------------------------------------
+    def walk(self) -> Iterable[Op]:
+        """Pre-order walk of every op in the module."""
+
+        def _walk(ops: Sequence[Op]) -> Iterable[Op]:
+            for op in ops:
+                yield op
+                if isinstance(op, For):
+                    yield from _walk(op.body)
+
+        yield from _walk(self.body)
+
+    def find_loops(self, **attr_filters: str) -> List[For]:
+        """All loops whose attrs contain every given key=value."""
+        out = []
+        for op in self.walk():
+            if isinstance(op, For) and all(
+                op.attrs.get(k) == v for k, v in attr_filters.items()
+            ):
+                out.append(op)
+        return out
+
+    def loop_nest(self) -> List[For]:
+        """The outermost perfect loop nest (follows single-For bodies)."""
+        nest: List[For] = []
+        ops = self.body
+        while True:
+            fors = [op for op in ops if isinstance(op, For)]
+            if len(fors) != 1:
+                break
+            nest.append(fors[0])
+            ops = fors[0].body
+        return nest
+
+
+# ---------------------------------------------------------------------------
+# Structural helpers shared by passes
+# ---------------------------------------------------------------------------
+
+
+def subst_exprs(op: Op, mapping: Dict[str, AffineExpr]) -> None:
+    """In-place substitution of IVs inside all affine index expressions."""
+    if isinstance(op, (Load, Store, VecLoad, VecStore, WmmaLoad, WmmaStore)):
+        op.idxs = tuple(e.subst(mapping) for e in op.idxs)  # type: ignore[assignment]
+    if isinstance(op, For):
+        op.lb = op.lb.subst(mapping)
+        op.ub = op.ub.subst(mapping)
+        for inner in op.body:
+            subst_exprs(inner, mapping)
+
+
+def rename_values(op: Op, mapping: Dict[str, str]) -> None:
+    """In-place renaming of SSA value names (results and operands)."""
+    if isinstance(op, (Load, VecLoad, WmmaLoad, FpExt, MulF, AddF, WmmaMma)):
+        if op.result in mapping:
+            op.result = mapping[op.result]
+    if isinstance(op, (Store, VecStore, WmmaStore)):
+        if op.value in mapping:
+            op.value = mapping[op.value]
+    if isinstance(op, FpExt) and op.operand in mapping:
+        op.operand = mapping[op.operand]
+    if isinstance(op, (MulF, AddF)):
+        op.lhs = mapping.get(op.lhs, op.lhs)
+        op.rhs = mapping.get(op.rhs, op.rhs)
+    if isinstance(op, WmmaMma):
+        op.a = mapping.get(op.a, op.a)
+        op.b = mapping.get(op.b, op.b)
+        op.c = mapping.get(op.c, op.c)
+    if isinstance(op, Yield):
+        op.values = tuple(mapping.get(v, v) for v in op.values)
+    if isinstance(op, For):
+        op.iter_args = [
+            (mapping.get(n, n), mapping.get(init, init)) for n, init in op.iter_args
+        ]
+        op.result_names = [mapping.get(n, n) for n in op.result_names]
+        for inner in op.body:
+            rename_values(inner, mapping)
+
+
+def clone_with_fresh_names(ops: Sequence[Op], suffix: str) -> List[Op]:
+    """Clone a list of ops, freshening every SSA result name.
+
+    Used by unrolling: each unrolled copy of the body needs distinct names.
+    """
+    clones = [op.clone() for op in ops]
+    mapping: Dict[str, str] = {}
+
+    def collect(op: Op) -> None:
+        for r in op.results():
+            mapping[r] = f"{r}_{suffix}"
+        if isinstance(op, For):
+            for inner in op.body:
+                collect(inner)
+
+    for op in clones:
+        collect(op)
+    for op in clones:
+        rename_values(op, mapping)
+    return clones

@@ -1,0 +1,43 @@
+"""The pipeline passes of the paper's §3, one module per pass.
+
+Order (mirrors §3.2-§3.10):
+
+1.  ``tiling.two_level_tiling``            — §3.2
+2.  ``buffers.create_shared_buffers``      — §3.3 (affineDataCopyGenerate)
+3.  ``padding.pad_shared_buffers``         — §3.3 (bank-conflict padding)
+4.  ``wmma.generate_wmma_ops``             — §3.4
+5.  ``permute.permute_for_gpu_hierarchy``  — §3.4 (loop permutations)
+6.  ``unroll_hoist.unroll_and_hoist``      — §3.4 (unroll, CSE, iter_args)
+7.  ``latency.split_main_k_loop``          — §3.5 (peel copy/compute)
+8.  ``barriers.insert_barriers``           — §3.6
+9.  ``vectorize.vectorize_copies``         — §3.7
+10. ``latency.decouple_copy_stores``       — §3.10 (complete latency hiding)
+11. ``parallelize.extract_and_map_parallel`` — §3.8/§3.9
+"""
+
+from .tiling import two_level_tiling, tile_perfect_nest
+from .buffers import create_shared_buffers
+from .padding import pad_shared_buffers
+from .wmma import generate_wmma_ops
+from .permute import permute_for_gpu_hierarchy
+from .unroll_hoist import unroll_and_hoist, fully_unroll
+from .latency import split_main_k_loop, decouple_copy_stores
+from .barriers import insert_barriers
+from .vectorize import vectorize_copies
+from .parallelize import extract_and_map_parallel
+
+__all__ = [
+    "two_level_tiling",
+    "tile_perfect_nest",
+    "create_shared_buffers",
+    "pad_shared_buffers",
+    "generate_wmma_ops",
+    "permute_for_gpu_hierarchy",
+    "unroll_and_hoist",
+    "fully_unroll",
+    "split_main_k_loop",
+    "decouple_copy_stores",
+    "insert_barriers",
+    "vectorize_copies",
+    "extract_and_map_parallel",
+]

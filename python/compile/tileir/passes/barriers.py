@@ -1,0 +1,75 @@
+"""§3.6 — Insert synchronization barriers around shared-memory traffic.
+
+All threads of a block cooperate on the shared-memory copies, so a barrier
+is needed (a) before the copies overwrite the buffers a previous iteration
+may still be reading, and (b) after the copies, before any thread reads the
+freshly staged tiles.  As in the paper, placement uses the static structure
+of the copy loops rather than a general dependence analysis.
+
+For the latency-split form (§3.5) the placement follows Listing 6: one
+barrier after the prologue copies, one at the top of the steady-state body,
+one between compute and the delayed stores (added by
+``decouple_copy_stores``), and one after the main loop before the peeled
+compute.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..ir import Barrier, For, Module, Op
+
+
+class BarrierError(ValueError):
+    pass
+
+
+def insert_barriers(mod: Module) -> Module:
+    if not mod.meta.get("shared_mem"):
+        raise BarrierError("insert_barriers requires shared-memory staging")
+
+    k = mod.find_loops(role="main_k")[0]
+
+    if mod.meta.get("latency_split"):
+        jj = mod.find_loops(role="warp_j")[0]
+        # Barrier after the prologue copies (before entering the k-loop).
+        prologue = [
+            op
+            for op in jj.body
+            if isinstance(op, For) and op.attrs.get("stage") == "prologue"
+        ]
+        if not prologue:
+            raise BarrierError("latency-split module missing prologue copies")
+        at = jj.body.index(prologue[-1]) + 1
+        jj.body = jj.body[:at] + [Barrier()] + jj.body[at:]
+        # Barrier at the top of the steady-state body (previous iteration's
+        # delayed stores must be visible before this iteration's compute).
+        k.body = [Barrier()] + k.body
+        # Barrier after the k-loop, before the peeled compute.
+        epi = [
+            op
+            for op in jj.body
+            if isinstance(op, For) and op.attrs.get("stage") == "epilogue"
+        ]
+        if not epi:
+            raise BarrierError("latency-split module missing peeled compute")
+        at = jj.body.index(epi[0])
+        jj.body = jj.body[:at] + [Barrier()] + jj.body[at:]
+    else:
+        # Algorithm 1 placement: barrier, copies, barrier, compute.
+        copies: List[Op] = [
+            op
+            for op in k.body
+            if isinstance(op, For) and op.attrs.get("role", "").startswith("copy")
+        ]
+        if not copies:
+            raise BarrierError("no copy loops found in main k-loop")
+        last_idx = max(k.body.index(c) for c in copies)
+        first_idx = min(k.body.index(c) for c in copies)
+        body = list(k.body)
+        body.insert(last_idx + 1, Barrier())
+        body.insert(first_idx, Barrier())
+        k.body = body
+
+    mod.meta["barriers"] = True
+    return mod

@@ -1,0 +1,119 @@
+"""§3.3 — Create and place shared-memory buffers (affineDataCopyGenerate).
+
+Inserts, at the top of the main k-loop body, copy loop nests that stage the
+current ``tbm x tbk`` block of A and ``tbk x tbn`` block of B from global
+memory into shared-memory buffers, then rewrites the compute nest's loads
+of A and B to read the staged copies with rebased indices.
+
+Following the paper, C is *not* staged through shared memory: each warp
+streams its C tile straight into registers (fragment loads), since C is
+touched once per thread-block tile.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from ..ir import (
+    AffineExpr,
+    For,
+    Load,
+    MemRef,
+    Module,
+    Op,
+    Store,
+    fresh_name,
+)
+
+
+class BufferError(ValueError):
+    pass
+
+
+def _copy_nest(
+    src: MemRef,
+    dst: MemRef,
+    row_base: AffineExpr,
+    col_base: AffineExpr,
+    rows: int,
+    cols: int,
+    iv_prefix: str,
+    role: str,
+) -> For:
+    """Build ``for r in [row_base, row_base+rows) for c in [...]:
+    dst[r - row_base, c - col_base] = src[r, c]``."""
+    iv_r = f"%{iv_prefix}r"
+    iv_c = f"%{iv_prefix}c"
+    er, ec = AffineExpr.var(iv_r), AffineExpr.var(iv_c)
+    v = fresh_name("cp")
+    inner = For(
+        iv=iv_c,
+        lb=col_base,
+        ub=col_base + cols,
+        step=1,
+        body=[
+            Load(v, src, (er, ec)),
+            Store(v, dst, (er - row_base, ec - col_base)),
+        ],
+        attrs={"role": f"{role}_inner"},
+    )
+    outer = For(
+        iv=iv_r,
+        lb=row_base,
+        ub=row_base + rows,
+        step=1,
+        body=[inner],
+        attrs={"role": role},
+    )
+    return outer
+
+
+def create_shared_buffers(mod: Module) -> Module:
+    """Stage A and B thread-block tiles through shared memory."""
+    if not mod.meta.get("tiled"):
+        raise BufferError("create_shared_buffers requires two_level_tiling first")
+    tbm, tbn, tbk = mod.meta["tile_tb"]
+    a, b = mod.roles["A"], mod.roles["B"]
+
+    main_k_loops = mod.find_loops(role="main_k")
+    if len(main_k_loops) != 1:
+        raise BufferError("expected exactly one main k-loop")
+    main_k = main_k_loops[0]
+    block_i = mod.find_loops(role="block_i")[0]
+    block_j = mod.find_loops(role="block_j")[0]
+
+    a_smem = mod.add_memref(
+        MemRef("%a_smem", (tbm, tbk), a.dtype, space="shared"), role="a_smem"
+    )
+    b_smem = mod.add_memref(
+        MemRef("%b_smem", (tbk, tbn), b.dtype, space="shared"), role="b_smem"
+    )
+
+    ei = AffineExpr.var(block_i.iv)
+    ej = AffineExpr.var(block_j.iv)
+    ek = AffineExpr.var(main_k.iv)
+
+    # Paper order (Listing 2): B copy first, then A copy.
+    copy_b = _copy_nest(b, b_smem, ek, ej, tbk, tbn, "copyb", "copyB")
+    copy_a = _copy_nest(a, a_smem, ei, ek, tbm, tbk, "copya", "copyA")
+    main_k.body = [copy_b, copy_a] + main_k.body
+
+    # Rewrite compute-nest loads of A/B to the staged buffers, rebasing the
+    # block-origin offsets (i for A rows, k for A cols / B rows, j for B cols).
+    def rewrite(ops: List[Op]) -> None:
+        for op in ops:
+            if isinstance(op, For):
+                if op.attrs.get("role", "").startswith("copy"):
+                    continue
+                rewrite(op.body)
+            elif isinstance(op, Load):
+                if op.memref is a:
+                    op.memref = a_smem
+                    op.idxs = (op.idxs[0] - ei, op.idxs[1] - ek)
+                elif op.memref is b:
+                    op.memref = b_smem
+                    op.idxs = (op.idxs[0] - ek, op.idxs[1] - ej)
+
+    rewrite(main_k.body)
+    mod.meta["shared_mem"] = True
+    return mod

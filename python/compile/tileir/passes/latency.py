@@ -1,0 +1,190 @@
+"""§3.5 + §3.10 — Global-memory load latency hiding.
+
+Two cooperating transformations, split exactly as in the paper:
+
+``split_main_k_loop`` (§3.5) peels the shared-memory copies for iteration 0
+in front of the main k-loop and the compute for the last iteration behind
+it, and shifts the in-loop copies one iteration ahead (loading tile
+``k + tbk`` while computing on tile ``k``).
+
+``decouple_copy_stores`` (§3.10) completes the optimization: the in-loop
+copies are split into a *load phase* (global memory -> a register staging
+buffer, issued before the compute) and a *store phase* (staging buffer ->
+shared memory, issued after the compute).  Until this step the shifted
+copies would clobber the shared-memory tile the compute is still reading —
+the paper notes decoupling is "required both for the correctness and
+functioning of the optimization"; the pipeline therefore treats §3.5's
+output as an intermediate stage and only interpreter-validates after this
+pass.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..ir import (
+    AffineExpr,
+    Barrier,
+    For,
+    Load,
+    MemRef,
+    Module,
+    Op,
+    Store,
+    VecLoad,
+    VecStore,
+    Yield,
+    clone_with_fresh_names,
+    rename_values,
+    subst_exprs,
+)
+
+
+class LatencyError(ValueError):
+    pass
+
+
+def _copy_nests(body: List[Op]) -> List[For]:
+    return [
+        op
+        for op in body
+        if isinstance(op, For)
+        and op.attrs.get("role", "").startswith("copy")
+        and not op.attrs.get("role", "").endswith("_inner")
+    ]
+
+
+def split_main_k_loop(mod: Module) -> Module:
+    if not mod.meta.get("hoisted"):
+        raise LatencyError("split_main_k_loop requires unroll_and_hoist")
+    if not mod.meta.get("shared_mem"):
+        raise LatencyError("latency hiding requires shared-memory staging")
+
+    jj = mod.find_loops(role="warp_j")[0]
+    k = mod.find_loops(role="main_k")[0]
+    kk = mod.find_loops(role="warp_k")[0]
+    kdim = mod.meta["K"]
+    tbk = mod.meta["tile_tb"][2]
+    if kdim // tbk < 2:
+        raise LatencyError("need at least two k-tiles to pipeline")
+
+    copies = _copy_nests(k.body)
+    if not copies:
+        raise LatencyError("no copy nests found in main k-loop")
+
+    # -- prologue: copies for iteration 0, placed right before the k-loop.
+    prologue: List[Op] = []
+    for nest in copies:
+        clone = clone_with_fresh_names([nest], "pro")[0]
+        subst_exprs(clone, {k.iv: AffineExpr.cst(0)})
+        clone.attrs["stage"] = "prologue"
+        prologue.append(clone)
+
+    # -- steady state: shift in-loop copies one tile ahead, shrink bounds.
+    for nest in copies:
+        subst_exprs(nest, {k.iv: AffineExpr.var(k.iv) + tbk})
+        nest.attrs["stage"] = "steady"
+    k.ub = AffineExpr.cst(kdim - tbk)
+
+    # -- epilogue: peel the compute (warp k-loop) for the last iteration.
+    epi = clone_with_fresh_names([kk], "epi")[0]
+    subst_exprs(epi, {k.iv: AffineExpr.cst(kdim - tbk)})
+    # The peeled compute consumes the main loop's results as its initial
+    # accumulators and produces the values the final stores consume.
+    rename_values(
+        epi, {arg: res for (arg, _), res in zip(k.iter_args, k.result_names)}
+    )
+    epi.iter_args = [
+        (arg, res) for (arg, _), res in zip(epi.iter_args, k.result_names)
+    ]
+    final_names = [f"{r}_final" for r in epi.result_names]
+    epi.result_names = final_names
+    epi.attrs["stage"] = "epilogue"
+
+    # Rewire jj: [C loads, prologue copies, k, epilogue kk, stores(final)].
+    # The final stores were consuming the main loop's results; they must now
+    # consume the peeled compute's results instead.
+    rename_map = dict(zip(k.result_names, final_names))
+    idx = jj.body.index(k)
+    tail = jj.body[idx + 1 :]
+    for op in tail:
+        rename_values(op, rename_map)
+    jj.body = jj.body[:idx] + prologue + [k, epi] + tail
+
+    mod.meta["latency_split"] = True
+    mod.meta["pipeline_stages"] = 2  # single-stage double buffering
+    return mod
+
+
+def decouple_copy_stores(mod: Module) -> Module:
+    """Split steady-state copies into load and store phases (§3.10)."""
+    if not mod.meta.get("latency_split"):
+        raise LatencyError("decouple_copy_stores requires split_main_k_loop")
+
+    k = mod.find_loops(role="main_k")[0]
+    copies = [op for op in k.body if isinstance(op, For) and op.attrs.get("stage") == "steady"]
+    if not copies:
+        raise LatencyError("no steady-state copies to decouple")
+
+    load_phase: List[For] = []
+    store_phase: List[For] = []
+    for nest in copies:
+        role = nest.attrs["role"]  # copyA | copyB
+        tile = mod.roles["a_smem" if role == "copyA" else "b_smem"]
+        stage_role = "a_stage" if role == "copyA" else "b_stage"
+        if stage_role in mod.roles:
+            stage = mod.roles[stage_role]
+        else:
+            stage = mod.add_memref(
+                MemRef(f"%{stage_role}", tile.shape, tile.dtype, space="reg"),
+                role=stage_role,
+            )
+
+        # Locate the (inner) load/store pair of the nest.
+        inner = nest
+        while inner.body and isinstance(inner.body[0], For):
+            inner = inner.body[0]
+        loads = [op for op in inner.body if isinstance(op, (Load, VecLoad))]
+        stores = [op for op in inner.body if isinstance(op, (Store, VecStore))]
+        if len(loads) != 1 or len(stores) != 1:
+            raise LatencyError(f"unexpected copy body in {role}")
+        smem_idxs = stores[0].idxs
+
+        # Load phase: global -> staging registers (same rebased layout).
+        ld = clone_with_fresh_names([nest], "ld")[0]
+        ld_inner = ld
+        while ld_inner.body and isinstance(ld_inner.body[0], For):
+            ld_inner = ld_inner.body[0]
+        for op in ld_inner.body:
+            if isinstance(op, (Store, VecStore)):
+                op.memref = stage
+                op.idxs = smem_idxs
+        ld.attrs["phase"] = "load"
+        load_phase.append(ld)
+
+        # Store phase: staging registers -> shared memory.
+        st = clone_with_fresh_names([nest], "st")[0]
+        st_inner = st
+        while st_inner.body and isinstance(st_inner.body[0], For):
+            st_inner = st_inner.body[0]
+        for op in st_inner.body:
+            if isinstance(op, (Load, VecLoad)):
+                op.memref = stage
+                op.idxs = smem_idxs
+        st.attrs["phase"] = "store"
+        store_phase.append(st)
+
+    # Rebuild the steady-state body: loads, compute, (barrier), stores —
+    # Listing 6's "global loads for i+1; compute; barrier; smem stores".
+    rest = [op for op in k.body if op not in copies]
+    yield_ops = [op for op in rest if isinstance(op, Yield)]
+    others = [op for op in rest if not isinstance(op, Yield)]
+    # Keep the top-of-loop barrier (inserted by §3.6) ahead of the loads.
+    top: List[Op] = []
+    while others and isinstance(others[0], Barrier):
+        top.append(others.pop(0))
+    store_barrier: List[Op] = [Barrier()] if mod.meta.get("barriers") else []
+    k.body = top + load_phase + others + store_barrier + store_phase + yield_ops
+
+    mod.meta["decoupled"] = True
+    return mod

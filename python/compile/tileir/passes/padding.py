@@ -1,0 +1,34 @@
+"""§3.3 — Pad shared-memory buffers to avoid bank conflicts.
+
+The leading dimension of each shared buffer is extended by a padding
+factor; because the memref layout map absorbs the change, no other IR needs
+rewriting — exactly the paper's trick.  The WMMA API requires 128-bit
+alignment, so the factor must be a multiple of 8 elements for f16.
+"""
+
+from __future__ import annotations
+
+from ..ir import Module, dtype_bytes
+
+
+class PaddingError(ValueError):
+    pass
+
+
+def pad_shared_buffers(mod: Module, factor: int | None = None) -> Module:
+    """Extend the leading dimension of a_smem/b_smem by ``factor`` elements."""
+    factor = factor if factor is not None else int(mod.meta.get("pad_factor", 8))
+    if not mod.meta.get("shared_mem"):
+        raise PaddingError("pad_shared_buffers requires create_shared_buffers first")
+    for role in ("a_smem", "b_smem"):
+        buf = mod.roles[role]
+        align_elems = 16 // dtype_bytes(buf.dtype)  # 128-bit WMMA alignment
+        if factor % align_elems != 0:
+            raise PaddingError(
+                f"padding factor {factor} violates 128-bit alignment for "
+                f"{buf.dtype} (must be a multiple of {align_elems})"
+            )
+        buf.lead_pad = factor
+    mod.meta["pad_factor"] = factor
+    mod.meta["padded"] = True
+    return mod

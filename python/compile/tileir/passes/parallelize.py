@@ -1,0 +1,87 @@
+"""§3.8 + §3.9 — Extract parallel loops and map them to the GPU hierarchy.
+
+``isLoopParallel``/``affineParallelize`` analog: a loop is parallel when it
+carries no cross-iteration dependence.  The check used here is the
+conservative memory-based one sufficient for this pipeline's loop
+structures: a loop with ``iter_args`` is sequential; otherwise every store
+in its body must be to an address that varies with the loop IV (distinct
+iterations touch distinct elements).
+
+The mapping step then assigns the two outermost parallel loops to the
+thread-block grid and the next two to warps, recording launch dimensions in
+module meta (the ``gpu.launch`` of §3.9; our Pallas emitter consumes the
+same mapping as its grid).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..ir import For, Module, Op, Store, VecStore, WmmaStore
+
+
+class ParallelizeError(ValueError):
+    pass
+
+
+def is_loop_parallel(loop: For) -> bool:
+    """Memory-based parallelism check (conservative)."""
+    if loop.iter_args:
+        return False
+
+    stores: List[Op] = []
+
+    def collect(ops: List[Op]) -> None:
+        for op in ops:
+            if isinstance(op, (Store, VecStore, WmmaStore)):
+                stores.append(op)
+            elif isinstance(op, For):
+                collect(op.body)
+
+    collect(loop.body)
+    for st in stores:
+        if st.memref.space != "global":  # type: ignore[union-attr]
+            # Shared/register buffers are per-block (resp. cooperative)
+            # storage on the GPU: privatized by the mapping, so they do not
+            # inhibit block/warp parallelism — the MLIR GPU dialect treats
+            # workgroup memory the same way.
+            continue
+        idxs = st.idxs  # type: ignore[union-attr]
+        if all(e.coeff(loop.iv) == 0 for e in idxs):
+            # Same element written by every iteration -> loop-carried.
+            return False
+    return True
+
+
+def extract_and_map_parallel(mod: Module) -> Module:
+    block_i = mod.find_loops(role="block_i")[0]
+    block_j = mod.find_loops(role="block_j")[0]
+
+    mapping = [("block_i", "block_y"), ("block_j", "block_x")]
+    if mod.meta.get("tiled"):
+        mapping += [("warp_i", "warp_y"), ("warp_j", "warp_x")]
+
+    for role, target in mapping:
+        loops = mod.find_loops(role=role)
+        if len(loops) != 1:
+            raise ParallelizeError(f"expected exactly one {role} loop")
+        loop = loops[0]
+        if not is_loop_parallel(loop):
+            raise ParallelizeError(f"{role} loop is not parallel; cannot map")
+        loop.attrs["parallel"] = target
+
+    # Launch geometry (the gpu.launch equivalent).
+    m, n = mod.meta["M"], mod.meta["N"]
+    if mod.meta.get("tiled"):
+        tbm, tbn, _ = mod.meta["tile_tb"]
+        wm, wn, _ = mod.meta["tile_warp"]
+        grid = (m // tbm, n // tbn)
+        warps = (tbm // wm, tbn // wn)
+    else:
+        grid = (m, n)
+        warps = (1, 1)
+    mod.meta["grid"] = grid
+    mod.meta["warps_per_block"] = warps
+    mod.meta["threads_per_block"] = warps[0] * warps[1] * 32
+    mod.meta["parallelized"] = True
+    return mod

@@ -1,0 +1,70 @@
+"""§3.4 — Loop permutations for the GPU compute hierarchy.
+
+Two permutations, exactly as the paper describes:
+
+* the outer six loops go from ``(i, j, k, ii, jj, kk)`` to
+  ``(i, j, ii, jj, k, kk)`` so blocks/warps become the outer dimensions and
+  C's fragment load/stores become hoistable out of the k-loops;
+* the fragment loops go from ``(iii, jjj, kkk)`` to ``(kkk, iii, jjj)`` so
+  the warp-level MMA is an outer product over the fragment grid, enhancing
+  ILP (per Bhaskaracharya et al.).
+
+The copy loop nests (if shared-memory staging is enabled) stay attached to
+the main k-loop body, before the warp k-loop.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..ir import For, Module, Op
+
+
+class PermuteError(ValueError):
+    pass
+
+
+def _single(mod: Module, role: str) -> For:
+    loops = mod.find_loops(role=role)
+    if len(loops) != 1:
+        raise PermuteError(f"expected exactly one loop with role={role}")
+    return loops[0]
+
+
+def permute_for_gpu_hierarchy(mod: Module) -> Module:
+    if not mod.meta.get("wmma"):
+        raise PermuteError("permute_for_gpu_hierarchy requires generate_wmma_ops")
+
+    i = _single(mod, "block_i")
+    j = _single(mod, "block_j")
+    k = _single(mod, "main_k")
+    ii = _single(mod, "warp_i")
+    jj = _single(mod, "warp_j")
+    kk = _single(mod, "warp_k")
+    iii = _single(mod, "frag_i")
+    jjj = _single(mod, "frag_j")
+    kkk = _single(mod, "frag_k")
+
+    # Copy nests currently live at the head of the main k-loop body.
+    copies: List[Op] = [
+        op
+        for op in k.body
+        if isinstance(op, For) and op.attrs.get("role", "").startswith("copy")
+    ]
+
+    # Fragment permutation: (iii, jjj, kkk) -> (kkk, iii, jjj).
+    frag_body = kkk.body  # the WMMA op sequence
+    kkk.body = [iii]
+    iii.body = [jjj]
+    jjj.body = frag_body
+
+    # Outer permutation: (i, j, k, ii, jj, kk) -> (i, j, ii, jj, k, kk).
+    kk.body = [kkk]
+    k.body = copies + [kk]
+    jj.body = [k]
+    ii.body = [jj]
+    j.body = [ii]
+    # i.body already [j]
+
+    mod.meta["permuted"] = True
+    return mod

@@ -1,0 +1,110 @@
+"""§3.2 — Two-level tiling for locality and parallelism.
+
+First level: thread-block tiles ``(tbm, tbn, tbk)`` — mapped to SMs, backed
+by shared memory.  Second level: warp tiles ``(wm, wn, wk)`` — register
+reuse and warp-level parallelism.  Implemented with a generic
+perfect-nest tiling utility (the MLIR ``loopTiling`` analog) applied twice.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from ..ir import AffineExpr, For, Module, Op, subst_exprs
+
+
+class TilingError(ValueError):
+    pass
+
+
+def tile_perfect_nest(
+    nest: Sequence[For], tile_sizes: Sequence[int], suffix: str
+) -> Tuple[List[For], List[For]]:
+    """Tile a perfect nest of ``len(tile_sizes)`` loops in place.
+
+    Each loop ``iv`` with step ``s`` becomes an outer loop (same bounds,
+    step ``tile * s``) plus an inner loop ``iv+suffix`` over
+    ``[0, tile*s)`` with the original step; every use of ``iv`` in the
+    enclosed body is rewritten to ``iv + iv_inner``.
+
+    Returns (outer_loops, inner_loops).  The innermost original body is
+    re-hung under the innermost new inner loop.
+    """
+    if len(nest) != len(tile_sizes):
+        raise TilingError(f"need {len(nest)} tile sizes, got {len(tile_sizes)}")
+    for loop, t in zip(nest, tile_sizes):
+        span = loop.ub.const - loop.lb.const
+        if not loop.lb.is_const() or not loop.ub.is_const():
+            raise TilingError(f"loop {loop.iv} has non-constant bounds")
+        if t % loop.step != 0:
+            raise TilingError(f"tile {t} not a multiple of step {loop.step}")
+        if span % t != 0:
+            raise TilingError(
+                f"loop {loop.iv} span {span} not a multiple of tile {t}"
+            )
+
+    # Innermost body to re-hang below the new inner loops.
+    inner_body: List[Op] = nest[-1].body
+
+    mapping: Dict[str, AffineExpr] = {}
+    inner_loops: List[For] = []
+    for loop, t in zip(nest, tile_sizes):
+        inner_iv = f"{loop.iv}{suffix}"
+        mapping[loop.iv] = AffineExpr.var(loop.iv) + AffineExpr.var(inner_iv)
+        inner_loops.append(
+            For(
+                iv=inner_iv,
+                lb=AffineExpr.cst(0),
+                ub=AffineExpr.cst(t),
+                step=loop.step,
+                body=[],
+                attrs=dict(loop.attrs),
+            )
+        )
+        loop.step = t
+
+    # Rewrite every index expression in the original body.
+    for op in inner_body:
+        subst_exprs(op, mapping)
+
+    # Chain: outer nest -> inner loops -> original body.
+    for outer, inner in zip(inner_loops[:-1], inner_loops[1:]):
+        outer.body = [inner]
+    inner_loops[-1].body = inner_body
+    nest[-1].body = [inner_loops[0]]
+    return list(nest), inner_loops
+
+
+def two_level_tiling(mod: Module) -> Module:
+    """Apply thread-block then warp tiling to the naive 3-loop matmul."""
+    tb = mod.meta["tile_tb"]  # (tbm, tbn, tbk)
+    warp = mod.meta["tile_warp"]  # (wm, wn, wk)
+    tbm, tbn, tbk = tb
+    wm, wn, wk = warp
+    if any(t % w != 0 for t, w in zip(tb, warp)):
+        raise TilingError(f"thread-block tile {tb} not a multiple of warp tile {warp}")
+
+    nest = mod.loop_nest()
+    if len(nest) != 3:
+        raise TilingError(f"expected naive 3-loop nest, found depth {len(nest)}")
+    i, j, k = nest
+
+    # Level 1: thread-block tiles.  The k-loop at step tbk becomes the
+    # "main k-loop" of the paper.
+    _, inner1 = tile_perfect_nest([i, j, k], [tbm, tbn, tbk], suffix="i")
+    ii, jj, kk = inner1
+
+    # Level 2: warp tiles on the intra-block loops.
+    _, inner2 = tile_perfect_nest([ii, jj, kk], [wm, wn, wk], suffix="i")
+
+    i.attrs["role"] = "block_i"
+    j.attrs["role"] = "block_j"
+    k.attrs["role"] = "main_k"
+    ii.attrs["role"] = "warp_i"
+    jj.attrs["role"] = "warp_j"
+    kk.attrs["role"] = "warp_k"
+    for frag, role in zip(inner2, ("frag_i", "frag_j", "frag_k")):
+        frag.attrs["role"] = role
+
+    mod.meta["tiled"] = True
+    return mod

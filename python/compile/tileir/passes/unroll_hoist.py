@@ -1,0 +1,188 @@
+"""§3.4 — Full unroll of the fragment loops, CSE, and C hoisting.
+
+After permutation the nest is ``i, j, ii, jj, k(copies, kk(kkk, iii, jjj))``
+with a WMMA body.  This pass:
+
+1. fully unrolls the three fragment loops inside the warp k-loop, revealing
+   all fragment loads;
+2. CSEs duplicate fragment loads (an A fragment is re-loaded for every
+   jjj, a B fragment for every iii, a C fragment for every kkk — the
+   paper's "unroll-jam kind of effect");
+3. observes that the C fragment load/stores are invariant in ``k``/``kk``,
+   hoists the loads above the main k-loop and the stores below it, and
+   threads the live accumulator fragments through both k-loops as
+   ``iter_args`` — the registers that accumulate across the whole K
+   dimension (Listing 3).  CSE of a C load across the intervening fragment
+   store is legal precisely because the store/load round-trip through C is
+   replaced by direct SSA chaining of the MMA results.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from ..ir import (
+    AffineExpr,
+    For,
+    Module,
+    Op,
+    WmmaLoad,
+    WmmaMma,
+    WmmaStore,
+    Yield,
+    clone_with_fresh_names,
+    fresh_name,
+    subst_exprs,
+)
+
+
+class HoistError(ValueError):
+    pass
+
+
+def fully_unroll(loop: For) -> List[Op]:
+    """Return the flat op list of a fully unrolled constant-bounds loop."""
+    if not (loop.lb.is_const() and loop.ub.is_const()):
+        raise HoistError(f"cannot fully unroll loop {loop.iv}: non-constant bounds")
+    if loop.iter_args:
+        raise HoistError(f"cannot fully unroll loop {loop.iv}: has iter_args")
+    out: List[Op] = []
+    for idx, ivval in enumerate(range(loop.lb.const, loop.ub.const, loop.step)):
+        clones = clone_with_fresh_names(loop.body, f"u{idx}")
+        for op in clones:
+            subst_exprs(op, {loop.iv: AffineExpr.cst(ivval)})
+        out.extend(clones)
+    return out
+
+
+def _unroll_nest(loop: For) -> List[Op]:
+    """Recursively unroll a loop nest into a flat op list."""
+    flat: List[Op] = []
+    for op in fully_unroll(loop):
+        if isinstance(op, For):
+            flat.extend(_unroll_nest(op))
+        else:
+            flat.append(op)
+    return flat
+
+
+def _cse_fragment_loads(ops: List[Op]) -> List[Op]:
+    """Remove duplicate WMMA loads with identical source and indices."""
+    seen: Dict[Tuple, str] = {}
+    rename: Dict[str, str] = {}
+    out: List[Op] = []
+    for op in ops:
+        if isinstance(op, WmmaLoad):
+            key = (op.memref.name, op.operand, op.idxs, op.shape)
+            if key in seen:
+                rename[op.result] = seen[key]
+                continue
+            seen[key] = op.result
+        if isinstance(op, WmmaMma):
+            op.a = rename.get(op.a, op.a)
+            op.b = rename.get(op.b, op.b)
+            op.c = rename.get(op.c, op.c)
+        if isinstance(op, WmmaStore):
+            op.value = rename.get(op.value, op.value)
+        out.append(op)
+    return out
+
+
+def unroll_and_hoist(mod: Module) -> Module:
+    if not mod.meta.get("permuted"):
+        raise HoistError("unroll_and_hoist requires permute_for_gpu_hierarchy")
+
+    jj = mod.find_loops(role="warp_j")[0]
+    k = mod.find_loops(role="main_k")[0]
+    kk = mod.find_loops(role="warp_k")[0]
+    kkk = mod.find_loops(role="frag_k")[0]
+    c_ref = mod.roles["C"]
+
+    # 1. + 2. — unroll the fragment nest and CSE the revealed loads.
+    flat = _cse_fragment_loads(_unroll_nest(kkk))
+
+    # 3. — hoist C.  Identify each C fragment by its (row, col) index
+    # expressions; they must be invariant in both k-loops.
+    kvars = {k.iv, kk.iv}
+    frag_idxs: List[Tuple[AffineExpr, AffineExpr]] = []
+    keys: List[Tuple] = []  # insertion-ordered fragment keys
+    hoisted_loads: List[WmmaLoad] = []
+    init_name: Dict[Tuple, str] = {}  # key -> hoisted register name
+    acc_name: Dict[Tuple, str] = {}  # key -> current accumulator SSA name
+    load_to_key: Dict[str, Tuple] = {}  # CSE'd C-load result -> key
+
+    def fkey(idxs) -> Tuple:
+        return tuple((e.terms, e.const) for e in idxs)
+
+    new_body: List[Op] = []
+    for op in flat:
+        if isinstance(op, WmmaLoad) and op.operand == "COp":
+            if any(v in kvars for e in op.idxs for v in e.vars()):
+                raise HoistError("C fragment load not invariant in k-loops")
+            key = fkey(op.idxs)
+            if key not in init_name:
+                reg = fresh_name("c_reg")
+                hoisted_loads.append(WmmaLoad(reg, op.memref, op.idxs, "COp", op.shape))
+                init_name[key] = reg
+                acc_name[key] = reg
+                keys.append(key)
+                frag_idxs.append(op.idxs)
+            load_to_key[op.result] = key
+            continue  # the in-loop load disappears
+        if isinstance(op, WmmaMma):
+            if op.c in load_to_key:
+                key = load_to_key[op.c]
+            else:
+                key = next(
+                    (kx for kx, v in acc_name.items() if v == op.c), None
+                )
+                if key is None:
+                    raise HoistError(f"cannot trace accumulator for {op.c}")
+            op.c = acc_name[key]
+            acc_name[key] = op.result
+            new_body.append(op)
+            continue
+        if isinstance(op, WmmaStore) and op.memref is c_ref:
+            continue  # the final store happens once, after the main k-loop
+        new_body.append(op)
+
+    if not keys:
+        raise HoistError("no C fragments found to hoist")
+
+    # Wire accumulators through kk as iter_args.  The first MMA per fragment
+    # currently consumes the hoisted register name; point it at the kk block
+    # argument instead.
+    kk_args = [(fresh_name("acc"), init_name[key]) for key in keys]
+    arg_of_init = {init_name[key]: arg for key, (arg, _) in zip(keys, kk_args)}
+    for op in new_body:
+        if isinstance(op, WmmaMma) and op.c in arg_of_init:
+            op.c = arg_of_init[op.c]
+    kk_results = [fresh_name("kkres") for _ in keys]
+    kk.body = new_body + [Yield(tuple(acc_name[key] for key in keys))]
+    kk.iter_args = kk_args
+    kk.result_names = kk_results
+
+    # Thread through the main k-loop: kk consumes the k block args and k
+    # yields kk's results.
+    k_args = [(fresh_name("c_in"), init_name[key]) for key in keys]
+    remap = {init_name[key]: arg for key, (arg, _) in zip(keys, k_args)}
+    kk.iter_args = [(arg, remap.get(init, init)) for arg, init in kk.iter_args]
+    k_results = [fresh_name("res") for _ in keys]
+    copies = [op for op in k.body if op is not kk]
+    k.body = copies + [kk, Yield(tuple(kk_results))]
+    k.iter_args = k_args
+    k.result_names = k_results
+
+    # Final stores after the main k-loop, at warp (jj) level.
+    fm, fn = mod.meta.get("wmma_mnk", (16, 16, 16))[0], mod.meta.get(
+        "wmma_mnk", (16, 16, 16)
+    )[1]
+    stores = [
+        WmmaStore(res, c_ref, idxs, (fm, fn))
+        for res, idxs in zip(k_results, frag_idxs)
+    ]
+    jj.body = hoisted_loads + [k] + stores
+
+    mod.meta["hoisted"] = True
+    mod.meta["num_accumulators"] = len(keys)
+    return mod

@@ -1,0 +1,94 @@
+"""§3.4 — Rewrite the scalar fragment loops into WMMA ops.
+
+The innermost three (fragment) loops currently step by 1 with a scalar
+multiply-accumulate body.  This pass bumps their steps to the WMMA intrinsic
+size (m16n16k16 in the paper) and replaces the scalar body with the
+fragment-level load/compute/store sequence:
+
+    %a = gpu.subgroup_mma_load_matrix  a_src[row, col]   ("AOp")
+    %b = gpu.subgroup_mma_load_matrix  b_src[row, col]   ("BOp")
+    %c = gpu.subgroup_mma_load_matrix  C[row, col]       ("COp")
+    %r = gpu.subgroup_mma_compute %a, %b, %c
+    gpu.subgroup_mma_store_matrix %r, C[row, col]
+
+The fragment origins are taken from the existing scalar loads' affine index
+expressions, so the pass is agnostic to whether shared-memory staging
+already happened (A/B may still live in global memory at this point for
+ablation configurations without the buffer pass).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..ir import (
+    For,
+    Load,
+    Module,
+    WmmaLoad,
+    WmmaMma,
+    WmmaStore,
+    fresh_name,
+)
+
+
+class WmmaError(ValueError):
+    pass
+
+
+def _find_scalar_loads(loop: For, mod: Module):
+    """Locate the A-source, B-source and C loads in the scalar body."""
+    a_like = {id(mod.roles["A"]): "A", id(mod.roles.get("a_smem")): "a_smem"}
+    b_like = {id(mod.roles["B"]): "B", id(mod.roles.get("b_smem")): "b_smem"}
+    c_ref = mod.roles["C"]
+    a_load = b_load = c_load = None
+    for op in loop.body:
+        if isinstance(op, Load):
+            if id(op.memref) in a_like:
+                a_load = op
+            elif id(op.memref) in b_like:
+                b_load = op
+            elif op.memref is c_ref:
+                c_load = op
+    if a_load is None or b_load is None or c_load is None:
+        raise WmmaError("scalar fragment body does not match matmul pattern")
+    return a_load, b_load, c_load
+
+
+def generate_wmma_ops(mod: Module, mnk: Tuple[int, int, int] = (16, 16, 16)) -> Module:
+    """Replace the fragment loops' scalar body with WMMA fragment ops."""
+    if not mod.meta.get("tiled"):
+        raise WmmaError("generate_wmma_ops requires two_level_tiling first")
+    wm, wn, wk = mod.meta["tile_warp"]
+    fm, fn, fk = mnk
+    if wm % fm or wn % fn or wk % fk:
+        raise WmmaError(f"warp tile {(wm, wn, wk)} not a multiple of WMMA {mnk}")
+
+    frag_i = mod.find_loops(role="frag_i")
+    frag_j = mod.find_loops(role="frag_j")
+    frag_k = mod.find_loops(role="frag_k")
+    if not (len(frag_i) == len(frag_j) == len(frag_k) == 1):
+        raise WmmaError("expected exactly one fragment loop nest")
+    li, lj, lk = frag_i[0], frag_j[0], frag_k[0]
+
+    a_load, b_load, c_load = _find_scalar_loads(lk, mod)
+    c_ref = mod.roles["C"]
+
+    li.step, lj.step, lk.step = fm, fn, fk
+
+    va, vb, vc, vr = (
+        fresh_name("afrag"),
+        fresh_name("bfrag"),
+        fresh_name("cfrag"),
+        fresh_name("dfrag"),
+    )
+    lk.body = [
+        WmmaLoad(va, a_load.memref, a_load.idxs, "AOp", (fm, fk)),
+        WmmaLoad(vb, b_load.memref, b_load.idxs, "BOp", (fk, fn)),
+        WmmaLoad(vc, c_ref, c_load.idxs, "COp", (fm, fn)),
+        WmmaMma(vr, va, vb, vc, mnk),
+        WmmaStore(vr, c_ref, c_load.idxs, (fm, fn)),
+    ]
+    mod.meta["wmma"] = True
+    mod.meta["wmma_mnk"] = mnk
+    return mod

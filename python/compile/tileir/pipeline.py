@@ -1,0 +1,226 @@
+"""Pass manager for the paper's lowering pipeline (§3, Figure 1).
+
+``PipelineConfig`` names the tunables (problem size, dtypes, tile sizes,
+WMMA intrinsic shape, padding factor, vector width) and the optimization
+toggles the ablation study (Figure 3) enables one at a time.  ``run_pipeline``
+applies the passes in the paper's order, enforcing the dependency structure
+between them, capturing a printed IR snapshot after every pass, and
+(optionally) interpreter-validating each semantically complete stage
+against the naive module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .builder import build_fused_matmul_bias_relu, build_naive_matmul
+from .interp import run_matmul_module
+from .ir import F16, F32, Module
+from .printer import print_module
+from . import passes as P
+
+
+class PipelineError(ValueError):
+    pass
+
+
+# Ablation levels, in the cumulative order of Figure 3.
+OPT_ORDER: Tuple[str, ...] = (
+    "tiling",
+    "shared_mem",
+    "wmma",
+    "unroll_hoist",  # permute + unroll + CSE + invariant hoisting
+    "latency_hiding",
+    "padding",
+    "vectorize",
+)
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Everything that determines one generated kernel variant."""
+
+    m: int
+    n: int
+    k: int
+    dtype_in: str = F16
+    dtype_acc: str = F32
+    tile_tb: Tuple[int, int, int] = (128, 128, 64)
+    tile_warp: Tuple[int, int, int] = (64, 32, 32)
+    wmma_mnk: Tuple[int, int, int] = (16, 16, 16)
+    pad_factor: int = 8
+    vec_width: int = 8
+    epilogue: str = "none"  # none | bias | bias_relu
+    # Optimization toggles (Figure 3 ablation).  ``opt_level(n)`` builds the
+    # cumulative configurations.
+    tiling: bool = True
+    shared_mem: bool = True
+    wmma: bool = True
+    unroll_hoist: bool = True
+    latency_hiding: bool = True
+    padding: bool = True
+    vectorize: bool = True
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def opt_level(level: int, **kw) -> "PipelineConfig":
+        """Cumulative ablation config: level 0 = naive, 7 = fully optimized."""
+        if not 0 <= level <= len(OPT_ORDER):
+            raise PipelineError(f"opt level {level} out of range")
+        toggles = {name: i < level for i, name in enumerate(OPT_ORDER)}
+        return PipelineConfig(**{**toggles, **kw})
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> None:
+        tbm, tbn, tbk = self.tile_tb
+        wm, wn, wk = self.tile_warp
+        fm, fn, fk = self.wmma_mnk
+        if self.m % tbm or self.n % tbn or self.k % tbk:
+            raise PipelineError(
+                f"problem {self.m}x{self.n}x{self.k} not a multiple of "
+                f"thread-block tile {self.tile_tb}"
+            )
+        if tbm % wm or tbn % wn or tbk % wk:
+            raise PipelineError(
+                f"thread-block tile {self.tile_tb} not a multiple of warp "
+                f"tile {self.tile_warp}"
+            )
+        if wm % fm or wn % fn or wk % fk:
+            raise PipelineError(
+                f"warp tile {self.tile_warp} not a multiple of WMMA {self.wmma_mnk}"
+            )
+        deps = [
+            ("shared_mem", "tiling"),
+            ("wmma", "tiling"),
+            ("unroll_hoist", "wmma"),
+            ("latency_hiding", "unroll_hoist"),
+            ("latency_hiding", "shared_mem"),
+            ("padding", "shared_mem"),
+            ("vectorize", "shared_mem"),
+        ]
+        for opt, dep in deps:
+            if getattr(self, opt) and not getattr(self, dep):
+                raise PipelineError(f"optimization '{opt}' requires '{dep}'")
+        if self.latency_hiding and self.k // tbk < 2:
+            raise PipelineError("latency hiding needs at least two k-tiles")
+
+    def level(self) -> int:
+        """Highest contiguous cumulative level this config corresponds to."""
+        lvl = 0
+        for name in OPT_ORDER:
+            if getattr(self, name):
+                lvl += 1
+            else:
+                break
+        return lvl
+
+    def variant_name(self) -> str:
+        opts = "".join("1" if getattr(self, name) else "0" for name in OPT_ORDER)
+        epi = "" if self.epilogue == "none" else f"_{self.epilogue}"
+        return (
+            f"matmul_m{self.m}n{self.n}k{self.k}_{self.dtype_in}_{self.dtype_acc}"
+            f"_tb{'x'.join(map(str, self.tile_tb))}"
+            f"_w{'x'.join(map(str, self.tile_warp))}_o{opts}{epi}"
+        )
+
+
+@dataclass
+class PipelineResult:
+    config: PipelineConfig
+    module: Module
+    snapshots: Dict[str, str] = field(default_factory=dict)
+    passes_run: List[str] = field(default_factory=list)
+
+
+def run_pipeline(
+    config: PipelineConfig,
+    capture_snapshots: bool = False,
+    verify: bool = False,
+    verify_rng: Optional[np.random.Generator] = None,
+) -> PipelineResult:
+    """Run the lowering pipeline for ``config`` and return the final module."""
+    config.validate()
+
+    if config.epilogue == "none":
+        mod = build_naive_matmul(config.m, config.n, config.k, config.dtype_in, config.dtype_acc)
+    else:
+        mod = build_fused_matmul_bias_relu(
+            config.m,
+            config.n,
+            config.k,
+            config.dtype_in,
+            config.dtype_acc,
+            relu=config.epilogue == "bias_relu",
+        )
+    mod.meta.update(
+        {
+            "tile_tb": config.tile_tb,
+            "tile_warp": config.tile_warp,
+            "pad_factor": config.pad_factor,
+            "vec_width": config.vec_width,
+        }
+    )
+
+    result = PipelineResult(config=config, module=mod)
+
+    # Reference output for verification, computed on the naive module once.
+    ref_out = None
+    rng = verify_rng or np.random.default_rng(0)
+    if verify:
+        va = rng.standard_normal((config.m, config.k))
+        vb = rng.standard_normal((config.k, config.n))
+        vc = rng.standard_normal((config.m, config.n))
+        ref_out = va @ vb + vc
+
+    def record(name: str, semantically_complete: bool = True) -> None:
+        result.passes_run.append(name)
+        if capture_snapshots:
+            result.snapshots[name] = print_module(mod)
+        if verify and semantically_complete and config.epilogue == "none":
+            got = run_matmul_module(mod, va, vb, vc.copy())
+            np.testing.assert_allclose(got, ref_out, rtol=1e-10, atol=1e-10)
+
+    record("build_naive")
+
+    if config.tiling:
+        P.two_level_tiling(mod)
+        record("two_level_tiling")
+    if config.shared_mem:
+        P.create_shared_buffers(mod)
+        record("create_shared_buffers")
+    if config.wmma:
+        P.generate_wmma_ops(mod, config.wmma_mnk)
+        record("generate_wmma_ops")
+    if config.unroll_hoist:
+        P.permute_for_gpu_hierarchy(mod)
+        record("permute_for_gpu_hierarchy")
+        P.unroll_and_hoist(mod)
+        record("unroll_and_hoist")
+    if config.latency_hiding:
+        # §3.5's split leaves the IR transiently incorrect under sequential
+        # semantics (the paper notes decoupling is required for correctness);
+        # verification resumes after decouple_copy_stores.
+        P.split_main_k_loop(mod)
+        record("split_main_k_loop", semantically_complete=False)
+    if config.shared_mem:
+        P.insert_barriers(mod)
+        record(
+            "insert_barriers",
+            semantically_complete=not config.latency_hiding,
+        )
+    if config.padding:
+        P.pad_shared_buffers(mod, config.pad_factor)
+        record("pad_shared_buffers", semantically_complete=not config.latency_hiding)
+    if config.vectorize:
+        P.vectorize_copies(mod, config.vec_width)
+        record("vectorize_copies", semantically_complete=not config.latency_hiding)
+    if config.latency_hiding:
+        P.decouple_copy_stores(mod)
+        record("decouple_copy_stores")
+    P.extract_and_map_parallel(mod)
+    record("extract_and_map_parallel")
+
+    return result

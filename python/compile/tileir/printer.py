@@ -1,0 +1,108 @@
+"""MLIR-style textual printer for tile-IR.
+
+Produces listings in the style of the paper's Listings 1-6 so that pipeline
+snapshots are directly comparable with the published IR excerpts.  The
+format is stable (used by golden tests) but intentionally not re-parsed.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .ir import (
+    AddF,
+    Barrier,
+    For,
+    FpExt,
+    Load,
+    Module,
+    MulF,
+    Op,
+    Store,
+    VecLoad,
+    VecStore,
+    WmmaLoad,
+    WmmaMma,
+    WmmaStore,
+    Yield,
+)
+
+
+def _idx(op) -> str:
+    return ", ".join(repr(e) for e in op.idxs)
+
+
+def print_op(op: Op, indent: int = 0) -> List[str]:
+    pad = "  " * indent
+    if isinstance(op, Load):
+        return [f"{pad}{op.result} = affine.load {op.memref.name}[{_idx(op)}] : {op.memref.type_str()}"]
+    if isinstance(op, Store):
+        return [f"{pad}affine.store {op.value}, {op.memref.name}[{_idx(op)}] : {op.memref.type_str()}"]
+    if isinstance(op, VecLoad):
+        return [
+            f"{pad}{op.result} = affine.vector_load {op.memref.name}[{_idx(op)}]"
+            f" : {op.memref.type_str()}, vector<{op.width}x{op.memref.dtype}>"
+        ]
+    if isinstance(op, VecStore):
+        return [
+            f"{pad}affine.vector_store {op.value}, {op.memref.name}[{_idx(op)}]"
+            f" : {op.memref.type_str()}, vector<{op.width}x{op.memref.dtype}>"
+        ]
+    if isinstance(op, FpExt):
+        return [f"{pad}{op.result} = fpext {op.operand} : {op.from_dtype} to {op.to_dtype}"]
+    if isinstance(op, MulF):
+        return [f"{pad}{op.result} = mulf {op.lhs}, {op.rhs} : {op.dtype}"]
+    if isinstance(op, AddF):
+        return [f"{pad}{op.result} = addf {op.lhs}, {op.rhs} : {op.dtype}"]
+    if isinstance(op, WmmaLoad):
+        frag = f"!gpu.mma_matrix<{op.shape[0]}x{op.shape[1]}x{op.memref.dtype}, \"{op.operand}\">"
+        return [
+            f"{pad}{op.result} = gpu.subgroup_mma_load_matrix {op.memref.name}[{_idx(op)}]"
+            f" {{leadDimension = {op.memref.lead_dim} : index}} : {op.memref.type_str()} -> {frag}"
+        ]
+    if isinstance(op, WmmaStore):
+        frag = f"!gpu.mma_matrix<{op.shape[0]}x{op.shape[1]}x{op.memref.dtype}, \"COp\">"
+        return [
+            f"{pad}gpu.subgroup_mma_store_matrix {op.value}, {op.memref.name}[{_idx(op)}]"
+            f" {{leadDimension = {op.memref.lead_dim} : index}} : {frag}, {op.memref.type_str()}"
+        ]
+    if isinstance(op, WmmaMma):
+        m, n, k = op.mnk
+        return [
+            f"{pad}{op.result} = gpu.subgroup_mma_compute {op.a}, {op.b}, {op.c}"
+            f" : m{m}n{n}k{k}"
+        ]
+    if isinstance(op, Barrier):
+        return [f"{pad}gpu.barrier"]
+    if isinstance(op, Yield):
+        return [f"{pad}affine.yield {', '.join(op.values)}"]
+    if isinstance(op, For):
+        header = f"{pad}affine.for {op.iv} = {op.lb!r} to {op.ub!r}"
+        if op.step != 1:
+            header += f" step {op.step}"
+        if op.iter_args:
+            args = ", ".join(f"{n} = {init}" for n, init in op.iter_args)
+            header += f" iter_args({args})"
+        if op.attrs:
+            attrs = ", ".join(f"{k} = \"{v}\"" for k, v in sorted(op.attrs.items()))
+            header += f" {{{attrs}}}"
+        lines = [header + " {"]
+        for inner in op.body:
+            lines.extend(print_op(inner, indent + 1))
+        lines.append(pad + "}")
+        return lines
+    raise TypeError(f"unknown op {type(op)}")
+
+
+def print_module(mod: Module) -> str:
+    lines: List[str] = [f"// module @{mod.name}"]
+    for m in mod.memrefs:
+        if m.space == "shared":
+            lines.append(
+                f"memref.global \"private\" @{m.name.lstrip('%')} : {m.type_str()}"
+            )
+    lines.append(f"func @main() {{")
+    for op in mod.body:
+        lines.extend(print_op(op, 1))
+    lines.append("}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,177 @@
+"""Schedule extraction: the contract between the pipeline and the backends.
+
+After the pipeline runs, the final module's structure encodes everything a
+backend needs: tile sizes, fragment shape, padding, pipelining depth,
+vector width, launch geometry, and shared-memory footprint.  ``Schedule``
+extracts those into a plain record consumed by
+
+* the Pallas emitter (``kernels/emitter.py``) — grid + BlockSpecs;
+* the Rust performance simulator — cost-model inputs (serialized into
+  ``artifacts/manifest.json`` by ``aot.py`` and re-parsed by
+  ``rust/src/schedule.rs``).
+
+Extraction cross-checks the module meta against the IR itself (buffer
+shapes, barrier counts, peeled stages) so a pass that silently diverged
+from its declared effect fails here rather than downstream.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional, Tuple
+
+from .ir import Barrier, For, Module, VecLoad, dtype_bytes
+
+
+class ScheduleError(ValueError):
+    pass
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Backend-facing description of one generated kernel variant."""
+
+    name: str
+    m: int
+    n: int
+    k: int
+    dtype_in: str
+    dtype_acc: str
+    epilogue: str
+    # Optimization structure
+    opt_level: int
+    tiling: bool
+    shared_mem: bool
+    wmma: bool
+    unroll_hoist: bool
+    latency_hiding: bool
+    padding: bool
+    vectorize: bool
+    # Tiling parameters
+    tile_tb: Tuple[int, int, int]
+    tile_warp: Tuple[int, int, int]
+    wmma_mnk: Tuple[int, int, int]
+    pad_factor: int
+    vec_width: int
+    pipeline_stages: int
+    # Launch geometry
+    grid: Tuple[int, int]
+    warps_per_block: Tuple[int, int]
+    threads_per_block: int
+    # Derived footprints
+    smem_bytes: int
+    accumulators_per_warp: int
+    barriers_per_iteration: int
+
+    def to_json_dict(self) -> Dict:
+        return asdict(self)
+
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    def vmem_tile_bytes(self) -> int:
+        """VMEM footprint of one grid cell in the Pallas/TPU adaptation:
+        A tile + B tile + C accumulator tile (padded)."""
+        tbm, tbn, tbk = self.tile_tb
+        in_b = dtype_bytes(self.dtype_in)
+        acc_b = dtype_bytes(self.dtype_acc)
+        pad = self.pad_factor if self.padding else 0
+        a = tbm * (tbk + pad) * in_b
+        b = tbk * (tbn + pad) * in_b
+        c = tbm * tbn * acc_b
+        return a + b + c
+
+
+def _count_steady_barriers(mod: Module) -> int:
+    k_loops = mod.find_loops(role="main_k")
+    if not k_loops:
+        return 0
+    return sum(1 for op in k_loops[0].body if isinstance(op, Barrier))
+
+
+def extract_schedule(mod: Module, config) -> Schedule:
+    """Build a Schedule from a completed pipeline module + its config."""
+    meta = mod.meta
+    if not meta.get("parallelized"):
+        raise ScheduleError("schedule extraction requires a completed pipeline")
+
+    # Cross-check shared-memory footprint against the actual buffers.
+    smem_bytes = sum(m.size_bytes() for m in mod.memrefs if m.space == "shared")
+    if config.shared_mem:
+        tbm, tbn, tbk = config.tile_tb
+        pad = config.pad_factor if config.padding else 0
+        expect = (tbm * (tbk + pad) + tbk * (tbn + pad)) * dtype_bytes(
+            config.dtype_in
+        )
+        if smem_bytes != expect:
+            raise ScheduleError(
+                f"shared-memory footprint mismatch: IR has {smem_bytes} B, "
+                f"config implies {expect} B"
+            )
+
+    # Cross-check pipelining: a latency-split module must have prologue and
+    # epilogue stages in the IR.
+    stages = int(meta.get("pipeline_stages", 1))
+    if config.latency_hiding:
+        pro = [
+            op for op in mod.walk()
+            if isinstance(op, For) and op.attrs.get("stage") == "prologue"
+        ]
+        epi = [
+            op for op in mod.walk()
+            if isinstance(op, For) and op.attrs.get("stage") == "epilogue"
+        ]
+        if not pro or not epi:
+            raise ScheduleError("latency-hidden module missing peeled stages")
+        if not meta.get("decoupled"):
+            raise ScheduleError("latency-hidden module missing decoupled stores")
+
+    # Cross-check vectorization against the IR.
+    vec_width = int(meta.get("vec_width", 1)) if config.vectorize else 1
+    if config.vectorize:
+        vec_loads = [op for op in mod.walk() if isinstance(op, VecLoad)]
+        if not vec_loads:
+            raise ScheduleError("vectorized module contains no vector loads")
+
+    wmma_mnk = tuple(meta.get("wmma_mnk", (16, 16, 16)))
+    wm, wn, _ = config.tile_warp
+    acc = (
+        (wm // wmma_mnk[0]) * (wn // wmma_mnk[1])
+        if config.wmma
+        else 0
+    )
+    if config.unroll_hoist and meta.get("num_accumulators") != acc:
+        raise ScheduleError(
+            f"accumulator count mismatch: IR has {meta.get('num_accumulators')}, "
+            f"config implies {acc}"
+        )
+
+    return Schedule(
+        name=config.variant_name(),
+        m=config.m,
+        n=config.n,
+        k=config.k,
+        dtype_in=config.dtype_in,
+        dtype_acc=config.dtype_acc,
+        epilogue=config.epilogue,
+        opt_level=config.level(),
+        tiling=config.tiling,
+        shared_mem=config.shared_mem,
+        wmma=config.wmma,
+        unroll_hoist=config.unroll_hoist,
+        latency_hiding=config.latency_hiding,
+        padding=config.padding,
+        vectorize=config.vectorize,
+        tile_tb=tuple(config.tile_tb),
+        tile_warp=tuple(config.tile_warp),
+        wmma_mnk=wmma_mnk,
+        pad_factor=config.pad_factor if config.padding else 0,
+        vec_width=vec_width,
+        pipeline_stages=stages if config.latency_hiding else 1,
+        grid=tuple(meta["grid"]),
+        warps_per_block=tuple(meta["warps_per_block"]),
+        threads_per_block=int(meta["threads_per_block"]),
+        smem_bytes=smem_bytes,
+        accumulators_per_warp=acc,
+        barriers_per_iteration=_count_steady_barriers(mod),
+    )

@@ -1,0 +1,119 @@
+"""AOT pipeline tests: HLO text interchange + manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import ArtifactWriter, as_f32_io, to_hlo_text, tile_candidates
+from compile.model import matmul_baseline
+from compile.tileir import PipelineConfig
+from compile.kernels import generate_matmul
+
+
+class TestHloText:
+    def test_lowering_produces_parsable_header(self):
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        text = to_hlo_text(jax.jit(fn).lower(*shapes))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # f32 at the boundary, f16 inside (the in-graph cast)
+        assert "f16" in text
+
+    def test_generated_kernel_lowered_contains_loop(self):
+        cfg = PipelineConfig(m=64, n=64, k=64, tile_tb=(32, 32, 32),
+                             tile_warp=(16, 16, 16))
+        kernel = generate_matmul(cfg)
+        fn = as_f32_io(lambda a, b, c: (kernel(a, b, c),))
+        shapes = [jax.ShapeDtypeStruct((64, 64), jnp.float32)] * 3
+        text = to_hlo_text(jax.jit(fn).lower(*shapes))
+        assert "while" in text  # the interpreted grid loop
+
+    def test_outputs_are_tupled(self):
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        text = to_hlo_text(jax.jit(fn).lower(*shapes))
+        # return_tuple=True: the entry root is a tuple (rust unwraps to_tuple1)
+        assert "(f32[32,32]" in text.replace(" ", "")
+
+
+class TestArtifactWriter:
+    def test_writes_file_and_manifest(self, tmp_path):
+        w = ArtifactWriter(str(tmp_path))
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        w.lower("t0", fn, shapes, kind="baseline", extra={"m": 32})
+        w.finish()
+        assert (tmp_path / "t0.hlo.txt").exists()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        e = manifest["artifacts"][0]
+        assert e["name"] == "t0"
+        assert e["kind"] == "baseline"
+        assert e["m"] == 32
+        assert e["inputs"][0] == {"shape": [32, 32], "dtype": "f32"}
+        assert e["outputs"][0] == {"shape": [32, 32], "dtype": "f32"}
+
+    def test_schedule_embedded_for_generated(self, tmp_path):
+        from compile.kernels import generate_matmul_with_schedule
+
+        w = ArtifactWriter(str(tmp_path))
+        cfg = PipelineConfig(m=64, n=64, k=64, tile_tb=(32, 32, 32),
+                             tile_warp=(16, 16, 16))
+        kernel, sched = generate_matmul_with_schedule(cfg)
+        fn = as_f32_io(lambda a, b, c: (kernel(a, b, c),))
+        shapes = [jax.ShapeDtypeStruct((64, 64), jnp.float32)] * 3
+        w.lower(sched.name, fn, shapes, kind="generated",
+                schedule=sched.to_json_dict())
+        w.finish()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        s = manifest["artifacts"][0]["schedule"]
+        assert s["tile_tb"] == [32, 32, 32]
+        assert s["opt_level"] == 7
+        assert s["grid"] == [2, 2]
+
+
+class TestTileCandidates:
+    def test_small_sizes_get_small_tiles_only(self):
+        assert tile_candidates(256) == [((64, 64, 64), (32, 32, 32))]
+
+    def test_large_sizes_include_paper_tile(self):
+        cands = tile_candidates(1024)
+        assert ((128, 128, 64), (64, 32, 32)) in cands
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    def _manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        return json.load(open(path))
+
+    def test_all_files_exist(self):
+        m = self._manifest()
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for e in m["artifacts"]:
+            assert os.path.exists(os.path.join(base, e["file"])), e["name"]
+
+    def test_kinds_cover_every_experiment(self):
+        kinds = {e["kind"] for e in self._manifest()["artifacts"]}
+        assert {"generated", "baseline", "ablation", "fused", "unfused",
+                "hand", "transformer"} <= kinds
+
+    def test_ablation_ladder_complete(self):
+        abl = [e for e in self._manifest()["artifacts"] if e["kind"] == "ablation"]
+        levels = sorted(e["schedule"]["opt_level"] for e in abl)
+        assert levels == list(range(8))
+
+    def test_io_all_f32(self):
+        for e in self._manifest()["artifacts"]:
+            for s in e["inputs"] + e["outputs"]:
+                assert s["dtype"] == "f32", e["name"]

@@ -1,0 +1,231 @@
+"""L1 correctness: generated Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for everything the Rust runtime later
+executes: every optimization level, every precision mode, fused epilogues,
+and a hypothesis sweep over shapes/tiles/dtypes.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.tileir import PipelineConfig
+from compile.kernels import (
+    emit_kernel,
+    generate_matmul,
+    generate_matmul_with_schedule,
+    hand_optimized_matmul,
+    matmul_bias_ref,
+    matmul_bias_relu_ref,
+    matmul_ref,
+)
+
+SMALL = dict(tile_tb=(32, 32, 32), tile_warp=(16, 16, 16))
+
+
+def rand_inputs(m, n, k, dtype_in="f16", dtype_acc="f32", seed=0, bias=False):
+    rng = np.random.default_rng(seed)
+    ind = {"f16": np.float16, "f32": np.float32}[dtype_in]
+    accd = {"f16": np.float16, "f32": np.float32}[dtype_acc]
+    a = rng.standard_normal((m, k)).astype(ind)
+    b = rng.standard_normal((k, n)).astype(ind)
+    c = rng.standard_normal((m, n)).astype(accd)
+    if bias:
+        return a, b, c, rng.standard_normal((n,)).astype(accd)
+    return a, b, c
+
+
+def tol(dtype_acc):
+    # True stepwise f16 accumulation (what the naive/rank-1 kernels do)
+    # diverges from the oracle's single-rounding matmul by O(sqrt(K)*eps);
+    # the bound below covers K <= 128 with margin.  f32 accumulation paths
+    # stay tight.
+    return dict(rtol=1e-1, atol=1e-1) if dtype_acc == "f16" else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestOptLevels:
+    @pytest.mark.parametrize("level", range(8))
+    def test_level_matches_ref_mixed_precision(self, level):
+        m = n = k = 64
+        cfg = PipelineConfig.opt_level(level, m=m, n=n, k=k, **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(m, n, k)
+        got = np.asarray(f(a, b, c))
+        ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)))
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    @pytest.mark.parametrize("level", [0, 3, 7])
+    def test_level_matches_ref_half_precision(self, level):
+        m = n = k = 64
+        cfg = PipelineConfig.opt_level(
+            level, m=m, n=n, k=k, dtype_acc="f16", **SMALL
+        )
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(m, n, k, dtype_acc="f16")
+        got = np.asarray(f(a, b, c))
+        ref = np.asarray(
+            matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), "f16")
+        )
+        np.testing.assert_allclose(got, ref, **tol("f16"))
+
+    def test_output_dtype_follows_accumulator(self):
+        cfg = PipelineConfig(m=64, n=64, k=64, **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(64, 64, 64)
+        assert f(a, b, c).dtype == jnp.float32
+        cfg16 = PipelineConfig(m=64, n=64, k=64, dtype_acc="f16", **SMALL)
+        f16 = generate_matmul(cfg16)
+        a, b, c = rand_inputs(64, 64, 64, dtype_acc="f16")
+        assert f16(a, b, c).dtype == jnp.float16
+
+    def test_rectangular_problem(self):
+        m, n, k = 32, 96, 64
+        cfg = PipelineConfig(m=m, n=n, k=k, **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(m, n, k)
+        got = np.asarray(f(a, b, c))
+        ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)))
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    def test_paper_warp_tile_aspect(self):
+        # 32x16 warp tile (the paper's 64x32 aspect) on a 128 problem
+        cfg = PipelineConfig(
+            m=128, n=128, k=128, tile_tb=(64, 64, 32), tile_warp=(32, 16, 16)
+        )
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(128, 128, 128, seed=3)
+        got = np.asarray(f(a, b, c))
+        ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)))
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    def test_c_is_accumulated_not_overwritten(self):
+        cfg = PipelineConfig(m=32, n=32, k=32, tile_tb=(32, 32, 32),
+                             tile_warp=(16, 16, 16), latency_hiding=False)
+        f = generate_matmul(cfg)
+        a, b, _ = rand_inputs(32, 32, 32)
+        c = np.full((32, 32), 100.0, dtype=np.float32)
+        got = np.asarray(f(a, b, c))
+        assert got.mean() > 50  # C contributed
+
+
+class TestFusedEpilogues:
+    def test_bias(self):
+        m = n = k = 64
+        cfg = PipelineConfig(m=m, n=n, k=k, epilogue="bias", **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c, bias = rand_inputs(m, n, k, bias=True)
+        got = np.asarray(f(a, b, c, bias))
+        ref = np.asarray(
+            matmul_bias_ref(
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), jnp.asarray(bias)
+            )
+        )
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    def test_bias_relu(self):
+        m = n = k = 64
+        cfg = PipelineConfig(m=m, n=n, k=k, epilogue="bias_relu", **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c, bias = rand_inputs(m, n, k, bias=True, seed=1)
+        got = np.asarray(f(a, b, c, bias))
+        ref = np.asarray(
+            matmul_bias_relu_ref(
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), jnp.asarray(bias)
+            )
+        )
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+        assert (got >= 0).all()
+
+    def test_fused_epilogue_on_unhoisted_level(self):
+        # epilogue must also work on the pre-hoisting structure (level 3)
+        m = n = k = 64
+        cfg = PipelineConfig.opt_level(3, m=m, n=n, k=k, epilogue="bias", **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c, bias = rand_inputs(m, n, k, bias=True, seed=2)
+        got = np.asarray(f(a, b, c, bias))
+        ref = np.asarray(
+            matmul_bias_ref(
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), jnp.asarray(bias)
+            )
+        )
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    def test_naive_fused(self):
+        m = n = k = 32
+        cfg = PipelineConfig.opt_level(0, m=m, n=n, k=k, epilogue="bias_relu", **SMALL)
+        f = generate_matmul(cfg)
+        a, b, c, bias = rand_inputs(m, n, k, bias=True)
+        got = np.asarray(f(a, b, c, bias))
+        ref = np.asarray(
+            matmul_bias_relu_ref(
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), jnp.asarray(bias)
+            )
+        )
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+
+class TestHandOptimized:
+    def test_matches_ref(self):
+        m = n = k = 128
+        h = hand_optimized_matmul(m, n, k, tile=(64, 64, 32))
+        a, b, c = rand_inputs(m, n, k, seed=4)
+        got = np.asarray(h(a, b, c))
+        ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)))
+        np.testing.assert_allclose(got, ref, **tol("f32"))
+
+    def test_rejects_bad_tile(self):
+        with pytest.raises(ValueError):
+            hand_optimized_matmul(100, 64, 64, tile=(64, 64, 32))
+
+
+class TestScheduleContract:
+    def test_emitted_kernel_carries_schedule(self):
+        cfg = PipelineConfig(m=64, n=64, k=64, **SMALL)
+        f, sched = generate_matmul_with_schedule(cfg)
+        assert f.schedule is sched
+        assert sched.grid == (2, 2)
+
+    def test_emit_rejects_non_divisible(self):
+        from compile.tileir.schedule import Schedule
+
+        sched = Schedule(
+            name="bad", m=100, n=64, k=64, dtype_in="f16", dtype_acc="f32",
+            epilogue="none", opt_level=7, tiling=True, shared_mem=True,
+            wmma=True, unroll_hoist=True, latency_hiding=True, padding=True,
+            vectorize=True, tile_tb=(32, 32, 32), tile_warp=(16, 16, 16),
+            wmma_mnk=(16, 16, 16), pad_factor=8, vec_width=8,
+            pipeline_stages=2, grid=(3, 2), warps_per_block=(2, 2),
+            threads_per_block=128, smem_bytes=0, accumulators_per_warp=1,
+            barriers_per_iteration=2,
+        )
+        with pytest.raises(Exception):
+            emit_kernel(sched)
+
+
+# Hypothesis sweep: shapes (multiples of the fragment), tiles, dtypes, levels.
+_tiles = st.sampled_from([(16, 16, 16), (32, 32, 32), (32, 16, 16)])
+_mults = st.integers(min_value=1, max_value=3)
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mi=_mults, ni=_mults, ki=st.integers(min_value=2, max_value=3),
+        warp=_tiles,
+        dtype_acc=st.sampled_from(["f32", "f16"]),
+        level=st.integers(min_value=0, max_value=7),
+    )
+    def test_generated_kernel_matches_ref(self, mi, ni, ki, warp, dtype_acc, level):
+        tb = (32, 32, 32)
+        m, n, k = 32 * mi, 32 * ni, 32 * ki
+        cfg = PipelineConfig.opt_level(
+            level, m=m, n=n, k=k, tile_tb=tb, tile_warp=warp, dtype_acc=dtype_acc
+        )
+        f = generate_matmul(cfg)
+        a, b, c = rand_inputs(m, n, k, dtype_acc=dtype_acc, seed=m * n + k + level)
+        got = np.asarray(f(a, b, c))
+        ref = np.asarray(
+            matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), dtype_acc)
+        )
+        np.testing.assert_allclose(got, ref, **tol(dtype_acc))

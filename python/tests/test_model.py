@@ -1,0 +1,115 @@
+"""L2 tests: model graphs, fused-vs-unfused agreement, transformer layer."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    matmul_baseline,
+    matmul_variant,
+    transformer_layer,
+    transformer_layer_inputs,
+    unfused_epilogue,
+)
+from compile.tileir import PipelineConfig
+
+SMALL = dict(tile_tb=(32, 32, 32), tile_warp=(16, 16, 16))
+
+
+def rand(shape, dtype=np.float32, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+class TestMatmulGraphs:
+    def test_variant_matches_baseline(self):
+        m = n = k = 64
+        cfg = PipelineConfig(m=m, n=n, k=k, **SMALL)
+        gen = matmul_variant(cfg)
+        base = matmul_baseline(m, n, k)
+        a, b, c = rand((m, k), seed=1), rand((k, n), seed=2), rand((m, n), seed=3)
+        got = np.asarray(gen(a.astype(np.float16), b.astype(np.float16), c)[0])
+        want = np.asarray(base(a, b, c)[0])
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_fused_matches_unfused(self):
+        m = n = k = 64
+        cfg = PipelineConfig(m=m, n=n, k=k, epilogue="bias_relu", **SMALL)
+        fused = matmul_variant(cfg)
+        unfused = unfused_epilogue(PipelineConfig(m=m, n=n, k=k, **SMALL))
+        a, b, c = rand((m, k), seed=1), rand((k, n), seed=2), rand((m, n), seed=3)
+        bias = rand((n,), seed=4)
+        got = np.asarray(
+            fused(a.astype(np.float16), b.astype(np.float16), c, bias)[0]
+        )
+        want = np.asarray(unfused(a, b, c, bias)[0])
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        assert (got >= 0).all()
+
+    def test_unfused_has_barrier(self):
+        # the optimization barrier keeps the comparison honest in the HLO
+        fn = unfused_epilogue(PipelineConfig(m=64, n=64, k=64, **SMALL))
+        shapes = [jax.ShapeDtypeStruct((64, 64), jnp.float32)] * 3 + [
+            jax.ShapeDtypeStruct((64,), jnp.float32)
+        ]
+        hlo = jax.jit(fn).lower(*shapes).compiler_ir("stablehlo")
+        assert "optimization_barrier" in str(hlo)
+
+
+class TestTransformerLayer:
+    DIMS = dict(seq=64, d_model=64, d_ff=128)
+
+    def _layer_and_inputs(self):
+        layer = transformer_layer(
+            **self.DIMS, n_heads=4, tile_tb=(32, 32, 32), tile_warp=(16, 16, 16)
+        )
+        shapes = transformer_layer_inputs(**self.DIMS)
+        rng = np.random.default_rng(0)
+        args = [
+            (rng.standard_normal(s.shape) * 0.1).astype(np.float32) for s in shapes
+        ]
+        return layer, args
+
+    def _ref_layer(self, x, w_qkv, w_out, w_up, b_up, w_dn, b_dn, n_heads=4):
+        """Pure-numpy reference (f32 throughout; tolerance covers f16 GEMMs)."""
+        seq, d_model = x.shape
+        d_head = d_model // n_heads
+        qkv = x @ w_qkv
+        q, k, v = np.split(qkv, 3, axis=1)
+
+        def heads(t):
+            return t.reshape(seq, n_heads, d_head).transpose(1, 0, 2)
+
+        qh, kh, vh = heads(q), heads(k), heads(v)
+        scores = np.einsum("hqd,hkd->hqk", qh, kh) / np.sqrt(d_head)
+        probs = np.exp(scores - scores.max(-1, keepdims=True))
+        probs /= probs.sum(-1, keepdims=True)
+        ctx = np.einsum("hqk,hkd->hqd", probs, vh)
+        ctx = ctx.transpose(1, 0, 2).reshape(seq, d_model)
+        h = x + ctx @ w_out
+        mu, var = h.mean(-1, keepdims=True), h.var(-1, keepdims=True)
+        hn = (h - mu) / np.sqrt(var + 1e-5)
+        up = np.maximum(hn @ w_up + b_up, 0)
+        return h + up @ w_dn + b_dn
+
+    def test_matches_reference(self):
+        layer, args = self._layer_and_inputs()
+        got = np.asarray(layer(*args)[0])
+        want = self._ref_layer(*[np.asarray(a, np.float64) for a in args])
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_output_shape_and_dtype(self):
+        layer, args = self._layer_and_inputs()
+        out = layer(*args)[0]
+        assert out.shape == (self.DIMS["seq"], self.DIMS["d_model"])
+        assert out.dtype == jnp.float32
+
+    def test_rejects_non_tile_multiple_dims(self):
+        with pytest.raises(ValueError):
+            transformer_layer(seq=100, d_model=64, d_ff=128,
+                              tile_tb=(32, 32, 32), tile_warp=(16, 16, 16))
+
+    def test_lowerable(self):
+        layer, _ = self._layer_and_inputs()
+        shapes = transformer_layer_inputs(**self.DIMS)
+        jax.jit(layer).lower(*shapes)  # must not raise

@@ -1,0 +1,632 @@
+"""Pass-by-pass tests: structure checks + interpreter equivalence.
+
+Every pass is validated two ways: (a) the structural postcondition the
+paper describes (tile steps, buffer shapes, barrier placement, iter_args,
+peeled stages), and (b) semantic equivalence against numpy matmul through
+the tile-IR interpreter.
+"""
+
+import numpy as np
+import pytest
+
+from compile.tileir import passes as P
+from compile.tileir.builder import build_naive_matmul
+from compile.tileir.interp import run_matmul_module
+from compile.tileir.ir import Barrier, For, VecLoad, VecStore, WmmaLoad, WmmaMma, WmmaStore, Yield
+from compile.tileir.pipeline import OPT_ORDER, PipelineConfig, PipelineError, run_pipeline
+from compile.tileir.printer import print_module
+from compile.tileir.schedule import ScheduleError, extract_schedule
+
+
+SMALL = dict(m=64, n=64, k=64, tile_tb=(32, 32, 32), tile_warp=(16, 16, 16))
+
+
+def small_mod(**over):
+    params = {**SMALL, **over}
+    mod = build_naive_matmul(params["m"], params["n"], params["k"])
+    mod.meta.update(
+        {
+            "tile_tb": params["tile_tb"],
+            "tile_warp": params["tile_warp"],
+            "pad_factor": 8,
+            "vec_width": 8,
+        }
+    )
+    return mod
+
+
+def check_semantics(mod, m=64, n=64, k=64, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n))
+    c = rng.standard_normal((m, n))
+    got = run_matmul_module(mod, a, b, c.copy())
+    np.testing.assert_allclose(got, a @ b + c, rtol=1e-10, atol=1e-10)
+
+
+class TestTiling:
+    def test_nest_depth_is_nine(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        assert len(mod.loop_nest()) == 9
+
+    def test_steps_follow_tiles(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        nest = mod.loop_nest()
+        assert [l.step for l in nest] == [32, 32, 32, 16, 16, 16, 1, 1, 1]
+
+    def test_roles_assigned(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        roles = [l.attrs["role"] for l in mod.loop_nest()]
+        assert roles == [
+            "block_i", "block_j", "main_k",
+            "warp_i", "warp_j", "warp_k",
+            "frag_i", "frag_j", "frag_k",
+        ]
+
+    def test_semantics_preserved(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        check_semantics(mod)
+
+    def test_semantics_rectangular(self):
+        mod = build_naive_matmul(32, 64, 96)
+        mod.meta.update({"tile_tb": (32, 32, 32), "tile_warp": (16, 16, 16)})
+        P.two_level_tiling(mod)
+        check_semantics(mod, 32, 64, 96)
+
+    def test_rejects_non_divisible(self):
+        mod = build_naive_matmul(48, 64, 64)
+        mod.meta.update({"tile_tb": (32, 32, 32), "tile_warp": (16, 16, 16)})
+        with pytest.raises(P.tiling.TilingError):
+            P.two_level_tiling(mod)
+
+    def test_rejects_warp_not_dividing_tb(self):
+        mod = small_mod(tile_warp=(24, 16, 16))
+        with pytest.raises(P.tiling.TilingError):
+            P.two_level_tiling(mod)
+
+
+class TestSharedBuffers:
+    def _tiled(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        return mod
+
+    def test_buffers_created_with_tile_shapes(self):
+        mod = self._tiled()
+        P.create_shared_buffers(mod)
+        assert mod.roles["a_smem"].shape == (32, 32)
+        assert mod.roles["b_smem"].shape == (32, 32)
+        assert mod.roles["a_smem"].space == "shared"
+
+    def test_copy_nests_placed_in_main_k(self):
+        mod = self._tiled()
+        P.create_shared_buffers(mod)
+        k = mod.find_loops(role="main_k")[0]
+        roles = [op.attrs.get("role") for op in k.body if isinstance(op, For)]
+        assert roles[:2] == ["copyB", "copyA"]  # paper order (Listing 2)
+
+    def test_compute_loads_rebased_to_smem(self):
+        mod = self._tiled()
+        P.create_shared_buffers(mod)
+        frag_k = mod.find_loops(role="frag_k")[0]
+        from compile.tileir.ir import Load
+
+        loads = [op for op in frag_k.body if isinstance(op, Load)]
+        srcs = {op.memref.name for op in loads}
+        assert "%a_smem" in srcs and "%b_smem" in srcs
+        assert "%C" in {op.memref.name for op in loads}  # C stays global
+
+    def test_semantics_preserved(self):
+        mod = self._tiled()
+        P.create_shared_buffers(mod)
+        check_semantics(mod)
+
+    def test_requires_tiling(self):
+        mod = small_mod()
+        with pytest.raises(P.buffers.BufferError):
+            P.create_shared_buffers(mod)
+
+
+class TestPadding:
+    def _staged(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        return mod
+
+    def test_pads_lead_dim_only(self):
+        mod = self._staged()
+        P.pad_shared_buffers(mod, 8)
+        assert mod.roles["a_smem"].phys_shape == (32, 40)
+        assert mod.roles["a_smem"].shape == (32, 32)
+
+    def test_paper_alignment_constraint(self):
+        # f16 requires multiples of 8 (128-bit WMMA alignment)
+        mod = self._staged()
+        with pytest.raises(P.padding.PaddingError):
+            P.pad_shared_buffers(mod, 4)
+
+    def test_semantics_with_padding(self):
+        mod = self._staged()
+        P.pad_shared_buffers(mod, 8)
+        check_semantics(mod)
+
+    def test_requires_buffers(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        with pytest.raises(P.padding.PaddingError):
+            P.pad_shared_buffers(mod, 8)
+
+
+class TestWmma:
+    def _staged(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        return mod
+
+    def test_fragment_steps_bumped(self):
+        mod = self._staged()
+        P.generate_wmma_ops(mod)
+        for role in ("frag_i", "frag_j", "frag_k"):
+            assert mod.find_loops(role=role)[0].step == 16
+
+    def test_body_is_wmma_sequence(self):
+        mod = self._staged()
+        P.generate_wmma_ops(mod)
+        body = mod.find_loops(role="frag_k")[0].body
+        kinds = [type(op).__name__ for op in body]
+        assert kinds == ["WmmaLoad", "WmmaLoad", "WmmaLoad", "WmmaMma", "WmmaStore"]
+        assert [op.operand for op in body[:3]] == ["AOp", "BOp", "COp"]
+
+    def test_semantics_preserved(self):
+        mod = self._staged()
+        P.generate_wmma_ops(mod)
+        check_semantics(mod)
+
+    def test_works_without_shared_mem(self):
+        # ablation config: wmma straight out of global memory
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.generate_wmma_ops(mod)
+        check_semantics(mod)
+
+    def test_rejects_bad_intrinsic(self):
+        mod = self._staged()
+        with pytest.raises(P.wmma.WmmaError):
+            P.generate_wmma_ops(mod, (24, 16, 16))
+
+
+class TestPermute:
+    def _wmma(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        return mod
+
+    def test_loop_order_matches_paper(self):
+        mod = self._wmma()
+        P.permute_for_gpu_hierarchy(mod)
+        # copies break the perfect nest inside k; check roles down the spine
+        i = mod.find_loops(role="block_i")[0]
+        j = i.body[0]
+        ii = j.body[0]
+        jj = ii.body[0]
+        k = jj.body[0]
+        assert (j.attrs["role"], ii.attrs["role"], jj.attrs["role"], k.attrs["role"]) == (
+            "block_j", "warp_i", "warp_j", "main_k",
+        )
+        kk = [op for op in k.body if isinstance(op, For) and op.attrs["role"] == "warp_k"]
+        assert len(kk) == 1
+        kkk = kk[0].body[0]
+        assert kkk.attrs["role"] == "frag_k"  # outer-product order: k first
+        assert kkk.body[0].attrs["role"] == "frag_i"
+        assert kkk.body[0].body[0].attrs["role"] == "frag_j"
+
+    def test_copies_stay_in_main_k(self):
+        mod = self._wmma()
+        P.permute_for_gpu_hierarchy(mod)
+        k = mod.find_loops(role="main_k")[0]
+        roles = [op.attrs.get("role") for op in k.body if isinstance(op, For)]
+        assert "copyA" in roles and "copyB" in roles
+
+    def test_semantics_preserved(self):
+        mod = self._wmma()
+        P.permute_for_gpu_hierarchy(mod)
+        check_semantics(mod)
+
+
+class TestUnrollHoist:
+    def _permuted(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        return mod
+
+    def test_k_loops_carry_iter_args(self):
+        mod = self._permuted()
+        P.unroll_and_hoist(mod)
+        k = mod.find_loops(role="main_k")[0]
+        kk = mod.find_loops(role="warp_k")[0]
+        # warp tile 16x16 -> 1 accumulator fragment with WMMA m16n16
+        assert len(k.iter_args) == 1
+        assert len(kk.iter_args) == 1
+        assert isinstance(k.body[-1], Yield)
+        assert isinstance(kk.body[-1], Yield)
+
+    def test_accumulator_count_paper_config(self):
+        mod = build_naive_matmul(256, 256, 128)
+        mod.meta.update({"tile_tb": (128, 128, 64), "tile_warp": (64, 32, 32)})
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        # paper: 64/16 x 32/16 = 8 accumulators per warp
+        assert mod.meta["num_accumulators"] == 8
+        k = mod.find_loops(role="main_k")[0]
+        assert len(k.iter_args) == 8
+
+    def test_cse_removes_duplicate_fragment_loads(self):
+        mod = build_naive_matmul(64, 64, 64)
+        mod.meta.update({"tile_tb": (64, 64, 32), "tile_warp": (32, 32, 32)})
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        kk = mod.find_loops(role="warp_k")[0]
+        loads = [op for op in kk.body if isinstance(op, WmmaLoad)]
+        mmas = [op for op in kk.body if isinstance(op, WmmaMma)]
+        # 2x2 fragment grid, 2 k-steps: 8 MMAs but only 4 A-frag + 4 B-frag loads
+        assert len(mmas) == 8
+        assert len([l for l in loads if l.operand == "AOp"]) == 4
+        assert len([l for l in loads if l.operand == "BOp"]) == 4
+        assert not [l for l in loads if l.operand == "COp"]  # hoisted out
+
+    def test_no_c_traffic_inside_k_loop(self):
+        mod = self._permuted()
+        P.unroll_and_hoist(mod)
+        k = mod.find_loops(role="main_k")[0]
+
+        def c_ops(ops):
+            for op in ops:
+                if isinstance(op, (WmmaLoad, WmmaStore)) and op.memref.name == "%C":
+                    yield op
+                if isinstance(op, For):
+                    yield from c_ops(op.body)
+
+        assert list(c_ops(k.body)) == []
+
+    def test_hoisted_loads_and_stores_at_warp_level(self):
+        mod = self._permuted()
+        P.unroll_and_hoist(mod)
+        jj = mod.find_loops(role="warp_j")[0]
+        assert isinstance(jj.body[0], WmmaLoad) and jj.body[0].operand == "COp"
+        assert isinstance(jj.body[-1], WmmaStore)
+
+    def test_semantics_preserved(self):
+        mod = self._permuted()
+        P.unroll_and_hoist(mod)
+        check_semantics(mod)
+
+
+class TestLatencyHiding:
+    def _hoisted(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        return mod
+
+    def _complete(self, mod):
+        P.split_main_k_loop(mod)
+        P.insert_barriers(mod)
+        P.decouple_copy_stores(mod)
+        return mod
+
+    def test_peeled_stages_exist(self):
+        mod = self._complete(self._hoisted())
+        stages = {
+            op.attrs.get("stage")
+            for op in mod.walk()
+            if isinstance(op, For) and "stage" in op.attrs
+        }
+        assert stages == {"prologue", "steady", "epilogue"}
+
+    def test_main_loop_bounds_shrunk(self):
+        mod = self._complete(self._hoisted())
+        k = mod.find_loops(role="main_k")[0]
+        assert k.ub.const == 64 - 32  # K - tbk
+
+    def test_load_store_phases_decoupled(self):
+        mod = self._complete(self._hoisted())
+        k = mod.find_loops(role="main_k")[0]
+        phases = [
+            op.attrs.get("phase")
+            for op in k.body
+            if isinstance(op, For) and "phase" in op.attrs
+        ]
+        # loads strictly precede stores in the steady-state body
+        assert phases == ["load", "load", "store", "store"]
+
+    def test_stage_buffers_created(self):
+        mod = self._complete(self._hoisted())
+        assert mod.roles["a_stage"].space == "reg"
+        assert mod.roles["b_stage"].shape == mod.roles["b_smem"].shape
+
+    def test_semantics_after_decouple(self):
+        mod = self._complete(self._hoisted())
+        check_semantics(mod)
+
+    def test_semantics_with_more_k_tiles(self):
+        mod = build_naive_matmul(32, 32, 128)
+        mod.meta.update({"tile_tb": (32, 32, 32), "tile_warp": (16, 16, 16)})
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        self._complete(mod)
+        check_semantics(mod, 32, 32, 128)
+
+    def test_rejects_single_k_tile(self):
+        mod = build_naive_matmul(32, 32, 32)
+        mod.meta.update({"tile_tb": (32, 32, 32), "tile_warp": (16, 16, 16)})
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        with pytest.raises(P.latency.LatencyError):
+            P.split_main_k_loop(mod)
+
+    def test_requires_shared_mem(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        with pytest.raises(P.latency.LatencyError):
+            P.split_main_k_loop(mod)
+
+
+class TestBarriers:
+    def test_algorithm1_placement(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.insert_barriers(mod)
+        k = mod.find_loops(role="main_k")[0]
+        kinds = [type(op).__name__ for op in k.body]
+        # barrier, copyB, copyA, barrier, compute
+        assert kinds[0] == "Barrier"
+        assert kinds[3] == "Barrier"
+
+    def test_listing6_placement(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.generate_wmma_ops(mod)
+        P.permute_for_gpu_hierarchy(mod)
+        P.unroll_and_hoist(mod)
+        P.split_main_k_loop(mod)
+        P.insert_barriers(mod)
+        P.decouple_copy_stores(mod)
+        k = mod.find_loops(role="main_k")[0]
+        assert isinstance(k.body[0], Barrier)  # top-of-loop barrier
+        barrier_count = sum(1 for op in k.body if isinstance(op, Barrier))
+        assert barrier_count == 2  # top + before delayed stores
+        jj = mod.find_loops(role="warp_j")[0]
+        jj_barriers = [op for op in jj.body if isinstance(op, Barrier)]
+        assert len(jj_barriers) == 2  # after prologue, before epilogue
+
+    def test_semantics_not_affected(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.insert_barriers(mod)
+        check_semantics(mod)
+
+
+class TestVectorize:
+    def _staged(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.pad_shared_buffers(mod, 8)
+        return mod
+
+    def test_copy_bodies_become_vector_ops(self):
+        mod = self._staged()
+        P.vectorize_copies(mod, 8)
+        vloads = [op for op in mod.walk() if isinstance(op, VecLoad)]
+        vstores = [op for op in mod.walk() if isinstance(op, VecStore)]
+        assert len(vloads) == 2 and len(vstores) == 2
+        assert all(v.width == 8 for v in vloads)
+
+    def test_inner_step_bumped(self):
+        mod = self._staged()
+        P.vectorize_copies(mod, 8)
+        for nest in mod.find_loops(role="copyA"):
+            inner = nest.body[0]
+            assert inner.step == 8
+
+    def test_semantics_preserved(self):
+        mod = self._staged()
+        P.vectorize_copies(mod, 8)
+        check_semantics(mod)
+
+    def test_rejects_width_not_dividing_pad(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        # pad of 8 then vectorize by 16: lead_dim 40 % 16 != 0
+        P.pad_shared_buffers(mod, 8)
+        with pytest.raises(P.vectorize.VectorizeError):
+            P.vectorize_copies(mod, 16)
+
+    def test_rejects_non_power_width(self):
+        mod = self._staged()
+        with pytest.raises(P.vectorize.VectorizeError):
+            P.vectorize_copies(mod, 3)
+
+
+class TestParallelize:
+    def test_block_and_warp_mapping(self):
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        P.extract_and_map_parallel(mod)
+        assert mod.find_loops(role="block_i")[0].attrs["parallel"] == "block_y"
+        assert mod.find_loops(role="warp_j")[0].attrs["parallel"] == "warp_x"
+        assert mod.meta["grid"] == (2, 2)
+        assert mod.meta["threads_per_block"] == 4 * 32
+
+    def test_k_loop_not_parallel(self):
+        from compile.tileir.passes.parallelize import is_loop_parallel
+
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        k = mod.find_loops(role="main_k")[0]
+        assert not is_loop_parallel(k)
+
+    def test_block_loops_parallel(self):
+        from compile.tileir.passes.parallelize import is_loop_parallel
+
+        mod = small_mod()
+        P.two_level_tiling(mod)
+        P.create_shared_buffers(mod)
+        assert is_loop_parallel(mod.find_loops(role="block_i")[0])
+        assert is_loop_parallel(mod.find_loops(role="block_j")[0])
+
+    def test_naive_maps_blocks_only(self):
+        mod = small_mod()
+        P.extract_and_map_parallel(mod)
+        assert mod.meta["grid"] == (64, 64)
+        assert mod.meta["warps_per_block"] == (1, 1)
+
+
+class TestPipeline:
+    @pytest.mark.parametrize("level", range(8))
+    def test_all_ablation_levels_verify(self, level):
+        cfg = PipelineConfig.opt_level(level, **SMALL)
+        run_pipeline(cfg, verify=True)
+
+    def test_full_pipeline_snapshot_names(self):
+        cfg = PipelineConfig(**SMALL)
+        res = run_pipeline(cfg, capture_snapshots=True)
+        assert "build_naive" in res.snapshots
+        assert "decouple_copy_stores" in res.snapshots
+        assert res.passes_run[-1] == "extract_and_map_parallel"
+
+    def test_dependency_enforcement(self):
+        with pytest.raises(PipelineError):
+            PipelineConfig(**SMALL, tiling=False).validate()
+
+    def test_latency_requires_hoist(self):
+        with pytest.raises(PipelineError):
+            PipelineConfig(**SMALL, unroll_hoist=False).validate()
+
+    def test_non_divisible_problem_rejected(self):
+        with pytest.raises(PipelineError):
+            PipelineConfig(m=100, n=64, k=64, tile_tb=(32, 32, 32),
+                           tile_warp=(16, 16, 16)).validate()
+
+    def test_variant_name_roundtrips_opts(self):
+        cfg = PipelineConfig.opt_level(3, **SMALL)
+        assert "_o1110000" in cfg.variant_name()
+
+    def test_level_of_cumulative_configs(self):
+        for lvl in range(8):
+            assert PipelineConfig.opt_level(lvl, **SMALL).level() == lvl
+
+    def test_rectangular_problem(self):
+        cfg = PipelineConfig(m=32, n=64, k=96, tile_tb=(32, 32, 32),
+                             tile_warp=(16, 16, 16))
+        run_pipeline(cfg, verify=True)
+
+    def test_f16_accumulate_variant(self):
+        cfg = PipelineConfig(**SMALL, dtype_acc="f16")
+        run_pipeline(cfg, verify=True)
+
+
+class TestSchedule:
+    def test_paper_config_matches_listing2(self):
+        cfg = PipelineConfig(m=8192, n=8192, k=8192)
+        res = run_pipeline(cfg)
+        s = extract_schedule(res.module, cfg)
+        assert s.smem_bytes == (128 * 72 + 64 * 136) * 2
+        assert s.accumulators_per_warp == 8
+        assert s.threads_per_block == 256
+        assert s.grid == (64, 64)
+        assert s.pipeline_stages == 2
+
+    def test_flops(self):
+        cfg = PipelineConfig(**SMALL)
+        res = run_pipeline(cfg)
+        s = extract_schedule(res.module, cfg)
+        assert s.flops() == 2 * 64 ** 3
+
+    def test_unpadded_when_toggle_off(self):
+        cfg = PipelineConfig.opt_level(5, **SMALL)  # padding not yet enabled
+        res = run_pipeline(cfg)
+        s = extract_schedule(res.module, cfg)
+        assert s.pad_factor == 0
+        assert s.smem_bytes == (32 * 32 + 32 * 32) * 2
+
+    def test_json_dict_is_plain(self):
+        import json
+
+        cfg = PipelineConfig(**SMALL)
+        res = run_pipeline(cfg)
+        s = extract_schedule(res.module, cfg)
+        json.dumps(s.to_json_dict())  # must not raise
+
+    def test_incomplete_module_rejected(self):
+        cfg = PipelineConfig(**SMALL)
+        mod = build_naive_matmul(64, 64, 64)
+        with pytest.raises(ScheduleError):
+            extract_schedule(mod, cfg)
+
+
+class TestPrinter:
+    def test_naive_listing_shape(self):
+        mod = build_naive_matmul(8192, 8192, 8192)
+        text = print_module(mod)
+        assert "affine.for %i = 0 to 8192" in text
+        assert "affine.load %A[%i, %k] : memref<8192x8192xf16>" in text
+        assert "fpext" in text
+
+    def test_wmma_listing_shape(self):
+        cfg = PipelineConfig(m=8192, n=8192, k=8192)
+        res = run_pipeline(cfg, capture_snapshots=True)
+        text = res.snapshots["generate_wmma_ops"]
+        assert "gpu.subgroup_mma_load_matrix" in text
+        assert 'leadDimension = 8192' in text
+        assert "gpu.subgroup_mma_compute" in text
+
+    def test_padded_buffer_in_listing(self):
+        cfg = PipelineConfig(m=8192, n=8192, k=8192)
+        res = run_pipeline(cfg, capture_snapshots=True)
+        text = res.snapshots["pad_shared_buffers"]
+        # paper Listing 2: memref<128x72xf16, 3> and memref<64x136xf16, 3>
+        assert "memref<128x72xf16, 3>" in text
+        assert "memref<64x136xf16, 3>" in text
+
+    def test_final_listing_has_barriers_and_iter_args(self):
+        cfg = PipelineConfig(m=8192, n=8192, k=8192)
+        res = run_pipeline(cfg, capture_snapshots=True)
+        text = res.snapshots["extract_and_map_parallel"]
+        assert "gpu.barrier" in text
+        assert "iter_args" in text
+        assert "affine.yield" in text

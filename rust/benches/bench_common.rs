@@ -1,0 +1,38 @@
+//! Shared scaffolding for the bench binaries (criterion is not in the
+//! offline vendor set; each bench is a `harness = false` binary that
+//! prints its figure and writes the CSV under reports/).
+
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::path::PathBuf;
+
+use mlir_gemm::harness::FigureOutput;
+use mlir_gemm::runtime::Runtime;
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+pub fn open_runtime() -> Option<Runtime> {
+    let dir = artifacts_dir()?;
+    match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: cannot open runtime ({e:#}); measured subset skipped");
+            None
+        }
+    }
+}
+
+pub fn emit(output: &FigureOutput) {
+    println!("{}", output.render());
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("reports")
+        .join(format!("{}.csv", output.name));
+    if let Err(e) = output.table.write_to(&path) {
+        eprintln!("warning: cannot write {}: {e}", path.display());
+    } else {
+        println!("csv -> {}\n", path.display());
+    }
+}

@@ -1,0 +1,19 @@
+//! Figure 3 reproduction: the optimization ablation at M=N=K=8192
+//! (mixed precision), optimizations enabled incrementally, plus the
+//! measured ablation ladder over the built artifacts.
+
+mod bench_common;
+
+use mlir_gemm::harness::{figure3, figure3_measured, BenchConfig};
+use mlir_gemm::sim::DeviceModel;
+
+fn main() {
+    let device = DeviceModel::rtx3090();
+    bench_common::emit(&figure3(&device));
+    if let Some(rt) = bench_common::open_runtime() {
+        match figure3_measured(&rt, BenchConfig::default()) {
+            Ok(out) => bench_common::emit(&out),
+            Err(e) => eprintln!("measured ablation failed: {e:#}"),
+        }
+    }
+}

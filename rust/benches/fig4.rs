@@ -1,0 +1,21 @@
+//! Figure 4 reproduction: half-precision (f16 throughout) TFLOPs vs
+//! cuBLAS across square sizes, including the library's inconsistent
+//! behaviour beyond N=8848 (§4.2).
+
+mod bench_common;
+
+use mlir_gemm::harness::{figure4, figure_sweep_measured, BenchConfig};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::sim::DeviceModel;
+
+fn main() {
+    let device = DeviceModel::rtx3090();
+    bench_common::emit(&figure4(&device));
+    if let Some(rt) = bench_common::open_runtime() {
+        match figure_sweep_measured(&rt, Dtype::F16, BenchConfig::default(), "figure4_measured")
+        {
+            Ok(out) => bench_common::emit(&out),
+            Err(e) => eprintln!("measured subset failed: {e:#}"),
+        }
+    }
+}

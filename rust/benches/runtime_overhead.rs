@@ -1,0 +1,84 @@
+//! L3 hot-path microbenchmark: how much the coordinator adds on top of
+//! raw kernel execution (DESIGN.md §7 target: < 5% at 512^3).
+//!
+//! Measures (a) raw runtime.execute on the best 512 variant, (b) the same
+//! request through the full server (route + batch + worker + channels),
+//! and reports the overhead. Also times literal pack/unpack split.
+
+mod bench_common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::harness::{bench_artifact, random_inputs, BenchConfig};
+use mlir_gemm::runtime::Tensor;
+use mlir_gemm::sim::DeviceModel;
+use mlir_gemm::util::prng::Rng;
+
+fn main() {
+    let Some(rt) = bench_common::open_runtime() else {
+        eprintln!("runtime_overhead needs built artifacts");
+        return;
+    };
+    let rt = Arc::new(rt);
+    let device = DeviceModel::rtx3090();
+    let size = 512usize;
+    let server = Server::start(
+        rt.clone(),
+        &device,
+        ServerConfig { rerank_measured: true, ..Default::default() },
+    );
+    let key = GemmKey::plain(size, size, size);
+    let Some(best) = server.registry().best(&key).map(|e| e.artifact.clone()) else {
+        eprintln!("no 512^3 variant (quick artifacts?); using 256");
+        return;
+    };
+
+    // (a) raw artifact execution
+    let artifact = rt.load(&best).unwrap();
+    let inputs = random_inputs(&artifact, 3, 0.5);
+    let cfg = BenchConfig { warmup: 2, iters: 10 };
+    let raw = bench_artifact(&rt, &artifact, &inputs, cfg).unwrap();
+
+    // (b) through the server
+    let mut rng = Rng::new(4);
+    let mk_req = |rng: &mut Rng| GemmRequest {
+        key: key.clone(),
+        a: Tensor::new(vec![size, size], rng.normal_matrix(size, size)).unwrap(),
+        b: Tensor::new(vec![size, size], rng.normal_matrix(size, size)).unwrap(),
+        c: Tensor::zeros(vec![size, size]),
+        bias: None,
+        use_baseline: false,
+    };
+    for _ in 0..2 {
+        server.call(mk_req(&mut rng)).unwrap().output.unwrap();
+    }
+    // Pre-build the requests: input generation is the client's cost, not
+    // the coordinator's.
+    let reqs: Vec<GemmRequest> = (0..10).map(|_| mk_req(&mut rng)).collect();
+    let mut served = Vec::new();
+    for req in reqs {
+        let t = Instant::now();
+        server.call(req).unwrap().output.unwrap();
+        served.push(t.elapsed().as_secs_f64());
+    }
+    served.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served_p50 = served[served.len() / 2];
+    let overhead = served_p50 - raw.total.p50;
+
+    println!("=== runtime_overhead (512^3, best variant: {best}) ===");
+    println!(
+        "raw execute:   exec {:.3} ms, pack {:.3} ms, total {:.3} ms",
+        raw.exec.mean * 1e3,
+        raw.pack.mean * 1e3,
+        raw.total.mean * 1e3
+    );
+    println!("served (e2e):  {:.3} ms (p50)", served_p50 * 1e3);
+    println!(
+        "coordinator overhead: {:.3} ms ({:.1}% of raw total p50; target < 5%)",
+        overhead * 1e3,
+        100.0 * overhead / raw.total.p50
+    );
+    server.shutdown();
+}

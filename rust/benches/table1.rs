@@ -1,0 +1,22 @@
+//! Table 1 reproduction: library vs generated(WMMA) vs hand-written
+//! kernels — measured through the identical runtime — plus the operator
+//! fusion comparison (fused bias+ReLU vs dot + separate epilogue).
+
+mod bench_common;
+
+use mlir_gemm::harness::{table1, BenchConfig};
+use mlir_gemm::sim::DeviceModel;
+
+fn main() {
+    let device = DeviceModel::rtx3090();
+    match bench_common::open_runtime() {
+        Some(rt) => match table1(&rt, &device, BenchConfig::default()) {
+            Ok(out) => bench_common::emit(&out),
+            Err(e) => {
+                eprintln!("table1 failed: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        None => eprintln!("table1 needs built artifacts (`make artifacts`)"),
+    }
+}

@@ -1,0 +1,156 @@
+//! Tile-configuration autotuner.
+//!
+//! The paper reports the best-performing variant over "different
+//! combinations of thread block level tiles and warp level tiles" (§4).
+//! This module enumerates the same space under the paper's constraints
+//! (static 48 KiB shared memory, <=255 registers/thread, tiles dividing the
+//! problem, warp tiles dividing thread-block tiles, everything a multiple
+//! of the 16^3 WMMA op) and ranks candidates with the performance model.
+
+use crate::schedule::{Dtype, Schedule};
+use crate::sim::{simulate, DeviceModel, SimResult};
+
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub schedule: Schedule,
+    pub result: SimResult,
+}
+
+/// The tile space explored: thread-block {64,128,256}^2 x k{32,64},
+/// warp {32,64}^2 x 32.
+pub fn candidate_tiles() -> Vec<((usize, usize, usize), (usize, usize, usize))> {
+    let mut out = Vec::new();
+    for &tbm in &[64usize, 128, 256] {
+        for &tbn in &[64usize, 128, 256] {
+            for &tbk in &[32usize, 64] {
+                for &wm in &[32usize, 64] {
+                    for &wn in &[32usize, 64] {
+                        let wk = 32;
+                        if tbm % wm != 0 || tbn % wn != 0 || tbk % wk != 0 {
+                            continue;
+                        }
+                        out.push(((tbm, tbn, tbk), (wm, wn, wk)));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// All feasible candidates for one problem, best first.
+pub fn enumerate(
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: Dtype,
+    device: &DeviceModel,
+) -> Vec<Candidate> {
+    let mut cands: Vec<Candidate> = candidate_tiles()
+        .into_iter()
+        .filter_map(|(tb, warp)| {
+            let s = Schedule::optimized(m, n, k, acc, tb, warp).ok()?;
+            // Paper constraints: static shared memory and register ceiling.
+            if s.smem_bytes > device.smem_static_limit {
+                return None;
+            }
+            if s.regs_per_thread() > device.max_regs_per_thread {
+                return None;
+            }
+            if s.threads_per_block > 1024 {
+                return None;
+            }
+            let result = simulate(&s, device);
+            Some(Candidate { schedule: s, result })
+        })
+        .collect();
+    cands.sort_by(|a, b| b.result.tflops.partial_cmp(&a.result.tflops).unwrap());
+    cands
+}
+
+/// The best candidate, or None when no tile divides the problem.
+pub fn best(
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: Dtype,
+    device: &DeviceModel,
+) -> Option<Candidate> {
+    enumerate(m, n, k, acc, device).into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d() -> DeviceModel {
+        DeviceModel::rtx3090()
+    }
+
+    #[test]
+    fn space_is_nonempty_and_valid() {
+        let tiles = candidate_tiles();
+        assert!(tiles.len() >= 20);
+        for (tb, warp) in tiles {
+            assert_eq!(tb.0 % warp.0, 0);
+            assert_eq!(tb.1 % warp.1, 0);
+        }
+    }
+
+    #[test]
+    fn small_problems_choose_small_tiles() {
+        // §4.1: "smaller thread block tile sizes like 64x64x64 performed
+        // better on smaller problem sizes"
+        let c = best(1024, 1024, 1024, Dtype::F32, &d()).unwrap();
+        assert!(
+            c.schedule.tile_tb.0 * c.schedule.tile_tb.1 <= 128 * 64,
+            "picked {:?}",
+            c.schedule.tile_tb
+        );
+    }
+
+    #[test]
+    fn large_problems_choose_large_tiles() {
+        let c = best(8192, 8192, 8192, Dtype::F32, &d()).unwrap();
+        assert!(
+            c.schedule.tile_tb.0 * c.schedule.tile_tb.1 >= 128 * 128,
+            "picked {:?}",
+            c.schedule.tile_tb
+        );
+    }
+
+    #[test]
+    fn all_candidates_respect_smem_limit() {
+        for c in enumerate(4096, 4096, 4096, Dtype::F16, &d()) {
+            assert!(c.schedule.smem_bytes <= d().smem_static_limit);
+            assert!(c.schedule.regs_per_thread() <= 255);
+        }
+    }
+
+    #[test]
+    fn results_sorted_descending() {
+        let cands = enumerate(2048, 2048, 2048, Dtype::F32, &d());
+        for pair in cands.windows(2) {
+            assert!(pair[0].result.tflops >= pair[1].result.tflops);
+        }
+    }
+
+    #[test]
+    fn indivisible_problem_yields_none() {
+        assert!(best(100, 100, 100, Dtype::F32, &d()).is_none());
+    }
+
+    #[test]
+    fn fp16_beats_library_choice_at_11264() {
+        // §4.2: at 11264 ours picks a better tile than the library's
+        use crate::sim::simulate_library;
+        let ours = best(11264, 11264, 11264, Dtype::F16, &d()).unwrap();
+        let lib = simulate_library(11264, 11264, 11264, Dtype::F16, &d());
+        assert!(
+            ours.result.tflops > lib.tflops,
+            "ours {} vs lib {}",
+            ours.result.tflops,
+            lib.tflops
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Dynamic batcher: groups queued requests by target kernel variant.
+//!
+//! Serving-system shape (vLLM-router-like): requests arrive on a queue;
+//! the dispatcher drains up to `max_batch` requests *for the same
+//! compiled variant* (or as many as are available within `max_wait`) and
+//! hands the group to one worker, amortizing dispatch overhead and keeping
+//! the executable's code hot.  FIFO order is preserved within a variant.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued item tagged with its routing decision.
+#[derive(Debug)]
+pub struct Queued<T> {
+    pub variant: String,
+    pub enqueued_at: Instant,
+    pub payload: T,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Pure batching state machine (I/O-free, fully unit-testable).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Queued<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, item: Queued<T>) {
+        self.queue.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Form the next batch at time `now`.
+    ///
+    /// Policy: take the variant at the head of the queue (FIFO fairness),
+    /// pull up to `max_batch` requests for that same variant (preserving
+    /// their relative order), leave everything else queued.  If the head
+    /// request is younger than `max_wait` and the batch is not full, the
+    /// caller may wait — signalled by `BatchDecision::Wait`.
+    pub fn next_batch(&mut self, now: Instant) -> BatchDecision<T> {
+        let Some(head) = self.queue.front() else {
+            return BatchDecision::Idle;
+        };
+        let head_variant = head.variant.clone();
+        let head_age = now.duration_since(head.enqueued_at);
+        let same_variant = self
+            .queue
+            .iter()
+            .filter(|q| q.variant == head_variant)
+            .count();
+        // A lone request with nothing behind it gains nothing from the
+        // batch window: the dispatcher drains the submit channel before
+        // calling us, so any burst is already visible in the queue.
+        // Releasing immediately keeps single-stream latency flat
+        // (EXPERIMENTS.md §Perf L3 iteration 4).
+        if self.queue.len() == 1 {
+            let item = self.queue.pop_front().unwrap();
+            return BatchDecision::Run {
+                variant: head_variant,
+                batch: vec![item],
+            };
+        }
+        if same_variant < self.cfg.max_batch && head_age < self.cfg.max_wait {
+            return BatchDecision::Wait(self.cfg.max_wait - head_age);
+        }
+
+        let mut batch = Vec::with_capacity(same_variant.min(self.cfg.max_batch));
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(item) = self.queue.pop_front() {
+            if item.variant == head_variant && batch.len() < self.cfg.max_batch {
+                batch.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        self.queue = rest;
+        BatchDecision::Run {
+            variant: head_variant,
+            batch,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum BatchDecision<T> {
+    /// Nothing queued.
+    Idle,
+    /// A batch could grow; revisit after the given duration.
+    Wait(Duration),
+    /// Execute this group now.
+    Run {
+        variant: String,
+        batch: Vec<Queued<T>>,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(variant: &str, at: Instant, id: usize) -> Queued<usize> {
+        Queued {
+            variant: variant.into(),
+            enqueued_at: at,
+            payload: id,
+        }
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut b: Batcher<usize> = Batcher::new(cfg(4, 2));
+        assert!(matches!(b.next_batch(Instant::now()), BatchDecision::Idle));
+    }
+
+    #[test]
+    fn waits_for_more_of_same_variant() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(4, 10));
+        b.push(q("v1", t0, 0));
+        b.push(q("v1", t0, 1));
+        match b.next_batch(t0 + Duration::from_millis(1)) {
+            BatchDecision::Wait(d) => assert!(d <= Duration::from_millis(9)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert_eq!(b.len(), 2); // nothing consumed
+    }
+
+    #[test]
+    fn lone_request_released_immediately() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(4, 10));
+        b.push(q("v1", t0, 0));
+        match b.next_batch(t0) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v1");
+                assert_eq!(batch.len(), 1);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_after_max_wait() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(4, 10));
+        b.push(q("v1", t0, 0));
+        b.push(q("v1", t0, 1));
+        match b.next_batch(t0 + Duration::from_millis(11)) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v1");
+                assert_eq!(batch.len(), 2);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(2, 1000));
+        b.push(q("v1", t0, 0));
+        b.push(q("v1", t0, 1));
+        b.push(q("v1", t0, 2));
+        match b.next_batch(t0) {
+            BatchDecision::Run { batch, .. } => {
+                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![0, 1]);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+        assert_eq!(b.len(), 1); // third stays queued
+    }
+
+    #[test]
+    fn preserves_fifo_within_variant_and_leaves_others() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(8, 0));
+        b.push(q("v1", t0, 0));
+        b.push(q("v2", t0, 1));
+        b.push(q("v1", t0, 2));
+        match b.next_batch(t0) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v1");
+                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![0, 2]);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+        // v2 remains, now at the head
+        match b.next_batch(t0) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v2");
+                assert_eq!(batch[0].payload, 1);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn head_of_line_variant_decided_by_fifo() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(8, 0));
+        b.push(q("v2", t0, 9));
+        b.push(q("v1", t0, 1));
+        match b.next_batch(t0) {
+            BatchDecision::Run { variant, .. } => assert_eq!(variant, "v2"),
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+}

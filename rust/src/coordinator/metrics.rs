@@ -1,0 +1,167 @@
+//! Service metrics: request counts, latency distributions, per-variant
+//! execution tallies.  Lock-guarded aggregate; snapshots are cheap copies.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batch_sizes: Vec<f64>,
+    latencies_sec: Vec<f64>,
+    queue_waits_sec: Vec<f64>,
+    exec_sec: Vec<f64>,
+    per_variant: BTreeMap<String, u64>,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency: Option<Summary>,
+    pub queue_wait: Option<Summary>,
+    pub exec: Option<Summary>,
+    pub per_variant: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes.push(size as f64);
+    }
+
+    pub fn on_complete(
+        &self,
+        variant: &str,
+        latency_sec: f64,
+        queue_wait_sec: f64,
+        exec_sec: f64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.latencies_sec.push(latency_sec);
+        g.queue_waits_sec.push(queue_wait_sec);
+        g.exec_sec.push(exec_sec);
+        *g.per_variant.entry(variant.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn on_fail(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let summ = |v: &Vec<f64>| {
+            if v.is_empty() {
+                None
+            } else {
+                Some(Summary::of(v))
+            }
+        };
+        MetricsSnapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            failed: g.failed,
+            batches: g.batches,
+            mean_batch_size: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<f64>() / g.batch_sizes.len() as f64
+            },
+            latency: summ(&g.latencies_sec),
+            queue_wait: summ(&g.queue_waits_sec),
+            exec: summ(&g.exec_sec),
+            per_variant: g.per_variant.clone(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests: {} submitted, {} completed, {} failed\n",
+            self.submitted, self.completed, self.failed
+        ));
+        out.push_str(&format!(
+            "batches: {} (mean size {:.2})\n",
+            self.batches, self.mean_batch_size
+        ));
+        if let Some(l) = &self.latency {
+            out.push_str(&format!(
+                "latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms, mean {:.3} ms\n",
+                l.p50 * 1e3,
+                l.p95 * 1e3,
+                l.p99 * 1e3,
+                l.mean * 1e3
+            ));
+        }
+        if let Some(q) = &self.queue_wait {
+            out.push_str(&format!("queue wait: p50 {:.3} ms\n", q.p50 * 1e3));
+        }
+        for (variant, count) in &self.per_variant {
+            out.push_str(&format!("  {variant}: {count}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_summaries() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2);
+        m.on_complete("v1", 0.010, 0.002, 0.008);
+        m.on_complete("v1", 0.020, 0.004, 0.016);
+        m.on_fail();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert_eq!(s.per_variant["v1"], 2);
+        let l = s.latency.unwrap();
+        assert!((l.mean - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_summaries() {
+        let s = Metrics::new().snapshot();
+        assert!(s.latency.is_none());
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn report_mentions_variants() {
+        let m = Metrics::new();
+        m.on_complete("kernel_x", 0.01, 0.0, 0.01);
+        assert!(m.snapshot().report().contains("kernel_x"));
+    }
+}

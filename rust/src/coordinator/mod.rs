@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving layer over the generated kernels.
+//!
+//! * `registry` — shape -> ranked kernel variants (autotuned routing table);
+//! * `batcher`  — dynamic same-variant batching (pure state machine);
+//! * `server`   — dispatcher + worker pool over the PJRT runtime;
+//! * `metrics`  — request/latency accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{GemmKey, Registry, RegistryEntry};
+pub use server::{GemmRequest, GemmResponse, Server, ServerConfig};

@@ -1,0 +1,235 @@
+//! Kernel registry: which compiled artifact serves which GEMM shape.
+//!
+//! Mirrors a serving router's model registry: every artifact from the
+//! manifest is indexed by its problem key, and when several variants cover
+//! the same key (different tile configurations), the performance model
+//! ranks them — the run-time half of the paper's "try tile combinations,
+//! keep the best" methodology.
+
+use std::collections::HashMap;
+
+use crate::runtime::{ArtifactKind, ArtifactMeta};
+use crate::schedule::Dtype;
+use crate::sim::{simulate, DeviceModel};
+
+/// Routing key for a GEMM request.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GemmKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype_acc: Dtype,
+    pub epilogue: String,
+}
+
+impl GemmKey {
+    pub fn plain(m: usize, n: usize, k: usize) -> GemmKey {
+        GemmKey {
+            m,
+            n,
+            k,
+            dtype_acc: Dtype::F32,
+            epilogue: "none".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RegistryEntry {
+    pub artifact: String,
+    pub kind: ArtifactKind,
+    /// Model-predicted TFLOPs (used for ranking); None for non-generated
+    /// kinds with no schedule.
+    pub predicted_tflops: Option<f64>,
+}
+
+/// Registry: GemmKey -> ranked variants (best first).
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: HashMap<GemmKey, Vec<RegistryEntry>>,
+    baselines: HashMap<GemmKey, String>,
+}
+
+impl Registry {
+    /// Build from manifest metadata, ranking variants with the device model.
+    pub fn build(metas: &[ArtifactMeta], device: &DeviceModel) -> Registry {
+        let mut reg = Registry::default();
+        for meta in metas {
+            match meta.kind {
+                ArtifactKind::Generated | ArtifactKind::Fused | ArtifactKind::Ablation => {
+                    let Some(s) = &meta.schedule else { continue };
+                    // Only fully-optimized kernels serve traffic; ablation
+                    // variants are for the fig3 bench, not the router.
+                    if meta.kind == ArtifactKind::Ablation && s.opt_level < 7 {
+                        continue;
+                    }
+                    let key = GemmKey {
+                        m: s.m,
+                        n: s.n,
+                        k: s.k,
+                        dtype_acc: s.dtype_acc,
+                        epilogue: s.epilogue.clone(),
+                    };
+                    let predicted = simulate(s, device).tflops;
+                    reg.entries.entry(key).or_default().push(RegistryEntry {
+                        artifact: meta.name.clone(),
+                        kind: meta.kind,
+                        predicted_tflops: Some(predicted),
+                    });
+                }
+                ArtifactKind::Baseline => {
+                    if let (Some((m, n, k)), Some(acc)) = (meta.problem, meta.dtype_acc) {
+                        let key = GemmKey {
+                            m,
+                            n,
+                            k,
+                            dtype_acc: acc,
+                            epilogue: "none".into(),
+                        };
+                        reg.baselines.insert(key, meta.name.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        for variants in reg.entries.values_mut() {
+            variants.sort_by(|a, b| {
+                b.predicted_tflops
+                    .unwrap_or(0.0)
+                    .partial_cmp(&a.predicted_tflops.unwrap_or(0.0))
+                    .unwrap()
+            });
+        }
+        reg
+    }
+
+    /// Profile-guided re-ranking: measure each variant once on the real
+    /// runtime and reorder by measured latency.  The model ranking targets
+    /// the modeled GPU; when serving on a different substrate (here: the
+    /// CPU PJRT backend) measured numbers beat the model — EXPERIMENTS.md
+    /// §Perf iteration 2.
+    pub fn rerank_measured<F>(&mut self, mut measure: F)
+    where
+        F: FnMut(&str) -> Option<f64>,
+    {
+        for variants in self.entries.values_mut() {
+            if variants.len() < 2 {
+                continue;
+            }
+            let mut timed: Vec<(f64, RegistryEntry)> = variants
+                .drain(..)
+                .map(|e| {
+                    let t = measure(&e.artifact).unwrap_or(f64::INFINITY);
+                    (t, e)
+                })
+                .collect();
+            timed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            *variants = timed.into_iter().map(|(_, e)| e).collect();
+        }
+    }
+
+    pub fn register(&mut self, key: GemmKey, entry: RegistryEntry) {
+        self.entries.entry(key).or_default().push(entry);
+    }
+
+    /// Best variant for a key (autotuned choice).
+    pub fn best(&self, key: &GemmKey) -> Option<&RegistryEntry> {
+        self.entries.get(key).and_then(|v| v.first())
+    }
+
+    pub fn variants(&self, key: &GemmKey) -> &[RegistryEntry] {
+        self.entries.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn baseline(&self, key: &GemmKey) -> Option<&str> {
+        self.baselines.get(key).map(|s| s.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &GemmKey> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use std::path::PathBuf;
+
+    fn meta(name: &str, kind: ArtifactKind, sched: Option<Schedule>) -> ArtifactMeta {
+        let problem = sched.as_ref().map(|s| (s.m, s.n, s.k));
+        let acc = sched.as_ref().map(|s| s.dtype_acc).or(Some(Dtype::F32));
+        ArtifactMeta {
+            name: name.into(),
+            path: PathBuf::from("/nonexistent"),
+            kind,
+            inputs: vec![],
+            outputs: vec![],
+            schedule: sched,
+            problem: problem.or(Some((256, 256, 256))),
+            dtype_acc: acc,
+        }
+    }
+
+    fn sched(tb: (usize, usize, usize), warp: (usize, usize, usize)) -> Schedule {
+        Schedule::optimized(512, 512, 512, Dtype::F32, tb, warp).unwrap()
+    }
+
+    #[test]
+    fn ranks_variants_by_predicted_tflops() {
+        let d = DeviceModel::rtx3090();
+        let metas = vec![
+            meta("small", ArtifactKind::Generated, Some(sched((64, 64, 64), (32, 32, 32)))),
+            meta("large", ArtifactKind::Generated, Some(sched((128, 128, 64), (64, 32, 32)))),
+        ];
+        let reg = Registry::build(&metas, &d);
+        let key = GemmKey::plain(512, 512, 512);
+        let best = reg.best(&key).unwrap();
+        assert_eq!(reg.variants(&key).len(), 2);
+        // at 512 the small tile wins on occupancy (64 vs 16 blocks)
+        assert_eq!(best.artifact, "small");
+    }
+
+    #[test]
+    fn rerank_measured_overrides_model_ranking() {
+        let d = DeviceModel::rtx3090();
+        let metas = vec![
+            meta("small", ArtifactKind::Generated, Some(sched((64, 64, 64), (32, 32, 32)))),
+            meta("large", ArtifactKind::Generated, Some(sched((128, 128, 64), (64, 32, 32)))),
+        ];
+        let mut reg = Registry::build(&metas, &d);
+        let key = GemmKey::plain(512, 512, 512);
+        assert_eq!(reg.best(&key).unwrap().artifact, "small");
+        // measured: "large" is 2x faster on this substrate
+        reg.rerank_measured(|name| Some(if name == "large" { 0.05 } else { 0.10 }));
+        assert_eq!(reg.best(&key).unwrap().artifact, "large");
+    }
+
+    #[test]
+    fn baseline_routed_separately() {
+        let d = DeviceModel::rtx3090();
+        let metas = vec![meta("base", ArtifactKind::Baseline, None)];
+        let reg = Registry::build(&metas, &d);
+        let key = GemmKey::plain(256, 256, 256);
+        assert_eq!(reg.baseline(&key), Some("base"));
+        assert!(reg.best(&key).is_none());
+    }
+
+    #[test]
+    fn non_optimal_ablation_variants_not_served() {
+        let d = DeviceModel::rtx3090();
+        let mut s = sched((64, 64, 64), (32, 32, 32));
+        s.opt_level = 3;
+        let metas = vec![meta("abl3", ArtifactKind::Ablation, Some(s))];
+        let reg = Registry::build(&metas, &d);
+        assert!(reg.is_empty());
+    }
+}

@@ -1,0 +1,311 @@
+//! The GEMM service: router + batcher + worker pool over the PJRT runtime.
+//!
+//! Requests are submitted from any thread; a dispatcher routes each to the
+//! autotuned variant for its shape, batches same-variant requests, and
+//! fans batches out to worker threads that execute on the shared PJRT
+//! client.  Responses come back on per-request channels.  This is the
+//! paper's missing run-time half: it generated kernels, we also serve them.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Runtime, Tensor};
+use crate::sim::DeviceModel;
+
+use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::registry::{GemmKey, Registry};
+
+/// A GEMM request: C = A @ B + C (+ optional fused epilogue inputs).
+#[derive(Debug)]
+pub struct GemmRequest {
+    pub key: GemmKey,
+    pub a: Tensor,
+    pub b: Tensor,
+    pub c: Tensor,
+    pub bias: Option<Tensor>,
+    /// Route to the library baseline instead of the generated kernel.
+    pub use_baseline: bool,
+}
+
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub output: Result<Tensor>,
+    pub variant: String,
+    pub queue_wait: Duration,
+    pub exec_time: Duration,
+    pub total_latency: Duration,
+}
+
+struct Job {
+    id: u64,
+    request: GemmRequest,
+    submitted_at: Instant,
+    reply: Sender<GemmResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    /// Measure each variant once at startup and route by measured latency
+    /// instead of modeled TFLOPs (profile-guided routing; the model ranks
+    /// for the paper's GPU, measurement ranks for the actual substrate).
+    pub rerank_measured: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            rerank_measured: false,
+        }
+    }
+}
+
+pub struct Server {
+    submit_tx: Sender<Job>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(runtime: Arc<Runtime>, device: &DeviceModel, cfg: ServerConfig) -> Server {
+        let mut registry = Registry::build(runtime.artifacts(), device);
+        if cfg.rerank_measured {
+            registry.rerank_measured(|name| {
+                let artifact = runtime.load(name).ok()?;
+                let inputs = crate::harness::random_inputs(&artifact, 0, 0.5);
+                // one warmup (compilation), one timed run
+                runtime.execute_timed(&artifact, &inputs).ok()?;
+                let (_, t) = runtime.execute_timed(&artifact, &inputs).ok()?;
+                Some(t.exec_seconds)
+            });
+        }
+        Self::start_with_registry(runtime, Arc::new(registry), cfg)
+    }
+
+    pub fn start_with_registry(
+        runtime: Arc<Runtime>,
+        registry: Arc<Registry>,
+        cfg: ServerConfig,
+    ) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (submit_tx, submit_rx) = mpsc::channel::<Job>();
+        let (work_tx, work_rx) = mpsc::channel::<(String, Vec<Queued<Job>>)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        // Workers: execute batches on the shared runtime.
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rt = runtime.clone();
+            let rx = work_rx.clone();
+            let m = metrics.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok((variant, batch)) = msg else { break };
+                m.on_batch(batch.len());
+                for item in batch {
+                    let Job { id, request, submitted_at, reply } = item.payload;
+                    let started = Instant::now();
+                    let queue_wait = started.duration_since(submitted_at);
+                    let result = execute_one(&rt, &variant, request);
+                    let exec_time = started.elapsed();
+                    let total = submitted_at.elapsed();
+                    match &result {
+                        Ok(_) => m.on_complete(
+                            &variant,
+                            total.as_secs_f64(),
+                            queue_wait.as_secs_f64(),
+                            exec_time.as_secs_f64(),
+                        ),
+                        Err(_) => m.on_fail(),
+                    }
+                    let _ = reply.send(GemmResponse {
+                        id,
+                        output: result,
+                        variant: variant.clone(),
+                        queue_wait,
+                        exec_time,
+                        total_latency: total,
+                    });
+                }
+            }));
+        }
+
+        // Dispatcher: route + batch.
+        let reg = registry.clone();
+        let stop = shutdown.clone();
+        let met = metrics.clone();
+        let batcher_cfg = cfg.batcher.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
+            let mut poll = Duration::from_millis(1);
+            loop {
+                let mut enqueue = |job: Job| {
+                    match route(&reg, &job.request) {
+                        Ok(v) => batcher.push(Queued {
+                            variant: v,
+                            enqueued_at: job.submitted_at,
+                            payload: job,
+                        }),
+                        Err(e) => {
+                            met.on_fail();
+                            let _ = job.reply.send(GemmResponse {
+                                id: job.id,
+                                output: Err(e),
+                                variant: String::new(),
+                                queue_wait: Duration::ZERO,
+                                exec_time: Duration::ZERO,
+                                total_latency: job.submitted_at.elapsed(),
+                            });
+                        }
+                    }
+                };
+                match submit_rx.recv_timeout(poll) {
+                    Ok(job) => {
+                        enqueue(job);
+                        // Drain any burst that arrived together so the
+                        // batcher sees the whole group at once.
+                        while let Ok(job) = submit_rx.try_recv() {
+                            enqueue(job);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                loop {
+                    match batcher.next_batch(Instant::now()) {
+                        BatchDecision::Idle => {
+                            poll = Duration::from_millis(1);
+                            break;
+                        }
+                        BatchDecision::Wait(d) => {
+                            poll = d.min(Duration::from_millis(1)).max(Duration::from_micros(100));
+                            break;
+                        }
+                        BatchDecision::Run { variant, batch } => {
+                            if work_tx.send((variant, batch)).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+                if stop.load(Ordering::Relaxed) && batcher.is_empty() {
+                    break;
+                }
+            }
+            // Drain on shutdown: flush everything still queued.
+            loop {
+                match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
+                    BatchDecision::Run { variant, batch } => {
+                        if work_tx.send((variant, batch)).is_err() {
+                            break;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            drop(work_tx);
+        });
+
+        Server {
+            submit_tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            registry,
+            shutdown,
+            dispatcher: Some(dispatcher),
+            workers,
+        }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, request: GemmRequest) -> Receiver<GemmResponse> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.on_submit();
+        let job = Job {
+            id,
+            request,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        // A send error means the dispatcher is gone; the caller sees it as
+        // a dropped response channel.
+        let _ = self.submit_tx.send(job);
+        rx
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn call(&self, request: GemmRequest) -> Result<GemmResponse> {
+        let rx = self.submit(request);
+        rx.recv().map_err(|_| anyhow!("server shut down"))
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Closing the submit channel unblocks the dispatcher.
+        let (dead_tx, _) = mpsc::channel();
+        let old = std::mem::replace(&mut self.submit_tx, dead_tx);
+        drop(old);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn route(registry: &Registry, req: &GemmRequest) -> Result<String> {
+    if req.use_baseline {
+        return registry
+            .baseline(&req.key)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("no baseline artifact for {:?}", req.key));
+    }
+    registry
+        .best(&req.key)
+        .map(|e| e.artifact.clone())
+        .ok_or_else(|| anyhow!("no kernel variant registered for {:?}", req.key))
+}
+
+fn execute_one(runtime: &Runtime, variant: &str, req: GemmRequest) -> Result<Tensor> {
+    // Tensors are moved, not cloned: the request is consumed (hot-path
+    // allocation discipline — EXPERIMENTS.md §Perf L3).
+    let GemmRequest { a, b, c, bias, .. } = req;
+    let mut inputs = vec![a, b, c];
+    if let Some(bias) = bias {
+        inputs.push(bias);
+    }
+    let outputs = runtime.execute(variant, &inputs)?;
+    outputs
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("artifact {variant} returned no outputs"))
+}

@@ -1,0 +1,108 @@
+//! Measurement protocol: warmup + N timed repetitions (the paper averages
+//! over ten runs and times kernels only; we separate pack/exec/unpack via
+//! [`crate::runtime::ExecTiming`] and report the exec phase).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{LoadedArtifact, Runtime, Tensor};
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 2, iters: 10 }
+    }
+}
+
+/// Time a closure `iters` times after `warmup` unrecorded calls.
+pub fn measure<F: FnMut() -> Result<()>>(cfg: BenchConfig, mut f: F) -> Result<Summary> {
+    for _ in 0..cfg.warmup {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t = Instant::now();
+        f()?;
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Ok(Summary::of(&samples))
+}
+
+/// Kernel-only timing of one artifact on random inputs.
+pub struct ArtifactBench {
+    pub exec: Summary,
+    pub total: Summary,
+    pub pack: Summary,
+}
+
+pub fn bench_artifact(
+    runtime: &Runtime,
+    artifact: &LoadedArtifact,
+    inputs: &[Tensor],
+    cfg: BenchConfig,
+) -> Result<ArtifactBench> {
+    for _ in 0..cfg.warmup {
+        runtime.execute_timed(artifact, inputs)?;
+    }
+    let mut exec = Vec::with_capacity(cfg.iters);
+    let mut total = Vec::with_capacity(cfg.iters);
+    let mut pack = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let (_, t) = runtime.execute_timed(artifact, inputs)?;
+        exec.push(t.exec_seconds);
+        total.push(t.total());
+        pack.push(t.pack_seconds);
+    }
+    Ok(ArtifactBench {
+        exec: Summary::of(&exec),
+        total: Summary::of(&total),
+        pack: Summary::of(&pack),
+    })
+}
+
+/// Random f32 inputs matching an artifact's specs (N(0, scale)).
+pub fn random_inputs(artifact: &LoadedArtifact, seed: u64, scale: f32) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    artifact
+        .meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let data: Vec<f32> = (0..spec.elements())
+                .map(|_| rng.normal() as f32 * scale)
+                .collect();
+            Tensor { shape: spec.shape.clone(), data }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_warmup_plus_iters() {
+        let mut calls = 0;
+        let s = measure(BenchConfig { warmup: 2, iters: 5 }, || {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn measure_propagates_errors() {
+        let r = measure(BenchConfig::default(), || anyhow::bail!("boom"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! CSV emission for bench results (consumable by any plotting tool).
+
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> CsvTable {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&escape_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Pretty-print the same table for terminals.
+pub fn pretty(table: &CsvTable) -> String {
+    let mut widths: Vec<usize> = table.header.iter().map(|h| h.len()).collect();
+    for row in &table.rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = fmt_row(&table.header);
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in &table.rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_escapes() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.row(vec!["2".into(), "q\"z".into()]);
+        let s = t.to_string();
+        assert_eq!(s.lines().next().unwrap(), "a,b");
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn pretty_aligns() {
+        let mut t = CsvTable::new(&["size", "tflops"]);
+        t.row(vec!["1024".into(), "30.1".into()]);
+        let p = pretty(&t);
+        assert!(p.contains("size"));
+        assert!(p.lines().count() >= 3);
+    }
+
+    #[test]
+    fn writes_file(    ) {
+        let dir = std::env::temp_dir().join("mlir_gemm_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = CsvTable::new(&["a"]);
+        t.row(vec!["1".into()]);
+        t.write_to(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("a\n1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,494 @@
+//! Figure/table builders: one function per paper artifact.
+//!
+//! Each builder produces (a) the simulated sweep over the paper's full
+//! problem range on the modeled RTX 3090 and (b), when a runtime with
+//! built artifacts is supplied, the real-execution subset measured through
+//! the PJRT runtime on this machine.  Output: CSV table + ASCII chart +
+//! the headline comparisons the paper's text calls out.
+
+use anyhow::Result;
+
+use crate::autotune;
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::schedule::{Dtype, Schedule};
+use crate::sim::{simulate, simulate_library, DeviceModel};
+use crate::util::stats::tflops;
+
+use super::bench::{bench_artifact, random_inputs, BenchConfig};
+use super::csv::{pretty, CsvTable};
+use super::plot::{bar_chart, line_chart};
+
+/// The paper's evaluation sweep: square sizes 1024..=16384 step 256.
+pub fn paper_sizes() -> Vec<usize> {
+    (1024..=16384).step_by(256).collect()
+}
+
+pub struct FigureOutput {
+    pub name: &'static str,
+    pub table: CsvTable,
+    pub chart: String,
+    pub summary: String,
+}
+
+impl FigureOutput {
+    pub fn render(&self) -> String {
+        format!(
+            "=== {} ===\n{}\n{}\n{}",
+            self.name,
+            self.chart,
+            pretty(&self.table),
+            self.summary
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 / Figure 4: size sweep vs library
+// ---------------------------------------------------------------------------
+
+pub fn figure_sweep(
+    device: &DeviceModel,
+    acc: Dtype,
+    sizes: &[usize],
+    name: &'static str,
+) -> FigureOutput {
+    let mut table = CsvTable::new(&[
+        "size", "ours_tflops", "library_tflops", "ratio", "ours_tile", "lib_tile",
+    ]);
+    let mut xs = Vec::new();
+    let mut ours_series = Vec::new();
+    let mut lib_series = Vec::new();
+    let mut ratios = Vec::new();
+
+    for &size in sizes {
+        let Some(best) = autotune::best(size, size, size, acc, device) else {
+            continue;
+        };
+        let lib = simulate_library(size, size, size, acc, device);
+        let ratio = best.result.tflops / lib.tflops;
+        xs.push(size as f64);
+        ours_series.push(best.result.tflops);
+        lib_series.push(lib.tflops);
+        ratios.push(ratio);
+        let tb = best.schedule.tile_tb;
+        let lib_tb = crate::sim::library_tile_choice(size, size, size, acc).0;
+        table.row(vec![
+            size.to_string(),
+            format!("{:.2}", best.result.tflops),
+            format!("{:.2}", lib.tflops),
+            format!("{:.3}", ratio),
+            format!("{}x{}x{}", tb.0, tb.1, tb.2),
+            format!("{}x{}x{}", lib_tb.0, lib_tb.1, lib_tb.2),
+        ]);
+    }
+
+    let chart = line_chart(
+        &format!("{name}: TFLOPs vs problem size ({})", acc.name()),
+        &xs,
+        &[("ours (generated)", &ours_series), ("library (cuBLAS model)", &lib_series)],
+        72,
+        18,
+    );
+    let rmin = ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let rmax = ratios.iter().cloned().fold(f64::MIN, f64::max);
+    let peak = device.peak_tc_flops(acc) / 1e12;
+    let best_frac = ours_series.iter().cloned().fold(f64::MIN, f64::max) / peak;
+    let paper_band = match acc {
+        Dtype::F32 => "paper: 95-119% of cuBLAS, 95.4% of device peak",
+        _ => "paper: 80-160% of cuBLAS",
+    };
+    let summary = format!(
+        "ratio ours/library: min {:.2} max {:.2}  |  peak fraction (best size): {:.1}%\n{}\n",
+        rmin,
+        rmax,
+        best_frac * 100.0,
+        paper_band
+    );
+    FigureOutput { name, table, chart, summary }
+}
+
+pub fn figure2(device: &DeviceModel) -> FigureOutput {
+    figure_sweep(device, Dtype::F32, &paper_sizes(), "figure2_mixed_precision")
+}
+
+pub fn figure4(device: &DeviceModel) -> FigureOutput {
+    figure_sweep(device, Dtype::F16, &paper_sizes(), "figure4_half_precision")
+}
+
+/// Real-execution subset: measured wallclock of generated artifacts vs the
+/// XLA-native library baseline, through the identical runtime.
+pub fn figure_sweep_measured(
+    runtime: &Runtime,
+    acc: Dtype,
+    cfg: BenchConfig,
+    name: &'static str,
+) -> Result<FigureOutput> {
+    let mut table = CsvTable::new(&[
+        "size", "variant", "ours_ms", "ours_tflops", "lib_ms", "lib_tflops", "ratio",
+    ]);
+    let mut summary = String::new();
+
+    // Collect (size -> best generated artifact name) among built artifacts.
+    let mut sizes: Vec<(usize, String, String)> = Vec::new();
+    for meta in runtime.artifacts() {
+        if meta.kind != ArtifactKind::Generated {
+            continue;
+        }
+        let Some(s) = &meta.schedule else { continue };
+        if s.dtype_acc != acc || s.m != s.n || s.n != s.k {
+            continue;
+        }
+        let base_name = format!(
+            "baseline_m{}n{}k{}_f16_{}",
+            s.m, s.n, s.k, acc.name()
+        );
+        if runtime.find(&base_name).is_none() {
+            continue;
+        }
+        sizes.push((s.m, meta.name.clone(), base_name));
+    }
+    sizes.sort();
+    sizes.dedup_by_key(|(m, _, _)| *m); // first (manifest order) variant per size
+
+    for (size, ours_name, base_name) in &sizes {
+        let ours = runtime.load(ours_name)?;
+        let base = runtime.load(base_name)?;
+        let inputs = random_inputs(&ours, 42, 0.5);
+        let ours_bench = bench_artifact(runtime, &ours, &inputs, cfg)?;
+        let base_bench = bench_artifact(runtime, &base, &inputs, cfg)?;
+        let ours_tf = tflops(*size, *size, *size, ours_bench.exec.mean);
+        let base_tf = tflops(*size, *size, *size, base_bench.exec.mean);
+        table.row(vec![
+            size.to_string(),
+            ours_name.clone(),
+            format!("{:.3}", ours_bench.exec.mean * 1e3),
+            format!("{:.3}", ours_tf),
+            format!("{:.3}", base_bench.exec.mean * 1e3),
+            format!("{:.3}", base_tf),
+            format!("{:.3}", ours_tf / base_tf),
+        ]);
+    }
+    summary.push_str(
+        "measured on CPU PJRT: interpret-lowered Pallas vs XLA-native dot.\n\
+         Absolute numbers are CPU wallclock; who-wins shape is NOT expected\n\
+         to transfer (the library row is Eigen's hand-tuned CPU GEMM while\n\
+         ours is an interpreted-TPU-schedule run through XLA loops).  The\n\
+         paper-shape comparison lives in the simulated sweep.\n",
+    );
+    Ok(FigureOutput {
+        name,
+        table,
+        chart: String::new(),
+        summary,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3: ablation
+// ---------------------------------------------------------------------------
+
+pub const ABLATION_LABELS: [&str; 8] = [
+    "naive",
+    "+two-level tiling",
+    "+shared memory",
+    "+wmma (tensor cores)",
+    "+permute/unroll/hoist",
+    "+latency hiding",
+    "+smem padding",
+    "+vectorized copies",
+];
+
+/// Cumulative-level schedule for the paper's fig3 config.
+pub fn ablation_schedule(level: u8, m: usize) -> Schedule {
+    let mut s = Schedule::optimized(
+        m,
+        m,
+        m,
+        Dtype::F32,
+        (128, 128, 64),
+        (64, 32, 32),
+    )
+    .expect("ablation size must divide the paper tile");
+    s.opt_level = level;
+    s.tiling = level >= 1;
+    s.shared_mem = level >= 2;
+    s.wmma = level >= 3;
+    s.unroll_hoist = level >= 4;
+    s.latency_hiding = level >= 5;
+    s.padding = level >= 6;
+    s.vectorize = level >= 7;
+    if !s.latency_hiding {
+        s.pipeline_stages = 1;
+    }
+    if !s.padding {
+        s.pad_factor = 0;
+        s.smem_bytes = (128 * 64 + 64 * 128) * 2;
+    }
+    if !s.vectorize {
+        s.vec_width = 1;
+    }
+    s.name = format!("ablation_l{level}_m{m}");
+    s
+}
+
+pub fn figure3(device: &DeviceModel) -> FigureOutput {
+    let m = 8192;
+    let mut table = CsvTable::new(&["level", "optimizations", "tflops", "bound"]);
+    let mut bars = Vec::new();
+    let mut values = Vec::new();
+    for level in 0..8u8 {
+        let s = ablation_schedule(level, m);
+        let r = simulate(&s, device);
+        values.push(r.tflops);
+        table.row(vec![
+            level.to_string(),
+            ABLATION_LABELS[level as usize].to_string(),
+            format!("{:.2}", r.tflops),
+            r.bound.to_string(),
+        ]);
+        bars.push((ABLATION_LABELS[level as usize], r.tflops));
+    }
+    let chart = bar_chart(
+        "figure3: M=N=K=8192 mixed precision, optimizations enabled incrementally",
+        &bars,
+        50,
+    );
+    let lib = simulate_library(m, m, m, Dtype::F32, device);
+    let summary = format!(
+        "full pipeline: {:.2} TFLOPs vs library {:.2} ({:.0}% of device peak)\n\
+         largest increments expected from tiling and wmma; padding and\n\
+         vectorization close the last gap (paper Figure 3 shape).\n",
+        values[7],
+        lib.tflops,
+        100.0 * values[7] / (device.peak_tc_flops(Dtype::F32) / 1e12) / 1e12 * 1e12
+    );
+    FigureOutput {
+        name: "figure3_ablation",
+        table,
+        chart,
+        summary,
+    }
+}
+
+/// Real-execution ablation over the built `kind=ablation` artifacts.
+pub fn figure3_measured(runtime: &Runtime, cfg: BenchConfig) -> Result<FigureOutput> {
+    let mut entries: Vec<(u8, String, usize)> = runtime
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Ablation)
+        .filter_map(|a| {
+            let s = a.schedule.as_ref()?;
+            Some((s.opt_level, a.name.clone(), s.m))
+        })
+        .collect();
+    entries.sort();
+
+    let mut table = CsvTable::new(&["level", "optimizations", "ms", "cpu_gflops"]);
+    let mut bars: Vec<(String, f64)> = Vec::new();
+    for (level, name, m) in &entries {
+        let a = runtime.load(name)?;
+        let inputs = random_inputs(&a, 7, 0.5);
+        let b = bench_artifact(runtime, &a, &inputs, cfg)?;
+        let gflops = 2.0 * (*m as f64).powi(3) / b.exec.mean / 1e9;
+        table.row(vec![
+            level.to_string(),
+            ABLATION_LABELS[*level as usize].to_string(),
+            format!("{:.3}", b.exec.mean * 1e3),
+            format!("{:.2}", gflops),
+        ]);
+        bars.push((ABLATION_LABELS[*level as usize].to_string(), gflops));
+    }
+    let bar_refs: Vec<(&str, f64)> = bars.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+    let chart = bar_chart(
+        "figure3 (measured, CPU PJRT): ablation artifacts wallclock",
+        &bar_refs,
+        50,
+    );
+    Ok(FigureOutput {
+        name: "figure3_measured",
+        table,
+        chart,
+        summary: "structural levels 0-4 differ in compiled code; levels 5-7 differ\n\
+                  only in memory-system behaviour invisible to interpret-mode CPU\n\
+                  execution (modeled in the simulator instead).\n"
+            .into(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: programming-approach comparison + operator fusion
+// ---------------------------------------------------------------------------
+
+pub fn table1(runtime: &Runtime, device: &DeviceModel, cfg: BenchConfig) -> Result<FigureOutput> {
+    let mut table = CsvTable::new(&[
+        "approach", "artifact", "ms", "cpu_gflops", "sim_tflops", "fusion",
+    ]);
+
+    // Find the three comparators at matching size.
+    let hand = runtime
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Hand)
+        .cloned();
+    let Some(hand) = hand else {
+        anyhow::bail!("no hand-optimized artifact in manifest (rebuild artifacts)");
+    };
+    let (m, n, k) = hand.problem.unwrap();
+
+    let generated = runtime
+        .artifacts()
+        .iter()
+        .find(|a| {
+            a.kind == ArtifactKind::Generated
+                && a.problem == Some((m, n, k))
+                && a.dtype_acc == Some(Dtype::F32)
+        })
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("no generated artifact at {m}x{n}x{k}"))?;
+    let baseline = runtime
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Baseline && a.problem == Some((m, n, k)))
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("no baseline artifact at {m}x{n}x{k}"))?;
+
+    let sim_ours = autotune::best(m, n, k, Dtype::F32, device)
+        .map(|c| c.result.tflops)
+        .unwrap_or(0.0);
+    let sim_lib = simulate_library(m, n, k, Dtype::F32, device).tflops;
+
+    for (approach, meta, sim_tf, fusion) in [
+        ("library (XLA dot / cuBLAS row)", &baseline, sim_lib, "limited"),
+        ("generated (WMMA API row)", &generated, sim_ours, "good"),
+        ("hand-written (assembly row)", &hand, sim_ours / crate::sim::GENERATED_COMPUTE_EFF * crate::sim::LIBRARY_COMPUTE_EFF, "good"),
+    ] {
+        let a = runtime.load(&meta.name)?;
+        let inputs = random_inputs(&a, 11, 0.5);
+        let b = bench_artifact(runtime, &a, &inputs, cfg)?;
+        let gflops = 2.0 * (m * n * k) as f64 / b.exec.mean / 1e9;
+        table.row(vec![
+            approach.to_string(),
+            meta.name.clone(),
+            format!("{:.3}", b.exec.mean * 1e3),
+            format!("{:.2}", gflops),
+            format!("{:.2}", sim_tf),
+            fusion.to_string(),
+        ]);
+    }
+
+    // Fusion comparison: fused bias+relu kernel vs dot + separate epilogue.
+    let fused = runtime
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Fused)
+        .cloned();
+    let unfused = runtime
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Unfused)
+        .cloned();
+    let mut summary = String::new();
+    if let (Some(f), Some(u)) = (fused, unfused) {
+        let fa = runtime.load(&f.name)?;
+        let ua = runtime.load(&u.name)?;
+        let fi = random_inputs(&fa, 13, 0.5);
+        let fb = bench_artifact(runtime, &fa, &fi, cfg)?;
+        let ui = random_inputs(&ua, 13, 0.5);
+        let ub = bench_artifact(runtime, &ua, &ui, cfg)?;
+        // Sim estimate on the modeled GPU: the unfused path pays one extra
+        // full read + write of the (m, n) f32 output through global memory.
+        let (fm, fn_, fk) = f.problem.unwrap();
+        let fused_sim = autotune::best(fm, fn_, fk, Dtype::F32, device)
+            .map(|c| c.result.seconds)
+            .unwrap_or(0.0);
+        let extra_bytes = 2.0 * (fm * fn_) as f64 * 4.0;
+        let epilogue_cost = extra_bytes / device.hbm_bytes_per_sec;
+        summary.push_str(&format!(
+            "operator fusion (same generated GEMM both sides, {fm}x{fn_}x{fk}):\n\
+             measured (CPU): fused {:.3} ms vs unfused {:.3} ms\n\
+             modeled (3090): fusion saves {:.1}% (one extra {}x{} f32 output\n\
+             round-trip = {:.3} ms on a {:.3} ms kernel)\n",
+            fb.exec.mean * 1e3,
+            ub.exec.mean * 1e3,
+            100.0 * epilogue_cost / (fused_sim + epilogue_cost),
+            fm,
+            fn_,
+            epilogue_cost * 1e3,
+            fused_sim * 1e3,
+        ));
+    }
+    summary.push_str(
+        "Table 1 qualitative columns: library=minimal conflicts/limited fusion,\n\
+         WMMA-API=competitive perf/good fusion, assembly=best perf/most effort.\n",
+    );
+
+    Ok(FigureOutput {
+        name: "table1_approaches",
+        table,
+        chart: String::new(),
+        summary,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d() -> DeviceModel {
+        DeviceModel::rtx3090()
+    }
+
+    #[test]
+    fn paper_sizes_range() {
+        let s = paper_sizes();
+        assert_eq!(*s.first().unwrap(), 1024);
+        assert_eq!(*s.last().unwrap(), 16384);
+        assert_eq!(s[1] - s[0], 256);
+        assert_eq!(s.len(), 61);
+    }
+
+    #[test]
+    fn figure2_ratio_in_paper_band() {
+        // Shape check on a thinned sweep (full sweep in the bench binary).
+        let sizes: Vec<usize> = (1024..=16384).step_by(1024).collect();
+        let f = figure_sweep(&d(), Dtype::F32, &sizes, "fig2-test");
+        for row in &f.table.rows {
+            let ratio: f64 = row[3].parse().unwrap();
+            assert!(
+                ratio > 0.90 && ratio < 1.30,
+                "mixed-precision ratio {ratio} outside plausible band at {}",
+                row[0]
+            );
+        }
+    }
+
+    #[test]
+    fn figure4_has_wider_band_and_jitter() {
+        let sizes: Vec<usize> = (8960..=11264).step_by(256).collect();
+        let f = figure_sweep(&d(), Dtype::F16, &sizes, "fig4-test");
+        let ratios: Vec<f64> = f.table.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        let rmax = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(rmax > 1.1, "expected ours to beat library somewhere >8848, max {rmax}");
+    }
+
+    #[test]
+    fn figure3_monotone_increasing() {
+        let f = figure3(&d());
+        let vals: Vec<f64> = f.table.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        for w in vals.windows(2) {
+            assert!(w[1] >= w[0] * 0.999, "ablation regressed: {vals:?}");
+        }
+        // naive -> full should be orders of magnitude
+        assert!(vals[7] / vals[0] > 20.0, "{vals:?}");
+    }
+
+    #[test]
+    fn ablation_schedule_levels() {
+        let s0 = ablation_schedule(0, 8192);
+        assert!(!s0.tiling);
+        let s7 = ablation_schedule(7, 8192);
+        assert!(s7.vectorize && s7.padding && s7.latency_hiding);
+        assert_eq!(s7.pipeline_stages, 2);
+        assert_eq!(ablation_schedule(4, 8192).pipeline_stages, 1);
+    }
+}

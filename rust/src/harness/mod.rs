@@ -1,0 +1,15 @@
+//! Benchmark harness: measurement protocol, CSV/ASCII reporting, and the
+//! per-figure builders that regenerate the paper's evaluation artifacts.
+
+pub mod bench;
+pub mod csv;
+pub mod figures;
+pub mod plot;
+
+pub use bench::{bench_artifact, measure, random_inputs, ArtifactBench, BenchConfig};
+pub use csv::{pretty, CsvTable};
+pub use figures::{
+    ablation_schedule, figure2, figure3, figure3_measured, figure4, figure_sweep,
+    figure_sweep_measured, paper_sizes, table1, FigureOutput, ABLATION_LABELS,
+};
+pub use plot::{bar_chart, line_chart};

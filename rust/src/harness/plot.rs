@@ -1,0 +1,104 @@
+//! ASCII plotting for terminal figure output (the repo's stand-in for the
+//! paper's matplotlib charts).
+
+/// Multi-series line chart: x values shared, one glyph per series.
+pub fn line_chart(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(!x.is_empty());
+    for (_, ys) in series {
+        assert_eq!(ys.len(), x.len(), "series length mismatch");
+    }
+    let glyphs = ['o', '+', 'x', '*', '#', '@'];
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let ymin = 0.0f64;
+    let xmin = x[0];
+    let xmax = *x.last().unwrap();
+    let xspan = (xmax - xmin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (&xv, &yv) in x.iter().zip(ys.iter()) {
+            let col = (((xv - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row_f = ((yv - ymin) / (ymax - ymin)) * (height - 1) as f64;
+            let row = height - 1 - row_f.round().min((height - 1) as f64) as usize;
+            grid[row][col.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = format!("{title}\n");
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = ymax * (height - 1 - ri) as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:8.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:9}{:<10.0}{:>width$.0}\n",
+        "",
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", glyphs[si % glyphs.len()], name));
+    }
+    out
+}
+
+/// Horizontal bar chart (for the Figure 3 ablation).
+pub fn bar_chart(title: &str, bars: &[(&str, f64)], width: usize) -> String {
+    let maxv = bars.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in bars {
+        let filled = ((v / maxv) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:>label_w$} | {} {v:.2}\n",
+            "#".repeat(filled),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_all_series() {
+        let x = [1.0, 2.0, 3.0];
+        let a = [1.0, 2.0, 3.0];
+        let b = [3.0, 2.0, 1.0];
+        let s = line_chart("t", &x, &[("ours", &a), ("lib", &b)], 30, 10);
+        assert!(s.contains('o'));
+        assert!(s.contains('+'));
+        assert!(s.contains("ours"));
+        assert!(s.contains("lib"));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart("abl", &[("naive", 1.0), ("full", 10.0)], 20);
+        let naive_len = s.lines().find(|l| l.contains("naive")).unwrap().matches('#').count();
+        let full_len = s.lines().find(|l| l.contains("full")).unwrap().matches('#').count();
+        assert_eq!(full_len, 20);
+        assert_eq!(naive_len, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_series_panics() {
+        line_chart("t", &[1.0, 2.0], &[("a", &[1.0])], 10, 5);
+    }
+}

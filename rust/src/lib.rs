@@ -1,0 +1,25 @@
+//! mlir-gemm: reproduction of "High Performance GPU Code Generation for
+//! Matrix-Matrix Multiplication using MLIR" (Katel, Khandelwal, Bondhugula,
+//! 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//!
+//! * L1/L2 live in `python/` (tile-IR pipeline, Pallas kernels, jax
+//!   graphs) and run only at build time (`make artifacts`);
+//! * this crate is L3 plus the substitute testbed:
+//!   - [`runtime`]     — PJRT CPU client executing the AOT artifacts;
+//!   - [`coordinator`] — GEMM service: registry, router, batcher, workers;
+//!   - [`sim`]         — analytic RTX 3090 model (the paper's hardware);
+//!   - [`autotune`]    — tile-space search over the model;
+//!   - [`harness`]     — measurement + figure builders (Fig 2/3/4, Table 1);
+//!   - [`schedule`]    — the kernel-variant contract shared with Python;
+//!   - [`util`]        — in-repo substrates (json, cli, prng, stats,
+//!     proptest-lite) for crates absent from the offline vendor set.
+
+pub mod autotune;
+pub mod coordinator;
+pub mod harness;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,341 @@
+//! mlir-gemm CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve      run the GEMM service on synthetic traffic, print metrics
+//!   bench      regenerate a paper figure/table (fig2|fig3|fig4|table1|all)
+//!   autotune   search the tile space for a problem size
+//!   sim        simulate one kernel configuration
+//!   run        execute one artifact by name on random inputs
+//!   list       list artifacts in the manifest
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use mlir_gemm::autotune;
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::harness::{self, BenchConfig};
+use mlir_gemm::runtime::{Runtime, Tensor};
+use mlir_gemm::schedule::{Dtype, Schedule};
+use mlir_gemm::sim::{simulate, DeviceModel};
+use mlir_gemm::util::cli::{usage, Args, Spec};
+use mlir_gemm::util::prng::Rng;
+
+const SPEC: &[Spec] = &[
+    ("artifacts", true, "artifacts directory (default: ./artifacts)"),
+    ("device", true, "device model: rtx3090 | a100 (default rtx3090)"),
+    ("size", true, "problem size for autotune/sim (default 4096)"),
+    ("acc", true, "accumulate dtype: f32 | f16 (default f32)"),
+    ("tile", true, "tile as tbm,tbn,tbk (sim; default 128,128,64)"),
+    ("warp", true, "warp tile as wm,wn,wk (sim; default 64,32,32)"),
+    ("iters", true, "bench iterations (default 10)"),
+    ("warmup", true, "bench warmup runs (default 2)"),
+    ("requests", true, "serve: number of synthetic requests (default 64)"),
+    ("workers", true, "serve: worker threads (default 2)"),
+    ("out-dir", true, "bench: directory for CSV output (default reports/)"),
+    ("measured", false, "bench: include real-execution subsets"),
+    ("top", true, "autotune: show top-N candidates (default 8)"),
+    ("help", false, "show usage"),
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv, SPEC) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
+        println!("subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | run <artifact> | list");
+        return;
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn device(args: &Args) -> Result<DeviceModel> {
+    let name = args.get_or("device", "rtx3090");
+    DeviceModel::by_name(name).ok_or_else(|| anyhow!("unknown device {name:?}"))
+}
+
+fn acc(args: &Args) -> Result<Dtype> {
+    let name = args.get_or("acc", "f32");
+    Dtype::parse(name).ok_or_else(|| anyhow!("unknown dtype {name:?}"))
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn parse_triple(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow!("expected three comma-separated integers, got {s:?}"))?;
+    if parts.len() != 3 {
+        bail!("expected three comma-separated integers, got {s:?}");
+    }
+    Ok((parts[0], parts[1], parts[2]))
+}
+
+fn bench_cfg(args: &Args) -> Result<BenchConfig> {
+    Ok(BenchConfig {
+        warmup: args.get_usize("warmup", 2)?,
+        iters: args.get_usize("iters", 10)?,
+    })
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional[0].as_str() {
+        "list" => cmd_list(args),
+        "sim" => cmd_sim(args),
+        "autotune" => cmd_autotune(args),
+        "bench" => cmd_bench(args),
+        "serve" => cmd_serve(args),
+        "run" => cmd_run(args),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    println!("{:<64} {:<12} inputs", "name", "kind");
+    for a in rt.artifacts() {
+        println!(
+            "{:<64} {:<12} {}",
+            a.name,
+            format!("{:?}", a.kind).to_lowercase(),
+            a.inputs
+                .iter()
+                .map(|s| format!("{:?}", s.shape))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    println!("{} artifacts", rt.artifacts().len());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let d = device(args)?;
+    let size = args.get_usize("size", 4096)?;
+    let tb = parse_triple(args.get_or("tile", "128,128,64"))?;
+    let warp = parse_triple(args.get_or("warp", "64,32,32"))?;
+    let s = Schedule::optimized(size, size, size, acc(args)?, tb, warp)
+        .map_err(|e| anyhow!("{e}"))?;
+    let r = simulate(&s, &d);
+    println!("schedule: {}", s.name);
+    println!("device:   {} ({} SMs @ {:.0} MHz)", d.name, d.sms, d.clock_hz / 1e6);
+    println!("tflops:   {:.2} ({:.1}% of tensor-core peak)", r.tflops, r.frac_of_peak * 100.0);
+    println!("time:     {:.3} ms", r.seconds * 1e3);
+    println!("bound:    {}", r.bound);
+    println!(
+        "occupancy: {} blocks/SM (limited by {}), {} active SMs, {} wave(s), scheduler util {:.0}%",
+        r.occupancy.blocks_resident_per_sm,
+        r.occupancy.limited_by,
+        r.occupancy.active_sms,
+        r.occupancy.waves,
+        r.occupancy.scheduler_util * 100.0
+    );
+    println!(
+        "per-iter cycles: compute {:.0}, memory {:.0}; smem {} B",
+        r.compute_cycles_per_iter, r.memory_cycles_per_iter, s.smem_bytes
+    );
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let d = device(args)?;
+    let size = args.get_usize("size", 4096)?;
+    let a = acc(args)?;
+    let top = args.get_usize("top", 8)?;
+    let cands = autotune::enumerate(size, size, size, a, &d);
+    if cands.is_empty() {
+        bail!("no feasible tile configuration divides {size}");
+    }
+    println!(
+        "{:<28} {:>10} {:>10} {:>8} {:>14}",
+        "tile (tb | warp)", "tflops", "% peak", "blocks", "smem"
+    );
+    for c in cands.iter().take(top) {
+        let s = &c.schedule;
+        println!(
+            "{:<28} {:>10.2} {:>9.1}% {:>8} {:>12} B",
+            format!(
+                "{}x{}x{} | {}x{}x{}",
+                s.tile_tb.0, s.tile_tb.1, s.tile_tb.2,
+                s.tile_warp.0, s.tile_warp.1, s.tile_warp.2
+            ),
+            c.result.tflops,
+            c.result.frac_of_peak * 100.0,
+            s.blocks(),
+            s.smem_bytes,
+        );
+    }
+    println!("\nbest: {}", cands[0].schedule.name);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let d = device(args)?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "reports"));
+    let cfg = bench_cfg(args)?;
+    let measured = args.flag("measured");
+
+    let mut outputs = Vec::new();
+    let needs_runtime = measured || which == "table1" || which == "all";
+    let runtime = if needs_runtime {
+        match Runtime::open(&artifacts_dir(args)) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("note: artifacts unavailable ({e}); skipping measured subsets");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    if matches!(which, "fig2" | "all") {
+        outputs.push(harness::figure2(&d));
+        if let (true, Some(rt)) = (measured, &runtime) {
+            outputs.push(harness::figure_sweep_measured(
+                rt,
+                Dtype::F32,
+                cfg,
+                "figure2_measured",
+            )?);
+        }
+    }
+    if matches!(which, "fig3" | "all") {
+        outputs.push(harness::figure3(&d));
+        if let (true, Some(rt)) = (measured, &runtime) {
+            outputs.push(harness::figure3_measured(rt, cfg)?);
+        }
+    }
+    if matches!(which, "fig4" | "all") {
+        outputs.push(harness::figure4(&d));
+        if let (true, Some(rt)) = (measured, &runtime) {
+            outputs.push(harness::figure_sweep_measured(
+                rt,
+                Dtype::F16,
+                cfg,
+                "figure4_measured",
+            )?);
+        }
+    }
+    if matches!(which, "table1" | "all") {
+        if let Some(rt) = &runtime {
+            outputs.push(harness::table1(rt, &d, cfg)?);
+        } else {
+            eprintln!("table1 needs built artifacts; skipping");
+        }
+    }
+    if outputs.is_empty() {
+        bail!("unknown bench target {which:?} (fig2|fig3|fig4|table1|all)");
+    }
+
+    for o in &outputs {
+        println!("{}", o.render());
+        let path = out_dir.join(format!("{}.csv", o.name));
+        o.table.write_to(&path)?;
+        println!("csv -> {}\n", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: run <artifact-name>"))?;
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let a = rt.load(name)?;
+    let inputs = harness::random_inputs(&a, 0, 0.5);
+    let (outputs, timing) = rt.execute_timed(&a, &inputs)?;
+    println!(
+        "{name}: exec {:.3} ms (pack {:.3} ms, unpack {:.3} ms)",
+        timing.exec_seconds * 1e3,
+        timing.pack_seconds * 1e3,
+        timing.unpack_seconds * 1e3
+    );
+    for (i, o) in outputs.iter().enumerate() {
+        let norm: f64 = o.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        println!("  out{i}: shape {:?}, l2 norm {norm:.4}", o.shape);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let d = device(args)?;
+    let rt = Arc::new(Runtime::open(&artifacts_dir(args))?);
+    let n_requests = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", 2)?;
+
+    let server = Server::start(
+        rt.clone(),
+        &d,
+        ServerConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+
+    // Synthetic traffic over every registered shape.
+    let keys: Vec<GemmKey> = server.registry().keys().cloned().collect();
+    if keys.is_empty() {
+        bail!("no generated kernels registered (build artifacts first)");
+    }
+    println!(
+        "serving {} synthetic requests over {} shapes with {} workers...",
+        n_requests,
+        keys.len(),
+        workers
+    );
+    let mut rng = Rng::new(99);
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let key = rng.choice(&keys).clone();
+        let a = Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k))?;
+        let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?;
+        let c = Tensor::zeros(vec![key.m, key.n]);
+        let bias = if key.epilogue != "none" {
+            Some(Tensor::new(vec![key.n], rng.normal_matrix(1, key.n))?)
+        } else {
+            None
+        };
+        pending.push(server.submit(GemmRequest {
+            key,
+            a,
+            b,
+            c,
+            bias,
+            use_baseline: false,
+        }));
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow!("server dropped response"))?;
+        if resp.output.is_ok() {
+            ok += 1;
+        } else if let Err(e) = resp.output {
+            eprintln!("request {} failed: {e:#}", resp.id);
+        }
+    }
+    println!("{ok}/{n_requests} requests succeeded\n");
+    let snapshot = server.shutdown();
+    println!("{}", snapshot.report());
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Parsing of `artifacts/manifest.json` (produced by `python -m compile.aot`).
+
+use std::path::{Path, PathBuf};
+
+use crate::schedule::{Dtype, Schedule};
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Generated,
+    Baseline,
+    Ablation,
+    Fused,
+    Unfused,
+    Hand,
+    Transformer,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        Some(match s {
+            "generated" => ArtifactKind::Generated,
+            "baseline" => ArtifactKind::Baseline,
+            "ablation" => ArtifactKind::Ablation,
+            "fused" => ArtifactKind::Fused,
+            "unfused" => ArtifactKind::Unfused,
+            "hand" => ArtifactKind::Hand,
+            "transformer" => ArtifactKind::Transformer,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Present for generated/ablation/fused kernels.
+    pub schedule: Option<Schedule>,
+    /// Present for baseline/unfused/hand entries.
+    pub problem: Option<(usize, usize, usize)>,
+    pub dtype_acc: Option<Dtype>,
+}
+
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn specs(j: &Json, field: &str) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = j
+        .get(field)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ManifestError(format!("missing {field}")))?;
+    arr.iter()
+        .map(|e| {
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError("missing shape".into()))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| ManifestError("bad dim".into())))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = e
+                .get("dtype")
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .ok_or_else(|| ManifestError("bad dtype".into()))?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+pub fn parse_manifest(text: &str, base_dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let root = json::parse(text).map_err(|e| ManifestError(e.to_string()))?;
+    let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
+    if version != 1 {
+        return Err(ManifestError(format!("unsupported manifest version {version}")));
+    }
+    let arts = root
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ManifestError("missing artifacts".into()))?;
+    arts.iter()
+        .map(|a| {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError("artifact missing name".into()))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError(format!("{name}: missing file")))?;
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(ArtifactKind::parse)
+                .ok_or_else(|| ManifestError(format!("{name}: bad kind")))?;
+            let schedule = match a.get("schedule") {
+                Some(sj) => Some(
+                    Schedule::from_json(sj)
+                        .map_err(|e| ManifestError(format!("{name}: {e}")))?,
+                ),
+                None => None,
+            };
+            let problem = match (
+                a.get("m").and_then(Json::as_usize),
+                a.get("n").and_then(Json::as_usize),
+                a.get("k").and_then(Json::as_usize),
+            ) {
+                (Some(m), Some(n), Some(k)) => Some((m, n, k)),
+                _ => schedule.as_ref().map(|s| (s.m, s.n, s.k)),
+            };
+            let dtype_acc = a
+                .get("dtype_acc")
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .or_else(|| schedule.as_ref().map(|s| s.dtype_acc));
+            Ok(ArtifactMeta {
+                name,
+                path: base_dir.join(file),
+                kind,
+                inputs: specs(a, "inputs")?,
+                outputs: specs(a, "outputs")?,
+                schedule,
+                problem,
+                dtype_acc,
+            })
+        })
+        .collect()
+}
+
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| ManifestError(format!("cannot read {}: {e}", path.display())))?;
+    parse_manifest(&text, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "baseline_m256n256k256_f16_f32",
+          "file": "baseline.hlo.txt",
+          "kind": "baseline",
+          "inputs": [{"shape": [256, 256], "dtype": "f32"}],
+          "outputs": [{"shape": [256, 256], "dtype": "f32"}],
+          "m": 256, "n": 256, "k": 256,
+          "dtype_in": "f16", "dtype_acc": "f32"
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_baseline_entry() {
+        let arts = parse_manifest(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.kind, ArtifactKind::Baseline);
+        assert_eq!(a.problem, Some((256, 256, 256)));
+        assert_eq!(a.dtype_acc, Some(Dtype::F32));
+        assert_eq!(a.path, Path::new("/tmp/a/baseline.hlo.txt"));
+        assert_eq!(a.inputs[0].elements(), 256 * 256);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = r#"{"version": 2, "artifacts": []}"#;
+        assert!(parse_manifest(text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let text = SAMPLE.replace("baseline", "bogus_kind");
+        assert!(parse_manifest(&text, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` -> `HloModuleProto::
+//! from_text_file` -> `client.compile` -> `execute`.  All artifact I/O is
+//! f32 row-major (precision casts live inside the graphs — see aot.py), so
+//! the host-side tensor type is a plain `Vec<f32>` + shape.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {shape:?} needs {want} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape
+    }
+}
+
+/// One compiled executable plus its manifest entry.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Execution statistics for one call.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecTiming {
+    /// Host->device literal construction + transfer.
+    pub pack_seconds: f64,
+    /// Kernel execution (the paper's "kernel runtime").
+    pub exec_seconds: f64,
+    /// Device->host fetch + unpack.
+    pub unpack_seconds: f64,
+}
+
+impl ExecTiming {
+    pub fn total(&self) -> f64 {
+        self.pack_seconds + self.exec_seconds + self.unpack_seconds
+    }
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    loaded: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+    metas: Vec<ArtifactMeta>,
+}
+
+// The underlying PJRT CPU client is thread-safe; the xla crate just doesn't
+// mark its opaque pointers Send/Sync.  The coordinator executes from worker
+// threads through &self only.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for LoadedArtifact {}
+unsafe impl Sync for LoadedArtifact {}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (reads the manifest).
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
+        let metas = load_manifest(artifacts_dir)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            loaded: Mutex::new(HashMap::new()),
+            metas,
+        })
+    }
+
+    /// Create an empty runtime (tests can register HLO files directly).
+    pub fn without_manifest() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            loaded: Mutex::new(HashMap::new()),
+            metas: Vec::new(),
+        })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.iter().find(|m| m.name == name)
+    }
+
+    /// Compile (or fetch the cached) artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedArtifact>> {
+        {
+            let cache = self.loaded.lock().unwrap();
+            if let Some(a) = cache.get(name) {
+                return Ok(a.clone());
+            }
+        }
+        let meta = self
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let arc = std::sync::Arc::new(self.compile_meta(meta)?);
+        self.loaded
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Eagerly compile every artifact of the given kinds.
+    pub fn preload(&self, kinds: &[ArtifactKind]) -> Result<usize> {
+        let names: Vec<String> = self
+            .metas
+            .iter()
+            .filter(|m| kinds.contains(&m.kind))
+            .map(|m| m.name.clone())
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn compile_meta(&self, meta: ArtifactMeta) -> Result<LoadedArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .with_context(|| format!("parsing HLO text {}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.name))?;
+        Ok(LoadedArtifact { meta, exe })
+    }
+
+    /// Execute a loaded artifact on host tensors, with phase timings.
+    pub fn execute_timed(
+        &self,
+        artifact: &LoadedArtifact,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, ExecTiming)> {
+        let meta = &artifact.meta;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if !t.matches(spec) {
+                bail!(
+                    "{}: input {i} shape {:?} does not match artifact spec {:?}",
+                    meta.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let t1 = Instant::now();
+
+        let result = artifact.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let t2 = Instant::now();
+
+        // return_tuple=True: the root literal is a tuple of outputs.
+        let parts = root.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                meta.name,
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let outputs = parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>()?;
+                Tensor::new(spec.shape.clone(), data)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let t3 = Instant::now();
+
+        Ok((
+            outputs,
+            ExecTiming {
+                pack_seconds: (t1 - t0).as_secs_f64(),
+                exec_seconds: (t2 - t1).as_secs_f64(),
+                unpack_seconds: (t3 - t2).as_secs_f64(),
+            },
+        ))
+    }
+
+    /// Execute by artifact name (loads/caches on first use).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let a = self.load(name)?;
+        Ok(self.execute_timed(&a, inputs)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_check() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::zeros(vec![4, 4]).elements(), 16);
+    }
+
+    #[test]
+    fn tensor_matches_spec() {
+        use crate::schedule::Dtype;
+        let t = Tensor::zeros(vec![2, 2]);
+        let good = TensorSpec { shape: vec![2, 2], dtype: Dtype::F32 };
+        let bad = TensorSpec { shape: vec![2, 3], dtype: Dtype::F32 };
+        assert!(t.matches(&good));
+        assert!(!t.matches(&bad));
+    }
+}

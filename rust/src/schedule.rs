@@ -1,0 +1,314 @@
+//! Rust mirror of the Python `tileir.schedule.Schedule` — the contract
+//! between the code-generation pipeline and the run-time side (simulator,
+//! autotuner, coordinator).  Parsed from `artifacts/manifest.json`, or
+//! constructed directly when the simulator explores candidate schedules the
+//! pipeline has not (yet) emitted.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F16,
+    Bf16,
+    F32,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F16 | Dtype::Bf16 => 2,
+            Dtype::F32 => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f16" => Some(Dtype::F16),
+            "bf16" => Some(Dtype::Bf16),
+            "f32" => Some(Dtype::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+            Dtype::F32 => "f32",
+        }
+    }
+}
+
+/// One generated kernel variant's complete structural description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype_in: Dtype,
+    pub dtype_acc: Dtype,
+    pub epilogue: String,
+    pub opt_level: u8,
+    pub tiling: bool,
+    pub shared_mem: bool,
+    pub wmma: bool,
+    pub unroll_hoist: bool,
+    pub latency_hiding: bool,
+    pub padding: bool,
+    pub vectorize: bool,
+    pub tile_tb: (usize, usize, usize),
+    pub tile_warp: (usize, usize, usize),
+    pub wmma_mnk: (usize, usize, usize),
+    pub pad_factor: usize,
+    pub vec_width: usize,
+    pub pipeline_stages: usize,
+    pub grid: (usize, usize),
+    pub warps_per_block: (usize, usize),
+    pub threads_per_block: usize,
+    pub smem_bytes: usize,
+    pub accumulators_per_warp: usize,
+    pub barriers_per_iteration: usize,
+}
+
+#[derive(Debug)]
+pub struct ScheduleError(pub String);
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "schedule error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
+impl Schedule {
+    /// Parse from the manifest's per-artifact "schedule" object.
+    pub fn from_json(j: &Json) -> Result<Schedule, ScheduleError> {
+        let e = |field: &str| ScheduleError(format!("missing/invalid field {field:?}"));
+        let get_b = |f: &str| j.get(f).and_then(Json::as_bool).ok_or_else(|| e(f));
+        let get_u = |f: &str| j.get(f).and_then(Json::as_usize).ok_or_else(|| e(f));
+        let get_s = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| e(f))
+        };
+        let get_d = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .ok_or_else(|| e(f))
+        };
+        Ok(Schedule {
+            name: get_s("name")?,
+            m: get_u("m")?,
+            n: get_u("n")?,
+            k: get_u("k")?,
+            dtype_in: get_d("dtype_in")?,
+            dtype_acc: get_d("dtype_acc")?,
+            epilogue: get_s("epilogue")?,
+            opt_level: get_u("opt_level")? as u8,
+            tiling: get_b("tiling")?,
+            shared_mem: get_b("shared_mem")?,
+            wmma: get_b("wmma")?,
+            unroll_hoist: get_b("unroll_hoist")?,
+            latency_hiding: get_b("latency_hiding")?,
+            padding: get_b("padding")?,
+            vectorize: get_b("vectorize")?,
+            tile_tb: j.get_usize3("tile_tb").ok_or_else(|| e("tile_tb"))?,
+            tile_warp: j.get_usize3("tile_warp").ok_or_else(|| e("tile_warp"))?,
+            wmma_mnk: j.get_usize3("wmma_mnk").ok_or_else(|| e("wmma_mnk"))?,
+            pad_factor: get_u("pad_factor")?,
+            vec_width: get_u("vec_width")?,
+            pipeline_stages: get_u("pipeline_stages")?,
+            grid: j.get_usize2("grid").ok_or_else(|| e("grid"))?,
+            warps_per_block: j
+                .get_usize2("warps_per_block")
+                .ok_or_else(|| e("warps_per_block"))?,
+            threads_per_block: get_u("threads_per_block")?,
+            smem_bytes: get_u("smem_bytes")?,
+            accumulators_per_warp: get_u("accumulators_per_warp")?,
+            barriers_per_iteration: get_u("barriers_per_iteration")?,
+        })
+    }
+
+    /// Build a fully-optimized candidate schedule for the autotuner / sim
+    /// (what the pipeline would produce for this config).
+    pub fn optimized(
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype_acc: Dtype,
+        tile_tb: (usize, usize, usize),
+        tile_warp: (usize, usize, usize),
+    ) -> Result<Schedule, ScheduleError> {
+        let (tbm, tbn, tbk) = tile_tb;
+        let (wm, wn, wk) = tile_warp;
+        if tbm == 0 || tbn == 0 || tbk == 0 {
+            return Err(ScheduleError("zero tile".into()));
+        }
+        if m % tbm != 0 || n % tbn != 0 || k % tbk != 0 {
+            return Err(ScheduleError(format!(
+                "problem {m}x{n}x{k} not a multiple of tile {tile_tb:?}"
+            )));
+        }
+        if tbm % wm != 0 || tbn % wn != 0 || tbk % wk != 0 {
+            return Err(ScheduleError(format!(
+                "tb tile {tile_tb:?} not a multiple of warp tile {tile_warp:?}"
+            )));
+        }
+        if wm % 16 != 0 || wn % 16 != 0 || wk % 16 != 0 {
+            return Err(ScheduleError(format!(
+                "warp tile {tile_warp:?} not a multiple of the 16x16x16 WMMA op"
+            )));
+        }
+        let warps_check = (tbm / wm) * (tbn / wn);
+        if warps_check * 32 > 1024 {
+            return Err(ScheduleError(format!(
+                "tile {tile_tb:?} with warp tile {tile_warp:?} needs \
+                 {warps_check} warps = {} threads/block (hardware max 1024)",
+                warps_check * 32
+            )));
+        }
+        let pad = 8;
+        let in_bytes = Dtype::F16.bytes();
+        let smem = (tbm * (tbk + pad) + tbk * (tbn + pad)) * in_bytes;
+        let warps = (tbm / wm, tbn / wn);
+        let stages = if k / tbk >= 2 { 2 } else { 1 };
+        Ok(Schedule {
+            name: format!(
+                "cand_m{m}n{n}k{k}_{}_tb{tbm}x{tbn}x{tbk}_w{wm}x{wn}x{wk}",
+                dtype_acc.name()
+            ),
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc,
+            epilogue: "none".into(),
+            opt_level: 7,
+            tiling: true,
+            shared_mem: true,
+            wmma: true,
+            unroll_hoist: true,
+            latency_hiding: stages > 1,
+            padding: true,
+            vectorize: true,
+            tile_tb,
+            tile_warp,
+            wmma_mnk: (16, 16, 16),
+            pad_factor: pad,
+            vec_width: 8,
+            pipeline_stages: stages,
+            grid: (m / tbm, n / tbn),
+            warps_per_block: warps,
+            threads_per_block: warps.0 * warps.1 * 32,
+            smem_bytes: smem,
+            accumulators_per_warp: (wm / 16) * (wn / 16),
+            barriers_per_iteration: 2,
+        })
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    pub fn warps_total_per_block(&self) -> usize {
+        self.warps_per_block.0 * self.warps_per_block.1
+    }
+
+    /// Registers per thread estimate: each warp holds
+    /// `accumulators_per_warp` 16x16 f32 fragments (8 regs/thread each on
+    /// Ampere) plus A/B fragments and addressing registers.
+    pub fn regs_per_thread(&self) -> usize {
+        let acc_regs = self.accumulators_per_warp * 8 * self.dtype_acc.bytes() / 4;
+        let operand_regs = 2 * 8; // one A + one B fragment in flight
+        let staging = if self.pipeline_stages > 1 { 16 } else { 0 };
+        32 + acc_regs + operand_regs + staging
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn paper_schedule() -> Schedule {
+        Schedule::optimized(
+            8192,
+            8192,
+            8192,
+            Dtype::F32,
+            (128, 128, 64),
+            (64, 32, 32),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paper_config_footprints() {
+        let s = paper_schedule();
+        assert_eq!(s.smem_bytes, (128 * 72 + 64 * 136) * 2);
+        assert_eq!(s.accumulators_per_warp, 8);
+        assert_eq!(s.threads_per_block, 256);
+        assert_eq!(s.grid, (64, 64));
+    }
+
+    #[test]
+    fn rejects_bad_tiles() {
+        assert!(Schedule::optimized(100, 64, 64, Dtype::F32, (64, 64, 64), (32, 32, 32)).is_err());
+        assert!(Schedule::optimized(128, 128, 128, Dtype::F32, (64, 64, 64), (48, 32, 32)).is_err());
+        assert!(Schedule::optimized(128, 128, 128, Dtype::F32, (64, 64, 64), (24, 24, 24)).is_err());
+    }
+
+    #[test]
+    fn rejects_over_1024_threads() {
+        // 256x256 tile with 32x32 warps = 64 warps = 2048 threads
+        assert!(Schedule::optimized(
+            4096, 4096, 4096, Dtype::F32, (256, 256, 32), (32, 32, 32)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_via_python_shape() {
+        // A manifest-shaped schedule object (field names as emitted by
+        // python's dataclasses.asdict).
+        let text = r#"{
+            "name": "t", "m": 64, "n": 64, "k": 64,
+            "dtype_in": "f16", "dtype_acc": "f32", "epilogue": "none",
+            "opt_level": 7, "tiling": true, "shared_mem": true, "wmma": true,
+            "unroll_hoist": true, "latency_hiding": true, "padding": true,
+            "vectorize": true, "tile_tb": [32, 32, 32],
+            "tile_warp": [16, 16, 16], "wmma_mnk": [16, 16, 16],
+            "pad_factor": 8, "vec_width": 8, "pipeline_stages": 2,
+            "grid": [2, 2], "warps_per_block": [2, 2],
+            "threads_per_block": 128, "smem_bytes": 5120,
+            "accumulators_per_warp": 1, "barriers_per_iteration": 2
+        }"#;
+        let j = json::parse(text).unwrap();
+        let s = Schedule::from_json(&j).unwrap();
+        assert_eq!(s.grid, (2, 2));
+        assert_eq!(s.dtype_acc, Dtype::F32);
+        assert_eq!(s.flops(), 2.0 * 64f64.powi(3));
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let j = json::parse(r#"{"name": "x"}"#).unwrap();
+        let err = Schedule::from_json(&j).unwrap_err();
+        assert!(err.0.contains("missing"));
+    }
+
+    #[test]
+    fn regs_stay_under_ampere_cap() {
+        // paper sets maxrregcount=255; our estimate for the paper config
+        // must stay below it
+        assert!(paper_schedule().regs_per_thread() <= 255);
+    }
+}

@@ -1,0 +1,196 @@
+//! Analytic device models, calibrated from vendor whitepapers.
+//!
+//! The paper's testbed is an Ampere GeForce RTX 3090 (GA102) locked to its
+//! 1695 MHz boost clock.  The constants below come from the GA102
+//! whitepaper and the CUDA occupancy tables; the A100 preset is included
+//! for the ablation benches that ask "would the conclusions change on a
+//! data-center part?".
+
+use crate::schedule::Dtype;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Locked SM clock in Hz (the paper pins 1695 MHz).
+    pub clock_hz: f64,
+    /// Dense tensor-core flops per cycle per SM with f16 accumulate.
+    /// (RTX 3090: 71 TFLOPS f16/f16 dense = 512 flop/cycle/SM.)
+    pub tc_flops_per_cycle_f16acc: f64,
+    /// Dense tensor-core flops per cycle per SM with f32 accumulate.
+    /// (GeForce Ampere halves the f32-accumulate rate: 35.6 TFLOPS.)
+    pub tc_flops_per_cycle_f32acc: f64,
+    /// Dense tensor-core flops per cycle per SM in TF32 mode (f32 inputs
+    /// converted internally; RTX 3090: 17.8 TFLOPS dense).
+    pub tc_flops_per_cycle_tf32: f64,
+    /// CUDA-core f32 FMA flops per cycle per SM (128 cores x 2).
+    pub cuda_flops_per_cycle: f64,
+    /// Device global-memory bandwidth, bytes/s (GDDR6X: 936 GB/s).
+    pub hbm_bytes_per_sec: f64,
+    /// Global-memory load latency in cycles.
+    pub global_latency_cycles: f64,
+    /// Shared-memory bandwidth per SM, bytes/cycle (32 banks x 4 B).
+    pub smem_bytes_per_cycle: f64,
+    /// Shared memory available per SM for occupancy (GA102: 100 KiB).
+    pub smem_per_sm: usize,
+    /// Static shared-memory limit per block (the paper restricts to 48 KiB).
+    pub smem_static_limit: usize,
+    /// Register file per SM (32-bit registers).
+    pub regs_per_sm: usize,
+    /// Max registers per thread (paper sets 255).
+    pub max_regs_per_thread: usize,
+    pub max_threads_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    pub warp_schedulers_per_sm: usize,
+    /// Cycles for a block-wide barrier.
+    pub barrier_cycles: f64,
+    /// L2 cache capacity in bytes (GA102: 6 MiB).
+    pub l2_bytes: usize,
+}
+
+impl DeviceModel {
+    pub fn rtx3090() -> DeviceModel {
+        let clock = 1.695e9;
+        let sms = 82.0;
+        DeviceModel {
+            name: "rtx3090",
+            sms: 82,
+            clock_hz: clock,
+            // 71e12 / (82 * 1.695e9) = 511 -> 512 flops/cycle/SM
+            tc_flops_per_cycle_f16acc: 71.0e12 / (sms * clock),
+            // 35.6e12 -> 256 flops/cycle/SM
+            tc_flops_per_cycle_f32acc: 35.6e12 / (sms * clock),
+            tc_flops_per_cycle_tf32: 17.8e12 / (sms * clock),
+            // 10496 cores * 2 flops / 82 SM = 256 flops/cycle/SM
+            cuda_flops_per_cycle: 35.6e12 / (sms * clock),
+            hbm_bytes_per_sec: 936.0e9,
+            global_latency_cycles: 470.0,
+            smem_bytes_per_cycle: 128.0,
+            smem_per_sm: 100 * 1024,
+            smem_static_limit: 48 * 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            max_threads_per_sm: 1536,
+            max_blocks_per_sm: 16,
+            warp_schedulers_per_sm: 4,
+            barrier_cycles: 25.0,
+            l2_bytes: 6 * 1024 * 1024,
+        }
+    }
+
+    pub fn a100() -> DeviceModel {
+        let clock = 1.41e9;
+        let sms = 108.0;
+        DeviceModel {
+            name: "a100",
+            sms: 108,
+            clock_hz: clock,
+            // A100 does NOT halve f32 accumulate: 312 TFLOPS dense both ways.
+            tc_flops_per_cycle_f16acc: 312.0e12 / (sms * clock),
+            tc_flops_per_cycle_f32acc: 312.0e12 / (sms * clock),
+            tc_flops_per_cycle_tf32: 156.0e12 / (sms * clock),
+            cuda_flops_per_cycle: 19.5e12 / (sms * clock),
+            hbm_bytes_per_sec: 1555.0e9,
+            global_latency_cycles: 450.0,
+            smem_bytes_per_cycle: 128.0,
+            smem_per_sm: 164 * 1024,
+            smem_static_limit: 48 * 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            warp_schedulers_per_sm: 4,
+            barrier_cycles: 25.0,
+            l2_bytes: 40 * 1024 * 1024,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceModel> {
+        match name {
+            "rtx3090" => Some(DeviceModel::rtx3090()),
+            "a100" => Some(DeviceModel::a100()),
+            _ => None,
+        }
+    }
+
+    pub fn tc_flops_per_cycle(&self, acc: Dtype) -> f64 {
+        match acc {
+            Dtype::F16 | Dtype::Bf16 => self.tc_flops_per_cycle_f16acc,
+            Dtype::F32 => self.tc_flops_per_cycle_f32acc,
+        }
+    }
+
+    /// Tensor-core rate keyed on the *input* format (§2.3 of the paper):
+    /// f16 and bf16 inputs run at the same rate; f32 inputs go through the
+    /// TF32 path, which is slower than both.
+    pub fn tc_flops_per_cycle_mode(&self, dtype_in: Dtype, acc: Dtype) -> f64 {
+        match dtype_in {
+            Dtype::F16 | Dtype::Bf16 => self.tc_flops_per_cycle(acc),
+            Dtype::F32 => self.tc_flops_per_cycle_tf32,
+        }
+    }
+
+    /// Device peak for a given accumulate dtype on tensor cores, flops/s.
+    pub fn peak_tc_flops(&self, acc: Dtype) -> f64 {
+        self.tc_flops_per_cycle(acc) * self.sms as f64 * self.clock_hz
+    }
+
+    /// Global bandwidth expressed per SM per cycle.
+    pub fn hbm_bytes_per_cycle_per_sm(&self, active_sms: usize) -> f64 {
+        self.hbm_bytes_per_sec / (active_sms.max(1) as f64) / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtx3090_peaks_match_whitepaper() {
+        let d = DeviceModel::rtx3090();
+        let f16 = d.peak_tc_flops(Dtype::F16) / 1e12;
+        let f32 = d.peak_tc_flops(Dtype::F32) / 1e12;
+        assert!((f16 - 71.0).abs() < 0.5, "{f16}");
+        assert!((f32 - 35.6).abs() < 0.5, "{f32}");
+    }
+
+    #[test]
+    fn f16_acc_is_double_rate_on_geforce() {
+        let d = DeviceModel::rtx3090();
+        let ratio = d.tc_flops_per_cycle(Dtype::F16) / d.tc_flops_per_cycle(Dtype::F32);
+        assert!((ratio - 2.0).abs() < 0.02, "{ratio}");
+    }
+
+    #[test]
+    fn precision_mode_ordering_matches_paper_s2_3() {
+        // §2.3: bf16 and f16 are the same speed, both faster than TF32
+        let d = DeviceModel::rtx3090();
+        let f16 = d.tc_flops_per_cycle_mode(Dtype::F16, Dtype::F16);
+        let bf16 = d.tc_flops_per_cycle_mode(Dtype::Bf16, Dtype::F16);
+        let tf32 = d.tc_flops_per_cycle_mode(Dtype::F32, Dtype::F32);
+        assert_eq!(f16, bf16);
+        assert!(f16 > tf32 && d.tc_flops_per_cycle(Dtype::F32) > tf32);
+    }
+
+    #[test]
+    fn a100_does_not_halve() {
+        let d = DeviceModel::a100();
+        assert_eq!(
+            d.tc_flops_per_cycle(Dtype::F16),
+            d.tc_flops_per_cycle(Dtype::F32)
+        );
+    }
+
+    #[test]
+    fn by_name() {
+        assert_eq!(DeviceModel::by_name("rtx3090").unwrap().sms, 82);
+        assert!(DeviceModel::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn bandwidth_concentrates_on_few_sms() {
+        let d = DeviceModel::rtx3090();
+        assert!(d.hbm_bytes_per_cycle_per_sm(1) > d.hbm_bytes_per_cycle_per_sm(82));
+    }
+}

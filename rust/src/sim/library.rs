@@ -1,0 +1,145 @@
+//! The simulated vendor library (the cuBLAS 11.2 comparator).
+//!
+//! Same device and kernel model as the generated kernels, but driven by a
+//! library-style configuration: a fixed tile-selection heuristic table, a
+//! deep (5-stage) software pipeline, and hand-scheduled-SASS compute
+//! efficiency.  The table encodes the behaviours the paper observed when
+//! profiling cuBLAS:
+//!
+//! * §4.1 — cuBLAS leans on large reuse-friendly tiles even for small
+//!   problems, so small sizes under-occupy the device and the generated
+//!   kernels (free to pick 64^3 tiles) win there;
+//! * §4.2 — for fp16 the library keeps 128x128x32 even at sizes where
+//!   128x256x32 is better (observed at N=11264) and is "not well-tuned for
+//!   all problem sizes" beyond N=8848 — modeled as a size-bucketed tile
+//!   table with a sub-optimal plateau and bucket-to-bucket jitter.
+
+use crate::schedule::{Dtype, Schedule};
+use super::device::DeviceModel;
+use super::model::{simulate_with_eff, SimResult};
+
+/// Tensor-pipe efficiency of hand-scheduled SASS (Table 1: "best").
+pub const LIBRARY_COMPUTE_EFF: f64 = 0.99;
+
+/// The library's tile-selection heuristic.  Returns (tile_tb, tile_warp).
+pub fn library_tile_choice(
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: Dtype,
+) -> ((usize, usize, usize), (usize, usize, usize)) {
+    let size = m.max(n).max(k);
+    match acc {
+        Dtype::F32 => {
+            // Mixed precision: the library is broadly well-tuned, but its
+            // smallest kernel is 128x128 (no 64^3 tile in the heuristic),
+            // which under-occupies small problems.
+            if size <= 3072 {
+                ((128, 128, 32), (64, 32, 32))
+            } else {
+                ((128, 128, 64), (64, 32, 32))
+            }
+        }
+        Dtype::F16 | Dtype::Bf16 => {
+            if size <= 4096 {
+                ((128, 128, 32), (64, 32, 32))
+            } else if size <= 8848 {
+                ((128, 128, 64), (64, 32, 32))
+            } else {
+                // Beyond 8848 the paper profiles inconsistent choices:
+                // the heuristic sticks to 128x128x32 (observed at 11264)
+                // and some size buckets fall onto an even narrower kernel.
+                match (size / 256) % 3 {
+                    0 => ((64, 256, 32), (32, 64, 32)),
+                    1 => ((128, 128, 32), (64, 32, 32)),
+                    // 11264/256 = 44 -> bucket 2: the paper's profiled
+                    // 128x128x32 choice lands here.
+                    _ => ((128, 128, 32), (64, 32, 32)),
+                }
+            }
+        }
+    }
+}
+
+/// Simulate the library's kernel for a problem.
+pub fn simulate_library(
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: Dtype,
+    d: &DeviceModel,
+) -> SimResult {
+    let (tb, warp) = library_tile_choice(m, n, k, acc);
+    let mut s = Schedule::optimized(m, n, k, acc, tb, warp)
+        .or_else(|_| {
+            // Problem not divisible by the library tile: the library pads
+            // internally; model with the largest dividing fallback tile.
+            Schedule::optimized(m, n, k, acc, (64, 64, 32), (32, 32, 32))
+        })
+        .unwrap_or_else(|_| {
+            Schedule::optimized(m, n, k, acc, (32, 32, 32), (16, 16, 16)).unwrap()
+        });
+    s.name = format!("cublas_like_m{m}n{n}k{k}_{}", acc.name());
+    // Library kernels use deep pipelining (the paper profiled 5 stages).
+    s.pipeline_stages = 5;
+    let mut r = simulate_with_eff(&s, d, LIBRARY_COMPUTE_EFF);
+    r.name = s.name;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d() -> DeviceModel {
+        DeviceModel::rtx3090()
+    }
+
+    #[test]
+    fn tile_table_is_suboptimal_at_11264_f16() {
+        // the paper's §4.2 observation, verbatim
+        let (tb, _) = library_tile_choice(11264, 11264, 11264, Dtype::F16);
+        assert_eq!(tb, (128, 128, 32));
+    }
+
+    #[test]
+    fn mixed_precision_is_consistent_but_small_sizes_underoccupy() {
+        let small = simulate_library(1024, 1024, 1024, Dtype::F32, &d());
+        let large = simulate_library(8192, 8192, 8192, Dtype::F32, &d());
+        assert!(large.tflops > small.tflops);
+        // 64 blocks of 128x128 tiles on 82 SMs -> visible occupancy dip
+        assert!(small.occupancy.active_sms < 82);
+    }
+
+    #[test]
+    fn fp16_large_sizes_jitter() {
+        // neighbouring sizes in the >8848 regime can differ measurably
+        let ts: Vec<f64> = [9216usize, 9472, 9728]
+            .iter()
+            .map(|&s| simulate_library(s, s, s, Dtype::F16, &d()).tflops)
+            .collect();
+        let max = ts.iter().cloned().fold(f64::MIN, f64::max);
+        let min = ts.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 1.05, "expected >5% jitter, got {ts:?}");
+    }
+
+    #[test]
+    fn library_beats_generated_slightly_on_large_mixed(    ) {
+        use super::super::model::simulate;
+        let lib = simulate_library(8192, 8192, 8192, Dtype::F32, &d());
+        let ours = simulate(
+            &Schedule::optimized(8192, 8192, 8192, Dtype::F32,
+                                 (128, 128, 64), (64, 32, 32)).unwrap(),
+            &d(),
+        );
+        let ratio = ours.tflops / lib.tflops;
+        // paper: "within 2-8% of cuBLAS" on large sizes
+        assert!(ratio > 0.90 && ratio < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn indivisible_problem_falls_back() {
+        let r = simulate_library(96, 96, 96, Dtype::F32, &d());
+        assert!(r.tflops > 0.0);
+    }
+}

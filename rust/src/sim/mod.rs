@@ -1,0 +1,13 @@
+//! Analytic GPU performance model — the substitute testbed for the paper's
+//! RTX 3090 (see DESIGN.md §1 "substitutions").  `device` holds the
+//! hardware constants, `model` the per-kernel cost model, `library` the
+//! simulated cuBLAS comparator.
+
+pub mod device;
+pub mod library;
+pub mod model;
+
+pub use device::DeviceModel;
+pub use library::{library_tile_choice, simulate_library, LIBRARY_COMPUTE_EFF};
+pub use model::{occupancy, simulate, simulate_with_eff, Occupancy, SimResult,
+                GENERATED_COMPUTE_EFF};

@@ -1,0 +1,418 @@
+//! The kernel cost model: Schedule + DeviceModel -> cycles/TFLOPs.
+//!
+//! A first-order analytic model of one GEMM kernel launch, built from the
+//! same quantities the paper's §3 reasons about.  Every optimization toggle
+//! in the schedule maps to a term:
+//!
+//! * no tiling          -> CUDA-core compute, zero reuse (every FMA pays
+//!   global traffic), C read-modify-written per k step;
+//! * tiling w/o smem    -> per-warp redundant global reads of the A/B tiles
+//!   (L1-cache discounted), still no staging;
+//! * shared memory      -> A/B tiles hit global once per k-iteration;
+//! * wmma               -> tensor-core instead of CUDA-core throughput;
+//! * unroll/hoist       -> C traffic once per block instead of per k-iter;
+//! * latency hiding     -> copy and compute overlap (max instead of sum),
+//!   global latency amortized across pipeline stages;
+//! * padding            -> removes the shared-memory bank-conflict factor;
+//! * vectorize          -> full-width global transactions.
+//!
+//! Occupancy follows the CUDA occupancy rules (blocks limited by shared
+//! memory, registers, threads, block slots), which is what makes small
+//! problem sizes favour small tiles exactly as §4.1 observes.
+
+use crate::schedule::Schedule;
+use super::device::DeviceModel;
+
+/// Shared-memory bank-conflict multiplier for unpadded f16 tiles.  A
+/// 16-byte-aligned row layout with a power-of-two leading dimension lands
+/// consecutive fragment rows on the same banks; 4x is the measured ballpark
+/// for WMMA-shaped accesses (Bhaskaracharya et al. report 2-8x swings).
+const BANK_CONFLICT_FACTOR: f64 = 4.0;
+
+/// L1 cache discount for redundant per-warp global reads (no-smem variant).
+const L1_REUSE_DISCOUNT: f64 = 0.5;
+
+/// Achieved fraction of peak global bandwidth for full-width (128-bit)
+/// vectorized copies vs narrow scalar accesses.
+const VEC_BW_EFF: f64 = 0.92;
+const SCALAR_BW_EFF: f64 = 0.38;
+
+/// Achievable fraction of the CUDA-core FMA peak for scalar (non-WMMA)
+/// matmul inner loops: loads, address arithmetic, and loop control compete
+/// with the FMAs for issue slots.  Tensor-core HMMA ops amortize all of
+/// that over a 16x16x16 fragment, which is (most of) why the WMMA rewrite
+/// is one of Figure 3's biggest jumps even though GeForce Ampere's
+/// f32-accumulate TC rate numerically equals the CUDA-core f32 peak.
+const CUDA_CORE_EFF: f64 = 0.40;
+
+/// Tensor-core pipe efficiency of compiler-scheduled WMMA code vs perfectly
+/// scheduled SASS.  The generated-code column of Table 1 ("competitive in
+/// most cases"); the library model uses a higher figure.
+pub const GENERATED_COMPUTE_EFF: f64 = 0.95;
+
+#[derive(Debug, Clone)]
+pub struct Occupancy {
+    pub blocks_resident_per_sm: usize,
+    pub limited_by: &'static str,
+    pub active_sms: usize,
+    pub waves: usize,
+    /// Fraction of warp-scheduler slots kept busy.
+    pub scheduler_util: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub name: String,
+    pub seconds: f64,
+    pub tflops: f64,
+    /// Fraction of the device tensor-core peak for the accumulate dtype.
+    pub frac_of_peak: f64,
+    pub occupancy: Occupancy,
+    /// Per-k-iteration cycle breakdown of one block (steady state).
+    pub compute_cycles_per_iter: f64,
+    pub memory_cycles_per_iter: f64,
+    pub cycles_per_block: f64,
+    pub bound: &'static str, // "compute" | "memory" | "latency" | "occupancy"
+}
+
+/// Saturating warp-ILP curve: fraction of the tensor pipe kept busy with
+/// `w` warps resident per scheduler.  One warp already streams independent
+/// MMAs from its unrolled accumulator tile (the §3.4 hoisting), so the
+/// curve starts high and saturates at three warps/scheduler — the paper's
+/// §2.2 "more warps help hide latency" effect, calibrated so an 8-warp
+/// 128x128 block at low residency lands ~15% below peak (matching the
+/// small-size gaps of Figure 2).
+fn warp_ilp_util(warps_per_scheduler: f64) -> f64 {
+    (0.55 + 0.15 * warps_per_scheduler).min(1.0)
+}
+
+/// Compute occupancy for a schedule on a device.
+pub fn occupancy(s: &Schedule, d: &DeviceModel) -> Occupancy {
+    let threads = s.threads_per_block.max(32);
+    let mut limits: Vec<(usize, &'static str)> = vec![
+        (d.max_blocks_per_sm, "block-slots"),
+        (d.max_threads_per_sm / threads, "threads"),
+    ];
+    if s.shared_mem && s.smem_bytes > 0 {
+        limits.push((d.smem_per_sm / s.smem_bytes, "shared-memory"));
+    }
+    let regs_per_block = s.regs_per_thread().min(d.max_regs_per_thread) * threads;
+    limits.push((d.regs_per_sm / regs_per_block.max(1), "registers"));
+
+    let (resident, limited_by) = limits
+        .into_iter()
+        .min_by_key(|(v, _)| *v)
+        .unwrap();
+    let resident = resident.max(1);
+
+    let blocks = s.blocks();
+    let active_sms = blocks.min(d.sms);
+    // A block slot only helps if there is a block to fill it: small grids
+    // cannot reach the resource-limited residency.
+    let resident_eff = resident.min(blocks.div_ceil(d.sms)).max(1);
+    let waves = blocks.div_ceil(d.sms * resident_eff).max(1);
+    // Warp-level parallelism available to each SM's schedulers; the pipe
+    // saturates around WARPS_PER_SCHED_FOR_PEAK resident warps/scheduler.
+    let warps_active =
+        (s.warps_total_per_block() * resident_eff).min(d.max_threads_per_sm / 32);
+    let scheduler_util =
+        warp_ilp_util(warps_active as f64 / d.warp_schedulers_per_sm as f64);
+    Occupancy {
+        blocks_resident_per_sm: resident_eff,
+        limited_by,
+        active_sms,
+        waves,
+        scheduler_util,
+    }
+}
+
+/// Simulate one kernel launch; `compute_eff` is the tensor-pipe efficiency
+/// of the code generator (use [`GENERATED_COMPUTE_EFF`] for our pipeline).
+pub fn simulate_with_eff(s: &Schedule, d: &DeviceModel, compute_eff: f64) -> SimResult {
+    if !s.tiling {
+        return simulate_naive(s, d);
+    }
+
+    let occ = occupancy(s, d);
+    let (tbm, tbn, tbk) = s.tile_tb;
+    let (wm, wn, _) = s.tile_warp;
+    let in_b = s.dtype_in.bytes() as f64;
+    let acc_b = s.dtype_acc.bytes() as f64;
+    let k_iters = (s.k / tbk) as f64;
+
+    // ---- compute path (cycles per k-iteration of one block) -------------
+    let flops_per_iter = 2.0 * tbm as f64 * tbn as f64 * tbk as f64;
+    let pipe = if s.wmma {
+        d.tc_flops_per_cycle_mode(s.dtype_in, s.dtype_acc)
+    } else {
+        d.cuda_flops_per_cycle * CUDA_CORE_EFF
+    };
+    let compute_raw = flops_per_iter / (pipe * occ.scheduler_util.max(0.1));
+    let mut compute_cycles = compute_raw / compute_eff;
+
+    // Shared-memory read pressure feeding the MXU/TC pipes: after CSE each
+    // warp still re-reads its A slice per jjj column and B slice per iii
+    // row.  Bank conflicts inflate this; padding removes them.
+    if s.shared_mem {
+        let a_reads = (tbm * tbk) as f64 * (tbn as f64 / wn as f64);
+        let b_reads = (tbk * tbn) as f64 * (tbm as f64 / wm as f64);
+        let conflict = if s.padding { 1.0 } else { BANK_CONFLICT_FACTOR };
+        let smem_read_cycles =
+            (a_reads + b_reads) * in_b * conflict / d.smem_bytes_per_cycle;
+        compute_cycles = compute_cycles.max(smem_read_cycles);
+    }
+
+    // ---- memory path (global traffic cycles per k-iteration) ------------
+    let tile_bytes = ((tbm * tbk) + (tbk * tbn)) as f64 * in_b;
+    let global_bytes_per_iter = if s.shared_mem {
+        tile_bytes
+    } else {
+        // Every warp re-reads the tiles it needs from global (L1-discounted).
+        let warp_factor_a = (tbn / wn) as f64;
+        let warp_factor_b = (tbm / wm) as f64;
+        ((tbm * tbk) as f64 * warp_factor_a + (tbk * tbn) as f64 * warp_factor_b)
+            * in_b
+            * L1_REUSE_DISCOUNT
+    };
+    let bw_eff = if s.vectorize { VEC_BW_EFF } else { SCALAR_BW_EFF };
+    let bw_per_sm = d.hbm_bytes_per_cycle_per_sm(occ.active_sms);
+    // Problems whose whole working set is L2-resident see much higher
+    // effective bandwidth (GA102's L2 sustains ~2.5x DRAM).
+    let working_set = ((s.m * s.k + s.k * s.n) as f64 * in_b
+        + (s.m * s.n) as f64 * acc_b) as usize;
+    let l2_factor = if working_set <= 2 * d.l2_bytes { 0.4 } else { 1.0 };
+    let mut memory_cycles =
+        global_bytes_per_iter * l2_factor / (bw_per_sm * bw_eff);
+
+    if s.shared_mem {
+        let conflict = if s.padding { 1.0 } else { BANK_CONFLICT_FACTOR };
+        memory_cycles += tile_bytes * conflict / d.smem_bytes_per_cycle;
+    }
+
+    // C traffic: once per block when hoisted, every k-iteration otherwise.
+    let c_bytes = (tbm * tbn) as f64 * acc_b * 2.0; // read + write
+    let c_cycles = c_bytes * l2_factor / (bw_per_sm * bw_eff);
+    let mut c_per_iter = 0.0;
+    let mut c_per_block = 0.0;
+    if s.unroll_hoist {
+        c_per_block = c_cycles;
+    } else {
+        c_per_iter = c_cycles;
+    }
+    memory_cycles += c_per_iter;
+
+    // ---- latency structure ----------------------------------------------
+    // Stall cycles (barriers, exposed load latency) are filled by other
+    // resident blocks when occupancy allows.
+    let resident = occ.blocks_resident_per_sm as f64;
+    let latency_amort =
+        d.global_latency_cycles / (s.pipeline_stages as f64) / resident;
+    let barrier =
+        s.barriers_per_iteration as f64 * d.barrier_cycles / resident;
+    let (iter_cycles, bound) = if s.latency_hiding {
+        let c = compute_cycles.max(memory_cycles) + barrier + latency_amort;
+        let bound = if compute_cycles >= memory_cycles {
+            "compute"
+        } else {
+            "memory"
+        };
+        (c, bound)
+    } else {
+        // Serial: wait on the copy, then compute.
+        let lat = d.global_latency_cycles / resident;
+        (compute_cycles + memory_cycles + barrier + lat, "latency")
+    };
+
+    // ---- assemble ---------------------------------------------------------
+    // Sequential-equivalent SM time: the busiest SM runs
+    // ceil(blocks/sms) blocks.  With multiple resident blocks the tail
+    // wave overlaps earlier ones, smoothing the quantization toward the
+    // average — the occupancy benefit §4.1 attributes to small tiles on
+    // small problems.
+    let prologue = d.global_latency_cycles + memory_cycles;
+    let cycles_per_block = k_iters * iter_cycles + prologue + c_per_block;
+    let avg_blocks = (s.blocks() as f64 / d.sms as f64).max(1.0);
+    let ceil_blocks = s.blocks().div_ceil(d.sms) as f64;
+    let per_sm_blocks = if occ.blocks_resident_per_sm > 1 {
+        (avg_blocks + ceil_blocks) / 2.0
+    } else {
+        ceil_blocks
+    };
+    let total_cycles = per_sm_blocks * cycles_per_block;
+    let mut seconds = total_cycles / d.clock_hz;
+
+    // Hard ceilings: device-wide bandwidth and compute roofs.
+    let total_global_bytes = s.blocks() as f64
+        * (k_iters * global_bytes_per_iter + c_bytes)
+        + 0.0;
+    seconds = seconds.max(total_global_bytes / d.hbm_bytes_per_sec);
+    let peak = if s.wmma {
+        d.peak_tc_flops(s.dtype_acc)
+    } else {
+        d.cuda_flops_per_cycle * d.sms as f64 * d.clock_hz
+    };
+    seconds = seconds.max(s.flops() / peak);
+
+    let tflops = s.flops() / seconds / 1e12;
+    SimResult {
+        name: s.name.clone(),
+        seconds,
+        tflops,
+        frac_of_peak: s.flops() / seconds / d.peak_tc_flops(s.dtype_acc),
+        occupancy: occ,
+        compute_cycles_per_iter: compute_cycles,
+        memory_cycles_per_iter: memory_cycles,
+        cycles_per_block,
+        bound,
+    }
+}
+
+pub fn simulate(s: &Schedule, d: &DeviceModel) -> SimResult {
+    simulate_with_eff(s, d, GENERATED_COMPUTE_EFF)
+}
+
+/// The untiled kernel: one thread per output element, CUDA cores, no reuse.
+fn simulate_naive(s: &Schedule, d: &DeviceModel) -> SimResult {
+    let in_b = s.dtype_in.bytes() as f64;
+    let acc_b = s.dtype_acc.bytes() as f64;
+    let flops = s.flops();
+    // Every FMA loads one A and one B element from global (caches help a
+    // little; grant the same L1 discount as the tiled-no-smem variant) and
+    // C is read-modify-written per k step without hoisting.
+    let ab_bytes = (s.m * s.n * s.k) as f64 * 2.0 * in_b * L1_REUSE_DISCOUNT;
+    let c_bytes = (s.m * s.n * s.k) as f64 * 2.0 * acc_b * L1_REUSE_DISCOUNT;
+    let mem_seconds = (ab_bytes + c_bytes) / (d.hbm_bytes_per_sec * SCALAR_BW_EFF);
+    let compute_seconds =
+        flops / (d.cuda_flops_per_cycle * d.sms as f64 * d.clock_hz);
+    let seconds = mem_seconds.max(compute_seconds);
+    let tflops = flops / seconds / 1e12;
+    SimResult {
+        name: s.name.clone(),
+        seconds,
+        tflops,
+        frac_of_peak: flops / seconds / d.peak_tc_flops(s.dtype_acc),
+        occupancy: Occupancy {
+            blocks_resident_per_sm: 1,
+            limited_by: "untiled",
+            active_sms: d.sms,
+            waves: 1,
+            scheduler_util: 1.0,
+        },
+        compute_cycles_per_iter: 0.0,
+        memory_cycles_per_iter: 0.0,
+        cycles_per_block: 0.0,
+        bound: if mem_seconds > compute_seconds {
+            "memory"
+        } else {
+            "compute"
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{Dtype, Schedule};
+
+    fn sched(m: usize, tb: (usize, usize, usize), warp: (usize, usize, usize)) -> Schedule {
+        Schedule::optimized(m, m, m, Dtype::F32, tb, warp).unwrap()
+    }
+
+    fn d() -> DeviceModel {
+        DeviceModel::rtx3090()
+    }
+
+    #[test]
+    fn large_mixed_precision_near_paper_range() {
+        // paper: ~95% of the 35.6 TFLOPs device peak at 8192
+        let r = simulate(&sched(8192, (128, 128, 64), (64, 32, 32)), &d());
+        assert!(r.tflops > 28.0 && r.tflops <= 35.6, "{}", r.tflops);
+    }
+
+    #[test]
+    fn f16_accumulate_roughly_doubles() {
+        let s32 = sched(8192, (128, 128, 64), (64, 32, 32));
+        let mut s16 = s32.clone();
+        s16.dtype_acc = Dtype::F16;
+        let r32 = simulate(&s32, &d());
+        let r16 = simulate(&s16, &d());
+        let ratio = r16.tflops / r32.tflops;
+        assert!(ratio > 1.5 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn occupancy_limits_small_problems() {
+        // 1024 with 128x128 tiles -> 64 blocks < 82 SMs: underutilized
+        let big_tile = simulate(&sched(1024, (128, 128, 64), (64, 32, 32)), &d());
+        let small_tile = simulate(&sched(1024, (64, 64, 64), (32, 32, 32)), &d());
+        assert!(
+            small_tile.tflops > big_tile.tflops,
+            "small tiles should win at 1024: {} vs {}",
+            small_tile.tflops,
+            big_tile.tflops
+        );
+    }
+
+    #[test]
+    fn large_problems_prefer_large_tiles() {
+        let big_tile = simulate(&sched(8192, (128, 128, 64), (64, 32, 32)), &d());
+        let small_tile = simulate(&sched(8192, (32, 32, 32), (16, 16, 16)), &d());
+        assert!(
+            big_tile.tflops > small_tile.tflops,
+            "large tiles should win at 8192: {} vs {}",
+            big_tile.tflops,
+            small_tile.tflops
+        );
+    }
+
+    #[test]
+    fn monotone_in_disabled_optimizations() {
+        // cumulative levels must not get slower as optimizations are added
+        let base = Schedule::optimized(2048, 2048, 2048, Dtype::F32,
+                                       (128, 128, 64), (64, 32, 32)).unwrap();
+        let mut prev = 0.0;
+        for level in 1..=7u8 {
+            let mut s = base.clone();
+            s.opt_level = level;
+            s.shared_mem = level >= 2;
+            s.wmma = level >= 3;
+            s.unroll_hoist = level >= 4;
+            s.latency_hiding = level >= 5;
+            s.padding = level >= 6;
+            s.vectorize = level >= 7;
+            if !s.latency_hiding {
+                s.pipeline_stages = 1;
+            }
+            let r = simulate(&s, &d());
+            assert!(
+                r.tflops >= prev * 0.999,
+                "level {level} regressed: {} < {prev}",
+                r.tflops
+            );
+            prev = r.tflops;
+        }
+    }
+
+    #[test]
+    fn naive_is_terrible() {
+        let mut s = sched(2048, (128, 128, 64), (64, 32, 32));
+        s.tiling = false;
+        let r = simulate(&s, &d());
+        assert!(r.tflops < 1.0, "naive should be <1 TFLOP, got {}", r.tflops);
+    }
+
+    #[test]
+    fn never_exceeds_peak() {
+        for &m in &[1024usize, 4096, 16384] {
+            let r = simulate(&sched(m, (128, 128, 64), (64, 32, 32)), &d());
+            assert!(r.frac_of_peak <= 1.0 + 1e-9, "{}", r.frac_of_peak);
+        }
+    }
+
+    #[test]
+    fn occupancy_respects_smem_limit() {
+        let s = sched(8192, (128, 128, 64), (64, 32, 32));
+        let o = occupancy(&s, &d());
+        assert!(o.blocks_resident_per_sm * s.smem_bytes <= d().smem_per_sm);
+    }
+}

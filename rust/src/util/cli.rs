@@ -1,0 +1,155 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args,
+//! with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Option spec: (name, takes_value, help).
+pub type Spec = (&'static str, bool, &'static str);
+
+impl Args {
+    /// Parse argv against a spec; unknown `--options` are errors.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        spec: &[Spec],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let entry = spec.iter().find(|(n, _, _)| *n == name).ok_or_else(
+                    || CliError(format!("unknown option --{name}")),
+                )?;
+                if entry.1 {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
+                    };
+                    args.options.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected number, got {v:?}"))),
+        }
+    }
+}
+
+pub fn usage(prog: &str, summary: &str, spec: &[Spec]) -> String {
+    let mut out = format!("{prog} — {summary}\n\noptions:\n");
+    for (name, takes, help) in spec {
+        let lhs = if *takes {
+            format!("--{name} <v>")
+        } else {
+            format!("--{name}")
+        };
+        out.push_str(&format!("  {lhs:<24} {help}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &[Spec] = &[
+        ("size", true, "problem size"),
+        ("quick", false, "fast mode"),
+        ("out", true, "output path"),
+    ];
+
+    fn parse(argv: &[&str]) -> Result<Args, CliError> {
+        Args::parse(argv.iter().map(|s| s.to_string()), SPEC)
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse(&["bench", "--size", "512", "--quick", "--out=x.csv"]).unwrap();
+        assert_eq!(a.positional, vec!["bench"]);
+        assert_eq!(a.get("size"), Some("512"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--size", "512"]).unwrap();
+        assert_eq!(a.get_usize("size", 0).unwrap(), 512);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["--size", "abc"]).unwrap().get_usize("size", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse(&["--bogus"]).is_err());
+        assert!(parse(&["--size"]).is_err());
+        assert!(parse(&["--quick=1"]).is_err());
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = usage("mlir-gemm", "x", SPEC);
+        assert!(u.contains("--size"));
+        assert!(u.contains("fast mode"));
+    }
+}

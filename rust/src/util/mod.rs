@@ -1,0 +1,8 @@
+//! Support substrates built in-repo (the offline vendor set has no serde,
+//! clap, rand, criterion, or proptest — each has a small equivalent here).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

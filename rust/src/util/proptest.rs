@@ -1,0 +1,145 @@
+//! proptest-lite: a tiny property-based testing harness.
+//!
+//! The real proptest crate is not in the offline vendor set; this module
+//! provides the core loop the Rust test suites need: generate N random
+//! cases from a seeded [`Rng`], run the property, and on failure greedily
+//! shrink the failing case before reporting.
+
+use super::prng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0x5EED,
+            max_shrink_iters: 256,
+        }
+    }
+}
+
+/// Run `property` on `cases` values drawn from `gen`.  On failure, shrink
+/// with `shrink` (which proposes smaller candidates) and panic with the
+/// minimal failing case's debug form.
+pub fn check<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, property: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if let Err(first_msg) = property(&value) {
+            // Greedy shrink: repeatedly take the first shrunken candidate
+            // that still fails.
+            let mut best = value.clone();
+            let mut best_msg = first_msg;
+            let mut iters = 0;
+            'outer: loop {
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+                for cand in shrink(&best) {
+                    iters += 1;
+                    if let Err(msg) = property(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {:#x}):\n  value: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for a usize-vector-like case: halve each element toward a floor.
+pub fn shrink_usizes(v: &[usize], floor: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for i in 0..v.len() {
+        if v[i] > floor {
+            let mut c = v.to_vec();
+            c[i] = floor.max(v[i] / 2);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            Config::default(),
+            |r| r.below(100),
+            |_| vec![],
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_reports() {
+        check(
+            Config { cases: 50, ..Default::default() },
+            |r| r.below(100),
+            |_| vec![],
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Property: x < 10.  Starting from any failing x, shrinking should
+        // land near the boundary.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config { cases: 10, ..Default::default() },
+                |r| 100 + r.below(100),
+                |&x| if x > 10 { vec![x / 2, x - 1] } else { vec![] },
+                |&x| if x < 10 { Ok(()) } else { Err("too big".into()) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing case via halving/decrement from >=100 is <= 13
+        let val: usize = msg
+            .split("value: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(val <= 13, "shrunk value {val} (msg: {msg})");
+    }
+
+    #[test]
+    fn shrink_usizes_halves() {
+        let cands = shrink_usizes(&[8, 2], 2);
+        assert_eq!(cands, vec![vec![4, 2]]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Failure injection: the runtime and manifest layer must fail loudly and
+//! precisely on corrupted or inconsistent artifact stores — a downstream
+//! user's first contact with this system is usually a broken build tree.
+
+use std::fs;
+use std::path::PathBuf;
+
+use mlir_gemm::runtime::manifest::parse_manifest;
+use mlir_gemm::runtime::Runtime;
+
+fn open_err(dir: &PathBuf) -> anyhow::Error {
+    match Runtime::open(dir) {
+        Err(e) => e,
+        Ok(_) => panic!("Runtime::open must fail for {}", dir.display()),
+    }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlir_gemm_fi_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const MINIMAL: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "k",
+      "file": "k.hlo.txt",
+      "kind": "baseline",
+      "inputs": [{"shape": [2, 2], "dtype": "f32"}],
+      "outputs": [{"shape": [2, 2], "dtype": "f32"}],
+      "m": 2, "n": 2, "k": 2, "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+#[test]
+fn missing_manifest_reports_path() {
+    let dir = tmpdir("nomanifest");
+    let msg = format!("{:#}", open_err(&dir));
+    assert!(msg.contains("manifest"), "{msg}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_manifest_is_a_parse_error() {
+    let dir = tmpdir("truncated");
+    fs::write(dir.join("manifest.json"), &MINIMAL[..60]).unwrap();
+    let msg = format!("{:#}", open_err(&dir));
+    assert!(msg.contains("manifest"), "{msg}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_entry_with_missing_hlo_file_fails_at_load_not_open() {
+    let dir = tmpdir("missinghlo");
+    fs::write(dir.join("manifest.json"), MINIMAL).unwrap();
+    // open succeeds (lazy compilation)...
+    let rt = Runtime::open(&dir).unwrap();
+    assert_eq!(rt.artifacts().len(), 1);
+    // ...load fails with the artifact path in the error.
+    let err = match rt.load("k") {
+        Err(e) => e,
+        Ok(_) => panic!("load of missing HLO file must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("k.hlo.txt"), "{msg}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_hlo_text_fails_to_parse() {
+    let dir = tmpdir("badhlo");
+    fs::write(dir.join("manifest.json"), MINIMAL).unwrap();
+    fs::write(dir.join("k.hlo.txt"), "HloModule broken\n<<garbage>>\n").unwrap();
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.load("k").is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn schedule_with_inconsistent_fields_rejected() {
+    // A manifest whose schedule object is missing required fields.
+    let text = MINIMAL.replace(
+        r#""m": 2, "n": 2, "k": 2, "dtype_acc": "f32""#,
+        r#""schedule": {"name": "x"}"#,
+    )
+    .replace("\"baseline\"", "\"generated\"");
+    let err = parse_manifest(&text, std::path::Path::new(".")).unwrap_err();
+    assert!(err.0.contains("missing"), "{}", err.0);
+}
+
+#[test]
+fn negative_or_fractional_shapes_rejected() {
+    let text = MINIMAL.replace("[2, 2]", "[-2, 2]");
+    assert!(parse_manifest(&text, std::path::Path::new(".")).is_err());
+}
+
+#[test]
+fn unknown_dtype_rejected() {
+    let text = MINIMAL.replace("\"f32\"", "\"f8\"");
+    assert!(parse_manifest(&text, std::path::Path::new(".")).is_err());
+}

@@ -1,0 +1,264 @@
+//! Integration: PJRT runtime over real built artifacts.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially with a note) when the manifest is missing so `cargo test`
+//! stays meaningful on a fresh checkout.
+
+use std::path::PathBuf;
+
+use mlir_gemm::runtime::{ArtifactKind, Runtime, Tensor};
+use mlir_gemm::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Host-side reference matmul C = A@B + C (f64 accumulate).
+fn ref_matmul(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j] as f64;
+            for kk in 0..k {
+                acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    out
+}
+
+fn rel_err(got: &[f32], want: &[f32]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (g, w) in got.iter().zip(want) {
+        num += ((g - w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[test]
+fn manifest_loads_and_covers_every_kind() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let kinds: std::collections::HashSet<_> =
+        rt.artifacts().iter().map(|a| a.kind).collect();
+    for want in [
+        ArtifactKind::Generated,
+        ArtifactKind::Baseline,
+        ArtifactKind::Ablation,
+        ArtifactKind::Fused,
+        ArtifactKind::Unfused,
+        ArtifactKind::Hand,
+        ArtifactKind::Transformer,
+    ] {
+        assert!(kinds.contains(&want), "missing artifact kind {want:?}");
+    }
+}
+
+#[test]
+fn generated_kernel_matches_host_reference() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let meta = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Generated && a.problem == Some((256, 256, 256)))
+        .expect("256^3 generated artifact")
+        .clone();
+    let (m, n, k) = (256, 256, 256);
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.5).collect();
+    let c: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.5).collect();
+    let out = rt
+        .execute(
+            &meta.name,
+            &[
+                Tensor::new(vec![m, k], a.clone()).unwrap(),
+                Tensor::new(vec![k, n], b.clone()).unwrap(),
+                Tensor::new(vec![m, n], c.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    let want = ref_matmul(m, n, k, &a, &b, &c);
+    let err = rel_err(&out[0].data, &want);
+    // f16 inputs with f32 accumulate at K=256
+    assert!(err < 5e-3, "relative error {err}");
+}
+
+#[test]
+fn generated_agrees_with_library_baseline() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let generated = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Generated && a.problem == Some((256, 256, 256)))
+        .unwrap()
+        .clone();
+    let baseline = rt
+        .artifacts()
+        .iter()
+        .find(|a| {
+            a.kind == ArtifactKind::Baseline
+                && a.problem == Some((256, 256, 256))
+                && a.dtype_acc == Some(mlir_gemm::schedule::Dtype::F32)
+        })
+        .unwrap()
+        .clone();
+    let mut rng = Rng::new(2);
+    let inputs = vec![
+        Tensor::new(vec![256, 256], rng.normal_matrix(256, 256)).unwrap(),
+        Tensor::new(vec![256, 256], rng.normal_matrix(256, 256)).unwrap(),
+        Tensor::new(vec![256, 256], rng.normal_matrix(256, 256)).unwrap(),
+    ];
+    let ours = rt.execute(&generated.name, &inputs).unwrap();
+    let libr = rt.execute(&baseline.name, &inputs).unwrap();
+    let err = rel_err(&ours[0].data, &libr[0].data);
+    assert!(err < 1e-3, "ours vs library relative error {err}");
+}
+
+#[test]
+fn every_ablation_level_is_numerically_equivalent() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let mut ablations: Vec<_> = rt
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Ablation)
+        .cloned()
+        .collect();
+    ablations.sort_by_key(|a| a.schedule.as_ref().unwrap().opt_level);
+    assert_eq!(ablations.len(), 8, "expected the 8-level ladder");
+
+    let (m, n, k) = ablations[0].problem.unwrap();
+    let mut rng = Rng::new(3);
+    let inputs = vec![
+        Tensor::new(vec![m, k], rng.normal_matrix(m, k)).unwrap(),
+        Tensor::new(vec![k, n], rng.normal_matrix(k, n)).unwrap(),
+        Tensor::new(vec![m, n], rng.normal_matrix(m, n)).unwrap(),
+    ];
+    let reference = rt.execute(&ablations[7].name, &inputs).unwrap();
+    for abl in &ablations[..7] {
+        let out = rt.execute(&abl.name, &inputs).unwrap();
+        let err = rel_err(&out[0].data, &reference[0].data);
+        assert!(
+            err < 2e-3,
+            "ablation {} diverges from full pipeline: {err}",
+            abl.name
+        );
+    }
+}
+
+#[test]
+fn fused_equals_unfused_epilogue() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let fused = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Fused)
+        .unwrap()
+        .clone();
+    let unfused = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Unfused)
+        .unwrap()
+        .clone();
+    assert_eq!(fused.problem, unfused.problem);
+    let (m, n, k) = fused.problem.unwrap();
+    let mut rng = Rng::new(4);
+    let inputs = vec![
+        Tensor::new(vec![m, k], rng.normal_matrix(m, k)).unwrap(),
+        Tensor::new(vec![k, n], rng.normal_matrix(k, n)).unwrap(),
+        Tensor::new(vec![m, n], rng.normal_matrix(m, n)).unwrap(),
+        Tensor::new(vec![n], rng.normal_matrix(1, n)).unwrap(),
+    ];
+    let f = rt.execute(&fused.name, &inputs).unwrap();
+    let u = rt.execute(&unfused.name, &inputs).unwrap();
+    let err = rel_err(&f[0].data, &u[0].data);
+    assert!(err < 2e-3, "fused vs unfused relative error {err}");
+    assert!(f[0].data.iter().all(|&x| x >= 0.0), "ReLU output has negatives");
+}
+
+#[test]
+fn transformer_layer_executes_with_finite_output() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let meta = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Transformer)
+        .unwrap()
+        .clone();
+    let mut rng = Rng::new(5);
+    let inputs: Vec<Tensor> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let data: Vec<f32> = (0..spec.elements())
+                .map(|_| rng.normal() as f32 * 0.1)
+                .collect();
+            Tensor { shape: spec.shape.clone(), data }
+        })
+        .collect();
+    let out = rt.execute(&meta.name, &inputs).unwrap();
+    assert_eq!(out[0].shape, meta.outputs[0].shape);
+    assert!(out[0].data.iter().all(|x| x.is_finite()));
+    let norm: f64 = out[0].data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
+    assert!(norm > 0.0);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let name = &rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Baseline)
+        .unwrap()
+        .name
+        .clone();
+    let a1 = rt.load(name).unwrap();
+    let a2 = rt.load(name).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let meta = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Baseline)
+        .unwrap()
+        .clone();
+    let bad = vec![Tensor::zeros(vec![2, 2]); meta.inputs.len()];
+    let err = rt.execute(&meta.name, &bad).unwrap_err();
+    assert!(err.to_string().contains("does not match"));
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.execute("no_such_kernel", &[]).is_err());
+}
