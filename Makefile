@@ -1,0 +1,42 @@
+# Build/test entry points.  `make verify` mirrors the tier-1 CI check
+# exactly; everything else is developer convenience.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: verify build test pytest artifacts artifacts-quick bench-smoke lint fmt clean
+
+# Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
+verify:
+	$(CARGO) build --release && $(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+# AOT-lower the full artifact set (tprog descriptors + manifest) for the
+# Rust runtime's measured subsets and integration tests.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts --quick
+
+# Run every bench binary in thinned smoke mode so they cannot bit-rot.
+bench-smoke:
+	MLIR_GEMM_SMOKE=1 $(CARGO) bench
+
+lint:
+	$(CARGO) fmt --check && $(CARGO) clippy -- -D warnings
+
+fmt:
+	$(CARGO) fmt
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts reports python/**/__pycache__

@@ -1,15 +1,27 @@
-"""AOT lowering driver: jax graphs -> artifacts/*.hlo.txt + manifest.json.
+"""AOT lowering driver: jax graphs -> artifacts/*.tprog.json + manifest.json.
 
-HLO *text* (not serialized HloModuleProto) is the interchange format: jax
->= 0.5 emits protos with 64-bit instruction ids which the xla crate's
-xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
-reassigns ids, so text round-trips cleanly.  See /opt/xla-example and
-DESIGN.md.
+The interchange format with the Rust runtime is a *tensor-program
+descriptor* per artifact (``<name>.tprog.json``): a small JSON document
+naming the program's executable semantics (GEMM shape, precision modes,
+fused epilogue; or the transformer block's dimensions).  The offline
+Rust toolchain has no PJRT bindings, so its runtime executes these
+descriptors directly (``rust/src/runtime/exec.rs``) with the same
+precision structure the jax graphs encode (f32 at the boundary, dtype
+casts inside).  See DESIGN.md §3.
 
-The manifest records, for every artifact: the file, the input/output
-shapes and dtypes, the kind (generated | baseline | fused | unfused |
-hand | transformer), and — for generated kernels — the full Schedule the
-Rust simulator and autotuner consume.
+Every descriptor is cross-checked at write time against the actual jax
+graph via ``jax.eval_shape`` — a program whose declared I/O contract
+diverges from the traced computation fails here, and the Rust loader
+re-checks the same contract against the manifest at load time.
+
+HLO text export (``to_hlo_text``) is kept for provenance and for
+PJRT-capable environments; pass ``--hlo`` to emit ``<name>.hlo.txt``
+next to each descriptor.
+
+The manifest records, for every artifact: the program file, the
+input/output shapes and dtypes, the kind (generated | baseline |
+ablation | fused | unfused | hand | transformer), and — for generated
+kernels — the full Schedule the Rust simulator and autotuner consume.
 
 Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile
 target).  ``--quick`` lowers a reduced variant set for fast iteration.
@@ -20,15 +32,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
-from dataclasses import asdict
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax._src.lib import xla_client as xc
 
-from .kernels import generate_matmul_with_schedule, hand_optimized_matmul, jdtype
+from .kernels import generate_matmul_with_schedule, hand_optimized_matmul
 from .model import (
     matmul_baseline,
     transformer_layer,
@@ -37,9 +46,13 @@ from .model import (
 )
 from .tileir import PipelineConfig
 
+TPROG_FORMAT = "mlir-gemm-tprog-v1"
+
 
 def to_hlo_text(lowered) -> str:
-    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    """stablehlo -> XlaComputation -> HLO text (PJRT-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
@@ -52,54 +65,68 @@ def _shape_entry(s: jax.ShapeDtypeStruct) -> Dict:
     return {"shape": list(s.shape), "dtype": name}
 
 
-class ArtifactWriter:
-    def __init__(self, out_dir: str):
-        self.out_dir = out_dir
-        self.entries: List[Dict] = []
-        os.makedirs(out_dir, exist_ok=True)
-
-    def lower(
-        self,
-        name: str,
-        fn: Callable,
-        arg_shapes: Sequence[jax.ShapeDtypeStruct],
-        kind: str,
-        schedule: Optional[Dict] = None,
-        extra: Optional[Dict] = None,
-    ) -> None:
-        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
-        lowered = jax.jit(fn).lower(*arg_shapes)
-        text = to_hlo_text(lowered)
-        with open(path, "w") as f:
-            f.write(text)
-        out_shapes = [
-            _shape_entry(o) for o in jax.eval_shape(fn, *arg_shapes)
-        ]
-        entry = {
-            "name": name,
-            "file": f"{name}.hlo.txt",
-            "kind": kind,
-            "inputs": [_shape_entry(s) for s in arg_shapes],
-            "outputs": out_shapes,
-        }
-        if schedule is not None:
-            entry["schedule"] = schedule
-        if extra:
-            entry.update(extra)
-        self.entries.append(entry)
-        print(f"  wrote {path} ({len(text)} chars)")
-
-    def finish(self) -> None:
-        manifest = os.path.join(self.out_dir, "manifest.json")
-        with open(manifest, "w") as f:
-            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
-        print(f"manifest: {manifest} ({len(self.entries)} artifacts)")
+def gemm_program(
+    m: int,
+    n: int,
+    k: int,
+    dtype_in: str = "f16",
+    dtype_acc: str = "f32",
+    epilogue: str = "none",
+    fused: bool = True,
+) -> Dict:
+    """Descriptor for a C = A@B + C (+ epilogue) program."""
+    return {
+        "type": "gemm",
+        "m": m,
+        "n": n,
+        "k": k,
+        "dtype_in": dtype_in,
+        "dtype_acc": dtype_acc,
+        "epilogue": epilogue,
+        "fused": fused,
+    }
 
 
-def _mm_shapes(m, n, k, dtype_in, dtype_acc, bias=False):
-    """External I/O is always f32: the xla crate's F16 is a dummy type with
-    no literal constructors, so precision casts live *inside* the graph
-    (exactly like cuBLAS's internal TF32/f16 conversion modes)."""
+def transformer_program(
+    seq: int, d_model: int, d_ff: int, n_heads: int = 4, dtype_in: str = "f16"
+) -> Dict:
+    return {
+        "type": "transformer",
+        "seq": seq,
+        "d_model": d_model,
+        "d_ff": d_ff,
+        "n_heads": n_heads,
+        "dtype_in": dtype_in,
+    }
+
+
+def program_input_shapes(program: Dict) -> List[List[int]]:
+    """The I/O contract implied by a descriptor (mirror of
+    ``Program::input_shapes`` in rust/src/runtime/exec.rs)."""
+    if program["type"] == "gemm":
+        m, n, k = program["m"], program["n"], program["k"]
+        shapes = [[m, k], [k, n], [m, n]]
+        if program["epilogue"] != "none":
+            shapes.append([n])
+        return shapes
+    if program["type"] == "transformer":
+        s, dm, df = program["seq"], program["d_model"], program["d_ff"]
+        return [[s, dm], [dm, 3 * dm], [dm, dm], [dm, df], [df], [df, dm], [dm]]
+    raise ValueError(f"unknown program type {program['type']!r}")
+
+
+def program_output_shapes(program: Dict) -> List[List[int]]:
+    if program["type"] == "gemm":
+        return [[program["m"], program["n"]]]
+    if program["type"] == "transformer":
+        return [[program["seq"], program["d_model"]]]
+    raise ValueError(f"unknown program type {program['type']!r}")
+
+
+def _mm_shapes(m, n, k, bias=False):
+    """External I/O is always f32: precision casts live *inside* the
+    graphs (exactly like cuBLAS's internal TF32/f16 conversion modes),
+    and the Rust executor reproduces them from the descriptor."""
     f32 = jnp.float32
     shapes = [
         jax.ShapeDtypeStruct((m, k), f32),
@@ -120,6 +147,77 @@ def as_f32_io(fn):
     return wrapped
 
 
+class ArtifactWriter:
+    def __init__(self, out_dir: str, emit_hlo: bool = False):
+        self.out_dir = out_dir
+        self.emit_hlo = emit_hlo
+        self.entries: List[Dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def lower(
+        self,
+        name: str,
+        fn: Callable,
+        arg_shapes: Sequence[jax.ShapeDtypeStruct],
+        kind: str,
+        program: Dict,
+        schedule: Optional[Dict] = None,
+        extra: Optional[Dict] = None,
+    ) -> None:
+        out_shapes = [_shape_entry(o) for o in jax.eval_shape(fn, *arg_shapes)]
+        in_shapes = [_shape_entry(s) for s in arg_shapes]
+
+        # The descriptor must agree with the traced graph: this is the
+        # write-time half of the contract the Rust loader re-checks.
+        got_in = [e["shape"] for e in in_shapes]
+        got_out = [e["shape"] for e in out_shapes]
+        if got_in != program_input_shapes(program):
+            raise ValueError(
+                f"{name}: graph inputs {got_in} disagree with program "
+                f"contract {program_input_shapes(program)}"
+            )
+        if got_out != program_output_shapes(program):
+            raise ValueError(
+                f"{name}: graph outputs {got_out} disagree with program "
+                f"contract {program_output_shapes(program)}"
+            )
+
+        file_name = f"{name}.tprog.json"
+        path = os.path.join(self.out_dir, file_name)
+        with open(path, "w") as f:
+            json.dump(
+                {"format": TPROG_FORMAT, "name": name, "program": program},
+                f,
+                indent=1,
+            )
+
+        entry = {
+            "name": name,
+            "file": file_name,
+            "kind": kind,
+            "inputs": in_shapes,
+            "outputs": out_shapes,
+        }
+        if self.emit_hlo:
+            hlo_name = f"{name}.hlo.txt"
+            text = to_hlo_text(jax.jit(fn).lower(*arg_shapes))
+            with open(os.path.join(self.out_dir, hlo_name), "w") as f:
+                f.write(text)
+            entry["hlo_file"] = hlo_name
+        if schedule is not None:
+            entry["schedule"] = schedule
+        if extra:
+            entry.update(extra)
+        self.entries.append(entry)
+        print(f"  wrote {path}")
+
+    def finish(self) -> None:
+        manifest = os.path.join(self.out_dir, "manifest.json")
+        with open(manifest, "w") as f:
+            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
+        print(f"manifest: {manifest} ({len(self.entries)} artifacts)")
+
+
 def _emit_generated(w: ArtifactWriter, config: PipelineConfig, kind="generated"):
     kernel, sched = generate_matmul_with_schedule(config)
     bias = config.epilogue != "none"
@@ -137,9 +235,16 @@ def _emit_generated(w: ArtifactWriter, config: PipelineConfig, kind="generated")
     w.lower(
         sched.name,
         as_f32_io(fn),
-        _mm_shapes(config.m, config.n, config.k, config.dtype_in,
-                   config.dtype_acc, bias),
+        _mm_shapes(config.m, config.n, config.k, bias),
         kind=kind,
+        program=gemm_program(
+            config.m,
+            config.n,
+            config.k,
+            config.dtype_in,
+            config.dtype_acc,
+            config.epilogue,
+        ),
         schedule=sched.to_json_dict(),
     )
 
@@ -149,8 +254,9 @@ def _emit_baseline(w: ArtifactWriter, m, n, k, dtype_in="f16", dtype_acc="f32"):
     w.lower(
         f"baseline_m{m}n{n}k{k}_{dtype_in}_{dtype_acc}",
         fn,
-        _mm_shapes(m, n, k, dtype_in, dtype_acc),
+        _mm_shapes(m, n, k),
         kind="baseline",
+        program=gemm_program(m, n, k, dtype_in, dtype_acc),
         extra={"m": m, "n": n, "k": k, "dtype_in": dtype_in, "dtype_acc": dtype_acc},
     )
 
@@ -165,8 +271,8 @@ def tile_candidates(size: int):
     return cands
 
 
-def build_all(out_dir: str, quick: bool = False) -> None:
-    w = ArtifactWriter(out_dir)
+def build_all(out_dir: str, quick: bool = False, emit_hlo: bool = False) -> None:
+    w = ArtifactWriter(out_dir, emit_hlo=emit_hlo)
 
     sweep_sizes = [256] if quick else [256, 512, 1024]
     print("== generated + baseline matmuls (fig2 real-execution subset) ==")
@@ -209,8 +315,11 @@ def build_all(out_dir: str, quick: bool = False) -> None:
     w.lower(
         f"unfused_m{fsize}n{fsize}k{fsize}_f16_f32",
         fn,
-        _mm_shapes(fsize, fsize, fsize, "f16", "f32", bias=True),
+        _mm_shapes(fsize, fsize, fsize, bias=True),
         kind="unfused",
+        program=gemm_program(
+            fsize, fsize, fsize, "f16", "f32", epilogue="bias_relu", fused=False
+        ),
         extra={"m": fsize, "n": fsize, "k": fsize,
                "dtype_in": "f16", "dtype_acc": "f32"},
     )
@@ -225,8 +334,9 @@ def build_all(out_dir: str, quick: bool = False) -> None:
     w.lower(
         f"hand_m{hsize}n{hsize}k{hsize}_f16_f32",
         hand_fn,
-        _mm_shapes(hsize, hsize, hsize, "f16", "f32"),
+        _mm_shapes(hsize, hsize, hsize),
         kind="hand",
+        program=gemm_program(hsize, hsize, hsize, "f16", "f32"),
         extra={"m": hsize, "n": hsize, "k": hsize,
                "dtype_in": "f16", "dtype_acc": "f32"},
     )
@@ -241,6 +351,7 @@ def build_all(out_dir: str, quick: bool = False) -> None:
         as_f32_io(layer),
         transformer_layer_inputs(**dims),
         kind="transformer",
+        program=transformer_program(**dims),
         extra=dims,
     )
 
@@ -251,8 +362,12 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--quick", action="store_true", help="reduced variant set")
+    ap.add_argument(
+        "--hlo", action="store_true",
+        help="also emit HLO text next to each program descriptor",
+    )
     args = ap.parse_args()
-    build_all(args.out_dir, quick=args.quick)
+    build_all(args.out_dir, quick=args.quick, emit_hlo=args.hlo)
 
 
 if __name__ == "__main__":

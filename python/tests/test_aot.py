@@ -1,14 +1,28 @@
-"""AOT pipeline tests: HLO text interchange + manifest integrity."""
+"""AOT pipeline tests: tensor-program interchange + manifest integrity.
+
+The artifact contract (DESIGN.md §3): one ``*.tprog.json`` program
+descriptor per artifact plus a ``manifest.json`` index; HLO text is an
+optional provenance side-channel (``--hlo``).
+"""
 
 import json
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from compile.aot import ArtifactWriter, as_f32_io, to_hlo_text, tile_candidates
+from compile.aot import (
+    TPROG_FORMAT,
+    ArtifactWriter,
+    as_f32_io,
+    gemm_program,
+    program_input_shapes,
+    program_output_shapes,
+    tile_candidates,
+    to_hlo_text,
+    transformer_program,
+)
 from compile.model import matmul_baseline
 from compile.tileir import PipelineConfig
 from compile.kernels import generate_matmul
@@ -37,22 +51,49 @@ class TestHloText:
         fn = as_f32_io(matmul_baseline(32, 32, 32))
         shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
         text = to_hlo_text(jax.jit(fn).lower(*shapes))
-        # return_tuple=True: the entry root is a tuple (rust unwraps to_tuple1)
+        # return_tuple=True: the entry root is a tuple
         assert "(f32[32,32]" in text.replace(" ", "")
 
 
+class TestProgramDescriptors:
+    def test_gemm_contract_shapes(self):
+        p = gemm_program(64, 32, 16)
+        assert program_input_shapes(p) == [[64, 16], [16, 32], [64, 32]]
+        assert program_output_shapes(p) == [[64, 32]]
+        p = gemm_program(8, 8, 8, epilogue="bias_relu")
+        assert program_input_shapes(p)[-1] == [8]
+
+    def test_transformer_contract_shapes(self):
+        p = transformer_program(seq=128, d_model=256, d_ff=512)
+        ins = program_input_shapes(p)
+        assert ins[0] == [128, 256]
+        assert ins[1] == [256, 768]
+        assert len(ins) == 7
+        assert program_output_shapes(p) == [[128, 256]]
+
+    def test_unknown_type_rejected(self):
+        with pytest.raises(ValueError):
+            program_input_shapes({"type": "conv2d"})
+
+
 class TestArtifactWriter:
-    def test_writes_file_and_manifest(self, tmp_path):
+    def test_writes_program_and_manifest(self, tmp_path):
         w = ArtifactWriter(str(tmp_path))
         fn = as_f32_io(matmul_baseline(32, 32, 32))
         shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
-        w.lower("t0", fn, shapes, kind="baseline", extra={"m": 32})
+        w.lower("t0", fn, shapes, kind="baseline",
+                program=gemm_program(32, 32, 32), extra={"m": 32})
         w.finish()
-        assert (tmp_path / "t0.hlo.txt").exists()
+        prog = json.loads((tmp_path / "t0.tprog.json").read_text())
+        assert prog["format"] == TPROG_FORMAT
+        assert prog["name"] == "t0"
+        assert prog["program"]["type"] == "gemm"
+        assert prog["program"]["dtype_in"] == "f16"
         manifest = json.loads((tmp_path / "manifest.json").read_text())
         assert manifest["version"] == 1
         e = manifest["artifacts"][0]
         assert e["name"] == "t0"
+        assert e["file"] == "t0.tprog.json"
         assert e["kind"] == "baseline"
         assert e["m"] == 32
         assert e["inputs"][0] == {"shape": [32, 32], "dtype": "f32"}
@@ -68,6 +109,7 @@ class TestArtifactWriter:
         fn = as_f32_io(lambda a, b, c: (kernel(a, b, c),))
         shapes = [jax.ShapeDtypeStruct((64, 64), jnp.float32)] * 3
         w.lower(sched.name, fn, shapes, kind="generated",
+                program=gemm_program(64, 64, 64),
                 schedule=sched.to_json_dict())
         w.finish()
         manifest = json.loads((tmp_path / "manifest.json").read_text())
@@ -75,6 +117,27 @@ class TestArtifactWriter:
         assert s["tile_tb"] == [32, 32, 32]
         assert s["opt_level"] == 7
         assert s["grid"] == [2, 2]
+
+    def test_program_graph_mismatch_rejected(self, tmp_path):
+        # A descriptor whose contract disagrees with the traced graph
+        # must fail at write time, not at Rust load time.
+        w = ArtifactWriter(str(tmp_path))
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        with pytest.raises(ValueError, match="disagree"):
+            w.lower("t0", fn, shapes, kind="baseline",
+                    program=gemm_program(64, 64, 64))
+
+    def test_hlo_side_channel(self, tmp_path):
+        w = ArtifactWriter(str(tmp_path), emit_hlo=True)
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        w.lower("t0", fn, shapes, kind="baseline",
+                program=gemm_program(32, 32, 32))
+        w.finish()
+        assert (tmp_path / "t0.hlo.txt").read_text().startswith("HloModule")
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["artifacts"][0]["hlo_file"] == "t0.hlo.txt"
 
 
 class TestTileCandidates:
@@ -117,3 +180,13 @@ class TestBuiltArtifacts:
         for e in self._manifest()["artifacts"]:
             for s in e["inputs"] + e["outputs"]:
                 assert s["dtype"] == "f32", e["name"]
+
+    def test_every_program_parses_and_matches_manifest(self):
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for e in self._manifest()["artifacts"]:
+            prog = json.load(open(os.path.join(base, e["file"])))
+            assert prog["format"] == TPROG_FORMAT, e["name"]
+            assert prog["name"] == e["name"]
+            want_in = program_input_shapes(prog["program"])
+            got_in = [s["shape"] for s in e["inputs"]]
+            assert got_in == want_in, e["name"]

@@ -10,7 +10,8 @@ use mlir_gemm::schedule::Dtype;
 use mlir_gemm::sim::{simulate, DeviceModel};
 
 fn main() {
-    let sizes: Vec<usize> = (1024..=16384).step_by(1024).collect();
+    let step = if bench_common::smoke() { 4096 } else { 1024 };
+    let sizes: Vec<usize> = (1024..=16384).step_by(step).collect();
     for device in [DeviceModel::rtx3090(), DeviceModel::a100()] {
         println!("##### device: {} #####", device.name);
         let f = figure_sweep(&device, Dtype::F32, &sizes, "fig2_device_ablation");

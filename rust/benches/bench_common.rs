@@ -6,8 +6,36 @@
 
 use std::path::PathBuf;
 
-use mlir_gemm::harness::FigureOutput;
+use mlir_gemm::harness::{BenchConfig, FigureOutput};
 use mlir_gemm::runtime::Runtime;
+
+/// True when `MLIR_GEMM_SMOKE` is set to anything but ""/"0": `make
+/// bench-smoke` sets it so every bench runs a thinned sweep and cannot
+/// silently bit-rot.
+pub fn smoke() -> bool {
+    std::env::var("MLIR_GEMM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The fig2/fig4 size sweep: the paper's full 1024..=16384 step 256, or
+/// a thin subset in smoke mode.
+pub fn sweep_sizes() -> Vec<usize> {
+    if smoke() {
+        (1024..=16384).step_by(4096).collect()
+    } else {
+        mlir_gemm::harness::paper_sizes()
+    }
+}
+
+/// Measurement protocol for the measured (artifact-backed) subsets.
+pub fn bench_config() -> BenchConfig {
+    if smoke() {
+        BenchConfig { warmup: 1, iters: 2 }
+    } else {
+        BenchConfig::default()
+    }
+}
 
 pub fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

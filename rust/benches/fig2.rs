@@ -1,21 +1,26 @@
 //! Figure 2 reproduction: mixed-precision (f16 in, f32 accumulate) TFLOPs
-//! vs cuBLAS across square sizes 1024..16384 step 256.
+//! vs cuBLAS across square sizes 1024..16384 step 256 (thinned under
+//! `MLIR_GEMM_SMOKE=1`).
 //!
 //! Simulated sweep on the modeled RTX 3090 (the paper's testbed) plus the
-//! measured real-execution subset through the PJRT runtime.
+//! measured real-execution subset through the artifact runtime.
 
 mod bench_common;
 
-use mlir_gemm::harness::{figure2, figure_sweep_measured, BenchConfig};
+use mlir_gemm::harness::{figure2_sized, figure_sweep_measured};
 use mlir_gemm::schedule::Dtype;
 use mlir_gemm::sim::DeviceModel;
 
 fn main() {
     let device = DeviceModel::rtx3090();
-    bench_common::emit(&figure2(&device));
+    bench_common::emit(&figure2_sized(&device, &bench_common::sweep_sizes()));
     if let Some(rt) = bench_common::open_runtime() {
-        match figure_sweep_measured(&rt, Dtype::F32, BenchConfig::default(), "figure2_measured")
-        {
+        match figure_sweep_measured(
+            &rt,
+            Dtype::F32,
+            bench_common::bench_config(),
+            "figure2_measured",
+        ) {
             Ok(out) => bench_common::emit(&out),
             Err(e) => eprintln!("measured subset failed: {e:#}"),
         }

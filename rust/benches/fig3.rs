@@ -4,14 +4,14 @@
 
 mod bench_common;
 
-use mlir_gemm::harness::{figure3, figure3_measured, BenchConfig};
+use mlir_gemm::harness::{figure3, figure3_measured};
 use mlir_gemm::sim::DeviceModel;
 
 fn main() {
     let device = DeviceModel::rtx3090();
     bench_common::emit(&figure3(&device));
     if let Some(rt) = bench_common::open_runtime() {
-        match figure3_measured(&rt, BenchConfig::default()) {
+        match figure3_measured(&rt, bench_common::bench_config()) {
             Ok(out) => bench_common::emit(&out),
             Err(e) => eprintln!("measured ablation failed: {e:#}"),
         }

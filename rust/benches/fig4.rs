@@ -1,19 +1,23 @@
 //! Figure 4 reproduction: half-precision (f16 throughout) TFLOPs vs
 //! cuBLAS across square sizes, including the library's inconsistent
-//! behaviour beyond N=8848 (§4.2).
+//! behaviour beyond N=8848 (§4.2).  Thinned under `MLIR_GEMM_SMOKE=1`.
 
 mod bench_common;
 
-use mlir_gemm::harness::{figure4, figure_sweep_measured, BenchConfig};
+use mlir_gemm::harness::{figure4_sized, figure_sweep_measured};
 use mlir_gemm::schedule::Dtype;
 use mlir_gemm::sim::DeviceModel;
 
 fn main() {
     let device = DeviceModel::rtx3090();
-    bench_common::emit(&figure4(&device));
+    bench_common::emit(&figure4_sized(&device, &bench_common::sweep_sizes()));
     if let Some(rt) = bench_common::open_runtime() {
-        match figure_sweep_measured(&rt, Dtype::F16, BenchConfig::default(), "figure4_measured")
-        {
+        match figure_sweep_measured(
+            &rt,
+            Dtype::F16,
+            bench_common::bench_config(),
+            "figure4_measured",
+        ) {
             Ok(out) => bench_common::emit(&out),
             Err(e) => eprintln!("measured subset failed: {e:#}"),
         }

@@ -4,13 +4,13 @@
 
 mod bench_common;
 
-use mlir_gemm::harness::{table1, BenchConfig};
+use mlir_gemm::harness::table1;
 use mlir_gemm::sim::DeviceModel;
 
 fn main() {
     let device = DeviceModel::rtx3090();
     match bench_common::open_runtime() {
-        Some(rt) => match table1(&rt, &device, BenchConfig::default()) {
+        Some(rt) => match table1(&rt, &device, bench_common::bench_config()) {
             Ok(out) => bench_common::emit(&out),
             Err(e) => {
                 eprintln!("table1 failed: {e:#}");

@@ -175,6 +175,7 @@ mod tests {
             outputs: vec![],
             schedule: sched,
             problem: problem.or(Some((256, 256, 256))),
+            dtype_in: Some(Dtype::F16),
             dtype_acc: acc,
         }
     }

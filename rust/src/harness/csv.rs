@@ -28,23 +28,22 @@ impl CsvTable {
         self.rows.push(cells);
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        out.push_str(&escape_row(&self.header));
-        out.push('\n');
-        for r in &self.rows {
-            out.push_str(&escape_row(r));
-            out.push('\n');
-        }
-        out
-    }
-
     pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_string().as_bytes())
+    }
+}
+
+impl std::fmt::Display for CsvTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", escape_row(&self.header))?;
+        for r in &self.rows {
+            writeln!(f, "{}", escape_row(r))?;
+        }
+        Ok(())
     }
 }
 
@@ -121,7 +120,7 @@ mod tests {
     }
 
     #[test]
-    fn writes_file(    ) {
+    fn writes_file() {
         let dir = std::env::temp_dir().join("mlir_gemm_csv_test");
         let path = dir.join("t.csv");
         let mut t = CsvTable::new(&["a"]);

@@ -9,7 +9,8 @@ pub mod plot;
 pub use bench::{bench_artifact, measure, random_inputs, ArtifactBench, BenchConfig};
 pub use csv::{pretty, CsvTable};
 pub use figures::{
-    ablation_schedule, figure2, figure3, figure3_measured, figure4, figure_sweep,
-    figure_sweep_measured, paper_sizes, table1, FigureOutput, ABLATION_LABELS,
+    ablation_schedule, figure2, figure2_sized, figure3, figure3_measured, figure4,
+    figure4_sized, figure_sweep, figure_sweep_measured, paper_sizes, table1,
+    FigureOutput, ABLATION_LABELS,
 };
 pub use plot::{bar_chart, line_chart};

@@ -7,7 +7,8 @@
 //! * L1/L2 live in `python/` (tile-IR pipeline, Pallas kernels, jax
 //!   graphs) and run only at build time (`make artifacts`);
 //! * this crate is L3 plus the substitute testbed:
-//!   - [`runtime`]     — PJRT CPU client executing the AOT artifacts;
+//!   - [`runtime`]     — loader + in-process executor for the AOT
+//!     tensor-program artifacts;
 //!   - [`coordinator`] — GEMM service: registry, router, batcher, workers;
 //!   - [`sim`]         — analytic RTX 3090 model (the paper's hardware);
 //!   - [`autotune`]    — tile-space search over the model;

@@ -1,0 +1,791 @@
+//! Tensor-program executor: the in-process engine behind [`crate::runtime`].
+//!
+//! The AOT interchange format is a small JSON *program descriptor*
+//! (`*.tprog.json`, emitted by `python/compile/aot.py`) rather than a
+//! compiled binary: the offline vendor set has no PJRT bindings, so the
+//! run-time side executes the artifact's declared semantics directly on
+//! the host.  Precision behaviour mirrors the generated kernels: GEMM
+//! inputs are rounded to `dtype_in` (f16/bf16 round-to-nearest-even at
+//! the bit level), products are accumulated in f32, and outputs are
+//! rounded to `dtype_acc` before the f32 artifact boundary — the same
+//! in-graph cast structure `aot.py` builds around every kernel.
+//!
+//! Supported program types:
+//!
+//! * `gemm` — `C = cast(A) @ cast(B) + C` with an optional fused (or
+//!   deliberately unfused) `bias` / `bias_relu` epilogue;
+//! * `transformer` — the BERT-style encoder block of
+//!   `python/compile/model.py::transformer_layer`, every GEMM routed
+//!   through the same precision emulation.
+
+use crate::schedule::Dtype;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Result};
+
+use super::Tensor;
+
+/// Format tag every artifact program file must carry.
+pub const TPROG_FORMAT: &str = "mlir-gemm-tprog-v1";
+
+// ---------------------------------------------------------------------------
+// Precision emulation
+// ---------------------------------------------------------------------------
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN-ness with a quiet payload bit).
+        let payload = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | payload;
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // Normal half: drop 13 mantissa bits with RNE; mantissa carry
+        // correctly bumps the exponent (and saturates to inf at e = 15).
+        let half_exp = (e + 15) as u32;
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | ((half_exp << 10) + m) as u16;
+    }
+    if e >= -25 {
+        // Subnormal half.
+        let full = man | 0x0080_0000; // 24-bit mantissa with implicit bit
+        let shift = 13 + (-14 - e) as u32;
+        let mut m = full >> shift;
+        let halfway = 1u32 << (shift - 1);
+        let rem = full & ((1u32 << shift) - 1);
+        if rem > halfway || (rem == halfway && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | m as u16; // may round up into the smallest normal
+    }
+    sign // underflow to signed zero
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize into f32's implicit-bit form.
+            let mut e = 113u32; // will end <= 112 after >= 1 shift
+            let mut m = man << 13;
+            while m & 0x0080_0000 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | (m & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 and back (the kernel's input cast).
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round an f32 through bfloat16 and back (round-to-nearest-even).
+pub fn round_bf16(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let mut hi = bits >> 16;
+    let rem = bits & 0xffff;
+    if rem > 0x8000 || (rem == 0x8000 && (hi & 1) == 1) {
+        hi += 1;
+    }
+    f32::from_bits(hi << 16)
+}
+
+/// Round a value to the given storage dtype (identity for f32).
+pub fn round_to(dtype: Dtype, x: f32) -> f32 {
+    match dtype {
+        Dtype::F16 => round_f16(x),
+        Dtype::Bf16 => round_bf16(x),
+        Dtype::F32 => x,
+    }
+}
+
+fn cast_slice(dtype: Dtype, v: &[f32]) -> Vec<f32> {
+    match dtype {
+        Dtype::F32 => v.to_vec(),
+        Dtype::F16 => v.iter().map(|&x| round_f16(x)).collect(),
+        Dtype::Bf16 => v.iter().map(|&x| round_bf16(x)).collect(),
+    }
+}
+
+/// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
+/// accumulate (matches `preferred_element_type=f32`; f16 accumulation is
+/// approximated by rounding at the epilogue boundary).
+fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program descriptor
+// ---------------------------------------------------------------------------
+
+/// Fused epilogue of a GEMM program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Epilogue {
+    None,
+    Bias,
+    BiasRelu,
+}
+
+impl Epilogue {
+    pub fn parse(s: &str) -> Option<Epilogue> {
+        match s {
+            "none" => Some(Epilogue::None),
+            "bias" => Some(Epilogue::Bias),
+            "bias_relu" => Some(Epilogue::BiasRelu),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Epilogue::None => "none",
+            Epilogue::Bias => "bias",
+            Epilogue::BiasRelu => "bias_relu",
+        }
+    }
+
+    pub fn needs_bias(self) -> bool {
+        !matches!(self, Epilogue::None)
+    }
+}
+
+/// Executable semantics of one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Program {
+    Gemm {
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype_in: Dtype,
+        dtype_acc: Dtype,
+        epilogue: Epilogue,
+        /// `false` for the deliberately-unfused Table 1 comparator: the
+        /// epilogue runs as a second pass after the output cast instead
+        /// of on the accumulator.
+        fused: bool,
+    },
+    Transformer {
+        seq: usize,
+        d_model: usize,
+        d_ff: usize,
+        n_heads: usize,
+        dtype_in: Dtype,
+    },
+}
+
+impl Program {
+    /// Parse a `*.tprog.json` artifact file, checking the format tag and
+    /// that the descriptor belongs to the expected artifact.
+    pub fn from_text(text: &str, expected_name: &str) -> Result<Program> {
+        let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let format = root.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != TPROG_FORMAT {
+            bail!("unsupported program format {format:?} (want {TPROG_FORMAT})");
+        }
+        let name = root.get("name").and_then(Json::as_str).unwrap_or("");
+        if name != expected_name {
+            bail!("program is for artifact {name:?}, expected {expected_name:?}");
+        }
+        let prog = root
+            .get("program")
+            .ok_or_else(|| anyhow!("missing program object"))?;
+        Program::from_json(prog)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Program> {
+        let get_u = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing/invalid field {f:?}"))
+        };
+        let get_d = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .ok_or_else(|| anyhow!("missing/invalid dtype field {f:?}"))
+        };
+        match j.get("type").and_then(Json::as_str) {
+            Some("gemm") => {
+                let epilogue = j
+                    .get("epilogue")
+                    .and_then(Json::as_str)
+                    .and_then(Epilogue::parse)
+                    .ok_or_else(|| anyhow!("missing/invalid epilogue"))?;
+                Ok(Program::Gemm {
+                    m: get_u("m")?,
+                    n: get_u("n")?,
+                    k: get_u("k")?,
+                    dtype_in: get_d("dtype_in")?,
+                    dtype_acc: get_d("dtype_acc")?,
+                    epilogue,
+                    fused: j.get("fused").and_then(Json::as_bool).unwrap_or(true),
+                })
+            }
+            Some("transformer") => Ok(Program::Transformer {
+                seq: get_u("seq")?,
+                d_model: get_u("d_model")?,
+                d_ff: get_u("d_ff")?,
+                n_heads: get_u("n_heads")?,
+                dtype_in: get_d("dtype_in")?,
+            }),
+            Some(other) => bail!("unknown program type {other:?}"),
+            None => bail!("program object missing \"type\""),
+        }
+    }
+
+    /// Input tensor shapes in call order (all f32 at the boundary).
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            Program::Gemm { m, n, k, epilogue, .. } => {
+                let mut shapes = vec![vec![m, k], vec![k, n], vec![m, n]];
+                if epilogue.needs_bias() {
+                    shapes.push(vec![n]);
+                }
+                shapes
+            }
+            Program::Transformer { seq, d_model, d_ff, .. } => vec![
+                vec![seq, d_model],          // x
+                vec![d_model, 3 * d_model],  // w_qkv
+                vec![d_model, d_model],      // w_out
+                vec![d_model, d_ff],         // w_up
+                vec![d_ff],                  // b_up
+                vec![d_ff, d_model],         // w_dn
+                vec![d_model],               // b_dn
+            ],
+        }
+    }
+
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            Program::Gemm { m, n, .. } => vec![vec![m, n]],
+            Program::Transformer { seq, d_model, .. } => vec![vec![seq, d_model]],
+        }
+    }
+
+    /// Execute on host tensors.  Shapes are validated against the
+    /// program's own contract; the runtime additionally validates against
+    /// the manifest before calling this.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let want = self.input_shapes();
+        if inputs.len() != want.len() {
+            bail!("program expects {} inputs, got {}", want.len(), inputs.len());
+        }
+        for (i, (t, w)) in inputs.iter().zip(&want).enumerate() {
+            if &t.shape != w {
+                bail!("program input {i} has shape {:?}, want {w:?}", t.shape);
+            }
+        }
+        match *self {
+            Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } => {
+                let out = exec_gemm(
+                    &inputs[0].data,
+                    &inputs[1].data,
+                    &inputs[2].data,
+                    inputs.get(3).map(|t| t.data.as_slice()),
+                    m,
+                    n,
+                    k,
+                    dtype_in,
+                    dtype_acc,
+                    epilogue,
+                    fused,
+                );
+                Ok(vec![Tensor { shape: vec![m, n], data: out }])
+            }
+            Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } => {
+                let out = exec_transformer(inputs, seq, d_model, d_ff, n_heads, dtype_in);
+                Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn exec_gemm(
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype_in: Dtype,
+    dtype_acc: Dtype,
+    epilogue: Epilogue,
+    fused: bool,
+) -> Vec<f32> {
+    let a16 = cast_slice(dtype_in, a);
+    let b16 = cast_slice(dtype_in, b);
+    let mut acc = cast_slice(dtype_acc, c);
+    matmul_acc(&mut acc, &a16, &b16, m, n, k);
+    if !fused {
+        // Unfused comparator: the GEMM output takes a full trip through
+        // the f32 artifact boundary before the epilogue pass.
+        for v in acc.iter_mut() {
+            *v = round_to(dtype_acc, *v);
+        }
+    }
+    match (epilogue, bias) {
+        (Epilogue::None, _) => {}
+        (Epilogue::Bias, Some(bias)) => {
+            for row in acc.chunks_mut(n) {
+                for (v, &bv) in row.iter_mut().zip(bias) {
+                    *v += bv;
+                }
+            }
+        }
+        (Epilogue::BiasRelu, Some(bias)) => {
+            for row in acc.chunks_mut(n) {
+                for (v, &bv) in row.iter_mut().zip(bias) {
+                    *v = (*v + bv).max(0.0);
+                }
+            }
+        }
+        // Unreachable after shape validation; keep the output defined.
+        (_, None) => {}
+    }
+    for v in acc.iter_mut() {
+        *v = round_to(dtype_acc, *v);
+    }
+    acc
+}
+
+/// GEMM with inputs rounded to `dtype_in`, f32 accumulate, no C term.
+fn gemm_cast(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, dtype_in: Dtype) -> Vec<f32> {
+    let a16 = cast_slice(dtype_in, a);
+    let b16 = cast_slice(dtype_in, b);
+    let mut out = vec![0.0f32; m * n];
+    matmul_acc(&mut out, &a16, &b16, m, n, k);
+    out
+}
+
+/// Mirror of `python/compile/model.py::transformer_layer` (f32 host math,
+/// `dtype_in` rounding on every pipeline-GEMM input).
+fn exec_transformer(
+    inputs: &[Tensor],
+    seq: usize,
+    d_model: usize,
+    d_ff: usize,
+    n_heads: usize,
+    dtype_in: Dtype,
+) -> Vec<f32> {
+    let x = &inputs[0].data;
+    let w_qkv = &inputs[1].data;
+    let w_out = &inputs[2].data;
+    let w_up = &inputs[3].data;
+    let b_up = &inputs[4].data;
+    let w_dn = &inputs[5].data;
+    let b_dn = &inputs[6].data;
+    let d_head = d_model / n_heads;
+    let d3 = 3 * d_model;
+
+    // QKV projection.
+    let qkv = gemm_cast(x, w_qkv, seq, d3, d_model, dtype_in);
+
+    // Scaled dot-product attention per head (plain f32, like the jnp glue).
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut ctx = vec![0.0f32; seq * d_model];
+    let mut scores = vec![0.0f32; seq];
+    for h in 0..n_heads {
+        let q_off = h * d_head;
+        let k_off = d_model + h * d_head;
+        let v_off = 2 * d_model + h * d_head;
+        for i in 0..seq {
+            for (j, s) in scores.iter_mut().enumerate() {
+                let mut dot = 0.0f32;
+                for dd in 0..d_head {
+                    dot += qkv[i * d3 + q_off + dd] * qkv[j * d3 + k_off + dd];
+                }
+                *s = dot * scale;
+            }
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                denom += *s;
+            }
+            for dd in 0..d_head {
+                let mut acc = 0.0f32;
+                for (j, &p) in scores.iter().enumerate() {
+                    acc += p * qkv[j * d3 + v_off + dd];
+                }
+                ctx[i * d_model + q_off + dd] = acc / denom;
+            }
+        }
+    }
+
+    // Attention output projection + residual.
+    let attn_out = gemm_cast(&ctx, w_out, seq, d_model, d_model, dtype_in);
+    let mut h_res = vec![0.0f32; seq * d_model];
+    for ((hv, &xv), &av) in h_res.iter_mut().zip(x).zip(&attn_out) {
+        *hv = xv + av;
+    }
+
+    // Pre-FFN layer norm.
+    let mut hn = vec![0.0f32; seq * d_model];
+    for (hn_row, h_row) in hn.chunks_mut(d_model).zip(h_res.chunks(d_model)) {
+        let mu = h_row.iter().sum::<f32>() / d_model as f32;
+        let var =
+            h_row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d_model as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (o, &v) in hn_row.iter_mut().zip(h_row) {
+            *o = (v - mu) * inv;
+        }
+    }
+
+    // FFN up (fused bias+ReLU) and down (fused bias), then the residual.
+    let mut up = gemm_cast(&hn, w_up, seq, d_ff, d_model, dtype_in);
+    for row in up.chunks_mut(d_ff) {
+        for (v, &bv) in row.iter_mut().zip(b_up) {
+            *v = (*v + bv).max(0.0);
+        }
+    }
+    let mut dn = gemm_cast(&up, w_dn, seq, d_model, d_ff, dtype_in);
+    for row in dn.chunks_mut(d_model) {
+        for (v, &bv) in row.iter_mut().zip(b_dn) {
+            *v += bv;
+        }
+    }
+    for (o, &hv) in dn.iter_mut().zip(&h_res) {
+        *o += hv;
+    }
+    dn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    // -- precision emulation -----------------------------------------------
+
+    #[test]
+    fn f16_round_exact_values() {
+        // Values verified against numpy.float16.
+        assert_eq!(round_f16(1.0), 1.0);
+        assert_eq!(round_f16(-2.5), -2.5);
+        assert_eq!(round_f16(0.1), 0.099_975_586);
+        assert_eq!(round_f16(1e-7), 1.192_092_9e-7); // subnormal
+        assert_eq!(round_f16(65519.0), 65504.0); // below rounding midpoint
+        assert_eq!(round_f16(65520.0), f32::INFINITY);
+        assert_eq!(round_f16(1e-8), 0.0); // below half the smallest subnormal
+        assert_eq!(round_f16(1e-30), 0.0); // underflow
+        assert_eq!(round_f16(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 2049 is exactly halfway between 2048 and 2050 in f16; RNE picks
+        // the even mantissa (2048).  2051 is halfway to 2052 -> 2052.
+        assert_eq!(round_f16(2049.0), 2048.0);
+        assert_eq!(round_f16(2051.0), 2052.0);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_idempotent() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = (rng.next_f64() as f32 - 0.5) * 100.0;
+            let once = round_f16(x);
+            assert_eq!(round_f16(once), once, "{x}");
+            assert!((once - x).abs() <= x.abs() * 1e-3 + 1e-7, "{x} -> {once}");
+        }
+    }
+
+    #[test]
+    fn f16_nan_stays_nan() {
+        assert!(round_f16(f32::NAN).is_nan());
+        assert_eq!(round_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_f16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_round_exact_values() {
+        // Values verified against jax.numpy.bfloat16.
+        assert_eq!(round_bf16(1.0), 1.0);
+        assert_eq!(round_bf16(0.1), 0.100_097_656);
+        assert_eq!(round_bf16(3.141_592_7), 3.140_625);
+        assert!(round_bf16(f32::NAN).is_nan());
+    }
+
+    // -- program descriptor -------------------------------------------------
+
+    fn gemm_tprog() -> String {
+        r#"{
+            "format": "mlir-gemm-tprog-v1",
+            "name": "g1",
+            "program": {
+                "type": "gemm", "m": 4, "n": 4, "k": 4,
+                "dtype_in": "f16", "dtype_acc": "f32",
+                "epilogue": "none", "fused": true
+            }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_gemm_program() {
+        let p = Program::from_text(&gemm_tprog(), "g1").unwrap();
+        assert_eq!(
+            p,
+            Program::Gemm {
+                m: 4,
+                n: 4,
+                k: 4,
+                dtype_in: Dtype::F16,
+                dtype_acc: Dtype::F32,
+                epilogue: Epilogue::None,
+                fused: true,
+            }
+        );
+        assert_eq!(p.input_shapes(), vec![vec![4, 4]; 3]);
+        assert_eq!(p.output_shapes(), vec![vec![4, 4]]);
+    }
+
+    #[test]
+    fn rejects_wrong_name_format_and_garbage() {
+        assert!(Program::from_text(&gemm_tprog(), "other").is_err());
+        let bad = gemm_tprog().replace("tprog-v1", "tprog-v9");
+        assert!(Program::from_text(&bad, "g1").is_err());
+        assert!(Program::from_text("HloModule broken\n<<garbage>>\n", "g1").is_err());
+        let untyped = gemm_tprog().replace("\"type\": \"gemm\",", "");
+        assert!(Program::from_text(&untyped, "g1").is_err());
+    }
+
+    #[test]
+    fn bias_epilogue_extends_input_contract() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 3,
+            k: 2,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        };
+        assert_eq!(
+            p.input_shapes(),
+            vec![vec![2, 2], vec![2, 3], vec![2, 3], vec![3]]
+        );
+    }
+
+    // -- gemm execution ------------------------------------------------------
+
+    fn t(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor { shape, data }
+    }
+
+    #[test]
+    fn gemm_identity_and_c_accumulation() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 2,
+            k: 2,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let a = t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let id = t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let c = t(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        let out = p.execute(&[a, id, c]).unwrap();
+        assert_eq!(out[0].data, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn gemm_bias_relu_clamps_negatives() {
+        let p = Program::Gemm {
+            m: 1,
+            n: 2,
+            k: 1,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        };
+        let out = p
+            .execute(&[
+                t(vec![1, 1], vec![1.0]),
+                t(vec![1, 2], vec![-5.0, 5.0]),
+                t(vec![1, 2], vec![0.0, 0.0]),
+                t(vec![2], vec![1.0, 1.0]),
+            ])
+            .unwrap();
+        assert_eq!(out[0].data, vec![0.0, 6.0]);
+    }
+
+    #[test]
+    fn gemm_f16_inputs_match_f64_reference_closely() {
+        let (m, n, k) = (16, 16, 16);
+        let mut rng = Rng::new(3);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let p = Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let out = p
+            .execute(&[
+                t(vec![m, k], a.clone()),
+                t(vec![k, n], b.clone()),
+                t(vec![m, n], c.clone()),
+            ])
+            .unwrap();
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = c[i * n + j] as f64;
+                for kk in 0..k {
+                    want += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                let got = out[0].data[i * n + j] as f64;
+                num += (got - want) * (got - want);
+                den += want * want;
+            }
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 2e-3, "relative error {rel}");
+    }
+
+    #[test]
+    fn gemm_rejects_wrong_shapes_and_counts() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 2,
+            k: 2,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let bad = vec![t(vec![2, 2], vec![0.0; 4]); 2];
+        assert!(p.execute(&bad).is_err());
+        let wrong = vec![t(vec![2, 3], vec![0.0; 6]); 3];
+        assert!(p.execute(&wrong).is_err());
+    }
+
+    #[test]
+    fn f16_accumulate_output_is_f16_representable() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 2,
+            k: 2,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F16,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let out = p
+            .execute(&[
+                t(vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]),
+                t(vec![2, 2], vec![0.5, 0.6, 0.7, 0.8]),
+                t(vec![2, 2], vec![0.0; 4]),
+            ])
+            .unwrap();
+        for &v in &out[0].data {
+            assert_eq!(v, round_f16(v), "{v} not f16-representable");
+        }
+    }
+
+    // -- transformer ---------------------------------------------------------
+
+    fn transformer_inputs(seq: usize, d_model: usize, d_ff: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut mk = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            Tensor { shape, data }
+        };
+        vec![
+            mk(vec![seq, d_model]),
+            mk(vec![d_model, 3 * d_model]),
+            mk(vec![d_model, d_model]),
+            mk(vec![d_model, d_ff]),
+            mk(vec![d_ff]),
+            mk(vec![d_ff, d_model]),
+            mk(vec![d_model]),
+        ]
+    }
+
+    fn transformer_program() -> Program {
+        Program::Transformer {
+            seq: 8,
+            d_model: 16,
+            d_ff: 32,
+            n_heads: 4,
+            dtype_in: Dtype::F16,
+        }
+    }
+
+    #[test]
+    fn transformer_output_finite_and_shaped() {
+        let p = transformer_program();
+        let inputs = transformer_inputs(8, 16, 32, 9);
+        let out = p.execute(&inputs).unwrap();
+        assert_eq!(out[0].shape, vec![8, 16]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+        let norm: f64 = out[0].data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!(norm > 0.0);
+    }
+
+    #[test]
+    fn transformer_zero_weights_is_identity() {
+        // All-zero weights: attention context and FFN vanish, both
+        // residual connections pass x through exactly.
+        let p = transformer_program();
+        let mut inputs = transformer_inputs(8, 16, 32, 10);
+        for t in inputs.iter_mut().skip(1) {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let out = p.execute(&inputs).unwrap();
+        assert_eq!(out[0].data, inputs[0].data);
+    }
+}

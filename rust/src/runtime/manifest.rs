@@ -54,6 +54,7 @@ pub struct ArtifactMeta {
     pub schedule: Option<Schedule>,
     /// Present for baseline/unfused/hand entries.
     pub problem: Option<(usize, usize, usize)>,
+    pub dtype_in: Option<Dtype>,
     pub dtype_acc: Option<Dtype>,
 }
 
@@ -133,6 +134,11 @@ pub fn parse_manifest(text: &str, base_dir: &Path) -> Result<Vec<ArtifactMeta>, 
                 (Some(m), Some(n), Some(k)) => Some((m, n, k)),
                 _ => schedule.as_ref().map(|s| (s.m, s.n, s.k)),
             };
+            let dtype_in = a
+                .get("dtype_in")
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .or_else(|| schedule.as_ref().map(|s| s.dtype_in));
             let dtype_acc = a
                 .get("dtype_acc")
                 .and_then(Json::as_str)
@@ -146,6 +152,7 @@ pub fn parse_manifest(text: &str, base_dir: &Path) -> Result<Vec<ArtifactMeta>, 
                 outputs: specs(a, "outputs")?,
                 schedule,
                 problem,
+                dtype_in,
                 dtype_acc,
             })
         })
@@ -185,6 +192,7 @@ mod tests {
         let a = &arts[0];
         assert_eq!(a.kind, ArtifactKind::Baseline);
         assert_eq!(a.problem, Some((256, 256, 256)));
+        assert_eq!(a.dtype_in, Some(Dtype::F16));
         assert_eq!(a.dtype_acc, Some(Dtype::F32));
         assert_eq!(a.path, Path::new("/tmp/a/baseline.hlo.txt"));
         assert_eq!(a.inputs[0].elements(), 256 * 256);

@@ -1,19 +1,31 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//! Artifact runtime: loads AOT tensor programs and executes them in
+//! process.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` -> `HloModuleProto::
-//! from_text_file` -> `client.compile` -> `execute`.  All artifact I/O is
-//! f32 row-major (precision casts live inside the graphs — see aot.py), so
-//! the host-side tensor type is a plain `Vec<f32>` + shape.
+//! The interchange contract with the Python pipeline (see DESIGN.md §3)
+//! is `artifacts/manifest.json` plus one `*.tprog.json` program
+//! descriptor per artifact, both emitted by `python -m compile.aot`.
+//! The manifest carries the structural metadata (kind, I/O specs, the
+//! full [`crate::schedule::Schedule`] for generated kernels); the
+//! program file carries the executable semantics.  The loader
+//! cross-checks the two, so a pipeline change that breaks the contract
+//! fails at `load` time with a precise message instead of producing
+//! wrong numbers.
+//!
+//! All artifact I/O is f32 row-major (precision casts live inside the
+//! programs — see aot.py), so the host-side tensor type is a plain
+//! `Vec<f32>` + shape.
 
+pub mod exec;
 pub mod manifest;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+pub use exec::{Epilogue, Program};
 pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
 
 /// A host-side f32 tensor (row-major).
@@ -46,20 +58,27 @@ impl Tensor {
     }
 }
 
-/// One compiled executable plus its manifest entry.
+/// One loaded artifact: manifest entry + validated executable program.
+#[derive(Debug)]
 pub struct LoadedArtifact {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
+    program: Program,
+}
+
+impl LoadedArtifact {
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
 }
 
 /// Execution statistics for one call.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecTiming {
-    /// Host->device literal construction + transfer.
+    /// Input validation + staging (host-side; near zero in-process).
     pub pack_seconds: f64,
-    /// Kernel execution (the paper's "kernel runtime").
+    /// Program execution (the paper's "kernel runtime").
     pub exec_seconds: f64,
-    /// Device->host fetch + unpack.
+    /// Output materialization.
     pub unpack_seconds: f64,
 }
 
@@ -69,39 +88,29 @@ impl ExecTiming {
     }
 }
 
-/// The PJRT runtime: one CPU client + a cache of compiled artifacts.
+/// The runtime: a manifest plus a cache of loaded artifact programs.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    loaded: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+    loaded: Mutex<HashMap<String, Arc<LoadedArtifact>>>,
     metas: Vec<ArtifactMeta>,
 }
-
-// The underlying PJRT CPU client is thread-safe; the xla crate just doesn't
-// mark its opaque pointers Send/Sync.  The coordinator executes from worker
-// threads through &self only.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-unsafe impl Send for LoadedArtifact {}
-unsafe impl Sync for LoadedArtifact {}
 
 impl Runtime {
     /// Create a runtime over an artifacts directory (reads the manifest).
     pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
         let metas = load_manifest(artifacts_dir)
             .map_err(|e| anyhow!("{e}"))
-            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
-        let client = xla::PjRtClient::cpu()?;
+            .with_context(|| {
+                format!("loading manifest from {}", artifacts_dir.display())
+            })?;
         Ok(Runtime {
-            client,
             loaded: Mutex::new(HashMap::new()),
             metas,
         })
     }
 
-    /// Create an empty runtime (tests can register HLO files directly).
+    /// Create an empty runtime (tests can exercise programs directly).
     pub fn without_manifest() -> Result<Runtime> {
         Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
             loaded: Mutex::new(HashMap::new()),
             metas: Vec::new(),
         })
@@ -115,8 +124,9 @@ impl Runtime {
         self.metas.iter().find(|m| m.name == name)
     }
 
-    /// Compile (or fetch the cached) artifact by name.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedArtifact>> {
+    /// Load (or fetch the cached) artifact by name: read the program
+    /// file, parse it, and cross-check it against the manifest entry.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
         {
             let cache = self.loaded.lock().unwrap();
             if let Some(a) = cache.get(name) {
@@ -127,7 +137,12 @@ impl Runtime {
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
             .clone();
-        let arc = std::sync::Arc::new(self.compile_meta(meta)?);
+        let text = std::fs::read_to_string(&meta.path)
+            .with_context(|| format!("reading artifact program {}", meta.path.display()))?;
+        let program = Program::from_text(&text, &meta.name)
+            .with_context(|| format!("parsing artifact program {}", meta.path.display()))?;
+        check_contract(&meta, &program)?;
+        let arc = Arc::new(LoadedArtifact { meta, program });
         self.loaded
             .lock()
             .unwrap()
@@ -135,7 +150,7 @@ impl Runtime {
         Ok(arc)
     }
 
-    /// Eagerly compile every artifact of the given kinds.
+    /// Eagerly load every artifact of the given kinds.
     pub fn preload(&self, kinds: &[ArtifactKind]) -> Result<usize> {
         let names: Vec<String> = self
             .metas
@@ -149,17 +164,6 @@ impl Runtime {
         Ok(names.len())
     }
 
-    fn compile_meta(&self, meta: ArtifactMeta) -> Result<LoadedArtifact> {
-        let proto = xla::HloModuleProto::from_text_file(&meta.path)
-            .with_context(|| format!("parsing HLO text {}", meta.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", meta.name))?;
-        Ok(LoadedArtifact { meta, exe })
-    }
-
     /// Execute a loaded artifact on host tensors, with phase timings.
     pub fn execute_timed(
         &self,
@@ -167,6 +171,7 @@ impl Runtime {
         inputs: &[Tensor],
     ) -> Result<(Vec<Tensor>, ExecTiming)> {
         let meta = &artifact.meta;
+        let t0 = Instant::now();
         if inputs.len() != meta.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -185,39 +190,22 @@ impl Runtime {
                 );
             }
         }
-
-        let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data).reshape(&dims)
-            })
-            .collect::<Result<Vec<_>, _>>()?;
         let t1 = Instant::now();
 
-        let result = artifact.exe.execute::<xla::Literal>(&literals)?;
-        let root = result[0][0].to_literal_sync()?;
+        let outputs = artifact
+            .program
+            .execute(inputs)
+            .with_context(|| format!("executing {}", meta.name))?;
         let t2 = Instant::now();
 
-        // return_tuple=True: the root literal is a tuple of outputs.
-        let parts = root.to_tuple()?;
-        if parts.len() != meta.outputs.len() {
+        if outputs.len() != meta.outputs.len() {
             bail!(
-                "{}: expected {} outputs, got {}",
+                "{}: program produced {} outputs, manifest declares {}",
                 meta.name,
-                meta.outputs.len(),
-                parts.len()
+                outputs.len(),
+                meta.outputs.len()
             );
         }
-        let outputs = parts
-            .into_iter()
-            .zip(&meta.outputs)
-            .map(|(lit, spec)| {
-                let data = lit.to_vec::<f32>()?;
-                Tensor::new(spec.shape.clone(), data)
-            })
-            .collect::<Result<Vec<_>>>()?;
         let t3 = Instant::now();
 
         Ok((
@@ -237,9 +225,75 @@ impl Runtime {
     }
 }
 
+/// The manifest's declared I/O and precision fields must agree with the
+/// program's contract.
+fn check_contract(meta: &ArtifactMeta, program: &Program) -> Result<()> {
+    let want_in = program.input_shapes();
+    let got_in: Vec<Vec<usize>> = meta.inputs.iter().map(|s| s.shape.clone()).collect();
+    if got_in != want_in {
+        bail!(
+            "{}: manifest inputs {got_in:?} disagree with program contract {want_in:?}",
+            meta.name
+        );
+    }
+    let want_out = program.output_shapes();
+    let got_out: Vec<Vec<usize>> = meta.outputs.iter().map(|s| s.shape.clone()).collect();
+    if got_out != want_out {
+        bail!(
+            "{}: manifest outputs {got_out:?} disagree with program contract {want_out:?}",
+            meta.name
+        );
+    }
+    // Precision/epilogue/fusion agreement: the registry and figure
+    // builders route by the manifest's fields while execution follows
+    // the program's — a mismatch would silently measure the wrong mode.
+    if let Program::Gemm { dtype_in, dtype_acc, epilogue, fused, .. } = program {
+        if let Some(din) = meta.dtype_in {
+            if din != *dtype_in {
+                bail!(
+                    "{}: manifest dtype_in {} disagrees with program {}",
+                    meta.name,
+                    din.name(),
+                    dtype_in.name()
+                );
+            }
+        }
+        if let Some(acc) = meta.dtype_acc {
+            if acc != *dtype_acc {
+                bail!(
+                    "{}: manifest dtype_acc {} disagrees with program {}",
+                    meta.name,
+                    acc.name(),
+                    dtype_acc.name()
+                );
+            }
+        }
+        if let Some(s) = &meta.schedule {
+            if s.epilogue != epilogue.name() {
+                bail!(
+                    "{}: schedule epilogue {:?} disagrees with program {:?}",
+                    meta.name,
+                    s.epilogue,
+                    epilogue.name()
+                );
+            }
+        }
+        let want_fused = meta.kind != ArtifactKind::Unfused;
+        if *fused != want_fused {
+            bail!(
+                "{}: manifest kind {:?} disagrees with program fused={fused}",
+                meta.name,
+                meta.kind
+            );
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::Dtype;
 
     #[test]
     fn tensor_shape_check() {
@@ -250,11 +304,102 @@ mod tests {
 
     #[test]
     fn tensor_matches_spec() {
-        use crate::schedule::Dtype;
         let t = Tensor::zeros(vec![2, 2]);
         let good = TensorSpec { shape: vec![2, 2], dtype: Dtype::F32 };
         let bad = TensorSpec { shape: vec![2, 3], dtype: Dtype::F32 };
         assert!(t.matches(&good));
         assert!(!t.matches(&bad));
+    }
+
+    fn write_artifact(dir: &Path, manifest: &str, file: &str, content: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join(file), content).unwrap();
+    }
+
+    const GEMM_MANIFEST: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "g",
+          "file": "g.tprog.json",
+          "kind": "baseline",
+          "inputs": [
+            {"shape": [2, 2], "dtype": "f32"},
+            {"shape": [2, 2], "dtype": "f32"},
+            {"shape": [2, 2], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [2, 2], "dtype": "f32"}],
+          "m": 2, "n": 2, "k": 2, "dtype_in": "f32", "dtype_acc": "f32"
+        }
+      ]
+    }"#;
+
+    const GEMM_TPROG: &str = r#"{
+      "format": "mlir-gemm-tprog-v1",
+      "name": "g",
+      "program": {
+        "type": "gemm", "m": 2, "n": 2, "k": 2,
+        "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none"
+      }
+    }"#;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mlir_gemm_rt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn end_to_end_load_and_execute() {
+        let dir = tmpdir("e2e");
+        write_artifact(&dir, GEMM_MANIFEST, "g.tprog.json", GEMM_TPROG);
+        let rt = Runtime::open(&dir).unwrap();
+        let out = rt
+            .execute(
+                "g",
+                &[
+                    Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+                    Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+                    Tensor::new(vec![2, 2], vec![0.5, 0.5, 0.5, 0.5]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].data, vec![1.5, 2.5, 3.5, 4.5]);
+        // cache: second load returns the same Arc
+        let a1 = rt.load("g").unwrap();
+        let a2 = rt.load("g").unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_program_mismatch_rejected_at_load() {
+        let dir = tmpdir("mismatch");
+        // Program claims 4x4 while the manifest declares 2x2 I/O (shape
+        // fields only — a blanket digit replace would corrupt "f32").
+        let bad = GEMM_TPROG
+            .replace("\"m\": 2", "\"m\": 4")
+            .replace("\"n\": 2", "\"n\": 4")
+            .replace("\"k\": 2", "\"k\": 4");
+        write_artifact(&dir, GEMM_MANIFEST, "g.tprog.json", &bad);
+        let rt = Runtime::open(&dir).unwrap();
+        let err = rt.load("g").unwrap_err();
+        assert!(format!("{err:#}").contains("disagree"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_program_dtype_mismatch_rejected_at_load() {
+        let dir = tmpdir("dtype_mismatch");
+        // Same shapes, different accumulate precision: must fail at load
+        // so measured figures can't silently run in the wrong mode.
+        let bad = GEMM_TPROG.replace("\"dtype_acc\": \"f32\"", "\"dtype_acc\": \"f16\"");
+        write_artifact(&dir, GEMM_MANIFEST, "g.tprog.json", &bad);
+        let rt = Runtime::open(&dir).unwrap();
+        let err = rt.load("g").unwrap_err();
+        assert!(format!("{err:#}").contains("dtype_acc"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -124,7 +124,7 @@ mod tests {
     }
 
     #[test]
-    fn library_beats_generated_slightly_on_large_mixed(    ) {
+    fn library_beats_generated_slightly_on_large_mixed() {
         use super::super::model::simulate;
         let lib = simulate_library(8192, 8192, 8192, Dtype::F32, &d());
         let ours = simulate(

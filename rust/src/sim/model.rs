@@ -242,9 +242,8 @@ pub fn simulate_with_eff(s: &Schedule, d: &DeviceModel, compute_eff: f64) -> Sim
     let mut seconds = total_cycles / d.clock_hz;
 
     // Hard ceilings: device-wide bandwidth and compute roofs.
-    let total_global_bytes = s.blocks() as f64
-        * (k_iters * global_bytes_per_iter + c_bytes)
-        + 0.0;
+    let total_global_bytes =
+        s.blocks() as f64 * (k_iters * global_bytes_per_iter + c_bytes);
     seconds = seconds.max(total_global_bytes / d.hbm_bytes_per_sec);
     let peak = if s.wmma {
         d.peak_tc_flops(s.dtype_acc)

@@ -98,13 +98,8 @@ impl Json {
         Some((arr[0].as_usize()?, arr[1].as_usize()?))
     }
 
-    // -- writer ------------------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
+    // -- writer (via `Display`; `to_string()` comes from the blanket
+    // `ToString` impl) -----------------------------------------------------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -141,6 +136,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -426,5 +429,77 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn writer_escapes_round_trip() {
+        // Control characters, quotes, backslashes, and non-ASCII all
+        // survive a write -> parse cycle.
+        let v = obj(vec![
+            ("ctrl", s("a\u{1}b\tc\nd\re")),
+            ("quote", s("say \"hi\" \\ done")),
+            ("uni", s("π ≈ 3.14159")),
+        ]);
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+        // control chars are emitted as escapes, not raw bytes
+        assert!(text.contains("\\u0001"));
+        assert!(text.contains("\\n"));
+    }
+
+    #[test]
+    fn deep_nesting_round_trips() {
+        let mut v = Json::Num(1.0);
+        for _ in 0..64 {
+            v = Json::Arr(vec![v, Json::Bool(true)]);
+        }
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn number_forms_round_trip() {
+        for src in [
+            "0", "-0", "123456789012", "-1", "0.5", "-2.25", "1e3", "1E3",
+            "2.5e-3", "-7.25e+2",
+        ] {
+            let v = parse(src).unwrap();
+            let back = parse(&v.to_string()).unwrap();
+            assert_eq!(v, back, "{src}");
+        }
+        // integers below 2^53 print without an exponent or fraction
+        assert_eq!(parse("123456789012").unwrap().to_string(), "123456789012");
+    }
+
+    #[test]
+    fn accessors_are_typed() {
+        let v = parse(r#"{"n": 1, "s": "x", "b": true, "a": [], "o": {}}"#).unwrap();
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("n").unwrap().as_str(), None);
+        assert_eq!(v.get("s").unwrap().as_f64(), None);
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("a").unwrap().as_arr().map(|a| a.len()), Some(0));
+        assert!(v.get("o").unwrap().as_obj().unwrap().is_empty());
+        assert!(v.get("missing").is_none());
+        // negative numbers refuse to become usize
+        assert_eq!(parse("-3").unwrap().as_usize(), None);
+        assert_eq!(parse("-3").unwrap().as_i64(), Some(-3));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for src in [
+            "", "{", "[", "\"unterminated", "{\"a\" 1}", "[1 2]", "tru",
+            "nul", "+1", "01x", "{\"a\":1,}", "\"bad \\q escape\"",
+        ] {
+            assert!(parse(src).is_err(), "{src:?} should fail");
+        }
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let v = parse(" {\n\t\"a\" : [ 1 , 2 ] ,\r\n \"b\" : null } ").unwrap();
+        assert_eq!(v.get_usize2("a"), Some((1, 2)));
+        assert_eq!(v.get("b"), Some(&Json::Null));
     }
 }

@@ -146,4 +146,70 @@ mod tests {
         let mut f2 = r.fork();
         assert_ne!(f1.next_u64(), f2.next_u64());
     }
+
+    #[test]
+    fn golden_values_pin_the_generator() {
+        // xoshiro256++ with the SplitMix64 expansion of seed 42, computed
+        // by an independent implementation.  Pins cross-version stability:
+        // every seeded workload in the repo depends on these streams.
+        let mut r = Rng::new(42);
+        assert_eq!(r.next_u64(), 0xefdb3abe2d004720);
+        assert_eq!(r.next_u64(), 0x74285db8cad01896);
+        assert_eq!(r.next_u64(), 0xe6026692c15933c2);
+    }
+
+    #[test]
+    fn fork_is_deterministic_given_parent_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let mut fa = a.fork();
+        let mut fb = b.fork();
+        for _ in 0..50 {
+            assert_eq!(fa.next_u64(), fb.next_u64());
+        }
+        // parent streams also stay in lockstep after forking
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_one_is_always_zero() {
+        let mut r = Rng::new(11);
+        for _ in 0..100 {
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn range_hits_both_endpoints() {
+        let mut r = Rng::new(12);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..1000 {
+            let v = r.range(-3, 3);
+            assert!((-3..=3).contains(&v));
+            lo_seen |= v == -3;
+            hi_seen |= v == 3;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_matrix_has_expected_len_and_determinism() {
+        let m1 = Rng::new(13).normal_matrix(4, 6);
+        let m2 = Rng::new(13).normal_matrix(4, 6);
+        assert_eq!(m1.len(), 24);
+        assert_eq!(m1, m2);
+        assert!(m1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn choice_draws_every_item() {
+        let items: [usize; 4] = [1, 2, 3, 4];
+        let mut r = Rng::new(14);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[*r.choice(&items) - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
 }

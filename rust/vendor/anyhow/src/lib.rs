@@ -1,0 +1,194 @@
+//! Offline in-repo shim for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this workspace vendors
+//! the small slice of the anyhow API its code actually uses: the opaque
+//! [`Error`] type with a context chain, the [`Result`] alias, the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  Semantics mirror the real crate where it matters:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   joins the whole chain with `": "`;
+//! * `Debug` prints the message plus a `Caused by:` list;
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`;
+//! * `Error` itself does NOT implement `std::error::Error` (exactly like
+//!   the real crate, which frees the blanket `From` impl).
+
+use std::fmt;
+
+/// Context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (for tests/diagnostics).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding context to fallible results (and options).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let err = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(err).context("reading store")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "reading store");
+        assert_eq!(format!("{e:#}"), "reading store: gone");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = io_fail().unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_construct_and_bail() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", 42);
+        }
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(inner(true).unwrap_err().to_string(), "unreachable 42");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "12x".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.with_context(|| "missing thing").unwrap_err();
+        assert_eq!(e.root_cause(), "missing thing");
+    }
+}
