@@ -4,6 +4,9 @@
 //! (several shapes, fused and plain epilogues, occasional baseline routes)
 //! from multiple client threads, and prints the latency/throughput report
 //! — the serving-paper-style end-to-end driver of DESIGN.md.
+//!
+//! `--devices N` serves over a pool of N device contexts: large GEMMs
+//! shard across the pool and the report gains per-device load lines.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -13,17 +16,39 @@ use anyhow::{anyhow, Result};
 use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
 use mlir_gemm::runtime::{Runtime, Tensor};
 use mlir_gemm::sim::DeviceModel;
+use mlir_gemm::util::cli::{usage, Args, Spec};
 use mlir_gemm::util::prng::Rng;
 
+const SPEC: &[Spec] = &[
+    ("devices", true, "device contexts; >1 shards large GEMMs (default 1)"),
+    ("help", false, "show usage"),
+];
+
 fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, SPEC).map_err(|e| anyhow!("{e}"))?;
+    if args.flag("help") {
+        println!("{}", usage("gemm_server", "GEMM serving example", SPEC));
+        return Ok(());
+    }
+    let devices = args.get_usize("devices", 1)?;
+
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Arc::new(Runtime::open(&dir)?);
     let device = DeviceModel::rtx3090();
-    println!("starting server (profile-guided variant re-ranking on)...");
+    println!(
+        "starting server ({devices} device context(s), profile-guided variant \
+         re-ranking on)..."
+    );
     let server = Arc::new(Server::start(
         rt,
         &device,
-        ServerConfig { workers: 4, rerank_measured: true, ..Default::default() },
+        ServerConfig {
+            workers: 4,
+            devices,
+            rerank_measured: true,
+            ..Default::default()
+        },
     ));
 
     let keys: Vec<GemmKey> = server.registry().keys().cloned().collect();

@@ -24,7 +24,7 @@ fn main() {
     let rt = Arc::new(rt);
     let device = DeviceModel::rtx3090();
     let size = 512usize;
-    let server = Server::start(
+    let mut server = Server::start(
         rt.clone(),
         &device,
         ServerConfig { rerank_measured: true, ..Default::default() },

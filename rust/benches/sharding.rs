@@ -1,0 +1,111 @@
+//! Sharded multi-device scaling curve: one GEMM split across 1..=8
+//! device contexts ([`mlir_gemm::coordinator::ShardPool`]), measured
+//! speedup against the modeled speedup from the per-device performance
+//! models.  The device contexts are host threads here, so the measured
+//! curve reflects the real fan-out/reduce overheads of the sharding
+//! engine while the modeled curve reflects the paper's GPU.
+
+mod bench_common;
+
+use mlir_gemm::coordinator::{modeled_speedup, ShardPlan, ShardPool};
+use mlir_gemm::harness::{bar_chart, measure, CsvTable, FigureOutput};
+use mlir_gemm::runtime::{Epilogue, Program, Tensor};
+use mlir_gemm::schedule::{Dtype, Schedule};
+use mlir_gemm::sim::DeviceModel;
+use mlir_gemm::util::prng::Rng;
+
+fn main() {
+    let size: usize = if bench_common::smoke() { 256 } else { 1024 };
+    let (m, n, k) = (size, size, size);
+    let cfg = bench_common::bench_config();
+    let device_counts = [1usize, 2, 4, 8];
+
+    let program = Program::Gemm {
+        m,
+        n,
+        k,
+        dtype_in: Dtype::F16,
+        dtype_acc: Dtype::F32,
+        epilogue: Epilogue::None,
+        fused: true,
+    };
+    let schedule =
+        Schedule::optimized(m, n, k, Dtype::F32, (64, 64, 64), (32, 32, 32))
+            .expect("bench size must fit the tile");
+    let mut rng = Rng::new(5);
+    let a = Tensor { shape: vec![m, k], data: rng.normal_matrix(m, k) };
+    let b = Tensor { shape: vec![k, n], data: rng.normal_matrix(k, n) };
+    let c = Tensor::zeros(vec![m, n]);
+
+    let mut table = CsvTable::new(&[
+        "devices",
+        "p50_seconds",
+        "measured_speedup",
+        "modeled_speedup",
+        "max_mean_shard_sec",
+    ]);
+    let mut bars: Vec<(String, f64)> = Vec::new();
+    let mut baseline_p50 = 0.0f64;
+    let mut reference: Option<Tensor> = None;
+
+    for &devices in &device_counts {
+        let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), devices);
+        let plan = ShardPlan::rows(m, n, k, devices, 1);
+        // correctness guard: every width must produce the 1-device result
+        let out = pool
+            .execute(&program, &plan, &a, &b, &c, None)
+            .expect("sharded execution failed");
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_eq!(
+                r.data, out.data,
+                "{devices}-device result drifted from 1-device"
+            ),
+        }
+        let summary = measure(cfg, || {
+            pool.execute(&program, &plan, &a, &b, &c, None).map(|_| ())
+        })
+        .expect("measurement failed");
+        let stats = pool.shutdown();
+        // Mean per-shard execution time on the busiest device: comparable
+        // to p50_seconds (busy_sec alone would sum warmup + every
+        // iteration).
+        let busiest = stats
+            .iter()
+            .filter(|s| s.tasks > 0)
+            .map(|s| s.busy_sec / s.tasks as f64)
+            .fold(0.0f64, f64::max);
+        if devices == 1 {
+            baseline_p50 = summary.p50;
+        }
+        let measured_speedup = baseline_p50 / summary.p50.max(1e-12);
+        let models: Vec<DeviceModel> = vec![DeviceModel::rtx3090(); devices];
+        let modeled = modeled_speedup(&schedule, &plan, &models);
+        table.row(vec![
+            devices.to_string(),
+            format!("{:.6}", summary.p50),
+            format!("{measured_speedup:.3}"),
+            format!("{modeled:.3}"),
+            format!("{busiest:.6}"),
+        ]);
+        bars.push((format!("{devices} dev"), measured_speedup));
+    }
+
+    let bar_refs: Vec<(&str, f64)> =
+        bars.iter().map(|(l, v)| (l.as_str(), *v)).collect();
+    let chart = bar_chart(
+        &format!("measured speedup, {size}^3 row-sharded GEMM"),
+        &bar_refs,
+        40,
+    );
+    let output = FigureOutput {
+        name: "sharding_scaling",
+        table,
+        chart,
+        summary: format!(
+            "row-sharded {size}^3 GEMM across 1..=8 device contexts; \
+             measured vs modeled speedup (modeled: per-device rtx3090)"
+        ),
+    };
+    bench_common::emit(&output);
+}

@@ -62,22 +62,19 @@ impl<T> Batcher<T> {
 
     /// Form the next batch at time `now`.
     ///
-    /// Policy: take the variant at the head of the queue (FIFO fairness),
-    /// pull up to `max_batch` requests for that same variant (preserving
-    /// their relative order), leave everything else queued.  If the head
-    /// request is younger than `max_wait` and the batch is not full, the
-    /// caller may wait — signalled by `BatchDecision::Wait`.
+    /// Policy: scan the distinct variants in queue order (the head variant
+    /// first — it always holds the oldest deadline) and release the first
+    /// one that is *ready*: either `max_batch` items are queued for it, or
+    /// its oldest item has aged past `max_wait`.  Scanning past the head
+    /// fixes cross-variant head-of-line blocking: a full batch for variant
+    /// B queued behind a young lone request for variant A must not sit
+    /// blocked inside A's batching window.  FIFO order is preserved within
+    /// each variant, and the head variant cannot starve — its deadline
+    /// expires first and the scan always considers it first.
     pub fn next_batch(&mut self, now: Instant) -> BatchDecision<T> {
-        let Some(head) = self.queue.front() else {
+        if self.queue.is_empty() {
             return BatchDecision::Idle;
-        };
-        let head_variant = head.variant.clone();
-        let head_age = now.duration_since(head.enqueued_at);
-        let same_variant = self
-            .queue
-            .iter()
-            .filter(|q| q.variant == head_variant)
-            .count();
+        }
         // A lone request with nothing behind it gains nothing from the
         // batch window: the dispatcher drains the submit channel before
         // calling us, so any burst is already visible in the queue.
@@ -86,28 +83,43 @@ impl<T> Batcher<T> {
         if self.queue.len() == 1 {
             let item = self.queue.pop_front().unwrap();
             return BatchDecision::Run {
-                variant: head_variant,
+                variant: item.variant.clone(),
                 batch: vec![item],
             };
         }
-        if same_variant < self.cfg.max_batch && head_age < self.cfg.max_wait {
-            return BatchDecision::Wait(self.cfg.max_wait - head_age);
+        // Per-variant tally in first-occurrence (queue) order.
+        let mut tally: Vec<(&str, usize, Instant)> = Vec::new();
+        for q in &self.queue {
+            match tally.iter_mut().find(|(v, _, _)| *v == q.variant) {
+                Some((_, count, _)) => *count += 1,
+                None => tally.push((q.variant.as_str(), 1, q.enqueued_at)),
+            }
         }
+        let ready = tally.iter().find(|(_, count, first)| {
+            *count >= self.cfg.max_batch
+                || now.duration_since(*first) >= self.cfg.max_wait
+        });
+        let Some(&(variant, count, _)) = ready else {
+            // Nothing ready.  The head holds the oldest item, so its
+            // deadline is the earliest; had it already expired it would
+            // have been ready above, making this subtraction safe.
+            let head_age =
+                now.duration_since(self.queue.front().unwrap().enqueued_at);
+            return BatchDecision::Wait(self.cfg.max_wait - head_age);
+        };
+        let variant = variant.to_string();
 
-        let mut batch = Vec::with_capacity(same_variant.min(self.cfg.max_batch));
+        let mut batch = Vec::with_capacity(count.min(self.cfg.max_batch));
         let mut rest = VecDeque::with_capacity(self.queue.len());
         while let Some(item) = self.queue.pop_front() {
-            if item.variant == head_variant && batch.len() < self.cfg.max_batch {
+            if item.variant == variant && batch.len() < self.cfg.max_batch {
                 batch.push(item);
             } else {
                 rest.push_back(item);
             }
         }
         self.queue = rest;
-        BatchDecision::Run {
-            variant: head_variant,
-            batch,
-        }
+        BatchDecision::Run { variant, batch }
     }
 }
 
@@ -231,6 +243,66 @@ mod tests {
             other => panic!("expected Run, got {other:?}"),
         }
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn full_batch_behind_young_head_is_not_blocked() {
+        // Regression (cross-variant head-of-line blocking): v1 sits young
+        // inside its batch window, but v2 behind it already has max_batch
+        // ready items — v2 must run now, leaving v1 queued.
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(2, 1000));
+        b.push(q("v1", t0, 0));
+        b.push(q("v2", t0, 1));
+        b.push(q("v2", t0, 2));
+        match b.next_batch(t0 + Duration::from_millis(1)) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v2");
+                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![1, 2]);
+            }
+            other => panic!("expected Run for v2, got {other:?}"),
+        }
+        // v1 is still queued (now a lone head, released on the next call)
+        assert_eq!(b.len(), 1);
+        match b.next_batch(t0 + Duration::from_millis(1)) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v1");
+                assert_eq!(batch[0].payload, 0);
+            }
+            other => panic!("expected Run for v1, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_head_released_before_full_follower() {
+        // No starvation: once the head's window expires, it goes first
+        // even though a full batch for another variant is also ready.
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(2, 10));
+        b.push(q("v1", t0, 0));
+        b.push(q("v2", t0, 1));
+        b.push(q("v2", t0, 2));
+        match b.next_batch(t0 + Duration::from_millis(11)) {
+            BatchDecision::Run { variant, batch } => {
+                assert_eq!(variant, "v1");
+                assert_eq!(batch.len(), 1);
+            }
+            other => panic!("expected Run for v1, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn waits_when_no_variant_is_ready() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(cfg(3, 10));
+        b.push(q("v1", t0, 0));
+        b.push(q("v2", t0, 1));
+        b.push(q("v2", t0, 2));
+        match b.next_batch(t0 + Duration::from_millis(2)) {
+            BatchDecision::Wait(d) => assert!(d <= Duration::from_millis(8)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert_eq!(b.len(), 3);
     }
 
     #[test]

@@ -1,22 +1,58 @@
 //! Service metrics: request counts, latency distributions, per-variant
-//! execution tallies.  Lock-guarded aggregate; snapshots are cheap copies.
+//! execution tallies, per-device load.  Lock-guarded aggregate; snapshots
+//! are cheap copies.
+//!
+//! Latency/wait/exec/batch-size streams are held in fixed-size
+//! [`Reservoir`]s, not unbounded vectors: under sustained traffic the
+//! metric store must stay O(capacity).  Counts, means, min/max remain
+//! exact; percentiles are estimated from the uniform sample.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-use crate::util::stats::Summary;
+use crate::util::stats::{Reservoir, Summary};
 
-#[derive(Debug, Default)]
+/// Retained samples per metric stream.
+const RESERVOIR_CAPACITY: usize = 1024;
+
+/// Per-device execution tallies (multi-device sharded engine).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceLoad {
+    /// Tasks (batches or shards) executed on this device.
+    pub tasks: u64,
+    /// Total busy wall time on this device, seconds.
+    pub busy_sec: f64,
+}
+
+#[derive(Debug)]
 struct Inner {
     submitted: u64,
     completed: u64,
     failed: u64,
     batches: u64,
-    batch_sizes: Vec<f64>,
-    latencies_sec: Vec<f64>,
-    queue_waits_sec: Vec<f64>,
-    exec_sec: Vec<f64>,
+    batch_sizes: Reservoir,
+    latencies_sec: Reservoir,
+    queue_waits_sec: Reservoir,
+    exec_sec: Reservoir,
     per_variant: BTreeMap<String, u64>,
+    per_device: BTreeMap<usize, DeviceLoad>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            batches: 0,
+            batch_sizes: Reservoir::new(RESERVOIR_CAPACITY, 0xB47C),
+            latencies_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x1A7E),
+            queue_waits_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x9A17),
+            exec_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xE7EC),
+            per_variant: BTreeMap::new(),
+            per_device: BTreeMap::new(),
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -35,6 +71,7 @@ pub struct MetricsSnapshot {
     pub queue_wait: Option<Summary>,
     pub exec: Option<Summary>,
     pub per_variant: BTreeMap<String, u64>,
+    pub per_device: BTreeMap<usize, DeviceLoad>,
 }
 
 impl Metrics {
@@ -71,29 +108,27 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
+    /// One task executed on device `device`, busy for `busy_sec`.
+    pub fn on_device_task(&self, device: usize, busy_sec: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let load = g.per_device.entry(device).or_default();
+        load.tasks += 1;
+        load.busy_sec += busy_sec;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
-        let summ = |v: &Vec<f64>| {
-            if v.is_empty() {
-                None
-            } else {
-                Some(Summary::of(v))
-            }
-        };
         MetricsSnapshot {
             submitted: g.submitted,
             completed: g.completed,
             failed: g.failed,
             batches: g.batches,
-            mean_batch_size: if g.batch_sizes.is_empty() {
-                0.0
-            } else {
-                g.batch_sizes.iter().sum::<f64>() / g.batch_sizes.len() as f64
-            },
-            latency: summ(&g.latencies_sec),
-            queue_wait: summ(&g.queue_waits_sec),
-            exec: summ(&g.exec_sec),
+            mean_batch_size: g.batch_sizes.mean(),
+            latency: g.latencies_sec.summary(),
+            queue_wait: g.queue_waits_sec.summary(),
+            exec: g.exec_sec.summary(),
             per_variant: g.per_variant.clone(),
+            per_device: g.per_device.clone(),
         }
     }
 }
@@ -123,6 +158,12 @@ impl MetricsSnapshot {
         }
         for (variant, count) in &self.per_variant {
             out.push_str(&format!("  {variant}: {count}\n"));
+        }
+        for (device, load) in &self.per_device {
+            out.push_str(&format!(
+                "  device {device}: {} tasks, {:.3} s busy\n",
+                load.tasks, load.busy_sec
+            ));
         }
         out
     }
@@ -156,6 +197,7 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert!(s.latency.is_none());
         assert_eq!(s.mean_batch_size, 0.0);
+        assert!(s.per_device.is_empty());
     }
 
     #[test]
@@ -163,5 +205,39 @@ mod tests {
         let m = Metrics::new();
         m.on_complete("kernel_x", 0.01, 0.0, 0.01);
         assert!(m.snapshot().report().contains("kernel_x"));
+    }
+
+    #[test]
+    fn sustained_traffic_keeps_exact_counts_with_bounded_memory() {
+        // Regression for the unbounded-vector memory leak: the reservoirs
+        // cap retained samples, but counts and means must remain exact.
+        let m = Metrics::new();
+        let n = 50_000u64;
+        for i in 0..n {
+            m.on_submit();
+            m.on_batch(4);
+            m.on_complete("v", 0.001 * (i % 10) as f64, 0.0001, 0.0005);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, n);
+        assert_eq!(s.completed, n);
+        let l = s.latency.unwrap();
+        assert_eq!(l.n, n as usize);
+        // exact running mean of 0.001 * (0..10 cycling) = 0.0045
+        assert!((l.mean - 0.0045).abs() < 1e-9, "mean {}", l.mean);
+        assert_eq!(s.mean_batch_size, 4.0);
+    }
+
+    #[test]
+    fn per_device_tallies_accumulate() {
+        let m = Metrics::new();
+        m.on_device_task(0, 0.5);
+        m.on_device_task(1, 0.25);
+        m.on_device_task(0, 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.per_device[&0].tasks, 2);
+        assert!((s.per_device[&0].busy_sec - 1.0).abs() < 1e-12);
+        assert_eq!(s.per_device[&1].tasks, 1);
+        assert!(s.report().contains("device 0"));
     }
 }

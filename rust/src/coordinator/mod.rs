@@ -1,16 +1,23 @@
 //! L3 coordinator: the serving layer over the generated kernels.
 //!
-//! * `registry` — shape -> ranked kernel variants (autotuned routing table);
+//! * `registry` — shape/precision -> ranked kernel variants (autotuned
+//!   routing table);
 //! * `batcher`  — dynamic same-variant batching (pure state machine);
-//! * `server`   — dispatcher + worker pool over the PJRT runtime;
-//! * `metrics`  — request/latency accounting.
+//! * `sharding` — shard planner + multi-device execution pool;
+//! * `server`   — dispatcher + per-device worker queues over the runtime;
+//! * `metrics`  — request/latency/per-device accounting.
 
 pub mod batcher;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod sharding;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot};
 pub use registry::{GemmKey, Registry, RegistryEntry};
 pub use server::{GemmRequest, GemmResponse, Server, ServerConfig};
+pub use sharding::{
+    modeled_speedup, modeled_times, plan_for, ShardConfig, ShardPlan, ShardPool,
+    ShardStrategy, SplitDim,
+};

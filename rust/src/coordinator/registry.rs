@@ -13,22 +13,48 @@ use crate::schedule::Dtype;
 use crate::sim::{simulate, DeviceModel};
 
 /// Routing key for a GEMM request.
+///
+/// `dtype_in` is part of the key: an f16-input kernel and a tf32/f32-input
+/// kernel at the same (m, n, k, dtype_acc, epilogue) are different
+/// precision modes (§2.3 of the paper) and must never share a variant
+/// list — without it, `best()` could route a request to the wrong
+/// precision.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct GemmKey {
     pub m: usize,
     pub n: usize,
     pub k: usize,
+    pub dtype_in: Dtype,
     pub dtype_acc: Dtype,
     pub epilogue: String,
 }
 
 impl GemmKey {
+    /// The pipeline's common mode: f16 inputs, f32 accumulate, no epilogue.
     pub fn plain(m: usize, n: usize, k: usize) -> GemmKey {
         GemmKey {
             m,
             n,
             k,
+            dtype_in: Dtype::F16,
             dtype_acc: Dtype::F32,
+            epilogue: "none".into(),
+        }
+    }
+
+    pub fn with_dtypes(
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype_in: Dtype,
+        dtype_acc: Dtype,
+    ) -> GemmKey {
+        GemmKey {
+            m,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
             epilogue: "none".into(),
         }
     }
@@ -67,6 +93,7 @@ impl Registry {
                         m: s.m,
                         n: s.n,
                         k: s.k,
+                        dtype_in: s.dtype_in,
                         dtype_acc: s.dtype_acc,
                         epilogue: s.epilogue.clone(),
                     };
@@ -83,6 +110,9 @@ impl Registry {
                             m,
                             n,
                             k,
+                            // Baselines predate precision-keyed routing in
+                            // some stores; default to the pipeline's f16.
+                            dtype_in: meta.dtype_in.unwrap_or(Dtype::F16),
                             dtype_acc: acc,
                             epilogue: "none".into(),
                         };
@@ -222,6 +252,39 @@ mod tests {
         let key = GemmKey::plain(256, 256, 256);
         assert_eq!(reg.baseline(&key), Some("base"));
         assert!(reg.best(&key).is_none());
+    }
+
+    #[test]
+    fn dtype_in_separates_precision_modes() {
+        // Regression: an f16-input kernel and an f32(TF32)-input kernel at
+        // the same (m, n, k, acc, epilogue) must not share a variant list.
+        let d = DeviceModel::rtx3090();
+        let half = sched((64, 64, 64), (32, 32, 32));
+        let mut tf32 = sched((64, 64, 64), (32, 32, 32));
+        tf32.dtype_in = Dtype::F32;
+        let metas = vec![
+            meta("half_kernel", ArtifactKind::Generated, Some(half)),
+            meta("tf32_kernel", ArtifactKind::Generated, Some(tf32)),
+        ];
+        let reg = Registry::build(&metas, &d);
+        let key_f16 = GemmKey::with_dtypes(512, 512, 512, Dtype::F16, Dtype::F32);
+        let key_f32 = GemmKey::with_dtypes(512, 512, 512, Dtype::F32, Dtype::F32);
+        assert_eq!(reg.variants(&key_f16).len(), 1);
+        assert_eq!(reg.variants(&key_f32).len(), 1);
+        assert_eq!(reg.best(&key_f16).unwrap().artifact, "half_kernel");
+        assert_eq!(reg.best(&key_f32).unwrap().artifact, "tf32_kernel");
+    }
+
+    #[test]
+    fn baseline_keyed_by_input_dtype() {
+        let d = DeviceModel::rtx3090();
+        let metas = vec![meta("base", ArtifactKind::Baseline, None)];
+        let reg = Registry::build(&metas, &d);
+        // meta() declares dtype_in f16: the f16 key hits, the f32 key must
+        // not alias onto it.
+        assert_eq!(reg.baseline(&GemmKey::plain(256, 256, 256)), Some("base"));
+        let f32_key = GemmKey::with_dtypes(256, 256, 256, Dtype::F32, Dtype::F32);
+        assert!(reg.baseline(&f32_key).is_none());
     }
 
     #[test]

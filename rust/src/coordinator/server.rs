@@ -1,12 +1,18 @@
-//! The GEMM service: router + batcher + worker pool over the PJRT runtime.
+//! The GEMM service: router + batcher + sharded multi-device worker pool
+//! over the in-process runtime.
 //!
 //! Requests are submitted from any thread; a dispatcher routes each to the
-//! autotuned variant for its shape, batches same-variant requests, and
-//! fans batches out to worker threads that execute on the shared PJRT
-//! client.  Responses come back on per-request channels.  This is the
-//! paper's missing run-time half: it generated kernels, we also serve them.
+//! autotuned variant for its shape and batches same-variant requests.
+//! Batches go to one of N per-device work queues and execute as a single
+//! batched-GEMM runtime call (stacked operands, one pack/unpack).  Large
+//! GEMMs are instead sharded across the whole device pool
+//! ([`super::sharding`]): the dispatcher fans the per-shard tasks out to
+//! every device queue and the worker that finishes the last shard runs
+//! the reduction and replies.  Responses come back on per-request
+//! channels.  This is the paper's missing run-time half: it generated
+//! kernels, we also serve them — across a pool of devices.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -14,12 +20,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Program, Runtime, Tensor};
 use crate::sim::DeviceModel;
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{GemmKey, Registry};
+use super::sharding::{self, ShardConfig, ShardPlan};
 
 /// A GEMM request: C = A @ B + C (+ optional fused epilogue inputs).
 #[derive(Debug)]
@@ -52,8 +59,14 @@ struct Job {
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Total worker threads, spread round-robin over the device queues
+    /// (always at least one per device).
     pub workers: usize,
+    /// Device contexts in the pool; above 1, large GEMMs shard across it.
+    pub devices: usize,
     pub batcher: BatcherConfig,
+    /// When and how to shard (`devices > 1` only).
+    pub shard: ShardConfig,
     /// Measure each variant once at startup and route by measured latency
     /// instead of modeled TFLOPs (profile-guided routing; the model ranks
     /// for the paper's GPU, measurement ranks for the actual substrate).
@@ -64,10 +77,47 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             workers: 2,
+            devices: 1,
             batcher: BatcherConfig::default(),
+            shard: ShardConfig::default(),
             rerank_measured: false,
         }
     }
+}
+
+/// One unit of work on a device queue.
+enum WorkItem {
+    /// A same-variant batch: one batched-GEMM runtime call.
+    Batch { variant: String, batch: Vec<Queued<Job>> },
+    /// One shard of a sharded request.
+    Shard(ShardTask),
+}
+
+struct ShardTask {
+    job: Arc<ShardedJob>,
+    shard_idx: usize,
+    program: Program,
+    inputs: Vec<Tensor>,
+}
+
+/// Shared state of one sharded request; the worker completing the final
+/// shard performs the reduction and sends the response.
+struct ShardedJob {
+    id: u64,
+    variant: String,
+    submitted_at: Instant,
+    /// Set by the first worker to start a shard: splits queue wait from
+    /// execution time the same way the batch path does.
+    exec_started: Mutex<Option<Instant>>,
+    plan: ShardPlan,
+    base: Program,
+    c: Tensor,
+    bias: Option<Tensor>,
+    /// Taken exactly once, by whichever worker completes the job
+    /// (mutex-wrapped so the shared job is `Sync` on every toolchain).
+    reply: Mutex<Option<Sender<GemmResponse>>>,
+    parts: Mutex<Vec<Option<Result<Tensor>>>>,
+    remaining: AtomicUsize,
 }
 
 pub struct Server {
@@ -104,59 +154,65 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
-        let (work_tx, work_rx) = mpsc::channel::<(String, Vec<Queued<Job>>)>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
 
-        // Workers: execute batches on the shared runtime.
+        // Per-device work queues; worker threads spread across them so
+        // every device context has at least one executor.
+        let devices = cfg.devices.max(1);
+        let total_threads = cfg.workers.max(1).max(devices);
+        let threads_base = total_threads / devices;
+        let threads_rem = total_threads % devices;
+        let mut device_txs: Vec<Sender<WorkItem>> = Vec::with_capacity(devices);
         let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let rt = runtime.clone();
-            let rx = work_rx.clone();
-            let m = metrics.clone();
-            workers.push(std::thread::spawn(move || loop {
-                let msg = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok((variant, batch)) = msg else { break };
-                m.on_batch(batch.len());
-                for item in batch {
-                    let Job { id, request, submitted_at, reply } = item.payload;
-                    let started = Instant::now();
-                    let queue_wait = started.duration_since(submitted_at);
-                    let result = execute_one(&rt, &variant, request);
-                    let exec_time = started.elapsed();
-                    let total = submitted_at.elapsed();
-                    match &result {
-                        Ok(_) => m.on_complete(
-                            &variant,
-                            total.as_secs_f64(),
-                            queue_wait.as_secs_f64(),
-                            exec_time.as_secs_f64(),
-                        ),
-                        Err(_) => m.on_fail(),
+        for dev in 0..devices {
+            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let rx = Arc::new(Mutex::new(rx));
+            device_txs.push(tx);
+            let n_threads = threads_base + usize::from(dev < threads_rem);
+            for _ in 0..n_threads {
+                let rt = runtime.clone();
+                let rx = rx.clone();
+                let m = metrics.clone();
+                workers.push(std::thread::spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(item) = msg else { break };
+                    match item {
+                        WorkItem::Batch { variant, batch } => {
+                            run_batch(&rt, &m, dev, &variant, batch);
+                        }
+                        WorkItem::Shard(task) => {
+                            let started = Instant::now();
+                            {
+                                let mut g =
+                                    task.job.exec_started.lock().unwrap();
+                                if g.is_none() {
+                                    *g = Some(started);
+                                }
+                            }
+                            let result =
+                                sharding::execute_shard(&task.program, &task.inputs);
+                            m.on_device_task(dev, started.elapsed().as_secs_f64());
+                            finish_shard(&m, &task.job, task.shard_idx, result);
+                        }
                     }
-                    let _ = reply.send(GemmResponse {
-                        id,
-                        output: result,
-                        variant: variant.clone(),
-                        queue_wait,
-                        exec_time,
-                        total_latency: total,
-                    });
-                }
-            }));
+                }));
+            }
         }
 
-        // Dispatcher: route + batch.
+        // Dispatcher: route + batch + shard fan-out.
         let reg = registry.clone();
         let stop = shutdown.clone();
         let met = metrics.clone();
+        let rt = runtime.clone();
         let batcher_cfg = cfg.batcher.clone();
+        let shard_cfg = cfg.shard.clone();
         let dispatcher = std::thread::spawn(move || {
             let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
             let mut poll = Duration::from_millis(1);
-            loop {
+            let mut rr = 0usize;
+            'main: loop {
                 let mut enqueue = |job: Job| {
                     match route(&reg, &job.request) {
                         Ok(v) => batcher.push(Queued {
@@ -200,8 +256,11 @@ impl Server {
                             break;
                         }
                         BatchDecision::Run { variant, batch } => {
-                            if work_tx.send((variant, batch)).is_err() {
-                                return;
+                            if !handle_run(
+                                &rt, &met, &shard_cfg, &device_txs, &mut rr, variant,
+                                batch,
+                            ) {
+                                break 'main;
                             }
                         }
                     }
@@ -214,14 +273,39 @@ impl Server {
             loop {
                 match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
                     BatchDecision::Run { variant, batch } => {
-                        if work_tx.send((variant, batch)).is_err() {
+                        if !handle_run(
+                            &rt, &met, &shard_cfg, &device_txs, &mut rr, variant, batch,
+                        ) {
                             break;
                         }
                     }
                     _ => break,
                 }
             }
-            drop(work_tx);
+            // If the workers died mid-stream, jobs may still sit in the
+            // batcher after the drain bailed: fail each one explicitly so
+            // submitted == completed + failed holds and callers get an
+            // error response instead of a dead channel.
+            loop {
+                match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
+                    BatchDecision::Run { batch, .. } => {
+                        for q in batch {
+                            let Job { id, submitted_at, reply, .. } = q.payload;
+                            met.on_fail();
+                            let _ = reply.send(GemmResponse {
+                                id,
+                                output: Err(anyhow!("server worker pool is gone")),
+                                variant: String::new(),
+                                queue_wait: Duration::ZERO,
+                                exec_time: Duration::ZERO,
+                                total_latency: submitted_at.elapsed(),
+                            });
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            drop(device_txs);
         });
 
         Server {
@@ -246,9 +330,21 @@ impl Server {
             submitted_at: Instant::now(),
             reply: tx,
         };
-        // A send error means the dispatcher is gone; the caller sees it as
-        // a dropped response channel.
-        let _ = self.submit_tx.send(job);
+        if let Err(mpsc::SendError(job)) = self.submit_tx.send(job) {
+            // The dispatcher is gone (shutdown raced the submit).  Account
+            // the failure so `submitted` can never permanently exceed
+            // `completed + failed`, and hand the caller an explicit error
+            // instead of a silently dropped channel.
+            self.metrics.on_fail();
+            let _ = job.reply.send(GemmResponse {
+                id: job.id,
+                output: Err(anyhow!("server is shut down")),
+                variant: String::new(),
+                queue_wait: Duration::ZERO,
+                exec_time: Duration::ZERO,
+                total_latency: job.submitted_at.elapsed(),
+            });
+        }
         rx
     }
 
@@ -266,7 +362,10 @@ impl Server {
         &self.registry
     }
 
-    pub fn shutdown(mut self) -> MetricsSnapshot {
+    /// Stop accepting work, drain the queues, join every thread.
+    /// Idempotent; the server remains usable for `metrics()` afterwards,
+    /// and late `submit` calls get explicit error responses.
+    pub fn shutdown(&mut self) -> MetricsSnapshot {
         self.shutdown.store(true, Ordering::Relaxed);
         // Closing the submit channel unblocks the dispatcher.
         let (dead_tx, _) = mpsc::channel();
@@ -295,17 +394,330 @@ fn route(registry: &Registry, req: &GemmRequest) -> Result<String> {
         .ok_or_else(|| anyhow!("no kernel variant registered for {:?}", req.key))
 }
 
-fn execute_one(runtime: &Runtime, variant: &str, req: GemmRequest) -> Result<Tensor> {
-    // Tensors are moved, not cloned: the request is consumed (hot-path
-    // allocation discipline — EXPERIMENTS.md §Perf L3).
-    let GemmRequest { a, b, c, bias, .. } = req;
-    let mut inputs = vec![a, b, c];
-    if let Some(bias) = bias {
-        inputs.push(bias);
+/// Dispatch one released batch: shard it across the pool when the plan
+/// says so, otherwise send the whole batch to one device queue
+/// (round-robin).  Returns false when the workers are gone.
+fn handle_run(
+    rt: &Runtime,
+    met: &Metrics,
+    shard_cfg: &ShardConfig,
+    device_txs: &[Sender<WorkItem>],
+    rr: &mut usize,
+    variant: String,
+    batch: Vec<Queued<Job>>,
+) -> bool {
+    let devices = device_txs.len();
+    if devices > 1 {
+        if let Ok(artifact) = rt.load(&variant) {
+            if let Some(plan) = sharding::plan_for(artifact.program(), devices, shard_cfg)
+            {
+                let program = artifact.program().clone();
+                met.on_batch(batch.len());
+                for q in batch {
+                    // Rotate the shard->device base per job: a plan with
+                    // fewer shards than devices would otherwise pin work
+                    // to devices 0..n_shards and idle the rest.
+                    let base = *rr;
+                    *rr += 1;
+                    dispatch_sharded(
+                        q.payload, &variant, &program, &plan, base, device_txs, met,
+                    );
+                }
+                return true;
+            }
+        }
+        // Load errors fall through to the batch path, which reports them
+        // per item.
     }
-    let outputs = runtime.execute(variant, &inputs)?;
-    outputs
-        .into_iter()
-        .next()
-        .ok_or_else(|| anyhow!("artifact {variant} returned no outputs"))
+    let dev = *rr % devices;
+    *rr += 1;
+    match device_txs[dev].send(WorkItem::Batch { variant, batch }) {
+        Ok(()) => true,
+        Err(mpsc::SendError(item)) => {
+            // The device's workers are gone (e.g. a panic killed them):
+            // fail every job in the recovered batch explicitly so the
+            // submitted == completed + failed invariant survives, then
+            // stop dispatching — late submits get error responses from
+            // `Server::submit` once the dispatcher exits.
+            if let WorkItem::Batch { variant, batch } = item {
+                for q in batch {
+                    let Job { id, submitted_at, reply, .. } = q.payload;
+                    met.on_fail();
+                    let _ = reply.send(GemmResponse {
+                        id,
+                        output: Err(anyhow!("device worker is gone")),
+                        variant: variant.clone(),
+                        queue_wait: Duration::ZERO,
+                        exec_time: Duration::ZERO,
+                        total_latency: submitted_at.elapsed(),
+                    });
+                }
+            }
+            false
+        }
+    }
+}
+
+/// Fan one job's shards out to the device queues.
+///
+/// The operand split (including per-shard copies of B — see
+/// [`sharding::shard_inputs`]) runs on the dispatcher thread; for very
+/// large sharded requests this serializes the split memcpy ahead of
+/// other routing.  Moving the split into the workers (operands shared
+/// via `Arc`, sliced on-device) is the known follow-up once the executor
+/// grows a borrowed-tensor API.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_sharded(
+    job: Job,
+    variant: &str,
+    base: &Program,
+    plan: &ShardPlan,
+    device_base: usize,
+    device_txs: &[Sender<WorkItem>],
+    metrics: &Metrics,
+) {
+    let Job { id, request, submitted_at, reply } = job;
+    let GemmRequest { a, b, c, bias, .. } = request;
+    let now = Instant::now();
+    let tasks = match sharding::build_shard_tasks(plan, base, &a, &b, &c, bias.as_ref()) {
+        Ok(t) => t,
+        Err(e) => {
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(e),
+                variant: variant.to_string(),
+                queue_wait: now.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+            return;
+        }
+    };
+    let n_shards = tasks.len();
+    let shared = Arc::new(ShardedJob {
+        id,
+        variant: variant.to_string(),
+        submitted_at,
+        exec_started: Mutex::new(None),
+        plan: plan.clone(),
+        base: base.clone(),
+        c,
+        bias,
+        reply: Mutex::new(Some(reply)),
+        parts: Mutex::new((0..n_shards).map(|_| None).collect()),
+        remaining: AtomicUsize::new(n_shards),
+    });
+    for (idx, ((program, inputs), shard)) in
+        tasks.into_iter().zip(&shared.plan.shards).enumerate()
+    {
+        let item = WorkItem::Shard(ShardTask {
+            job: shared.clone(),
+            shard_idx: idx,
+            program,
+            inputs,
+        });
+        let dev = (shard.device + device_base) % device_txs.len();
+        if device_txs[dev].send(item).is_err() {
+            finish_shard(metrics, &shared, idx, Err(anyhow!("device worker is gone")));
+        }
+    }
+}
+
+/// Record one shard's result; the caller completing the final shard
+/// reduces the partials and sends the response.
+fn finish_shard(
+    metrics: &Metrics,
+    sj: &Arc<ShardedJob>,
+    shard_idx: usize,
+    result: Result<Tensor>,
+) {
+    {
+        let mut parts = sj.parts.lock().unwrap();
+        parts[shard_idx] = Some(result);
+    }
+    if sj.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+        return;
+    }
+    let mut collected = Vec::with_capacity(sj.plan.shards.len());
+    let mut first_err = None;
+    {
+        let mut parts = sj.parts.lock().unwrap();
+        for slot in parts.iter_mut() {
+            match slot.take() {
+                Some(Ok(t)) => collected.push(t),
+                Some(Err(e)) => {
+                    first_err = Some(e);
+                    break;
+                }
+                None => {
+                    first_err = Some(anyhow!("missing shard output"));
+                    break;
+                }
+            }
+        }
+    }
+    let output = match first_err {
+        Some(e) => Err(e),
+        None => sharding::reduce_outputs(
+            &sj.plan,
+            &sj.base,
+            &sj.c,
+            sj.bias.as_ref(),
+            &collected,
+        ),
+    };
+    let finished = Instant::now();
+    // First-shard start splits queue wait from execution, mirroring the
+    // batch path; a job whose shards never ran (workers gone) reports
+    // zero exec time and a full-length wait.
+    let started = sj.exec_started.lock().unwrap().unwrap_or(finished);
+    let exec_time = finished.duration_since(started);
+    let queue_wait = started.duration_since(sj.submitted_at);
+    let total = sj.submitted_at.elapsed();
+    match &output {
+        Ok(_) => metrics.on_complete(
+            &sj.variant,
+            total.as_secs_f64(),
+            queue_wait.as_secs_f64(),
+            exec_time.as_secs_f64(),
+        ),
+        Err(_) => metrics.on_fail(),
+    }
+    if let Some(reply) = sj.reply.lock().unwrap().take() {
+        let _ = reply.send(GemmResponse {
+            id: sj.id,
+            output,
+            variant: sj.variant.clone(),
+            queue_wait,
+            exec_time,
+            total_latency: total,
+        });
+    }
+}
+
+/// Execute one same-variant batch as a single batched runtime call.
+///
+/// Items are validated individually first so one malformed request fails
+/// alone instead of poisoning the batch; the survivors run through
+/// [`Runtime::execute_batch_timed`] (stacked operands, one pack/unpack)
+/// and fan back out to their per-request channels.
+fn run_batch(
+    rt: &Runtime,
+    metrics: &Metrics,
+    device: usize,
+    variant: &str,
+    batch: Vec<Queued<Job>>,
+) {
+    metrics.on_batch(batch.len());
+    let exec_started = Instant::now();
+    let artifact = match rt.load(variant) {
+        Ok(a) => a,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for q in batch {
+                let Job { id, submitted_at, reply, .. } = q.payload;
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(anyhow!("{msg}")),
+                    variant: variant.to_string(),
+                    queue_wait: exec_started.duration_since(submitted_at),
+                    exec_time: Duration::ZERO,
+                    total_latency: submitted_at.elapsed(),
+                });
+            }
+            return;
+        }
+    };
+    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
+        Vec::with_capacity(batch.len());
+    let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
+    for q in batch {
+        let Job { id, request, submitted_at, reply } = q.payload;
+        // Tensors are moved, not cloned: the request is consumed (hot-path
+        // allocation discipline — EXPERIMENTS.md §Perf L3).
+        let GemmRequest { a, b, c, bias, .. } = request;
+        let mut inputs = vec![a, b, c];
+        if let Some(bias) = bias {
+            inputs.push(bias);
+        }
+        let valid = inputs.len() == artifact.meta.inputs.len()
+            && inputs
+                .iter()
+                .zip(&artifact.meta.inputs)
+                .all(|(t, spec)| t.matches(spec));
+        if valid {
+            jobs.push((id, submitted_at, reply));
+            items.push(inputs);
+        } else {
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(anyhow!(
+                    "request tensors do not match artifact {variant}"
+                )),
+                variant: variant.to_string(),
+                queue_wait: exec_started.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+        }
+    }
+    if items.is_empty() {
+        return;
+    }
+    // Per-item exec_time is the batched call's wall time (the latency the
+    // item actually experienced in the executor), excluding artifact load
+    // and the validation pass above.
+    let call_started = Instant::now();
+    match rt.execute_batch_timed(&artifact, &items) {
+        Ok((outs, timing)) => {
+            metrics.on_device_task(device, timing.exec_seconds);
+            let exec_time = call_started.elapsed();
+            for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {
+                let queue_wait = exec_started.duration_since(submitted_at);
+                let total = submitted_at.elapsed();
+                let output = if out.is_empty() {
+                    Err(anyhow!("artifact {variant} returned no outputs"))
+                } else {
+                    Ok(out.remove(0))
+                };
+                match &output {
+                    Ok(_) => metrics.on_complete(
+                        variant,
+                        total.as_secs_f64(),
+                        queue_wait.as_secs_f64(),
+                        exec_time.as_secs_f64(),
+                    ),
+                    Err(_) => metrics.on_fail(),
+                }
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output,
+                    variant: variant.to_string(),
+                    queue_wait,
+                    exec_time,
+                    total_latency: total,
+                });
+            }
+        }
+        Err(e) => {
+            // Whole-batch failure after per-item validation (artifact-level
+            // problem): every surviving item reports the same error.
+            let msg = format!("{e:#}");
+            let exec_time = call_started.elapsed();
+            for (id, submitted_at, reply) in jobs {
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(anyhow!("{msg}")),
+                    variant: variant.to_string(),
+                    queue_wait: exec_started.duration_since(submitted_at),
+                    exec_time,
+                    total_latency: submitted_at.elapsed(),
+                });
+            }
+        }
+    }
 }

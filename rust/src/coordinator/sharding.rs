@@ -1,0 +1,793 @@
+//! Shard planner + multi-device execution pool.
+//!
+//! Splits one large GEMM across a pool of N device contexts, in the
+//! spirit of retargetable execution layers (*Composable and Modular Code
+//! Generation in MLIR*) and hardware-agnostic dispatch (*ISA Mapper*):
+//! the same compiled artifact is schedulable across devices instead of
+//! pinned to one runtime.
+//!
+//! Two partitionings:
+//!
+//! * **row sharding** — split M: each shard computes a row band of C from
+//!   the matching band of A and the whole of B.  Every output element is
+//!   computed by exactly the same f32 operation sequence as the unsharded
+//!   kernel, so row-sharded results are **bit-identical** for every
+//!   precision mode.
+//! * **split-K** — split the reduction dimension: each shard computes a
+//!   partial product `A[:, k0..k1] @ B[k0..k1, :]` in f32 with no
+//!   epilogue; the reduction step sums the partials onto `cast(C)` and
+//!   then replays the kernel's own epilogue/rounding tail
+//!   ([`crate::runtime::exec`]'s `gemm_tail`).  Summation grouping
+//!   changes, so results are tolerance-equal, not bit-equal.
+//!
+//! Each pool device is backed by its own worker thread and its own
+//! [`DeviceModel`], so modeled speedup ([`modeled_speedup`]) is checkable
+//! against measured speedup (`benches/sharding.rs`).
+
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::exec::{gemm_tail, round_to};
+use crate::runtime::{Program, Tensor};
+use crate::schedule::Schedule;
+use crate::sim::{simulate, DeviceModel};
+
+use super::metrics::DeviceLoad;
+
+/// Operator-facing sharding policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Pick rows when M is big enough, else split-K when K is.
+    Auto,
+    Rows,
+    SplitK,
+}
+
+/// Resolved partition dimension of a concrete plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitDim {
+    Rows,
+    K,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    pub strategy: ShardStrategy,
+    /// Minimum rows per row shard (below this, fewer shards are planned).
+    pub min_rows: usize,
+    /// Minimum K extent per split-K shard.
+    pub min_k: usize,
+    /// Problems below this flop count are not worth the fan-out.
+    pub min_flops: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            strategy: ShardStrategy::Auto,
+            min_rows: 64,
+            min_k: 256,
+            // 512^3 GEMM: below that, shard dispatch overhead dominates.
+            min_flops: 2.0 * 512.0 * 512.0 * 512.0,
+        }
+    }
+}
+
+/// One shard: a contiguous span of the split dimension, pinned to a
+/// device slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    pub device: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dim: SplitDim,
+    pub shards: Vec<Shard>,
+}
+
+/// Split `extent` into up to `parts` contiguous spans of at least
+/// `min_len` each (never more spans than fit, never zero spans).
+fn partition(extent: usize, parts: usize, min_len: usize) -> Vec<(usize, usize)> {
+    let min_len = min_len.max(1);
+    let n = parts.min(extent / min_len).max(1);
+    let base = extent / n;
+    let rem = extent % n;
+    let mut out = Vec::with_capacity(n);
+    let mut offset = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((offset, len));
+        offset += len;
+    }
+    out
+}
+
+impl ShardPlan {
+    /// Row partition of M across `devices` slots.
+    pub fn rows(m: usize, n: usize, k: usize, devices: usize, min_rows: usize) -> ShardPlan {
+        let shards = partition(m, devices, min_rows)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (offset, len))| Shard { device: i, offset, len })
+            .collect();
+        ShardPlan { m, n, k, dim: SplitDim::Rows, shards }
+    }
+
+    /// Split-K partition across `devices` slots.
+    pub fn split_k(m: usize, n: usize, k: usize, devices: usize, min_k: usize) -> ShardPlan {
+        let shards = partition(k, devices, min_k)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (offset, len))| Shard { device: i, offset, len })
+            .collect();
+        ShardPlan { m, n, k, dim: SplitDim::K, shards }
+    }
+
+    /// More than one shard (a single-shard "plan" is just the original
+    /// problem).
+    pub fn is_sharded(&self) -> bool {
+        self.shards.len() > 1
+    }
+}
+
+/// Plan sharding for a program over `devices` device slots, or `None`
+/// when the program is not a GEMM, the pool is a single device, the
+/// problem is too small, or no dimension splits cleanly past the
+/// minimums.
+pub fn plan_for(program: &Program, devices: usize, cfg: &ShardConfig) -> Option<ShardPlan> {
+    let Program::Gemm { m, n, k, .. } = *program else {
+        return None;
+    };
+    if devices < 2 {
+        return None;
+    }
+    if 2.0 * m as f64 * n as f64 * k as f64 < cfg.min_flops {
+        return None;
+    }
+    let plan = match cfg.strategy {
+        ShardStrategy::Rows => ShardPlan::rows(m, n, k, devices, cfg.min_rows),
+        ShardStrategy::SplitK => ShardPlan::split_k(m, n, k, devices, cfg.min_k),
+        ShardStrategy::Auto => {
+            let by_rows = ShardPlan::rows(m, n, k, devices, cfg.min_rows);
+            if by_rows.is_sharded() {
+                by_rows
+            } else {
+                ShardPlan::split_k(m, n, k, devices, cfg.min_k)
+            }
+        }
+    };
+    if plan.is_sharded() {
+        Some(plan)
+    } else {
+        None
+    }
+}
+
+/// The executable program for one shard, derived from the artifact's
+/// program so precision semantics carry over exactly.
+pub fn shard_program(base: &Program, plan: &ShardPlan, shard: &Shard) -> Result<Program> {
+    let Program::Gemm { m: _, n, k, dtype_in, dtype_acc, epilogue, fused } = *base else {
+        bail!("only gemm programs can be sharded");
+    };
+    Ok(match plan.dim {
+        SplitDim::Rows => Program::Gemm {
+            m: shard.len,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
+            epilogue,
+            fused,
+        },
+        // Partial products accumulate in f32 with no epilogue and no
+        // intermediate rounding; the reduction step replays the real tail.
+        SplitDim::K => Program::Gemm {
+            m: plan.m,
+            n,
+            k: shard.len,
+            dtype_in,
+            dtype_acc: crate::schedule::Dtype::F32,
+            epilogue: crate::runtime::Epilogue::None,
+            fused: true,
+        },
+    })
+}
+
+/// Input tensors for one shard.
+///
+/// Each shard gets owned copies of its operands (row shards each carry
+/// the whole of B): this models the per-device operand broadcast a real
+/// multi-device system performs, and keeps shard tasks self-contained
+/// for the per-device queues.  Sharing B behind an `Arc` would save host
+/// memory but needs a borrowed-tensor executor API — noted as future
+/// work in ROADMAP terms, not done here.
+pub fn shard_inputs(
+    plan: &ShardPlan,
+    shard: &Shard,
+    a: &Tensor,
+    b: &Tensor,
+    c: &Tensor,
+    bias: Option<&Tensor>,
+) -> Vec<Tensor> {
+    let (m, n, k) = (plan.m, plan.n, plan.k);
+    match plan.dim {
+        SplitDim::Rows => {
+            let a_rows = a.data[shard.offset * k..(shard.offset + shard.len) * k].to_vec();
+            let c_rows = c.data[shard.offset * n..(shard.offset + shard.len) * n].to_vec();
+            let mut inputs = vec![
+                Tensor { shape: vec![shard.len, k], data: a_rows },
+                b.clone(),
+                Tensor { shape: vec![shard.len, n], data: c_rows },
+            ];
+            if let Some(bias) = bias {
+                inputs.push(bias.clone());
+            }
+            inputs
+        }
+        SplitDim::K => {
+            // Columns [offset, offset+len) of A: strided gather.
+            let mut a_cols = Vec::with_capacity(m * shard.len);
+            for i in 0..m {
+                let row = &a.data[i * k..(i + 1) * k];
+                a_cols.extend_from_slice(&row[shard.offset..shard.offset + shard.len]);
+            }
+            let b_rows = b.data[shard.offset * n..(shard.offset + shard.len) * n].to_vec();
+            vec![
+                Tensor { shape: vec![m, shard.len], data: a_cols },
+                Tensor { shape: vec![shard.len, n], data: b_rows },
+                Tensor::zeros(vec![m, n]),
+            ]
+        }
+    }
+}
+
+/// Build the complete per-shard task list for one request.
+pub fn build_shard_tasks(
+    plan: &ShardPlan,
+    base: &Program,
+    a: &Tensor,
+    b: &Tensor,
+    c: &Tensor,
+    bias: Option<&Tensor>,
+) -> Result<Vec<(Program, Vec<Tensor>)>> {
+    let Program::Gemm { epilogue, .. } = *base else {
+        bail!("only gemm programs can be sharded");
+    };
+    let (m, n, k) = (plan.m, plan.n, plan.k);
+    if a.shape != [m, k] || b.shape != [k, n] || c.shape != [m, n] {
+        bail!(
+            "operand shapes a={:?} b={:?} c={:?} do not match plan {m}x{n}x{k}",
+            a.shape,
+            b.shape,
+            c.shape
+        );
+    }
+    // Data lengths too: a shape/data-inconsistent tensor (constructible
+    // via the pub fields) would otherwise panic the splitting slice —
+    // on the caller's thread, which for the server is the dispatcher.
+    if a.data.len() != m * k || b.data.len() != k * n || c.data.len() != m * n {
+        bail!(
+            "operand data lengths a={} b={} c={} do not match plan {m}x{n}x{k}",
+            a.data.len(),
+            b.data.len(),
+            c.data.len()
+        );
+    }
+    // The bias contract must be enforced here: split-K shards run without
+    // the epilogue (it replays in the reduction), so a missing or
+    // mis-sized bias would otherwise silently skip the epilogue instead
+    // of failing like the unsharded path does.
+    match bias {
+        Some(t) if epilogue.needs_bias() => {
+            if t.shape != [n] || t.data.len() != n {
+                bail!(
+                    "epilogue {:?} needs a bias of shape [{n}], got {:?} ({} elements)",
+                    epilogue.name(),
+                    t.shape,
+                    t.data.len()
+                );
+            }
+        }
+        None if epilogue.needs_bias() => {
+            bail!("epilogue {:?} needs a bias input", epilogue.name())
+        }
+        Some(_) => bail!("bias provided but the kernel has no bias epilogue"),
+        None => {}
+    }
+    plan.shards
+        .iter()
+        .map(|shard| {
+            let program = shard_program(base, plan, shard)?;
+            Ok((program, shard_inputs(plan, shard, a, b, c, bias)))
+        })
+        .collect()
+}
+
+/// Combine per-shard outputs into the full C.
+///
+/// Rows: concatenate the row bands (bit-identical to the unsharded
+/// kernel).  Split-K: sum partials onto `cast(C)`, then replay the
+/// kernel's epilogue/rounding tail.
+pub fn reduce_outputs(
+    plan: &ShardPlan,
+    base: &Program,
+    c: &Tensor,
+    bias: Option<&Tensor>,
+    parts: &[Tensor],
+) -> Result<Tensor> {
+    let Program::Gemm { n, dtype_acc, epilogue, fused, .. } = *base else {
+        bail!("only gemm programs can be sharded");
+    };
+    if parts.len() != plan.shards.len() {
+        bail!("{} shard outputs for a {}-shard plan", parts.len(), plan.shards.len());
+    }
+    match plan.dim {
+        SplitDim::Rows => {
+            let mut data = Vec::with_capacity(plan.m * plan.n);
+            for (shard, part) in plan.shards.iter().zip(parts) {
+                if part.shape != [shard.len, plan.n] {
+                    bail!(
+                        "row shard output shape {:?}, want [{}, {}]",
+                        part.shape,
+                        shard.len,
+                        plan.n
+                    );
+                }
+                data.extend_from_slice(&part.data);
+            }
+            Ok(Tensor { shape: vec![plan.m, plan.n], data })
+        }
+        SplitDim::K => {
+            let mut acc: Vec<f32> =
+                c.data.iter().map(|&v| round_to(dtype_acc, v)).collect();
+            for part in parts {
+                if part.shape != [plan.m, plan.n] {
+                    bail!(
+                        "split-K partial shape {:?}, want [{}, {}]",
+                        part.shape,
+                        plan.m,
+                        plan.n
+                    );
+                }
+                for (o, &p) in acc.iter_mut().zip(&part.data) {
+                    *o += p;
+                }
+            }
+            gemm_tail(
+                &mut acc,
+                bias.map(|t| t.data.as_slice()),
+                n,
+                dtype_acc,
+                epilogue,
+                fused,
+            );
+            Ok(Tensor { shape: vec![plan.m, plan.n], data: acc })
+        }
+    }
+}
+
+/// Execute one shard program and take its single output — the one shard
+/// execution body, shared by the [`ShardPool`] workers and the server's
+/// device workers so the two engines cannot drift.
+pub fn execute_shard(program: &Program, inputs: &[Tensor]) -> Result<Tensor> {
+    program.execute(inputs).and_then(|outs| {
+        outs.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("shard produced no output"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Device pool
+// ---------------------------------------------------------------------------
+
+struct PoolTask {
+    program: Program,
+    inputs: Vec<Tensor>,
+    shard_idx: usize,
+    reply: Sender<(usize, Result<Tensor>)>,
+}
+
+struct PoolWorker {
+    model: DeviceModel,
+    tx: Sender<PoolTask>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<DeviceLoad>>,
+}
+
+/// A pool of device contexts, one worker thread + one [`DeviceModel`]
+/// each.  Stand-alone engine for benches and integration tests; the
+/// server wires the same planner/split/reduce building blocks through
+/// its own per-device queues.
+pub struct ShardPool {
+    workers: Vec<PoolWorker>,
+}
+
+impl ShardPool {
+    pub fn new(models: Vec<DeviceModel>) -> ShardPool {
+        assert!(!models.is_empty(), "shard pool needs at least one device");
+        let workers = models
+            .into_iter()
+            .map(|model| {
+                let (tx, rx) = mpsc::channel::<PoolTask>();
+                let stats = Arc::new(Mutex::new(DeviceLoad::default()));
+                let worker_stats = stats.clone();
+                let handle = std::thread::spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        let started = Instant::now();
+                        let result = execute_shard(&task.program, &task.inputs);
+                        let busy = started.elapsed().as_secs_f64();
+                        {
+                            let mut g = worker_stats.lock().unwrap();
+                            g.tasks += 1;
+                            g.busy_sec += busy;
+                        }
+                        let _ = task.reply.send((task.shard_idx, result));
+                    }
+                });
+                PoolWorker { model, tx, handle: Some(handle), stats }
+            })
+            .collect();
+        ShardPool { workers }
+    }
+
+    /// Pool of `n` identical devices.
+    pub fn homogeneous(model: &DeviceModel, n: usize) -> ShardPool {
+        ShardPool::new(vec![model.clone(); n.max(1)])
+    }
+
+    pub fn devices(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn model(&self, device: usize) -> &DeviceModel {
+        &self.workers[device % self.workers.len()].model
+    }
+
+    pub fn models(&self) -> Vec<DeviceModel> {
+        self.workers.iter().map(|w| w.model.clone()).collect()
+    }
+
+    /// Execute one GEMM according to `plan`, fanning shards across the
+    /// device workers and reducing the partials.
+    pub fn execute(
+        &self,
+        base: &Program,
+        plan: &ShardPlan,
+        a: &Tensor,
+        b: &Tensor,
+        c: &Tensor,
+        bias: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        let tasks = build_shard_tasks(plan, base, a, b, c, bias)?;
+        let n_shards = tasks.len();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        for (idx, ((program, inputs), shard)) in
+            tasks.into_iter().zip(&plan.shards).enumerate()
+        {
+            let dev = shard.device % self.workers.len();
+            self.workers[dev]
+                .tx
+                .send(PoolTask {
+                    program,
+                    inputs,
+                    shard_idx: idx,
+                    reply: reply_tx.clone(),
+                })
+                .map_err(|_| anyhow!("device {dev} worker is gone"))?;
+        }
+        drop(reply_tx);
+        let mut parts: Vec<Option<Tensor>> = vec![None; n_shards];
+        for _ in 0..n_shards {
+            let (idx, result) = reply_rx
+                .recv()
+                .map_err(|_| anyhow!("shard workers dropped their replies"))?;
+            parts[idx] = Some(result?);
+        }
+        let parts: Vec<Tensor> = parts.into_iter().flatten().collect();
+        if parts.len() != n_shards {
+            bail!("lost shard outputs: {} of {n_shards}", parts.len());
+        }
+        reduce_outputs(plan, base, c, bias, &parts)
+    }
+
+    /// Per-device execution tallies (device index order).
+    pub fn stats(&self) -> Vec<DeviceLoad> {
+        self.workers
+            .iter()
+            .map(|w| w.stats.lock().unwrap().clone())
+            .collect()
+    }
+
+    /// Stop the workers and return the final per-device tallies.
+    pub fn shutdown(mut self) -> Vec<DeviceLoad> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for mut w in self.workers.drain(..) {
+            let (dead_tx, _) = mpsc::channel();
+            drop(std::mem::replace(&mut w.tx, dead_tx));
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+            out.push(w.stats.lock().unwrap().clone());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled scaling
+// ---------------------------------------------------------------------------
+
+/// Modeled wall time of each shard on its assigned device: simulate the
+/// derived shard schedule when the tile still divides it, otherwise scale
+/// the full-problem simulation by the shard's flops share.
+pub fn modeled_times(
+    schedule: &Schedule,
+    plan: &ShardPlan,
+    models: &[DeviceModel],
+) -> Vec<f64> {
+    plan.shards
+        .iter()
+        .map(|shard| {
+            let model = &models[shard.device % models.len()];
+            let (sm, sk) = match plan.dim {
+                SplitDim::Rows => (shard.len, plan.k),
+                SplitDim::K => (plan.m, shard.len),
+            };
+            match Schedule::optimized(
+                sm,
+                plan.n,
+                sk,
+                schedule.dtype_acc,
+                schedule.tile_tb,
+                schedule.tile_warp,
+            ) {
+                Ok(sub) => simulate(&sub, model).seconds,
+                Err(_) => {
+                    let frac = (sm as f64 * sk as f64) / (plan.m as f64 * plan.k as f64);
+                    simulate(schedule, model).seconds * frac
+                }
+            }
+        })
+        .collect()
+}
+
+/// Modeled speedup of the sharded plan over single-device execution on
+/// `models[0]` (shards run concurrently, so the slowest shard bounds the
+/// wall time; split-K reduction cost is ignored, matching its O(m*n)
+/// scale next to the O(m*n*k) GEMM).
+pub fn modeled_speedup(
+    schedule: &Schedule,
+    plan: &ShardPlan,
+    models: &[DeviceModel],
+) -> f64 {
+    let single = simulate(schedule, &models[0]).seconds;
+    let slowest = modeled_times(schedule, plan, models)
+        .into_iter()
+        .fold(0.0f64, f64::max);
+    if slowest > 0.0 {
+        single / slowest
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Epilogue;
+    use crate::schedule::Dtype;
+    use crate::util::prng::Rng;
+
+    fn t(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor { shape, data }
+    }
+
+    fn gemm(m: usize, n: usize, k: usize, din: Dtype, dacc: Dtype) -> Program {
+        Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: din,
+            dtype_acc: dacc,
+            epilogue: Epilogue::None,
+            fused: true,
+        }
+    }
+
+    fn operands(m: usize, n: usize, k: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            t(vec![m, k], rng.normal_matrix(m, k)),
+            t(vec![k, n], rng.normal_matrix(k, n)),
+            t(vec![m, n], rng.normal_matrix(m, n)),
+        )
+    }
+
+    #[test]
+    fn partition_covers_extent_and_respects_min() {
+        let p = partition(10, 4, 1);
+        assert_eq!(p, vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(partition(100, 8, 64), vec![(0, 100)]);
+        assert_eq!(partition(128, 4, 32), vec![(0, 32), (32, 32), (64, 32), (96, 32)]);
+        // never zero shards
+        assert_eq!(partition(1, 8, 4).len(), 1);
+    }
+
+    #[test]
+    fn plan_for_respects_thresholds_and_strategy() {
+        let cfg = ShardConfig::default();
+        let big = gemm(1024, 1024, 1024, Dtype::F16, Dtype::F32);
+        let small = gemm(64, 64, 64, Dtype::F16, Dtype::F32);
+        assert!(plan_for(&big, 4, &cfg).is_some());
+        assert!(plan_for(&small, 4, &cfg).is_none(), "below min_flops");
+        assert!(plan_for(&big, 1, &cfg).is_none(), "single device");
+        // Auto: short M but deep K falls back to split-K
+        let deep = gemm(64, 64, 65536, Dtype::F16, Dtype::F32);
+        let plan = plan_for(&deep, 4, &cfg).unwrap();
+        assert_eq!(plan.dim, SplitDim::K);
+        let wide = plan_for(&big, 4, &cfg).unwrap();
+        assert_eq!(wide.dim, SplitDim::Rows);
+    }
+
+    #[test]
+    fn row_sharding_is_bit_identical_without_a_pool() {
+        // Pure split/execute/reduce pipeline, no threads: shard outputs
+        // concatenate to exactly the unsharded result.
+        for &(din, dacc) in &[
+            (Dtype::F32, Dtype::F32),
+            (Dtype::F16, Dtype::F32),
+            (Dtype::F16, Dtype::F16),
+        ] {
+            let (m, n, k) = (24, 16, 16);
+            let base = gemm(m, n, k, din, dacc);
+            let (a, b, c) = operands(m, n, k, 7);
+            let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
+            let plan = ShardPlan::rows(m, n, k, 3, 1);
+            assert_eq!(plan.shards.len(), 3);
+            let parts: Vec<Tensor> = build_shard_tasks(&plan, &base, &a, &b, &c, None)
+                .unwrap()
+                .into_iter()
+                .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
+                .collect();
+            let got = reduce_outputs(&plan, &base, &c, None, &parts).unwrap();
+            assert_eq!(got.shape, want[0].shape);
+            assert_eq!(got.data, want[0].data, "{din:?}/{dacc:?} row shard drifted");
+        }
+    }
+
+    #[test]
+    fn split_k_matches_within_tolerance_and_handles_epilogue() {
+        let (m, n, k) = (8, 8, 32);
+        let base = Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        };
+        let (a, b, c) = operands(m, n, k, 8);
+        let bias = t(vec![n], Rng::new(9).normal_matrix(1, n));
+        let want = base
+            .execute(&[a.clone(), b.clone(), c.clone(), bias.clone()])
+            .unwrap();
+        let plan = ShardPlan::split_k(m, n, k, 4, 1);
+        assert_eq!(plan.shards.len(), 4);
+        let tasks = build_shard_tasks(&plan, &base, &a, &b, &c, Some(&bias)).unwrap();
+        // shard programs carry no epilogue and take exactly 3 inputs
+        for (prog, inputs) in &tasks {
+            assert_eq!(inputs.len(), 3);
+            let Program::Gemm { epilogue, dtype_acc, .. } = *prog else {
+                panic!("non-gemm shard")
+            };
+            assert_eq!(epilogue, Epilogue::None);
+            assert_eq!(dtype_acc, Dtype::F32);
+        }
+        let parts: Vec<Tensor> = tasks
+            .into_iter()
+            .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
+            .collect();
+        let got = reduce_outputs(&plan, &base, &c, Some(&bias), &parts).unwrap();
+        let mut worst = 0f64;
+        for (g, w) in got.data.iter().zip(&want[0].data) {
+            worst = worst.max((*g as f64 - *w as f64).abs());
+        }
+        assert!(worst < 1e-2, "split-K drifted by {worst}");
+        // relu must clamp in the reduced output too
+        assert!(got.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn split_k_rejects_missing_or_misshapen_bias() {
+        // Regression: split-K shards carry no epilogue, so without this
+        // check a missing bias would silently skip the epilogue in the
+        // reduction instead of failing like the unsharded path.
+        let (m, n, k) = (8, 8, 32);
+        let base = Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        };
+        let (a, b, c) = operands(m, n, k, 13);
+        let plan = ShardPlan::split_k(m, n, k, 4, 1);
+        assert!(build_shard_tasks(&plan, &base, &a, &b, &c, None).is_err());
+        let short = t(vec![n - 1], vec![0.0; n - 1]);
+        assert!(build_shard_tasks(&plan, &base, &a, &b, &c, Some(&short)).is_err());
+        // and a bias on a no-epilogue kernel is rejected too
+        let plain = gemm(m, n, k, Dtype::F16, Dtype::F32);
+        let bias = t(vec![n], vec![0.0; n]);
+        assert!(build_shard_tasks(&plan, &plain, &a, &b, &c, Some(&bias)).is_err());
+    }
+
+    #[test]
+    fn pool_executes_plan_and_tracks_per_device_load() {
+        let (m, n, k) = (32, 16, 16);
+        let base = gemm(m, n, k, Dtype::F32, Dtype::F32);
+        let (a, b, c) = operands(m, n, k, 11);
+        let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
+        let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), 4);
+        assert_eq!(pool.devices(), 4);
+        let plan = ShardPlan::rows(m, n, k, pool.devices(), 1);
+        let got = pool.execute(&base, &plan, &a, &b, &c, None).unwrap();
+        assert_eq!(got.data, want[0].data);
+        let stats = pool.shutdown();
+        assert_eq!(stats.len(), 4);
+        let total_tasks: u64 = stats.iter().map(|s| s.tasks).sum();
+        assert_eq!(total_tasks, plan.shards.len() as u64);
+        assert!(stats.iter().all(|s| s.tasks == 1), "{stats:?}");
+    }
+
+    #[test]
+    fn pool_surfaces_shard_failures() {
+        let (m, n, k) = (8, 8, 8);
+        let base = gemm(m, n, k, Dtype::F32, Dtype::F32);
+        let (a, b, c) = operands(m, n, k, 12);
+        let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), 2);
+        // a plan that lies about the problem shape fails fast in split
+        let bad_plan = ShardPlan::rows(m + 1, n, k, 2, 1);
+        assert!(pool.execute(&base, &bad_plan, &a, &b, &c, None).is_err());
+        // a shape/data-inconsistent tensor fails validation instead of
+        // panicking the splitting slice
+        let plan = ShardPlan::rows(m, n, k, 2, 1);
+        let torn = Tensor { shape: vec![m, k], data: vec![] };
+        assert!(pool.execute(&base, &plan, &torn, &b, &c, None).is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn modeled_speedup_scales_with_devices() {
+        let s = Schedule::optimized(
+            4096,
+            4096,
+            4096,
+            Dtype::F32,
+            (128, 128, 64),
+            (64, 32, 32),
+        )
+        .unwrap();
+        let models: Vec<DeviceModel> = vec![DeviceModel::rtx3090(); 4];
+        let plan2 = ShardPlan::rows(4096, 4096, 4096, 2, 64);
+        let plan4 = ShardPlan::rows(4096, 4096, 4096, 4, 64);
+        let s2 = modeled_speedup(&s, &plan2, &models);
+        let s4 = modeled_speedup(&s, &plan4, &models);
+        assert!(s2 > 1.2, "2-way speedup {s2}");
+        assert!(s4 > s2, "4-way {s4} <= 2-way {s2}");
+        assert!(s4 <= 4.2, "superlinear beyond slack: {s4}");
+    }
+}

@@ -33,6 +33,7 @@ const SPEC: &[Spec] = &[
     ("warmup", true, "bench warmup runs (default 2)"),
     ("requests", true, "serve: number of synthetic requests (default 64)"),
     ("workers", true, "serve: worker threads (default 2)"),
+    ("devices", true, "serve: device contexts; >1 shards large GEMMs (default 1)"),
     ("out-dir", true, "bench: directory for CSV output (default reports/)"),
     ("measured", false, "bench: include real-execution subsets"),
     ("top", true, "autotune: show top-N candidates (default 8)"),
@@ -283,12 +284,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rt = Arc::new(Runtime::open(&artifacts_dir(args))?);
     let n_requests = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
+    let devices = args.get_usize("devices", 1)?;
 
-    let server = Server::start(
+    let mut server = Server::start(
         rt.clone(),
         &d,
         ServerConfig {
             workers,
+            devices,
             ..Default::default()
         },
     );

@@ -134,6 +134,16 @@ fn cast_slice(dtype: Dtype, v: &[f32]) -> Vec<f32> {
     }
 }
 
+/// Append `src` to `dst` rounded to `dtype`: the precision cast fused
+/// into the batch-stacking copy, no intermediate buffer.
+fn cast_extend(dtype: Dtype, dst: &mut Vec<f32>, src: &[f32]) {
+    match dtype {
+        Dtype::F32 => dst.extend_from_slice(src),
+        Dtype::F16 => dst.extend(src.iter().map(|&x| round_f16(x))),
+        Dtype::Bf16 => dst.extend(src.iter().map(|&x| round_bf16(x))),
+    }
+}
+
 /// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
 /// accumulate (matches `preferred_element_type=f32`; f16 accumulation is
 /// approximated by rounding at the epilogue boundary).
@@ -310,6 +320,14 @@ impl Program {
             if &t.shape != w {
                 bail!("program input {i} has shape {:?}, want {w:?}", t.shape);
             }
+            let want_len: usize = w.iter().product();
+            if t.data.len() != want_len {
+                bail!(
+                    "program input {i} has {} elements for shape {:?}",
+                    t.data.len(),
+                    t.shape
+                );
+            }
         }
         match *self {
             Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } => {
@@ -334,30 +352,96 @@ impl Program {
             }
         }
     }
+
+    /// Execute a whole same-program batch in one call.
+    ///
+    /// For GEMM programs the operands are stacked and precision-cast once
+    /// across the batch (single pack), the per-item GEMMs run over the
+    /// stacked buffers, and per-item outputs materialize in one pass
+    /// (single unpack).  Bit-identical to calling [`Program::execute`]
+    /// once per item; composite programs fall back to exactly that.
+    pub fn execute_batch(&self, items: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self
+        else {
+            return items.iter().map(|inputs| self.execute(inputs)).collect();
+        };
+        if items.len() < 2 {
+            return items.iter().map(|inputs| self.execute(inputs)).collect();
+        }
+        let want = self.input_shapes();
+        for (bi, inputs) in items.iter().enumerate() {
+            if inputs.len() != want.len() {
+                bail!(
+                    "batch item {bi}: program expects {} inputs, got {}",
+                    want.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, w)) in inputs.iter().zip(&want).enumerate() {
+                if &t.shape != w {
+                    bail!(
+                        "batch item {bi}: input {i} has shape {:?}, want {w:?}",
+                        t.shape
+                    );
+                }
+                let want_len: usize = w.iter().product();
+                if t.data.len() != want_len {
+                    bail!(
+                        "batch item {bi}: input {i} has {} elements for shape {:?}",
+                        t.data.len(),
+                        t.shape
+                    );
+                }
+            }
+        }
+        let bsz = items.len();
+        // Single pack: stack each operand across the batch with the
+        // precision cast fused into the copy.
+        let mut a_s = Vec::with_capacity(bsz * m * k);
+        let mut b_s = Vec::with_capacity(bsz * k * n);
+        let mut acc_s = Vec::with_capacity(bsz * m * n);
+        for inputs in items {
+            cast_extend(dtype_in, &mut a_s, &inputs[0].data);
+            cast_extend(dtype_in, &mut b_s, &inputs[1].data);
+            cast_extend(dtype_acc, &mut acc_s, &inputs[2].data);
+        }
+        let mut outs = Vec::with_capacity(bsz);
+        for (bi, inputs) in items.iter().enumerate() {
+            let a = &a_s[bi * m * k..(bi + 1) * m * k];
+            let b = &b_s[bi * k * n..(bi + 1) * k * n];
+            let acc = &mut acc_s[bi * m * n..(bi + 1) * m * n];
+            matmul_acc(acc, a, b, m, n, k);
+            gemm_tail(
+                acc,
+                inputs.get(3).map(|t| t.data.as_slice()),
+                n,
+                dtype_acc,
+                epilogue,
+                fused,
+            );
+            outs.push(vec![Tensor { shape: vec![m, n], data: acc.to_vec() }]);
+        }
+        Ok(outs)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Kernels
 // ---------------------------------------------------------------------------
 
-#[allow(clippy::too_many_arguments)]
-fn exec_gemm(
-    a: &[f32],
-    b: &[f32],
-    c: &[f32],
+/// Epilogue + output-rounding tail shared by the single-item and batched
+/// GEMM paths — and by the split-K shard reduction
+/// (`coordinator::sharding`), which must reproduce this exact tail after
+/// summing partial products.  `acc` holds `cast(C) + A @ B` partials in
+/// f32.
+pub(crate) fn gemm_tail(
+    acc: &mut [f32],
     bias: Option<&[f32]>,
-    m: usize,
     n: usize,
-    k: usize,
-    dtype_in: Dtype,
     dtype_acc: Dtype,
     epilogue: Epilogue,
     fused: bool,
-) -> Vec<f32> {
-    let a16 = cast_slice(dtype_in, a);
-    let b16 = cast_slice(dtype_in, b);
-    let mut acc = cast_slice(dtype_acc, c);
-    matmul_acc(&mut acc, &a16, &b16, m, n, k);
+) {
     if !fused {
         // Unfused comparator: the GEMM output takes a full trip through
         // the f32 artifact boundary before the epilogue pass.
@@ -387,6 +471,27 @@ fn exec_gemm(
     for v in acc.iter_mut() {
         *v = round_to(dtype_acc, *v);
     }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_gemm(
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype_in: Dtype,
+    dtype_acc: Dtype,
+    epilogue: Epilogue,
+    fused: bool,
+) -> Vec<f32> {
+    let a16 = cast_slice(dtype_in, a);
+    let b16 = cast_slice(dtype_in, b);
+    let mut acc = cast_slice(dtype_acc, c);
+    matmul_acc(&mut acc, &a16, &b16, m, n, k);
+    gemm_tail(&mut acc, bias, n, dtype_acc, epilogue, fused);
     acc
 }
 
@@ -733,6 +838,76 @@ mod tests {
         for &v in &out[0].data {
             assert_eq!(v, round_f16(v), "{v} not f16-representable");
         }
+    }
+
+    // -- batched execution ---------------------------------------------------
+
+    #[test]
+    fn execute_batch_matches_per_item_execute_bitwise() {
+        let p = Program::Gemm {
+            m: 8,
+            n: 8,
+            k: 8,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        };
+        let mut rng = Rng::new(21);
+        let items: Vec<Vec<Tensor>> = (0..5)
+            .map(|_| {
+                vec![
+                    t(vec![8, 8], rng.normal_matrix(8, 8)),
+                    t(vec![8, 8], rng.normal_matrix(8, 8)),
+                    t(vec![8, 8], rng.normal_matrix(8, 8)),
+                    t(vec![8], rng.normal_matrix(1, 8)),
+                ]
+            })
+            .collect();
+        let batched = p.execute_batch(&items).unwrap();
+        assert_eq!(batched.len(), items.len());
+        for (bi, inputs) in items.iter().enumerate() {
+            let single = p.execute(inputs).unwrap();
+            assert_eq!(batched[bi][0].shape, single[0].shape);
+            assert_eq!(batched[bi][0].data, single[0].data, "item {bi}");
+        }
+    }
+
+    #[test]
+    fn execute_batch_handles_empty_and_singleton() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 2,
+            k: 2,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        assert!(p.execute_batch(&[]).unwrap().is_empty());
+        let item = vec![
+            t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]),
+            t(vec![2, 2], vec![0.0; 4]),
+        ];
+        let out = p.execute_batch(&[item.clone()]).unwrap();
+        assert_eq!(out[0][0].data, p.execute(&item).unwrap()[0].data);
+    }
+
+    #[test]
+    fn execute_batch_rejects_misshapen_item() {
+        let p = Program::Gemm {
+            m: 2,
+            n: 2,
+            k: 2,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let good = vec![t(vec![2, 2], vec![0.0; 4]); 3];
+        let bad = vec![t(vec![2, 3], vec![0.0; 6]); 3];
+        assert!(p.execute_batch(&[good, bad]).is_err());
     }
 
     // -- transformer ---------------------------------------------------------

@@ -54,7 +54,10 @@ impl Tensor {
     }
 
     pub fn matches(&self, spec: &TensorSpec) -> bool {
-        self.shape == spec.shape
+        // Data length is part of the contract: a shape/data-inconsistent
+        // tensor (constructible via the pub fields) must fail validation,
+        // not shift every later item's window in a stacked batch.
+        self.shape == spec.shape && self.data.len() == spec.elements()
     }
 }
 
@@ -223,6 +226,77 @@ impl Runtime {
         let a = self.load(name)?;
         Ok(self.execute_timed(&a, inputs)?.0)
     }
+
+    /// Execute a whole same-artifact batch in one call.
+    ///
+    /// Every item is validated against the manifest up front (the single
+    /// pack phase), execution runs over stacked operands
+    /// ([`Program::execute_batch`]), and per-item outputs come back in
+    /// submission order.  The batch is all-or-nothing: callers that need
+    /// per-item isolation validate shapes before batching.
+    pub fn execute_batch_timed(
+        &self,
+        artifact: &LoadedArtifact,
+        items: &[Vec<Tensor>],
+    ) -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
+        let meta = &artifact.meta;
+        let t0 = Instant::now();
+        for (bi, inputs) in items.iter().enumerate() {
+            if inputs.len() != meta.inputs.len() {
+                bail!(
+                    "{}: batch item {bi}: expected {} inputs, got {}",
+                    meta.name,
+                    meta.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+                if !t.matches(spec) {
+                    bail!(
+                        "{}: batch item {bi}: input {i} shape {:?} does not match \
+                         artifact spec {:?}",
+                        meta.name,
+                        t.shape,
+                        spec.shape
+                    );
+                }
+            }
+        }
+        let t1 = Instant::now();
+
+        let outputs = artifact
+            .program
+            .execute_batch(items)
+            .with_context(|| format!("executing {} (batch of {})", meta.name, items.len()))?;
+        let t2 = Instant::now();
+
+        for out in &outputs {
+            if out.len() != meta.outputs.len() {
+                bail!(
+                    "{}: program produced {} outputs, manifest declares {}",
+                    meta.name,
+                    out.len(),
+                    meta.outputs.len()
+                );
+            }
+        }
+        let t3 = Instant::now();
+
+        Ok((
+            outputs,
+            ExecTiming {
+                pack_seconds: (t1 - t0).as_secs_f64(),
+                exec_seconds: (t2 - t1).as_secs_f64(),
+                unpack_seconds: (t3 - t2).as_secs_f64(),
+            },
+        ))
+    }
+
+    /// Execute a same-artifact batch by name (loads/caches on first use).
+    pub fn execute_batch(&self, name: &str, items: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let a = self.load(name)?;
+        Ok(self.execute_batch_timed(&a, items)?.0)
+    }
 }
 
 /// The manifest's declared I/O and precision fields must agree with the
@@ -309,6 +383,9 @@ mod tests {
         let bad = TensorSpec { shape: vec![2, 3], dtype: Dtype::F32 };
         assert!(t.matches(&good));
         assert!(!t.matches(&bad));
+        // shape/data inconsistency (possible via the pub fields) must fail
+        let torn = Tensor { shape: vec![2, 2], data: vec![0.0; 3] };
+        assert!(!torn.matches(&good));
     }
 
     fn write_artifact(dir: &Path, manifest: &str, file: &str, content: &str) {
@@ -371,6 +448,36 @@ mod tests {
         let a1 = rt.load("g").unwrap();
         let a2 = rt.load("g").unwrap();
         assert!(Arc::ptr_eq(&a1, &a2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batched_execute_matches_per_item() {
+        let dir = tmpdir("batch");
+        write_artifact(&dir, GEMM_MANIFEST, "g.tprog.json", GEMM_TPROG);
+        let rt = Runtime::open(&dir).unwrap();
+        let items: Vec<Vec<Tensor>> = (0..3)
+            .map(|i| {
+                let base = i as f32;
+                vec![
+                    Tensor::new(vec![2, 2], vec![base, 1.0, 2.0, base + 1.0]).unwrap(),
+                    Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+                    Tensor::new(vec![2, 2], vec![0.5; 4]).unwrap(),
+                ]
+            })
+            .collect();
+        let batched = rt.execute_batch("g", &items).unwrap();
+        for (bi, inputs) in items.iter().enumerate() {
+            let single = rt.execute("g", inputs).unwrap();
+            assert_eq!(batched[bi][0].data, single[0].data, "item {bi}");
+        }
+        // a misshapen item fails validation before execution
+        let bad = vec![vec![
+            Tensor::zeros(vec![2, 3]),
+            Tensor::zeros(vec![2, 2]),
+            Tensor::zeros(vec![2, 2]),
+        ]];
+        assert!(rt.execute_batch("g", &bad).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,6 +1,9 @@
 //! Timing statistics: the measurement protocol of the paper's §4
 //! (10-run averages, kernel-only timing) plus percentiles for the
-//! serving-latency reports.
+//! serving-latency reports and a bounded reservoir for long-running
+//! metric streams.
+
+use crate::util::prng::Rng;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
@@ -55,6 +58,89 @@ pub fn tflops(m: usize, n: usize, k: usize, seconds: f64) -> f64 {
     (2.0 * m as f64 * n as f64 * k as f64) / seconds / 1e12
 }
 
+/// Bounded sample store for unbounded metric streams (Vitter's algorithm
+/// R over the in-repo PRNG).  Memory is O(capacity) no matter how many
+/// values are pushed; count/mean/min/max stay exact, and percentiles come
+/// from a uniform sample of the full stream.
+#[derive(Debug)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    capacity: usize,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize, seed: u64) -> Reservoir {
+        assert!(capacity >= 1, "reservoir capacity must be >= 1");
+        Reservoir {
+            samples: Vec::new(),
+            capacity,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.samples.len() < self.capacity {
+            self.samples.push(x);
+        } else {
+            // Keep each of the `count` values with equal probability.
+            let j = self.rng.below(self.count as usize);
+            if j < self.capacity {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Values pushed so far (exact, not sample count).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact running mean over every pushed value.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Summary over the stream: n/mean/min/max are exact; std and the
+    /// percentiles are estimated from the retained sample.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        let mut s = Summary::of(&self.samples);
+        s.n = self.count as usize;
+        s.mean = self.mean();
+        s.min = self.min;
+        s.max = self.max;
+        Some(s)
+    }
+
+    /// Retained sample size (bounded by capacity).
+    pub fn sample_len(&self) -> usize {
+        self.samples.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +181,48 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn reservoir_memory_is_bounded() {
+        // Regression for the metrics memory leak: 100k pushes must retain
+        // at most `capacity` samples while count/mean stay exact.
+        let mut r = Reservoir::new(64, 1);
+        for i in 0..100_000u64 {
+            r.push(i as f64);
+        }
+        assert!(r.sample_len() <= 64);
+        assert_eq!(r.count(), 100_000);
+        let want_mean = (100_000.0 - 1.0) / 2.0;
+        assert!((r.mean() - want_mean).abs() < 1e-6, "{}", r.mean());
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 100_000);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 99_999.0);
+        // the sampled median should land near the true median
+        assert!((s.p50 - want_mean).abs() < 15_000.0, "p50 {}", s.p50);
+    }
+
+    #[test]
+    fn reservoir_below_capacity_is_exact() {
+        let mut r = Reservoir::new(16, 2);
+        for &x in &[3.0, 1.0, 2.0] {
+            r.push(x);
+        }
+        assert_eq!(r.sample_len(), 3);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_empty_has_no_summary() {
+        let r = Reservoir::new(8, 3);
+        assert!(r.summary().is_none());
+        assert!(r.is_empty());
+        assert_eq!(r.mean(), 0.0);
     }
 }

@@ -47,7 +47,7 @@ fn gemm_request(rng: &mut Rng, m: usize, n: usize, k: usize, baseline: bool) -> 
 fn serves_concurrent_requests_correctly() {
     let dir = require_artifacts!();
     let rt = Arc::new(Runtime::open(&dir).unwrap());
-    let server = Server::start(rt, &DeviceModel::rtx3090(), ServerConfig::default());
+    let mut server = Server::start(rt, &DeviceModel::rtx3090(), ServerConfig::default());
 
     let mut rng = Rng::new(10);
     let mut expected = Vec::new();
@@ -83,7 +83,7 @@ fn serves_concurrent_requests_correctly() {
 fn routes_baseline_separately_and_unknown_shapes_fail_fast() {
     let dir = require_artifacts!();
     let rt = Arc::new(Runtime::open(&dir).unwrap());
-    let server = Server::start(rt, &DeviceModel::rtx3090(), ServerConfig::default());
+    let mut server = Server::start(rt, &DeviceModel::rtx3090(), ServerConfig::default());
 
     let mut rng = Rng::new(11);
     // baseline route
@@ -106,7 +106,7 @@ fn routes_to_autotuned_variant_when_multiple_cover_shape() {
     let dir = require_artifacts!();
     let rt = Arc::new(Runtime::open(&dir).unwrap());
     let device = DeviceModel::rtx3090();
-    let server = Server::start(rt, &device, ServerConfig::default());
+    let mut server = Server::start(rt, &device, ServerConfig::default());
     // 512 has two tile variants in the manifest (64^3 and 128x128x64);
     // the registry must have ranked them.
     let key = GemmKey::plain(512, 512, 512);
@@ -123,6 +123,129 @@ fn routes_to_autotuned_variant_when_multiple_cover_shape() {
     let resp = server.call(gemm_request(&mut rng, 512, 512, 512, false)).unwrap();
     assert_eq!(resp.variant, variants[0].artifact);
     server.shutdown();
+}
+
+#[test]
+fn post_shutdown_submit_fails_explicitly_and_keeps_metrics_consistent() {
+    use mlir_gemm::coordinator::Registry;
+    // Regression: `submit` used to count `on_submit` and then silently
+    // drop the job when the dispatcher was gone, so `submitted` could
+    // permanently exceed `completed + failed` and the caller blocked on a
+    // dead channel.
+    let rt = Arc::new(Runtime::without_manifest().unwrap());
+    let mut server =
+        Server::start_with_registry(rt, Arc::new(Registry::default()), ServerConfig::default());
+    server.shutdown();
+    let mut rng = Rng::new(13);
+    let rx = server.submit(gemm_request(&mut rng, 8, 8, 8, false));
+    let resp = rx
+        .recv()
+        .expect("an explicit error response, not a dropped channel");
+    assert!(resp.output.is_err());
+    let m = server.metrics();
+    assert_eq!(m.submitted, 1);
+    assert_eq!(m.completed + m.failed, m.submitted);
+}
+
+#[test]
+fn sharded_server_matches_unsharded_execution_bitwise() {
+    use mlir_gemm::coordinator::{
+        Registry, RegistryEntry, ShardConfig, ShardStrategy,
+    };
+    use mlir_gemm::runtime::ArtifactKind;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "big",
+          "file": "big.tprog.json",
+          "kind": "baseline",
+          "inputs": [
+            {"shape": [64, 64], "dtype": "f32"},
+            {"shape": [64, 64], "dtype": "f32"},
+            {"shape": [64, 64], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [64, 64], "dtype": "f32"}],
+          "m": 64, "n": 64, "k": 64, "dtype_in": "f32", "dtype_acc": "f32"
+        }
+      ]
+    }"#;
+    const TPROG: &str = r#"{
+      "format": "mlir-gemm-tprog-v1",
+      "name": "big",
+      "program": {
+        "type": "gemm", "m": 64, "n": 64, "k": 64,
+        "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+      }
+    }"#;
+
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_shard_srv_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), TPROG).unwrap();
+
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let mut reg = Registry::default();
+    let key = GemmKey::with_dtypes(64, 64, 64, Dtype::F32, Dtype::F32);
+    reg.register(
+        key.clone(),
+        RegistryEntry {
+            artifact: "big".into(),
+            kind: ArtifactKind::Baseline,
+            predicted_tflops: None,
+        },
+    );
+    let cfg = ServerConfig {
+        devices: 3,
+        workers: 3,
+        shard: ShardConfig {
+            strategy: ShardStrategy::Rows,
+            min_rows: 1,
+            min_k: 1,
+            min_flops: 0.0,
+        },
+        ..Default::default()
+    };
+    let mut server = Server::start_with_registry(rt.clone(), Arc::new(reg), cfg);
+
+    let mut rng = Rng::new(77);
+    let n_requests = 4;
+    for _ in 0..n_requests {
+        let a = Tensor::new(vec![64, 64], rng.normal_matrix(64, 64)).unwrap();
+        let b = Tensor::new(vec![64, 64], rng.normal_matrix(64, 64)).unwrap();
+        let c = Tensor::new(vec![64, 64], rng.normal_matrix(64, 64)).unwrap();
+        let want = rt
+            .execute("big", &[a.clone(), b.clone(), c.clone()])
+            .unwrap();
+        let resp = server
+            .call(GemmRequest {
+                key: key.clone(),
+                a,
+                b,
+                c,
+                bias: None,
+                use_baseline: false,
+            })
+            .unwrap();
+        let out = resp.output.expect("sharded request should succeed");
+        // row sharding must be bit-identical to the unsharded executor
+        assert_eq!(out.shape, want[0].shape);
+        assert_eq!(out.data, want[0].data);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, n_requests);
+    assert_eq!(m.failed, 0);
+    assert!(
+        m.per_device.len() >= 2,
+        "expected multi-device execution, got {:?}",
+        m.per_device
+    );
+    let shard_tasks: u64 = m.per_device.values().map(|l| l.tasks).sum();
+    assert_eq!(shard_tasks, n_requests * 3, "3 shards per request");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---------------------------------------------------------------------------
@@ -193,6 +316,129 @@ fn prop_batcher_never_reorders_within_variant_and_never_drops() {
             }
             if seen.len() != items.len() {
                 return Err(format!("dropped: {} of {}", seen.len(), items.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_releases_any_full_variant_and_never_starves() {
+    // Regression for cross-variant head-of-line blocking: with a huge
+    // batching window, Wait is only legal while *no* variant has
+    // max_batch ready items — the pre-fix batcher waited on the head
+    // variant's window even when a different variant behind it was full.
+    check(
+        Config { cases: 64, ..Default::default() },
+        |rng| {
+            let n = 2 + rng.below(30);
+            let max_batch = 1 + rng.below(4);
+            let variants = 1 + rng.below(3);
+            let items: Vec<usize> = (0..n).map(|_| rng.below(variants)).collect();
+            (items, max_batch)
+        },
+        |(items, max_batch)| {
+            let mut shrunk = Vec::new();
+            if items.len() > 2 {
+                let mut c = items.clone();
+                c.pop();
+                shrunk.push((c, *max_batch));
+            }
+            shrunk
+        },
+        |(items, max_batch)| {
+            let t0 = Instant::now();
+            let mut b: Batcher<usize> = Batcher::new(BatcherConfig {
+                max_batch: *max_batch,
+                max_wait: Duration::from_secs(3600),
+            });
+            for (id, v) in items.iter().enumerate() {
+                b.push(Queued {
+                    variant: format!("v{v}"),
+                    enqueued_at: t0,
+                    payload: id,
+                });
+            }
+            let mut released: std::collections::HashMap<String, usize> =
+                Default::default();
+            let mut per_variant_last: std::collections::HashMap<String, usize> =
+                Default::default();
+            let mut check_fifo = |variant: &String,
+                                  batch: &[Queued<usize>]|
+             -> Result<(), String> {
+                for item in batch {
+                    if let Some(&last) = per_variant_last.get(variant) {
+                        if item.payload <= last {
+                            return Err(format!(
+                                "reorder in {variant}: {} after {last}",
+                                item.payload
+                            ));
+                        }
+                    }
+                    per_variant_last.insert(variant.clone(), item.payload);
+                }
+                Ok(())
+            };
+            // Phase 1 (inside the window): full batches release, and a
+            // multi-item queue never releases a partial batch.
+            loop {
+                let queued = b.len();
+                match b.next_batch(t0) {
+                    BatchDecision::Run { variant, batch } => {
+                        if queued > 1 && batch.len() != *max_batch {
+                            return Err(format!(
+                                "partial batch of {} released inside the window",
+                                batch.len()
+                            ));
+                        }
+                        check_fifo(&variant, &batch)?;
+                        *released.entry(variant).or_insert(0) += batch.len();
+                    }
+                    BatchDecision::Wait(_) => break,
+                    BatchDecision::Idle => break,
+                }
+            }
+            // The HoL property: once we Wait, no variant may still hold a
+            // full batch.
+            if !b.is_empty() {
+                let mut remaining: std::collections::HashMap<String, usize> =
+                    Default::default();
+                for v in items.iter() {
+                    *remaining.entry(format!("v{v}")).or_insert(0) += 1;
+                }
+                for (v, n) in &released {
+                    *remaining.get_mut(v).unwrap() -= n;
+                }
+                for (v, n) in &remaining {
+                    if *n >= *max_batch {
+                        return Err(format!(
+                            "variant {v} blocked with {n} >= max_batch ready items"
+                        ));
+                    }
+                }
+            }
+            // Phase 2 (window expired): everything drains, FIFO preserved.
+            let mut drained = 0usize;
+            loop {
+                match b.next_batch(t0 + Duration::from_secs(7200)) {
+                    BatchDecision::Idle => break,
+                    BatchDecision::Wait(_) => {
+                        return Err("waited with expired deadline".into())
+                    }
+                    BatchDecision::Run { variant, batch } => {
+                        check_fifo(&variant, &batch)?;
+                        drained += batch.len();
+                    }
+                }
+            }
+            let phase1: usize = released.values().sum();
+            if phase1 + drained != items.len() {
+                return Err(format!(
+                    "dropped items: {} + {} != {}",
+                    phase1,
+                    drained,
+                    items.len()
+                ));
             }
             Ok(())
         },

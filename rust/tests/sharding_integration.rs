@@ -1,0 +1,194 @@
+//! Integration: sharded multi-device execution against the unsharded
+//! executor, on the same loaded artifact.
+//!
+//! Row sharding must be bit-identical (every output element is computed
+//! by the same f32 operation sequence); split-K regroups the f32
+//! reduction, so it is tolerance-bounded instead.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mlir_gemm::coordinator::{
+    modeled_speedup, plan_for, ShardConfig, ShardPlan, ShardPool, ShardStrategy,
+};
+use mlir_gemm::runtime::{Runtime, Tensor};
+use mlir_gemm::schedule::{Dtype, Schedule};
+use mlir_gemm::sim::DeviceModel;
+use mlir_gemm::util::prng::Rng;
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "g32",
+      "file": "g32.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [48, 32], "dtype": "f32"},
+        {"shape": [32, 40], "dtype": "f32"},
+        {"shape": [48, 40], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [48, 40], "dtype": "f32"}],
+      "m": 48, "n": 40, "k": 32, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "g16",
+      "file": "g16.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [16, 64], "dtype": "f32"},
+        {"shape": [64, 24], "dtype": "f32"},
+        {"shape": [16, 24], "dtype": "f32"},
+        {"shape": [24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [16, 24], "dtype": "f32"}],
+      "m": 16, "n": 24, "k": 64, "dtype_in": "f16", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const G32: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "g32",
+  "program": {
+    "type": "gemm", "m": 48, "n": 40, "k": 32,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const G16: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "g16",
+  "program": {
+    "type": "gemm", "m": 16, "n": 24, "k": 64,
+    "dtype_in": "f16", "dtype_acc": "f32", "epilogue": "bias_relu", "fused": true
+  }
+}"#;
+
+fn artifact_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_shard_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("g32.tprog.json"), G32).unwrap();
+    std::fs::write(dir.join("g16.tprog.json"), G16).unwrap();
+    dir
+}
+
+fn tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    Tensor { shape, data }
+}
+
+#[test]
+fn row_sharded_f32_is_bit_identical_to_unsharded_artifact() {
+    let dir = artifact_dir("f32");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let artifact = rt.load("g32").unwrap();
+    let mut rng = Rng::new(31);
+    let a = tensor(&mut rng, vec![48, 32]);
+    let b = tensor(&mut rng, vec![32, 40]);
+    let c = tensor(&mut rng, vec![48, 40]);
+    let want = rt
+        .execute("g32", &[a.clone(), b.clone(), c.clone()])
+        .unwrap();
+
+    let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), 4);
+    let plan = ShardPlan::rows(48, 40, 32, pool.devices(), 1);
+    assert_eq!(plan.shards.len(), 4);
+    let got = pool
+        .execute(artifact.program(), &plan, &a, &b, &c, None)
+        .unwrap();
+    assert_eq!(got.shape, want[0].shape);
+    assert_eq!(got.data, want[0].data, "row-sharded f32 output drifted");
+
+    let stats = pool.shutdown();
+    assert_eq!(stats.iter().map(|s| s.tasks).sum::<u64>(), 4);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn split_k_sharded_f16_matches_unsharded_artifact_within_tolerance() {
+    let dir = artifact_dir("f16");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let artifact = rt.load("g16").unwrap();
+    let mut rng = Rng::new(32);
+    let a = tensor(&mut rng, vec![16, 64]);
+    let b = tensor(&mut rng, vec![64, 24]);
+    let c = tensor(&mut rng, vec![16, 24]);
+    let bias = tensor(&mut rng, vec![24]);
+    let want = rt
+        .execute(
+            "g16",
+            &[a.clone(), b.clone(), c.clone(), bias.clone()],
+        )
+        .unwrap();
+
+    let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), 4);
+    let plan = ShardPlan::split_k(16, 24, 64, pool.devices(), 1);
+    assert_eq!(plan.shards.len(), 4);
+    let got = pool
+        .execute(artifact.program(), &plan, &a, &b, &c, Some(&bias))
+        .unwrap();
+    assert_eq!(got.shape, want[0].shape);
+    let mut worst = 0f64;
+    for (g, w) in got.data.iter().zip(&want[0].data) {
+        worst = worst.max((*g as f64 - *w as f64).abs());
+    }
+    // Same f16 input casts, same f32 products; only the reduction
+    // grouping differs, so the drift is a few ULPs of the f32 partials.
+    assert!(worst < 1e-3, "split-K drifted by {worst}");
+    // bias_relu applied exactly once, in the reduction tail
+    assert!(got.data.iter().all(|&v| v >= 0.0));
+    pool.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auto_planner_routes_real_artifact_programs() {
+    let dir = artifact_dir("plan");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let artifact = rt.load("g16").unwrap();
+    // Tiny problems refuse to shard under the default thresholds...
+    assert!(plan_for(artifact.program(), 4, &ShardConfig::default()).is_none());
+    // ...but shard once the thresholds say it is worth it.
+    let cfg = ShardConfig {
+        strategy: ShardStrategy::Auto,
+        min_rows: 4,
+        min_k: 4,
+        min_flops: 0.0,
+    };
+    let plan = plan_for(artifact.program(), 4, &cfg).expect("plan");
+    assert!(plan.is_sharded());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn modeled_speedup_monotone_for_paper_shape() {
+    let s = Schedule::optimized(
+        8192,
+        8192,
+        8192,
+        Dtype::F32,
+        (128, 128, 64),
+        (64, 32, 32),
+    )
+    .unwrap();
+    let models: Vec<DeviceModel> = vec![DeviceModel::rtx3090(); 8];
+    let mut last = 1.0;
+    for devices in [2usize, 4, 8] {
+        let plan = ShardPlan::rows(8192, 8192, 8192, devices, 64);
+        let speedup = modeled_speedup(&s, &plan, &models);
+        assert!(
+            speedup > last,
+            "speedup not monotone at {devices} devices: {speedup} <= {last}"
+        );
+        assert!(
+            speedup <= devices as f64 * 1.1,
+            "superlinear modeled speedup at {devices} devices: {speedup}"
+        );
+        last = speedup;
+    }
+}
