@@ -1,0 +1,205 @@
+//! Micro-kernel engine throughput: naive vs tiled vs threaded GFLOP/s
+//! across GEMM problem sizes, with a bitwise cross-check (every policy
+//! must reproduce the naive kernel exactly) and a machine-readable JSON
+//! record.
+//!
+//! The JSON lands in `reports/exec_kernel.json` on every run;
+//! `MLIR_GEMM_RECORD_BASELINE=1` additionally refreshes the committed
+//! baseline `BENCH_exec_kernel.json` at the repo root (the acceptance
+//! record for the >= 3x-over-naive-at-1024^3 criterion on the CI runner
+//! class).  `make bench-smoke` runs this binary like every other bench,
+//! so the engine cannot bit-rot.
+
+mod bench_common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use mlir_gemm::harness::{bar_chart, CsvTable, FigureOutput};
+use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
+use mlir_gemm::util::json::{self, Json};
+use mlir_gemm::util::prng::Rng;
+
+struct Row {
+    size: usize,
+    policy: &'static str,
+    seconds: f64,
+    gflops: f64,
+}
+
+fn main() {
+    let smoke = bench_common::smoke();
+    let sizes: Vec<usize> = if smoke {
+        vec![256, 1024]
+    } else {
+        vec![256, 512, 1024, 2048]
+    };
+    let iters = if smoke { 2 } else { 5 };
+    let policies: [(&'static str, KernelPolicy); 3] = [
+        ("naive", KernelPolicy::Naive),
+        ("tiled", KernelPolicy::Tiled(Blocking::default())),
+        ("threaded", KernelPolicy::Threaded(Blocking::default(), 0)),
+    ];
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &size in &sizes {
+        let (m, n, k) = (size, size, size);
+        let mut rng = Rng::new(0xEC + size as u64);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let mut reference: Option<Vec<f32>> = None;
+        for (name, policy) in policies {
+            let mut out = c.clone();
+            // one warmup (also the correctness run) + `iters` timed
+            kernel::matmul(policy, &mut out, &a, &b, m, n, k);
+            match &reference {
+                None => reference = Some(out.clone()),
+                Some(r) => {
+                    let ok = r
+                        .iter()
+                        .zip(&out)
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(ok, "{name} at {size}^3 drifted from naive");
+                }
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                out.copy_from_slice(&c);
+                let t = Instant::now();
+                kernel::matmul(policy, &mut out, &a, &b, m, n, k);
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            rows.push(Row { size, policy: name, seconds: best, gflops: flops / best / 1e9 });
+        }
+    }
+
+    // Human-readable figure + CSV like every other bench.
+    let mut table = CsvTable::new(&["size", "policy", "best_seconds", "gflops", "speedup_vs_naive"]);
+    for row in &rows {
+        let naive = rows
+            .iter()
+            .find(|r| r.size == row.size && r.policy == "naive")
+            .map(|r| r.gflops)
+            .unwrap_or(0.0);
+        table.row(vec![
+            row.size.to_string(),
+            row.policy.to_string(),
+            format!("{:.6}", row.seconds),
+            format!("{:.3}", row.gflops),
+            format!("{:.3}", if naive > 0.0 { row.gflops / naive } else { 0.0 }),
+        ]);
+    }
+    let top = *sizes.last().unwrap();
+    let bars: Vec<(String, f64)> = rows
+        .iter()
+        .filter(|r| r.size == top)
+        .map(|r| (r.policy.to_string(), r.gflops))
+        .collect();
+    let bar_refs: Vec<(&str, f64)> = bars.iter().map(|(l, v)| (l.as_str(), *v)).collect();
+    let output = FigureOutput {
+        name: "exec_kernel",
+        table,
+        chart: bar_chart(&format!("GFLOP/s, {top}^3 f32 GEMM by kernel policy"), &bar_refs, 40),
+        summary: format!(
+            "micro-kernel engine throughput, naive vs tiled vs threaded \
+             ({threads} hw threads); every policy bit-checked against naive"
+        ),
+    };
+    bench_common::emit(&output);
+
+    // Machine-readable record.
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("size", json::num(r.size as f64)),
+                ("policy", json::s(r.policy)),
+                ("best_seconds", json::num(r.seconds)),
+                ("gflops", json::num((r.gflops * 1000.0).round() / 1000.0)),
+            ])
+        })
+        .collect();
+    let speedup_at = |size: usize, policy: &str| -> f64 {
+        let naive = rows
+            .iter()
+            .find(|r| r.size == size && r.policy == "naive")
+            .map(|r| r.gflops)
+            .unwrap_or(0.0);
+        let p = rows
+            .iter()
+            .find(|r| r.size == size && r.policy == policy)
+            .map(|r| r.gflops)
+            .unwrap_or(0.0);
+        if naive > 0.0 {
+            (p / naive * 1000.0).round() / 1000.0
+        } else {
+            0.0
+        }
+    };
+    let headline = sizes.iter().copied().find(|&s| s == 1024).unwrap_or(top);
+    // Provenance keys are part of the baseline schema: a
+    // MLIR_GEMM_RECORD_BASELINE refresh must not drop them from the
+    // committed BENCH_exec_kernel.json.
+    let runner = std::env::var("MLIR_GEMM_RUNNER").unwrap_or_else(|_| {
+        format!("unlabeled host, {threads} hw threads (set MLIR_GEMM_RUNNER to label)")
+    });
+    let doc = json::obj(vec![
+        ("bench", json::s("exec_kernel")),
+        ("smoke", Json::Bool(smoke)),
+        ("hw_threads", json::num(threads as f64)),
+        ("policies", json::s("naive | tiled (default blocking) | threaded (auto)")),
+        (
+            "source",
+            json::s(
+                "rust/benches/exec_kernel.rs (cargo bench); refresh the committed \
+                 baseline with MLIR_GEMM_RECORD_BASELINE=1 cargo bench --bench exec_kernel",
+            ),
+        ),
+        ("runner", json::s(&runner)),
+        (
+            "notes",
+            json::s(
+                "acceptance target: best engine policy >= 3x naive GFLOP/s at 1024^3 \
+                 f32 on the 4-vCPU CI runner class; small-core/shared hosts may fall \
+                 short at 1024^3 while clearing 3x at 2048^3 where B leaves the LLC",
+            ),
+        ),
+        ("results", Json::Arr(results)),
+        (
+            "speedup_over_naive",
+            json::obj(vec![
+                ("size", json::num(headline as f64)),
+                ("tiled", json::num(speedup_at(headline, "tiled"))),
+                ("threaded", json::num(speedup_at(headline, "threaded"))),
+            ]),
+        ),
+        (
+            "speedup_over_naive_largest",
+            json::obj(vec![
+                ("size", json::num(top as f64)),
+                ("tiled", json::num(speedup_at(top, "tiled"))),
+                ("threaded", json::num(speedup_at(top, "threaded"))),
+            ]),
+        ),
+    ]);
+    let text = format!("{doc}\n");
+    let reports = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports");
+    let _ = std::fs::create_dir_all(&reports);
+    let json_path = reports.join("exec_kernel.json");
+    match std::fs::write(&json_path, &text) {
+        Ok(()) => println!("json -> {}", json_path.display()),
+        Err(e) => eprintln!("warning: cannot write {}: {e}", json_path.display()),
+    }
+    if std::env::var("MLIR_GEMM_RECORD_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        let baseline = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec_kernel.json");
+        match std::fs::write(&baseline, &text) {
+            Ok(()) => println!("baseline -> {}", baseline.display()),
+            Err(e) => eprintln!("warning: cannot write {}: {e}", baseline.display()),
+        }
+    }
+}

@@ -6,9 +6,19 @@
 //! (static 48 KiB shared memory, <=255 registers/thread, tiles dividing the
 //! problem, warp tiles dividing thread-block tiles, everything a multiple
 //! of the 16^3 WMMA op) and ranks candidates with the performance model.
+//!
+//! [`sweep_cpu`] is the same search for the executor's CPU micro-kernel
+//! engine: it sweeps the cache-block sizes of
+//! [`crate::runtime::kernel::KernelPolicy`] by *measurement* (the serving
+//! substrate is the host, so wall clock ranks candidates the way the
+//! model ranks GPU tiles).
 
+use std::time::Instant;
+
+use crate::runtime::kernel::{self, Blocking, KernelPolicy};
 use crate::schedule::{Dtype, Schedule};
 use crate::sim::{simulate, DeviceModel, SimResult};
+use crate::util::prng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct Candidate {
@@ -65,6 +75,75 @@ pub fn enumerate(
         })
         .collect();
     cands.sort_by(|a, b| b.result.tflops.partial_cmp(&a.result.tflops).unwrap());
+    cands
+}
+
+/// One measured CPU kernel configuration.
+#[derive(Debug, Clone)]
+pub struct CpuCandidate {
+    pub policy: KernelPolicy,
+    /// Best (minimum) wall time over the timed iterations, seconds.
+    pub seconds: f64,
+    pub gflops: f64,
+}
+
+/// The cache-block space swept on CPU: MC x KC x NC over the plausible
+/// L2/L3 budgets, the analog of the paper's thread-block tile grid.
+pub fn cpu_blockings() -> Vec<Blocking> {
+    let mut out = Vec::new();
+    for &mc in &[64usize, 128, 256] {
+        for &kc in &[128usize, 256, 512] {
+            for &nc in &[256usize, 1024] {
+                out.push(Blocking { mc, kc, nc });
+            }
+        }
+    }
+    out
+}
+
+/// Measure every CPU blocking (plus the naive reference) on an
+/// m x n x k problem and rank by GFLOP/s, best first.  `threads == 1`
+/// sweeps the single-thread tiled kernel; any other value sweeps the
+/// threaded kernel with that thread count (0 = auto).  Each candidate
+/// gets one warmup plus `iters` timed runs; the minimum counts (the
+/// paper's protocol keeps the best-performing variant).
+pub fn sweep_cpu(
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    iters: usize,
+) -> Vec<CpuCandidate> {
+    let mut rng = Rng::new(0xC9);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let mut out = vec![0.0f32; m * n];
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let mut policies = vec![KernelPolicy::Naive];
+    for bs in cpu_blockings() {
+        policies.push(if threads == 1 {
+            KernelPolicy::Tiled(bs)
+        } else {
+            KernelPolicy::Threaded(bs, threads)
+        });
+    }
+    let mut cands: Vec<CpuCandidate> = policies
+        .into_iter()
+        .map(|policy| {
+            let mut best = f64::INFINITY;
+            for it in 0..=iters.max(1) {
+                out.fill(0.0);
+                let t = Instant::now();
+                kernel::matmul(policy, &mut out, &a, &b, m, n, k);
+                let dt = t.elapsed().as_secs_f64();
+                if it > 0 {
+                    best = best.min(dt);
+                }
+            }
+            CpuCandidate { policy, seconds: best, gflops: flops / best.max(1e-12) / 1e9 }
+        })
+        .collect();
+    cands.sort_by(|x, y| y.gflops.partial_cmp(&x.gflops).unwrap());
     cands
 }
 
@@ -138,6 +217,19 @@ mod tests {
     #[test]
     fn indivisible_problem_yields_none() {
         assert!(best(100, 100, 100, Dtype::F32, &d()).is_none());
+    }
+
+    #[test]
+    fn cpu_sweep_measures_and_ranks_every_blocking() {
+        let cands = sweep_cpu(48, 48, 48, 1, 1);
+        assert_eq!(cands.len(), cpu_blockings().len() + 1, "naive + every blocking");
+        assert!(cands.iter().any(|c| c.policy == KernelPolicy::Naive));
+        for c in &cands {
+            assert!(c.gflops > 0.0 && c.seconds > 0.0, "{c:?}");
+        }
+        for pair in cands.windows(2) {
+            assert!(pair[0].gflops >= pair[1].gflops);
+        }
     }
 
     #[test]

@@ -24,6 +24,20 @@ pub struct DeviceLoad {
     pub busy_sec: f64,
 }
 
+/// Work executed under one GEMM kernel policy (`--kernel` A/B
+/// accounting).  Attributed at *execution* time — a mid-run policy flip
+/// opens a new entry instead of blending totals under one label.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelLoad {
+    /// Completed GEMM requests.
+    pub requests: u64,
+    /// Total GEMM flops (2·m·n·k per request; transformer programs are
+    /// not counted).
+    pub flops: f64,
+    /// Executor busy time spent on that work, seconds.
+    pub busy_sec: f64,
+}
+
 #[derive(Debug)]
 struct Inner {
     submitted: u64,
@@ -36,6 +50,8 @@ struct Inner {
     exec_sec: Reservoir,
     per_variant: BTreeMap<String, u64>,
     per_device: BTreeMap<usize, DeviceLoad>,
+    /// GEMM work keyed by the kernel policy active when it executed.
+    per_kernel: BTreeMap<String, KernelLoad>,
 }
 
 impl Default for Inner {
@@ -51,6 +67,7 @@ impl Default for Inner {
             exec_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xE7EC),
             per_variant: BTreeMap::new(),
             per_device: BTreeMap::new(),
+            per_kernel: BTreeMap::new(),
         }
     }
 }
@@ -72,6 +89,7 @@ pub struct MetricsSnapshot {
     pub exec: Option<Summary>,
     pub per_variant: BTreeMap<String, u64>,
     pub per_device: BTreeMap<usize, DeviceLoad>,
+    pub per_kernel: BTreeMap<String, KernelLoad>,
 }
 
 impl Metrics {
@@ -108,6 +126,27 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
+    /// Make a kernel policy visible in the report even before (or
+    /// without) any work executing under it.
+    pub fn on_kernel_policy(&self, policy: &str) {
+        self.inner
+            .lock()
+            .unwrap()
+            .per_kernel
+            .entry(policy.to_string())
+            .or_default();
+    }
+
+    /// Account completed GEMM work under the kernel policy that actually
+    /// executed it (read at execution time, not at startup or snapshot).
+    pub fn on_kernel_work(&self, policy: &str, requests: u64, flops: f64, busy_sec: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let load = g.per_kernel.entry(policy.to_string()).or_default();
+        load.requests += requests;
+        load.flops += flops;
+        load.busy_sec += busy_sec;
+    }
+
     /// One task executed on device `device`, busy for `busy_sec`.
     pub fn on_device_task(&self, device: usize, busy_sec: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -129,6 +168,7 @@ impl Metrics {
             exec: g.exec_sec.summary(),
             per_variant: g.per_variant.clone(),
             per_device: g.per_device.clone(),
+            per_kernel: g.per_kernel.clone(),
         }
     }
 }
@@ -155,6 +195,22 @@ impl MetricsSnapshot {
         }
         if let Some(q) = &self.queue_wait {
             out.push_str(&format!("queue wait: p50 {:.3} ms\n", q.p50 * 1e3));
+        }
+        for (policy, load) in &self.per_kernel {
+            if load.busy_sec > 0.0 && load.flops > 0.0 {
+                out.push_str(&format!(
+                    "kernel {policy}: {} reqs, {:.2} GFLOP, {:.2} GFLOP/s busy-throughput\n",
+                    load.requests,
+                    load.flops / 1e9,
+                    load.flops / load.busy_sec / 1e9
+                ));
+            } else {
+                out.push_str(&format!(
+                    "kernel {policy}: {} reqs, {:.2} GFLOP\n",
+                    load.requests,
+                    load.flops / 1e9
+                ));
+            }
         }
         for (variant, count) in &self.per_variant {
             out.push_str(&format!("  {variant}: {count}\n"));
@@ -226,6 +282,34 @@ mod tests {
         // exact running mean of 0.001 * (0..10 cycling) = 0.0045
         assert!((l.mean - 0.0045).abs() < 1e-9, "mean {}", l.mean);
         assert_eq!(s.mean_batch_size, 4.0);
+    }
+
+    #[test]
+    fn kernel_work_is_segmented_per_policy() {
+        let m = Metrics::new();
+        m.on_kernel_policy("naive");
+        m.on_kernel_work("naive", 2, 2.0e9, 0.5);
+        // A mid-run policy flip opens a new entry instead of blending
+        // the naive totals under the new label.
+        m.on_kernel_work("tiled:128,256,1024", 1, 3.0e9, 0.25);
+        let s = m.snapshot();
+        assert_eq!(s.per_kernel["naive"].requests, 2);
+        assert!((s.per_kernel["naive"].flops - 2.0e9).abs() < 1.0);
+        assert_eq!(s.per_kernel["tiled:128,256,1024"].requests, 1);
+        let report = s.report();
+        // 2 GFLOP / 0.5 s = 4 GFLOP/s; 3 GFLOP / 0.25 s = 12 GFLOP/s
+        assert!(report.contains("kernel naive: 2 reqs"), "{report}");
+        assert!(report.contains("4.00 GFLOP/s"), "{report}");
+        assert!(report.contains("kernel tiled:128,256,1024: 1 reqs"), "{report}");
+        assert!(report.contains("12.00 GFLOP/s"), "{report}");
+    }
+
+    #[test]
+    fn kernel_policy_visible_before_any_work() {
+        let m = Metrics::new();
+        m.on_kernel_policy("threaded:128,256,1024,0");
+        let report = m.snapshot().report();
+        assert!(report.contains("kernel threaded:128,256,1024,0: 0 reqs"), "{report}");
     }
 
     #[test]

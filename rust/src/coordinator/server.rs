@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Program, Runtime, Tensor};
+use crate::runtime::{kernel, KernelPolicy, Program, Runtime, Tensor};
 use crate::sim::DeviceModel;
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
@@ -71,6 +71,12 @@ pub struct ServerConfig {
     /// instead of modeled TFLOPs (profile-guided routing; the model ranks
     /// for the paper's GPU, measurement ranks for the actual substrate).
     pub rerank_measured: bool,
+    /// GEMM kernel policy for the executor (`--kernel` A/B plumbing).
+    /// `Some` sets the process-global policy at startup; `None` keeps
+    /// whatever is already selected.  Policies are bit-identical — this
+    /// changes throughput only, which the metrics report attributes to
+    /// the policy by name.
+    pub kernel: Option<KernelPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +87,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             shard: ShardConfig::default(),
             rerank_measured: false,
+            kernel: None,
         }
     }
 }
@@ -151,7 +158,11 @@ impl Server {
         registry: Arc<Registry>,
         cfg: ServerConfig,
     ) -> Server {
+        if let Some(policy) = cfg.kernel {
+            kernel::set_global_policy(policy);
+        }
         let metrics = Arc::new(Metrics::new());
+        metrics.on_kernel_policy(&kernel::global_policy().name());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
 
@@ -193,7 +204,24 @@ impl Server {
                             }
                             let result =
                                 sharding::execute_shard(&task.program, &task.inputs);
-                            m.on_device_task(dev, started.elapsed().as_secs_f64());
+                            let busy = started.elapsed().as_secs_f64();
+                            m.on_device_task(dev, busy);
+                            // Per-shard kernel attribution: true executor
+                            // busy time and the policy active while the
+                            // shard actually ran (shard flops sum to the
+                            // whole job's across the plan).
+                            if result.is_ok() {
+                                if let Program::Gemm { m: sm, n: sn, k: sk, .. } =
+                                    task.program
+                                {
+                                    m.on_kernel_work(
+                                        &kernel::global_policy().name(),
+                                        0,
+                                        2.0 * sm as f64 * sn as f64 * sk as f64,
+                                        busy,
+                                    );
+                                }
+                            }
                             finish_shard(&m, &task.job, task.shard_idx, result);
                         }
                     }
@@ -355,6 +383,10 @@ impl Server {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
+        // The kernel policy is process-global and may have changed since
+        // startup; work is attributed per policy at execution time, so
+        // here we only make the currently active policy visible.
+        self.metrics.on_kernel_policy(&kernel::global_policy().name());
         self.metrics.snapshot()
     }
 
@@ -377,6 +409,7 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.metrics.on_kernel_policy(&kernel::global_policy().name());
         self.metrics.snapshot()
     }
 }
@@ -576,12 +609,17 @@ fn finish_shard(
     let queue_wait = started.duration_since(sj.submitted_at);
     let total = sj.submitted_at.elapsed();
     match &output {
-        Ok(_) => metrics.on_complete(
-            &sj.variant,
-            total.as_secs_f64(),
-            queue_wait.as_secs_f64(),
-            exec_time.as_secs_f64(),
-        ),
+        Ok(_) => {
+            metrics.on_complete(
+                &sj.variant,
+                total.as_secs_f64(),
+                queue_wait.as_secs_f64(),
+                exec_time.as_secs_f64(),
+            );
+            // Flops and busy time were attributed per shard as each one
+            // executed; here only the completed request is counted.
+            metrics.on_kernel_work(&kernel::global_policy().name(), 1, 0.0, 0.0);
+        }
         Err(_) => metrics.on_fail(),
     }
     if let Some(reply) = sj.reply.lock().unwrap().take() {
@@ -671,9 +709,23 @@ fn run_batch(
     // item actually experienced in the executor), excluding artifact load
     // and the validation pass above.
     let call_started = Instant::now();
+    let item_flops = match *artifact.program() {
+        Program::Gemm { m, n, k, .. } => 2.0 * m as f64 * n as f64 * k as f64,
+        _ => 0.0,
+    };
     match rt.execute_batch_timed(&artifact, &items) {
         Ok((outs, timing)) => {
             metrics.on_device_task(device, timing.exec_seconds);
+            if item_flops > 0.0 {
+                // Attributed to the policy active *now*, on this worker:
+                // a mid-run policy flip segments instead of blending.
+                metrics.on_kernel_work(
+                    &kernel::global_policy().name(),
+                    outs.len() as u64,
+                    item_flops * outs.len() as f64,
+                    timing.exec_seconds,
+                );
+            }
             let exec_time = call_started.elapsed();
             for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {
                 let queue_wait = exec_started.duration_since(submitted_at);

@@ -23,6 +23,11 @@
 //! Each pool device is backed by its own worker thread and its own
 //! [`DeviceModel`], so modeled speedup ([`modeled_speedup`]) is checkable
 //! against measured speedup (`benches/sharding.rs`).
+//!
+//! Shard execution routes through [`Program::execute`] and therefore the
+//! GEMM micro-kernel engine ([`crate::runtime::kernel`]).  Kernel
+//! policies are bit-identical, so both invariants above hold under every
+//! policy (pinned by `rust/tests/kernel_equivalence.rs`).
 
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};

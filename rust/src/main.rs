@@ -34,6 +34,9 @@ const SPEC: &[Spec] = &[
     ("requests", true, "serve: number of synthetic requests (default 64)"),
     ("workers", true, "serve: worker threads (default 2)"),
     ("devices", true, "serve: device contexts; >1 shards large GEMMs (default 1)"),
+    ("kernel", true, "serve: GEMM kernel policy naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
+    ("target", true, "autotune: gpu (modeled tile space) | cpu (measured block sweep); default gpu"),
+    ("threads", true, "autotune --target cpu: threads for the threaded policy (default auto)"),
     ("out-dir", true, "bench: directory for CSV output (default reports/)"),
     ("measured", false, "bench: include real-execution subsets"),
     ("top", true, "autotune: show top-N candidates (default 8)"),
@@ -153,6 +156,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
 }
 
 fn cmd_autotune(args: &Args) -> Result<()> {
+    if args.get_or("target", "gpu") == "cpu" {
+        return cmd_autotune_cpu(args);
+    }
     let d = device(args)?;
     let size = args.get_usize("size", 4096)?;
     let a = acc(args)?;
@@ -181,6 +187,35 @@ fn cmd_autotune(args: &Args) -> Result<()> {
         );
     }
     println!("\nbest: {}", cands[0].schedule.name);
+    Ok(())
+}
+
+/// CPU block-size sweep: measure the micro-kernel engine's policies the
+/// way the GPU path ranks modeled tile configurations.
+fn cmd_autotune_cpu(args: &Args) -> Result<()> {
+    let size = args.get_usize("size", 1024)?;
+    let threads = args.get_usize("threads", 0)?;
+    let iters = args.get_usize("iters", 3)?;
+    let top = args.get_usize("top", 8)?;
+    let cands = autotune::sweep_cpu(size, size, size, threads, iters);
+    let naive = cands
+        .iter()
+        .find(|c| c.policy == mlir_gemm::runtime::KernelPolicy::Naive)
+        .map(|c| c.gflops)
+        .unwrap_or(0.0);
+    println!("{:<32} {:>10} {:>12} {:>10}", "policy", "gflops", "seconds", "vs naive");
+    for c in cands.iter().take(top.max(1)) {
+        println!(
+            "{:<32} {:>10.2} {:>12.6} {:>9.2}x",
+            c.policy.name(),
+            c.gflops,
+            c.seconds,
+            if naive > 0.0 { c.gflops / naive } else { 0.0 }
+        );
+    }
+    if let Some(best) = cands.first() {
+        println!("\nbest: {}", best.policy.name());
+    }
     Ok(())
 }
 
@@ -285,6 +320,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
     let devices = args.get_usize("devices", 1)?;
+    let kernel = args
+        .get("kernel")
+        .map(mlir_gemm::runtime::KernelPolicy::parse)
+        .transpose()?;
 
     let mut server = Server::start(
         rt.clone(),
@@ -292,6 +331,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ServerConfig {
             workers,
             devices,
+            kernel,
             ..Default::default()
         },
     );

@@ -18,10 +18,13 @@
 //!   `python/compile/model.py::transformer_layer`, every GEMM routed
 //!   through the same precision emulation.
 
+use std::borrow::Cow;
+
 use crate::schedule::Dtype;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Result};
 
+use super::kernel;
 use super::Tensor;
 
 /// Format tag every artifact program file must carry.
@@ -98,8 +101,34 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
-/// Round an f32 through f16 and back (the kernel's input cast).
+/// Round an f32 to the nearest f16-representable value (the kernel's
+/// input cast), bit-identical to `f16_bits_to_f32(f32_to_f16_bits(x))`.
+///
+/// Single-pass hot path: for the f16 normal range the result is the
+/// input with its low 13 mantissa bits rounded away (round-to-nearest-
+/// even), entirely in f32 bits — no intermediate u16 materialized.  The
+/// mantissa carry naturally bumps the f32 exponent exactly like the f16
+/// conversion's carry, so the only extra check is saturation to infinity
+/// at 2^16.  Zeros, subnormals, infinities, and NaNs (rare in GEMM
+/// operands) fall back to the two-step conversion.
+#[inline]
 pub fn round_f16(x: f32) -> f32 {
+    const F16_MIN_NORMAL: u32 = 0x3880_0000; // 2^-14 as f32 bits
+    const F16_OVERFLOW: u32 = 0x4780_0000; // 2^16 as f32 bits
+    const EXP_INF: u32 = 0x7f80_0000;
+    let bits = x.to_bits();
+    let mag = bits & 0x7fff_ffff;
+    if (F16_MIN_NORMAL..EXP_INF).contains(&mag) {
+        let rem = bits & 0x1fff;
+        let mut out = bits & !0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (out & 0x2000) != 0) {
+            out += 0x2000;
+        }
+        if (out & 0x7fff_ffff) >= F16_OVERFLOW {
+            return f32::from_bits((bits & 0x8000_0000) | EXP_INF);
+        }
+        return f32::from_bits(out);
+    }
     f16_bits_to_f32(f32_to_f16_bits(x))
 }
 
@@ -126,12 +155,21 @@ pub fn round_to(dtype: Dtype, x: f32) -> f32 {
     }
 }
 
-fn cast_slice(dtype: Dtype, v: &[f32]) -> Vec<f32> {
+/// Round a slice to the storage dtype.  For `Dtype::F32` the cast is the
+/// identity, so the input is *borrowed* — no allocation, no copy — which
+/// removes a full operand copy from every f32 execute.
+fn cast_slice(dtype: Dtype, v: &[f32]) -> Cow<'_, [f32]> {
     match dtype {
-        Dtype::F32 => v.to_vec(),
-        Dtype::F16 => v.iter().map(|&x| round_f16(x)).collect(),
-        Dtype::Bf16 => v.iter().map(|&x| round_bf16(x)).collect(),
+        Dtype::F32 => Cow::Borrowed(v),
+        Dtype::F16 => Cow::Owned(v.iter().map(|&x| round_f16(x)).collect()),
+        Dtype::Bf16 => Cow::Owned(v.iter().map(|&x| round_bf16(x)).collect()),
     }
+}
+
+/// Owned rounded copy (for the C accumulator, which is mutated in place
+/// and therefore always needs its own buffer).
+fn cast_owned(dtype: Dtype, v: &[f32]) -> Vec<f32> {
+    cast_slice(dtype, v).into_owned()
 }
 
 /// Append `src` to `dst` rounded to `dtype`: the precision cast fused
@@ -146,18 +184,12 @@ fn cast_extend(dtype: Dtype, dst: &mut Vec<f32>, src: &[f32]) {
 
 /// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
 /// accumulate (matches `preferred_element_type=f32`; f16 accumulation is
-/// approximated by rounding at the epilogue boundary).
+/// approximated by rounding at the epilogue boundary).  Every matmul in
+/// the executor routes through the micro-kernel engine
+/// ([`super::kernel`]); the selected [`kernel::KernelPolicy`] changes
+/// speed only — all policies are bit-identical to the naive loop.
 fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    kernel::matmul_global(out, a, b, m, n, k);
 }
 
 // ---------------------------------------------------------------------------
@@ -489,7 +521,7 @@ fn exec_gemm(
 ) -> Vec<f32> {
     let a16 = cast_slice(dtype_in, a);
     let b16 = cast_slice(dtype_in, b);
-    let mut acc = cast_slice(dtype_acc, c);
+    let mut acc = cast_owned(dtype_acc, c);
     matmul_acc(&mut acc, &a16, &b16, m, n, k);
     gemm_tail(&mut acc, bias, n, dtype_acc, epilogue, fused);
     acc
@@ -527,34 +559,54 @@ fn exec_transformer(
     // QKV projection.
     let qkv = gemm_cast(x, w_qkv, seq, d3, d_model, dtype_in);
 
-    // Scaled dot-product attention per head (plain f32, like the jnp glue).
+    // Scaled dot-product attention per head (plain f32, like the jnp
+    // glue).  Both attention GEMMs — scores = Q_h @ K_h^T and
+    // ctx = P @ V_h — route through the micro-kernel engine on gathered
+    // per-head operands instead of hand-rolled loops.  The gathers
+    // rearrange layout only; the engine accumulates k-terms in the same
+    // increasing order the old loops used, the scale multiply still
+    // happens after each dot product, and the softmax denominator still
+    // divides after the P @ V accumulation, so the output is
+    // bit-identical to the pre-engine implementation (pinned by the
+    // equivalence test below).
     let scale = 1.0 / (d_head as f32).sqrt();
     let mut ctx = vec![0.0f32; seq * d_model];
-    let mut scores = vec![0.0f32; seq];
+    let mut q_h = vec![0.0f32; seq * d_head];
+    let mut kt_h = vec![0.0f32; d_head * seq];
+    let mut v_h = vec![0.0f32; seq * d_head];
+    let mut scores = vec![0.0f32; seq * seq];
+    let mut ctx_h = vec![0.0f32; seq * d_head];
+    let mut denom = vec![0.0f32; seq];
     for h in 0..n_heads {
         let q_off = h * d_head;
         let k_off = d_model + h * d_head;
         let v_off = 2 * d_model + h * d_head;
         for i in 0..seq {
-            for (j, s) in scores.iter_mut().enumerate() {
-                let mut dot = 0.0f32;
-                for dd in 0..d_head {
-                    dot += qkv[i * d3 + q_off + dd] * qkv[j * d3 + k_off + dd];
-                }
-                *s = dot * scale;
-            }
-            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut denom = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - max).exp();
-                denom += *s;
-            }
             for dd in 0..d_head {
-                let mut acc = 0.0f32;
-                for (j, &p) in scores.iter().enumerate() {
-                    acc += p * qkv[j * d3 + v_off + dd];
-                }
-                ctx[i * d_model + q_off + dd] = acc / denom;
+                q_h[i * d_head + dd] = qkv[i * d3 + q_off + dd];
+                kt_h[dd * seq + i] = qkv[i * d3 + k_off + dd];
+                v_h[i * d_head + dd] = qkv[i * d3 + v_off + dd];
+            }
+        }
+        scores.fill(0.0);
+        matmul_acc(&mut scores, &q_h, &kt_h, seq, seq, d_head);
+        for (i, row) in scores.chunks_mut(seq).enumerate() {
+            for s in row.iter_mut() {
+                *s *= scale;
+            }
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f32;
+            for s in row.iter_mut() {
+                *s = (*s - max).exp();
+                den += *s;
+            }
+            denom[i] = den;
+        }
+        ctx_h.fill(0.0);
+        matmul_acc(&mut ctx_h, &scores, &v_h, seq, d_head, seq);
+        for i in 0..seq {
+            for dd in 0..d_head {
+                ctx[i * d_model + q_off + dd] = ctx_h[i * d_head + dd] / denom[i];
             }
         }
     }
@@ -651,6 +703,74 @@ mod tests {
         assert_eq!(round_bf16(0.1), 0.100_097_656);
         assert_eq!(round_bf16(3.141_592_7), 3.140_625);
         assert!(round_bf16(f32::NAN).is_nan());
+    }
+
+    /// The single-pass rounder must agree with the two-step
+    /// `f32_to_f16_bits` -> `f16_bits_to_f32` conversion on every one of
+    /// the 65536 f16 bit patterns, and be the identity on every non-NaN
+    /// pattern (NaNs collapse to the same canonical quiet NaN on both
+    /// paths).
+    #[test]
+    fn f16_round_exhaustive_all_bit_patterns() {
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let fast = round_f16(x);
+            let slow = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(
+                fast.to_bits(),
+                slow.to_bits(),
+                "pattern {h:#06x}: single-pass {fast} vs two-step {slow}"
+            );
+            if !x.is_nan() {
+                assert_eq!(fast.to_bits(), x.to_bits(), "pattern {h:#06x} not fixed");
+            }
+        }
+    }
+
+    /// Single-pass vs two-step over a structured f32 sweep: every
+    /// exponent, mantissa patterns straddling the RNE halfway points
+    /// (13-bit boundary), both signs — plus a large random sample.
+    #[test]
+    fn f16_round_single_pass_matches_two_step_on_f32_sweep() {
+        let mantissas: &[u32] = &[
+            0x0000_0000, 0x0000_0001, 0x0000_0fff, 0x0000_1000, 0x0000_1001,
+            0x0000_1fff, 0x0000_2000, 0x0000_2fff, 0x0000_3000, 0x0000_3001,
+            0x0000_5000, 0x0007_f000, 0x007f_e000, 0x007f_efff, 0x007f_f000,
+            0x007f_f001, 0x007f_ffff,
+        ];
+        let mut checked = 0u64;
+        let mut check = |bits: u32| {
+            let x = f32::from_bits(bits);
+            let fast = round_f16(x);
+            let slow = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(
+                fast.to_bits(),
+                slow.to_bits(),
+                "bits {bits:#010x}: single-pass {fast} vs two-step {slow}"
+            );
+            checked += 1;
+        };
+        for exp in 0..=0xffu32 {
+            for &man in mantissas {
+                for sign in [0u32, 0x8000_0000] {
+                    check(sign | (exp << 23) | man);
+                }
+            }
+        }
+        let mut rng = Rng::new(0xF16);
+        for _ in 0..200_000 {
+            check(rng.next_u64() as u32);
+        }
+        assert!(checked > 200_000);
+    }
+
+    #[test]
+    fn f32_cast_borrows_instead_of_copying() {
+        // The identity cast must not allocate: Dtype::F32 operands are
+        // borrowed straight through to the kernel.
+        let v = vec![1.0f32, 2.0, 3.0];
+        assert!(matches!(cast_slice(Dtype::F32, &v), Cow::Borrowed(_)));
+        assert!(matches!(cast_slice(Dtype::F16, &v), Cow::Owned(_)));
     }
 
     // -- program descriptor -------------------------------------------------
@@ -962,5 +1082,140 @@ mod tests {
         }
         let out = p.execute(&inputs).unwrap();
         assert_eq!(out[0].data, inputs[0].data);
+    }
+
+    /// The pre-engine transformer implementation, kept verbatim as the
+    /// bit-exactness oracle for the rewiring: hand-rolled attention
+    /// loops, naive matmuls, no packing.
+    fn reference_transformer(
+        inputs: &[Tensor],
+        seq: usize,
+        d_model: usize,
+        d_ff: usize,
+        n_heads: usize,
+        dtype_in: Dtype,
+    ) -> Vec<f32> {
+        fn naive(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+        let cast = |v: &[f32]| -> Vec<f32> {
+            v.iter().map(|&x| round_to(dtype_in, x)).collect()
+        };
+        let gemm = |a: &[f32], b: &[f32], m: usize, n: usize, k: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; m * n];
+            naive(&mut out, &cast(a), &cast(b), m, n, k);
+            out
+        };
+        let x = &inputs[0].data;
+        let d_head = d_model / n_heads;
+        let d3 = 3 * d_model;
+        let qkv = gemm(x, &inputs[1].data, seq, d3, d_model);
+        let scale = 1.0 / (d_head as f32).sqrt();
+        let mut ctx = vec![0.0f32; seq * d_model];
+        let mut scores = vec![0.0f32; seq];
+        for h in 0..n_heads {
+            let q_off = h * d_head;
+            let k_off = d_model + h * d_head;
+            let v_off = 2 * d_model + h * d_head;
+            for i in 0..seq {
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let mut dot = 0.0f32;
+                    for dd in 0..d_head {
+                        dot += qkv[i * d3 + q_off + dd] * qkv[j * d3 + k_off + dd];
+                    }
+                    *s = dot * scale;
+                }
+                let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    denom += *s;
+                }
+                for dd in 0..d_head {
+                    let mut acc = 0.0f32;
+                    for (j, &p) in scores.iter().enumerate() {
+                        acc += p * qkv[j * d3 + v_off + dd];
+                    }
+                    ctx[i * d_model + q_off + dd] = acc / denom;
+                }
+            }
+        }
+        let attn_out = gemm(&ctx, &inputs[2].data, seq, d_model, d_model);
+        let mut h_res = vec![0.0f32; seq * d_model];
+        for ((hv, &xv), &av) in h_res.iter_mut().zip(x).zip(&attn_out) {
+            *hv = xv + av;
+        }
+        let mut hn = vec![0.0f32; seq * d_model];
+        for (hn_row, h_row) in hn.chunks_mut(d_model).zip(h_res.chunks(d_model)) {
+            let mu = h_row.iter().sum::<f32>() / d_model as f32;
+            let var =
+                h_row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d_model as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (o, &v) in hn_row.iter_mut().zip(h_row) {
+                *o = (v - mu) * inv;
+            }
+        }
+        let mut up = gemm(&hn, &inputs[3].data, seq, d_ff, d_model);
+        for row in up.chunks_mut(d_ff) {
+            for (v, &bv) in row.iter_mut().zip(&inputs[4].data) {
+                *v = (*v + bv).max(0.0);
+            }
+        }
+        let mut dn = gemm(&up, &inputs[5].data, seq, d_model, d_ff);
+        for row in dn.chunks_mut(d_model) {
+            for (v, &bv) in row.iter_mut().zip(&inputs[6].data) {
+                *v += bv;
+            }
+        }
+        for (o, &hv) in dn.iter_mut().zip(&h_res) {
+            *o += hv;
+        }
+        dn
+    }
+
+    /// Rewiring pin: the engine-routed transformer (gathered per-head
+    /// operands, two attention GEMMs through the micro-kernel engine)
+    /// must match the pre-engine loop implementation bit-for-bit under
+    /// every kernel policy.
+    #[test]
+    fn transformer_rewiring_is_bit_exact_under_every_policy() {
+        use crate::runtime::kernel::{self, Blocking, KernelPolicy};
+        // Writes the global policy; serialize against other
+        // policy-writing tests so the reference stays a true reference.
+        let _guard = kernel::policy_test_lock();
+        let (seq, d_model, d_ff, n_heads) = (8, 16, 32, 4);
+        for &dtype_in in &[Dtype::F16, Dtype::F32] {
+            let p = Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in };
+            let inputs = transformer_inputs(seq, d_model, d_ff, 42);
+            let want = reference_transformer(&inputs, seq, d_model, d_ff, n_heads, dtype_in);
+            let before = kernel::global_policy();
+            for policy in [
+                KernelPolicy::Naive,
+                KernelPolicy::Tiled(Blocking { mc: 8, kc: 4, nc: 16 }),
+                KernelPolicy::Threaded(Blocking::default(), 2),
+            ] {
+                kernel::set_global_policy(policy);
+                let out = p.execute(&inputs).unwrap();
+                kernel::set_global_policy(before);
+                assert_eq!(out[0].data.len(), want.len());
+                for (idx, (g, w)) in out[0].data.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{dtype_in:?}/{} drifted at element {idx}: {g} vs {w}",
+                        policy.name()
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,678 @@
+//! GEMM micro-kernel engine: the CPU mirror of the paper's GPU tiling
+//! hierarchy (DESIGN.md §6).
+//!
+//! The paper organizes one GEMM as thread-block tile -> warp tile ->
+//! `mma.sync` tile, with operands staged global -> shared -> registers.
+//! The in-process executor mirrors that layered reorganization on the
+//! host (after Kuzma et al.'s compiler-only layered data reorganization
+//! and Thangamani et al.'s library-liberated micro kernels):
+//!
+//! * **cache block** (MC x KC x NC)   ~ thread-block tile: one block of
+//!   the problem sized so the packed operand panels stay cache-resident;
+//! * **packed panels**                ~ shared-memory staging: A is
+//!   repacked into MR-row interleaved panels and B into contiguous
+//!   KC-row panels, so the micro kernel reads both operands at stride
+//!   one;
+//! * **register tile** (MR x NR)      ~ warp/`mma.sync` tile: the micro
+//!   kernel holds MR C-row accumulators in vector registers and stages
+//!   NR k-steps of A against them per pass, streaming the j extent at
+//!   vector width (the CPU has no `mma.sync`; the compiler's
+//!   autovectorizer is the tensor core here, so the tile is shaped for
+//!   it — a long stride-one j loop instead of a fixed j sub-tile);
+//! * **row-partitioned threads**      ~ the grid: each thread owns a
+//!   disjoint band of C rows and runs the blocked kernel on it.
+//!
+//! **Bit-exactness invariant.**  Every kernel in this module produces
+//! output bit-identical to the naive i-k-j loop for all f32 inputs: each
+//! output element accumulates its k-terms one at a time, in increasing-k
+//! order, with a plain (non-fused) multiply and add.  Blocking iterates
+//! KC blocks in increasing order and the micro kernel walks each block in
+//! increasing k; packing rearranges i/j layout only; threads partition
+//! rows, and no output element is touched by two threads.  Nothing in
+//! the hierarchy regroups a sum, so the f32 rounding sequence per element
+//! is exactly the naive kernel's.  `KernelPolicy` selection is therefore
+//! semantically invisible — it changes speed, never bits — which is what
+//! lets the serving path A/B policies live (`gemm_server --kernel`) and
+//! lets the autotuner sweep block sizes the way the paper sweeps GPU
+//! tiles.
+
+use std::sync::RwLock;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Register-tile rows: C rows updated together by the micro kernel.
+pub const MR: usize = 4;
+/// Register-tile depth: k-steps of A staged per micro-kernel pass (the
+/// C rows are reloaded once per NR k-steps instead of once per step).
+pub const NR: usize = 4;
+
+/// Below this many flops per thread, fan-out costs more than it saves.
+const MIN_FLOPS_PER_THREAD: f64 = 4e6;
+
+fn ceil_div(x: usize, d: usize) -> usize {
+    x / d + usize::from(x % d != 0)
+}
+
+fn round_up(x: usize, m: usize) -> usize {
+    ceil_div(x, m) * m
+}
+
+/// Cache-block sizes of the tiled kernel (the CPU analog of the paper's
+/// thread-block tile): MC rows of A / KC reduction extent / NC columns
+/// of B per block.  Tunable via [`KernelPolicy`] and swept by
+/// `autotune::sweep_cpu`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+/// The one default blocking, shared by `Blocking::default()`,
+/// `KernelPolicy::default()`, and the global-policy initializer so the
+/// three cannot drift.  A panel: 128 x 256 x 4 B = 128 KiB
+/// (L2-resident); B panel: 256 x 1024 x 4 B = 1 MiB (L3-resident) —
+/// the same sizing logic as the paper's 48 KiB shared-memory budget,
+/// for a generic x86 L2/L3.
+pub const DEFAULT_BLOCKING: Blocking = Blocking { mc: 128, kc: 256, nc: 1024 };
+
+impl Default for Blocking {
+    fn default() -> Self {
+        DEFAULT_BLOCKING
+    }
+}
+
+impl Blocking {
+    /// Guard degenerate block sizes (zero blocks would loop forever).
+    fn clamped(self) -> Blocking {
+        Blocking {
+            mc: self.mc.max(MR),
+            kc: self.kc.max(1),
+            nc: self.nc.max(1),
+        }
+    }
+}
+
+/// Which kernel executes a GEMM.  All policies are bit-identical; they
+/// differ only in speed (see the module invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPolicy {
+    /// The reference i-k-j scalar loop.
+    Naive,
+    /// Cache-blocked + packed + register-tiled, single thread.
+    Tiled(Blocking),
+    /// Tiled with C rows partitioned across threads (0 = auto).
+    Threaded(Blocking, usize),
+}
+
+impl Default for KernelPolicy {
+    /// Single-thread tiled: the safe ambient default.  The server runs
+    /// many worker threads already, so intra-GEMM threading by default
+    /// would oversubscribe the host (workers x cores); `threaded` is an
+    /// explicit opt-in (`--kernel threaded`) for single-stream callers.
+    fn default() -> Self {
+        KernelPolicy::Tiled(DEFAULT_BLOCKING)
+    }
+}
+
+impl KernelPolicy {
+    /// Parse an operator-facing policy string:
+    /// `naive` | `tiled[:MC,KC,NC]` | `threaded[:MC,KC,NC[,T]]`
+    /// (T = thread count, 0 or omitted = auto).
+    pub fn parse(text: &str) -> Result<KernelPolicy> {
+        let (head, rest) = match text.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (text, None),
+        };
+        let nums = |r: &str| -> Result<Vec<usize>> {
+            r.split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad kernel block spec {r:?}"))
+                })
+                .collect()
+        };
+        match (head, rest) {
+            ("naive", None) => Ok(KernelPolicy::Naive),
+            ("naive", Some(_)) => bail!("naive takes no block spec"),
+            ("tiled", None) => Ok(KernelPolicy::Tiled(Blocking::default())),
+            ("tiled", Some(r)) => {
+                let v = nums(r)?;
+                if v.len() != 3 {
+                    bail!("tiled wants MC,KC,NC, got {r:?}");
+                }
+                Ok(KernelPolicy::Tiled(Blocking { mc: v[0], kc: v[1], nc: v[2] }))
+            }
+            ("threaded", None) => {
+                Ok(KernelPolicy::Threaded(Blocking::default(), 0))
+            }
+            ("threaded", Some(r)) => {
+                let v = nums(r)?;
+                match v.len() {
+                    3 => Ok(KernelPolicy::Threaded(
+                        Blocking { mc: v[0], kc: v[1], nc: v[2] },
+                        0,
+                    )),
+                    4 => Ok(KernelPolicy::Threaded(
+                        Blocking { mc: v[0], kc: v[1], nc: v[2] },
+                        v[3],
+                    )),
+                    _ => bail!("threaded wants MC,KC,NC[,T], got {r:?}"),
+                }
+            }
+            _ => bail!(
+                "unknown kernel policy {text:?} (naive | tiled[:MC,KC,NC] | \
+                 threaded[:MC,KC,NC[,T]])"
+            ),
+        }
+    }
+
+    /// Canonical name (parses back to the same policy).
+    pub fn name(&self) -> String {
+        match *self {
+            KernelPolicy::Naive => "naive".to_string(),
+            KernelPolicy::Tiled(b) => format!("tiled:{},{},{}", b.mc, b.kc, b.nc),
+            KernelPolicy::Threaded(b, t) => {
+                format!("threaded:{},{},{},{t}", b.mc, b.kc, b.nc)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global policy
+// ---------------------------------------------------------------------------
+
+static GLOBAL_POLICY: RwLock<KernelPolicy> =
+    RwLock::new(KernelPolicy::Tiled(DEFAULT_BLOCKING));
+
+/// Test support: serializes tests that *write* the global policy and
+/// compute reference outputs under a specific policy, or that assert on
+/// the global value itself.  Tests that only compare kernel outputs
+/// don't strictly need it (output is policy-invariant by the module
+/// contract), but a test whose `want` is meant to come from the naive
+/// reference must hold this so a concurrent writer can't silently turn
+/// it into an engine-vs-itself comparison.  Always compiled so
+/// integration-test binaries can use it too; the lock is free when
+/// uncontended and no production code path takes it.
+static POLICY_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Acquire [`POLICY_TEST_LOCK`] (poison-tolerant).
+pub fn policy_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    POLICY_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Set the process-global kernel policy (CLI `--kernel` plumbing).  Safe
+/// to flip at any time: every policy is bit-identical, so concurrent
+/// executors only change speed.
+pub fn set_global_policy(policy: KernelPolicy) {
+    *GLOBAL_POLICY.write().unwrap() = policy;
+}
+
+pub fn global_policy() -> KernelPolicy {
+    *GLOBAL_POLICY.read().unwrap()
+}
+
+/// `out[i, j] += sum_k a[i, k] * b[k, j]` under the global policy — the
+/// single entry point every matmul in the executor routes through.
+pub fn matmul_global(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    matmul(global_policy(), out, a, b, m, n, k);
+}
+
+/// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
+/// accumulate, k-terms in increasing-k order (bit-identical across
+/// policies).
+pub fn matmul(
+    policy: KernelPolicy,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(out.len(), m * n, "output length");
+    assert_eq!(a.len(), m * k, "A length");
+    assert_eq!(b.len(), k * n, "B length");
+    if m == 0 || n == 0 || k == 0 {
+        return; // += 0 terms: out unchanged, like the naive loop
+    }
+    match policy {
+        KernelPolicy::Naive => gemm_naive(out, a, b, m, n, k),
+        KernelPolicy::Tiled(bs) => gemm_tiled(out, a, b, m, n, k, bs.clamped()),
+        KernelPolicy::Threaded(bs, t) => {
+            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference kernel
+// ---------------------------------------------------------------------------
+
+/// The scalar i-k-j loop (formerly `exec::matmul_acc`): the semantic
+/// reference every other kernel must match bit-for-bit.
+fn gemm_naive(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled kernel: cache blocks -> packed panels -> register tiles
+// ---------------------------------------------------------------------------
+
+/// Pack `a[ic..ic+mcb, pc..pc+kcb]` into MR-row panels, p-major inside a
+/// panel (`apack[panel][p][i]`), zero-padding ragged edge rows.  Padded
+/// lanes only feed accumulator entries that are never stored.
+fn pack_a(
+    apack: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    ic: usize,
+    mcb: usize,
+    pc: usize,
+    kcb: usize,
+) {
+    let panels = ceil_div(mcb, MR);
+    for pi in 0..panels {
+        let dst = &mut apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+        let i0 = ic + pi * MR;
+        let rows = MR.min(ic + mcb - i0);
+        for p in 0..kcb {
+            let d = &mut dst[p * MR..(p + 1) * MR];
+            for (i, slot) in d.iter_mut().enumerate().take(rows) {
+                *slot = a[(i0 + i) * lda + pc + p];
+            }
+            for slot in d.iter_mut().skip(rows) {
+                *slot = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack `b[pc..pc+kcb, jc..jc+ncb]` into a contiguous panel of kcb rows
+/// (`bpack[p * ncb + j]`): the micro kernel streams each row at stride
+/// one regardless of the source leading dimension.
+fn pack_b(
+    bpack: &mut [f32],
+    b: &[f32],
+    ldb: usize,
+    pc: usize,
+    kcb: usize,
+    jc: usize,
+    ncb: usize,
+) {
+    for p in 0..kcb {
+        let src = &b[(pc + p) * ldb + jc..(pc + p) * ldb + jc + ncb];
+        bpack[p * ncb..(p + 1) * ncb].copy_from_slice(src);
+    }
+}
+
+/// One rank-1 update row: `orow[j] += av * brow[j]` (the naive kernel's
+/// inner loop; used for the MR/NR remainders, same k order).
+#[inline(always)]
+fn saxpy(orow: &mut [f32], av: f32, brow: &[f32]) {
+    for (o, &bv) in orow.iter_mut().zip(brow) {
+        *o += av * bv;
+    }
+}
+
+/// The register-tile micro kernel: MR C-row accumulators x NR staged
+/// k-steps, streaming j across the packed B panel.  Per output element
+/// the k-terms land one at a time in increasing-k order with a plain
+/// (non-fused) multiply and add — fusing or reassociating would change
+/// the rounding sequence vs the naive kernel.  `ab` holds the MR x NR
+/// A-scalars p-major (`ab[u * MR + i]`), `bp` the NR packed B rows.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn micro_kernel(
+    ab: &[f32; MR * NR],
+    bp: &[f32],
+    ncb: usize,
+    o0: &mut [f32],
+    o1: &mut [f32],
+    o2: &mut [f32],
+    o3: &mut [f32],
+) {
+    let (b0, rest) = bp.split_at(ncb);
+    let (b1, rest) = rest.split_at(ncb);
+    let (b2, rest) = rest.split_at(ncb);
+    let b3 = &rest[..ncb];
+    let o0 = &mut o0[..ncb];
+    let o1 = &mut o1[..ncb];
+    let o2 = &mut o2[..ncb];
+    let o3 = &mut o3[..ncb];
+    for j in 0..ncb {
+        let (bv0, bv1, bv2, bv3) = (b0[j], b1[j], b2[j], b3[j]);
+        let mut x0 = o0[j];
+        x0 += ab[0] * bv0;
+        x0 += ab[4] * bv1;
+        x0 += ab[8] * bv2;
+        x0 += ab[12] * bv3;
+        o0[j] = x0;
+        let mut x1 = o1[j];
+        x1 += ab[1] * bv0;
+        x1 += ab[5] * bv1;
+        x1 += ab[9] * bv2;
+        x1 += ab[13] * bv3;
+        o1[j] = x1;
+        let mut x2 = o2[j];
+        x2 += ab[2] * bv0;
+        x2 += ab[6] * bv1;
+        x2 += ab[10] * bv2;
+        x2 += ab[14] * bv3;
+        o2[j] = x2;
+        let mut x3 = o3[j];
+        x3 += ab[3] * bv0;
+        x3 += ab[7] * bv1;
+        x3 += ab[11] * bv2;
+        x3 += ab[15] * bv3;
+        o3[j] = x3;
+    }
+}
+
+/// Run the register tiles over one cache block: full MR-row panels take
+/// the micro kernel (NR k-steps per pass, k remainder via [`saxpy`]);
+/// the ragged row tail runs row-at-a-time saxpy in the same k order.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    out: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    mcb: usize,
+    jc: usize,
+    ncb: usize,
+    kcb: usize,
+    apack: &[f32],
+    bpack: &[f32],
+) {
+    let full_panels = mcb / MR;
+    for pi in 0..full_panels {
+        let i0 = ic + pi * MR;
+        let ap = &apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+        let (r0, rest) = out[i0 * ldc..].split_at_mut(ldc);
+        let (r1, rest) = rest.split_at_mut(ldc);
+        let (r2, rest) = rest.split_at_mut(ldc);
+        let r3 = &mut rest[..ldc];
+        let o0 = &mut r0[jc..jc + ncb];
+        let o1 = &mut r1[jc..jc + ncb];
+        let o2 = &mut r2[jc..jc + ncb];
+        let o3 = &mut r3[jc..jc + ncb];
+        let mut p = 0;
+        while p + NR <= kcb {
+            let ab: &[f32; MR * NR] =
+                ap[p * MR..p * MR + MR * NR].try_into().unwrap();
+            micro_kernel(ab, &bpack[p * ncb..(p + NR) * ncb], ncb, o0, o1, o2, o3);
+            p += NR;
+        }
+        while p < kcb {
+            let brow = &bpack[p * ncb..(p + 1) * ncb];
+            saxpy(o0, ap[p * MR], brow);
+            saxpy(o1, ap[p * MR + 1], brow);
+            saxpy(o2, ap[p * MR + 2], brow);
+            saxpy(o3, ap[p * MR + 3], brow);
+            p += 1;
+        }
+    }
+    for i in full_panels * MR..mcb {
+        let (pi, ir) = (i / MR, i % MR);
+        let ap = &apack[pi * MR * kcb..];
+        let orow = &mut out[(ic + i) * ldc + jc..(ic + i) * ldc + jc + ncb];
+        for p in 0..kcb {
+            saxpy(orow, ap[p * MR + ir], &bpack[p * ncb..(p + 1) * ncb]);
+        }
+    }
+}
+
+fn gemm_tiled(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bs: Blocking,
+) {
+    let Blocking { mc, kc, nc } = bs;
+    let mut apack = vec![0.0f32; round_up(mc.min(m), MR) * kc.min(k)];
+    let mut bpack = vec![0.0f32; nc.min(n) * kc.min(k)];
+    for jc in (0..n).step_by(nc) {
+        let ncb = nc.min(n - jc);
+        // KC blocks in increasing-k order: the per-element accumulation
+        // sequence stays the naive kernel's.
+        for pc in (0..k).step_by(kc) {
+            let kcb = kc.min(k - pc);
+            pack_b(&mut bpack, b, n, pc, kcb, jc, ncb);
+            for ic in (0..m).step_by(mc) {
+                let mcb = mc.min(m - ic);
+                pack_a(&mut apack, a, k, ic, mcb, pc, kcb);
+                macro_kernel(out, n, ic, mcb, jc, ncb, kcb, &apack, &bpack);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_threaded(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bs: Blocking,
+    threads: usize,
+) {
+    let hw = if threads == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let by_work = (flops / MIN_FLOPS_PER_THREAD) as usize;
+    let bands = hw.min(by_work.max(1)).min(ceil_div(m, MR)).max(1);
+    if bands <= 1 {
+        return gemm_tiled(out, a, b, m, n, k, bs);
+    }
+    // MR-aligned row bands: each thread owns a disjoint band of C (and
+    // the matching band of A), so no element is touched twice and the
+    // per-element operation sequence is the single-thread kernel's.
+    let rows_per = round_up(ceil_div(m, bands), MR);
+    std::thread::scope(|scope| {
+        for (oband, aband) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
+            let bm = oband.len() / n;
+            scope.spawn(move || gemm_tiled(oband, aband, b, bm, n, k, bs));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::{check, Config};
+
+    fn random_case(rng: &mut Rng, m: usize, n: usize, k: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            rng.normal_matrix(m, k),
+            rng.normal_matrix(k, n),
+            rng.normal_matrix(m, n),
+        )
+    }
+
+    fn run(policy: KernelPolicy, c: &[f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = c.to_vec();
+        matmul(policy, &mut out, a, b, m, n, k);
+        out
+    }
+
+    fn assert_policies_bitwise_equal(m: usize, n: usize, k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let (a, b, c) = random_case(&mut rng, m, n, k);
+        let want = run(KernelPolicy::Naive, &c, &a, &b, m, n, k);
+        // Small blocks force multiple cache blocks + ragged edges even on
+        // tiny shapes; defaults cover the single-block fast path.
+        for bs in [
+            Blocking { mc: 8, kc: 4, nc: 16 },
+            Blocking { mc: 5, kc: 3, nc: 7 }, // deliberately unaligned
+            Blocking::default(),
+        ] {
+            let got = run(KernelPolicy::Tiled(bs), &c, &a, &b, m, n, k);
+            assert!(
+                want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                "tiled {bs:?} drifted at {m}x{n}x{k}"
+            );
+            for t in [2, 3] {
+                let got = run(KernelPolicy::Threaded(bs, t), &c, &a, &b, m, n, k);
+                assert!(
+                    want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                    "threaded({t}) {bs:?} drifted at {m}x{n}x{k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn policies_bit_identical_on_edge_shapes() {
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (1, 17, 5),   // skinny m=1
+            (19, 1, 7),   // skinny n=1
+            (4, 16, 8),   // exact register tiles
+            (5, 17, 9),   // every dimension ragged
+            (33, 7, 21),
+        ] {
+            assert_policies_bitwise_equal(m, n, k, 0xC0FFEE + (m * 1000 + n * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn policies_bit_identical_property() {
+        check(
+            Config { cases: 48, ..Default::default() },
+            |rng| {
+                vec![1 + rng.below(40), 1 + rng.below(40), 1 + rng.below(40)]
+            },
+            |v| crate::util::proptest::shrink_usizes(v, 1),
+            |dims| {
+                let (m, n, k) = (dims[0], dims[1], dims[2]);
+                let mut rng = Rng::new(7 + (m * 10007 + n * 101 + k) as u64);
+                let (a, b, c) = random_case(&mut rng, m, n, k);
+                let want = run(KernelPolicy::Naive, &c, &a, &b, m, n, k);
+                let bs = Blocking { mc: 8, kc: 8, nc: 16 };
+                for policy in [
+                    KernelPolicy::Tiled(bs),
+                    KernelPolicy::Threaded(bs, 2),
+                    KernelPolicy::Tiled(Blocking::default()),
+                ] {
+                    let got = run(policy, &c, &a, &b, m, n, k);
+                    for (idx, (w, g)) in want.iter().zip(&got).enumerate() {
+                        if w.to_bits() != g.to_bits() {
+                            return Err(format!(
+                                "{} drifted at element {idx}: {w} vs {g}",
+                                policy.name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn k_zero_and_empty_dims_leave_output_unchanged() {
+        let c = vec![1.5f32, -2.5, 3.5, 4.5];
+        let out = run(KernelPolicy::Tiled(Blocking::default()), &c, &[], &[], 2, 2, 0);
+        assert_eq!(out, c);
+        let mut empty: Vec<f32> = vec![];
+        matmul(KernelPolicy::Threaded(Blocking::default(), 2), &mut empty, &[], &[1.0], 0, 1, 1);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn identity_times_matrix_is_exact() {
+        let (m, n, k) = (6, 5, 6);
+        let mut rng = Rng::new(11);
+        let b = rng.normal_matrix(k, n);
+        let mut id = vec![0.0f32; m * k];
+        for i in 0..m {
+            id[i * k + i] = 1.0;
+        }
+        let zeros = vec![0.0f32; m * n];
+        let out = run(
+            KernelPolicy::Tiled(Blocking { mc: 4, kc: 2, nc: 4 }),
+            &zeros,
+            &id,
+            &b,
+            m,
+            n,
+            k,
+        );
+        assert_eq!(out, b[..m * n].to_vec());
+    }
+
+    #[test]
+    fn policy_parse_and_name_roundtrip() {
+        for text in ["naive", "tiled", "tiled:64,128,256", "threaded", "threaded:64,128,256", "threaded:64,128,256,4"] {
+            let p = KernelPolicy::parse(text).unwrap();
+            let p2 = KernelPolicy::parse(&p.name()).unwrap();
+            assert_eq!(p, p2, "{text}");
+        }
+        assert_eq!(KernelPolicy::parse("naive").unwrap(), KernelPolicy::Naive);
+        assert_eq!(
+            KernelPolicy::parse("tiled:1,2,3").unwrap(),
+            KernelPolicy::Tiled(Blocking { mc: 1, kc: 2, nc: 3 })
+        );
+        assert_eq!(
+            KernelPolicy::parse("threaded:1,2,3,9").unwrap(),
+            KernelPolicy::Threaded(Blocking { mc: 1, kc: 2, nc: 3 }, 9)
+        );
+    }
+
+    #[test]
+    fn policy_parse_rejects_garbage() {
+        for text in ["", "fast", "tiled:1,2", "tiled:a,b,c", "threaded:1", "naive:1,2,3"] {
+            assert!(KernelPolicy::parse(text).is_err(), "{text:?} parsed");
+        }
+    }
+
+    #[test]
+    fn global_policy_roundtrip() {
+        // Asserts on the global *value*, so serialize against the other
+        // policy-writing test in this binary.
+        let _guard = policy_test_lock();
+        let before = global_policy();
+        set_global_policy(KernelPolicy::Naive);
+        assert_eq!(global_policy(), KernelPolicy::Naive);
+        set_global_policy(before);
+        assert_eq!(global_policy(), before);
+    }
+
+    #[test]
+    fn degenerate_blocking_is_clamped() {
+        // A zero block size must not hang or panic.
+        let mut rng = Rng::new(3);
+        let (a, b, c) = random_case(&mut rng, 9, 9, 9);
+        let want = run(KernelPolicy::Naive, &c, &a, &b, 9, 9, 9);
+        let got = run(
+            KernelPolicy::Tiled(Blocking { mc: 0, kc: 0, nc: 0 }),
+            &c,
+            &a,
+            &b,
+            9,
+            9,
+            9,
+        );
+        assert_eq!(want, got);
+    }
+}

@@ -16,6 +16,7 @@
 //! `Vec<f32>` + shape.
 
 pub mod exec;
+pub mod kernel;
 pub mod manifest;
 
 use std::collections::HashMap;
@@ -26,6 +27,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 pub use exec::{Epilogue, Program};
+pub use kernel::{Blocking, KernelPolicy};
 pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
 
 /// A host-side f32 tensor (row-major).

@@ -1,0 +1,208 @@
+//! Integration: the micro-kernel engine's bit-exactness contract.
+//!
+//! Every kernel policy (naive / tiled / tiled+threads, any blocking) must
+//! produce bit-identical f32 output — that is what makes `--kernel` a
+//! pure performance knob and keeps PR 2's batching and row-sharding
+//! bit-exactness guarantees intact on top of the new engine.  These tests
+//! pin the contract at three levels: the raw kernel, `Program::execute` /
+//! `execute_batch`, and the shard split/execute/reduce pipeline.
+
+use mlir_gemm::coordinator::sharding::{build_shard_tasks, reduce_outputs};
+use mlir_gemm::coordinator::ShardPlan;
+use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
+use mlir_gemm::runtime::{Epilogue, Program, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+use mlir_gemm::util::proptest::{check, shrink_usizes, Config};
+
+/// Policies that exercise every code path: reference, blocked with ragged
+/// cache blocks, defaults, and threading with non-divisible band counts.
+fn policies() -> Vec<KernelPolicy> {
+    vec![
+        KernelPolicy::Tiled(Blocking { mc: 8, kc: 4, nc: 16 }),
+        KernelPolicy::Tiled(Blocking { mc: 7, kc: 5, nc: 11 }),
+        KernelPolicy::Tiled(Blocking::default()),
+        KernelPolicy::Threaded(Blocking { mc: 8, kc: 8, nc: 16 }, 2),
+        KernelPolicy::Threaded(Blocking::default(), 3),
+    ]
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length");
+    for (idx, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "{what}: element {idx} drifted ({w} vs {g})"
+        );
+    }
+}
+
+#[test]
+fn raw_kernel_bit_identical_on_large_odd_shapes() {
+    for &(m, n, k) in &[
+        (129usize, 65usize, 77usize), // nothing divides MR/NR/KC
+        (200, 1, 300),                // skinny n=1
+        (1, 257, 19),                 // skinny m=1
+        (61, 61, 61),
+        (96, 128, 64),                // everything aligned
+    ] {
+        let mut rng = Rng::new((m * 31 + n * 7 + k) as u64);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let mut want = c.clone();
+        kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        for policy in policies() {
+            let mut got = c.clone();
+            kernel::matmul(policy, &mut got, &a, &b, m, n, k);
+            assert_bits_eq(&want, &got, &format!("{}x{}x{} {}", m, n, k, policy.name()));
+        }
+    }
+}
+
+#[test]
+fn raw_kernel_bit_identical_property_over_random_shapes() {
+    check(
+        Config { cases: 24, seed: 0x6E44, ..Default::default() },
+        |rng| vec![1 + rng.below(96), 1 + rng.below(96), 1 + rng.below(96)],
+        |v| shrink_usizes(v, 1),
+        |dims| {
+            let (m, n, k) = (dims[0], dims[1], dims[2]);
+            let mut rng = Rng::new((m * 131 + n * 17 + k) as u64);
+            let a = rng.normal_matrix(m, k);
+            let b = rng.normal_matrix(k, n);
+            let c = rng.normal_matrix(m, n);
+            let mut want = c.clone();
+            kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+            for policy in policies() {
+                let mut got = c.clone();
+                kernel::matmul(policy, &mut got, &a, &b, m, n, k);
+                for (idx, (w, g)) in want.iter().zip(&got).enumerate() {
+                    if w.to_bits() != g.to_bits() {
+                        return Err(format!(
+                            "{} drifted at {m}x{n}x{k} element {idx}: {w} vs {g}",
+                            policy.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gemm_program(m: usize, n: usize, k: usize, din: Dtype, dacc: Dtype) -> Program {
+    Program::Gemm {
+        m,
+        n,
+        k,
+        dtype_in: din,
+        dtype_acc: dacc,
+        epilogue: Epilogue::BiasRelu,
+        fused: true,
+    }
+}
+
+fn gemm_inputs(m: usize, n: usize, k: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![
+        Tensor { shape: vec![m, k], data: rng.normal_matrix(m, k) },
+        Tensor { shape: vec![k, n], data: rng.normal_matrix(k, n) },
+        Tensor { shape: vec![m, n], data: rng.normal_matrix(m, n) },
+        Tensor { shape: vec![n], data: rng.normal_matrix(1, n) },
+    ]
+}
+
+/// `Program::execute` under each global policy: the full precision
+/// pipeline (dtype casts, epilogue, rounding tail) on top of the engine
+/// must stay bit-identical — policies change speed, never bits.
+#[test]
+fn program_execute_bit_identical_across_global_policies() {
+    // Serialize global-policy writers: `want` must really be the naive
+    // reference, not another test's freshly installed policy.
+    let _guard = kernel::policy_test_lock();
+    let (m, n, k) = (37, 29, 41);
+    for &(din, dacc) in &[
+        (Dtype::F32, Dtype::F32),
+        (Dtype::F16, Dtype::F32),
+        (Dtype::F16, Dtype::F16),
+        (Dtype::Bf16, Dtype::F32),
+    ] {
+        let p = gemm_program(m, n, k, din, dacc);
+        let inputs = gemm_inputs(m, n, k, 0xAB + din as u64);
+        let before = kernel::global_policy();
+        kernel::set_global_policy(KernelPolicy::Naive);
+        let want = p.execute(&inputs).unwrap();
+        for policy in policies() {
+            kernel::set_global_policy(policy);
+            let got = p.execute(&inputs).unwrap();
+            assert_bits_eq(
+                &want[0].data,
+                &got[0].data,
+                &format!("{din:?}/{dacc:?} via {}", policy.name()),
+            );
+        }
+        kernel::set_global_policy(before);
+    }
+}
+
+/// The batched path (stacked operands, one cast) over the engine remains
+/// bit-identical to per-item execution under a tiled policy.
+#[test]
+fn execute_batch_bit_identical_under_tiled_policy() {
+    let _guard = kernel::policy_test_lock();
+    let (m, n, k) = (21, 18, 27);
+    let p = gemm_program(m, n, k, Dtype::F16, Dtype::F32);
+    let items: Vec<Vec<Tensor>> =
+        (0..4).map(|i| gemm_inputs(m, n, k, 900 + i)).collect();
+    let before = kernel::global_policy();
+    kernel::set_global_policy(KernelPolicy::Tiled(Blocking { mc: 8, kc: 8, nc: 16 }));
+    let batched = p.execute_batch(&items).unwrap();
+    for (bi, inputs) in items.iter().enumerate() {
+        let single = p.execute(inputs).unwrap();
+        assert_bits_eq(
+            &single[0].data,
+            &batched[bi][0].data,
+            &format!("batch item {bi}"),
+        );
+    }
+    kernel::set_global_policy(before);
+}
+
+/// Row sharding on top of the engine: split/execute/reduce must still
+/// concatenate to exactly the unsharded result whatever policy runs the
+/// shard GEMMs.
+#[test]
+fn row_sharding_bit_identical_on_engine_kernels() {
+    let _guard = kernel::policy_test_lock();
+    let (m, n, k) = (45, 22, 33);
+    let base = Program::Gemm {
+        m,
+        n,
+        k,
+        dtype_in: Dtype::F16,
+        dtype_acc: Dtype::F32,
+        epilogue: Epilogue::None,
+        fused: true,
+    };
+    let mut rng = Rng::new(77);
+    let a = Tensor { shape: vec![m, k], data: rng.normal_matrix(m, k) };
+    let b = Tensor { shape: vec![k, n], data: rng.normal_matrix(k, n) };
+    let c = Tensor { shape: vec![m, n], data: rng.normal_matrix(m, n) };
+    let before = kernel::global_policy();
+    kernel::set_global_policy(KernelPolicy::Naive);
+    let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
+    for policy in policies() {
+        kernel::set_global_policy(policy);
+        let plan = ShardPlan::rows(m, n, k, 3, 1);
+        let parts: Vec<Tensor> = build_shard_tasks(&plan, &base, &a, &b, &c, None)
+            .unwrap()
+            .into_iter()
+            .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
+            .collect();
+        let got = reduce_outputs(&plan, &base, &c, None, &parts).unwrap();
+        assert_bits_eq(&want[0].data, &got.data, &format!("sharded {}", policy.name()));
+    }
+    kernel::set_global_policy(before);
+}
