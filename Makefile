@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test pytest artifacts artifacts-quick bench-smoke lint fmt clean
+.PHONY: verify build test pytest artifacts artifacts-quick bench-smoke plans lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -28,8 +28,15 @@ artifacts-quick:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts --quick
 
 # Run every bench binary in thinned smoke mode so they cannot bit-rot.
+# (exec_kernel additionally asserts the auto-compiled plan is never
+# slower than naive at 512^3.)
 bench-smoke:
 	MLIR_GEMM_SMOKE=1 $(CARGO) bench
+
+# Emit the compiled execution plan for every registry key to
+# reports/plans/ (requires built artifacts: `make artifacts`).
+plans:
+	$(CARGO) run --release --bin mlir-gemm -- plans --artifacts artifacts --out-dir reports
 
 lint:
 	$(CARGO) fmt --check && $(CARGO) clippy -- -D warnings

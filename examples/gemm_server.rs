@@ -21,7 +21,7 @@ use mlir_gemm::util::prng::Rng;
 
 const SPEC: &[Spec] = &[
     ("devices", true, "device contexts; >1 shards large GEMMs (default 1)"),
-    ("kernel", true, "GEMM kernel policy: naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
+    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
     ("help", false, "show usage"),
 ];
 
@@ -33,20 +33,19 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let devices = args.get_usize("devices", 1)?;
-    let kernel = args
-        .get("kernel")
-        .map(mlir_gemm::runtime::KernelPolicy::parse)
-        .transpose()?;
+    let plan = args
+        .get("plan")
+        .map(mlir_gemm::plan::PlanOverride::parse)
+        .transpose()?
+        .unwrap_or(mlir_gemm::plan::PlanOverride::Auto);
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Arc::new(Runtime::open(&dir)?);
     let device = DeviceModel::rtx3090();
     println!(
-        "starting server ({devices} device context(s), kernel policy {}, \
+        "starting server ({devices} device context(s), plan override {}, \
          profile-guided variant re-ranking on)...",
-        kernel
-            .map(|p| p.name())
-            .unwrap_or_else(|| "default".to_string())
+        plan.name()
     );
     let server = Arc::new(Server::start(
         rt,
@@ -55,7 +54,7 @@ fn main() -> Result<()> {
             workers: 4,
             devices,
             rerank_measured: true,
-            kernel,
+            plan,
             ..Default::default()
         },
     ));

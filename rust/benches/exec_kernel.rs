@@ -16,30 +16,28 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use mlir_gemm::harness::{bar_chart, CsvTable, FigureOutput};
+use mlir_gemm::plan::{compile, GemmKey, PlanEnv};
 use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
 use mlir_gemm::util::json::{self, Json};
 use mlir_gemm::util::prng::Rng;
 
 struct Row {
     size: usize,
-    policy: &'static str,
+    policy: String,
     seconds: f64,
     gflops: f64,
 }
 
 fn main() {
     let smoke = bench_common::smoke();
+    // 512 is in both modes: bench-smoke asserts the auto-compiled plan
+    // is never slower than naive there.
     let sizes: Vec<usize> = if smoke {
-        vec![256, 1024]
+        vec![256, 512, 1024]
     } else {
         vec![256, 512, 1024, 2048]
     };
     let iters = if smoke { 2 } else { 5 };
-    let policies: [(&'static str, KernelPolicy); 3] = [
-        ("naive", KernelPolicy::Naive),
-        ("tiled", KernelPolicy::Tiled(Blocking::default())),
-        ("threaded", KernelPolicy::Threaded(Blocking::default(), 0)),
-    ];
     let threads = std::thread::available_parallelism()
         .map(|v| v.get())
         .unwrap_or(1);
@@ -47,6 +45,25 @@ fn main() {
     let mut rows: Vec<Row> = Vec::new();
     for &size in &sizes {
         let (m, n, k) = (size, size, size);
+        // The compiled plan for this shape (standalone environment, f32
+        // operands like the bench data) competes as its own row.
+        let auto_plan = compile(
+            &GemmKey::with_dtypes(
+                m,
+                n,
+                k,
+                mlir_gemm::schedule::Dtype::F32,
+                mlir_gemm::schedule::Dtype::F32,
+            ),
+            &PlanEnv::default(),
+        )
+        .expect("plan compilation is infallible without an override");
+        let policies: Vec<(String, KernelPolicy)> = vec![
+            ("naive".into(), KernelPolicy::Naive),
+            ("tiled".into(), KernelPolicy::Tiled(Blocking::default())),
+            ("threaded".into(), KernelPolicy::Threaded(Blocking::default(), 0)),
+            (format!("plan:{}", auto_plan.kernel.name()), auto_plan.kernel),
+        ];
         let mut rng = Rng::new(0xEC + size as u64);
         let a = rng.normal_matrix(m, k);
         let b = rng.normal_matrix(k, n);
@@ -78,6 +95,28 @@ fn main() {
         }
     }
 
+    // Acceptance gate (runs in smoke mode too): the auto-compiled plan
+    // must never be slower than naive at 512^3 — the plan compiler's
+    // whole point is that its decisions dominate the reference loop.
+    // 5% slack absorbs shared-runner timing noise.
+    {
+        let naive_512 = rows
+            .iter()
+            .find(|r| r.size == 512 && r.policy == "naive")
+            .expect("512^3 naive row");
+        let plan_512 = rows
+            .iter()
+            .find(|r| r.size == 512 && r.policy.starts_with("plan:"))
+            .expect("512^3 plan row");
+        assert!(
+            plan_512.seconds <= naive_512.seconds * 1.05,
+            "auto-compiled plan ({}, {:.6}s) slower than naive ({:.6}s) at 512^3",
+            plan_512.policy,
+            plan_512.seconds,
+            naive_512.seconds
+        );
+    }
+
     // Human-readable figure + CSV like every other bench.
     let mut table = CsvTable::new(&["size", "policy", "best_seconds", "gflops", "speedup_vs_naive"]);
     for row in &rows {
@@ -106,8 +145,9 @@ fn main() {
         table,
         chart: bar_chart(&format!("GFLOP/s, {top}^3 f32 GEMM by kernel policy"), &bar_refs, 40),
         summary: format!(
-            "micro-kernel engine throughput, naive vs tiled vs threaded \
-             ({threads} hw threads); every policy bit-checked against naive"
+            "micro-kernel engine throughput, naive vs tiled vs threaded vs the \
+             auto-compiled plan ({threads} hw threads); every policy bit-checked \
+             against naive; plan asserted never slower than naive at 512^3"
         ),
     };
     bench_common::emit(&output);
@@ -118,7 +158,7 @@ fn main() {
         .map(|r| {
             json::obj(vec![
                 ("size", json::num(r.size as f64)),
-                ("policy", json::s(r.policy)),
+                ("policy", json::s(&r.policy)),
                 ("best_seconds", json::num(r.seconds)),
                 ("gflops", json::num((r.gflops * 1000.0).round() / 1000.0)),
             ])
@@ -132,7 +172,11 @@ fn main() {
             .unwrap_or(0.0);
         let p = rows
             .iter()
-            .find(|r| r.size == size && r.policy == policy)
+            .find(|r| {
+                r.size == size
+                    && (r.policy == policy
+                        || (policy == "plan" && r.policy.starts_with("plan:")))
+            })
             .map(|r| r.gflops)
             .unwrap_or(0.0);
         if naive > 0.0 {
@@ -152,7 +196,10 @@ fn main() {
         ("bench", json::s("exec_kernel")),
         ("smoke", Json::Bool(smoke)),
         ("hw_threads", json::num(threads as f64)),
-        ("policies", json::s("naive | tiled (default blocking) | threaded (auto)")),
+        (
+            "policies",
+            json::s("naive | tiled (default blocking) | threaded (auto) | plan:<compiled>"),
+        ),
         (
             "source",
             json::s(
@@ -176,6 +223,7 @@ fn main() {
                 ("size", json::num(headline as f64)),
                 ("tiled", json::num(speedup_at(headline, "tiled"))),
                 ("threaded", json::num(speedup_at(headline, "threaded"))),
+                ("plan", json::num(speedup_at(headline, "plan"))),
             ]),
         ),
         (
@@ -184,6 +232,7 @@ fn main() {
                 ("size", json::num(top as f64)),
                 ("tiled", json::num(speedup_at(top, "tiled"))),
                 ("threaded", json::num(speedup_at(top, "threaded"))),
+                ("plan", json::num(speedup_at(top, "plan"))),
             ]),
         ),
     ]);

@@ -12,9 +12,16 @@
 //! [`crate::runtime::kernel::KernelPolicy`] by *measurement* (the serving
 //! substrate is the host, so wall clock ranks candidates the way the
 //! model ranks GPU tiles).
+//!
+//! [`refine_measured`] is the autotuner in its plan-compiler role: it
+//! takes a compiled [`ExecutionPlan`] and lets the plan's kernel compete
+//! against alternatives on real wall clock, returning a plan with the
+//! winner swapped in — refinement replaces *a variant's plan*
+//! (`Registry::refine_plans_measured`), never a process-global policy.
 
 use std::time::Instant;
 
+use crate::plan::{ExecutionPlan, PassTrace};
 use crate::runtime::kernel::{self, Blocking, KernelPolicy};
 use crate::schedule::{Dtype, Schedule};
 use crate::sim::{simulate, DeviceModel, SimResult};
@@ -147,6 +154,61 @@ pub fn sweep_cpu(
     cands
 }
 
+/// Measured refinement of a compiled execution plan: the plan's lowered
+/// kernel competes against the naive and default-tiled alternatives on
+/// the plan's real shape (min-of-`iters` wall clock, one warmup), and
+/// the fastest kernel wins the plan slot.  The sweep is recorded in the
+/// plan's provenance trace; everything else about the plan is preserved.
+pub fn refine_measured(plan: &ExecutionPlan, iters: usize) -> ExecutionPlan {
+    let (m, n, k) = (plan.m, plan.n, plan.k);
+    if m == 0 || n == 0 || k == 0 {
+        return plan.clone();
+    }
+    let mut candidates: Vec<KernelPolicy> = Vec::new();
+    for c in [
+        plan.kernel,
+        KernelPolicy::Naive,
+        KernelPolicy::Tiled(Blocking::default()),
+    ] {
+        if !candidates.contains(&c) {
+            candidates.push(c);
+        }
+    }
+    let n_candidates = candidates.len();
+    let mut rng = Rng::new(0xF1);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let mut out = vec![0.0f32; m * n];
+    let mut best = (f64::INFINITY, plan.kernel);
+    for policy in candidates {
+        let mut t_best = f64::INFINITY;
+        for it in 0..=iters.max(1) {
+            out.fill(0.0);
+            let t = Instant::now();
+            kernel::matmul(policy, &mut out, &a, &b, m, n, k);
+            let dt = t.elapsed().as_secs_f64();
+            if it > 0 {
+                t_best = t_best.min(dt);
+            }
+        }
+        if t_best < best.0 {
+            best = (t_best, policy);
+        }
+    }
+    let mut refined = plan.clone();
+    refined.kernel = best.1;
+    refined.trace.push(PassTrace {
+        pass: "measure-refine".to_string(),
+        decision: best.1.name(),
+        reason: format!(
+            "fastest of {n_candidates} measured kernels at {m}x{n}x{k} \
+             (min of {} timed runs each)",
+            iters.max(1)
+        ),
+    });
+    refined
+}
+
 /// The best candidate, or None when no tile divides the problem.
 pub fn best(
     m: usize,
@@ -230,6 +292,22 @@ mod tests {
         for pair in cands.windows(2) {
             assert!(pair[0].gflops >= pair[1].gflops);
         }
+    }
+
+    #[test]
+    fn refine_measured_swaps_the_plan_kernel_and_records_the_sweep() {
+        use crate::plan::{compile, GemmKey, PlanEnv};
+        let plan = compile(&GemmKey::plain(48, 48, 48), &PlanEnv::pinned()).unwrap();
+        let refined = refine_measured(&plan, 1);
+        // Same contract, refinement only touches the kernel + trace.
+        assert_eq!((refined.m, refined.n, refined.k), (plan.m, plan.n, plan.k));
+        assert_eq!(refined.epilogue, plan.epilogue);
+        assert!(refined.kernel.validate().is_ok());
+        assert_eq!(refined.trace.len(), plan.trace.len() + 1);
+        assert_eq!(refined.trace.last().unwrap().pass, "measure-refine");
+        // Degenerate shapes pass through untouched.
+        let zero = compile(&GemmKey::plain(0, 0, 0), &PlanEnv::pinned()).unwrap();
+        assert_eq!(refine_measured(&zero, 1), zero);
     }
 
     #[test]

@@ -24,11 +24,12 @@ pub struct DeviceLoad {
     pub busy_sec: f64,
 }
 
-/// Work executed under one GEMM kernel policy (`--kernel` A/B
-/// accounting).  Attributed at *execution* time — a mid-run policy flip
-/// opens a new entry instead of blending totals under one label.
+/// Work executed under one compiled execution plan (`plan <id>` report
+/// lines).  Attributed at *execution* time, keyed by the plan id that
+/// actually ran the work — a refined/swapped plan opens a new entry
+/// instead of blending totals under one label.
 #[derive(Debug, Clone, Default, PartialEq)]
-pub struct KernelLoad {
+pub struct PlanLoad {
     /// Completed GEMM requests.
     pub requests: u64,
     /// Total GEMM flops (2·m·n·k per request; transformer programs are
@@ -50,8 +51,8 @@ struct Inner {
     exec_sec: Reservoir,
     per_variant: BTreeMap<String, u64>,
     per_device: BTreeMap<usize, DeviceLoad>,
-    /// GEMM work keyed by the kernel policy active when it executed.
-    per_kernel: BTreeMap<String, KernelLoad>,
+    /// GEMM work keyed by the execution plan that ran it.
+    per_plan: BTreeMap<String, PlanLoad>,
 }
 
 impl Default for Inner {
@@ -67,7 +68,7 @@ impl Default for Inner {
             exec_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xE7EC),
             per_variant: BTreeMap::new(),
             per_device: BTreeMap::new(),
-            per_kernel: BTreeMap::new(),
+            per_plan: BTreeMap::new(),
         }
     }
 }
@@ -89,7 +90,7 @@ pub struct MetricsSnapshot {
     pub exec: Option<Summary>,
     pub per_variant: BTreeMap<String, u64>,
     pub per_device: BTreeMap<usize, DeviceLoad>,
-    pub per_kernel: BTreeMap<String, KernelLoad>,
+    pub per_plan: BTreeMap<String, PlanLoad>,
 }
 
 impl Metrics {
@@ -126,22 +127,23 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
-    /// Make a kernel policy visible in the report even before (or
-    /// without) any work executing under it.
-    pub fn on_kernel_policy(&self, policy: &str) {
+    /// Make a compiled plan visible in the report even before (or
+    /// without) any work executing under it (the server preseeds every
+    /// registry plan at startup).
+    pub fn on_plan_seen(&self, plan_id: &str) {
         self.inner
             .lock()
             .unwrap()
-            .per_kernel
-            .entry(policy.to_string())
+            .per_plan
+            .entry(plan_id.to_string())
             .or_default();
     }
 
-    /// Account completed GEMM work under the kernel policy that actually
-    /// executed it (read at execution time, not at startup or snapshot).
-    pub fn on_kernel_work(&self, policy: &str, requests: u64, flops: f64, busy_sec: f64) {
+    /// Account completed GEMM work under the plan that actually executed
+    /// it (the plan travels with the work item, read at execution time).
+    pub fn on_plan_work(&self, plan_id: &str, requests: u64, flops: f64, busy_sec: f64) {
         let mut g = self.inner.lock().unwrap();
-        let load = g.per_kernel.entry(policy.to_string()).or_default();
+        let load = g.per_plan.entry(plan_id.to_string()).or_default();
         load.requests += requests;
         load.flops += flops;
         load.busy_sec += busy_sec;
@@ -168,7 +170,7 @@ impl Metrics {
             exec: g.exec_sec.summary(),
             per_variant: g.per_variant.clone(),
             per_device: g.per_device.clone(),
-            per_kernel: g.per_kernel.clone(),
+            per_plan: g.per_plan.clone(),
         }
     }
 }
@@ -196,17 +198,17 @@ impl MetricsSnapshot {
         if let Some(q) = &self.queue_wait {
             out.push_str(&format!("queue wait: p50 {:.3} ms\n", q.p50 * 1e3));
         }
-        for (policy, load) in &self.per_kernel {
+        for (plan_id, load) in &self.per_plan {
             if load.busy_sec > 0.0 && load.flops > 0.0 {
                 out.push_str(&format!(
-                    "kernel {policy}: {} reqs, {:.2} GFLOP, {:.2} GFLOP/s busy-throughput\n",
+                    "plan {plan_id}: {} reqs, {:.2} GFLOP, {:.2} GFLOP/s busy-throughput\n",
                     load.requests,
                     load.flops / 1e9,
                     load.flops / load.busy_sec / 1e9
                 ));
             } else {
                 out.push_str(&format!(
-                    "kernel {policy}: {} reqs, {:.2} GFLOP\n",
+                    "plan {plan_id}: {} reqs, {:.2} GFLOP\n",
                     load.requests,
                     load.flops / 1e9
                 ));
@@ -285,31 +287,37 @@ mod tests {
     }
 
     #[test]
-    fn kernel_work_is_segmented_per_policy() {
+    fn plan_work_is_segmented_per_plan_id() {
         let m = Metrics::new();
-        m.on_kernel_policy("naive");
-        m.on_kernel_work("naive", 2, 2.0e9, 0.5);
-        // A mid-run policy flip opens a new entry instead of blending
-        // the naive totals under the new label.
-        m.on_kernel_work("tiled:128,256,1024", 1, 3.0e9, 0.25);
+        m.on_plan_seen("64x64x64/f16:naive");
+        m.on_plan_work("64x64x64/f16:naive", 2, 2.0e9, 0.5);
+        // A plan swap (refinement) opens a new entry instead of blending
+        // the old plan's totals under the new id.
+        m.on_plan_work("512x512x512/f16:tiled:128,256,1024", 1, 3.0e9, 0.25);
         let s = m.snapshot();
-        assert_eq!(s.per_kernel["naive"].requests, 2);
-        assert!((s.per_kernel["naive"].flops - 2.0e9).abs() < 1.0);
-        assert_eq!(s.per_kernel["tiled:128,256,1024"].requests, 1);
+        assert_eq!(s.per_plan["64x64x64/f16:naive"].requests, 2);
+        assert!((s.per_plan["64x64x64/f16:naive"].flops - 2.0e9).abs() < 1.0);
+        assert_eq!(s.per_plan["512x512x512/f16:tiled:128,256,1024"].requests, 1);
         let report = s.report();
         // 2 GFLOP / 0.5 s = 4 GFLOP/s; 3 GFLOP / 0.25 s = 12 GFLOP/s
-        assert!(report.contains("kernel naive: 2 reqs"), "{report}");
+        assert!(report.contains("plan 64x64x64/f16:naive: 2 reqs"), "{report}");
         assert!(report.contains("4.00 GFLOP/s"), "{report}");
-        assert!(report.contains("kernel tiled:128,256,1024: 1 reqs"), "{report}");
+        assert!(
+            report.contains("plan 512x512x512/f16:tiled:128,256,1024: 1 reqs"),
+            "{report}"
+        );
         assert!(report.contains("12.00 GFLOP/s"), "{report}");
     }
 
     #[test]
-    fn kernel_policy_visible_before_any_work() {
+    fn plan_visible_before_any_work() {
         let m = Metrics::new();
-        m.on_kernel_policy("threaded:128,256,1024,0");
+        m.on_plan_seen("1024x1024x1024/f16:threaded:128,256,1024,4");
         let report = m.snapshot().report();
-        assert!(report.contains("kernel threaded:128,256,1024,0: 0 reqs"), "{report}");
+        assert!(
+            report.contains("plan 1024x1024x1024/f16:threaded:128,256,1024,4: 0 reqs"),
+            "{report}"
+        );
     }
 
     #[test]

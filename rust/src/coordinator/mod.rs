@@ -14,7 +14,7 @@ pub mod server;
 pub mod sharding;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
-pub use metrics::{DeviceLoad, KernelLoad, Metrics, MetricsSnapshot};
+pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot, PlanLoad};
 pub use registry::{GemmKey, Registry, RegistryEntry};
 pub use server::{GemmRequest, GemmResponse, Server, ServerConfig};
 pub use sharding::{

@@ -1,64 +1,25 @@
-//! Kernel registry: which compiled artifact serves which GEMM shape.
+//! Kernel registry: which compiled artifact serves which GEMM shape, and
+//! under which compiled execution plan.
 //!
 //! Mirrors a serving router's model registry: every artifact from the
 //! manifest is indexed by its problem key, and when several variants cover
 //! the same key (different tile configurations), the performance model
 //! ranks them — the run-time half of the paper's "try tile combinations,
-//! keep the best" methodology.
+//! keep the best" methodology.  Alongside the variant ranking the registry
+//! caches one compiled [`ExecutionPlan`] per [`GemmKey`] (the output of
+//! `crate::plan`'s pass pipeline): the server threads these plans
+//! explicitly through its workers, so "how should this GEMM run" lives in
+//! exactly one place instead of a process-global kernel policy.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use crate::plan::{self, ExecutionPlan, PlanEnv};
 use crate::runtime::{ArtifactKind, ArtifactMeta};
 use crate::schedule::Dtype;
 use crate::sim::{simulate, DeviceModel};
 
-/// Routing key for a GEMM request.
-///
-/// `dtype_in` is part of the key: an f16-input kernel and a tf32/f32-input
-/// kernel at the same (m, n, k, dtype_acc, epilogue) are different
-/// precision modes (§2.3 of the paper) and must never share a variant
-/// list — without it, `best()` could route a request to the wrong
-/// precision.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct GemmKey {
-    pub m: usize,
-    pub n: usize,
-    pub k: usize,
-    pub dtype_in: Dtype,
-    pub dtype_acc: Dtype,
-    pub epilogue: String,
-}
-
-impl GemmKey {
-    /// The pipeline's common mode: f16 inputs, f32 accumulate, no epilogue.
-    pub fn plain(m: usize, n: usize, k: usize) -> GemmKey {
-        GemmKey {
-            m,
-            n,
-            k,
-            dtype_in: Dtype::F16,
-            dtype_acc: Dtype::F32,
-            epilogue: "none".into(),
-        }
-    }
-
-    pub fn with_dtypes(
-        m: usize,
-        n: usize,
-        k: usize,
-        dtype_in: Dtype,
-        dtype_acc: Dtype,
-    ) -> GemmKey {
-        GemmKey {
-            m,
-            n,
-            k,
-            dtype_in,
-            dtype_acc,
-            epilogue: "none".into(),
-        }
-    }
-}
+pub use crate::plan::GemmKey;
 
 #[derive(Debug, Clone)]
 pub struct RegistryEntry {
@@ -69,17 +30,26 @@ pub struct RegistryEntry {
     pub predicted_tflops: Option<f64>,
 }
 
-/// Registry: GemmKey -> ranked variants (best first).
+/// Registry: GemmKey -> ranked variants (best first) + compiled plan.
 #[derive(Debug, Default)]
 pub struct Registry {
     entries: HashMap<GemmKey, Vec<RegistryEntry>>,
     baselines: HashMap<GemmKey, String>,
+    plans: HashMap<GemmKey, Arc<ExecutionPlan>>,
+    plan_env: PlanEnv,
 }
 
 impl Registry {
-    /// Build from manifest metadata, ranking variants with the device model.
-    pub fn build(metas: &[ArtifactMeta], device: &DeviceModel) -> Registry {
-        let mut reg = Registry::default();
+    /// Registry compiling plans under a specific environment (the server
+    /// passes its pool size here).
+    pub fn with_env(plan_env: PlanEnv) -> Registry {
+        Registry { plan_env, ..Registry::default() }
+    }
+
+    /// Build from manifest metadata, ranking variants with the device
+    /// model and compiling one execution plan per key under `plan_env`.
+    pub fn build(metas: &[ArtifactMeta], device: &DeviceModel, plan_env: PlanEnv) -> Registry {
+        let mut reg = Registry::with_env(plan_env);
         for meta in metas {
             match meta.kind {
                 ArtifactKind::Generated | ArtifactKind::Fused | ArtifactKind::Ablation => {
@@ -98,6 +68,7 @@ impl Registry {
                         epilogue: s.epilogue.clone(),
                     };
                     let predicted = simulate(s, device).tflops;
+                    reg.ensure_plan(&key);
                     reg.entries.entry(key).or_default().push(RegistryEntry {
                         artifact: meta.name.clone(),
                         kind: meta.kind,
@@ -116,6 +87,7 @@ impl Registry {
                             dtype_acc: acc,
                             epilogue: "none".into(),
                         };
+                        reg.ensure_plan(&key);
                         reg.baselines.insert(key, meta.name.clone());
                     }
                 }
@@ -131,6 +103,18 @@ impl Registry {
             });
         }
         reg
+    }
+
+    /// Compile and cache the plan for `key` if absent.  Compilation is
+    /// infallible for non-forced environments; a forced-invalid override
+    /// is caught at parse time, so `ok()` here cannot silently drop plans
+    /// in practice.
+    fn ensure_plan(&mut self, key: &GemmKey) {
+        if !self.plans.contains_key(key) {
+            if let Ok(p) = plan::compile(key, &self.plan_env) {
+                self.plans.insert(key.clone(), Arc::new(p));
+            }
+        }
     }
 
     /// Profile-guided re-ranking: measure each variant once on the real
@@ -158,7 +142,34 @@ impl Registry {
         }
     }
 
+    /// Plan refinement: run `refine` over every cached plan and swap in
+    /// the plans it returns — the autotuner's measured sweep plugs in
+    /// here (`autotune::refine_measured`), replacing *a variant's plan*
+    /// instead of mutating a process-global policy.
+    pub fn refine_plans<F>(&mut self, mut refine: F)
+    where
+        F: FnMut(&GemmKey, &ExecutionPlan) -> Option<ExecutionPlan>,
+    {
+        let keys: Vec<GemmKey> = self.plans.keys().cloned().collect();
+        for key in keys {
+            let current = self.plans[&key].clone();
+            if let Some(new_plan) = refine(&key, &current) {
+                self.plans.insert(key, Arc::new(new_plan));
+            }
+        }
+    }
+
+    /// Measured plan refinement via the autotuner: each key's plan
+    /// competes against the naive and default-tiled alternatives on real
+    /// wall clock; the fastest kernel wins the plan slot.
+    pub fn refine_plans_measured(&mut self, iters: usize) {
+        self.refine_plans(|_key, current| {
+            Some(crate::autotune::refine_measured(current, iters))
+        });
+    }
+
     pub fn register(&mut self, key: GemmKey, entry: RegistryEntry) {
+        self.ensure_plan(&key);
         self.entries.entry(key).or_default().push(entry);
     }
 
@@ -173,6 +184,16 @@ impl Registry {
 
     pub fn baseline(&self, key: &GemmKey) -> Option<&str> {
         self.baselines.get(key).map(|s| s.as_str())
+    }
+
+    /// The compiled plan for a key (shared with the server's workers).
+    pub fn plan(&self, key: &GemmKey) -> Option<Arc<ExecutionPlan>> {
+        self.plans.get(key).cloned()
+    }
+
+    /// Every cached (key, plan) pair — `make plans` / metrics preseeding.
+    pub fn plans(&self) -> impl Iterator<Item = (&GemmKey, &Arc<ExecutionPlan>)> {
+        self.plans.iter()
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &GemmKey> {
@@ -191,6 +212,7 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::KernelPolicy;
     use crate::schedule::Schedule;
     use std::path::PathBuf;
 
@@ -221,7 +243,7 @@ mod tests {
             meta("small", ArtifactKind::Generated, Some(sched((64, 64, 64), (32, 32, 32)))),
             meta("large", ArtifactKind::Generated, Some(sched((128, 128, 64), (64, 32, 32)))),
         ];
-        let reg = Registry::build(&metas, &d);
+        let reg = Registry::build(&metas, &d, PlanEnv::default());
         let key = GemmKey::plain(512, 512, 512);
         let best = reg.best(&key).unwrap();
         assert_eq!(reg.variants(&key).len(), 2);
@@ -236,7 +258,7 @@ mod tests {
             meta("small", ArtifactKind::Generated, Some(sched((64, 64, 64), (32, 32, 32)))),
             meta("large", ArtifactKind::Generated, Some(sched((128, 128, 64), (64, 32, 32)))),
         ];
-        let mut reg = Registry::build(&metas, &d);
+        let mut reg = Registry::build(&metas, &d, PlanEnv::default());
         let key = GemmKey::plain(512, 512, 512);
         assert_eq!(reg.best(&key).unwrap().artifact, "small");
         // measured: "large" is 2x faster on this substrate
@@ -248,10 +270,70 @@ mod tests {
     fn baseline_routed_separately() {
         let d = DeviceModel::rtx3090();
         let metas = vec![meta("base", ArtifactKind::Baseline, None)];
-        let reg = Registry::build(&metas, &d);
+        let reg = Registry::build(&metas, &d, PlanEnv::default());
         let key = GemmKey::plain(256, 256, 256);
         assert_eq!(reg.baseline(&key), Some("base"));
         assert!(reg.best(&key).is_none());
+        // baselines get plans too: they execute through the same engine
+        assert!(reg.plan(&key).is_some());
+    }
+
+    #[test]
+    fn every_registered_key_gets_a_compiled_plan() {
+        let d = DeviceModel::rtx3090();
+        let metas = vec![
+            meta("small", ArtifactKind::Generated, Some(sched((64, 64, 64), (32, 32, 32)))),
+            meta("base", ArtifactKind::Baseline, None),
+        ];
+        let reg = Registry::build(&metas, &d, PlanEnv::pinned());
+        for key in reg.keys() {
+            let plan = reg.plan(key).expect("registered key without a plan");
+            assert!(plan.matches_gemm(
+                key.m,
+                key.n,
+                key.k,
+                key.dtype_in,
+                key.dtype_acc,
+                &key.epilogue
+            ));
+        }
+        assert!(reg.plans().count() >= reg.len());
+        // register() also compiles
+        let mut reg = Registry::default();
+        let key = GemmKey::plain(96, 96, 96);
+        reg.register(
+            key.clone(),
+            RegistryEntry {
+                artifact: "v".into(),
+                kind: ArtifactKind::Generated,
+                predicted_tflops: None,
+            },
+        );
+        assert!(reg.plan(&key).is_some());
+    }
+
+    #[test]
+    fn refine_plans_swaps_a_variants_plan_not_a_global() {
+        let mut reg = Registry::with_env(PlanEnv::pinned());
+        let key = GemmKey::plain(512, 512, 512);
+        reg.register(
+            key.clone(),
+            RegistryEntry {
+                artifact: "v".into(),
+                kind: ArtifactKind::Generated,
+                predicted_tflops: None,
+            },
+        );
+        let before = reg.plan(&key).unwrap();
+        reg.refine_plans(|k, current| {
+            assert_eq!(k, &key);
+            let mut refined = current.clone();
+            refined.kernel = KernelPolicy::Naive;
+            Some(refined)
+        });
+        let after = reg.plan(&key).unwrap();
+        assert_eq!(after.kernel, KernelPolicy::Naive);
+        assert_ne!(before.kernel, after.kernel);
     }
 
     #[test]
@@ -266,7 +348,7 @@ mod tests {
             meta("half_kernel", ArtifactKind::Generated, Some(half)),
             meta("tf32_kernel", ArtifactKind::Generated, Some(tf32)),
         ];
-        let reg = Registry::build(&metas, &d);
+        let reg = Registry::build(&metas, &d, PlanEnv::default());
         let key_f16 = GemmKey::with_dtypes(512, 512, 512, Dtype::F16, Dtype::F32);
         let key_f32 = GemmKey::with_dtypes(512, 512, 512, Dtype::F32, Dtype::F32);
         assert_eq!(reg.variants(&key_f16).len(), 1);
@@ -279,7 +361,7 @@ mod tests {
     fn baseline_keyed_by_input_dtype() {
         let d = DeviceModel::rtx3090();
         let metas = vec![meta("base", ArtifactKind::Baseline, None)];
-        let reg = Registry::build(&metas, &d);
+        let reg = Registry::build(&metas, &d, PlanEnv::default());
         // meta() declares dtype_in f16: the f16 key hits, the f32 key must
         // not alias onto it.
         assert_eq!(reg.baseline(&GemmKey::plain(256, 256, 256)), Some("base"));
@@ -293,7 +375,7 @@ mod tests {
         let mut s = sched((64, 64, 64), (32, 32, 32));
         s.opt_level = 3;
         let metas = vec![meta("abl3", ArtifactKind::Ablation, Some(s))];
-        let reg = Registry::build(&metas, &d);
+        let reg = Registry::build(&metas, &d, PlanEnv::default());
         assert!(reg.is_empty());
     }
 }

@@ -20,7 +20,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{kernel, KernelPolicy, Program, Runtime, Tensor};
+use crate::plan::{self, ExecutionPlan, PlanEnv, PlanOverride};
+use crate::runtime::{Program, Runtime, Tensor};
 use crate::sim::DeviceModel;
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
@@ -55,6 +56,9 @@ struct Job {
     request: GemmRequest,
     submitted_at: Instant,
     reply: Sender<GemmResponse>,
+    /// The compiled plan this job executes under, attached by the
+    /// dispatcher at routing time (registry-cached per GemmKey).
+    plan: Option<Arc<ExecutionPlan>>,
 }
 
 #[derive(Debug, Clone)]
@@ -71,12 +75,12 @@ pub struct ServerConfig {
     /// instead of modeled TFLOPs (profile-guided routing; the model ranks
     /// for the paper's GPU, measurement ranks for the actual substrate).
     pub rerank_measured: bool,
-    /// GEMM kernel policy for the executor (`--kernel` A/B plumbing).
-    /// `Some` sets the process-global policy at startup; `None` keeps
-    /// whatever is already selected.  Policies are bit-identical — this
-    /// changes throughput only, which the metrics report attributes to
-    /// the policy by name.
-    pub kernel: Option<KernelPolicy>,
+    /// Execution-plan override (`--plan` CLI plumbing).  `Auto` runs the
+    /// full pass pipeline per GemmKey; a forced kernel still compiles a
+    /// per-key plan (with the override recorded in its trace).  Plans are
+    /// bit-identical — this changes throughput only, which the metrics
+    /// report attributes per plan id.
+    pub plan: PlanOverride,
 }
 
 impl Default for ServerConfig {
@@ -87,8 +91,25 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             shard: ShardConfig::default(),
             rerank_measured: false,
-            kernel: None,
+            plan: PlanOverride::Auto,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Total worker threads the server will actually spawn — the one
+    /// definition shared by thread spawning and plan compilation, so the
+    /// pool size the thread-partitioning pass sees can never drift from
+    /// the pool that exists.
+    fn total_threads(&self) -> usize {
+        self.workers.max(1).max(self.devices.max(1))
+    }
+
+    /// The plan-compilation environment this configuration implies: the
+    /// executor shares the host with the whole worker pool, so compiled
+    /// plans stay single-thread unless the pool is a single worker.
+    fn plan_env(&self) -> PlanEnv {
+        PlanEnv::for_pool(self.total_threads()).with_force(self.plan)
     }
 }
 
@@ -104,6 +125,8 @@ struct ShardTask {
     job: Arc<ShardedJob>,
     shard_idx: usize,
     program: Program,
+    /// The shard's own compiled plan (derived from the shard shape).
+    eplan: Arc<ExecutionPlan>,
     inputs: Vec<Tensor>,
 }
 
@@ -112,6 +135,9 @@ struct ShardTask {
 struct ShardedJob {
     id: u64,
     variant: String,
+    /// The request-level plan id (metrics attribute the completed
+    /// request here; per-shard flops go to each shard plan's id).
+    plan_id: String,
     submitted_at: Instant,
     /// Set by the first worker to start a shard: splits queue wait from
     /// execution time the same way the batch path does.
@@ -139,7 +165,7 @@ pub struct Server {
 
 impl Server {
     pub fn start(runtime: Arc<Runtime>, device: &DeviceModel, cfg: ServerConfig) -> Server {
-        let mut registry = Registry::build(runtime.artifacts(), device);
+        let mut registry = Registry::build(runtime.artifacts(), device, cfg.plan_env());
         if cfg.rerank_measured {
             registry.rerank_measured(|name| {
                 let artifact = runtime.load(name).ok()?;
@@ -158,18 +184,20 @@ impl Server {
         registry: Arc<Registry>,
         cfg: ServerConfig,
     ) -> Server {
-        if let Some(policy) = cfg.kernel {
-            kernel::set_global_policy(policy);
-        }
+        let plan_env = Arc::new(cfg.plan_env());
         let metrics = Arc::new(Metrics::new());
-        metrics.on_kernel_policy(&kernel::global_policy().name());
+        // Preseed the report with every registry-compiled plan so an idle
+        // key is still visible.
+        for (_key, p) in registry.plans() {
+            metrics.on_plan_seen(&p.id());
+        }
         let shutdown = Arc::new(AtomicBool::new(false));
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
 
         // Per-device work queues; worker threads spread across them so
         // every device context has at least one executor.
         let devices = cfg.devices.max(1);
-        let total_threads = cfg.workers.max(1).max(devices);
+        let total_threads = cfg.total_threads();
         let threads_base = total_threads / devices;
         let threads_rem = total_threads % devices;
         let mut device_txs: Vec<Sender<WorkItem>> = Vec::with_capacity(devices);
@@ -183,6 +211,7 @@ impl Server {
                 let rt = runtime.clone();
                 let rx = rx.clone();
                 let m = metrics.clone();
+                let worker_env = plan_env.clone();
                 workers.push(std::thread::spawn(move || loop {
                     let msg = {
                         let guard = rx.lock().unwrap();
@@ -191,7 +220,7 @@ impl Server {
                     let Ok(item) = msg else { break };
                     match item {
                         WorkItem::Batch { variant, batch } => {
-                            run_batch(&rt, &m, dev, &variant, batch);
+                            run_batch(&rt, &m, &worker_env, dev, &variant, batch);
                         }
                         WorkItem::Shard(task) => {
                             let started = Instant::now();
@@ -202,20 +231,23 @@ impl Server {
                                     *g = Some(started);
                                 }
                             }
-                            let result =
-                                sharding::execute_shard(&task.program, &task.inputs);
+                            let result = sharding::execute_shard(
+                                &task.program,
+                                &task.eplan,
+                                &task.inputs,
+                            );
                             let busy = started.elapsed().as_secs_f64();
                             m.on_device_task(dev, busy);
-                            // Per-shard kernel attribution: true executor
-                            // busy time and the policy active while the
-                            // shard actually ran (shard flops sum to the
-                            // whole job's across the plan).
+                            // Per-shard plan attribution: true executor
+                            // busy time under the shard's own compiled
+                            // plan (shard flops sum to the whole job's
+                            // across the shard set).
                             if result.is_ok() {
                                 if let Program::Gemm { m: sm, n: sn, k: sk, .. } =
                                     task.program
                                 {
-                                    m.on_kernel_work(
-                                        &kernel::global_policy().name(),
+                                    m.on_plan_work(
+                                        &task.eplan.id(),
                                         0,
                                         2.0 * sm as f64 * sn as f64 * sk as f64,
                                         busy,
@@ -234,6 +266,7 @@ impl Server {
         let stop = shutdown.clone();
         let met = metrics.clone();
         let rt = runtime.clone();
+        let env = plan_env.clone();
         let batcher_cfg = cfg.batcher.clone();
         let shard_cfg = cfg.shard.clone();
         let dispatcher = std::thread::spawn(move || {
@@ -241,13 +274,16 @@ impl Server {
             let mut poll = Duration::from_millis(1);
             let mut rr = 0usize;
             'main: loop {
-                let mut enqueue = |job: Job| {
-                    match route(&reg, &job.request) {
-                        Ok(v) => batcher.push(Queued {
-                            variant: v,
-                            enqueued_at: job.submitted_at,
-                            payload: job,
-                        }),
+                let mut enqueue = |mut job: Job| {
+                    match route(&reg, &env, &job.request) {
+                        Ok((v, p)) => {
+                            job.plan = Some(p);
+                            batcher.push(Queued {
+                                variant: v,
+                                enqueued_at: job.submitted_at,
+                                payload: job,
+                            })
+                        }
                         Err(e) => {
                             met.on_fail();
                             let _ = job.reply.send(GemmResponse {
@@ -285,8 +321,8 @@ impl Server {
                         }
                         BatchDecision::Run { variant, batch } => {
                             if !handle_run(
-                                &rt, &met, &shard_cfg, &device_txs, &mut rr, variant,
-                                batch,
+                                &rt, &met, &env, &shard_cfg, &device_txs, &mut rr,
+                                variant, batch,
                             ) {
                                 break 'main;
                             }
@@ -302,7 +338,8 @@ impl Server {
                 match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
                     BatchDecision::Run { variant, batch } => {
                         if !handle_run(
-                            &rt, &met, &shard_cfg, &device_txs, &mut rr, variant, batch,
+                            &rt, &met, &env, &shard_cfg, &device_txs, &mut rr, variant,
+                            batch,
                         ) {
                             break;
                         }
@@ -357,6 +394,7 @@ impl Server {
             request,
             submitted_at: Instant::now(),
             reply: tx,
+            plan: None, // attached by the dispatcher at routing time
         };
         if let Err(mpsc::SendError(job)) = self.submit_tx.send(job) {
             // The dispatcher is gone (shutdown raced the submit).  Account
@@ -383,10 +421,6 @@ impl Server {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        // The kernel policy is process-global and may have changed since
-        // startup; work is attributed per policy at execution time, so
-        // here we only make the currently active policy visible.
-        self.metrics.on_kernel_policy(&kernel::global_policy().name());
         self.metrics.snapshot()
     }
 
@@ -409,30 +443,45 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.on_kernel_policy(&kernel::global_policy().name());
         self.metrics.snapshot()
     }
 }
 
-fn route(registry: &Registry, req: &GemmRequest) -> Result<String> {
-    if req.use_baseline {
-        return registry
+/// Route a request to its artifact and its compiled plan.  Plans come
+/// from the registry cache; a key the registry somehow never compiled
+/// (manually assembled registries) compiles on the spot under the
+/// server's environment.
+fn route(
+    registry: &Registry,
+    env: &PlanEnv,
+    req: &GemmRequest,
+) -> Result<(String, Arc<ExecutionPlan>)> {
+    let variant = if req.use_baseline {
+        registry
             .baseline(&req.key)
             .map(str::to_string)
-            .ok_or_else(|| anyhow!("no baseline artifact for {:?}", req.key));
-    }
-    registry
-        .best(&req.key)
-        .map(|e| e.artifact.clone())
-        .ok_or_else(|| anyhow!("no kernel variant registered for {:?}", req.key))
+            .ok_or_else(|| anyhow!("no baseline artifact for {:?}", req.key))?
+    } else {
+        registry
+            .best(&req.key)
+            .map(|e| e.artifact.clone())
+            .ok_or_else(|| anyhow!("no kernel variant registered for {:?}", req.key))?
+    };
+    let eplan = match registry.plan(&req.key) {
+        Some(p) => p,
+        None => Arc::new(plan::compile(&req.key, env)?),
+    };
+    Ok((variant, eplan))
 }
 
-/// Dispatch one released batch: shard it across the pool when the plan
-/// says so, otherwise send the whole batch to one device queue
+/// Dispatch one released batch: shard it across the pool when the shard
+/// planner says so, otherwise send the whole batch to one device queue
 /// (round-robin).  Returns false when the workers are gone.
+#[allow(clippy::too_many_arguments)]
 fn handle_run(
     rt: &Runtime,
     met: &Metrics,
+    env: &PlanEnv,
     shard_cfg: &ShardConfig,
     device_txs: &[Sender<WorkItem>],
     rr: &mut usize,
@@ -442,7 +491,7 @@ fn handle_run(
     let devices = device_txs.len();
     if devices > 1 {
         if let Ok(artifact) = rt.load(&variant) {
-            if let Some(plan) = sharding::plan_for(artifact.program(), devices, shard_cfg)
+            if let Some(splan) = sharding::plan_for(artifact.program(), devices, shard_cfg)
             {
                 let program = artifact.program().clone();
                 met.on_batch(batch.len());
@@ -453,7 +502,8 @@ fn handle_run(
                     let base = *rr;
                     *rr += 1;
                     dispatch_sharded(
-                        q.payload, &variant, &program, &plan, base, device_txs, met,
+                        q.payload, &variant, &program, env, &splan, base, device_txs,
+                        met,
                     );
                 }
                 return true;
@@ -504,36 +554,39 @@ fn dispatch_sharded(
     job: Job,
     variant: &str,
     base: &Program,
-    plan: &ShardPlan,
+    env: &PlanEnv,
+    splan: &ShardPlan,
     device_base: usize,
     device_txs: &[Sender<WorkItem>],
     metrics: &Metrics,
 ) {
-    let Job { id, request, submitted_at, reply } = job;
+    let Job { id, request, submitted_at, reply, plan: request_plan } = job;
     let GemmRequest { a, b, c, bias, .. } = request;
     let now = Instant::now();
-    let tasks = match sharding::build_shard_tasks(plan, base, &a, &b, &c, bias.as_ref()) {
-        Ok(t) => t,
-        Err(e) => {
-            metrics.on_fail();
-            let _ = reply.send(GemmResponse {
-                id,
-                output: Err(e),
-                variant: variant.to_string(),
-                queue_wait: now.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
-            return;
-        }
-    };
+    let tasks =
+        match sharding::build_shard_tasks(env, splan, base, &a, &b, &c, bias.as_ref()) {
+            Ok(t) => t,
+            Err(e) => {
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(e),
+                    variant: variant.to_string(),
+                    queue_wait: now.duration_since(submitted_at),
+                    exec_time: Duration::ZERO,
+                    total_latency: submitted_at.elapsed(),
+                });
+                return;
+            }
+        };
     let n_shards = tasks.len();
     let shared = Arc::new(ShardedJob {
         id,
         variant: variant.to_string(),
+        plan_id: request_plan.map(|p| p.id()).unwrap_or_else(|| "unplanned".into()),
         submitted_at,
         exec_started: Mutex::new(None),
-        plan: plan.clone(),
+        plan: splan.clone(),
         base: base.clone(),
         c,
         bias,
@@ -541,13 +594,14 @@ fn dispatch_sharded(
         parts: Mutex::new((0..n_shards).map(|_| None).collect()),
         remaining: AtomicUsize::new(n_shards),
     });
-    for (idx, ((program, inputs), shard)) in
+    for (idx, ((program, eplan, inputs), shard)) in
         tasks.into_iter().zip(&shared.plan.shards).enumerate()
     {
         let item = WorkItem::Shard(ShardTask {
             job: shared.clone(),
             shard_idx: idx,
             program,
+            eplan,
             inputs,
         });
         let dev = (shard.device + device_base) % device_txs.len();
@@ -616,9 +670,10 @@ fn finish_shard(
                 queue_wait.as_secs_f64(),
                 exec_time.as_secs_f64(),
             );
-            // Flops and busy time were attributed per shard as each one
-            // executed; here only the completed request is counted.
-            metrics.on_kernel_work(&kernel::global_policy().name(), 1, 0.0, 0.0);
+            // Flops and busy time were attributed per shard plan as each
+            // one executed; here only the completed request is counted,
+            // under the request-level plan id.
+            metrics.on_plan_work(&sj.plan_id, 1, 0.0, 0.0);
         }
         Err(_) => metrics.on_fail(),
     }
@@ -643,6 +698,7 @@ fn finish_shard(
 fn run_batch(
     rt: &Runtime,
     metrics: &Metrics,
+    env: &PlanEnv,
     device: usize,
     variant: &str,
     batch: Vec<Queued<Job>>,
@@ -671,8 +727,14 @@ fn run_batch(
     let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
         Vec::with_capacity(batch.len());
     let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
+    // One plan per batch: the batcher groups by variant and every job of
+    // a variant carries the same registry-cached plan.
+    let mut batch_plan: Option<Arc<ExecutionPlan>> = None;
     for q in batch {
-        let Job { id, request, submitted_at, reply } = q.payload;
+        let Job { id, request, submitted_at, reply, plan } = q.payload;
+        if batch_plan.is_none() {
+            batch_plan = plan;
+        }
         // Tensors are moved, not cloned: the request is consumed (hot-path
         // allocation discipline — EXPERIMENTS.md §Perf L3).
         let GemmRequest { a, b, c, bias, .. } = request;
@@ -713,14 +775,35 @@ fn run_batch(
         Program::Gemm { m, n, k, .. } => 2.0 * m as f64 * n as f64 * k as f64,
         _ => 0.0,
     };
-    match rt.execute_batch_timed(&artifact, &items) {
+    // The routed plan executes the batch — but only if it actually
+    // describes this artifact's program.  A legacy store can route
+    // through a key whose defaulted dtype_in disagrees with the program
+    // (baselines predating precision-keyed routing); rather than fail
+    // every request on the plan/program mismatch, recompile from the
+    // program itself under the server's environment.
+    let routed_ok = match (&batch_plan, artifact.program().gemm_key()) {
+        (Some(p), Some(key)) => {
+            p.matches_gemm(key.m, key.n, key.k, key.dtype_in, key.dtype_acc, &key.epilogue)
+        }
+        _ => false,
+    };
+    let eplan: Option<Arc<ExecutionPlan>> = if routed_ok {
+        batch_plan
+    } else {
+        artifact.program().compile_plan(env).ok().map(Arc::new)
+    };
+    let plan_id = eplan
+        .as_ref()
+        .map(|p| p.id())
+        .unwrap_or_else(|| "unplanned".to_string());
+    match rt.execute_batch_timed_planned(&artifact, &items, eplan.as_deref()) {
         Ok((outs, timing)) => {
             metrics.on_device_task(device, timing.exec_seconds);
             if item_flops > 0.0 {
-                // Attributed to the policy active *now*, on this worker:
-                // a mid-run policy flip segments instead of blending.
-                metrics.on_kernel_work(
-                    &kernel::global_policy().name(),
+                // Attributed to the plan that ran the work: a refined
+                // (swapped) plan segments instead of blending.
+                metrics.on_plan_work(
+                    &plan_id,
                     outs.len() as u64,
                     item_flops * outs.len() as f64,
                     timing.exec_seconds,

@@ -24,10 +24,12 @@
 //! [`DeviceModel`], so modeled speedup ([`modeled_speedup`]) is checkable
 //! against measured speedup (`benches/sharding.rs`).
 //!
-//! Shard execution routes through [`Program::execute`] and therefore the
-//! GEMM micro-kernel engine ([`crate::runtime::kernel`]).  Kernel
-//! policies are bit-identical, so both invariants above hold under every
-//! policy (pinned by `rust/tests/kernel_equivalence.rs`).
+//! Shard execution routes through [`Program::execute_planned`]: every
+//! shard carries its own compiled [`ExecutionPlan`] (derived from the
+//! shard's program shape under the caller's [`PlanEnv`]), so the sharded
+//! path consumes explicit plans like every other execution path.  Plans
+//! are bit-identical to the naive kernel, so both invariants above hold
+//! under every plan (pinned by `rust/tests/kernel_equivalence.rs`).
 
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
@@ -36,6 +38,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::plan::{ExecutionPlan, PlanEnv};
 use crate::runtime::exec::{gemm_tail, round_to};
 use crate::runtime::{Program, Tensor};
 use crate::schedule::Schedule;
@@ -256,15 +259,18 @@ pub fn shard_inputs(
     }
 }
 
-/// Build the complete per-shard task list for one request.
+/// Build the complete per-shard task list for one request: each shard's
+/// derived program, its compiled execution plan (under `env`), and its
+/// operand slice.
 pub fn build_shard_tasks(
+    env: &PlanEnv,
     plan: &ShardPlan,
     base: &Program,
     a: &Tensor,
     b: &Tensor,
     c: &Tensor,
     bias: Option<&Tensor>,
-) -> Result<Vec<(Program, Vec<Tensor>)>> {
+) -> Result<Vec<(Program, Arc<ExecutionPlan>, Vec<Tensor>)>> {
     let Program::Gemm { epilogue, .. } = *base else {
         bail!("only gemm programs can be sharded");
     };
@@ -313,7 +319,8 @@ pub fn build_shard_tasks(
         .iter()
         .map(|shard| {
             let program = shard_program(base, plan, shard)?;
-            Ok((program, shard_inputs(plan, shard, a, b, c, bias)))
+            let eplan = Arc::new(program.compile_plan(env)?);
+            Ok((program, eplan, shard_inputs(plan, shard, a, b, c, bias)))
         })
         .collect()
 }
@@ -381,11 +388,16 @@ pub fn reduce_outputs(
     }
 }
 
-/// Execute one shard program and take its single output — the one shard
-/// execution body, shared by the [`ShardPool`] workers and the server's
-/// device workers so the two engines cannot drift.
-pub fn execute_shard(program: &Program, inputs: &[Tensor]) -> Result<Tensor> {
-    program.execute(inputs).and_then(|outs| {
+/// Execute one shard program under its compiled plan and take its single
+/// output — the one shard execution body, shared by the [`ShardPool`]
+/// workers and the server's device workers so the two engines cannot
+/// drift.
+pub fn execute_shard(
+    program: &Program,
+    eplan: &ExecutionPlan,
+    inputs: &[Tensor],
+) -> Result<Tensor> {
+    program.execute_planned(inputs, eplan).and_then(|outs| {
         outs.into_iter()
             .next()
             .ok_or_else(|| anyhow!("shard produced no output"))
@@ -398,6 +410,7 @@ pub fn execute_shard(program: &Program, inputs: &[Tensor]) -> Result<Tensor> {
 
 struct PoolTask {
     program: Program,
+    eplan: Arc<ExecutionPlan>,
     inputs: Vec<Tensor>,
     shard_idx: usize,
     reply: Sender<(usize, Result<Tensor>)>,
@@ -416,11 +429,16 @@ struct PoolWorker {
 /// its own per-device queues.
 pub struct ShardPool {
     workers: Vec<PoolWorker>,
+    plan_env: PlanEnv,
 }
 
 impl ShardPool {
     pub fn new(models: Vec<DeviceModel>) -> ShardPool {
         assert!(!models.is_empty(), "shard pool needs at least one device");
+        // Shard plans compile for a pool of this size: the pool's workers
+        // already parallelize across shards, so per-shard plans stay
+        // single-thread.
+        let plan_env = PlanEnv::for_pool(models.len());
         let workers = models
             .into_iter()
             .map(|model| {
@@ -430,7 +448,8 @@ impl ShardPool {
                 let handle = std::thread::spawn(move || {
                     while let Ok(task) = rx.recv() {
                         let started = Instant::now();
-                        let result = execute_shard(&task.program, &task.inputs);
+                        let result =
+                            execute_shard(&task.program, &task.eplan, &task.inputs);
                         let busy = started.elapsed().as_secs_f64();
                         {
                             let mut g = worker_stats.lock().unwrap();
@@ -443,7 +462,7 @@ impl ShardPool {
                 PoolWorker { model, tx, handle: Some(handle), stats }
             })
             .collect();
-        ShardPool { workers }
+        ShardPool { workers, plan_env }
     }
 
     /// Pool of `n` identical devices.
@@ -474,10 +493,10 @@ impl ShardPool {
         c: &Tensor,
         bias: Option<&Tensor>,
     ) -> Result<Tensor> {
-        let tasks = build_shard_tasks(plan, base, a, b, c, bias)?;
+        let tasks = build_shard_tasks(&self.plan_env, plan, base, a, b, c, bias)?;
         let n_shards = tasks.len();
         let (reply_tx, reply_rx) = mpsc::channel();
-        for (idx, ((program, inputs), shard)) in
+        for (idx, ((program, eplan, inputs), shard)) in
             tasks.into_iter().zip(&plan.shards).enumerate()
         {
             let dev = shard.device % self.workers.len();
@@ -485,6 +504,7 @@ impl ShardPool {
                 .tx
                 .send(PoolTask {
                     program,
+                    eplan,
                     inputs,
                     shard_idx: idx,
                     reply: reply_tx.clone(),
@@ -660,11 +680,14 @@ mod tests {
             let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
             let plan = ShardPlan::rows(m, n, k, 3, 1);
             assert_eq!(plan.shards.len(), 3);
-            let parts: Vec<Tensor> = build_shard_tasks(&plan, &base, &a, &b, &c, None)
-                .unwrap()
-                .into_iter()
-                .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
-                .collect();
+            let parts: Vec<Tensor> =
+                build_shard_tasks(&PlanEnv::default(), &plan, &base, &a, &b, &c, None)
+                    .unwrap()
+                    .into_iter()
+                    .map(|(prog, eplan, inputs)| {
+                        prog.execute_planned(&inputs, &eplan).unwrap().remove(0)
+                    })
+                    .collect();
             let got = reduce_outputs(&plan, &base, &c, None, &parts).unwrap();
             assert_eq!(got.shape, want[0].shape);
             assert_eq!(got.data, want[0].data, "{din:?}/{dacc:?} row shard drifted");
@@ -690,19 +713,26 @@ mod tests {
             .unwrap();
         let plan = ShardPlan::split_k(m, n, k, 4, 1);
         assert_eq!(plan.shards.len(), 4);
-        let tasks = build_shard_tasks(&plan, &base, &a, &b, &c, Some(&bias)).unwrap();
-        // shard programs carry no epilogue and take exactly 3 inputs
-        for (prog, inputs) in &tasks {
+        let tasks =
+            build_shard_tasks(&PlanEnv::default(), &plan, &base, &a, &b, &c, Some(&bias))
+                .unwrap();
+        // shard programs carry no epilogue and take exactly 3 inputs, and
+        // each shard's plan describes the shard's own shape
+        for (prog, eplan, inputs) in &tasks {
             assert_eq!(inputs.len(), 3);
-            let Program::Gemm { epilogue, dtype_acc, .. } = *prog else {
+            let Program::Gemm { epilogue, dtype_acc, m: sm, k: sk, .. } = *prog else {
                 panic!("non-gemm shard")
             };
             assert_eq!(epilogue, Epilogue::None);
             assert_eq!(dtype_acc, Dtype::F32);
+            assert_eq!((eplan.m, eplan.k), (sm, sk));
+            assert!(!eplan.fuse_epilogue, "shard plans never fuse an epilogue");
         }
         let parts: Vec<Tensor> = tasks
             .into_iter()
-            .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
+            .map(|(prog, eplan, inputs)| {
+                prog.execute_planned(&inputs, &eplan).unwrap().remove(0)
+            })
             .collect();
         let got = reduce_outputs(&plan, &base, &c, Some(&bias), &parts).unwrap();
         let mut worst = 0f64;
@@ -730,14 +760,15 @@ mod tests {
             fused: true,
         };
         let (a, b, c) = operands(m, n, k, 13);
+        let env = PlanEnv::default();
         let plan = ShardPlan::split_k(m, n, k, 4, 1);
-        assert!(build_shard_tasks(&plan, &base, &a, &b, &c, None).is_err());
+        assert!(build_shard_tasks(&env, &plan, &base, &a, &b, &c, None).is_err());
         let short = t(vec![n - 1], vec![0.0; n - 1]);
-        assert!(build_shard_tasks(&plan, &base, &a, &b, &c, Some(&short)).is_err());
+        assert!(build_shard_tasks(&env, &plan, &base, &a, &b, &c, Some(&short)).is_err());
         // and a bias on a no-epilogue kernel is rejected too
         let plain = gemm(m, n, k, Dtype::F16, Dtype::F32);
         let bias = t(vec![n], vec![0.0; n]);
-        assert!(build_shard_tasks(&plan, &plain, &a, &b, &c, Some(&bias)).is_err());
+        assert!(build_shard_tasks(&env, &plan, &plain, &a, &b, &c, Some(&bias)).is_err());
     }
 
     #[test]

@@ -9,9 +9,11 @@
 //! * this crate is L3 plus the substitute testbed:
 //!   - [`runtime`]     — loader + in-process executor for the AOT
 //!     tensor-program artifacts;
+//!   - [`plan`]        — execution-plan compiler: GemmKey -> compiled
+//!     [`plan::ExecutionPlan`] via an explicit pass pipeline;
 //!   - [`coordinator`] — GEMM service: registry, router, batcher, workers;
 //!   - [`sim`]         — analytic RTX 3090 model (the paper's hardware);
-//!   - [`autotune`]    — tile-space search over the model;
+//!   - [`autotune`]    — tile-space search over the model + plan refiner;
 //!   - [`harness`]     — measurement + figure builders (Fig 2/3/4, Table 1);
 //!   - [`schedule`]    — the kernel-variant contract shared with Python;
 //!   - [`util`]        — in-repo substrates (json, cli, prng, stats,
@@ -20,6 +22,7 @@
 pub mod autotune;
 pub mod coordinator;
 pub mod harness;
+pub mod plan;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -5,18 +5,22 @@
 //!   bench      regenerate a paper figure/table (fig2|fig3|fig4|table1|all)
 //!   autotune   search the tile space for a problem size
 //!   sim        simulate one kernel configuration
+//!   plan       compile the execution plan for one GEMM and measure it
+//!   plans      emit compiled plans for every registry key to reports/
 //!   run        execute one artifact by name on random inputs
 //!   list       list artifacts in the manifest
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use mlir_gemm::autotune;
-use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Registry, Server, ServerConfig};
 use mlir_gemm::harness::{self, BenchConfig};
-use mlir_gemm::runtime::{Runtime, Tensor};
+use mlir_gemm::plan::{self, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
 use mlir_gemm::schedule::{Dtype, Schedule};
 use mlir_gemm::sim::{simulate, DeviceModel};
 use mlir_gemm::util::cli::{usage, Args, Spec};
@@ -27,6 +31,8 @@ const SPEC: &[Spec] = &[
     ("device", true, "device model: rtx3090 | a100 (default rtx3090)"),
     ("size", true, "problem size for autotune/sim (default 4096)"),
     ("acc", true, "accumulate dtype: f32 | f16 (default f32)"),
+    ("in", true, "plan: input dtype f16 | bf16 | f32 (default f16)"),
+    ("epilogue", true, "plan: none | bias | bias_relu (default none)"),
     ("tile", true, "tile as tbm,tbn,tbk (sim; default 128,128,64)"),
     ("warp", true, "warp tile as wm,wn,wk (sim; default 64,32,32)"),
     ("iters", true, "bench iterations (default 10)"),
@@ -34,10 +40,11 @@ const SPEC: &[Spec] = &[
     ("requests", true, "serve: number of synthetic requests (default 64)"),
     ("workers", true, "serve: worker threads (default 2)"),
     ("devices", true, "serve: device contexts; >1 shards large GEMMs (default 1)"),
-    ("kernel", true, "serve: GEMM kernel policy naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
+    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]] (was --kernel)"),
+    ("refine", false, "plan: measured refinement pass over the compiled plan"),
     ("target", true, "autotune: gpu (modeled tile space) | cpu (measured block sweep); default gpu"),
     ("threads", true, "autotune --target cpu: threads for the threaded policy (default auto)"),
-    ("out-dir", true, "bench: directory for CSV output (default reports/)"),
+    ("out-dir", true, "bench/plans: directory for output (default reports/)"),
     ("measured", false, "bench: include real-execution subsets"),
     ("top", true, "autotune: show top-N candidates (default 8)"),
     ("help", false, "show usage"),
@@ -54,7 +61,10 @@ fn main() {
     };
     if args.flag("help") || args.positional.is_empty() {
         println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
-        println!("subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | run <artifact> | list");
+        println!(
+            "subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | \
+             plan <MxNxK> | plans | run <artifact> | list"
+        );
         return;
     }
     if let Err(e) = dispatch(&args) {
@@ -103,9 +113,18 @@ fn dispatch(args: &Args) -> Result<()> {
         "autotune" => cmd_autotune(args),
         "bench" => cmd_bench(args),
         "serve" => cmd_serve(args),
+        "plan" => cmd_plan(args),
+        "plans" => cmd_plans(args),
         "run" => cmd_run(args),
         other => bail!("unknown subcommand {other:?}"),
     }
+}
+
+fn plan_override(args: &Args) -> Result<PlanOverride> {
+    args.get("plan")
+        .map(PlanOverride::parse)
+        .transpose()
+        .map(|o| o.unwrap_or(PlanOverride::Auto))
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
@@ -292,12 +311,121 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `512` or `512x384x256` into (m, n, k).
+fn parse_dims(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    let num = |p: &str| {
+        p.trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad dimension {p:?} in {s:?}"))
+    };
+    match parts.len() {
+        1 => {
+            let v = num(parts[0])?;
+            Ok((v, v, v))
+        }
+        3 => Ok((num(parts[0])?, num(parts[1])?, num(parts[2])?)),
+        _ => bail!("expected SIZE or MxNxK, got {s:?}"),
+    }
+}
+
+/// Compile (and optionally refine) the execution plan for one GEMM, then
+/// print the plan JSON, its per-pass provenance, and predicted-vs-
+/// measured cost (plan kernel vs naive on random operands).
+fn cmd_plan(args: &Args) -> Result<()> {
+    let spec = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: plan <MxNxK> [--in DT] [--acc DT] [--epilogue E] [--plan OVERRIDE]"))?;
+    let (m, n, k) = parse_dims(spec)?;
+    let dtype_in = Dtype::parse(args.get_or("in", "f16"))
+        .ok_or_else(|| anyhow!("unknown input dtype"))?;
+    let dtype_acc = acc(args)?;
+    let epilogue = args.get_or("epilogue", "none").to_string();
+    if !matches!(epilogue.as_str(), "none" | "bias" | "bias_relu") {
+        bail!("unknown epilogue {epilogue:?} (none | bias | bias_relu)");
+    }
+    let env = PlanEnv::default().with_force(plan_override(args)?);
+    let key = GemmKey { m, n, k, dtype_in, dtype_acc, epilogue };
+    let mut eplan = plan::compile(&key, &env)?;
+    let iters = args.get_usize("iters", 3)?;
+    if args.flag("refine") {
+        eplan = autotune::refine_measured(&eplan, iters);
+    }
+    println!("{}", eplan.to_json());
+    println!();
+    print!("{}", eplan.render_trace());
+
+    // Predicted vs measured: wall clock of the plan's lowered kernel and
+    // the naive reference on the same random operands (min of `iters`).
+    let mut rng = Rng::new(0x9A);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let mut out = vec![0.0f32; m * n];
+    let mut measure = |policy: KernelPolicy| -> f64 {
+        let mut best = f64::INFINITY;
+        for it in 0..=iters.max(1) {
+            out.fill(0.0);
+            let t = Instant::now();
+            mlir_gemm::runtime::kernel::matmul(policy, &mut out, &a, &b, m, n, k);
+            let dt = t.elapsed().as_secs_f64();
+            if it > 0 {
+                best = best.min(dt);
+            }
+        }
+        best
+    };
+    let measured = measure(eplan.kernel);
+    let naive = measure(KernelPolicy::Naive);
+    println!();
+    println!(
+        "predicted {:.3} ms | measured {:.3} ms ({}) | naive {:.3} ms ({:.2}x)",
+        eplan.predicted_seconds * 1e3,
+        measured * 1e3,
+        eplan.kernel.name(),
+        naive * 1e3,
+        if measured > 0.0 { naive / measured } else { 0.0 },
+    );
+    Ok(())
+}
+
+/// Emit the compiled plan for every registry key (`make plans`).
+fn cmd_plans(args: &Args) -> Result<()> {
+    let d = device(args)?;
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let env = PlanEnv::default().with_force(plan_override(args)?);
+    let reg = Registry::build(rt.artifacts(), &d, env);
+    let out_dir = PathBuf::from(args.get_or("out-dir", "reports")).join("plans");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut count = 0usize;
+    for (key, p) in reg.plans() {
+        let fname = format!(
+            "plan_{}x{}x{}_{}_{}_{}.json",
+            key.m,
+            key.n,
+            key.k,
+            key.dtype_in.name(),
+            key.dtype_acc.name(),
+            key.epilogue
+        );
+        std::fs::write(out_dir.join(&fname), format!("{}\n", p.to_json()))?;
+        println!("{:<56} {}", fname, p.id());
+        count += 1;
+    }
+    if count == 0 {
+        bail!("no registry keys (build artifacts first: make artifacts)");
+    }
+    println!("\nwrote {count} compiled plans -> {}", out_dir.display());
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let name = args
         .positional
         .get(1)
         .ok_or_else(|| anyhow!("usage: run <artifact-name>"))?;
-    let rt = Runtime::open(&artifacts_dir(args))?;
+    let mut rt = Runtime::open(&artifacts_dir(args))?;
+    rt.set_plan_override(plan_override(args)?);
     let a = rt.load(name)?;
     let inputs = harness::random_inputs(&a, 0, 0.5);
     let (outputs, timing) = rt.execute_timed(&a, &inputs)?;
@@ -320,10 +448,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
     let devices = args.get_usize("devices", 1)?;
-    let kernel = args
-        .get("kernel")
-        .map(mlir_gemm::runtime::KernelPolicy::parse)
-        .transpose()?;
+    let plan = plan_override(args)?;
 
     let mut server = Server::start(
         rt.clone(),
@@ -331,7 +456,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ServerConfig {
             workers,
             devices,
-            kernel,
+            plan,
             ..Default::default()
         },
     );

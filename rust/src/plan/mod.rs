@@ -1,0 +1,814 @@
+//! Execution-plan compiler: lowers a [`GemmKey`] through an explicit
+//! pass pipeline into an [`ExecutionPlan`].
+//!
+//! The paper's central argument (§3) is that one GEMM should be produced
+//! by a *sequence of lowering passes over a single IR* — tile selection,
+//! memory staging, thread mapping, epilogue fusion — instead of ad-hoc
+//! hand tuning.  The executor used to invert that: a process-global
+//! mutable `KernelPolicy` picked one blocking for every variant in the
+//! registry.  This module restores the paper's shape on the host side:
+//!
+//! | pass                 | paper §3 lowering step            | decision                     |
+//! |----------------------|-----------------------------------|------------------------------|
+//! | tile selection       | thread-block/warp tile choice     | cache [`Blocking`] MCxKCxNC  |
+//! | packing              | global -> shared memory staging   | packed panels vs direct loop |
+//! | thread partitioning  | grid mapping                      | row-band count               |
+//! | epilogue attachment  | epilogue fusion (Table 1 col 4)   | fuse bias+activation into the kernel's write-back |
+//!
+//! The result is an [`ExecutionPlan`]: an inspectable value (JSON
+//! round-trippable, with a per-pass provenance trace) cached per
+//! [`GemmKey`] in `coordinator::registry` and threaded *explicitly*
+//! through every execution path.  There is no global state anywhere in
+//! this module.
+//!
+//! **Bit-exactness.**  A plan never changes numerics: every lowered
+//! kernel is bit-identical to the naive i-k-j loop (the
+//! `runtime::kernel` module invariant), and the fused epilogue is
+//! applied exactly once per output element *after* that element's full
+//! k-reduction (per disjoint row band, in the band's own thread), which
+//! is the same per-element operation sequence as a separate epilogue
+//! pass.  Sharding's epilogue-replay contract is untouched because shard
+//! programs carry no epilogue and the reduction replays the tail.
+//! Pinned by `rust/tests/kernel_equivalence.rs` across compiled plans.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::kernel::{self, Blocking, KernelPolicy, MR};
+use crate::schedule::Dtype;
+use crate::util::json::{self, Json};
+
+/// Format tag for serialized plans.
+pub const PLAN_FORMAT: &str = "mlir-gemm-plan-v1";
+
+/// Routing/compilation key for a GEMM: the problem the plan is compiled
+/// for.  (Moved here from `coordinator::registry`, which re-exports it:
+/// the key is the *input* of the plan compiler, the registry is just one
+/// cache of its outputs.)
+///
+/// `dtype_in` is part of the key: an f16-input kernel and a tf32/f32-input
+/// kernel at the same (m, n, k, dtype_acc, epilogue) are different
+/// precision modes (§2.3 of the paper) and must never share a variant
+/// list or a plan.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GemmKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype_in: Dtype,
+    pub dtype_acc: Dtype,
+    pub epilogue: String,
+}
+
+impl GemmKey {
+    /// The pipeline's common mode: f16 inputs, f32 accumulate, no epilogue.
+    pub fn plain(m: usize, n: usize, k: usize) -> GemmKey {
+        GemmKey {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: "none".into(),
+        }
+    }
+
+    pub fn with_dtypes(
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype_in: Dtype,
+        dtype_acc: Dtype,
+    ) -> GemmKey {
+        GemmKey {
+            m,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
+            epilogue: "none".into(),
+        }
+    }
+}
+
+/// Operator-facing plan override (`--plan` CLI flag): `auto` runs the
+/// full pass pipeline; anything else forces the lowered kernel while the
+/// pipeline still records *why* in the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOverride {
+    Auto,
+    Force(KernelPolicy),
+}
+
+impl PlanOverride {
+    /// `auto` | `naive` | `tiled[:MC,KC,NC]` | `threaded[:MC,KC,NC[,T]]`.
+    pub fn parse(text: &str) -> Result<PlanOverride> {
+        if text == "auto" {
+            return Ok(PlanOverride::Auto);
+        }
+        let policy = KernelPolicy::parse(text)?;
+        Ok(PlanOverride::Force(policy))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PlanOverride::Auto => "auto".to_string(),
+            PlanOverride::Force(p) => p.name(),
+        }
+    }
+}
+
+/// Everything the pass pipeline may consult about the execution
+/// substrate: a tiny host-side [`crate::sim::DeviceModel`] analog.  All
+/// fields are explicit so compilation is deterministic and testable; the
+/// one environmental probe (hardware thread count) is pinned by setting
+/// `hw_threads > 0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEnv {
+    /// Hardware threads; 0 = detect with `available_parallelism`.
+    pub hw_threads: usize,
+    /// Executor threads already sharing this host (the server's worker
+    /// pool).  Above 1 the thread-partitioning pass picks one band:
+    /// intra-GEMM threading under a busy pool oversubscribes the host.
+    pub pool_threads: usize,
+    /// Cache budget consulted by tile selection and the packing decision.
+    pub l2_bytes: usize,
+    pub l3_bytes: usize,
+    /// `--plan` override; `Auto` runs the full pipeline.
+    pub force: PlanOverride,
+}
+
+impl Default for PlanEnv {
+    fn default() -> Self {
+        PlanEnv {
+            hw_threads: 0,
+            pool_threads: 1,
+            // Generic x86 budget, matching DEFAULT_BLOCKING's sizing
+            // logic (A panel L2-resident, B panel L3-resident).
+            l2_bytes: 256 * 1024,
+            l3_bytes: 8 * 1024 * 1024,
+            force: PlanOverride::Auto,
+        }
+    }
+}
+
+impl PlanEnv {
+    /// Fully deterministic environment (4 hw threads, default caches):
+    /// used by the golden-plan tests so compiled decisions are stable
+    /// across build hosts.
+    pub fn pinned() -> PlanEnv {
+        PlanEnv { hw_threads: 4, ..Default::default() }
+    }
+
+    /// Environment for an executor embedded in a worker pool of
+    /// `pool_threads` threads (the server).
+    pub fn for_pool(pool_threads: usize) -> PlanEnv {
+        PlanEnv { pool_threads: pool_threads.max(1), ..Default::default() }
+    }
+
+    pub fn with_force(mut self, force: PlanOverride) -> PlanEnv {
+        self.force = force;
+        self
+    }
+
+    fn resolved_hw(&self) -> usize {
+        if self.hw_threads > 0 {
+            self.hw_threads
+        } else {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// One pass's record in the plan's provenance trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassTrace {
+    pub pass: String,
+    pub decision: String,
+    pub reason: String,
+}
+
+fn trace(pass: &str, decision: String, reason: String) -> PassTrace {
+    PassTrace { pass: pass.to_string(), decision, reason }
+}
+
+/// A compiled execution plan: the complete "how should this GEMM run"
+/// decision as one inspectable value.  Replaces the process-global
+/// `KernelPolicy` — every execution path receives its plan explicitly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype_in: Dtype,
+    pub dtype_acc: Dtype,
+    pub epilogue: String,
+    /// The lowered kernel selector (naive / tiled / threaded + blocking).
+    pub kernel: KernelPolicy,
+    /// Apply the epilogue inside the kernel's per-band write-back instead
+    /// of a separate whole-matrix pass.  Bit-identical either way (once
+    /// per element, after the full k-reduction); `false` also covers the
+    /// deliberately-unfused Table 1 comparator.
+    pub fuse_epilogue: bool,
+    /// Coarse host cost estimate (the `mlir-gemm plan` command prints it
+    /// next to a measurement).
+    pub predicted_seconds: f64,
+    /// Per-pass provenance: what each pass decided and why.
+    pub trace: Vec<PassTrace>,
+}
+
+impl ExecutionPlan {
+    /// The key this plan was compiled for.
+    pub fn key(&self) -> GemmKey {
+        GemmKey {
+            m: self.m,
+            n: self.n,
+            k: self.k,
+            dtype_in: self.dtype_in,
+            dtype_acc: self.dtype_acc,
+            epilogue: self.epilogue.clone(),
+        }
+    }
+
+    /// Stable id for metrics attribution (`plan <id>:` report lines).
+    /// Includes every key field — two distinct plans (different dtypes or
+    /// epilogues at the same shape) must never share an id, or per-plan
+    /// metrics would blend them under one label.
+    pub fn id(&self) -> String {
+        let epi = if self.epilogue == "none" {
+            String::new()
+        } else {
+            format!("+{}", self.epilogue)
+        };
+        format!(
+            "{}x{}x{}/{}->{}:{}{}",
+            self.m,
+            self.n,
+            self.k,
+            self.dtype_in.name(),
+            self.dtype_acc.name(),
+            self.kernel.name(),
+            epi
+        )
+    }
+
+    /// Does this plan describe the given GEMM contract?  Execution paths
+    /// check this before running so a mis-threaded plan is an explicit
+    /// error, never silent cross-contamination.
+    pub fn matches_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype_in: Dtype,
+        dtype_acc: Dtype,
+        epilogue: &str,
+    ) -> bool {
+        self.m == m
+            && self.n == n
+            && self.k == k
+            && self.dtype_in == dtype_in
+            && self.dtype_acc == dtype_acc
+            && self.epilogue == epilogue
+    }
+
+    /// Hand-built plan (tests, overrides).  Validates the kernel's
+    /// blocking so an invalid tile errors here instead of misbehaving
+    /// downstream.
+    pub fn manual(key: &GemmKey, kernel: KernelPolicy, fuse_epilogue: bool) -> Result<ExecutionPlan> {
+        kernel.validate()?;
+        Ok(ExecutionPlan {
+            m: key.m,
+            n: key.n,
+            k: key.k,
+            dtype_in: key.dtype_in,
+            dtype_acc: key.dtype_acc,
+            epilogue: key.epilogue.clone(),
+            kernel,
+            fuse_epilogue,
+            predicted_seconds: predict_seconds(key, &kernel),
+            trace: vec![trace(
+                "manual",
+                kernel.name(),
+                "plan constructed directly, pass pipeline bypassed".into(),
+            )],
+        })
+    }
+
+    /// `out += A @ B` under this plan's lowered kernel (bit-identical to
+    /// the naive loop whatever the plan says).
+    pub fn matmul(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        kernel::matmul(self.kernel, out, a, b, self.m, self.n, self.k);
+    }
+
+    /// `out += A @ B`, then `tail` applied to each disjoint row band in
+    /// the band's own thread, immediately after that band's k-reduction
+    /// completes — the fused-epilogue write-back.
+    pub fn matmul_fused(
+        &self,
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        tail: &(dyn Fn(&mut [f32]) + Sync),
+    ) {
+        kernel::matmul_fused(self.kernel, out, a, b, self.m, self.n, self.k, tail);
+    }
+
+    // -- JSON (inspectability contract) ---------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let trace: Vec<Json> = self
+            .trace
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("pass", json::s(&t.pass)),
+                    ("decision", json::s(&t.decision)),
+                    ("reason", json::s(&t.reason)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("format", json::s(PLAN_FORMAT)),
+            ("m", json::num(self.m as f64)),
+            ("n", json::num(self.n as f64)),
+            ("k", json::num(self.k as f64)),
+            ("dtype_in", json::s(self.dtype_in.name())),
+            ("dtype_acc", json::s(self.dtype_acc.name())),
+            ("epilogue", json::s(&self.epilogue)),
+            ("kernel", json::s(&self.kernel.name())),
+            ("fuse_epilogue", Json::Bool(self.fuse_epilogue)),
+            ("predicted_seconds", json::num(self.predicted_seconds)),
+            ("trace", Json::Arr(trace)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExecutionPlan> {
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != PLAN_FORMAT {
+            bail!("unsupported plan format {format:?} (want {PLAN_FORMAT})");
+        }
+        let get_u = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("plan missing/invalid field {f:?}"))
+        };
+        let get_d = |f: &str| {
+            j.get(f)
+                .and_then(Json::as_str)
+                .and_then(Dtype::parse)
+                .ok_or_else(|| anyhow!("plan missing/invalid dtype field {f:?}"))
+        };
+        let kernel_text = j
+            .get("kernel")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("plan missing kernel"))?;
+        let kernel = KernelPolicy::parse(kernel_text)?;
+        let mut plan_trace = Vec::new();
+        if let Some(arr) = j.get("trace").and_then(Json::as_arr) {
+            for t in arr {
+                plan_trace.push(PassTrace {
+                    pass: t.get("pass").and_then(Json::as_str).unwrap_or("").to_string(),
+                    decision: t
+                        .get("decision")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    reason: t.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
+                });
+            }
+        }
+        Ok(ExecutionPlan {
+            m: get_u("m")?,
+            n: get_u("n")?,
+            k: get_u("k")?,
+            dtype_in: get_d("dtype_in")?,
+            dtype_acc: get_d("dtype_acc")?,
+            epilogue: j
+                .get("epilogue")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("plan missing epilogue"))?
+                .to_string(),
+            kernel,
+            fuse_epilogue: j
+                .get("fuse_epilogue")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("plan missing fuse_epilogue"))?,
+            predicted_seconds: j
+                .get("predicted_seconds")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            trace: plan_trace,
+        })
+    }
+
+    pub fn from_text(text: &str) -> Result<ExecutionPlan> {
+        let j = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        ExecutionPlan::from_json(&j)
+    }
+
+    /// Human-readable trace rendering for the CLI.
+    pub fn render_trace(&self) -> String {
+        let mut out = String::new();
+        for t in &self.trace {
+            out.push_str(&format!("{:<18} {:<36} {}\n", t.pass, t.decision, t.reason));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pass pipeline
+// ---------------------------------------------------------------------------
+
+fn ceil_div(x: usize, d: usize) -> usize {
+    if d == 0 {
+        return 0;
+    }
+    x / d + usize::from(x % d != 0)
+}
+
+/// Modeled element traffic of one cache-blocked GEMM sweep: A is
+/// repacked once per NC column block, B is packed once in total, and C
+/// takes a read+write per KC reduction block.
+fn traffic_elems(m: usize, n: usize, k: usize, b: &Blocking) -> u64 {
+    let a = m as u64 * k as u64 * ceil_div(n, b.nc) as u64;
+    let bt = k as u64 * n as u64;
+    let c = 2 * m as u64 * n as u64 * ceil_div(k, b.kc) as u64;
+    a + bt + c
+}
+
+/// Pass 1 — tile selection: rank the autotuner's cache-block candidates
+/// (`autotune::cpu_blockings`) with the traffic model above, under the
+/// environment's cache-residency constraints (A panel in half of L2, B
+/// panel in half of L3 — the paper's 48 KiB shared-memory budget logic).
+fn pass_tile_selection(
+    key: &GemmKey,
+    env: &PlanEnv,
+    forced: Option<KernelPolicy>,
+) -> (Blocking, PassTrace) {
+    if let Some(policy) = forced {
+        let blocking = match policy {
+            KernelPolicy::Naive => Blocking::default(),
+            KernelPolicy::Tiled(b) | KernelPolicy::Threaded(b, _) => b,
+        };
+        return (
+            blocking,
+            trace(
+                "tile-selection",
+                format!("{}x{}x{}", blocking.mc, blocking.kc, blocking.nc),
+                format!("forced by plan override {}", policy.name()),
+            ),
+        );
+    }
+    let candidates = crate::autotune::cpu_blockings();
+    let feasible = |b: &Blocking| {
+        b.mc * b.kc * 4 <= env.l2_bytes / 2 && b.kc * b.nc * 4 <= env.l3_bytes / 2
+    };
+    let n_feasible = candidates.iter().filter(|b| feasible(b)).count();
+    // Rank by modeled traffic; break ties toward the smallest packed
+    // panels (least cache pressure), then largest mc/kc/nc so selection
+    // is a strict total order and therefore deterministic.
+    let score = |b: &Blocking| {
+        (
+            traffic_elems(key.m, key.n, key.k, b),
+            (b.mc * b.kc + b.kc * b.nc) as u64 * 4,
+            std::cmp::Reverse(b.mc),
+            std::cmp::Reverse(b.kc),
+            std::cmp::Reverse(b.nc),
+        )
+    };
+    let pool: Vec<Blocking> = if n_feasible > 0 {
+        candidates.iter().copied().filter(feasible).collect()
+    } else {
+        candidates
+    };
+    let best = pool
+        .iter()
+        .copied()
+        .min_by_key(score)
+        .unwrap_or_else(Blocking::default);
+    let t = trace(
+        "tile-selection",
+        format!("{}x{}x{}", best.mc, best.kc, best.nc),
+        format!(
+            "min modeled traffic {} elems over {} feasible of {} candidates",
+            traffic_elems(key.m, key.n, key.k, &best),
+            n_feasible,
+            crate::autotune::cpu_blockings().len(),
+        ),
+    );
+    (best, t)
+}
+
+/// Pass 2 — packing decision: below a footprint threshold (all three
+/// operands within half of L2) the panel-packing copies are pure
+/// overhead — the operands are already cache-resident — so the plan
+/// lowers to the direct (unpacked, naive-loop) kernel instead.
+fn pass_packing(key: &GemmKey, env: &PlanEnv, forced: Option<KernelPolicy>) -> (bool, PassTrace) {
+    if let Some(policy) = forced {
+        let packed = !matches!(policy, KernelPolicy::Naive);
+        return (
+            packed,
+            trace(
+                "packing",
+                if packed { "packed panels" } else { "direct (unpacked)" }.to_string(),
+                format!("forced by plan override {}", policy.name()),
+            ),
+        );
+    }
+    let footprint = 4 * (key.m * key.k + key.k * key.n + key.m * key.n);
+    let threshold = env.l2_bytes / 2;
+    let packed = footprint > threshold;
+    let t = trace(
+        "packing",
+        if packed { "packed panels" } else { "direct (unpacked)" }.to_string(),
+        format!(
+            "operand footprint {footprint} B vs {threshold} B threshold (L2 {} B)",
+            env.l2_bytes
+        ),
+    );
+    (packed, t)
+}
+
+/// Pass 3 — thread partitioning: row-band count from the problem shape
+/// and the pool size, replacing the engine's hard-coded auto heuristic.
+/// A pool of executor workers (the server) gets single-thread plans —
+/// intra-GEMM threading there would oversubscribe the host.
+fn pass_threading(
+    key: &GemmKey,
+    env: &PlanEnv,
+    forced: Option<KernelPolicy>,
+    packed: bool,
+) -> (usize, PassTrace) {
+    if let Some(policy) = forced {
+        let bands = match policy {
+            KernelPolicy::Threaded(_, t) => t,
+            _ => 1,
+        };
+        return (
+            bands,
+            trace(
+                "thread-partition",
+                if bands == 0 { "auto bands".to_string() } else { format!("{bands} band(s)") },
+                format!("forced by plan override {}", policy.name()),
+            ),
+        );
+    }
+    if !packed {
+        return (
+            1,
+            trace(
+                "thread-partition",
+                "1 band".to_string(),
+                "direct kernel: problem is below the fan-out threshold".to_string(),
+            ),
+        );
+    }
+    if env.pool_threads > 1 {
+        return (
+            1,
+            trace(
+                "thread-partition",
+                "1 band".to_string(),
+                format!(
+                    "host shared by {} executor workers; intra-GEMM threading would \
+                     oversubscribe",
+                    env.pool_threads
+                ),
+            ),
+        );
+    }
+    let hw = env.resolved_hw();
+    let flops = 2.0 * key.m as f64 * key.n as f64 * key.k as f64;
+    let by_work = (flops / kernel::MIN_FLOPS_PER_THREAD) as usize;
+    let bands = hw.min(by_work.max(1)).min(ceil_div(key.m, MR)).max(1);
+    let t = trace(
+        "thread-partition",
+        format!("{bands} band(s)"),
+        format!(
+            "min(hw {hw}, work {}, row panels {})",
+            by_work.max(1),
+            ceil_div(key.m, MR).max(1)
+        ),
+    );
+    (bands, t)
+}
+
+/// Pass 4 — epilogue attachment: fuse bias+activation into the kernel's
+/// per-band write-back (the paper's Table 1 fused column).  Bit-exact
+/// rule: the epilogue is applied exactly once per element, after that
+/// element's full k-reduction, so a fused plan is bit-identical to the
+/// separate-pass form and sharding's epilogue-replay reduction is
+/// unaffected.
+fn pass_epilogue(key: &GemmKey) -> (bool, PassTrace) {
+    let fuse = key.epilogue != "none";
+    let t = trace(
+        "epilogue",
+        if fuse {
+            format!("fuse {} into write-back", key.epilogue)
+        } else {
+            "no epilogue".to_string()
+        },
+        "applied once per element after the full k-reduction; bit-identical to a \
+         separate pass, shard reductions replay it"
+            .to_string(),
+    );
+    (fuse, t)
+}
+
+/// Coarse host cost estimate used for predicted-vs-measured reporting;
+/// deliberately simple (effective GFLOP/s per kernel class).
+fn predict_seconds(key: &GemmKey, kernel: &KernelPolicy) -> f64 {
+    const TILED_FLOPS_PER_SEC: f64 = 4.0e9;
+    const NAIVE_FLOPS_PER_SEC: f64 = 1.5e9;
+    let flops = 2.0 * key.m as f64 * key.n as f64 * key.k as f64;
+    match *kernel {
+        KernelPolicy::Naive => flops / NAIVE_FLOPS_PER_SEC,
+        KernelPolicy::Tiled(_) => flops / TILED_FLOPS_PER_SEC,
+        KernelPolicy::Threaded(_, t) => flops / (TILED_FLOPS_PER_SEC * t.max(1) as f64),
+    }
+}
+
+/// Compile a [`GemmKey`] into an [`ExecutionPlan`] by running the pass
+/// pipeline.  Deterministic for a fixed environment; errors only when a
+/// forced override carries an invalid blocking.
+pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
+    let forced = match env.force {
+        PlanOverride::Auto => None,
+        PlanOverride::Force(p) => {
+            p.validate()?;
+            Some(p)
+        }
+    };
+    let mut plan_trace = Vec::with_capacity(4);
+    let (blocking, t1) = pass_tile_selection(key, env, forced);
+    plan_trace.push(t1);
+    let (packed, t2) = pass_packing(key, env, forced);
+    plan_trace.push(t2);
+    let (bands, t3) = pass_threading(key, env, forced, packed);
+    plan_trace.push(t3);
+    let (fuse_epilogue, t4) = pass_epilogue(key);
+    plan_trace.push(t4);
+    let kernel = match forced {
+        Some(p) => p,
+        None if !packed => KernelPolicy::Naive,
+        None if bands > 1 => KernelPolicy::Threaded(blocking, bands),
+        None => KernelPolicy::Tiled(blocking),
+    };
+    Ok(ExecutionPlan {
+        m: key.m,
+        n: key.n,
+        k: key.k,
+        dtype_in: key.dtype_in,
+        dtype_acc: key.dtype_acc,
+        epilogue: key.epilogue.clone(),
+        kernel,
+        fuse_epilogue,
+        predicted_seconds: predict_seconds(key, &kernel),
+        trace: plan_trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_problem_compiles_to_direct_naive_plan() {
+        let plan = compile(&GemmKey::plain(64, 64, 64), &PlanEnv::pinned()).unwrap();
+        assert_eq!(plan.kernel, KernelPolicy::Naive);
+        assert!(!plan.fuse_epilogue);
+        assert_eq!(plan.trace.len(), 4);
+        assert!(plan.trace[1].decision.contains("direct"), "{:?}", plan.trace[1]);
+    }
+
+    #[test]
+    fn large_problem_compiles_to_threaded_tiled_plan() {
+        let plan = compile(&GemmKey::plain(1024, 1024, 1024), &PlanEnv::pinned()).unwrap();
+        match plan.kernel {
+            KernelPolicy::Threaded(b, t) => {
+                assert_eq!(t, 4, "pinned env has 4 hw threads");
+                assert!(b.mc * b.kc * 4 <= PlanEnv::pinned().l2_bytes / 2);
+            }
+            other => panic!("expected a threaded plan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_environment_disables_intra_gemm_threading() {
+        let env = PlanEnv::for_pool(8);
+        let plan = compile(&GemmKey::plain(1024, 1024, 1024), &env).unwrap();
+        assert!(
+            matches!(plan.kernel, KernelPolicy::Tiled(_)),
+            "pooled executor must get a single-thread plan, got {:?}",
+            plan.kernel
+        );
+    }
+
+    #[test]
+    fn epilogue_key_compiles_to_fused_plan() {
+        let mut key = GemmKey::plain(512, 512, 512);
+        key.epilogue = "bias_relu".into();
+        let plan = compile(&key, &PlanEnv::pinned()).unwrap();
+        assert!(plan.fuse_epilogue);
+        assert!(plan.id().ends_with("+bias_relu"), "{}", plan.id());
+        // ids must separate precision modes and epilogues at one shape
+        let f16acc = GemmKey::with_dtypes(512, 512, 512, Dtype::F16, Dtype::F16);
+        let f32acc = GemmKey::with_dtypes(512, 512, 512, Dtype::F16, Dtype::F32);
+        let a = compile(&f16acc, &PlanEnv::pinned()).unwrap();
+        let b = compile(&f32acc, &PlanEnv::pinned()).unwrap();
+        assert_ne!(a.id(), b.id(), "dtype_acc must be part of the plan id");
+        assert_ne!(plan.id(), b.id(), "epilogue must be part of the plan id");
+    }
+
+    #[test]
+    fn override_forces_the_lowered_kernel_and_records_provenance() {
+        let env = PlanEnv::pinned().with_force(PlanOverride::parse("naive").unwrap());
+        let plan = compile(&GemmKey::plain(2048, 2048, 2048), &env).unwrap();
+        assert_eq!(plan.kernel, KernelPolicy::Naive);
+        assert!(plan.trace.iter().all(|t| !t.reason.is_empty()));
+        assert!(plan.trace[0].reason.contains("forced"), "{:?}", plan.trace[0]);
+        let forced = PlanOverride::parse("threaded:64,128,256,3").unwrap();
+        let plan = compile(&GemmKey::plain(64, 64, 64), &PlanEnv::pinned().with_force(forced))
+            .unwrap();
+        assert_eq!(
+            plan.kernel,
+            KernelPolicy::Threaded(Blocking { mc: 64, kc: 128, nc: 256 }, 3)
+        );
+    }
+
+    #[test]
+    fn override_with_zero_blocking_is_a_compile_error() {
+        assert!(PlanOverride::parse("tiled:0,128,256").is_err());
+        assert!(PlanOverride::parse("nonsense").is_err());
+        assert_eq!(PlanOverride::parse("auto").unwrap(), PlanOverride::Auto);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_the_plan_exactly() {
+        for key in [
+            GemmKey::plain(64, 64, 64),
+            GemmKey::plain(1024, 1024, 1024),
+            GemmKey {
+                m: 300,
+                n: 200,
+                k: 100,
+                dtype_in: Dtype::F32,
+                dtype_acc: Dtype::F16,
+                epilogue: "bias_relu".into(),
+            },
+        ] {
+            let plan = compile(&key, &PlanEnv::pinned()).unwrap();
+            let text = plan.to_json().to_string();
+            let back = ExecutionPlan::from_text(&text).unwrap();
+            assert_eq!(plan, back, "round trip drifted for {key:?}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(ExecutionPlan::from_text("{}").is_err());
+        assert!(ExecutionPlan::from_text("not json").is_err());
+        let plan = compile(&GemmKey::plain(64, 64, 64), &PlanEnv::pinned()).unwrap();
+        let bad = plan.to_json().to_string().replace("plan-v1", "plan-v9");
+        assert!(ExecutionPlan::from_text(&bad).is_err());
+        let bad_kernel = plan.to_json().to_string().replace("naive", "warp9");
+        assert!(ExecutionPlan::from_text(&bad_kernel).is_err());
+    }
+
+    #[test]
+    fn zero_dims_compile_without_panicking() {
+        let plan = compile(&GemmKey::plain(0, 0, 0), &PlanEnv::pinned()).unwrap();
+        // Degenerate problems lower to the direct kernel, one band.
+        assert_eq!(plan.kernel, KernelPolicy::Naive);
+    }
+
+    #[test]
+    fn manual_plan_validates_blocking() {
+        let key = GemmKey::plain(32, 32, 32);
+        assert!(ExecutionPlan::manual(
+            &key,
+            KernelPolicy::Tiled(Blocking { mc: 0, kc: 8, nc: 8 }),
+            false
+        )
+        .is_err());
+        let plan = ExecutionPlan::manual(&key, KernelPolicy::Naive, false).unwrap();
+        assert!(plan.matches_gemm(32, 32, 32, Dtype::F16, Dtype::F32, "none"));
+        assert!(!plan.matches_gemm(32, 32, 33, Dtype::F16, Dtype::F32, "none"));
+    }
+
+    #[test]
+    fn plan_matmul_matches_raw_kernel() {
+        use crate::util::prng::Rng;
+        let key = GemmKey::with_dtypes(20, 12, 16, Dtype::F32, Dtype::F32);
+        let plan = compile(&key, &PlanEnv::pinned()).unwrap();
+        let mut rng = Rng::new(5);
+        let a = rng.normal_matrix(20, 16);
+        let b = rng.normal_matrix(16, 12);
+        let mut want = vec![0.0f32; 20 * 12];
+        kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, 20, 12, 16);
+        let mut got = vec![0.0f32; 20 * 12];
+        plan.matmul(&mut got, &a, &b);
+        assert_eq!(want, got);
+    }
+}

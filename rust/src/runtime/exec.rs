@@ -20,11 +20,11 @@
 
 use std::borrow::Cow;
 
+use crate::plan::{self, ExecutionPlan, GemmKey, PlanEnv};
 use crate::schedule::Dtype;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Result};
 
-use super::kernel;
 use super::Tensor;
 
 /// Format tag every artifact program file must carry.
@@ -182,14 +182,55 @@ fn cast_extend(dtype: Dtype, dst: &mut Vec<f32>, src: &[f32]) {
     }
 }
 
-/// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
-/// accumulate (matches `preferred_element_type=f32`; f16 accumulation is
-/// approximated by rounding at the epilogue boundary).  Every matmul in
-/// the executor routes through the micro-kernel engine
-/// ([`super::kernel`]); the selected [`kernel::KernelPolicy`] changes
-/// speed only — all policies are bit-identical to the naive loop.
-fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
-    kernel::matmul_global(out, a, b, m, n, k);
+/// Compile the default execution plan for an internal GEMM of the given
+/// shape: composite programs (the transformer) plan each of their
+/// internal GEMMs through the same pass pipeline the serving path uses.
+/// Compilation only fails for a hand-built environment forcing an
+/// invalid blocking (the parse path rejects those earlier); rather than
+/// panic there, fall back to the always-valid naive plan — bit-identical
+/// by the engine invariant.
+fn internal_plan(
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype_in: Dtype,
+    dtype_acc: Dtype,
+    env: &PlanEnv,
+) -> ExecutionPlan {
+    let key = GemmKey { m, n, k, dtype_in, dtype_acc, epilogue: "none".into() };
+    plan::compile(&key, env).unwrap_or_else(|_| {
+        ExecutionPlan::manual(&key, crate::runtime::kernel::KernelPolicy::Naive, false)
+            .expect("the naive plan is always valid")
+    })
+}
+
+/// Run one planned GEMM body over an f32 accumulator: the matmul through
+/// the plan's lowered kernel, then the epilogue/rounding tail — fused
+/// into the kernel's per-band write-back when the plan says so (and the
+/// program is not the deliberately-unfused Table 1 comparator), as a
+/// separate whole-matrix pass otherwise.  Bit-identical either way: the
+/// tail is elementwise per row and runs exactly once per element after
+/// its full k-reduction.
+#[allow(clippy::too_many_arguments)]
+fn run_planned_gemm(
+    eplan: &ExecutionPlan,
+    acc: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    n: usize,
+    dtype_acc: Dtype,
+    epilogue: Epilogue,
+    fused: bool,
+) {
+    if eplan.fuse_epilogue && fused {
+        eplan.matmul_fused(acc, a, b, &|band: &mut [f32]| {
+            gemm_tail(band, bias, n, dtype_acc, epilogue, fused)
+        });
+    } else {
+        eplan.matmul(acc, a, b);
+        gemm_tail(acc, bias, n, dtype_acc, epilogue, fused);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -340,10 +381,9 @@ impl Program {
         }
     }
 
-    /// Execute on host tensors.  Shapes are validated against the
-    /// program's own contract; the runtime additionally validates against
-    /// the manifest before calling this.
-    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    /// Validate inputs against the program's own contract (the runtime
+    /// additionally validates against the manifest before calling in).
+    fn validate_inputs(&self, inputs: &[Tensor]) -> Result<()> {
         let want = self.input_shapes();
         if inputs.len() != want.len() {
             bail!("program expects {} inputs, got {}", want.len(), inputs.len());
@@ -361,44 +401,142 @@ impl Program {
                 );
             }
         }
+        Ok(())
+    }
+
+    /// The GEMM routing/compilation key of this program (`None` for
+    /// composite programs, which plan each internal GEMM separately).
+    pub fn gemm_key(&self) -> Option<GemmKey> {
+        match self {
+            Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, .. } => Some(GemmKey {
+                m: *m,
+                n: *n,
+                k: *k,
+                dtype_in: *dtype_in,
+                dtype_acc: *dtype_acc,
+                epilogue: epilogue.name().to_string(),
+            }),
+            Program::Transformer { .. } => None,
+        }
+    }
+
+    /// Compile this GEMM program's execution plan under `env`.
+    pub fn compile_plan(&self, env: &PlanEnv) -> Result<ExecutionPlan> {
+        let key = self
+            .gemm_key()
+            .ok_or_else(|| anyhow!("composite programs plan per internal GEMM"))?;
+        plan::compile(&key, env)
+    }
+
+    /// Execute on host tensors under the default plan environment.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.execute_with_env(inputs, &PlanEnv::default())
+    }
+
+    /// Execute with plans compiled from the given environment (GEMM
+    /// programs compile one plan; the transformer compiles one per
+    /// internal GEMM).
+    pub fn execute_with_env(&self, inputs: &[Tensor], env: &PlanEnv) -> Result<Vec<Tensor>> {
         match *self {
-            Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } => {
-                let out = exec_gemm(
-                    &inputs[0].data,
-                    &inputs[1].data,
-                    &inputs[2].data,
-                    inputs.get(3).map(|t| t.data.as_slice()),
-                    m,
-                    n,
-                    k,
-                    dtype_in,
-                    dtype_acc,
-                    epilogue,
-                    fused,
-                );
-                Ok(vec![Tensor { shape: vec![m, n], data: out }])
+            Program::Gemm { .. } => {
+                let eplan = self.compile_plan(env)?;
+                self.execute_planned(inputs, &eplan)
             }
             Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } => {
-                let out = exec_transformer(inputs, seq, d_model, d_ff, n_heads, dtype_in);
+                self.validate_inputs(inputs)?;
+                let out =
+                    exec_transformer(inputs, seq, d_model, d_ff, n_heads, dtype_in, env);
                 Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
             }
         }
     }
 
-    /// Execute a whole same-program batch in one call.
+    /// Execute a GEMM program under an explicit, already-compiled
+    /// [`ExecutionPlan`] — the serving hot path (the server threads the
+    /// registry-cached plan through here).  The plan must describe this
+    /// exact GEMM contract; a mismatch is an error, never silent
+    /// cross-contamination.
+    pub fn execute_planned(
+        &self,
+        inputs: &[Tensor],
+        eplan: &ExecutionPlan,
+    ) -> Result<Vec<Tensor>> {
+        let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self else {
+            bail!("execute_planned is for gemm programs; composite programs take execute_with_env");
+        };
+        self.validate_inputs(inputs)?;
+        if !eplan.matches_gemm(m, n, k, dtype_in, dtype_acc, epilogue.name()) {
+            bail!(
+                "plan {} does not match program {m}x{n}x{k} {}->{} epilogue {}",
+                eplan.id(),
+                dtype_in.name(),
+                dtype_acc.name(),
+                epilogue.name()
+            );
+        }
+        let out = exec_gemm(
+            eplan,
+            &inputs[0].data,
+            &inputs[1].data,
+            &inputs[2].data,
+            inputs.get(3).map(|t| t.data.as_slice()),
+            n,
+            dtype_in,
+            dtype_acc,
+            epilogue,
+            fused,
+        );
+        Ok(vec![Tensor { shape: vec![m, n], data: out }])
+    }
+
+    /// Execute a whole same-program batch in one call, under the default
+    /// plan environment.
+    pub fn execute_batch(&self, items: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        self.execute_batch_with_env(items, &PlanEnv::default())
+    }
+
+    /// [`Program::execute_batch`] with plans compiled from `env`.
+    pub fn execute_batch_with_env(
+        &self,
+        items: &[Vec<Tensor>],
+        env: &PlanEnv,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        match self {
+            Program::Gemm { .. } if items.len() >= 2 => {
+                let eplan = self.compile_plan(env)?;
+                self.execute_batch_planned(items, &eplan)
+            }
+            _ => items.iter().map(|inputs| self.execute_with_env(inputs, env)).collect(),
+        }
+    }
+
+    /// Execute a whole same-program batch under an explicit plan.
     ///
     /// For GEMM programs the operands are stacked and precision-cast once
     /// across the batch (single pack), the per-item GEMMs run over the
     /// stacked buffers, and per-item outputs materialize in one pass
     /// (single unpack).  Bit-identical to calling [`Program::execute`]
     /// once per item; composite programs fall back to exactly that.
-    pub fn execute_batch(&self, items: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+    pub fn execute_batch_planned(
+        &self,
+        items: &[Vec<Tensor>],
+        eplan: &ExecutionPlan,
+    ) -> Result<Vec<Vec<Tensor>>> {
         let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self
         else {
             return items.iter().map(|inputs| self.execute(inputs)).collect();
         };
         if items.len() < 2 {
-            return items.iter().map(|inputs| self.execute(inputs)).collect();
+            return items.iter().map(|inputs| self.execute_planned(inputs, eplan)).collect();
+        }
+        if !eplan.matches_gemm(m, n, k, dtype_in, dtype_acc, epilogue.name()) {
+            bail!(
+                "plan {} does not match program {m}x{n}x{k} {}->{} epilogue {}",
+                eplan.id(),
+                dtype_in.name(),
+                dtype_acc.name(),
+                epilogue.name()
+            );
         }
         let want = self.input_shapes();
         for (bi, inputs) in items.iter().enumerate() {
@@ -442,9 +580,11 @@ impl Program {
             let a = &a_s[bi * m * k..(bi + 1) * m * k];
             let b = &b_s[bi * k * n..(bi + 1) * k * n];
             let acc = &mut acc_s[bi * m * n..(bi + 1) * m * n];
-            matmul_acc(acc, a, b, m, n, k);
-            gemm_tail(
+            run_planned_gemm(
+                eplan,
                 acc,
+                a,
+                b,
                 inputs.get(3).map(|t| t.data.as_slice()),
                 n,
                 dtype_acc,
@@ -507,13 +647,12 @@ pub(crate) fn gemm_tail(
 
 #[allow(clippy::too_many_arguments)]
 fn exec_gemm(
+    eplan: &ExecutionPlan,
     a: &[f32],
     b: &[f32],
     c: &[f32],
     bias: Option<&[f32]>,
-    m: usize,
     n: usize,
-    k: usize,
     dtype_in: Dtype,
     dtype_acc: Dtype,
     epilogue: Epilogue,
@@ -522,22 +661,24 @@ fn exec_gemm(
     let a16 = cast_slice(dtype_in, a);
     let b16 = cast_slice(dtype_in, b);
     let mut acc = cast_owned(dtype_acc, c);
-    matmul_acc(&mut acc, &a16, &b16, m, n, k);
-    gemm_tail(&mut acc, bias, n, dtype_acc, epilogue, fused);
+    run_planned_gemm(eplan, &mut acc, &a16, &b16, bias, n, dtype_acc, epilogue, fused);
     acc
 }
 
-/// GEMM with inputs rounded to `dtype_in`, f32 accumulate, no C term.
-fn gemm_cast(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, dtype_in: Dtype) -> Vec<f32> {
+/// GEMM with inputs rounded to `dtype_in`, f32 accumulate, no C term —
+/// dimensions come from the plan.
+fn gemm_cast(eplan: &ExecutionPlan, a: &[f32], b: &[f32], dtype_in: Dtype) -> Vec<f32> {
     let a16 = cast_slice(dtype_in, a);
     let b16 = cast_slice(dtype_in, b);
-    let mut out = vec![0.0f32; m * n];
-    matmul_acc(&mut out, &a16, &b16, m, n, k);
+    let mut out = vec![0.0f32; eplan.m * eplan.n];
+    eplan.matmul(&mut out, &a16, &b16);
     out
 }
 
 /// Mirror of `python/compile/model.py::transformer_layer` (f32 host math,
-/// `dtype_in` rounding on every pipeline-GEMM input).
+/// `dtype_in` rounding on every pipeline-GEMM input).  Each internal GEMM
+/// runs under its own compiled plan; plan choice is bit-invisible, so the
+/// output is independent of `env` (pinned by the equivalence test below).
 fn exec_transformer(
     inputs: &[Tensor],
     seq: usize,
@@ -545,6 +686,7 @@ fn exec_transformer(
     d_ff: usize,
     n_heads: usize,
     dtype_in: Dtype,
+    env: &PlanEnv,
 ) -> Vec<f32> {
     let x = &inputs[0].data;
     let w_qkv = &inputs[1].data;
@@ -556,8 +698,17 @@ fn exec_transformer(
     let d_head = d_model / n_heads;
     let d3 = 3 * d_model;
 
+    // One compiled plan per internal GEMM shape (the attention plans are
+    // reused across heads).
+    let qkv_plan = internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env);
+    let scores_plan = internal_plan(seq, seq, d_head, Dtype::F32, Dtype::F32, env);
+    let ctx_plan = internal_plan(seq, d_head, seq, Dtype::F32, Dtype::F32, env);
+    let attn_plan = internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env);
+    let up_plan = internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env);
+    let dn_plan = internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env);
+
     // QKV projection.
-    let qkv = gemm_cast(x, w_qkv, seq, d3, d_model, dtype_in);
+    let qkv = gemm_cast(&qkv_plan, x, w_qkv, dtype_in);
 
     // Scaled dot-product attention per head (plain f32, like the jnp
     // glue).  Both attention GEMMs — scores = Q_h @ K_h^T and
@@ -589,7 +740,7 @@ fn exec_transformer(
             }
         }
         scores.fill(0.0);
-        matmul_acc(&mut scores, &q_h, &kt_h, seq, seq, d_head);
+        scores_plan.matmul(&mut scores, &q_h, &kt_h);
         for (i, row) in scores.chunks_mut(seq).enumerate() {
             for s in row.iter_mut() {
                 *s *= scale;
@@ -603,7 +754,7 @@ fn exec_transformer(
             denom[i] = den;
         }
         ctx_h.fill(0.0);
-        matmul_acc(&mut ctx_h, &scores, &v_h, seq, d_head, seq);
+        ctx_plan.matmul(&mut ctx_h, &scores, &v_h);
         for i in 0..seq {
             for dd in 0..d_head {
                 ctx[i * d_model + q_off + dd] = ctx_h[i * d_head + dd] / denom[i];
@@ -612,7 +763,7 @@ fn exec_transformer(
     }
 
     // Attention output projection + residual.
-    let attn_out = gemm_cast(&ctx, w_out, seq, d_model, d_model, dtype_in);
+    let attn_out = gemm_cast(&attn_plan, &ctx, w_out, dtype_in);
     let mut h_res = vec![0.0f32; seq * d_model];
     for ((hv, &xv), &av) in h_res.iter_mut().zip(x).zip(&attn_out) {
         *hv = xv + av;
@@ -631,13 +782,13 @@ fn exec_transformer(
     }
 
     // FFN up (fused bias+ReLU) and down (fused bias), then the residual.
-    let mut up = gemm_cast(&hn, w_up, seq, d_ff, d_model, dtype_in);
+    let mut up = gemm_cast(&up_plan, &hn, w_up, dtype_in);
     for row in up.chunks_mut(d_ff) {
         for (v, &bv) in row.iter_mut().zip(b_up) {
             *v = (*v + bv).max(0.0);
         }
     }
-    let mut dn = gemm_cast(&up, w_dn, seq, d_model, d_ff, dtype_in);
+    let mut dn = gemm_cast(&dn_plan, &up, w_dn, dtype_in);
     for row in dn.chunks_mut(d_model) {
         for (v, &bv) in row.iter_mut().zip(b_dn) {
             *v += bv;
@@ -1185,34 +1336,39 @@ mod tests {
     /// Rewiring pin: the engine-routed transformer (gathered per-head
     /// operands, two attention GEMMs through the micro-kernel engine)
     /// must match the pre-engine loop implementation bit-for-bit under
-    /// every kernel policy.
+    /// every plan environment — compiled plans and forced overrides
+    /// alike, with no global state anywhere.
     #[test]
-    fn transformer_rewiring_is_bit_exact_under_every_policy() {
-        use crate::runtime::kernel::{self, Blocking, KernelPolicy};
-        // Writes the global policy; serialize against other
-        // policy-writing tests so the reference stays a true reference.
-        let _guard = kernel::policy_test_lock();
+    fn transformer_rewiring_is_bit_exact_under_every_plan_env() {
+        use crate::plan::PlanOverride;
+        use crate::runtime::kernel::{Blocking, KernelPolicy};
         let (seq, d_model, d_ff, n_heads) = (8, 16, 32, 4);
+        let envs = vec![
+            PlanEnv::default(),
+            PlanEnv::pinned(),
+            PlanEnv::pinned()
+                .with_force(PlanOverride::Force(KernelPolicy::Naive)),
+            PlanEnv::pinned().with_force(PlanOverride::Force(KernelPolicy::Tiled(
+                Blocking { mc: 8, kc: 4, nc: 16 },
+            ))),
+            PlanEnv::pinned().with_force(PlanOverride::Force(KernelPolicy::Threaded(
+                Blocking::default(),
+                2,
+            ))),
+        ];
         for &dtype_in in &[Dtype::F16, Dtype::F32] {
             let p = Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in };
             let inputs = transformer_inputs(seq, d_model, d_ff, 42);
             let want = reference_transformer(&inputs, seq, d_model, d_ff, n_heads, dtype_in);
-            let before = kernel::global_policy();
-            for policy in [
-                KernelPolicy::Naive,
-                KernelPolicy::Tiled(Blocking { mc: 8, kc: 4, nc: 16 }),
-                KernelPolicy::Threaded(Blocking::default(), 2),
-            ] {
-                kernel::set_global_policy(policy);
-                let out = p.execute(&inputs).unwrap();
-                kernel::set_global_policy(before);
+            for env in &envs {
+                let out = p.execute_with_env(&inputs, env).unwrap();
                 assert_eq!(out[0].data.len(), want.len());
                 for (idx, (g, w)) in out[0].data.iter().zip(&want).enumerate() {
                     assert_eq!(
                         g.to_bits(),
                         w.to_bits(),
-                        "{dtype_in:?}/{} drifted at element {idx}: {g} vs {w}",
-                        policy.name()
+                        "{dtype_in:?} under {} drifted at element {idx}: {g} vs {w}",
+                        env.force.name()
                     );
                 }
             }

@@ -32,11 +32,16 @@
 //! the hierarchy regroups a sum, so the f32 rounding sequence per element
 //! is exactly the naive kernel's.  `KernelPolicy` selection is therefore
 //! semantically invisible — it changes speed, never bits — which is what
-//! lets the serving path A/B policies live (`gemm_server --kernel`) and
-//! lets the autotuner sweep block sizes the way the paper sweeps GPU
-//! tiles.
-
-use std::sync::RwLock;
+//! lets the plan compiler (`crate::plan`) treat kernel choice as a pure
+//! performance decision and lets the autotuner sweep block sizes the way
+//! the paper sweeps GPU tiles.
+//!
+//! This module holds *mechanism only*: the raw kernels and the
+//! [`KernelPolicy`] selector they lower to.  *Policy* — which kernel a
+//! given GEMM should use — lives in the execution-plan compiler
+//! ([`crate::plan`]); the old process-global mutable policy
+//! (`set_global_policy` / `global_policy` / `policy_test_lock`) is gone,
+//! every caller passes its plan's selector explicitly.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -47,7 +52,9 @@ pub const MR: usize = 4;
 pub const NR: usize = 4;
 
 /// Below this many flops per thread, fan-out costs more than it saves.
-const MIN_FLOPS_PER_THREAD: f64 = 4e6;
+/// Shared with the plan compiler's thread-partitioning pass so the
+/// compiled band count and the kernel's own auto fallback agree.
+pub const MIN_FLOPS_PER_THREAD: f64 = 4e6;
 
 fn ceil_div(x: usize, d: usize) -> usize {
     x / d + usize::from(x % d != 0)
@@ -68,9 +75,9 @@ pub struct Blocking {
     pub nc: usize,
 }
 
-/// The one default blocking, shared by `Blocking::default()`,
-/// `KernelPolicy::default()`, and the global-policy initializer so the
-/// three cannot drift.  A panel: 128 x 256 x 4 B = 128 KiB
+/// The one default blocking, shared by `Blocking::default()` and
+/// `KernelPolicy::default()` so the two cannot drift.  A panel: 128 x
+/// 256 x 4 B = 128 KiB
 /// (L2-resident); B panel: 256 x 1024 x 4 B = 1 MiB (L3-resident) —
 /// the same sizing logic as the paper's 48 KiB shared-memory budget,
 /// for a generic x86 L2/L3.
@@ -83,6 +90,31 @@ impl Default for Blocking {
 }
 
 impl Blocking {
+    /// Validated constructor: zero block sizes are a configuration error
+    /// (they would loop forever), rejected here instead of silently
+    /// clamped downstream.  All parse/compile paths route through this.
+    pub fn new(mc: usize, kc: usize, nc: usize) -> Result<Blocking> {
+        let b = Blocking { mc, kc, nc };
+        b.validate()?;
+        Ok(b)
+    }
+
+    /// Reject degenerate tiles.  Struct-literal construction via the pub
+    /// fields can bypass this, so [`matmul`] still clamps as a last
+    /// resort — but every operator-facing path (policy parse, plan
+    /// compilation) errors here first.
+    pub fn validate(&self) -> Result<()> {
+        if self.mc == 0 || self.kc == 0 || self.nc == 0 {
+            bail!(
+                "invalid blocking {}x{}x{}: every block size must be >= 1",
+                self.mc,
+                self.kc,
+                self.nc
+            );
+        }
+        Ok(())
+    }
+
     /// Guard degenerate block sizes (zero blocks would loop forever).
     fn clamped(self) -> Blocking {
         Blocking {
@@ -106,10 +138,10 @@ pub enum KernelPolicy {
 }
 
 impl Default for KernelPolicy {
-    /// Single-thread tiled: the safe ambient default.  The server runs
-    /// many worker threads already, so intra-GEMM threading by default
-    /// would oversubscribe the host (workers x cores); `threaded` is an
-    /// explicit opt-in (`--kernel threaded`) for single-stream callers.
+    /// Single-thread tiled: the safe fallback when no plan was compiled.
+    /// The plan compiler's thread-partitioning pass makes the real
+    /// decision — pooled executors (the server) keep one band, standalone
+    /// callers fan out by shape (`crate::plan`).
     fn default() -> Self {
         KernelPolicy::Tiled(DEFAULT_BLOCKING)
     }
@@ -142,7 +174,7 @@ impl KernelPolicy {
                 if v.len() != 3 {
                     bail!("tiled wants MC,KC,NC, got {r:?}");
                 }
-                Ok(KernelPolicy::Tiled(Blocking { mc: v[0], kc: v[1], nc: v[2] }))
+                Ok(KernelPolicy::Tiled(Blocking::new(v[0], v[1], v[2])?))
             }
             ("threaded", None) => {
                 Ok(KernelPolicy::Threaded(Blocking::default(), 0))
@@ -150,12 +182,9 @@ impl KernelPolicy {
             ("threaded", Some(r)) => {
                 let v = nums(r)?;
                 match v.len() {
-                    3 => Ok(KernelPolicy::Threaded(
-                        Blocking { mc: v[0], kc: v[1], nc: v[2] },
-                        0,
-                    )),
+                    3 => Ok(KernelPolicy::Threaded(Blocking::new(v[0], v[1], v[2])?, 0)),
                     4 => Ok(KernelPolicy::Threaded(
-                        Blocking { mc: v[0], kc: v[1], nc: v[2] },
+                        Blocking::new(v[0], v[1], v[2])?,
                         v[3],
                     )),
                     _ => bail!("threaded wants MC,KC,NC[,T], got {r:?}"),
@@ -178,51 +207,22 @@ impl KernelPolicy {
             }
         }
     }
-}
 
-// ---------------------------------------------------------------------------
-// Process-global policy
-// ---------------------------------------------------------------------------
-
-static GLOBAL_POLICY: RwLock<KernelPolicy> =
-    RwLock::new(KernelPolicy::Tiled(DEFAULT_BLOCKING));
-
-/// Test support: serializes tests that *write* the global policy and
-/// compute reference outputs under a specific policy, or that assert on
-/// the global value itself.  Tests that only compare kernel outputs
-/// don't strictly need it (output is policy-invariant by the module
-/// contract), but a test whose `want` is meant to come from the naive
-/// reference must hold this so a concurrent writer can't silently turn
-/// it into an engine-vs-itself comparison.  Always compiled so
-/// integration-test binaries can use it too; the lock is free when
-/// uncontended and no production code path takes it.
-static POLICY_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-/// Acquire [`POLICY_TEST_LOCK`] (poison-tolerant).
-pub fn policy_test_lock() -> std::sync::MutexGuard<'static, ()> {
-    POLICY_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Set the process-global kernel policy (CLI `--kernel` plumbing).  Safe
-/// to flip at any time: every policy is bit-identical, so concurrent
-/// executors only change speed.
-pub fn set_global_policy(policy: KernelPolicy) {
-    *GLOBAL_POLICY.write().unwrap() = policy;
-}
-
-pub fn global_policy() -> KernelPolicy {
-    *GLOBAL_POLICY.read().unwrap()
-}
-
-/// `out[i, j] += sum_k a[i, k] * b[k, j]` under the global policy — the
-/// single entry point every matmul in the executor routes through.
-pub fn matmul_global(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
-    matmul(global_policy(), out, a, b, m, n, k);
+    /// Validate the policy's blocking (naive has none).  Plan compilation
+    /// and manual plan construction call this so an invalid tile is an
+    /// error at build time, never a hang or silent clamp at run time.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            KernelPolicy::Naive => Ok(()),
+            KernelPolicy::Tiled(b) | KernelPolicy::Threaded(b, _) => b.validate(),
+        }
+    }
 }
 
 /// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
 /// accumulate, k-terms in increasing-k order (bit-identical across
-/// policies).
+/// policies).  The policy comes from an explicit
+/// [`crate::plan::ExecutionPlan`] — there is no ambient global.
 pub fn matmul(
     policy: KernelPolicy,
     out: &mut [f32],
@@ -242,7 +242,50 @@ pub fn matmul(
         KernelPolicy::Naive => gemm_naive(out, a, b, m, n, k),
         KernelPolicy::Tiled(bs) => gemm_tiled(out, a, b, m, n, k, bs.clamped()),
         KernelPolicy::Threaded(bs, t) => {
-            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t)
+            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, None)
+        }
+    }
+}
+
+/// [`matmul`] with a fused write-back tail: after a disjoint row band's
+/// full k-reduction completes, `tail` runs over that band — in the
+/// band's own thread for the threaded kernel, over the whole output for
+/// the single-thread kernels.  This is how a plan's fused epilogue
+/// reaches the engine: every output element sees the tail exactly once,
+/// after all of its k-terms, so fusion is bit-identical to a separate
+/// whole-matrix pass (the epilogue is elementwise per row).
+///
+/// The tail runs even for empty reductions (`k == 0`): a GEMM epilogue
+/// applies to `C + 0` exactly like the unfused path does.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_fused(
+    policy: KernelPolicy,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    tail: &(dyn Fn(&mut [f32]) + Sync),
+) {
+    assert_eq!(out.len(), m * n, "output length");
+    assert_eq!(a.len(), m * k, "A length");
+    assert_eq!(b.len(), k * n, "B length");
+    if m == 0 || n == 0 || k == 0 {
+        tail(out);
+        return;
+    }
+    match policy {
+        KernelPolicy::Naive => {
+            gemm_naive(out, a, b, m, n, k);
+            tail(out);
+        }
+        KernelPolicy::Tiled(bs) => {
+            gemm_tiled(out, a, b, m, n, k, bs.clamped());
+            tail(out);
+        }
+        KernelPolicy::Threaded(bs, t) => {
+            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, Some(tail))
         }
     }
 }
@@ -471,6 +514,7 @@ fn gemm_threaded(
     k: usize,
     bs: Blocking,
     threads: usize,
+    tail: Option<&(dyn Fn(&mut [f32]) + Sync)>,
 ) {
     let hw = if threads == 0 {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -481,16 +525,27 @@ fn gemm_threaded(
     let by_work = (flops / MIN_FLOPS_PER_THREAD) as usize;
     let bands = hw.min(by_work.max(1)).min(ceil_div(m, MR)).max(1);
     if bands <= 1 {
-        return gemm_tiled(out, a, b, m, n, k, bs);
+        gemm_tiled(out, a, b, m, n, k, bs);
+        if let Some(tail) = tail {
+            tail(out);
+        }
+        return;
     }
     // MR-aligned row bands: each thread owns a disjoint band of C (and
     // the matching band of A), so no element is touched twice and the
-    // per-element operation sequence is the single-thread kernel's.
+    // per-element operation sequence is the single-thread kernel's.  The
+    // fused tail runs per band right after the band's k-reduction: still
+    // exactly once per element, after all of its k-terms.
     let rows_per = round_up(ceil_div(m, bands), MR);
     std::thread::scope(|scope| {
         for (oband, aband) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
             let bm = oband.len() / n;
-            scope.spawn(move || gemm_tiled(oband, aband, b, bm, n, k, bs));
+            scope.spawn(move || {
+                gemm_tiled(oband, aband, b, bm, n, k, bs);
+                if let Some(tail) = tail {
+                    tail(oband);
+                }
+            });
         }
     });
 }
@@ -647,15 +702,52 @@ mod tests {
     }
 
     #[test]
-    fn global_policy_roundtrip() {
-        // Asserts on the global *value*, so serialize against the other
-        // policy-writing test in this binary.
-        let _guard = policy_test_lock();
-        let before = global_policy();
-        set_global_policy(KernelPolicy::Naive);
-        assert_eq!(global_policy(), KernelPolicy::Naive);
-        set_global_policy(before);
-        assert_eq!(global_policy(), before);
+    fn zero_blocking_is_rejected_at_construction() {
+        // The validation satellite: a zero tile is a configuration error
+        // at parse/build time, not a silent clamp (or hang) at run time.
+        for text in ["tiled:0,2,3", "tiled:2,0,3", "tiled:2,3,0", "threaded:0,0,0"] {
+            assert!(KernelPolicy::parse(text).is_err(), "{text:?} parsed");
+        }
+        assert!(Blocking::new(0, 1, 1).is_err());
+        assert!(Blocking::new(1, 0, 1).is_err());
+        assert!(Blocking::new(1, 1, 0).is_err());
+        assert!(Blocking::new(4, 4, 4).is_ok());
+        assert!(KernelPolicy::Tiled(Blocking { mc: 0, kc: 1, nc: 1 }).validate().is_err());
+        assert!(KernelPolicy::Naive.validate().is_ok());
+    }
+
+    #[test]
+    fn fused_tail_runs_exactly_once_per_element_after_the_reduction() {
+        // matmul_fused(tail) must equal matmul followed by one
+        // whole-matrix tail pass — per band, per element, no double
+        // application — including under threading and for k == 0.
+        let cases: &[(usize, usize, usize)] = &[(13, 9, 11), (33, 7, 21), (8, 8, 0)];
+        for &(m, n, k) in cases {
+            let mut rng = Rng::new((m * 100 + n * 10 + k) as u64);
+            let (a, b, c) = random_case(&mut rng, m, n, k);
+            for policy in [
+                KernelPolicy::Naive,
+                KernelPolicy::Tiled(Blocking { mc: 8, kc: 4, nc: 16 }),
+                KernelPolicy::Threaded(Blocking { mc: 8, kc: 8, nc: 16 }, 3),
+            ] {
+                let mut want = c.clone();
+                matmul(policy, &mut want, &a, &b, m, n, k);
+                for v in want.iter_mut() {
+                    *v = (*v + 1.0).max(0.0); // a bias_relu-shaped tail
+                }
+                let mut got = c.clone();
+                matmul_fused(policy, &mut got, &a, &b, m, n, k, &|band: &mut [f32]| {
+                    for v in band.iter_mut() {
+                        *v = (*v + 1.0).max(0.0);
+                    }
+                });
+                assert!(
+                    want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                    "fused tail drifted at {m}x{n}x{k} under {}",
+                    policy.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::plan::{ExecutionPlan, PlanEnv, PlanOverride};
+
 pub use exec::{Epilogue, Program};
 pub use kernel::{Blocking, KernelPolicy};
 pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
@@ -63,16 +65,25 @@ impl Tensor {
     }
 }
 
-/// One loaded artifact: manifest entry + validated executable program.
+/// One loaded artifact: manifest entry + validated executable program +
+/// the execution plan compiled for it at load time (GEMM programs only;
+/// composite programs plan per internal GEMM at execution).
 #[derive(Debug)]
 pub struct LoadedArtifact {
     pub meta: ArtifactMeta,
     program: Program,
+    plan: Option<Arc<ExecutionPlan>>,
 }
 
 impl LoadedArtifact {
     pub fn program(&self) -> &Program {
         &self.program
+    }
+
+    /// The plan this artifact executes under unless a caller supplies an
+    /// explicit one (`execute_timed_planned`).
+    pub fn plan(&self) -> Option<&Arc<ExecutionPlan>> {
+        self.plan.as_ref()
     }
 }
 
@@ -93,10 +104,12 @@ impl ExecTiming {
     }
 }
 
-/// The runtime: a manifest plus a cache of loaded artifact programs.
+/// The runtime: a manifest plus a cache of loaded artifact programs and
+/// their compiled execution plans.
 pub struct Runtime {
     loaded: Mutex<HashMap<String, Arc<LoadedArtifact>>>,
     metas: Vec<ArtifactMeta>,
+    plan_env: PlanEnv,
 }
 
 impl Runtime {
@@ -110,6 +123,7 @@ impl Runtime {
         Ok(Runtime {
             loaded: Mutex::new(HashMap::new()),
             metas,
+            plan_env: PlanEnv::default(),
         })
     }
 
@@ -118,7 +132,26 @@ impl Runtime {
         Ok(Runtime {
             loaded: Mutex::new(HashMap::new()),
             metas: Vec::new(),
+            plan_env: PlanEnv::default(),
         })
+    }
+
+    /// The environment artifact plans compile under.
+    pub fn plan_env(&self) -> &PlanEnv {
+        &self.plan_env
+    }
+
+    /// Replace the plan environment.  Clears the artifact cache so
+    /// already-loaded artifacts recompile their plans on next use.
+    pub fn set_plan_env(&mut self, env: PlanEnv) {
+        self.plan_env = env;
+        self.loaded.lock().unwrap().clear();
+    }
+
+    /// `--plan` CLI plumbing: force every compiled plan's lowered kernel.
+    pub fn set_plan_override(&mut self, force: PlanOverride) {
+        let env = self.plan_env.clone().with_force(force);
+        self.set_plan_env(env);
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {
@@ -147,7 +180,11 @@ impl Runtime {
         let program = Program::from_text(&text, &meta.name)
             .with_context(|| format!("parsing artifact program {}", meta.path.display()))?;
         check_contract(&meta, &program)?;
-        let arc = Arc::new(LoadedArtifact { meta, program });
+        // Compile the execution plan once, at load time: the serving hot
+        // path never recompiles (composite programs return None here and
+        // plan per internal GEMM instead).
+        let plan = program.compile_plan(&self.plan_env).ok().map(Arc::new);
+        let arc = Arc::new(LoadedArtifact { meta, program, plan });
         self.loaded
             .lock()
             .unwrap()
@@ -169,11 +206,25 @@ impl Runtime {
         Ok(names.len())
     }
 
-    /// Execute a loaded artifact on host tensors, with phase timings.
+    /// Execute a loaded artifact on host tensors under its load-time
+    /// compiled plan, with phase timings.
     pub fn execute_timed(
         &self,
         artifact: &LoadedArtifact,
         inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, ExecTiming)> {
+        self.execute_timed_planned(artifact, inputs, artifact.plan.as_deref())
+    }
+
+    /// [`Runtime::execute_timed`] with an explicit plan override (`None`
+    /// means: whatever the artifact compiled at load, falling back to the
+    /// runtime environment for composite programs).  The server threads
+    /// its registry-cached plans through here.
+    pub fn execute_timed_planned(
+        &self,
+        artifact: &LoadedArtifact,
+        inputs: &[Tensor],
+        eplan: Option<&ExecutionPlan>,
     ) -> Result<(Vec<Tensor>, ExecTiming)> {
         let meta = &artifact.meta;
         let t0 = Instant::now();
@@ -197,10 +248,11 @@ impl Runtime {
         }
         let t1 = Instant::now();
 
-        let outputs = artifact
-            .program
-            .execute(inputs)
-            .with_context(|| format!("executing {}", meta.name))?;
+        let outputs = match eplan {
+            Some(p) => artifact.program.execute_planned(inputs, p),
+            None => artifact.program.execute_with_env(inputs, &self.plan_env),
+        }
+        .with_context(|| format!("executing {}", meta.name))?;
         let t2 = Instant::now();
 
         if outputs.len() != meta.outputs.len() {
@@ -241,6 +293,16 @@ impl Runtime {
         artifact: &LoadedArtifact,
         items: &[Vec<Tensor>],
     ) -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
+        self.execute_batch_timed_planned(artifact, items, artifact.plan.as_deref())
+    }
+
+    /// [`Runtime::execute_batch_timed`] with an explicit plan override.
+    pub fn execute_batch_timed_planned(
+        &self,
+        artifact: &LoadedArtifact,
+        items: &[Vec<Tensor>],
+        eplan: Option<&ExecutionPlan>,
+    ) -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
         let meta = &artifact.meta;
         let t0 = Instant::now();
         for (bi, inputs) in items.iter().enumerate() {
@@ -266,10 +328,11 @@ impl Runtime {
         }
         let t1 = Instant::now();
 
-        let outputs = artifact
-            .program
-            .execute_batch(items)
-            .with_context(|| format!("executing {} (batch of {})", meta.name, items.len()))?;
+        let outputs = match eplan {
+            Some(p) => artifact.program.execute_batch_planned(items, p),
+            None => artifact.program.execute_batch_with_env(items, &self.plan_env),
+        }
+        .with_context(|| format!("executing {} (batch of {})", meta.name, items.len()))?;
         let t2 = Instant::now();
 
         for out in &outputs {
@@ -450,6 +513,16 @@ mod tests {
         let a1 = rt.load("g").unwrap();
         let a2 = rt.load("g").unwrap();
         assert!(Arc::ptr_eq(&a1, &a2));
+        // a GEMM artifact carries its load-time compiled plan
+        let plan = a1.plan().expect("gemm artifact compiles a plan at load");
+        assert!(plan.matches_gemm(
+            2,
+            2,
+            2,
+            crate::schedule::Dtype::F32,
+            crate::schedule::Dtype::F32,
+            "none"
+        ));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,14 +1,22 @@
-//! Integration: the micro-kernel engine's bit-exactness contract.
+//! Integration: the engine's bit-exactness contract, extended to
+//! compiled execution plans.
 //!
 //! Every kernel policy (naive / tiled / tiled+threads, any blocking) must
-//! produce bit-identical f32 output — that is what makes `--kernel` a
-//! pure performance knob and keeps PR 2's batching and row-sharding
-//! bit-exactness guarantees intact on top of the new engine.  These tests
-//! pin the contract at three levels: the raw kernel, `Program::execute` /
-//! `execute_batch`, and the shard split/execute/reduce pipeline.
+//! produce bit-identical f32 output — that is what makes a compiled
+//! [`ExecutionPlan`] a pure performance decision and keeps PR 2's
+//! batching and row-sharding bit-exactness guarantees intact on top of
+//! the engine.  These tests pin the contract at four levels: the raw
+//! kernel, `Program::execute_planned` / `execute_batch_planned` under
+//! explicit plans, the shard split/execute/reduce pipeline, and — the
+//! plan-compiler pin — *every compiled plan* (across environments,
+//! overrides, and the fused-epilogue write-back, including the
+//! deliberately-unfused off-path) against the naive reference over the
+//! shape sweep.  No global state anywhere: each comparison constructs
+//! its plans explicitly.
 
 use mlir_gemm::coordinator::sharding::{build_shard_tasks, reduce_outputs};
 use mlir_gemm::coordinator::ShardPlan;
+use mlir_gemm::plan::{compile, ExecutionPlan, GemmKey, PlanEnv, PlanOverride};
 use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
 use mlir_gemm::runtime::{Epilogue, Program, Tensor};
 use mlir_gemm::schedule::Dtype;
@@ -25,6 +33,22 @@ fn policies() -> Vec<KernelPolicy> {
         KernelPolicy::Threaded(Blocking { mc: 8, kc: 8, nc: 16 }, 2),
         KernelPolicy::Threaded(Blocking::default(), 3),
     ]
+}
+
+/// Plan environments that exercise every compiler decision: pinned auto
+/// (packing threshold + thread pass), a pooled executor (single-band
+/// plans), a huge L2 (everything lowers to the direct kernel), and
+/// forced overrides.
+fn plan_envs() -> Vec<PlanEnv> {
+    let mut envs = vec![
+        PlanEnv::pinned(),
+        PlanEnv::for_pool(8),
+        PlanEnv { l2_bytes: 1 << 30, ..PlanEnv::pinned() },
+    ];
+    for policy in policies() {
+        envs.push(PlanEnv::pinned().with_force(PlanOverride::Force(policy)));
+    }
+    envs
 }
 
 fn assert_bits_eq(want: &[f32], got: &[f32], what: &str) {
@@ -114,14 +138,18 @@ fn gemm_inputs(m: usize, n: usize, k: usize, seed: u64) -> Vec<Tensor> {
     ]
 }
 
-/// `Program::execute` under each global policy: the full precision
-/// pipeline (dtype casts, epilogue, rounding tail) on top of the engine
-/// must stay bit-identical — policies change speed, never bits.
+/// Manual plan for a program's key with the given kernel + fusion.
+fn manual_plan(p: &Program, kernel: KernelPolicy, fuse: bool) -> ExecutionPlan {
+    ExecutionPlan::manual(&p.gemm_key().unwrap(), kernel, fuse).unwrap()
+}
+
+/// `Program::execute_planned` under each explicit plan: the full
+/// precision pipeline (dtype casts, epilogue, rounding tail) on top of
+/// the engine must stay bit-identical — plans change speed, never bits.
+/// Both fusion modes run for every kernel: the fused write-back and the
+/// separate-pass epilogue must agree exactly.
 #[test]
-fn program_execute_bit_identical_across_global_policies() {
-    // Serialize global-policy writers: `want` must really be the naive
-    // reference, not another test's freshly installed policy.
-    let _guard = kernel::policy_test_lock();
+fn program_execute_bit_identical_across_plans() {
     let (m, n, k) = (37, 29, 41);
     for &(din, dacc) in &[
         (Dtype::F32, Dtype::F32),
@@ -131,51 +159,67 @@ fn program_execute_bit_identical_across_global_policies() {
     ] {
         let p = gemm_program(m, n, k, din, dacc);
         let inputs = gemm_inputs(m, n, k, 0xAB + din as u64);
-        let before = kernel::global_policy();
-        kernel::set_global_policy(KernelPolicy::Naive);
-        let want = p.execute(&inputs).unwrap();
+        let naive = manual_plan(&p, KernelPolicy::Naive, false);
+        let want = p.execute_planned(&inputs, &naive).unwrap();
         for policy in policies() {
-            kernel::set_global_policy(policy);
-            let got = p.execute(&inputs).unwrap();
-            assert_bits_eq(
-                &want[0].data,
-                &got[0].data,
-                &format!("{din:?}/{dacc:?} via {}", policy.name()),
-            );
+            for fuse in [false, true] {
+                let eplan = manual_plan(&p, policy, fuse);
+                let got = p.execute_planned(&inputs, &eplan).unwrap();
+                assert_bits_eq(
+                    &want[0].data,
+                    &got[0].data,
+                    &format!("{din:?}/{dacc:?} via {} fuse={fuse}", policy.name()),
+                );
+            }
         }
-        kernel::set_global_policy(before);
     }
 }
 
 /// The batched path (stacked operands, one cast) over the engine remains
-/// bit-identical to per-item execution under a tiled policy.
+/// bit-identical to per-item execution under an explicit tiled plan,
+/// fused and unfused.
 #[test]
-fn execute_batch_bit_identical_under_tiled_policy() {
-    let _guard = kernel::policy_test_lock();
+fn execute_batch_bit_identical_under_explicit_plan() {
     let (m, n, k) = (21, 18, 27);
     let p = gemm_program(m, n, k, Dtype::F16, Dtype::F32);
     let items: Vec<Vec<Tensor>> =
         (0..4).map(|i| gemm_inputs(m, n, k, 900 + i)).collect();
-    let before = kernel::global_policy();
-    kernel::set_global_policy(KernelPolicy::Tiled(Blocking { mc: 8, kc: 8, nc: 16 }));
-    let batched = p.execute_batch(&items).unwrap();
-    for (bi, inputs) in items.iter().enumerate() {
-        let single = p.execute(inputs).unwrap();
-        assert_bits_eq(
-            &single[0].data,
-            &batched[bi][0].data,
-            &format!("batch item {bi}"),
+    for fuse in [false, true] {
+        let eplan = manual_plan(
+            &p,
+            KernelPolicy::Tiled(Blocking { mc: 8, kc: 8, nc: 16 }),
+            fuse,
         );
+        let batched = p.execute_batch_planned(&items, &eplan).unwrap();
+        for (bi, inputs) in items.iter().enumerate() {
+            let single = p.execute_planned(inputs, &eplan).unwrap();
+            assert_bits_eq(
+                &single[0].data,
+                &batched[bi][0].data,
+                &format!("batch item {bi} fuse={fuse}"),
+            );
+        }
     }
-    kernel::set_global_policy(before);
+}
+
+/// A plan for the wrong GEMM contract is an explicit error on every
+/// planned path — the cross-contamination guard.
+#[test]
+fn mismatched_plan_is_rejected() {
+    let p = gemm_program(8, 8, 8, Dtype::F16, Dtype::F32);
+    let other = gemm_program(8, 8, 9, Dtype::F16, Dtype::F32);
+    let wrong = manual_plan(&other, KernelPolicy::Naive, false);
+    let inputs = gemm_inputs(8, 8, 8, 3);
+    assert!(p.execute_planned(&inputs, &wrong).is_err());
+    let items = vec![gemm_inputs(8, 8, 8, 4), gemm_inputs(8, 8, 8, 5)];
+    assert!(p.execute_batch_planned(&items, &wrong).is_err());
 }
 
 /// Row sharding on top of the engine: split/execute/reduce must still
-/// concatenate to exactly the unsharded result whatever policy runs the
-/// shard GEMMs.
+/// concatenate to exactly the unsharded result whatever environment
+/// compiled the shard plans.
 #[test]
-fn row_sharding_bit_identical_on_engine_kernels() {
-    let _guard = kernel::policy_test_lock();
+fn row_sharding_bit_identical_on_compiled_plans() {
     let (m, n, k) = (45, 22, 33);
     let base = Program::Gemm {
         m,
@@ -190,19 +234,128 @@ fn row_sharding_bit_identical_on_engine_kernels() {
     let a = Tensor { shape: vec![m, k], data: rng.normal_matrix(m, k) };
     let b = Tensor { shape: vec![k, n], data: rng.normal_matrix(k, n) };
     let c = Tensor { shape: vec![m, n], data: rng.normal_matrix(m, n) };
-    let before = kernel::global_policy();
-    kernel::set_global_policy(KernelPolicy::Naive);
-    let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
-    for policy in policies() {
-        kernel::set_global_policy(policy);
+    let naive = manual_plan(&base, KernelPolicy::Naive, false);
+    let want = base.execute_planned(&[a.clone(), b.clone(), c.clone()], &naive).unwrap();
+    for env in plan_envs() {
         let plan = ShardPlan::rows(m, n, k, 3, 1);
-        let parts: Vec<Tensor> = build_shard_tasks(&plan, &base, &a, &b, &c, None)
+        let parts: Vec<Tensor> = build_shard_tasks(&env, &plan, &base, &a, &b, &c, None)
             .unwrap()
             .into_iter()
-            .map(|(prog, inputs)| prog.execute(&inputs).unwrap().remove(0))
+            .map(|(prog, eplan, inputs)| {
+                prog.execute_planned(&inputs, &eplan).unwrap().remove(0)
+            })
             .collect();
         let got = reduce_outputs(&plan, &base, &c, None, &parts).unwrap();
-        assert_bits_eq(&want[0].data, &got.data, &format!("sharded {}", policy.name()));
+        assert_bits_eq(
+            &want[0].data,
+            &got.data,
+            &format!("sharded under env force={}", env.force.name()),
+        );
     }
-    kernel::set_global_policy(before);
+}
+
+/// The plan-compiler pin: every *compiled* plan — across environments
+/// that hit each pass decision and every forced override — executes
+/// bit-identically to the naive reference, for the plain, fused-epilogue,
+/// and deliberately-unfused programs alike, across the shape sweep (edge
+/// shapes + the random-shape property, the same 99-shape family the raw
+/// kernel sweep pins).
+#[test]
+fn compiled_plans_bit_identical_on_edge_shapes() {
+    for &(m, n, k) in &[
+        (1usize, 1usize, 1usize),
+        (1, 17, 5),
+        (19, 1, 7),
+        (5, 17, 9),
+        (33, 7, 21),
+        (64, 64, 64), // exactly the direct-kernel footprint region
+    ] {
+        assert_compiled_plans_match(m, n, k).unwrap();
+    }
+}
+
+#[test]
+fn compiled_plans_bit_identical_property_over_random_shapes() {
+    check(
+        Config { cases: 32, seed: 0x9127, ..Default::default() },
+        |rng| vec![1 + rng.below(72), 1 + rng.below(72), 1 + rng.below(72)],
+        |v| shrink_usizes(v, 1),
+        |dims| assert_compiled_plans_match(dims[0], dims[1], dims[2]),
+    );
+}
+
+fn assert_compiled_plans_match(m: usize, n: usize, k: usize) -> Result<(), String> {
+    // Three program flavors: no epilogue, fused bias_relu, and the
+    // deliberately-unfused comparator (epilogue after the output cast).
+    let programs = [
+        Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        },
+        Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::BiasRelu,
+            fused: true,
+        },
+        Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F16,
+            epilogue: Epilogue::Bias,
+            fused: false,
+        },
+    ];
+    for p in &programs {
+        let Program::Gemm { epilogue, .. } = p else { unreachable!() };
+        let mut inputs = gemm_inputs(m, n, k, (m * 1009 + n * 31 + k) as u64);
+        if !epilogue.needs_bias() {
+            inputs.truncate(3);
+        }
+        let naive = ExecutionPlan::manual(&p.gemm_key().unwrap(), KernelPolicy::Naive, false)
+            .unwrap();
+        let want = p.execute_planned(&inputs, &naive).unwrap();
+        for env in plan_envs() {
+            let eplan = compile(&p.gemm_key().unwrap(), &env).unwrap();
+            let got = p.execute_planned(&inputs, &eplan).unwrap();
+            for (idx, (w, g)) in want[0].data.iter().zip(&got[0].data).enumerate() {
+                if w.to_bits() != g.to_bits() {
+                    return Err(format!(
+                        "plan {} (env force={}) drifted at {m}x{n}x{k} \
+                         epilogue={} element {idx}: {w} vs {g}",
+                        eplan.id(),
+                        env.force.name(),
+                        epilogue.name(),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compiled plans honored through `GemmKey`s too: the same key always
+/// compiles to the same plan under the same environment (determinism is
+/// what lets the registry cache them).
+#[test]
+fn compilation_is_deterministic() {
+    for key in [
+        GemmKey::plain(512, 512, 512),
+        GemmKey::plain(64, 64, 64),
+        GemmKey::with_dtypes(300, 200, 100, Dtype::F32, Dtype::F32),
+    ] {
+        let a = compile(&key, &PlanEnv::pinned()).unwrap();
+        let b = compile(&key, &PlanEnv::pinned()).unwrap();
+        assert_eq!(a, b, "non-deterministic compilation for {key:?}");
+    }
 }

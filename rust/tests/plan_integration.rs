@@ -1,0 +1,265 @@
+//! Integration: the execution-plan compiler's inspectability contract
+//! (JSON round-trip + golden plans for the Table 1 shape family) and the
+//! serving path's per-variant plan isolation (two variants with
+//! different compiled plans interleaved on one server, no
+//! cross-contamination).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::plan::{compile, ExecutionPlan, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::json::{self, Json};
+use mlir_gemm::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// JSON round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compiled_plans_round_trip_through_json() {
+    let keys = vec![
+        GemmKey::plain(512, 512, 512),
+        GemmKey::plain(64, 64, 64),
+        GemmKey {
+            m: 1024,
+            n: 768,
+            k: 512,
+            dtype_in: Dtype::Bf16,
+            dtype_acc: Dtype::F32,
+            epilogue: "bias".into(),
+        },
+    ];
+    let envs = vec![
+        PlanEnv::pinned(),
+        PlanEnv::for_pool(4),
+        PlanEnv::pinned().with_force(PlanOverride::parse("threaded:64,128,256,2").unwrap()),
+    ];
+    for key in &keys {
+        for env in &envs {
+            let plan = compile(key, env).unwrap();
+            let text = plan.to_json().to_string();
+            let back = ExecutionPlan::from_text(&text).unwrap();
+            assert_eq!(plan, back, "round trip drifted for {key:?}");
+            // and the serialized form is itself valid JSON that keeps the
+            // per-pass provenance
+            let parsed = json::parse(&text).unwrap();
+            let trace = parsed.get("trace").and_then(Json::as_arr).unwrap();
+            assert_eq!(trace.len(), plan.trace.len());
+            assert!(plan.trace.len() >= 4, "pipeline records all four passes");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden plans: the paper's Table 1 shape family under the pinned env
+// ---------------------------------------------------------------------------
+
+const GOLDENS: &[&str] = &[
+    include_str!("golden/plan_512x512x512_f32_f32_none.json"),
+    include_str!("golden/plan_512x512x512_f16_f32_bias_relu.json"),
+    include_str!("golden/plan_256x256x256_f16_f32_none.json"),
+    include_str!("golden/plan_64x64x64_f32_f32_none.json"),
+];
+
+#[test]
+fn golden_plans_for_table1_shapes() {
+    for golden_text in GOLDENS {
+        let g = json::parse(golden_text).unwrap();
+        let get_u = |f: &str| g.get(f).and_then(Json::as_usize).unwrap();
+        let get_s = |f: &str| g.get(f).and_then(Json::as_str).unwrap();
+        let key = GemmKey {
+            m: get_u("m"),
+            n: get_u("n"),
+            k: get_u("k"),
+            dtype_in: Dtype::parse(get_s("dtype_in")).unwrap(),
+            dtype_acc: Dtype::parse(get_s("dtype_acc")).unwrap(),
+            epilogue: get_s("epilogue").to_string(),
+        };
+        let plan = compile(&key, &PlanEnv::pinned()).unwrap();
+        assert_eq!(
+            plan.kernel.name(),
+            get_s("kernel"),
+            "tile/packing/threading decision drifted for {key:?}"
+        );
+        assert_eq!(
+            plan.fuse_epilogue,
+            g.get("fuse_epilogue").and_then(Json::as_bool).unwrap(),
+            "epilogue decision drifted for {key:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server: two variants with different plans, interleaved
+// ---------------------------------------------------------------------------
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "small",
+      "file": "small.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [24, 24], "dtype": "f32"}],
+      "m": 24, "n": 24, "k": 24, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "big",
+      "file": "big.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [128, 112], "dtype": "f32"},
+        {"shape": [112, 96], "dtype": "f32"},
+        {"shape": [128, 96], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [128, 96], "dtype": "f32"}],
+      "m": 128, "n": 96, "k": 112, "dtype_in": "f32", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const SMALL: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "small",
+  "program": {
+    "type": "gemm", "m": 24, "n": 24, "k": 24,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const BIG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "big",
+  "program": {
+    "type": "gemm", "m": 128, "n": 96, "k": 112,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+/// Two variants whose compiled plans differ (a cache-resident 24^3 lowers
+/// to the direct kernel, a 128x96x112 to packed tiles) execute interleaved
+/// from concurrent clients on one server.  Every response must be
+/// bit-identical to the naive reference for *its* shape, and the metrics
+/// must attribute work to both plan ids separately — proof the explicit
+/// plans don't cross-contaminate the way a flipped global policy could.
+#[test]
+fn interleaved_variants_with_different_plans_do_not_cross_contaminate() {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_plan_srv_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("small.tprog.json"), SMALL).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let mut server = Server::start(
+        rt.clone(),
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig { workers: 3, ..Default::default() },
+    );
+
+    let small_key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let big_key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    // The two keys compile to genuinely different plans.
+    let small_plan = server.registry().plan(&small_key).unwrap();
+    let big_plan = server.registry().plan(&big_key).unwrap();
+    assert_eq!(small_plan.kernel, KernelPolicy::Naive, "24^3 is cache-resident");
+    assert!(
+        !matches!(big_plan.kernel, KernelPolicy::Naive),
+        "128x96x112 must pack, got {:?}",
+        big_plan.kernel
+    );
+
+    // Interleave both variants from two client threads.
+    let per_client = 8usize;
+    let naive_reference = |key: &GemmKey, a: &Tensor, b: &Tensor, c: &Tensor| -> Vec<f32> {
+        let mut out = c.data.clone();
+        mlir_gemm::runtime::kernel::matmul(
+            KernelPolicy::Naive,
+            &mut out,
+            &a.data,
+            &b.data,
+            key.m,
+            key.n,
+            key.k,
+        );
+        out
+    };
+    let mut pending = Vec::new();
+    let mut rng = Rng::new(0x51);
+    for i in 0..2 * per_client {
+        let key = if i % 2 == 0 { small_key.clone() } else { big_key.clone() };
+        let a = Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k)).unwrap();
+        let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n)).unwrap();
+        let c = Tensor::new(vec![key.m, key.n], rng.normal_matrix(key.m, key.n)).unwrap();
+        let want = naive_reference(&key, &a, &b, &c);
+        let rx = server.submit(GemmRequest {
+            key: key.clone(),
+            a,
+            b,
+            c,
+            bias: None,
+            use_baseline: true,
+        });
+        pending.push((key, want, rx));
+    }
+    for (key, want, rx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let out = resp.output.expect("request should succeed");
+        assert_eq!(out.shape, vec![key.m, key.n]);
+        assert_eq!(out.data, want, "{}x{}x{} drifted", key.m, key.n, key.k);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2 * per_client as u64);
+    assert_eq!(m.failed, 0);
+    // Per-plan attribution: both plan ids show up, each with its own
+    // request count — no blending under one global label.
+    assert_eq!(
+        m.per_plan.get(&small_plan.id()).map(|l| l.requests),
+        Some(per_client as u64),
+        "per_plan: {:?}",
+        m.per_plan
+    );
+    assert_eq!(
+        m.per_plan.get(&big_plan.id()).map(|l| l.requests),
+        Some(per_client as u64),
+        "per_plan: {:?}",
+        m.per_plan
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Validation satellite: invalid plans fail loudly end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn invalid_blocking_rejected_everywhere() {
+    // parse-level
+    assert!(PlanOverride::parse("tiled:0,256,1024").is_err());
+    assert!(KernelPolicy::parse("threaded:64,0,1024,2").is_err());
+    // manual-plan level
+    let key = GemmKey::plain(32, 32, 32);
+    assert!(ExecutionPlan::manual(
+        &key,
+        KernelPolicy::Tiled(mlir_gemm::runtime::Blocking { mc: 4, kc: 0, nc: 8 }),
+        false
+    )
+    .is_err());
+    // deserialization level: a plan file carrying a zero tile is rejected
+    let good = compile(&key, &PlanEnv::pinned()).unwrap();
+    let text = good
+        .to_json()
+        .to_string()
+        .replace(&good.kernel.name(), "tiled:0,0,0");
+    assert!(ExecutionPlan::from_text(&text).is_err());
+}
