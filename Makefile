@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test pytest artifacts artifacts-quick bench-smoke plans lint fmt clean
+.PHONY: verify build test pytest fuzz artifacts artifacts-quick bench-smoke plans lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -18,6 +18,14 @@ test:
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q
+
+# Differential fuzz sweep (rust/tests/fuzz_differential.rs): ~200
+# deterministic cases proving planned / weight-bound (prepacked) /
+# batched / row-sharded execution bit-identical to the naive i-k-j
+# reference.  Pinned seed; replay a failure with
+# MLIR_GEMM_FUZZ_SEED=<seed> make fuzz.
+fuzz:
+	$(CARGO) test -q --test fuzz_differential
 
 # AOT-lower the full artifact set (tprog descriptors + manifest) for the
 # Rust runtime's measured subsets and integration tests.

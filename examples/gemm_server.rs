@@ -22,6 +22,7 @@ use mlir_gemm::util::prng::Rng;
 const SPEC: &[Spec] = &[
     ("devices", true, "device contexts; >1 shards large GEMMs (default 1)"),
     ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
+    ("bind", false, "bind every shape's B as a constant weight; half the traffic then ships A (+C) only"),
     ("help", false, "show usage"),
 ];
 
@@ -33,6 +34,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let devices = args.get_usize("devices", 1)?;
+    let bind = args.flag("bind");
     let plan = args
         .get("plan")
         .map(mlir_gemm::plan::PlanOverride::parse)
@@ -75,10 +77,21 @@ fn main() -> Result<()> {
         );
     }
 
-    // Warm every route once so the measured phase excludes XLA compilation.
+    // Model-serving mode: bind every shape's B once; half the traffic
+    // below then exercises the weight-bound request form against the
+    // bind-time prepacked panels.
     let mut rng = Rng::new(1);
+    if bind {
+        for key in &keys {
+            let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?;
+            server.bind_weights(key, &b)?;
+        }
+        println!("bound constant B weights for {} shapes", keys.len());
+    }
+
+    // Warm every route once so the measured phase excludes XLA compilation.
     for key in &keys {
-        let _ = server.call(request(&mut rng, key))?;
+        let _ = server.call(request(&mut rng, key, false))?;
     }
 
     // Fire traffic from 4 client threads.
@@ -92,9 +105,10 @@ fn main() -> Result<()> {
             let mut rng = Rng::new(100 + cid);
             let mut ok = 0;
             let mut pending = Vec::new();
-            for _ in 0..PER_CLIENT {
+            for i in 0..PER_CLIENT {
                 let key = rng.choice(&keys).clone();
-                pending.push(server.submit(request(&mut rng, &key)));
+                let bound = bind && i % 2 == 0;
+                pending.push(server.submit(request(&mut rng, &key, bound)));
             }
             for rx in pending {
                 let resp = rx.recv().map_err(|_| anyhow!("server gone"))?;
@@ -124,13 +138,16 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn request(rng: &mut Rng, key: &GemmKey) -> GemmRequest {
+fn request(rng: &mut Rng, key: &GemmKey, bound: bool) -> GemmRequest {
     let bias = (key.epilogue != "none")
         .then(|| Tensor::new(vec![key.n], rng.normal_matrix(1, key.n)).unwrap());
+    let b = (!bound).then(|| {
+        Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n)).unwrap()
+    });
     GemmRequest {
         key: key.clone(),
         a: Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k)).unwrap(),
-        b: Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n)).unwrap(),
+        b,
         c: Tensor::zeros(vec![key.m, key.n]),
         bias,
         use_baseline: false,

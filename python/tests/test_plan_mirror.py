@@ -1,0 +1,158 @@
+"""Python mirror of the Rust execution-plan compiler's cost model.
+
+``rust/src/plan/mod.rs`` lowers a GemmKey through five passes (tile
+selection, packing, thread partitioning, epilogue attachment, prepack)
+under a deterministic ``PlanEnv``.  The golden plan files in
+``rust/tests/golden/`` pin its decisions for the paper's Table 1 shape
+family under ``PlanEnv::pinned()`` (4 hw threads, pool of 1, 256 KiB L2,
+8 MiB L3).  This mirror recomputes every decision from scratch in
+Python, so a cost-model change is caught on the Python side of CI even
+before the Rust golden test runs — and, in toolchain-less development
+containers, it is the only executable check of the pass pipeline.
+
+Mirrored from rust/src/plan/mod.rs (`compile`) and
+rust/src/autotune/mod.rs (`cpu_blockings`); keep the two in sync.
+"""
+
+import json
+import pathlib
+
+GOLDEN_DIR = (
+    pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "golden"
+)
+
+# PlanEnv::pinned()
+L2_BYTES = 256 * 1024
+L3_BYTES = 8 * 1024 * 1024
+HW_THREADS = 4
+POOL_THREADS = 1
+
+# runtime/kernel.rs constants
+MR = 4
+MIN_FLOPS_PER_THREAD = 4e6
+
+
+def cpu_blockings():
+    """autotune::cpu_blockings(), in the same enumeration order."""
+    return [
+        (mc, kc, nc)
+        for mc in (64, 128, 256)
+        for kc in (128, 256, 512)
+        for nc in (256, 1024)
+    ]
+
+
+def ceil_div(x, d):
+    return 0 if d == 0 else -(-x // d)
+
+
+def traffic_elems(m, n, k, blocking):
+    """plan::traffic_elems — modeled element traffic of one blocked sweep."""
+    mc, kc, nc = blocking
+    a = m * k * ceil_div(n, nc)
+    b = k * n
+    c = 2 * m * n * ceil_div(k, kc)
+    return a + b + c
+
+
+def compile_plan(m, n, k, epilogue):
+    """plan::compile under PlanEnv::pinned(), no override.
+
+    Returns the fields the golden files pin: the lowered kernel name,
+    fuse_epilogue, and prepack.
+    """
+    # Pass 1 — tile selection: feasible candidates ranked by traffic,
+    # ties broken toward the smallest packed panels then the largest
+    # mc/kc/nc (a strict total order; Rust uses min_by_key on the same
+    # tuple with Reverse() where we negate).
+    candidates = cpu_blockings()
+    feasible = [
+        b
+        for b in candidates
+        if b[0] * b[1] * 4 <= L2_BYTES // 2 and b[1] * b[2] * 4 <= L3_BYTES // 2
+    ]
+    pool = feasible if feasible else candidates
+
+    def score(b):
+        mc, kc, nc = b
+        return (
+            traffic_elems(m, n, k, b),
+            (mc * kc + kc * nc) * 4,
+            -mc,
+            -kc,
+            -nc,
+        )
+
+    best = min(pool, key=score)
+
+    # Pass 2 — packing decision: operand footprint within half of L2
+    # lowers to the direct (naive-loop) kernel.
+    footprint = 4 * (m * k + k * n + m * n)
+    packed = footprint > L2_BYTES // 2
+
+    # Pass 3 — thread partitioning.
+    if not packed or POOL_THREADS > 1:
+        bands = 1
+    else:
+        by_work = int(2.0 * m * n * k / MIN_FLOPS_PER_THREAD)  # Rust `as usize`
+        bands = max(1, min(HW_THREADS, max(by_work, 1), ceil_div(m, MR)))
+
+    # Pass 4 — epilogue attachment.
+    fuse_epilogue = epilogue != "none"
+
+    # Lowered kernel (plan::compile's final selection).
+    if not packed:
+        kernel = "naive"
+    elif bands > 1:
+        kernel = f"threaded:{best[0]},{best[1]},{best[2]},{bands}"
+    else:
+        kernel = f"tiled:{best[0]},{best[1]},{best[2]}"
+
+    # Pass 5 — prepack: panels are worth materializing at bind time
+    # exactly when the lowered kernel packs B per call.
+    prepack = kernel != "naive"
+
+    return {"kernel": kernel, "fuse_epilogue": fuse_epilogue, "prepack": prepack}
+
+
+def test_golden_plans_match_the_mirror():
+    goldens = sorted(GOLDEN_DIR.glob("plan_*.json"))
+    assert len(goldens) >= 4, f"golden plan files missing under {GOLDEN_DIR}"
+    for path in goldens:
+        g = json.loads(path.read_text())
+        got = compile_plan(g["m"], g["n"], g["k"], g["epilogue"])
+        for field in ("kernel", "fuse_epilogue", "prepack"):
+            assert got[field] == g[field], (
+                f"{path.name}: mirror computed {field}={got[field]!r}, "
+                f"golden pins {g[field]!r} — cost model and goldens drifted"
+            )
+
+
+def test_known_decision_points():
+    # Cache-resident problems lower to the direct kernel, no prepack.
+    assert compile_plan(64, 64, 64, "none") == {
+        "kernel": "naive",
+        "fuse_epilogue": False,
+        "prepack": False,
+    }
+    # 512^3: min traffic at kc=512, nc=1024; only mc=64 keeps the A panel
+    # within L2/2; enough flops for all four pinned hw threads.
+    assert compile_plan(512, 512, 512, "none")["kernel"] == "threaded:64,512,1024,4"
+    # 256^3: kc=256 reaches ceil(k/kc)=1 with the smaller panels.
+    assert compile_plan(256, 256, 256, "none")["kernel"] == "threaded:64,256,256,4"
+    # Epilogue keys fuse; packing/prepack decisions are epilogue-blind.
+    plan = compile_plan(512, 512, 512, "bias_relu")
+    assert plan["fuse_epilogue"] and plan["prepack"]
+    # Skinny-m problems cap the band count at ceil(m/MR).
+    assert compile_plan(8, 2048, 2048, "none")["kernel"].startswith("threaded:")
+    band = int(compile_plan(8, 2048, 2048, "none")["kernel"].rsplit(",", 1)[1])
+    assert band == 2, f"ceil(8/4) = 2 bands, mirror says {band}"
+
+
+def test_every_prepack_decision_follows_the_kernel():
+    # The prepack pass is a pure function of the lowered kernel: panels
+    # exist exactly when the kernel would pack B per call.
+    for m, n, k in [(16, 16, 16), (64, 64, 64), (96, 96, 96), (128, 128, 128),
+                    (256, 256, 256), (512, 512, 512), (1024, 768, 512)]:
+        plan = compile_plan(m, n, k, "none")
+        assert plan["prepack"] == (plan["kernel"] != "naive"), plan

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use mlir_gemm::harness::{bar_chart, CsvTable, FigureOutput};
 use mlir_gemm::plan::{compile, GemmKey, PlanEnv};
-use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
+use mlir_gemm::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, PrepackedB};
 use mlir_gemm::util::json::{self, Json};
 use mlir_gemm::util::prng::Rng;
 
@@ -95,6 +95,82 @@ fn main() {
         }
     }
 
+    // Bound-vs-inline at 512^3: B prepacked once (the weight-binding
+    // serving path) against per-call packing, same tiled kernel.  Bit
+    // check first, then the acceptance gate: bound throughput must be at
+    // least inline throughput (5% slack for shared-runner noise — the
+    // panel copy is small next to the 2*512^3 flops, so the honest
+    // expectation is "at least as fast", not a large multiplier; the
+    // serving win is the payload + cast + pack removed per request).
+    {
+        let size = 512usize;
+        let mut rng = Rng::new(0xB17D);
+        let a = rng.normal_matrix(size, size);
+        let b = rng.normal_matrix(size, size);
+        let c = rng.normal_matrix(size, size);
+        let bs = Blocking::default();
+        let policy = KernelPolicy::Tiled(bs);
+        let pre = PrepackedB::pack(&b, size, size, bs);
+        let flops = 2.0 * (size as f64).powi(3);
+        let mut inline_out = c.clone();
+        kernel::matmul(policy, &mut inline_out, &a, &b, size, size, size);
+        let mut bound_out = c.clone();
+        kernel::matmul_b(
+            policy,
+            &mut bound_out,
+            &a,
+            BOperand::Prepacked(&pre),
+            size,
+            size,
+            size,
+        );
+        assert!(
+            inline_out
+                .iter()
+                .zip(&bound_out)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "prepacked B drifted from inline B at {size}^3"
+        );
+        let mut out = c.clone();
+        let mut best_inline = f64::INFINITY;
+        let mut best_bound = f64::INFINITY;
+        for _ in 0..iters {
+            out.copy_from_slice(&c);
+            let t = Instant::now();
+            kernel::matmul(policy, &mut out, &a, &b, size, size, size);
+            best_inline = best_inline.min(t.elapsed().as_secs_f64());
+            out.copy_from_slice(&c);
+            let t = Instant::now();
+            kernel::matmul_b(
+                policy,
+                &mut out,
+                &a,
+                BOperand::Prepacked(&pre),
+                size,
+                size,
+                size,
+            );
+            best_bound = best_bound.min(t.elapsed().as_secs_f64());
+        }
+        assert!(
+            best_bound <= best_inline * 1.05,
+            "bound (prepacked) B slower than inline at {size}^3: \
+             {best_bound:.6}s vs {best_inline:.6}s"
+        );
+        rows.push(Row {
+            size,
+            policy: "tiled:inline-B".into(),
+            seconds: best_inline,
+            gflops: flops / best_inline / 1e9,
+        });
+        rows.push(Row {
+            size,
+            policy: "tiled:bound-B".into(),
+            seconds: best_bound,
+            gflops: flops / best_bound / 1e9,
+        });
+    }
+
     // Acceptance gate (runs in smoke mode too): the auto-compiled plan
     // must never be slower than naive at 512^3 — the plan compiler's
     // whole point is that its decisions dominate the reference loop.
@@ -147,7 +223,8 @@ fn main() {
         summary: format!(
             "micro-kernel engine throughput, naive vs tiled vs threaded vs the \
              auto-compiled plan ({threads} hw threads); every policy bit-checked \
-             against naive; plan asserted never slower than naive at 512^3"
+             against naive; plan asserted never slower than naive at 512^3; \
+             bound (prepacked) B asserted never slower than inline B at 512^3"
         ),
     };
     bench_common::emit(&output);

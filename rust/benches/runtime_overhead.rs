@@ -46,7 +46,7 @@ fn main() {
     let mk_req = |rng: &mut Rng| GemmRequest {
         key: key.clone(),
         a: Tensor::new(vec![size, size], rng.normal_matrix(size, size)).unwrap(),
-        b: Tensor::new(vec![size, size], rng.normal_matrix(size, size)).unwrap(),
+        b: Some(Tensor::new(vec![size, size], rng.normal_matrix(size, size)).unwrap()),
         c: Tensor::zeros(vec![size, size]),
         bias: None,
         use_baseline: false,

@@ -197,6 +197,9 @@ pub fn refine_measured(plan: &ExecutionPlan, iters: usize) -> ExecutionPlan {
     }
     let mut refined = plan.clone();
     refined.kernel = best.1;
+    // The prepack decision tracks the kernel: a swap to/from the direct
+    // kernel flips whether bound weights materialize panels.
+    refined.prepack = !matches!(best.1, KernelPolicy::Naive);
     refined.trace.push(PassTrace {
         pass: "measure-refine".to_string(),
         decision: best.1.name(),

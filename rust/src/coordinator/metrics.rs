@@ -37,6 +37,15 @@ pub struct PlanLoad {
     pub flops: f64,
     /// Executor busy time spent on that work, seconds.
     pub busy_sec: f64,
+    /// Requests served from bind-time prepacked B panels (`pack_b`
+    /// skipped entirely on the hot path).
+    pub pack_hits: u64,
+    /// Requests on a packing kernel that had to pack B per call
+    /// (operand shipped inline).
+    pub pack_misses: u64,
+    /// Request payload bytes not shipped because B was bound
+    /// (4·k·n per weight-bound request).
+    pub bytes_saved: f64,
 }
 
 #[derive(Debug)]
@@ -149,6 +158,21 @@ impl Metrics {
         load.busy_sec += busy_sec;
     }
 
+    /// Account the prepacked-panel cache outcome of completed requests
+    /// under one plan: `hits` ran straight off bind-time panels, `misses`
+    /// re-packed an inline B, and `bytes_saved` is operand payload that
+    /// never had to ship because the weights were bound.
+    pub fn on_pack(&self, plan_id: &str, hits: u64, misses: u64, bytes_saved: f64) {
+        if hits == 0 && misses == 0 && bytes_saved == 0.0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let load = g.per_plan.entry(plan_id.to_string()).or_default();
+        load.pack_hits += hits;
+        load.pack_misses += misses;
+        load.bytes_saved += bytes_saved;
+    }
+
     /// One task executed on device `device`, busy for `busy_sec`.
     pub fn on_device_task(&self, device: usize, busy_sec: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -211,6 +235,14 @@ impl MetricsSnapshot {
                     "plan {plan_id}: {} reqs, {:.2} GFLOP\n",
                     load.requests,
                     load.flops / 1e9
+                ));
+            }
+            if load.pack_hits + load.pack_misses > 0 || load.bytes_saved > 0.0 {
+                out.push_str(&format!(
+                    "  pack cache: {} hits, {} misses, {:.2} MB payload saved\n",
+                    load.pack_hits,
+                    load.pack_misses,
+                    load.bytes_saved / 1e6
                 ));
             }
         }
@@ -318,6 +350,21 @@ mod tests {
             report.contains("plan 1024x1024x1024/f16:threaded:128,256,1024,4: 0 reqs"),
             "{report}"
         );
+    }
+
+    #[test]
+    fn pack_cache_counters_segment_per_plan() {
+        let m = Metrics::new();
+        m.on_pack("p1", 3, 0, 3.0 * 4.0 * 512.0 * 512.0);
+        m.on_pack("p1", 0, 2, 0.0);
+        m.on_pack("p2", 0, 0, 0.0); // no-op: must not materialize an entry
+        let s = m.snapshot();
+        assert_eq!(s.per_plan["p1"].pack_hits, 3);
+        assert_eq!(s.per_plan["p1"].pack_misses, 2);
+        assert!((s.per_plan["p1"].bytes_saved - 3.0 * 1048576.0).abs() < 0.5);
+        assert!(!s.per_plan.contains_key("p2"));
+        let report = s.report();
+        assert!(report.contains("pack cache: 3 hits, 2 misses"), "{report}");
     }
 
     #[test]

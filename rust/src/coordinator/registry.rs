@@ -12,10 +12,12 @@
 //! exactly one place instead of a process-global kernel policy.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
 
 use crate::plan::{self, ExecutionPlan, PlanEnv};
-use crate::runtime::{ArtifactKind, ArtifactMeta};
+use crate::runtime::{ArtifactKind, ArtifactMeta, BoundB, Epilogue, Program, Tensor};
 use crate::schedule::Dtype;
 use crate::sim::{simulate, DeviceModel};
 
@@ -30,12 +32,19 @@ pub struct RegistryEntry {
     pub predicted_tflops: Option<f64>,
 }
 
-/// Registry: GemmKey -> ranked variants (best first) + compiled plan.
+/// Registry: GemmKey -> ranked variants (best first) + compiled plan +
+/// optionally bound constant weights.
 #[derive(Debug, Default)]
 pub struct Registry {
     entries: HashMap<GemmKey, Vec<RegistryEntry>>,
     baselines: HashMap<GemmKey, String>,
     plans: HashMap<GemmKey, Arc<ExecutionPlan>>,
+    /// Constant B weights bound per key (`bind_weights`): cast and
+    /// prepacked once, shared immutably with every in-flight request
+    /// that routed after the bind.  Interior mutability so binding works
+    /// through the server's `Arc<Registry>`; a rebind swaps the `Arc`,
+    /// so newly routed requests can never see the old panels.
+    bound: Mutex<HashMap<GemmKey, Arc<BoundB>>>,
     plan_env: PlanEnv,
 }
 
@@ -191,6 +200,39 @@ impl Registry {
         self.plans.get(key).cloned()
     }
 
+    /// Bind a constant B weight for `key`: validate its shape against
+    /// the key (rejected here, at bind time), cast it to the key's
+    /// `dtype_in` once, and — when the key's compiled plan's prepack
+    /// pass says so — materialize its kernel panels.  Rebinding replaces
+    /// the shared `Arc`, invalidating the old panels for all subsequent
+    /// routing.  Returns the bound weights for callers that want to
+    /// inspect them.
+    pub fn bind_weights(&self, key: &GemmKey, b: &Tensor) -> Result<Arc<BoundB>> {
+        let eplan = match self.plan(key) {
+            Some(p) => p,
+            // Manually assembled registries may not have compiled this
+            // key yet; compile under the registry's own environment so
+            // the bind and the serving plan agree.
+            None => Arc::new(plan::compile(key, &self.plan_env)?),
+        };
+        let program = program_for(key)?;
+        let bound = Arc::new(program.bind_b(b, &eplan)?);
+        self.bound.lock().unwrap().insert(key.clone(), bound.clone());
+        Ok(bound)
+    }
+
+    /// The currently bound weights for a key (None after `unbind_weights`
+    /// or when nothing was ever bound).
+    pub fn bound_weights(&self, key: &GemmKey) -> Option<Arc<BoundB>> {
+        self.bound.lock().unwrap().get(key).cloned()
+    }
+
+    /// Drop a key's bound weights.  Returns whether anything was bound;
+    /// weight-bound requests for the key fail explicitly afterwards.
+    pub fn unbind_weights(&self, key: &GemmKey) -> bool {
+        self.bound.lock().unwrap().remove(key).is_some()
+    }
+
     /// Every cached (key, plan) pair — `make plans` / metrics preseeding.
     pub fn plans(&self) -> impl Iterator<Item = (&GemmKey, &Arc<ExecutionPlan>)> {
         self.plans.iter()
@@ -207,6 +249,22 @@ impl Registry {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+}
+
+/// The executable GEMM contract a key describes — what a bound weight
+/// is validated and cast against.
+fn program_for(key: &GemmKey) -> Result<Program> {
+    let epilogue = Epilogue::parse(&key.epilogue)
+        .ok_or_else(|| anyhow!("unknown epilogue {:?} in {key:?}", key.epilogue))?;
+    Ok(Program::Gemm {
+        m: key.m,
+        n: key.n,
+        k: key.k,
+        dtype_in: key.dtype_in,
+        dtype_acc: key.dtype_acc,
+        epilogue,
+        fused: true,
+    })
 }
 
 #[cfg(test)]
@@ -367,6 +425,36 @@ mod tests {
         assert_eq!(reg.baseline(&GemmKey::plain(256, 256, 256)), Some("base"));
         let f32_key = GemmKey::with_dtypes(256, 256, 256, Dtype::F32, Dtype::F32);
         assert!(reg.baseline(&f32_key).is_none());
+    }
+
+    #[test]
+    fn bind_rebind_unbind_weights() {
+        let reg = Registry::with_env(PlanEnv::pinned());
+        let key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+        // shape mismatch is rejected at bind time
+        let wrong = Tensor::zeros(vec![96, 112]);
+        assert!(reg.bind_weights(&key, &wrong).is_err());
+        assert!(reg.bound_weights(&key).is_none());
+        // a good bind prepacks (128x96x112 compiles to a packing kernel)
+        let b1 = Tensor::zeros(vec![112, 96]);
+        let bound1 = reg.bind_weights(&key, &b1).unwrap();
+        assert!(bound1.is_prepacked(), "packing plan must prepack at bind");
+        assert!(Arc::ptr_eq(&reg.bound_weights(&key).unwrap(), &bound1));
+        // rebinding swaps the Arc: old panels are no longer served
+        let b2 = Tensor::new(vec![112, 96], vec![1.0; 112 * 96]).unwrap();
+        let bound2 = reg.bind_weights(&key, &b2).unwrap();
+        let current = reg.bound_weights(&key).unwrap();
+        assert!(Arc::ptr_eq(&current, &bound2));
+        assert!(!Arc::ptr_eq(&current, &bound1));
+        assert_eq!(current.raw()[0], 1.0);
+        // unbind drops it
+        assert!(reg.unbind_weights(&key));
+        assert!(!reg.unbind_weights(&key));
+        assert!(reg.bound_weights(&key).is_none());
+        // a direct-kernel key binds without panels (cast-only)
+        let small = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+        let bs = reg.bind_weights(&small, &Tensor::zeros(vec![24, 24])).unwrap();
+        assert!(!bs.is_prepacked(), "direct plans bind cast-only weights");
     }
 
     #[test]

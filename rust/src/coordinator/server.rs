@@ -12,7 +12,7 @@
 //! channels.  This is the paper's missing run-time half: it generated
 //! kernels, we also serve them — across a pool of devices.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -21,7 +21,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::plan::{self, ExecutionPlan, PlanEnv, PlanOverride};
-use crate::runtime::{Program, Runtime, Tensor};
+use crate::runtime::{
+    BoundB, ExecTiming, KernelPolicy, Program, Runtime, Tensor, TensorSpec,
+};
 use crate::sim::DeviceModel;
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
@@ -29,12 +31,26 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{GemmKey, Registry};
 use super::sharding::{self, ShardConfig, ShardPlan};
 
+/// Routing-name suffix for weight-bound jobs: bound and inline requests
+/// for one variant batch separately (their executable input forms
+/// differ) and segment separately in the per-variant metrics.
+const BOUND_SUFFIX: &str = "+bound";
+
+/// The artifact a routed variant name loads (strips [`BOUND_SUFFIX`]).
+fn artifact_of(variant: &str) -> &str {
+    variant.strip_suffix(BOUND_SUFFIX).unwrap_or(variant)
+}
+
 /// A GEMM request: C = A @ B + C (+ optional fused epilogue inputs).
 #[derive(Debug)]
 pub struct GemmRequest {
     pub key: GemmKey,
     pub a: Tensor,
-    pub b: Tensor,
+    /// The B operand.  `None` is the weight-bound form: B was bound once
+    /// per variant ([`Server::bind_weights`]) and the request ships only
+    /// A (+ C/bias) — the hot path skips the B payload, its precision
+    /// cast, and (for packing kernels) `pack_b` entirely.
+    pub b: Option<Tensor>,
     pub c: Tensor,
     pub bias: Option<Tensor>,
     /// Route to the library baseline instead of the generated kernel.
@@ -59,6 +75,10 @@ struct Job {
     /// The compiled plan this job executes under, attached by the
     /// dispatcher at routing time (registry-cached per GemmKey).
     plan: Option<Arc<ExecutionPlan>>,
+    /// The bound weights a `b: None` request executes against, captured
+    /// at routing time — a rebind after routing never swaps a job's
+    /// operand mid-flight.
+    bound: Option<Arc<BoundB>>,
 }
 
 #[derive(Debug, Clone)]
@@ -128,6 +148,9 @@ struct ShardTask {
     /// The shard's own compiled plan (derived from the shard shape).
     eplan: Arc<ExecutionPlan>,
     inputs: Vec<Tensor>,
+    /// For row shards of a weight-bound request: the shared bind-time
+    /// operand (prepacked panels consumed as-is on every device).
+    bound: Option<Arc<BoundB>>,
 }
 
 /// Shared state of one sharded request; the worker completing the final
@@ -138,6 +161,9 @@ struct ShardedJob {
     /// The request-level plan id (metrics attribute the completed
     /// request here; per-shard flops go to each shard plan's id).
     plan_id: String,
+    /// Pack-cache outcome of this request, recorded once on completion:
+    /// (hits, misses, payload bytes saved).
+    pack: (u64, u64, f64),
     submitted_at: Instant,
     /// Set by the first worker to start a shard: splits queue wait from
     /// execution time the same way the batch path does.
@@ -158,7 +184,6 @@ pub struct Server {
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
     registry: Arc<Registry>,
-    shutdown: Arc<AtomicBool>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -191,7 +216,6 @@ impl Server {
         for (_key, p) in registry.plans() {
             metrics.on_plan_seen(&p.id());
         }
-        let shutdown = Arc::new(AtomicBool::new(false));
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
 
         // Per-device work queues; worker threads spread across them so
@@ -235,6 +259,7 @@ impl Server {
                                 &task.program,
                                 &task.eplan,
                                 &task.inputs,
+                                task.bound.as_deref(),
                             );
                             let busy = started.elapsed().as_secs_f64();
                             m.on_device_task(dev, busy);
@@ -263,7 +288,6 @@ impl Server {
 
         // Dispatcher: route + batch + shard fan-out.
         let reg = registry.clone();
-        let stop = shutdown.clone();
         let met = metrics.clone();
         let rt = runtime.clone();
         let env = plan_env.clone();
@@ -276,8 +300,9 @@ impl Server {
             'main: loop {
                 let mut enqueue = |mut job: Job| {
                     match route(&reg, &env, &job.request) {
-                        Ok((v, p)) => {
+                        Ok((v, p, bw)) => {
                             job.plan = Some(p);
+                            job.bound = bw;
                             batcher.push(Queued {
                                 variant: v,
                                 enqueued_at: job.submitted_at,
@@ -329,9 +354,14 @@ impl Server {
                         }
                     }
                 }
-                if stop.load(Ordering::Relaxed) && batcher.is_empty() {
-                    break;
-                }
+                // No early stop-flag break here: the dispatcher exits
+                // only on Disconnected above.  Shutdown signals by
+                // dropping the submit sender, and the channel hands over
+                // every already-buffered job before reporting
+                // Disconnected — so a submit that raced the shutdown can
+                // never be dropped without a response (a stop-flag break
+                // could strand buffered jobs and leak their reply
+                // channels; pinned by the server stress test).
             }
             // Drain on shutdown: flush everything still queued.
             loop {
@@ -378,7 +408,6 @@ impl Server {
             next_id: AtomicU64::new(0),
             metrics,
             registry,
-            shutdown,
             dispatcher: Some(dispatcher),
             workers,
         }
@@ -394,7 +423,8 @@ impl Server {
             request,
             submitted_at: Instant::now(),
             reply: tx,
-            plan: None, // attached by the dispatcher at routing time
+            plan: None,  // attached by the dispatcher at routing time
+            bound: None, // ditto
         };
         if let Err(mpsc::SendError(job)) = self.submit_tx.send(job) {
             // The dispatcher is gone (shutdown raced the submit).  Account
@@ -428,12 +458,32 @@ impl Server {
         &self.registry
     }
 
+    /// Bind a constant B weight for `key` (the model-serving form: the
+    /// weight matrix lives server-side).  Cast and — when the key's plan
+    /// prepacks — panel-packed exactly once, here; every subsequent
+    /// `GemmRequest` with `b: None` is served from the shared, immutable
+    /// result.  Shape mismatches fail here, at bind time.  Rebinding
+    /// swaps the weights atomically: requests routed after the rebind
+    /// can never see the old panels.
+    pub fn bind_weights(&self, key: &GemmKey, b: &Tensor) -> Result<()> {
+        self.registry.bind_weights(key, b).map(|_| ())
+    }
+
+    /// Drop `key`'s bound weights; weight-bound requests for it fail
+    /// explicitly afterwards.  Returns whether anything was bound.
+    pub fn unbind_weights(&self, key: &GemmKey) -> bool {
+        self.registry.unbind_weights(key)
+    }
+
     /// Stop accepting work, drain the queues, join every thread.
     /// Idempotent; the server remains usable for `metrics()` afterwards,
     /// and late `submit` calls get explicit error responses.
     pub fn shutdown(&mut self) -> MetricsSnapshot {
-        self.shutdown.store(true, Ordering::Relaxed);
-        // Closing the submit channel unblocks the dispatcher.
+        // Closing the submit channel is the one shutdown signal: the
+        // dispatcher drains every job already buffered in the channel
+        // (the mpsc contract delivers them before Disconnected), then
+        // flushes the batcher and exits — no stop flag that could race
+        // a concurrent submit into a dropped job.
         let (dead_tx, _) = mpsc::channel();
         let old = std::mem::replace(&mut self.submit_tx, dead_tx);
         drop(old);
@@ -447,16 +497,18 @@ impl Server {
     }
 }
 
-/// Route a request to its artifact and its compiled plan.  Plans come
+/// Route a request to its artifact, its compiled plan, and (for the
+/// weight-bound request form) the currently bound weights.  Plans come
 /// from the registry cache; a key the registry somehow never compiled
 /// (manually assembled registries) compiles on the spot under the
-/// server's environment.
+/// server's environment.  A `b: None` request without bound weights is
+/// an explicit routing error, never a silent zero-B execution.
 fn route(
     registry: &Registry,
     env: &PlanEnv,
     req: &GemmRequest,
-) -> Result<(String, Arc<ExecutionPlan>)> {
-    let variant = if req.use_baseline {
+) -> Result<(String, Arc<ExecutionPlan>, Option<Arc<BoundB>>)> {
+    let artifact = if req.use_baseline {
         registry
             .baseline(&req.key)
             .map(str::to_string)
@@ -471,7 +523,22 @@ fn route(
         Some(p) => p,
         None => Arc::new(plan::compile(&req.key, env)?),
     };
-    Ok((variant, eplan))
+    // An inline B always wins: the request carries its own operand even
+    // when weights happen to be bound (A/B testing, one-off overrides).
+    let bound = if req.b.is_none() {
+        Some(registry.bound_weights(&req.key).ok_or_else(|| {
+            anyhow!(
+                "request for {:?} carried no B operand and no weights are bound \
+                 (bind_weights first, or ship B inline)",
+                req.key
+            )
+        })?)
+    } else {
+        None
+    };
+    let variant =
+        if bound.is_some() { format!("{artifact}{BOUND_SUFFIX}") } else { artifact };
+    Ok((variant, eplan, bound))
 }
 
 /// Dispatch one released batch: shard it across the pool when the shard
@@ -489,8 +556,14 @@ fn handle_run(
     batch: Vec<Queued<Job>>,
 ) -> bool {
     let devices = device_txs.len();
+    // As in run_batch: the bound form comes from the jobs, the suffix is
+    // only stripped when the form says so.
+    let batch_is_bound =
+        batch.first().map(|q| q.payload.bound.is_some()).unwrap_or(false);
+    let artifact_name =
+        if batch_is_bound { artifact_of(&variant) } else { variant.as_str() };
     if devices > 1 {
-        if let Ok(artifact) = rt.load(&variant) {
+        if let Ok(artifact) = rt.load(artifact_name) {
             if let Some(splan) = sharding::plan_for(artifact.program(), devices, shard_cfg)
             {
                 let program = artifact.program().clone();
@@ -560,30 +633,75 @@ fn dispatch_sharded(
     device_txs: &[Sender<WorkItem>],
     metrics: &Metrics,
 ) {
-    let Job { id, request, submitted_at, reply, plan: request_plan } = job;
+    let Job { id, request, submitted_at, reply, plan: request_plan, bound } = job;
     let GemmRequest { a, b, c, bias, .. } = request;
     let now = Instant::now();
-    let tasks =
-        match sharding::build_shard_tasks(env, splan, base, &a, &b, &c, bias.as_ref()) {
-            Ok(t) => t,
-            Err(e) => {
-                metrics.on_fail();
-                let _ = reply.send(GemmResponse {
-                    id,
-                    output: Err(e),
-                    variant: variant.to_string(),
-                    queue_wait: now.duration_since(submitted_at),
-                    exec_time: Duration::ZERO,
-                    total_latency: submitted_at.elapsed(),
-                });
-                return;
-            }
-        };
+    let tasks = match (&b, &bound) {
+        // Weight-bound request: row shards share the bind-time operand,
+        // split-K shards slice its cast raw B — no per-request B at all.
+        (_, Some(bw)) => sharding::build_shard_tasks_bound(
+            env,
+            splan,
+            base,
+            &a,
+            &c,
+            bias.as_ref(),
+            bw,
+        ),
+        (Some(b), None) => sharding::build_shard_tasks(
+            env,
+            splan,
+            base,
+            &a,
+            b,
+            &c,
+            bias.as_ref(),
+        )
+        .map(|ts| ts.into_iter().map(|(p, e, i)| (p, e, i, None)).collect()),
+        (None, None) => {
+            Err(anyhow!("request has neither an inline nor a bound B operand"))
+        }
+    };
+    let tasks = match tasks {
+        Ok(t) => t,
+        Err(e) => {
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(e),
+                variant: variant.to_string(),
+                queue_wait: now.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+            return;
+        }
+    };
+    // Pack-cache outcome, recorded once if the request completes: a
+    // bound request saves its whole B payload; it hits the panel cache
+    // when row shards consume prepacked panels, and an inline request on
+    // a packing plan counts one per-call pack.
+    let pack = match &bound {
+        Some(bw) => {
+            let hits = u64::from(
+                bw.is_prepacked() && splan.dim == sharding::SplitDim::Rows,
+            );
+            (hits, 0, (4 * bw.k() * bw.n()) as f64)
+        }
+        None => {
+            let packs = request_plan
+                .as_ref()
+                .map(|p| !matches!(p.kernel, KernelPolicy::Naive))
+                .unwrap_or(false);
+            (0, u64::from(packs), 0.0)
+        }
+    };
     let n_shards = tasks.len();
     let shared = Arc::new(ShardedJob {
         id,
         variant: variant.to_string(),
         plan_id: request_plan.map(|p| p.id()).unwrap_or_else(|| "unplanned".into()),
+        pack,
         submitted_at,
         exec_started: Mutex::new(None),
         plan: splan.clone(),
@@ -594,7 +712,7 @@ fn dispatch_sharded(
         parts: Mutex::new((0..n_shards).map(|_| None).collect()),
         remaining: AtomicUsize::new(n_shards),
     });
-    for (idx, ((program, eplan, inputs), shard)) in
+    for (idx, ((program, eplan, inputs, task_bound), shard)) in
         tasks.into_iter().zip(&shared.plan.shards).enumerate()
     {
         let item = WorkItem::Shard(ShardTask {
@@ -603,6 +721,7 @@ fn dispatch_sharded(
             program,
             eplan,
             inputs,
+            bound: task_bound,
         });
         let dev = (shard.device + device_base) % device_txs.len();
         if device_txs[dev].send(item).is_err() {
@@ -674,6 +793,8 @@ fn finish_shard(
             // one executed; here only the completed request is counted,
             // under the request-level plan id.
             metrics.on_plan_work(&sj.plan_id, 1, 0.0, 0.0);
+            let (hits, misses, saved) = sj.pack;
+            metrics.on_pack(&sj.plan_id, hits, misses, saved);
         }
         Err(_) => metrics.on_fail(),
     }
@@ -705,7 +826,14 @@ fn run_batch(
 ) {
     metrics.on_batch(batch.len());
     let exec_started = Instant::now();
-    let artifact = match rt.load(variant) {
+    // Bound and inline jobs never share a batch: routing appends
+    // BOUND_SUFFIX to the variant, so the batcher keeps them apart.  The
+    // form itself is read off the jobs (ground truth), not the name —
+    // an artifact whose manifest name happens to end in "+bound" still
+    // routes inline traffic correctly, with nothing stripped.
+    let is_bound = batch.first().map(|q| q.payload.bound.is_some()).unwrap_or(false);
+    let artifact_name = if is_bound { artifact_of(variant) } else { variant };
+    let artifact = match rt.load(artifact_name) {
         Ok(a) => a,
         Err(e) => {
             let msg = format!("{e:#}");
@@ -724,31 +852,79 @@ fn run_batch(
             return;
         }
     };
+    // The manifest specs each item validates against: the full contract,
+    // or (weight-bound form) the contract minus the bound B slot.
+    let specs: Vec<&TensorSpec> = artifact
+        .meta
+        .inputs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !(is_bound && *i == crate::runtime::GEMM_B_INPUT_SLOT))
+        .map(|(_, s)| s)
+        .collect();
     let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
         Vec::with_capacity(batch.len());
     let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
-    // One plan per batch: the batcher groups by variant and every job of
-    // a variant carries the same registry-cached plan.
+    // For bound batches: the BoundB Arc each valid item was routed with,
+    // parallel to `items`.  A rebind can land between two routings inside
+    // one batch window, so jobs of one batch may carry *different* Arcs —
+    // execution below honors each job's own capture.
+    let mut bounds: Vec<Arc<BoundB>> = Vec::new();
+    // One plan per batch: the batcher groups by variant+form and every
+    // job of a variant carries the same registry-cached plan.
     let mut batch_plan: Option<Arc<ExecutionPlan>> = None;
     for q in batch {
-        let Job { id, request, submitted_at, reply, plan } = q.payload;
+        let Job { id, request, submitted_at, reply, plan, bound } = q.payload;
         if batch_plan.is_none() {
             batch_plan = plan;
         }
         // Tensors are moved, not cloned: the request is consumed (hot-path
         // allocation discipline — EXPERIMENTS.md §Perf L3).
         let GemmRequest { a, b, c, bias, .. } = request;
-        let mut inputs = vec![a, b, c];
-        if let Some(bias) = bias {
-            inputs.push(bias);
-        }
-        let valid = inputs.len() == artifact.meta.inputs.len()
+        let (inputs, job_bound) = match (is_bound, b, bound) {
+            (true, _, Some(bw)) => {
+                // Weight-bound form: A + C (+ bias); B comes from the
+                // Arc this job captured at routing time (an inline B on
+                // a bound-routed job cannot happen — routing keys the
+                // form off the request).
+                let mut v = vec![a, c];
+                if let Some(bias) = bias {
+                    v.push(bias);
+                }
+                (v, Some(bw))
+            }
+            (true, _, None) | (false, None, _) => {
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(anyhow!(
+                        "request has no B operand for its routed form"
+                    )),
+                    variant: variant.to_string(),
+                    queue_wait: exec_started.duration_since(submitted_at),
+                    exec_time: Duration::ZERO,
+                    total_latency: submitted_at.elapsed(),
+                });
+                continue;
+            }
+            (false, Some(b), _) => {
+                let mut v = vec![a, b, c];
+                if let Some(bias) = bias {
+                    v.push(bias);
+                }
+                (v, None)
+            }
+        };
+        let valid = inputs.len() == specs.len()
             && inputs
                 .iter()
-                .zip(&artifact.meta.inputs)
+                .zip(specs.iter().copied())
                 .all(|(t, spec)| t.matches(spec));
         if valid {
             jobs.push((id, submitted_at, reply));
+            if let Some(bw) = job_bound {
+                bounds.push(bw);
+            }
             items.push(inputs);
         } else {
             metrics.on_fail();
@@ -796,7 +972,57 @@ fn run_batch(
         .as_ref()
         .map(|p| p.id())
         .unwrap_or_else(|| "unplanned".to_string());
-    match rt.execute_batch_timed_planned(&artifact, &items, eplan.as_deref()) {
+    let result = if is_bound {
+        match &eplan {
+            None => Err(anyhow!("weight-bound batch for {variant} has no compiled plan")),
+            Some(p) if bounds.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])) => {
+                // The overwhelmingly common case: one bind served the
+                // whole batch — a single batched call over it.
+                rt.execute_batch_timed_bound(&artifact, &items, p, &bounds[0])
+            }
+            Some(p) => {
+                // A rebind landed inside this batch window, so jobs
+                // carry different BoundB Arcs.  Execute each item under
+                // exactly the weights it was routed with — the rebind
+                // contract ("old panels never served to later routings")
+                // beats the lost batching of this rare split.
+                let mut outs = Vec::with_capacity(items.len());
+                let mut exec_seconds = 0.0f64;
+                let mut first_err = None;
+                for (item, bw) in items.iter().zip(&bounds) {
+                    match rt.execute_batch_timed_bound(
+                        &artifact,
+                        std::slice::from_ref(item),
+                        p,
+                        bw,
+                    ) {
+                        Ok((mut o, t)) => {
+                            exec_seconds += t.exec_seconds;
+                            outs.push(o.remove(0));
+                        }
+                        Err(e) => {
+                            first_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                match first_err {
+                    Some(e) => Err(e),
+                    None => Ok((
+                        outs,
+                        ExecTiming {
+                            pack_seconds: 0.0,
+                            exec_seconds,
+                            unpack_seconds: 0.0,
+                        },
+                    )),
+                }
+            }
+        }
+    } else {
+        rt.execute_batch_timed_planned(&artifact, &items, eplan.as_deref())
+    };
+    match result {
         Ok((outs, timing)) => {
             metrics.on_device_task(device, timing.exec_seconds);
             if item_flops > 0.0 {
@@ -808,6 +1034,29 @@ fn run_batch(
                     item_flops * outs.len() as f64,
                     timing.exec_seconds,
                 );
+            }
+            // Pack-cache accounting: each completed bound item skipped
+            // shipping 4·k·n B payload bytes, and — when the bind
+            // prepacked — skipped pack_b itself (a hit); inline items on
+            // a packing kernel paid a per-call pack (a miss).
+            let n_items = outs.len() as u64;
+            match (bounds.first(), &eplan) {
+                (Some(bw), _) => {
+                    // All bounds of one batch share the key (same k·n and
+                    // the same prepack decision), so the first stands in
+                    // for every item.
+                    let hits = if bw.is_prepacked() { n_items } else { 0 };
+                    metrics.on_pack(
+                        &plan_id,
+                        hits,
+                        0,
+                        (4 * bw.k() * bw.n()) as f64 * n_items as f64,
+                    );
+                }
+                (None, Some(p)) if !matches!(p.kernel, KernelPolicy::Naive) => {
+                    metrics.on_pack(&plan_id, 0, n_items, 0.0);
+                }
+                _ => {}
             }
             let exec_time = call_started.elapsed();
             for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {

@@ -40,7 +40,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::plan::{ExecutionPlan, PlanEnv};
 use crate::runtime::exec::{gemm_tail, round_to};
-use crate::runtime::{Program, Tensor};
+use crate::runtime::{BoundB, Program, Tensor};
 use crate::schedule::Schedule;
 use crate::sim::{simulate, DeviceModel};
 
@@ -259,6 +259,62 @@ pub fn shard_inputs(
     }
 }
 
+/// One weight-bound shard's executable unit: derived program, compiled
+/// plan, operand slice, and — for row shards — the shared bind-time
+/// weights (None for split-K shards, which carry a sliced inline B).
+pub type BoundShardTask =
+    (Program, Arc<ExecutionPlan>, Vec<Tensor>, Option<Arc<BoundB>>);
+
+/// The bias contract, enforced before any shard runs: split-K shards
+/// execute without the epilogue (it replays in the reduction), so a
+/// missing or mis-sized bias would otherwise silently skip the epilogue
+/// instead of failing like the unsharded path does.
+fn check_bias(
+    epilogue: crate::runtime::Epilogue,
+    bias: Option<&Tensor>,
+    n: usize,
+) -> Result<()> {
+    match bias {
+        Some(t) if epilogue.needs_bias() => {
+            if t.shape != [n] || t.data.len() != n {
+                bail!(
+                    "epilogue {:?} needs a bias of shape [{n}], got {:?} ({} elements)",
+                    epilogue.name(),
+                    t.shape,
+                    t.data.len()
+                );
+            }
+            Ok(())
+        }
+        None if epilogue.needs_bias() => {
+            bail!("epilogue {:?} needs a bias input", epilogue.name())
+        }
+        Some(_) => bail!("bias provided but the kernel has no bias epilogue"),
+        None => Ok(()),
+    }
+}
+
+/// A/C operand validation shared by the inline and weight-bound task
+/// builders (shape *and* data length: a torn tensor must fail here, not
+/// panic the splitting slice on the dispatcher thread).
+fn check_a_c(a: &Tensor, c: &Tensor, m: usize, n: usize, k: usize) -> Result<()> {
+    if a.shape != [m, k] || c.shape != [m, n] {
+        bail!(
+            "operand shapes a={:?} c={:?} do not match plan {m}x{n}x{k}",
+            a.shape,
+            c.shape
+        );
+    }
+    if a.data.len() != m * k || c.data.len() != m * n {
+        bail!(
+            "operand data lengths a={} c={} do not match plan {m}x{n}x{k}",
+            a.data.len(),
+            c.data.len()
+        );
+    }
+    Ok(())
+}
+
 /// Build the complete per-shard task list for one request: each shard's
 /// derived program, its compiled execution plan (under `env`), and its
 /// operand slice.
@@ -275,52 +331,101 @@ pub fn build_shard_tasks(
         bail!("only gemm programs can be sharded");
     };
     let (m, n, k) = (plan.m, plan.n, plan.k);
-    if a.shape != [m, k] || b.shape != [k, n] || c.shape != [m, n] {
+    check_a_c(a, c, m, n, k)?;
+    if b.shape != [k, n] || b.data.len() != k * n {
         bail!(
-            "operand shapes a={:?} b={:?} c={:?} do not match plan {m}x{n}x{k}",
-            a.shape,
+            "operand B shape {:?} ({} elements) does not match plan {m}x{n}x{k}",
             b.shape,
-            c.shape
+            b.data.len()
         );
     }
-    // Data lengths too: a shape/data-inconsistent tensor (constructible
-    // via the pub fields) would otherwise panic the splitting slice —
-    // on the caller's thread, which for the server is the dispatcher.
-    if a.data.len() != m * k || b.data.len() != k * n || c.data.len() != m * n {
-        bail!(
-            "operand data lengths a={} b={} c={} do not match plan {m}x{n}x{k}",
-            a.data.len(),
-            b.data.len(),
-            c.data.len()
-        );
-    }
-    // The bias contract must be enforced here: split-K shards run without
-    // the epilogue (it replays in the reduction), so a missing or
-    // mis-sized bias would otherwise silently skip the epilogue instead
-    // of failing like the unsharded path does.
-    match bias {
-        Some(t) if epilogue.needs_bias() => {
-            if t.shape != [n] || t.data.len() != n {
-                bail!(
-                    "epilogue {:?} needs a bias of shape [{n}], got {:?} ({} elements)",
-                    epilogue.name(),
-                    t.shape,
-                    t.data.len()
-                );
-            }
-        }
-        None if epilogue.needs_bias() => {
-            bail!("epilogue {:?} needs a bias input", epilogue.name())
-        }
-        Some(_) => bail!("bias provided but the kernel has no bias epilogue"),
-        None => {}
-    }
+    check_bias(epilogue, bias, n)?;
     plan.shards
         .iter()
         .map(|shard| {
             let program = shard_program(base, plan, shard)?;
             let eplan = Arc::new(program.compile_plan(env)?);
             Ok((program, eplan, shard_inputs(plan, shard, a, b, c, bias)))
+        })
+        .collect()
+}
+
+/// [`build_shard_tasks`] for a weight-bound request (B lives in `bound`,
+/// cast and prepacked at bind time).
+///
+/// * **Row shards** all read the whole of B, so every task shares the
+///   one bind-time [`BoundB`] by `Arc` — the per-device B broadcast copy
+///   of the inline path disappears entirely, and prepacked panels are
+///   consumed as-is on every device.
+/// * **Split-K shards** need B rows `[offset, offset+len)`; panels are
+///   laid out over the full k extent and do not align with arbitrary
+///   k-splits, so each shard slices the bound *raw* (already-cast) B —
+///   still skipping the per-request payload and input cast.  Re-casting
+///   the slice inside the shard is the identity (rounding is
+///   idempotent), so partials match the inline split-K path bit for bit.
+pub fn build_shard_tasks_bound(
+    env: &PlanEnv,
+    plan: &ShardPlan,
+    base: &Program,
+    a: &Tensor,
+    c: &Tensor,
+    bias: Option<&Tensor>,
+    bound: &Arc<BoundB>,
+) -> Result<Vec<BoundShardTask>> {
+    let Program::Gemm { epilogue, .. } = *base else {
+        bail!("only gemm programs can be sharded");
+    };
+    let (m, n, k) = (plan.m, plan.n, plan.k);
+    check_a_c(a, c, m, n, k)?;
+    if (bound.k(), bound.n()) != (k, n) {
+        bail!(
+            "bound weights are {}x{}, shard plan wants {k}x{n}",
+            bound.k(),
+            bound.n()
+        );
+    }
+    check_bias(epilogue, bias, n)?;
+    plan.shards
+        .iter()
+        .map(|shard| {
+            let program = shard_program(base, plan, shard)?;
+            let eplan = Arc::new(program.compile_plan(env)?);
+            Ok(match plan.dim {
+                SplitDim::Rows => {
+                    let a_rows = a.data
+                        [shard.offset * k..(shard.offset + shard.len) * k]
+                        .to_vec();
+                    let c_rows = c.data
+                        [shard.offset * n..(shard.offset + shard.len) * n]
+                        .to_vec();
+                    let mut inputs = vec![
+                        Tensor { shape: vec![shard.len, k], data: a_rows },
+                        Tensor { shape: vec![shard.len, n], data: c_rows },
+                    ];
+                    if let Some(bias) = bias {
+                        inputs.push(bias.clone());
+                    }
+                    (program, eplan, inputs, Some(bound.clone()))
+                }
+                SplitDim::K => {
+                    let mut a_cols = Vec::with_capacity(m * shard.len);
+                    for i in 0..m {
+                        let row = &a.data[i * k..(i + 1) * k];
+                        a_cols.extend_from_slice(
+                            &row[shard.offset..shard.offset + shard.len],
+                        );
+                    }
+                    let b_rows = bound.raw()
+                        [shard.offset * n..(shard.offset + shard.len) * n]
+                        .to_vec();
+                    let inputs = vec![
+                        Tensor { shape: vec![m, shard.len], data: a_cols },
+                        Tensor { shape: vec![shard.len, n], data: b_rows },
+                        Tensor::zeros(vec![m, n]),
+                    ];
+                    (program, eplan, inputs, None)
+                }
+            })
         })
         .collect()
 }
@@ -391,17 +496,22 @@ pub fn reduce_outputs(
 /// Execute one shard program under its compiled plan and take its single
 /// output — the one shard execution body, shared by the [`ShardPool`]
 /// workers and the server's device workers so the two engines cannot
-/// drift.
+/// drift.  A weight-bound shard (`bound` set; row shards of a bound
+/// request) consumes the shared bind-time operand instead of an inline
+/// B tensor.
 pub fn execute_shard(
     program: &Program,
     eplan: &ExecutionPlan,
     inputs: &[Tensor],
+    bound: Option<&BoundB>,
 ) -> Result<Tensor> {
-    program.execute_planned(inputs, eplan).and_then(|outs| {
-        outs.into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("shard produced no output"))
-    })
+    let outs = match bound {
+        Some(bw) => program.execute_planned_bound(inputs, eplan, bw),
+        None => program.execute_planned(inputs, eplan),
+    }?;
+    outs.into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("shard produced no output"))
 }
 
 // ---------------------------------------------------------------------------
@@ -412,6 +522,7 @@ struct PoolTask {
     program: Program,
     eplan: Arc<ExecutionPlan>,
     inputs: Vec<Tensor>,
+    bound: Option<Arc<BoundB>>,
     shard_idx: usize,
     reply: Sender<(usize, Result<Tensor>)>,
 }
@@ -448,8 +559,12 @@ impl ShardPool {
                 let handle = std::thread::spawn(move || {
                     while let Ok(task) = rx.recv() {
                         let started = Instant::now();
-                        let result =
-                            execute_shard(&task.program, &task.eplan, &task.inputs);
+                        let result = execute_shard(
+                            &task.program,
+                            &task.eplan,
+                            &task.inputs,
+                            task.bound.as_deref(),
+                        );
                         let busy = started.elapsed().as_secs_f64();
                         {
                             let mut g = worker_stats.lock().unwrap();
@@ -493,10 +608,41 @@ impl ShardPool {
         c: &Tensor,
         bias: Option<&Tensor>,
     ) -> Result<Tensor> {
-        let tasks = build_shard_tasks(&self.plan_env, plan, base, a, b, c, bias)?;
+        let tasks: Vec<_> = build_shard_tasks(&self.plan_env, plan, base, a, b, c, bias)?
+            .into_iter()
+            .map(|(program, eplan, inputs)| (program, eplan, inputs, None))
+            .collect();
+        self.run_tasks(base, plan, c, bias, tasks)
+    }
+
+    /// [`ShardPool::execute`] for a weight-bound request: row shards
+    /// share `bound`'s prepacked panels across the pool, split-K shards
+    /// slice its cast raw B.
+    pub fn execute_bound(
+        &self,
+        base: &Program,
+        plan: &ShardPlan,
+        a: &Tensor,
+        c: &Tensor,
+        bias: Option<&Tensor>,
+        bound: &Arc<BoundB>,
+    ) -> Result<Tensor> {
+        let tasks =
+            build_shard_tasks_bound(&self.plan_env, plan, base, a, c, bias, bound)?;
+        self.run_tasks(base, plan, c, bias, tasks)
+    }
+
+    fn run_tasks(
+        &self,
+        base: &Program,
+        plan: &ShardPlan,
+        c: &Tensor,
+        bias: Option<&Tensor>,
+        tasks: Vec<BoundShardTask>,
+    ) -> Result<Tensor> {
         let n_shards = tasks.len();
         let (reply_tx, reply_rx) = mpsc::channel();
-        for (idx, ((program, eplan, inputs), shard)) in
+        for (idx, ((program, eplan, inputs, bound), shard)) in
             tasks.into_iter().zip(&plan.shards).enumerate()
         {
             let dev = shard.device % self.workers.len();
@@ -506,6 +652,7 @@ impl ShardPool {
                     program,
                     eplan,
                     inputs,
+                    bound,
                     shard_idx: idx,
                     reply: reply_tx.clone(),
                 })
@@ -787,6 +934,95 @@ mod tests {
         let total_tasks: u64 = stats.iter().map(|s| s.tasks).sum();
         assert_eq!(total_tasks, plan.shards.len() as u64);
         assert!(stats.iter().all(|s| s.tasks == 1), "{stats:?}");
+    }
+
+    #[test]
+    fn bound_row_shards_share_panels_and_match_inline_bitwise() {
+        use crate::plan::PlanOverride;
+        let (m, n, k) = (24, 16, 16);
+        for &(din, dacc) in &[(Dtype::F32, Dtype::F32), (Dtype::F16, Dtype::F32)] {
+            let base = gemm(m, n, k, din, dacc);
+            let (a, b, c) = operands(m, n, k, 41);
+            // Force a packing kernel so the bind actually prepacks.
+            let env = PlanEnv::default()
+                .with_force(PlanOverride::parse("tiled:8,4,8").unwrap());
+            let request_plan = base.compile_plan(&env).unwrap();
+            let bound = Arc::new(base.bind_b(&b, &request_plan).unwrap());
+            assert!(bound.is_prepacked());
+            let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
+            let plan = ShardPlan::rows(m, n, k, 3, 1);
+            let tasks =
+                build_shard_tasks_bound(&env, &plan, &base, &a, &c, None, &bound)
+                    .unwrap();
+            // every row shard shares the one bound operand — no B copies
+            for (_, _, inputs, task_bound) in &tasks {
+                assert_eq!(inputs.len(), 2, "bound row shards carry A + C only");
+                let tb = task_bound.as_ref().expect("row shards share the bound B");
+                assert!(Arc::ptr_eq(tb, &bound));
+            }
+            let parts: Vec<Tensor> = tasks
+                .into_iter()
+                .map(|(prog, eplan, inputs, task_bound)| {
+                    execute_shard(&prog, &eplan, &inputs, task_bound.as_deref())
+                        .unwrap()
+                })
+                .collect();
+            let got = reduce_outputs(&plan, &base, &c, None, &parts).unwrap();
+            assert_eq!(got.data, want[0].data, "{din:?}/{dacc:?} bound row shard drifted");
+        }
+    }
+
+    #[test]
+    fn bound_split_k_matches_inline_split_k_bitwise() {
+        // Split-K shards slice the bound raw (cast) B; cast-then-slice
+        // equals slice-then-cast elementwise, so bound and inline split-K
+        // partials — and therefore the reduced outputs — are bit-equal.
+        let (m, n, k) = (8, 8, 32);
+        let base = gemm(m, n, k, Dtype::F16, Dtype::F32);
+        let (a, b, c) = operands(m, n, k, 42);
+        let env = PlanEnv::default();
+        let request_plan = base.compile_plan(&env).unwrap();
+        let bound = Arc::new(base.bind_b(&b, &request_plan).unwrap());
+        let plan = ShardPlan::split_k(m, n, k, 4, 1);
+        let run = |tasks: Vec<BoundShardTask>| {
+            let parts: Vec<Tensor> = tasks
+                .into_iter()
+                .map(|(prog, eplan, inputs, tb)| {
+                    execute_shard(&prog, &eplan, &inputs, tb.as_deref()).unwrap()
+                })
+                .collect();
+            reduce_outputs(&plan, &base, &c, None, &parts).unwrap()
+        };
+        let inline_tasks: Vec<_> =
+            build_shard_tasks(&env, &plan, &base, &a, &b, &c, None)
+                .unwrap()
+                .into_iter()
+                .map(|(p, e, i)| (p, e, i, None))
+                .collect();
+        let bound_tasks =
+            build_shard_tasks_bound(&env, &plan, &base, &a, &c, None, &bound).unwrap();
+        assert!(
+            bound_tasks.iter().all(|(_, _, _, tb)| tb.is_none()),
+            "split-K shards slice raw B, no shared panels"
+        );
+        let want = run(inline_tasks);
+        let got = run(bound_tasks);
+        assert_eq!(got.data, want.data, "bound split-K drifted from inline split-K");
+    }
+
+    #[test]
+    fn pool_executes_bound_plan_bitwise() {
+        let (m, n, k) = (32, 16, 16);
+        let base = gemm(m, n, k, Dtype::F32, Dtype::F32);
+        let (a, b, c) = operands(m, n, k, 43);
+        let want = base.execute(&[a.clone(), b.clone(), c.clone()]).unwrap();
+        let pool = ShardPool::homogeneous(&DeviceModel::rtx3090(), 4);
+        let request_plan = base.compile_plan(&PlanEnv::for_pool(4)).unwrap();
+        let bound = Arc::new(base.bind_b(&b, &request_plan).unwrap());
+        let plan = ShardPlan::rows(m, n, k, pool.devices(), 1);
+        let got = pool.execute_bound(&base, &plan, &a, &c, None, &bound).unwrap();
+        assert_eq!(got.data, want[0].data);
+        pool.shutdown();
     }
 
     #[test]

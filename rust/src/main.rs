@@ -41,6 +41,7 @@ const SPEC: &[Spec] = &[
     ("workers", true, "serve: worker threads (default 2)"),
     ("devices", true, "serve: device contexts; >1 shards large GEMMs (default 1)"),
     ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]] (was --kernel)"),
+    ("bind", false, "serve: bind each shape's B as a constant weight at startup; traffic then ships A (+C) only"),
     ("refine", false, "plan: measured refinement pass over the compiled plan"),
     ("target", true, "autotune: gpu (modeled tile space) | cpu (measured block sweep); default gpu"),
     ("threads", true, "autotune --target cpu: threads for the threaded policy (default auto)"),
@@ -449,6 +450,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 2)?;
     let devices = args.get_usize("devices", 1)?;
     let plan = plan_override(args)?;
+    let bind = args.flag("bind");
 
     let mut server = Server::start(
         rt.clone(),
@@ -466,18 +468,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if keys.is_empty() {
         bail!("no generated kernels registered (build artifacts first)");
     }
+    let mut rng = Rng::new(99);
+    if bind {
+        // Model-serving mode: every shape's B is a constant weight,
+        // bound (cast + prepacked) once before traffic starts.
+        for key in &keys {
+            let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?;
+            server.bind_weights(key, &b)?;
+        }
+        println!("bound constant B weights for {} shapes", keys.len());
+    }
     println!(
-        "serving {} synthetic requests over {} shapes with {} workers...",
+        "serving {} synthetic requests over {} shapes with {} workers{}...",
         n_requests,
         keys.len(),
-        workers
+        workers,
+        if bind { " (weight-bound)" } else { "" }
     );
-    let mut rng = Rng::new(99);
     let mut pending = Vec::new();
     for _ in 0..n_requests {
         let key = rng.choice(&keys).clone();
         let a = Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k))?;
-        let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?;
+        let b = if bind {
+            None
+        } else {
+            Some(Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?)
+        };
         let c = Tensor::zeros(vec![key.m, key.n]);
         let bias = if key.epilogue != "none" {
             Some(Tensor::new(vec![key.n], rng.normal_matrix(1, key.n))?)

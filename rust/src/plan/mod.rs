@@ -33,7 +33,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::kernel::{self, Blocking, KernelPolicy, MR};
+use crate::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, MR, PrepackedB};
 use crate::schedule::Dtype;
 use crate::util::json::{self, Json};
 
@@ -209,6 +209,12 @@ pub struct ExecutionPlan {
     /// per element, after the full k-reduction); `false` also covers the
     /// deliberately-unfused Table 1 comparator.
     pub fuse_epilogue: bool,
+    /// Materialize a bound (constant) B into kernel panel layout once at
+    /// bind time ([`ExecutionPlan::prepack_b`]) instead of re-running
+    /// `pack_b` per call.  Pass 5's decision; true exactly when the
+    /// lowered kernel packs B.  Packing is a pure i/j rearrangement, so
+    /// prepacked execution is bit-identical to packing per call.
+    pub prepack: bool,
     /// Coarse host cost estimate (the `mlir-gemm plan` command prints it
     /// next to a measurement).
     pub predicted_seconds: f64,
@@ -285,6 +291,7 @@ impl ExecutionPlan {
             epilogue: key.epilogue.clone(),
             kernel,
             fuse_epilogue,
+            prepack: !matches!(kernel, KernelPolicy::Naive),
             predicted_seconds: predict_seconds(key, &kernel),
             trace: vec![trace(
                 "manual",
@@ -313,6 +320,41 @@ impl ExecutionPlan {
         kernel::matmul_fused(self.kernel, out, a, b, self.m, self.n, self.k, tail);
     }
 
+    /// [`ExecutionPlan::matmul`] over an explicit [`BOperand`] — the
+    /// weight-bound hot path hands the bind-time panels through here.
+    pub fn matmul_b(&self, out: &mut [f32], a: &[f32], b: BOperand) {
+        kernel::matmul_b(self.kernel, out, a, b, self.m, self.n, self.k);
+    }
+
+    /// [`ExecutionPlan::matmul_fused`] over an explicit [`BOperand`].
+    pub fn matmul_fused_b(
+        &self,
+        out: &mut [f32],
+        a: &[f32],
+        b: BOperand,
+        tail: &(dyn Fn(&mut [f32]) + Sync),
+    ) {
+        kernel::matmul_fused_b(self.kernel, out, a, b, self.m, self.n, self.k, tail);
+    }
+
+    /// Materialize a constant B into panel layout for this plan's
+    /// kernel, or `None` when the prepack pass decided against it (the
+    /// direct kernel streams B unpacked, so panels would be dead
+    /// weight).  `b` must already carry the plan's `dtype_in` rounding —
+    /// callers cast once at bind time, exactly like the per-call path
+    /// casts before packing, so the panel bits match packing per call.
+    pub fn prepack_b(&self, b: &[f32]) -> Option<PrepackedB> {
+        if !self.prepack {
+            return None;
+        }
+        match self.kernel {
+            KernelPolicy::Naive => None,
+            KernelPolicy::Tiled(bs) | KernelPolicy::Threaded(bs, _) => {
+                Some(PrepackedB::pack(b, self.k, self.n, bs))
+            }
+        }
+    }
+
     // -- JSON (inspectability contract) ---------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -337,6 +379,7 @@ impl ExecutionPlan {
             ("epilogue", json::s(&self.epilogue)),
             ("kernel", json::s(&self.kernel.name())),
             ("fuse_epilogue", Json::Bool(self.fuse_epilogue)),
+            ("prepack", Json::Bool(self.prepack)),
             ("predicted_seconds", json::num(self.predicted_seconds)),
             ("trace", Json::Arr(trace)),
         ])
@@ -393,6 +436,9 @@ impl ExecutionPlan {
                 .get("fuse_epilogue")
                 .and_then(Json::as_bool)
                 .ok_or_else(|| anyhow!("plan missing fuse_epilogue"))?,
+            // Absent in pre-prepack plan files: default off (speed-only —
+            // a missing flag can never change bits).
+            prepack: j.get("prepack").and_then(Json::as_bool).unwrap_or(false),
             predicted_seconds: j
                 .get("predicted_seconds")
                 .and_then(Json::as_f64)
@@ -616,6 +662,34 @@ fn pass_epilogue(key: &GemmKey) -> (bool, PassTrace) {
     (fuse, t)
 }
 
+/// Pass 5 — prepack: when a B operand is *bound* (a constant weight
+/// served to many requests), should its panels be materialized once at
+/// bind time?  By the same traffic model as tile selection, the per-call
+/// packing cost is one full copy of B (`k*n` elements) plus the request
+/// payload that shipped it; the direct (naive) kernel streams B unpacked
+/// and would never read panels, so prepacking follows the packing
+/// decision exactly: panels iff the lowered kernel packs.
+fn pass_prepack(key: &GemmKey, kernel: &KernelPolicy) -> (bool, PassTrace) {
+    let packs = !matches!(kernel, KernelPolicy::Naive);
+    let panel_bytes = 4 * key.k * key.n;
+    let t = trace(
+        "prepack",
+        if packs { "prepack B panels at bind" } else { "no prepack" }.to_string(),
+        if packs {
+            format!(
+                "lowered kernel packs B per call: binding saves the {panel_bytes} B \
+                 panel copy (and the operand payload) on every request"
+            )
+        } else {
+            format!(
+                "direct kernel streams B unpacked; {panel_bytes} B of panels would \
+                 be dead weight"
+            )
+        },
+    );
+    (packs, t)
+}
+
 /// Coarse host cost estimate used for predicted-vs-measured reporting;
 /// deliberately simple (effective GFLOP/s per kernel class).
 fn predict_seconds(key: &GemmKey, kernel: &KernelPolicy) -> f64 {
@@ -640,7 +714,7 @@ pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
             Some(p)
         }
     };
-    let mut plan_trace = Vec::with_capacity(4);
+    let mut plan_trace = Vec::with_capacity(5);
     let (blocking, t1) = pass_tile_selection(key, env, forced);
     plan_trace.push(t1);
     let (packed, t2) = pass_packing(key, env, forced);
@@ -655,6 +729,8 @@ pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
         None if bands > 1 => KernelPolicy::Threaded(blocking, bands),
         None => KernelPolicy::Tiled(blocking),
     };
+    let (prepack, t5) = pass_prepack(key, &kernel);
+    plan_trace.push(t5);
     Ok(ExecutionPlan {
         m: key.m,
         n: key.n,
@@ -664,6 +740,7 @@ pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
         epilogue: key.epilogue.clone(),
         kernel,
         fuse_epilogue,
+        prepack,
         predicted_seconds: predict_seconds(key, &kernel),
         trace: plan_trace,
     })
@@ -678,13 +755,16 @@ mod tests {
         let plan = compile(&GemmKey::plain(64, 64, 64), &PlanEnv::pinned()).unwrap();
         assert_eq!(plan.kernel, KernelPolicy::Naive);
         assert!(!plan.fuse_epilogue);
-        assert_eq!(plan.trace.len(), 4);
+        assert!(!plan.prepack, "direct kernels never prepack");
+        assert_eq!(plan.trace.len(), 5);
         assert!(plan.trace[1].decision.contains("direct"), "{:?}", plan.trace[1]);
+        assert_eq!(plan.trace[4].pass, "prepack");
     }
 
     #[test]
     fn large_problem_compiles_to_threaded_tiled_plan() {
         let plan = compile(&GemmKey::plain(1024, 1024, 1024), &PlanEnv::pinned()).unwrap();
+        assert!(plan.prepack, "packing kernels prepack bound weights");
         match plan.kernel {
             KernelPolicy::Threaded(b, t) => {
                 assert_eq!(t, 4, "pinned env has 4 hw threads");
@@ -795,6 +875,32 @@ mod tests {
         let plan = ExecutionPlan::manual(&key, KernelPolicy::Naive, false).unwrap();
         assert!(plan.matches_gemm(32, 32, 32, Dtype::F16, Dtype::F32, "none"));
         assert!(!plan.matches_gemm(32, 32, 33, Dtype::F16, Dtype::F32, "none"));
+    }
+
+    #[test]
+    fn prepack_b_follows_the_pass_decision_and_matches_per_call_packing() {
+        use crate::util::prng::Rng;
+        // Direct plan: no panels.
+        let naive = compile(&GemmKey::plain(16, 16, 16), &PlanEnv::pinned()).unwrap();
+        assert!(naive.prepack_b(&vec![0.0; 16 * 16]).is_none());
+        // Packed plan: panels exist and execute bit-identically to raw B.
+        let key = GemmKey::with_dtypes(40, 24, 32, Dtype::F32, Dtype::F32);
+        let env = PlanEnv::pinned()
+            .with_force(PlanOverride::parse("tiled:8,4,16").unwrap());
+        let plan = compile(&key, &env).unwrap();
+        assert!(plan.prepack);
+        let mut rng = Rng::new(0x9E);
+        let a = rng.normal_matrix(40, 32);
+        let b = rng.normal_matrix(32, 24);
+        let pre = plan.prepack_b(&b).expect("packed plan prepacks");
+        let mut want = vec![0.0f32; 40 * 24];
+        plan.matmul(&mut want, &a, &b);
+        let mut got = vec![0.0f32; 40 * 24];
+        plan.matmul_b(&mut got, &a, BOperand::Prepacked(&pre));
+        assert!(
+            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+            "prepacked plan execution drifted"
+        );
     }
 
     #[test]

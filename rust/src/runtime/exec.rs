@@ -21,6 +21,7 @@
 use std::borrow::Cow;
 
 use crate::plan::{self, ExecutionPlan, GemmKey, PlanEnv};
+use crate::runtime::kernel::{BOperand, PrepackedB};
 use crate::schedule::Dtype;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Result};
@@ -29,6 +30,12 @@ use super::Tensor;
 
 /// Format tag every artifact program file must carry.
 pub const TPROG_FORMAT: &str = "mlir-gemm-tprog-v1";
+
+/// Input slot of a GEMM program's B operand — the slot a weight bind
+/// replaces.  Every layer that derives the weight-bound input form from
+/// the full contract (program shapes, manifest specs, server batches)
+/// shares this one definition so they cannot drift.
+pub const GEMM_B_INPUT_SLOT: usize = 1;
 
 // ---------------------------------------------------------------------------
 // Precision emulation
@@ -216,7 +223,7 @@ fn run_planned_gemm(
     eplan: &ExecutionPlan,
     acc: &mut [f32],
     a: &[f32],
-    b: &[f32],
+    b: BOperand,
     bias: Option<&[f32]>,
     n: usize,
     dtype_acc: Dtype,
@@ -224,13 +231,71 @@ fn run_planned_gemm(
     fused: bool,
 ) {
     if eplan.fuse_epilogue && fused {
-        eplan.matmul_fused(acc, a, b, &|band: &mut [f32]| {
+        eplan.matmul_fused_b(acc, a, b, &|band: &mut [f32]| {
             gemm_tail(band, bias, n, dtype_acc, epilogue, fused)
         });
     } else {
-        eplan.matmul(acc, a, b);
+        eplan.matmul_b(acc, a, b);
         gemm_tail(acc, bias, n, dtype_acc, epilogue, fused);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Bound weights
+// ---------------------------------------------------------------------------
+
+/// A constant B operand bound to a GEMM variant: precision-cast to the
+/// program's `dtype_in` once at bind time and — when the plan's prepack
+/// pass says so — materialized into kernel panel layout
+/// ([`PrepackedB`]), then shared immutably across every request.  The
+/// per-call path casts then packs per request; binding does both once.
+/// Both steps are elementwise/rearrangement-only, so weight-bound
+/// execution is bit-identical to shipping the same B inline.
+#[derive(Debug, Clone)]
+pub struct BoundB {
+    /// The `dtype_in`-rounded B, row-major: the raw operand when no
+    /// panels exist (direct-kernel plans) and the split-K slicing
+    /// source for sharded execution.
+    b: Vec<f32>,
+    prepacked: Option<PrepackedB>,
+    k: usize,
+    n: usize,
+}
+
+impl BoundB {
+    /// The kernel-facing operand: panels when prepacked, the cast raw
+    /// slice otherwise.
+    pub fn operand(&self) -> BOperand<'_> {
+        match &self.prepacked {
+            Some(pre) => BOperand::Prepacked(pre),
+            None => BOperand::Raw(&self.b),
+        }
+    }
+
+    pub fn is_prepacked(&self) -> bool {
+        self.prepacked.is_some()
+    }
+
+    /// The cast (but unpacked) B, row-major k x n.
+    pub fn raw(&self) -> &[f32] {
+        &self.b
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Cast a weight to `dtype_in` and prepack it under `plan` — the one
+/// bind-time construction shared by GEMM and transformer binding.
+fn bind_weight(plan: &ExecutionPlan, w: &[f32], dtype_in: Dtype) -> BoundB {
+    let cast = cast_owned(dtype_in, w);
+    let prepacked = plan.prepack_b(&cast);
+    BoundB { b: cast, prepacked, k: plan.k, n: plan.n }
 }
 
 // ---------------------------------------------------------------------------
@@ -381,27 +446,21 @@ impl Program {
         }
     }
 
+    /// Input shapes of the weight-bound request form: the full contract
+    /// minus the B operand (bound once per variant instead of shipped
+    /// per request).  GEMM programs only.
+    pub fn bound_input_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = self.input_shapes();
+        if matches!(self, Program::Gemm { .. }) {
+            shapes.remove(GEMM_B_INPUT_SLOT);
+        }
+        shapes
+    }
+
     /// Validate inputs against the program's own contract (the runtime
     /// additionally validates against the manifest before calling in).
     fn validate_inputs(&self, inputs: &[Tensor]) -> Result<()> {
-        let want = self.input_shapes();
-        if inputs.len() != want.len() {
-            bail!("program expects {} inputs, got {}", want.len(), inputs.len());
-        }
-        for (i, (t, w)) in inputs.iter().zip(&want).enumerate() {
-            if &t.shape != w {
-                bail!("program input {i} has shape {:?}, want {w:?}", t.shape);
-            }
-            let want_len: usize = w.iter().product();
-            if t.data.len() != want_len {
-                bail!(
-                    "program input {i} has {} elements for shape {:?}",
-                    t.data.len(),
-                    t.shape
-                );
-            }
-        }
-        Ok(())
+        validate_against(inputs, &self.input_shapes())
     }
 
     /// The GEMM routing/compilation key of this program (`None` for
@@ -487,6 +546,144 @@ impl Program {
             fused,
         );
         Ok(vec![Tensor { shape: vec![m, n], data: out }])
+    }
+
+    /// Bind a constant B for this GEMM program: validate its shape
+    /// against the contract (rejected here, at bind time — never at
+    /// request time), cast it to `dtype_in` once, and prepack its panels
+    /// when `eplan` says so.
+    pub fn bind_b(&self, b: &Tensor, eplan: &ExecutionPlan) -> Result<BoundB> {
+        let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, .. } = *self else {
+            bail!("only gemm programs bind a B weight; see bind_transformer_weights");
+        };
+        if !eplan.matches_gemm(m, n, k, dtype_in, dtype_acc, epilogue.name()) {
+            bail!(
+                "plan {} does not match program {m}x{n}x{k} for weight binding",
+                eplan.id()
+            );
+        }
+        if b.shape != [k, n] || b.data.len() != k * n {
+            bail!(
+                "bound B has shape {:?} ({} elements), program wants [{k}, {n}]",
+                b.shape,
+                b.data.len()
+            );
+        }
+        Ok(bind_weight(eplan, &b.data, dtype_in))
+    }
+
+    /// [`Program::execute_planned`] for a weight-bound request: `inputs`
+    /// is the A + C (+ bias) form — the B operand comes from `bound`,
+    /// already cast and (when the plan prepacks) already in panel
+    /// layout.  Bit-identical to [`Program::execute_planned`] with the
+    /// same B shipped inline.
+    pub fn execute_planned_bound(
+        &self,
+        inputs: &[Tensor],
+        eplan: &ExecutionPlan,
+        bound: &BoundB,
+    ) -> Result<Vec<Tensor>> {
+        let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self else {
+            bail!("execute_planned_bound is for gemm programs");
+        };
+        validate_against(inputs, &self.bound_input_shapes())?;
+        if !eplan.matches_gemm(m, n, k, dtype_in, dtype_acc, epilogue.name()) {
+            bail!(
+                "plan {} does not match program {m}x{n}x{k} {}->{} epilogue {}",
+                eplan.id(),
+                dtype_in.name(),
+                dtype_acc.name(),
+                epilogue.name()
+            );
+        }
+        if (bound.k, bound.n) != (k, n) {
+            bail!(
+                "bound weights are {}x{}, program wants {k}x{n}",
+                bound.k,
+                bound.n
+            );
+        }
+        let a16 = cast_slice(dtype_in, &inputs[0].data);
+        let mut acc = cast_owned(dtype_acc, &inputs[1].data);
+        run_planned_gemm(
+            eplan,
+            &mut acc,
+            &a16,
+            bound.operand(),
+            inputs.get(2).map(|t| t.data.as_slice()),
+            n,
+            dtype_acc,
+            epilogue,
+            fused,
+        );
+        Ok(vec![Tensor { shape: vec![m, n], data: acc }])
+    }
+
+    /// [`Program::execute_batch_planned`] for a weight-bound batch: A
+    /// and C stack and cast once across the batch, and B is neither
+    /// shipped, cast, nor packed at all — every item consumes the one
+    /// shared bind-time operand.
+    pub fn execute_batch_planned_bound(
+        &self,
+        items: &[Vec<Tensor>],
+        eplan: &ExecutionPlan,
+        bound: &BoundB,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self else {
+            bail!("execute_batch_planned_bound is for gemm programs");
+        };
+        if items.len() < 2 {
+            return items
+                .iter()
+                .map(|inputs| self.execute_planned_bound(inputs, eplan, bound))
+                .collect();
+        }
+        if !eplan.matches_gemm(m, n, k, dtype_in, dtype_acc, epilogue.name()) {
+            bail!(
+                "plan {} does not match program {m}x{n}x{k} {}->{} epilogue {}",
+                eplan.id(),
+                dtype_in.name(),
+                dtype_acc.name(),
+                epilogue.name()
+            );
+        }
+        if (bound.k, bound.n) != (k, n) {
+            bail!(
+                "bound weights are {}x{}, program wants {k}x{n}",
+                bound.k,
+                bound.n
+            );
+        }
+        let want = self.bound_input_shapes();
+        for (bi, inputs) in items.iter().enumerate() {
+            validate_against(inputs, &want)
+                .map_err(|e| anyhow!("batch item {bi}: {e}"))?;
+        }
+        let bsz = items.len();
+        let mut a_s = Vec::with_capacity(bsz * m * k);
+        let mut acc_s = Vec::with_capacity(bsz * m * n);
+        for inputs in items {
+            cast_extend(dtype_in, &mut a_s, &inputs[0].data);
+            cast_extend(dtype_acc, &mut acc_s, &inputs[1].data);
+        }
+        let mut outs = Vec::with_capacity(bsz);
+        for (bi, inputs) in items.iter().enumerate() {
+            let a = &a_s[bi * m * k..(bi + 1) * m * k];
+            let acc = &mut acc_s[bi * m * n..(bi + 1) * m * n];
+            run_planned_gemm(
+                eplan,
+                acc,
+                a,
+                bound.operand(),
+                inputs.get(2).map(|t| t.data.as_slice()),
+                n,
+                dtype_acc,
+                epilogue,
+                fused,
+            );
+            outs.push(vec![Tensor { shape: vec![m, n], data: acc.to_vec() }]);
+        }
+        Ok(outs)
     }
 
     /// Execute a whole same-program batch in one call, under the default
@@ -584,7 +781,7 @@ impl Program {
                 eplan,
                 acc,
                 a,
-                b,
+                BOperand::Raw(b),
                 inputs.get(3).map(|t| t.data.as_slice()),
                 n,
                 dtype_acc,
@@ -595,6 +792,28 @@ impl Program {
         }
         Ok(outs)
     }
+}
+
+/// Shape/length validation of a tensor list against an expected-shape
+/// list (the program contract, full or weight-bound form).
+fn validate_against(inputs: &[Tensor], want: &[Vec<usize>]) -> Result<()> {
+    if inputs.len() != want.len() {
+        bail!("program expects {} inputs, got {}", want.len(), inputs.len());
+    }
+    for (i, (t, w)) in inputs.iter().zip(want).enumerate() {
+        if &t.shape != w {
+            bail!("program input {i} has shape {:?}, want {w:?}", t.shape);
+        }
+        let want_len: usize = w.iter().product();
+        if t.data.len() != want_len {
+            bail!(
+                "program input {i} has {} elements for shape {:?}",
+                t.data.len(),
+                t.shape
+            );
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -661,18 +880,138 @@ fn exec_gemm(
     let a16 = cast_slice(dtype_in, a);
     let b16 = cast_slice(dtype_in, b);
     let mut acc = cast_owned(dtype_acc, c);
-    run_planned_gemm(eplan, &mut acc, &a16, &b16, bias, n, dtype_acc, epilogue, fused);
+    run_planned_gemm(
+        eplan,
+        &mut acc,
+        &a16,
+        BOperand::Raw(&b16[..]),
+        bias,
+        n,
+        dtype_acc,
+        epilogue,
+        fused,
+    );
     acc
 }
 
-/// GEMM with inputs rounded to `dtype_in`, f32 accumulate, no C term —
-/// dimensions come from the plan.
-fn gemm_cast(eplan: &ExecutionPlan, a: &[f32], b: &[f32], dtype_in: Dtype) -> Vec<f32> {
-    let a16 = cast_slice(dtype_in, a);
-    let b16 = cast_slice(dtype_in, b);
-    let mut out = vec![0.0f32; eplan.m * eplan.n];
-    eplan.matmul(&mut out, &a16, &b16);
-    out
+/// Transformer weights bound once at load: the four pipeline-GEMM
+/// weights (`w_qkv`, `w_out`, `w_up`, `w_dn`) are `dtype_in`-cast and
+/// prepacked under their internal plans, the bias vectors are copied
+/// through, and [`Program::execute_transformer_bound`] then serves any
+/// number of activations against the shared panels — bit-identical to
+/// [`Program::execute_with_env`] with the weights shipped per call
+/// (pinned by the test below).
+#[derive(Debug, Clone)]
+pub struct TransformerBound {
+    w_qkv: BoundB,
+    w_out: BoundB,
+    w_up: BoundB,
+    w_dn: BoundB,
+    b_up: Vec<f32>,
+    b_dn: Vec<f32>,
+    qkv_plan: ExecutionPlan,
+    attn_plan: ExecutionPlan,
+    up_plan: ExecutionPlan,
+    dn_plan: ExecutionPlan,
+    /// For the per-call attention plans (no weights to bind there).
+    env: PlanEnv,
+}
+
+impl Program {
+    /// Bind a transformer's weights once: `weights` is the input list
+    /// minus the leading activation (`w_qkv, w_out, w_up, b_up, w_dn,
+    /// b_dn`, the order of [`Program::input_shapes`]).
+    pub fn bind_transformer_weights(
+        &self,
+        weights: &[Tensor],
+        env: &PlanEnv,
+    ) -> Result<TransformerBound> {
+        let Program::Transformer { seq, d_model, d_ff, dtype_in, .. } = *self else {
+            bail!("bind_transformer_weights is for transformer programs");
+        };
+        let all_shapes = self.input_shapes();
+        validate_against(weights, &all_shapes[1..])
+            .map_err(|e| anyhow!("transformer weights: {e}"))?;
+        let d3 = 3 * d_model;
+        let qkv_plan = internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env);
+        let attn_plan = internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env);
+        let up_plan = internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env);
+        let dn_plan = internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env);
+        Ok(TransformerBound {
+            w_qkv: bind_weight(&qkv_plan, &weights[0].data, dtype_in),
+            w_out: bind_weight(&attn_plan, &weights[1].data, dtype_in),
+            w_up: bind_weight(&up_plan, &weights[2].data, dtype_in),
+            w_dn: bind_weight(&dn_plan, &weights[4].data, dtype_in),
+            b_up: weights[3].data.clone(),
+            b_dn: weights[5].data.clone(),
+            qkv_plan,
+            attn_plan,
+            up_plan,
+            dn_plan,
+            env: env.clone(),
+        })
+    }
+
+    /// Execute the transformer against weights bound at load: only the
+    /// activation travels per call.
+    pub fn execute_transformer_bound(
+        &self,
+        x: &Tensor,
+        bound: &TransformerBound,
+    ) -> Result<Vec<Tensor>> {
+        let Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } = *self else {
+            bail!("execute_transformer_bound is for transformer programs");
+        };
+        if x.shape != [seq, d_model] || x.data.len() != seq * d_model {
+            bail!(
+                "activation has shape {:?} ({} elements), want [{seq}, {d_model}]",
+                x.shape,
+                x.data.len()
+            );
+        }
+        // Weight shapes are seq-independent, so the binding's plans must
+        // be checked too: a bind from a different-seq program would
+        // otherwise pass here and assert deep in the kernel.
+        if bound.qkv_plan.m != seq || (bound.w_qkv.k, bound.w_up.n) != (d_model, d_ff)
+        {
+            bail!("bound transformer weights do not match this program's shape");
+        }
+        let out = exec_transformer_core(
+            &x.data,
+            TfWeights {
+                w_qkv: bound.w_qkv.operand(),
+                w_out: bound.w_out.operand(),
+                w_up: bound.w_up.operand(),
+                w_dn: bound.w_dn.operand(),
+                cast_weights: false,
+                b_up: &bound.b_up,
+                b_dn: &bound.b_dn,
+            },
+            Some([&bound.qkv_plan, &bound.attn_plan, &bound.up_plan, &bound.dn_plan]),
+            seq,
+            d_model,
+            d_ff,
+            n_heads,
+            dtype_in,
+            &bound.env,
+        );
+        Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
+    }
+}
+
+/// The transformer's weight operands, raw-per-call or bound-at-load.
+struct TfWeights<'a> {
+    w_qkv: BOperand<'a>,
+    w_out: BOperand<'a>,
+    w_up: BOperand<'a>,
+    w_dn: BOperand<'a>,
+    /// Cast raw weights to `dtype_in` before each GEMM.  False for
+    /// bound weights, which were cast at bind time (the cast is
+    /// idempotent, so either way yields the same bits — skipping it
+    /// just saves work).
+    cast_weights: bool,
+    b_up: &'a [f32],
+    b_dn: &'a [f32],
 }
 
 /// Mirror of `python/compile/model.py::transformer_layer` (f32 host math,
@@ -688,27 +1027,87 @@ fn exec_transformer(
     dtype_in: Dtype,
     env: &PlanEnv,
 ) -> Vec<f32> {
-    let x = &inputs[0].data;
-    let w_qkv = &inputs[1].data;
-    let w_out = &inputs[2].data;
-    let w_up = &inputs[3].data;
-    let b_up = &inputs[4].data;
-    let w_dn = &inputs[5].data;
-    let b_dn = &inputs[6].data;
+    exec_transformer_core(
+        &inputs[0].data,
+        TfWeights {
+            w_qkv: BOperand::Raw(&inputs[1].data),
+            w_out: BOperand::Raw(&inputs[2].data),
+            w_up: BOperand::Raw(&inputs[3].data),
+            w_dn: BOperand::Raw(&inputs[5].data),
+            cast_weights: true,
+            b_up: &inputs[4].data,
+            b_dn: &inputs[6].data,
+        },
+        None,
+        seq,
+        d_model,
+        d_ff,
+        n_heads,
+        dtype_in,
+        env,
+    )
+}
+
+/// The transformer body, shared by the per-call and weight-bound entry
+/// points.  `weight_plans` is `[qkv, attn-out, ffn-up, ffn-dn]` when the
+/// caller bound them at load; otherwise they compile here from `env`
+/// (deterministic, so both paths run identical plans).
+#[allow(clippy::too_many_arguments)]
+fn exec_transformer_core(
+    x: &[f32],
+    w: TfWeights,
+    weight_plans: Option<[&ExecutionPlan; 4]>,
+    seq: usize,
+    d_model: usize,
+    d_ff: usize,
+    n_heads: usize,
+    dtype_in: Dtype,
+    env: &PlanEnv,
+) -> Vec<f32> {
+    let b_up = w.b_up;
+    let b_dn = w.b_dn;
     let d_head = d_model / n_heads;
     let d3 = 3 * d_model;
 
     // One compiled plan per internal GEMM shape (the attention plans are
     // reused across heads).
-    let qkv_plan = internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env);
+    let compiled;
+    let [qkv_plan, attn_plan, up_plan, dn_plan] = match weight_plans {
+        Some(plans) => plans,
+        None => {
+            compiled = [
+                internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env),
+                internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env),
+                internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env),
+                internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env),
+            ];
+            [&compiled[0], &compiled[1], &compiled[2], &compiled[3]]
+        }
+    };
     let scores_plan = internal_plan(seq, seq, d_head, Dtype::F32, Dtype::F32, env);
     let ctx_plan = internal_plan(seq, d_head, seq, Dtype::F32, Dtype::F32, env);
-    let attn_plan = internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env);
-    let up_plan = internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env);
-    let dn_plan = internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env);
+
+    // One pipeline GEMM: cast the activation, cast the weight when it is
+    // still raw, run under the compiled plan.
+    let gemm_w = |eplan: &ExecutionPlan, a: &[f32], wop: BOperand| -> Vec<f32> {
+        let a16 = cast_slice(dtype_in, a);
+        let mut out = vec![0.0f32; eplan.m * eplan.n];
+        match wop {
+            BOperand::Raw(wr) if !w.cast_weights => {
+                // Bound-without-panels weights: already cast at bind.
+                eplan.matmul_b(&mut out, &a16, BOperand::Raw(wr));
+            }
+            BOperand::Raw(wr) => {
+                let w16 = cast_slice(dtype_in, wr);
+                eplan.matmul_b(&mut out, &a16, BOperand::Raw(&w16[..]));
+            }
+            pre => eplan.matmul_b(&mut out, &a16, pre),
+        }
+        out
+    };
 
     // QKV projection.
-    let qkv = gemm_cast(&qkv_plan, x, w_qkv, dtype_in);
+    let qkv = gemm_w(qkv_plan, x, w.w_qkv);
 
     // Scaled dot-product attention per head (plain f32, like the jnp
     // glue).  Both attention GEMMs — scores = Q_h @ K_h^T and
@@ -763,7 +1162,7 @@ fn exec_transformer(
     }
 
     // Attention output projection + residual.
-    let attn_out = gemm_cast(&attn_plan, &ctx, w_out, dtype_in);
+    let attn_out = gemm_w(attn_plan, &ctx, w.w_out);
     let mut h_res = vec![0.0f32; seq * d_model];
     for ((hv, &xv), &av) in h_res.iter_mut().zip(x).zip(&attn_out) {
         *hv = xv + av;
@@ -782,13 +1181,13 @@ fn exec_transformer(
     }
 
     // FFN up (fused bias+ReLU) and down (fused bias), then the residual.
-    let mut up = gemm_cast(&up_plan, &hn, w_up, dtype_in);
+    let mut up = gemm_w(up_plan, &hn, w.w_up);
     for row in up.chunks_mut(d_ff) {
         for (v, &bv) in row.iter_mut().zip(b_up) {
             *v = (*v + bv).max(0.0);
         }
     }
-    let mut dn = gemm_cast(&dn_plan, &up, w_dn, dtype_in);
+    let mut dn = gemm_w(dn_plan, &up, w.w_dn);
     for row in dn.chunks_mut(d_model) {
         for (v, &bv) in row.iter_mut().zip(b_dn) {
             *v += bv;
@@ -1181,6 +1580,156 @@ mod tests {
         assert!(p.execute_batch(&[good, bad]).is_err());
     }
 
+    // -- weight binding ------------------------------------------------------
+
+    #[test]
+    fn bound_execution_bit_identical_to_inline_b() {
+        use crate::plan::PlanOverride;
+        // Both plan classes: forced tiled (prepacks panels) and the
+        // auto direct kernel at this size (no panels, raw cast B).
+        let envs = [
+            PlanEnv::pinned().with_force(PlanOverride::parse("tiled:8,4,16").unwrap()),
+            PlanEnv::pinned(),
+            PlanEnv::pinned()
+                .with_force(PlanOverride::parse("threaded:8,8,16,2").unwrap()),
+        ];
+        for &(din, dacc) in &[
+            (Dtype::F32, Dtype::F32),
+            (Dtype::F16, Dtype::F32),
+            (Dtype::F16, Dtype::F16),
+            (Dtype::Bf16, Dtype::F32),
+        ] {
+            let (m, n, k) = (13, 9, 11);
+            let p = Program::Gemm {
+                m,
+                n,
+                k,
+                dtype_in: din,
+                dtype_acc: dacc,
+                epilogue: Epilogue::BiasRelu,
+                fused: true,
+            };
+            let mut rng = Rng::new(0xB1D + din.name().len() as u64);
+            let a = t(vec![m, k], rng.normal_matrix(m, k));
+            let b = t(vec![k, n], rng.normal_matrix(k, n));
+            let c = t(vec![m, n], rng.normal_matrix(m, n));
+            let bias = t(vec![n], rng.normal_matrix(1, n));
+            for env in &envs {
+                let eplan = p.compile_plan(env).unwrap();
+                let want = p
+                    .execute_planned(
+                        &[a.clone(), b.clone(), c.clone(), bias.clone()],
+                        &eplan,
+                    )
+                    .unwrap();
+                let bound = p.bind_b(&b, &eplan).unwrap();
+                let got = p
+                    .execute_planned_bound(
+                        &[a.clone(), c.clone(), bias.clone()],
+                        &eplan,
+                        &bound,
+                    )
+                    .unwrap();
+                assert_eq!(want[0].shape, got[0].shape);
+                for (i, (w, g)) in want[0].data.iter().zip(&got[0].data).enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "{din:?}/{dacc:?} under {} drifted at {i}: {w} vs {g}",
+                        eplan.id()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_batch_bit_identical_to_inline_batch() {
+        use crate::plan::{compile, GemmKey, PlanOverride};
+        let (m, n, k) = (8, 8, 8);
+        let p = Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::Bias,
+            fused: true,
+        };
+        let key = GemmKey {
+            m,
+            n,
+            k,
+            dtype_in: Dtype::F16,
+            dtype_acc: Dtype::F32,
+            epilogue: "bias".into(),
+        };
+        let env =
+            PlanEnv::pinned().with_force(PlanOverride::parse("tiled:4,4,4").unwrap());
+        let eplan = compile(&key, &env).unwrap();
+        let mut rng = Rng::new(31);
+        let b = t(vec![k, n], rng.normal_matrix(k, n));
+        let items_inline: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| {
+                vec![
+                    t(vec![m, k], rng.normal_matrix(m, k)),
+                    b.clone(),
+                    t(vec![m, n], rng.normal_matrix(m, n)),
+                    t(vec![n], rng.normal_matrix(1, n)),
+                ]
+            })
+            .collect();
+        let want = p.execute_batch_planned(&items_inline, &eplan).unwrap();
+        let bound = p.bind_b(&b, &eplan).unwrap();
+        assert!(bound.is_prepacked(), "tiled plan must prepack");
+        let items_bound: Vec<Vec<Tensor>> = items_inline
+            .iter()
+            .map(|v| vec![v[0].clone(), v[2].clone(), v[3].clone()])
+            .collect();
+        let got = p
+            .execute_batch_planned_bound(&items_bound, &eplan, &bound)
+            .unwrap();
+        for (bi, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w[0].data, g[0].data, "batch item {bi} drifted");
+        }
+    }
+
+    #[test]
+    fn bind_b_rejects_shape_mismatch_and_wrong_program() {
+        let p = Program::Gemm {
+            m: 4,
+            n: 4,
+            k: 4,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let eplan = p.compile_plan(&PlanEnv::pinned()).unwrap();
+        assert!(p.bind_b(&t(vec![4, 4], vec![0.0; 16]), &eplan).is_ok());
+        // wrong shape: rejected at bind time
+        assert!(p.bind_b(&t(vec![4, 5], vec![0.0; 20]), &eplan).is_err());
+        // torn tensor (shape/data mismatch via pub fields)
+        let torn = Tensor { shape: vec![4, 4], data: vec![0.0; 3] };
+        assert!(p.bind_b(&torn, &eplan).is_err());
+        // mismatched plan
+        let other = Program::Gemm {
+            m: 8,
+            n: 8,
+            k: 8,
+            dtype_in: Dtype::F32,
+            dtype_acc: Dtype::F32,
+            epilogue: Epilogue::None,
+            fused: true,
+        };
+        let other_plan = other.compile_plan(&PlanEnv::pinned()).unwrap();
+        assert!(p.bind_b(&t(vec![4, 4], vec![0.0; 16]), &other_plan).is_err());
+        // transformer programs take the transformer binding path
+        assert!(transformer_program()
+            .bind_b(&t(vec![4, 4], vec![0.0; 16]), &eplan)
+            .is_err());
+    }
+
     // -- transformer ---------------------------------------------------------
 
     fn transformer_inputs(seq: usize, d_model: usize, d_ff: usize, seed: u64) -> Vec<Tensor> {
@@ -1331,6 +1880,46 @@ mod tests {
             *o += hv;
         }
         dn
+    }
+
+    /// Weight-binding pin: the transformer with weights bound once at
+    /// load (cast + prepacked per internal plan) must match the
+    /// ship-weights-every-call path bit-for-bit, under plan environments
+    /// that do and do not prepack.
+    #[test]
+    fn transformer_bound_weights_bit_identical_to_per_call_weights() {
+        use crate::plan::PlanOverride;
+        use crate::runtime::kernel::{Blocking, KernelPolicy};
+        let (seq, d_model, d_ff, n_heads) = (8, 16, 32, 4);
+        let envs = vec![
+            PlanEnv::default(), // small shapes: direct plans, no panels
+            PlanEnv::pinned().with_force(PlanOverride::Force(KernelPolicy::Tiled(
+                Blocking { mc: 8, kc: 4, nc: 16 },
+            ))), // forced packing: every weight prepacks
+        ];
+        for &dtype_in in &[Dtype::F16, Dtype::F32] {
+            let p = Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in };
+            let inputs = transformer_inputs(seq, d_model, d_ff, 83);
+            for env in &envs {
+                let want = p.execute_with_env(&inputs, env).unwrap();
+                let bound = p.bind_transformer_weights(&inputs[1..], env).unwrap();
+                let got = p.execute_transformer_bound(&inputs[0], &bound).unwrap();
+                assert_eq!(want[0].shape, got[0].shape);
+                for (i, (w, g)) in want[0].data.iter().zip(&got[0].data).enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "{dtype_in:?} under {} drifted at element {i}",
+                        env.force.name()
+                    );
+                }
+            }
+        }
+        // weight validation happens at bind time
+        let p = Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in: Dtype::F16 };
+        let mut bad = transformer_inputs(seq, d_model, d_ff, 84);
+        bad[1] = Tensor::zeros(vec![d_model, d_model]); // wrong w_qkv shape
+        assert!(p.bind_transformer_weights(&bad[1..], &PlanEnv::default()).is_err());
     }
 
     /// Rewiring pin: the engine-routed transformer (gathered per-head

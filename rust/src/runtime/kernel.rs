@@ -219,6 +219,96 @@ impl KernelPolicy {
     }
 }
 
+/// The B operand of one GEMM: either the raw row-major slice (the tiled
+/// kernels pack it into panels per call) or a [`PrepackedB`] whose
+/// panels were materialized once — the weight-binding hot path, where B
+/// is a constant served to many requests and re-running [`pack_b`] per
+/// call is pure overhead.  Packing is a pure i/j rearrangement, so the
+/// two forms are bit-identical (pinned by the unit tests below).
+#[derive(Debug, Clone, Copy)]
+pub enum BOperand<'a> {
+    Raw(&'a [f32]),
+    Prepacked(&'a PrepackedB),
+}
+
+impl BOperand<'_> {
+    fn check(&self, k: usize, n: usize) {
+        match *self {
+            BOperand::Raw(b) => assert_eq!(b.len(), k * n, "B length"),
+            BOperand::Prepacked(p) => {
+                assert_eq!((p.k, p.n), (k, n), "prepacked B shape")
+            }
+        }
+    }
+}
+
+/// B materialized into [`pack_b`] panel layout once, ahead of time: one
+/// contiguous KC-row panel per (NC column block, KC reduction block)
+/// pair, in the exact layout (and therefore the exact bits) the tiled
+/// kernel's per-call packing would produce.  Shared immutably across
+/// calls and threads; built by [`PrepackedB::pack`] or
+/// [`crate::plan::ExecutionPlan::prepack_b`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrepackedB {
+    k: usize,
+    n: usize,
+    /// The (clamped) blocking the panels were laid out for.  Kernels
+    /// consuming a prepacked B iterate with *these* cache blocks, not
+    /// their policy's — bit-identical either way (the module invariant),
+    /// so a plan/panel blocking mismatch costs speed, never bits.
+    blocking: Blocking,
+    panels: Vec<f32>,
+    /// Panel start offsets, indexed `jb * n_pblocks + pb`.
+    offsets: Vec<usize>,
+}
+
+impl PrepackedB {
+    /// Pack a full k x n B into panels under `blocking` (clamped the
+    /// same way [`matmul`] clamps).  Total storage is exactly `k * n`
+    /// elements: every B element lands in exactly one panel.
+    pub fn pack(b: &[f32], k: usize, n: usize, blocking: Blocking) -> PrepackedB {
+        assert_eq!(b.len(), k * n, "B length");
+        let bs = blocking.clamped();
+        let n_pb = ceil_div(k, bs.kc);
+        let n_jb = ceil_div(n, bs.nc);
+        let mut panels = vec![0.0f32; k * n];
+        let mut offsets = vec![0usize; n_jb * n_pb];
+        let mut off = 0usize;
+        for (jb, jc) in (0..n).step_by(bs.nc).enumerate() {
+            let ncb = bs.nc.min(n - jc);
+            for (pb, pc) in (0..k).step_by(bs.kc).enumerate() {
+                let kcb = bs.kc.min(k - pc);
+                offsets[jb * n_pb + pb] = off;
+                pack_b(&mut panels[off..off + kcb * ncb], b, n, pc, kcb, jc, ncb);
+                off += kcb * ncb;
+            }
+        }
+        PrepackedB { k, n, blocking: bs, panels, offsets }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn blocking(&self) -> Blocking {
+        self.blocking
+    }
+
+    /// Bytes held by the panel store.
+    pub fn bytes(&self) -> usize {
+        self.panels.len() * std::mem::size_of::<f32>()
+    }
+
+    fn panel(&self, jb: usize, pb: usize, n_pb: usize, len: usize) -> &[f32] {
+        let start = self.offsets[jb * n_pb + pb];
+        &self.panels[start..start + len]
+    }
+}
+
 /// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
 /// accumulate, k-terms in increasing-k order (bit-identical across
 /// policies).  The policy comes from an explicit
@@ -232,16 +322,37 @@ pub fn matmul(
     n: usize,
     k: usize,
 ) {
+    matmul_b(policy, out, a, BOperand::Raw(b), m, n, k);
+}
+
+/// [`matmul`] over an explicit [`BOperand`]: the engine's real entry
+/// point.  A prepacked B skips the per-call [`pack_b`] copy and runs the
+/// tiled kernel over the shared panels — under *every* policy (a naive
+/// plan handed prepacked panels still consumes them through the tiled
+/// loop, which is bit-identical to the naive loop by the module
+/// invariant).
+pub fn matmul_b(
+    policy: KernelPolicy,
+    out: &mut [f32],
+    a: &[f32],
+    b: BOperand,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
     assert_eq!(out.len(), m * n, "output length");
     assert_eq!(a.len(), m * k, "A length");
-    assert_eq!(b.len(), k * n, "B length");
+    b.check(k, n);
     if m == 0 || n == 0 || k == 0 {
         return; // += 0 terms: out unchanged, like the naive loop
     }
-    match policy {
-        KernelPolicy::Naive => gemm_naive(out, a, b, m, n, k),
-        KernelPolicy::Tiled(bs) => gemm_tiled(out, a, b, m, n, k, bs.clamped()),
-        KernelPolicy::Threaded(bs, t) => {
+    match (policy, b) {
+        (KernelPolicy::Naive, BOperand::Raw(b)) => gemm_naive(out, a, b, m, n, k),
+        (KernelPolicy::Naive, BOperand::Prepacked(pre)) => {
+            gemm_tiled_pre(out, a, pre, m, n, k)
+        }
+        (KernelPolicy::Tiled(bs), b) => gemm_tiled_b(out, a, b, m, n, k, bs.clamped()),
+        (KernelPolicy::Threaded(bs, t), b) => {
             gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, None)
         }
     }
@@ -268,23 +379,42 @@ pub fn matmul_fused(
     k: usize,
     tail: &(dyn Fn(&mut [f32]) + Sync),
 ) {
+    matmul_fused_b(policy, out, a, BOperand::Raw(b), m, n, k, tail);
+}
+
+/// [`matmul_fused`] over an explicit [`BOperand`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_fused_b(
+    policy: KernelPolicy,
+    out: &mut [f32],
+    a: &[f32],
+    b: BOperand,
+    m: usize,
+    n: usize,
+    k: usize,
+    tail: &(dyn Fn(&mut [f32]) + Sync),
+) {
     assert_eq!(out.len(), m * n, "output length");
     assert_eq!(a.len(), m * k, "A length");
-    assert_eq!(b.len(), k * n, "B length");
+    b.check(k, n);
     if m == 0 || n == 0 || k == 0 {
         tail(out);
         return;
     }
-    match policy {
-        KernelPolicy::Naive => {
+    match (policy, b) {
+        (KernelPolicy::Naive, BOperand::Raw(b)) => {
             gemm_naive(out, a, b, m, n, k);
             tail(out);
         }
-        KernelPolicy::Tiled(bs) => {
-            gemm_tiled(out, a, b, m, n, k, bs.clamped());
+        (KernelPolicy::Naive, BOperand::Prepacked(pre)) => {
+            gemm_tiled_pre(out, a, pre, m, n, k);
             tail(out);
         }
-        KernelPolicy::Threaded(bs, t) => {
+        (KernelPolicy::Tiled(bs), b) => {
+            gemm_tiled_b(out, a, b, m, n, k, bs.clamped());
+            tail(out);
+        }
+        (KernelPolicy::Threaded(bs, t), b) => {
             gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, Some(tail))
         }
     }
@@ -504,11 +634,56 @@ fn gemm_tiled(
     }
 }
 
+/// [`gemm_tiled`] over panels packed ahead of time: identical loop
+/// structure and k order, with the per-call [`pack_b`] copy replaced by
+/// a panel lookup.  The cache blocks come from the panels' own layout —
+/// the policy's blocking does not apply (bit-identical regardless).
+fn gemm_tiled_pre(
+    out: &mut [f32],
+    a: &[f32],
+    pre: &PrepackedB,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    let Blocking { mc, kc, nc } = pre.blocking;
+    let n_pb = ceil_div(k, kc);
+    let mut apack = vec![0.0f32; round_up(mc.min(m), MR) * kc.min(k)];
+    for (jb, jc) in (0..n).step_by(nc).enumerate() {
+        let ncb = nc.min(n - jc);
+        for (pb, pc) in (0..k).step_by(kc).enumerate() {
+            let kcb = kc.min(k - pc);
+            let bpack = pre.panel(jb, pb, n_pb, kcb * ncb);
+            for ic in (0..m).step_by(mc) {
+                let mcb = mc.min(m - ic);
+                pack_a(&mut apack, a, k, ic, mcb, pc, kcb);
+                macro_kernel(out, n, ic, mcb, jc, ncb, kcb, &apack, bpack);
+            }
+        }
+    }
+}
+
+/// Dispatch one single-thread tiled GEMM over either B form.
+fn gemm_tiled_b(
+    out: &mut [f32],
+    a: &[f32],
+    b: BOperand,
+    m: usize,
+    n: usize,
+    k: usize,
+    bs: Blocking,
+) {
+    match b {
+        BOperand::Raw(b) => gemm_tiled(out, a, b, m, n, k, bs),
+        BOperand::Prepacked(pre) => gemm_tiled_pre(out, a, pre, m, n, k),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn gemm_threaded(
     out: &mut [f32],
     a: &[f32],
-    b: &[f32],
+    b: BOperand,
     m: usize,
     n: usize,
     k: usize,
@@ -525,7 +700,7 @@ fn gemm_threaded(
     let by_work = (flops / MIN_FLOPS_PER_THREAD) as usize;
     let bands = hw.min(by_work.max(1)).min(ceil_div(m, MR)).max(1);
     if bands <= 1 {
-        gemm_tiled(out, a, b, m, n, k, bs);
+        gemm_tiled_b(out, a, b, m, n, k, bs);
         if let Some(tail) = tail {
             tail(out);
         }
@@ -535,13 +710,15 @@ fn gemm_threaded(
     // the matching band of A), so no element is touched twice and the
     // per-element operation sequence is the single-thread kernel's.  The
     // fused tail runs per band right after the band's k-reduction: still
-    // exactly once per element, after all of its k-terms.
+    // exactly once per element, after all of its k-terms.  Every band
+    // reads the whole of B, so a prepacked B is shared across the bands
+    // as-is (`BOperand` is `Copy` over shared references).
     let rows_per = round_up(ceil_div(m, bands), MR);
     std::thread::scope(|scope| {
         for (oband, aband) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
             let bm = oband.len() / n;
             scope.spawn(move || {
-                gemm_tiled(oband, aband, b, bm, n, k, bs);
+                gemm_tiled_b(oband, aband, b, bm, n, k, bs);
                 if let Some(tail) = tail {
                     tail(oband);
                 }
@@ -748,6 +925,85 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn prepacked_b_bit_identical_to_raw_under_every_policy() {
+        // The weight-binding contract: consuming panels packed once at
+        // bind time must produce exactly the bits of packing per call —
+        // for every policy (including naive, which falls through to the
+        // tiled loop) and even when the panel blocking disagrees with
+        // the policy's.
+        for &(m, n, k) in &[(1, 1, 1), (5, 17, 9), (19, 1, 7), (33, 23, 21)] {
+            let mut rng = Rng::new(0xB0D + (m * 1000 + n * 10 + k) as u64);
+            let (a, b, c) = random_case(&mut rng, m, n, k);
+            let want = run(KernelPolicy::Naive, &c, &a, &b, m, n, k);
+            for pack_bs in [
+                Blocking { mc: 8, kc: 4, nc: 16 },
+                Blocking { mc: 5, kc: 3, nc: 7 },
+                Blocking::default(),
+            ] {
+                let pre = PrepackedB::pack(&b, k, n, pack_bs);
+                assert_eq!(pre.bytes(), k * n * 4, "panels store exactly B");
+                for policy in [
+                    KernelPolicy::Naive,
+                    KernelPolicy::Tiled(pack_bs),
+                    KernelPolicy::Tiled(Blocking { mc: 8, kc: 8, nc: 8 }), // mismatched
+                    KernelPolicy::Threaded(pack_bs, 2),
+                    KernelPolicy::Threaded(Blocking { mc: 16, kc: 2, nc: 4 }, 3),
+                ] {
+                    let mut got = c.clone();
+                    matmul_b(policy, &mut got, &a, BOperand::Prepacked(&pre), m, n, k);
+                    assert!(
+                        want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                        "prepacked {pack_bs:?} under {} drifted at {m}x{n}x{k}",
+                        policy.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_fused_tail_matches_raw_fused() {
+        let (m, n, k) = (13, 9, 11);
+        let mut rng = Rng::new(0xFB);
+        let (a, b, c) = random_case(&mut rng, m, n, k);
+        let pre = PrepackedB::pack(&b, k, n, Blocking { mc: 8, kc: 4, nc: 4 });
+        let tail = |band: &mut [f32]| {
+            for v in band.iter_mut() {
+                *v = (*v + 1.0).max(0.0);
+            }
+        };
+        for policy in [
+            KernelPolicy::Naive,
+            KernelPolicy::Tiled(Blocking { mc: 8, kc: 4, nc: 4 }),
+            KernelPolicy::Threaded(Blocking { mc: 8, kc: 4, nc: 4 }, 2),
+        ] {
+            let mut want = c.clone();
+            matmul_fused(policy, &mut want, &a, &b, m, n, k, &tail);
+            let mut got = c.clone();
+            matmul_fused_b(policy, &mut got, &a, BOperand::Prepacked(&pre), m, n, k, &tail);
+            assert!(
+                want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                "fused prepacked drifted under {}",
+                policy.name()
+            );
+        }
+        // k == 0: the tail still runs exactly once over the untouched C.
+        let pre0 = PrepackedB::pack(&[], 0, n, Blocking::default());
+        let mut got = vec![-1.0f32; 2 * n];
+        matmul_fused_b(
+            KernelPolicy::Tiled(Blocking::default()),
+            &mut got,
+            &[],
+            BOperand::Prepacked(&pre0),
+            2,
+            n,
+            0,
+            &tail,
+        );
+        assert!(got.iter().all(|&v| v == 0.0), "tail skipped on empty reduction");
     }
 
     #[test]

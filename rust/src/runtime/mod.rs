@@ -28,8 +28,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::plan::{ExecutionPlan, PlanEnv, PlanOverride};
 
-pub use exec::{Epilogue, Program};
-pub use kernel::{Blocking, KernelPolicy};
+pub use exec::{BoundB, Epilogue, GEMM_B_INPUT_SLOT, Program, TransformerBound};
+pub use kernel::{Blocking, BOperand, KernelPolicy, PrepackedB};
 pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
 
 /// A host-side f32 tensor (row-major).
@@ -361,6 +361,84 @@ impl Runtime {
     pub fn execute_batch(&self, name: &str, items: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
         let a = self.load(name)?;
         Ok(self.execute_batch_timed(&a, items)?.0)
+    }
+
+    /// Execute a weight-bound same-artifact batch: each item carries the
+    /// A + C (+ bias) form and the B operand comes from `bound` (cast
+    /// and prepacked once at bind time).  Validated against the manifest
+    /// specs minus the B slot; bit-identical to the inline-B batch with
+    /// the same weights.
+    pub fn execute_batch_timed_bound(
+        &self,
+        artifact: &LoadedArtifact,
+        items: &[Vec<Tensor>],
+        eplan: &ExecutionPlan,
+        bound: &BoundB,
+    ) -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
+        let meta = &artifact.meta;
+        if !matches!(artifact.program, Program::Gemm { .. }) {
+            bail!("{}: only gemm artifacts take weight-bound batches", meta.name);
+        }
+        let t0 = Instant::now();
+        // Manifest specs minus the bound B slot.
+        let specs: Vec<&TensorSpec> = meta
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != exec::GEMM_B_INPUT_SLOT)
+            .map(|(_, s)| s)
+            .collect();
+        for (bi, inputs) in items.iter().enumerate() {
+            if inputs.len() != specs.len() {
+                bail!(
+                    "{}: bound batch item {bi}: expected {} inputs, got {}",
+                    meta.name,
+                    specs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, spec)) in inputs.iter().zip(specs.iter().copied()).enumerate() {
+                if !t.matches(spec) {
+                    bail!(
+                        "{}: bound batch item {bi}: input {i} shape {:?} does not \
+                         match artifact spec {:?}",
+                        meta.name,
+                        t.shape,
+                        spec.shape
+                    );
+                }
+            }
+        }
+        let t1 = Instant::now();
+
+        let outputs = artifact
+            .program
+            .execute_batch_planned_bound(items, eplan, bound)
+            .with_context(|| {
+                format!("executing {} (bound batch of {})", meta.name, items.len())
+            })?;
+        let t2 = Instant::now();
+
+        for out in &outputs {
+            if out.len() != meta.outputs.len() {
+                bail!(
+                    "{}: program produced {} outputs, manifest declares {}",
+                    meta.name,
+                    out.len(),
+                    meta.outputs.len()
+                );
+            }
+        }
+        let t3 = Instant::now();
+
+        Ok((
+            outputs,
+            ExecTiming {
+                pack_seconds: (t1 - t0).as_secs_f64(),
+                exec_seconds: (t2 - t1).as_secs_f64(),
+                unpack_seconds: (t3 - t2).as_secs_f64(),
+            },
+        ))
     }
 }
 

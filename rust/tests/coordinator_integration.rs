@@ -36,7 +36,7 @@ fn gemm_request(rng: &mut Rng, m: usize, n: usize, k: usize, baseline: bool) -> 
     GemmRequest {
         key: GemmKey::plain(m, n, k),
         a: Tensor::new(vec![m, k], rng.normal_matrix(m, k)).unwrap(),
-        b: Tensor::new(vec![k, n], rng.normal_matrix(k, n)).unwrap(),
+        b: Some(Tensor::new(vec![k, n], rng.normal_matrix(k, n)).unwrap()),
         c: Tensor::zeros(vec![m, n]),
         bias: None,
         use_baseline: baseline,
@@ -55,7 +55,10 @@ fn serves_concurrent_requests_correctly() {
     for _ in 0..12 {
         let req = gemm_request(&mut rng, 256, 256, 256, false);
         // host reference for a few spot values
-        let (a, b) = (req.a.data.clone(), req.b.data.clone());
+        let (a, b) = (
+            req.a.data.clone(),
+            req.b.as_ref().expect("inline request").data.clone(),
+        );
         expected.push((a, b));
         rxs.push(server.submit(req));
     }
@@ -224,7 +227,7 @@ fn sharded_server_matches_unsharded_execution_bitwise() {
             .call(GemmRequest {
                 key: key.clone(),
                 a,
-                b,
+                b: Some(b),
                 c,
                 bias: None,
                 use_baseline: false,

@@ -1,0 +1,328 @@
+//! Differential fuzz sweep: every execution form the stack offers —
+//! planned single-call, weight-bound (prepacked), batched, bound-batched,
+//! row-sharded, and bound-row-sharded — must be **bit-identical** to a
+//! self-contained naive i-k-j reference (cast inputs, accumulate in
+//! increasing-k order, epilogue once per element, round to the
+//! accumulate dtype), across shapes (including 1x1x1, skinny, ragged),
+//! dtype pairs, epilogues, and plan overrides.
+//!
+//! Deterministic: the whole sweep derives from one xoshiro seed, pinned
+//! by default and overridable with `MLIR_GEMM_FUZZ_SEED=<decimal>` for
+//! replay (`make fuzz`).  Every assertion failure prints the seed and
+//! case index.
+
+use std::sync::Arc;
+
+use mlir_gemm::coordinator::sharding::{
+    build_shard_tasks, build_shard_tasks_bound, execute_shard, reduce_outputs,
+    ShardPlan,
+};
+use mlir_gemm::plan::{compile, GemmKey, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::exec::round_to;
+use mlir_gemm::runtime::{Epilogue, Program, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+
+/// Pinned sweep seed (CI runs exactly this); override for replay.
+const DEFAULT_SEED: u64 = 0xF5A2D;
+
+fn sweep_seed() -> u64 {
+    std::env::var("MLIR_GEMM_FUZZ_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+/// The oracle: naive i-k-j with the executor's exact precision
+/// semantics — inputs rounded to `dtype_in`, C rounded to `dtype_acc`,
+/// f32 accumulation in increasing-k order, epilogue applied once per
+/// element after the full reduction, output rounded to `dtype_acc`.
+#[allow(clippy::too_many_arguments)]
+fn reference(
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype_in: Dtype,
+    dtype_acc: Dtype,
+    epilogue: Epilogue,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let cast = |d: Dtype, v: &[f32]| -> Vec<f32> {
+        v.iter().map(|&x| round_to(d, x)).collect()
+    };
+    let a = cast(dtype_in, a);
+    let b = cast(dtype_in, b);
+    let mut acc = cast(dtype_acc, c);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                acc[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    match (epilogue, bias) {
+        (Epilogue::Bias, Some(bv)) => {
+            for row in acc.chunks_mut(n) {
+                for (v, &b) in row.iter_mut().zip(bv) {
+                    *v += b;
+                }
+            }
+        }
+        (Epilogue::BiasRelu, Some(bv)) => {
+            for row in acc.chunks_mut(n) {
+                for (v, &b) in row.iter_mut().zip(bv) {
+                    *v = (*v + b).max(0.0);
+                }
+            }
+        }
+        _ => {}
+    }
+    for v in acc.iter_mut() {
+        *v = round_to(dtype_acc, *v);
+    }
+    acc
+}
+
+fn assert_bits(label: &str, seed: u64, case: usize, want: &[f32], got: &[f32]) {
+    assert_eq!(
+        want.len(),
+        got.len(),
+        "fuzz case {case} [{label}]: length {} vs {}; replay with \
+         MLIR_GEMM_FUZZ_SEED={seed}",
+        want.len(),
+        got.len()
+    );
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "fuzz case {case} [{label}] drifted at element {i}: {w} vs {g}; \
+             replay with MLIR_GEMM_FUZZ_SEED={seed}"
+        );
+    }
+}
+
+struct Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype_in: Dtype,
+    dtype_acc: Dtype,
+    epilogue: Epilogue,
+    env: PlanEnv,
+}
+
+fn env_for(case_idx: usize) -> PlanEnv {
+    match case_idx % 4 {
+        0 => PlanEnv::pinned(),
+        1 => PlanEnv::pinned().with_force(PlanOverride::parse("naive").unwrap()),
+        2 => PlanEnv::pinned().with_force(PlanOverride::parse("tiled:8,4,16").unwrap()),
+        _ => PlanEnv::pinned()
+            .with_force(PlanOverride::parse("threaded:8,8,16,2").unwrap()),
+    }
+}
+
+fn case_for(rng: &mut Rng, case_idx: usize) -> Case {
+    const SPECIAL: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 17, 5),
+        (19, 1, 7),
+        (4, 16, 8),
+        (5, 17, 9),
+        (33, 7, 21),
+        (40, 40, 40),
+    ];
+    let (m, n, k) = if case_idx < SPECIAL.len() {
+        SPECIAL[case_idx]
+    } else if case_idx % 12 == 11 {
+        // Large enough that the auto pipeline compiles a packing
+        // (prepacking) kernel: operand footprint past L2/2.
+        (100 + rng.below(21), 100 + rng.below(21), 100 + rng.below(21))
+    } else {
+        (1 + rng.below(40), 1 + rng.below(40), 1 + rng.below(40))
+    };
+    let dtypes = [
+        (Dtype::F32, Dtype::F32),
+        (Dtype::F16, Dtype::F32),
+        (Dtype::F16, Dtype::F16),
+        (Dtype::Bf16, Dtype::F32),
+    ];
+    let (dtype_in, dtype_acc) = dtypes[rng.below(dtypes.len())];
+    let epilogue = [Epilogue::None, Epilogue::Bias, Epilogue::BiasRelu]
+        [rng.below(3)];
+    Case { m, n, k, dtype_in, dtype_acc, epilogue, env: env_for(case_idx) }
+}
+
+#[test]
+fn fuzz_differential_sweep() {
+    let seed = sweep_seed();
+    let mut rng = Rng::new(seed);
+    let n_cases = 200usize;
+    for case_idx in 0..n_cases {
+        let case = case_for(&mut rng, case_idx);
+        let Case { m, n, k, dtype_in, dtype_acc, epilogue, ref env } = case;
+        let key = GemmKey {
+            m,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
+            epilogue: epilogue.name().to_string(),
+        };
+        let program = Program::Gemm {
+            m,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
+            epilogue,
+            fused: true,
+        };
+        let eplan = compile(&key, env).unwrap();
+
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let bias_vec =
+            epilogue.needs_bias().then(|| rng.normal_matrix(1, n));
+        let want = reference(
+            m,
+            n,
+            k,
+            dtype_in,
+            dtype_acc,
+            epilogue,
+            &a,
+            &b,
+            &c,
+            bias_vec.as_deref(),
+        );
+
+        let a_t = Tensor { shape: vec![m, k], data: a.clone() };
+        let b_t = Tensor { shape: vec![k, n], data: b.clone() };
+        let c_t = Tensor { shape: vec![m, n], data: c.clone() };
+        let bias_t = bias_vec
+            .as_ref()
+            .map(|v| Tensor { shape: vec![n], data: v.clone() });
+
+        // 1. planned single-call execution
+        let mut inline_inputs = vec![a_t.clone(), b_t.clone(), c_t.clone()];
+        if let Some(bt) = &bias_t {
+            inline_inputs.push(bt.clone());
+        }
+        let got = program.execute_planned(&inline_inputs, &eplan).unwrap();
+        assert_bits("planned", seed, case_idx, &want, &got[0].data);
+
+        // 2. weight-bound (prepacked when the plan says so)
+        let bound = Arc::new(program.bind_b(&b_t, &eplan).unwrap());
+        let mut bound_inputs = vec![a_t.clone(), c_t.clone()];
+        if let Some(bt) = &bias_t {
+            bound_inputs.push(bt.clone());
+        }
+        let got = program
+            .execute_planned_bound(&bound_inputs, &eplan, &bound)
+            .unwrap();
+        let label = if bound.is_prepacked() { "bound+prepacked" } else { "bound" };
+        assert_bits(label, seed, case_idx, &want, &got[0].data);
+
+        // Large cases stop here (the remaining forms recompute the same
+        // kernels; keep the sweep cheap enough for CI).
+        if m * n * k > 64 * 64 * 64 {
+            continue;
+        }
+
+        // 3. batched + bound-batched: three items sharing the bound B.
+        if case_idx % 3 == 0 {
+            let mut items_inline = vec![inline_inputs.clone()];
+            let mut items_bound = vec![bound_inputs.clone()];
+            let mut wants = vec![want.clone()];
+            for _ in 0..2 {
+                let a2 = rng.normal_matrix(m, k);
+                let c2 = rng.normal_matrix(m, n);
+                wants.push(reference(
+                    m,
+                    n,
+                    k,
+                    dtype_in,
+                    dtype_acc,
+                    epilogue,
+                    &a2,
+                    &b,
+                    &c2,
+                    bias_vec.as_deref(),
+                ));
+                let a2_t = Tensor { shape: vec![m, k], data: a2 };
+                let c2_t = Tensor { shape: vec![m, n], data: c2 };
+                let mut inline_item = vec![a2_t.clone(), b_t.clone(), c2_t.clone()];
+                let mut bound_item = vec![a2_t, c2_t];
+                if let Some(bt) = &bias_t {
+                    inline_item.push(bt.clone());
+                    bound_item.push(bt.clone());
+                }
+                items_inline.push(inline_item);
+                items_bound.push(bound_item);
+            }
+            let outs = program.execute_batch_planned(&items_inline, &eplan).unwrap();
+            for (bi, out) in outs.iter().enumerate() {
+                assert_bits(
+                    &format!("batched[{bi}]"),
+                    seed,
+                    case_idx,
+                    &wants[bi],
+                    &out[0].data,
+                );
+            }
+            let outs = program
+                .execute_batch_planned_bound(&items_bound, &eplan, &bound)
+                .unwrap();
+            for (bi, out) in outs.iter().enumerate() {
+                assert_bits(
+                    &format!("bound-batched[{bi}]"),
+                    seed,
+                    case_idx,
+                    &wants[bi],
+                    &out[0].data,
+                );
+            }
+        }
+
+        // 4. row-sharded + bound-row-sharded (bit-identical contract).
+        if case_idx % 4 == 0 && m >= 2 {
+            let splan = ShardPlan::rows(m, n, k, 3, 1);
+            let parts: Vec<Tensor> =
+                build_shard_tasks(env, &splan, &program, &a_t, &b_t, &c_t, bias_t.as_ref())
+                    .unwrap()
+                    .into_iter()
+                    .map(|(prog, sp, inputs)| {
+                        execute_shard(&prog, &sp, &inputs, None).unwrap()
+                    })
+                    .collect();
+            let got =
+                reduce_outputs(&splan, &program, &c_t, bias_t.as_ref(), &parts).unwrap();
+            assert_bits("row-sharded", seed, case_idx, &want, &got.data);
+
+            let parts: Vec<Tensor> = build_shard_tasks_bound(
+                env,
+                &splan,
+                &program,
+                &a_t,
+                &c_t,
+                bias_t.as_ref(),
+                &bound,
+            )
+            .unwrap()
+            .into_iter()
+            .map(|(prog, sp, inputs, tb)| {
+                execute_shard(&prog, &sp, &inputs, tb.as_deref()).unwrap()
+            })
+            .collect();
+            let got =
+                reduce_outputs(&splan, &program, &c_t, bias_t.as_ref(), &parts).unwrap();
+            assert_bits("bound-row-sharded", seed, case_idx, &want, &got.data);
+        }
+    }
+}

@@ -89,6 +89,12 @@ fn golden_plans_for_table1_shapes() {
             g.get("fuse_epilogue").and_then(Json::as_bool).unwrap(),
             "epilogue decision drifted for {key:?}"
         );
+        assert_eq!(
+            plan.prepack,
+            g.get("prepack").and_then(Json::as_bool).unwrap(),
+            "prepack decision drifted for {key:?}"
+        );
+        assert!(plan.trace.len() >= 5, "pipeline records all five passes");
     }
 }
 
@@ -205,7 +211,7 @@ fn interleaved_variants_with_different_plans_do_not_cross_contaminate() {
         let rx = server.submit(GemmRequest {
             key: key.clone(),
             a,
-            b,
+            b: Some(b),
             c,
             bias: None,
             use_baseline: true,

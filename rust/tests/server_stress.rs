@@ -1,0 +1,287 @@
+//! Server stress: concurrent client threads firing a mix of weight-bound
+//! and operand-carrying requests at two differently-planned variants,
+//! with shutdown racing the submissions.  Invariants:
+//!
+//! * no lost response channels — every submit eventually yields a
+//!   response (success or explicit error), never a dead channel;
+//! * `submitted == completed + failed` after shutdown;
+//! * per-plan request counts and per-variant counts each sum to the
+//!   global `completed` counter;
+//! * the pack-cache counters prove `pack_b` ran at most once per (bind,
+//!   plan): every completed weight-bound request on the packing plan is
+//!   a hit, every inline one a miss, and the direct-kernel plan records
+//!   no hits at all;
+//! * successful outputs are bit-identical to the naive reference.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "small",
+      "file": "small.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [24, 24], "dtype": "f32"}],
+      "m": 24, "n": 24, "k": 24, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "big",
+      "file": "big.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [128, 112], "dtype": "f32"},
+        {"shape": [112, 96], "dtype": "f32"},
+        {"shape": [128, 96], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [128, 96], "dtype": "f32"}],
+      "m": 128, "n": 96, "k": 112, "dtype_in": "f32", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const SMALL: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "small",
+  "program": {
+    "type": "gemm", "m": 24, "n": 24, "k": 24,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const BIG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "big",
+  "program": {
+    "type": "gemm", "m": 128, "n": 96, "k": 112,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+fn naive_reference(key: &GemmKey, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let mut out = c.to_vec();
+    mlir_gemm::runtime::kernel::matmul(
+        KernelPolicy::Naive,
+        &mut out,
+        a,
+        b,
+        key.m,
+        key.n,
+        key.k,
+    );
+    out
+}
+
+struct Record {
+    big: bool,
+    bound: bool,
+    want: Vec<f32>,
+    rx: std::sync::mpsc::Receiver<mlir_gemm::coordinator::GemmResponse>,
+}
+
+#[test]
+fn stress_mixed_bound_and_inline_with_midflight_shutdown() {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_stress_srv_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("small.tprog.json"), SMALL).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig { workers: 3, ..Default::default() },
+    );
+
+    let small_key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let big_key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    let small_plan = server.registry().plan(&small_key).unwrap();
+    let big_plan = server.registry().plan(&big_key).unwrap();
+    assert!(
+        matches!(small_plan.kernel, KernelPolicy::Naive) && !small_plan.prepack,
+        "24^3 must compile to a direct, non-prepacking plan"
+    );
+    assert!(
+        !matches!(big_plan.kernel, KernelPolicy::Naive) && big_plan.prepack,
+        "128x96x112 must compile to a packing, prepacking plan"
+    );
+
+    // Bind constant weights for both keys.
+    let mut wrng = Rng::new(0x57);
+    let small_b = Tensor::new(vec![24, 24], wrng.normal_matrix(24, 24)).unwrap();
+    let big_b = Tensor::new(vec![112, 96], wrng.normal_matrix(112, 96)).unwrap();
+    server.bind_weights(&small_key, &small_b).unwrap();
+    server.bind_weights(&big_key, &big_b).unwrap();
+
+    // Clients hold the server behind a mutex only to call submit()/
+    // shutdown(); the dispatcher and workers run lock-free of it.
+    const CLIENTS: u64 = 4;
+    const PER_CLIENT: usize = 24;
+    let server = Mutex::new(server);
+    let records: Mutex<Vec<Record>> = Mutex::new(Vec::new());
+    let small_b_data = small_b.data.clone();
+    let big_b_data = big_b.data.clone();
+    std::thread::scope(|scope| {
+        for cid in 0..CLIENTS {
+            let server = &server;
+            let records = &records;
+            let small_key = &small_key;
+            let big_key = &big_key;
+            let small_b_data = &small_b_data;
+            let big_b_data = &big_b_data;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xC11E + cid);
+                for i in 0..PER_CLIENT {
+                    let big = rng.below(2) == 0;
+                    let bound = rng.below(2) == 0;
+                    let (key, bdata) = if big {
+                        (big_key.clone(), big_b_data.as_slice())
+                    } else {
+                        (small_key.clone(), small_b_data.as_slice())
+                    };
+                    let a = Tensor::new(
+                        vec![key.m, key.k],
+                        rng.normal_matrix(key.m, key.k),
+                    )
+                    .unwrap();
+                    let c = Tensor::new(
+                        vec![key.m, key.n],
+                        rng.normal_matrix(key.m, key.n),
+                    )
+                    .unwrap();
+                    let (b, want_b): (Option<Tensor>, Vec<f32>) = if bound {
+                        (None, bdata.to_vec())
+                    } else {
+                        let fresh = Tensor::new(
+                            vec![key.k, key.n],
+                            rng.normal_matrix(key.k, key.n),
+                        )
+                        .unwrap();
+                        let data = fresh.data.clone();
+                        (Some(fresh), data)
+                    };
+                    let want = naive_reference(&key, &a.data, &want_b, &c.data);
+                    let rx = server.lock().unwrap().submit(GemmRequest {
+                        key,
+                        a,
+                        b,
+                        c,
+                        bias: None,
+                        use_baseline: true,
+                    });
+                    records.lock().unwrap().push(Record { big, bound, want, rx });
+                    if i % 8 == 7 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        // Shutdown races the submitting clients: some requests complete,
+        // some drain during shutdown, late ones get explicit errors.
+        scope.spawn(|| {
+            std::thread::sleep(Duration::from_millis(3));
+            let _ = server.lock().unwrap().shutdown();
+        });
+    });
+
+    // Drain every response channel: a dead channel (recv Err) means a
+    // request was dropped without a response — the invariant under test.
+    let records = records.into_inner().unwrap();
+    assert_eq!(records.len(), (CLIENTS as usize) * PER_CLIENT);
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut ok_big_bound = 0u64;
+    let mut ok_big_inline = 0u64;
+    let mut ok_small_bound = 0u64;
+    for rec in &records {
+        let resp = rec
+            .rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("lost response channel: request dropped without a response");
+        match resp.output {
+            Ok(out) => {
+                ok += 1;
+                assert_eq!(
+                    out.data, rec.want,
+                    "completed request (big={}, bound={}) not bit-identical",
+                    rec.big, rec.bound
+                );
+                match (rec.big, rec.bound) {
+                    (true, true) => ok_big_bound += 1,
+                    (true, false) => ok_big_inline += 1,
+                    (false, true) => ok_small_bound += 1,
+                    (false, false) => {}
+                }
+            }
+            Err(_) => failed += 1,
+        }
+    }
+
+    let m = server.into_inner().unwrap().metrics();
+    assert_eq!(m.submitted, records.len() as u64);
+    assert_eq!(
+        m.completed + m.failed,
+        m.submitted,
+        "submitted == completed + failed must hold through shutdown"
+    );
+    assert_eq!(m.completed, ok);
+    assert_eq!(m.failed, failed);
+
+    // Per-plan and per-variant tallies must sum to the global counter.
+    let per_plan_sum: u64 = m.per_plan.values().map(|l| l.requests).sum();
+    assert_eq!(per_plan_sum, m.completed, "per_plan: {:?}", m.per_plan);
+    let per_variant_sum: u64 = m.per_variant.values().sum();
+    assert_eq!(per_variant_sum, m.completed, "per_variant: {:?}", m.per_variant);
+    // Bound and inline traffic segments per variant name (+bound suffix).
+    assert_eq!(
+        m.per_variant.get("big+bound").copied().unwrap_or(0),
+        ok_big_bound,
+        "per_variant: {:?}",
+        m.per_variant
+    );
+    assert_eq!(
+        m.per_variant.get("big").copied().unwrap_or(0),
+        ok_big_inline,
+        "per_variant: {:?}",
+        m.per_variant
+    );
+
+    // Pack-cache proof that pack_b ran at most once per (bind, plan):
+    // every completed bound request on the packing plan was a hit
+    // (served straight off the bind-time panels), every inline one a
+    // miss (packed per call), and the direct-kernel plan never hits.
+    let big_load = &m.per_plan[&big_plan.id()];
+    assert_eq!(big_load.pack_hits, ok_big_bound, "per_plan: {:?}", m.per_plan);
+    assert_eq!(big_load.pack_misses, ok_big_inline, "per_plan: {:?}", m.per_plan);
+    let want_saved = ok_big_bound as f64 * (4 * 112 * 96) as f64;
+    assert!(
+        (big_load.bytes_saved - want_saved).abs() < 0.5,
+        "bytes_saved {} != {want_saved}",
+        big_load.bytes_saved
+    );
+    let small_load = &m.per_plan[&small_plan.id()];
+    assert_eq!(small_load.pack_hits, 0, "direct plans never pack at all");
+    assert_eq!(small_load.pack_misses, 0);
+    let small_saved = ok_small_bound as f64 * (4 * 24 * 24) as f64;
+    assert!(
+        (small_load.bytes_saved - small_saved).abs() < 0.5,
+        "bytes_saved {} != {small_saved}",
+        small_load.bytes_saved
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,226 @@
+//! Weight-binding correctness at the server boundary: weight-bound
+//! execution is bit-identical to shipping the same B inline; rebinding
+//! atomically invalidates the prepacked cache (requests routed after a
+//! rebind are served the new panels, never the old); shape-mismatched
+//! binds are rejected at bind time; unbinding makes weight-bound
+//! requests fail explicitly while inline traffic continues.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "big",
+      "file": "big.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [128, 112], "dtype": "f32"},
+        {"shape": [112, 96], "dtype": "f32"},
+        {"shape": [128, 96], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [128, 96], "dtype": "f32"}],
+      "m": 128, "n": 96, "k": 112, "dtype_in": "f32", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const BIG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "big",
+  "program": {
+    "type": "gemm", "m": 128, "n": 96, "k": 112,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+fn start_server() -> (Server, GemmKey, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "mlir_gemm_bind_srv_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig { workers: 2, ..Default::default() },
+    );
+    let key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    (server, key, dir)
+}
+
+fn request(key: &GemmKey, a: &Tensor, b: Option<Tensor>, c: &Tensor) -> GemmRequest {
+    GemmRequest {
+        key: key.clone(),
+        a: a.clone(),
+        b,
+        c: c.clone(),
+        bias: None,
+        use_baseline: true,
+    }
+}
+
+fn naive_reference(key: &GemmKey, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let mut out = c.to_vec();
+    mlir_gemm::runtime::kernel::matmul(
+        KernelPolicy::Naive,
+        &mut out,
+        a,
+        b,
+        key.m,
+        key.n,
+        key.k,
+    );
+    out
+}
+
+#[test]
+fn bound_requests_bit_identical_to_inline_and_rebind_swaps_atomically() {
+    let (mut server, key, dir) = start_server();
+    // The routed plan packs (and therefore prepacks) at this shape, so
+    // the bound path genuinely exercises the panel cache.
+    let plan = server.registry().plan(&key).unwrap();
+    assert!(plan.prepack, "128x96x112 must compile to a prepacking plan");
+
+    let mut rng = Rng::new(0xB11D);
+    let b1 = Tensor::new(vec![112, 96], rng.normal_matrix(112, 96)).unwrap();
+    let b2 = Tensor::new(vec![112, 96], rng.normal_matrix(112, 96)).unwrap();
+    server.bind_weights(&key, &b1).unwrap();
+
+    // Weight-bound responses must match inline responses with the same B
+    // bit for bit — across several activations.
+    for i in 0..4 {
+        let a = Tensor::new(vec![128, 112], rng.normal_matrix(128, 112)).unwrap();
+        let c = Tensor::new(vec![128, 96], rng.normal_matrix(128, 96)).unwrap();
+        let want = naive_reference(&key, &a.data, &b1.data, &c.data);
+        let inline_resp = server
+            .call(request(&key, &a, Some(b1.clone()), &c))
+            .unwrap()
+            .output
+            .unwrap();
+        let bound_resp =
+            server.call(request(&key, &a, None, &c)).unwrap().output.unwrap();
+        assert_eq!(inline_resp.data, want, "inline {i} drifted from reference");
+        assert_eq!(bound_resp.data, want, "bound {i} drifted from inline");
+    }
+
+    // Rebind: requests routed afterwards are served the new panels —
+    // the old B1 panels are never served again.
+    server.bind_weights(&key, &b2).unwrap();
+    for i in 0..3 {
+        let a = Tensor::new(vec![128, 112], rng.normal_matrix(128, 112)).unwrap();
+        let c = Tensor::new(vec![128, 96], rng.normal_matrix(128, 96)).unwrap();
+        let want_b2 = naive_reference(&key, &a.data, &b2.data, &c.data);
+        let want_b1 = naive_reference(&key, &a.data, &b1.data, &c.data);
+        let got = server.call(request(&key, &a, None, &c)).unwrap().output.unwrap();
+        assert_eq!(got.data, want_b2, "rebind {i}: stale panels served");
+        assert_ne!(got.data, want_b1, "rebind {i}: result indistinguishable from B1");
+    }
+
+    // The pack counters saw only hits on the bound route.
+    let m = server.shutdown();
+    let load = &m.per_plan[&plan.id()];
+    assert_eq!(load.pack_hits, 4 + 3, "every bound request served from panels");
+    assert_eq!(load.pack_misses, 4, "every inline request re-packed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bind_rejects_mismatched_shapes_and_unbind_fails_bound_requests_explicitly() {
+    let (mut server, key, dir) = start_server();
+    let mut rng = Rng::new(0x0B2);
+
+    // Shape mismatch: rejected at bind time, nothing bound.
+    let wrong = Tensor::new(vec![96, 112], rng.normal_matrix(96, 112)).unwrap();
+    assert!(server.bind_weights(&key, &wrong).is_err());
+    let torn = Tensor { shape: vec![112, 96], data: vec![0.0; 7] };
+    assert!(server.bind_weights(&key, &torn).is_err());
+
+    // No weights bound: the weight-bound request form fails explicitly
+    // (an error response, not a hang or a dead channel).
+    let a = Tensor::new(vec![128, 112], rng.normal_matrix(128, 112)).unwrap();
+    let c = Tensor::new(vec![128, 96], rng.normal_matrix(128, 96)).unwrap();
+    let resp = server.call(request(&key, &a, None, &c)).unwrap();
+    assert!(resp.output.is_err(), "unbound weight-bound request must fail");
+
+    // Bind, verify it serves, then unbind: bound requests fail again
+    // while inline traffic keeps working.
+    let b = Tensor::new(vec![112, 96], rng.normal_matrix(112, 96)).unwrap();
+    server.bind_weights(&key, &b).unwrap();
+    let ok = server.call(request(&key, &a, None, &c)).unwrap();
+    assert!(ok.output.is_ok());
+    assert!(server.unbind_weights(&key));
+    assert!(!server.unbind_weights(&key), "second unbind is a no-op");
+    let resp = server.call(request(&key, &a, None, &c)).unwrap();
+    assert!(resp.output.is_err(), "unbound weight-bound request must fail");
+    let inline = server.call(request(&key, &a, Some(b.clone()), &c)).unwrap();
+    assert!(inline.output.is_ok(), "inline traffic unaffected by unbind");
+
+    let m = server.shutdown();
+    assert_eq!(m.completed + m.failed, m.submitted);
+    assert_eq!(m.failed, 2, "exactly the two unbound weight-bound requests failed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The server path for a *sharded* weight-bound request: row shards
+/// share the bind-time panels across the device pool and stay
+/// bit-identical to the unsharded inline execution.
+#[test]
+fn sharded_bound_requests_bit_identical_across_device_pool() {
+    use mlir_gemm::coordinator::{ShardConfig, ShardStrategy};
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_bind_shard_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig {
+            workers: 3,
+            devices: 3,
+            shard: ShardConfig {
+                strategy: ShardStrategy::Rows,
+                min_rows: 1,
+                min_k: 1,
+                min_flops: 0.0,
+            },
+            ..Default::default()
+        },
+    );
+    let key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0x5A4D);
+    let b = Tensor::new(vec![112, 96], rng.normal_matrix(112, 96)).unwrap();
+    server.bind_weights(&key, &b).unwrap();
+    let mut server = server;
+    for i in 0..3 {
+        let a = Tensor::new(vec![128, 112], rng.normal_matrix(128, 112)).unwrap();
+        let c = Tensor::new(vec![128, 96], rng.normal_matrix(128, 96)).unwrap();
+        let want = naive_reference(&key, &a.data, &b.data, &c.data);
+        let rx = server.submit(request(&key, &a, None, &c));
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let out = resp.output.expect("sharded bound request should succeed");
+        assert_eq!(out.data, want, "sharded bound request {i} drifted");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 3);
+    assert!(
+        m.per_device.len() >= 2,
+        "expected multi-device execution, got {:?}",
+        m.per_device
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
