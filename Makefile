@@ -4,11 +4,17 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test pytest fuzz artifacts artifacts-quick bench-smoke plans lint fmt clean
+.PHONY: verify verify-scalar build test pytest fuzz artifacts artifacts-quick bench-smoke plans lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
 	$(CARGO) build --release && $(CARGO) test -q
+
+# Tier-1 with the nanokernel backend forced onto the scalar fallback —
+# the CI matrix leg that keeps the no-AVX2 path green.
+verify-scalar:
+	MLIR_GEMM_FORCE_ISA=scalar $(CARGO) build --release && \
+	MLIR_GEMM_FORCE_ISA=scalar $(CARGO) test -q
 
 build:
 	$(CARGO) build --release
@@ -37,7 +43,8 @@ artifacts-quick:
 
 # Run every bench binary in thinned smoke mode so they cannot bit-rot.
 # (exec_kernel additionally asserts the auto-compiled plan is never
-# slower than naive at 512^3.)
+# slower than naive at 512^3, and — on FMA hardware — that the simd:
+# nanokernel row is never slower than the tiled scalar kernel there.)
 bench-smoke:
 	MLIR_GEMM_SMOKE=1 $(CARGO) bench
 

@@ -21,7 +21,7 @@ use mlir_gemm::util::prng::Rng;
 
 const SPEC: &[Spec] = &[
     ("devices", true, "device contexts; >1 shards large GEMMs (default 1)"),
-    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]"),
+    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]|simd[:ISA[:MC,KC,NC[,T]]]"),
     ("bind", false, "bind every shape's B as a constant weight; half the traffic then ships A (+C) only"),
     ("help", false, "show usage"),
 ];

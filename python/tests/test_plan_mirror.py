@@ -1,17 +1,19 @@
 """Python mirror of the Rust execution-plan compiler's cost model.
 
-``rust/src/plan/mod.rs`` lowers a GemmKey through five passes (tile
-selection, packing, thread partitioning, epilogue attachment, prepack)
-under a deterministic ``PlanEnv``.  The golden plan files in
-``rust/tests/golden/`` pin its decisions for the paper's Table 1 shape
-family under ``PlanEnv::pinned()`` (4 hw threads, pool of 1, 256 KiB L2,
-8 MiB L3).  This mirror recomputes every decision from scratch in
-Python, so a cost-model change is caught on the Python side of CI even
-before the Rust golden test runs — and, in toolchain-less development
-containers, it is the only executable check of the pass pipeline.
+``rust/src/plan/mod.rs`` lowers a GemmKey through six passes (tile
+selection, packing, thread partitioning, epilogue attachment, prepack,
+ISA lowering) under a deterministic ``PlanEnv``.  The golden plan files
+in ``rust/tests/golden/`` pin its decisions for the paper's Table 1
+shape family under ``PlanEnv::pinned()`` (4 hw threads, pool of 1,
+256 KiB L2, 8 MiB L3, ISA pinned to avx2 — no host probe).  This mirror
+recomputes every decision from scratch in Python, so a cost-model change
+is caught on the Python side of CI even before the Rust golden test runs
+— and, in toolchain-less development containers, it is the only
+executable check of the pass pipeline.
 
 Mirrored from rust/src/plan/mod.rs (`compile`) and
 rust/src/autotune/mod.rs (`cpu_blockings`); keep the two in sync.
+Field-by-field schema reference: docs/PLAN_SCHEMA.md.
 """
 
 import json
@@ -26,6 +28,7 @@ L2_BYTES = 256 * 1024
 L3_BYTES = 8 * 1024 * 1024
 HW_THREADS = 4
 POOL_THREADS = 1
+PINNED_ISA = "avx2"  # IsaPref::Fixed(Isa::Avx2Fma)
 
 # runtime/kernel.rs constants
 MR = 4
@@ -55,11 +58,14 @@ def traffic_elems(m, n, k, blocking):
     return a + b + c
 
 
-def compile_plan(m, n, k, epilogue):
-    """plan::compile under PlanEnv::pinned(), no override.
+def compile_plan(m, n, k, epilogue, force="auto"):
+    """plan::compile under PlanEnv::pinned().
 
-    Returns the fields the golden files pin: the lowered kernel name,
-    fuse_epilogue, and prepack.
+    ``force`` mirrors the plan override: ``"auto"`` runs the scalar
+    pipeline (bit_exact), ``"simd"`` opts into the pass-6 nanokernel
+    lowering under the pinned ISA (fma_relaxed).  Returns the fields the
+    golden files pin: the lowered kernel name, fuse_epilogue, prepack,
+    and the numerics class.
     """
     # Pass 1 — tile selection: feasible candidates ranked by traffic,
     # ties broken toward the smallest packed panels then the largest
@@ -100,7 +106,7 @@ def compile_plan(m, n, k, epilogue):
     # Pass 4 — epilogue attachment.
     fuse_epilogue = epilogue != "none"
 
-    # Lowered kernel (plan::compile's final selection).
+    # Scalar lowering (plan::compile's auto kernel).
     if not packed:
         kernel = "naive"
     elif bands > 1:
@@ -108,20 +114,38 @@ def compile_plan(m, n, k, epilogue):
     else:
         kernel = f"tiled:{best[0]},{best[1]},{best[2]}"
 
+    # Pass 6 — ISA lowering (computed before pass 5 in Rust, same here:
+    # the prepack decision must see the final kernel).  The auto pipeline
+    # stays scalar/bit_exact; a simd override lowers to the nanokernel —
+    # even for problems the scalar pipeline would run naive — with the
+    # pass-1 blocking and pass-3 band count, and flips the class.
+    if force == "simd":
+        kernel = f"simd:{PINNED_ISA}:{best[0]},{best[1]},{best[2]},{bands}"
+        numerics = "fma_relaxed"
+    else:
+        assert force == "auto", f"unknown force {force!r}"
+        numerics = "bit_exact"
+
     # Pass 5 — prepack: panels are worth materializing at bind time
     # exactly when the lowered kernel packs B per call.
     prepack = kernel != "naive"
 
-    return {"kernel": kernel, "fuse_epilogue": fuse_epilogue, "prepack": prepack}
+    return {
+        "kernel": kernel,
+        "fuse_epilogue": fuse_epilogue,
+        "prepack": prepack,
+        "numerics": numerics,
+    }
 
 
 def test_golden_plans_match_the_mirror():
     goldens = sorted(GOLDEN_DIR.glob("plan_*.json"))
-    assert len(goldens) >= 4, f"golden plan files missing under {GOLDEN_DIR}"
+    assert len(goldens) >= 5, f"golden plan files missing under {GOLDEN_DIR}"
     for path in goldens:
         g = json.loads(path.read_text())
-        got = compile_plan(g["m"], g["n"], g["k"], g["epilogue"])
-        for field in ("kernel", "fuse_epilogue", "prepack"):
+        got = compile_plan(g["m"], g["n"], g["k"], g["epilogue"],
+                           force=g.get("force", "auto"))
+        for field in ("kernel", "fuse_epilogue", "prepack", "numerics"):
             assert got[field] == g[field], (
                 f"{path.name}: mirror computed {field}={got[field]!r}, "
                 f"golden pins {g[field]!r} — cost model and goldens drifted"
@@ -134,6 +158,7 @@ def test_known_decision_points():
         "kernel": "naive",
         "fuse_epilogue": False,
         "prepack": False,
+        "numerics": "bit_exact",
     }
     # 512^3: min traffic at kc=512, nc=1024; only mc=64 keeps the A panel
     # within L2/2; enough flops for all four pinned hw threads.
@@ -149,10 +174,27 @@ def test_known_decision_points():
     assert band == 2, f"ceil(8/4) = 2 bands, mirror says {band}"
 
 
+def test_simd_override_decision_points():
+    # The simd opt-in keeps the pass-1/pass-3 decisions and swaps the
+    # lowering: same blocking and band count, fma_relaxed class.
+    plan = compile_plan(512, 512, 512, "none", force="simd")
+    assert plan["kernel"] == "simd:avx2:64,512,1024,4"
+    assert plan["numerics"] == "fma_relaxed"
+    assert plan["prepack"], "nanokernels consume packed panels"
+    # Even a cache-resident problem lowers to the nanokernel when the
+    # operator explicitly asked for SIMD (and then prepacks).
+    small = compile_plan(64, 64, 64, "none", force="simd")
+    assert small["kernel"].startswith("simd:avx2:")
+    assert small["prepack"]
+    # The auto pipeline never lowers to SIMD: bit_exact is the default.
+    assert compile_plan(512, 512, 512, "none")["numerics"] == "bit_exact"
+
+
 def test_every_prepack_decision_follows_the_kernel():
     # The prepack pass is a pure function of the lowered kernel: panels
     # exist exactly when the kernel would pack B per call.
     for m, n, k in [(16, 16, 16), (64, 64, 64), (96, 96, 96), (128, 128, 128),
                     (256, 256, 256), (512, 512, 512), (1024, 768, 512)]:
-        plan = compile_plan(m, n, k, "none")
-        assert plan["prepack"] == (plan["kernel"] != "naive"), plan
+        for force in ("auto", "simd"):
+            plan = compile_plan(m, n, k, "none", force=force)
+            assert plan["prepack"] == (plan["kernel"] != "naive"), plan

@@ -1,7 +1,9 @@
-//! Micro-kernel engine throughput: naive vs tiled vs threaded GFLOP/s
-//! across GEMM problem sizes, with a bitwise cross-check (every policy
-//! must reproduce the naive kernel exactly) and a machine-readable JSON
-//! record.
+//! Micro-kernel engine throughput: naive vs tiled vs threaded vs the
+//! explicit-SIMD nanokernel, GFLOP/s across GEMM problem sizes, with a
+//! correctness cross-check per numerics class (scalar policies must
+//! reproduce the naive kernel bit-exactly; the `simd:` row must pass the
+//! fma_relaxed condition-scaled tolerance before it is timed) and a
+//! machine-readable JSON record.
 //!
 //! The JSON lands in `reports/exec_kernel.json` on every run;
 //! `MLIR_GEMM_RECORD_BASELINE=1` additionally refreshes the committed
@@ -18,6 +20,7 @@ use std::time::Instant;
 use mlir_gemm::harness::{bar_chart, CsvTable, FigureOutput};
 use mlir_gemm::plan::{compile, GemmKey, PlanEnv};
 use mlir_gemm::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, PrepackedB};
+use mlir_gemm::runtime::nanokernel::{self, Isa};
 use mlir_gemm::util::json::{self, Json};
 use mlir_gemm::util::prng::Rng;
 
@@ -41,6 +44,14 @@ fn main() {
     let threads = std::thread::available_parallelism()
         .map(|v| v.get())
         .unwrap_or(1);
+    // The nanokernel row competes whenever detection yields an ISA (the
+    // MLIR_GEMM_FORCE_ISA=scalar CI leg drops it); the perf gates below
+    // additionally require the real FMA hardware — the portable fallback
+    // proves correctness, not speed.
+    let simd_isa = nanokernel::detect().ok().flatten();
+    let simd_real = simd_isa
+        .map(|isa| isa != Isa::Portable && nanokernel::hw_available(isa))
+        .unwrap_or(false);
 
     let mut rows: Vec<Row> = Vec::new();
     for &size in &sizes {
@@ -58,12 +69,18 @@ fn main() {
             &PlanEnv::default(),
         )
         .expect("plan compilation is infallible without an override");
-        let policies: Vec<(String, KernelPolicy)> = vec![
+        let mut policies: Vec<(String, KernelPolicy)> = vec![
             ("naive".into(), KernelPolicy::Naive),
             ("tiled".into(), KernelPolicy::Tiled(Blocking::default())),
             ("threaded".into(), KernelPolicy::Threaded(Blocking::default(), 0)),
             (format!("plan:{}", auto_plan.kernel.name()), auto_plan.kernel),
         ];
+        if let Some(isa) = simd_isa {
+            policies.push((
+                format!("simd:{}", isa.name()),
+                KernelPolicy::Simd(Blocking::default(), 0, isa),
+            ));
+        }
         let mut rng = Rng::new(0xEC + size as u64);
         let a = rng.normal_matrix(m, k);
         let b = rng.normal_matrix(k, n);
@@ -76,6 +93,15 @@ fn main() {
             kernel::matmul(policy, &mut out, &a, &b, m, n, k);
             match &reference {
                 None => reference = Some(out.clone()),
+                // fma_relaxed rows are checked against their class
+                // contract — the condition-scaled tolerance vs the naive
+                // oracle — before a single timed iteration runs.
+                Some(r) if matches!(policy, KernelPolicy::Simd(..)) => {
+                    nanokernel::verify_fma_relaxed(&out, r, &a, &b, &c, None, m, n, k)
+                        .unwrap_or_else(|e| {
+                            panic!("{name} at {size}^3 violated the ULP contract: {e}")
+                        });
+                }
                 Some(r) => {
                     let ok = r
                         .iter()
@@ -193,6 +219,39 @@ fn main() {
         );
     }
 
+    // Nanokernel gates, only where the FMA hardware really exists (the
+    // portable fallback and the forced-scalar CI leg are correctness
+    // paths, not perf claims).  Smoke mode: simd never slower than the
+    // tiled scalar kernel at 512^3.  Full mode: the acceptance target —
+    // fma_relaxed at 512^3 is >= 1.5x the tiled scalar kernel.
+    if simd_real {
+        let tiled_512 = rows
+            .iter()
+            .find(|r| r.size == 512 && r.policy == "tiled")
+            .expect("512^3 tiled row");
+        let simd_512 = rows
+            .iter()
+            .find(|r| r.size == 512 && r.policy.starts_with("simd:"))
+            .expect("512^3 simd row");
+        assert!(
+            simd_512.seconds <= tiled_512.seconds * 1.05,
+            "nanokernel ({}, {:.6}s) slower than tiled scalar ({:.6}s) at 512^3",
+            simd_512.policy,
+            simd_512.seconds,
+            tiled_512.seconds
+        );
+        if !smoke {
+            assert!(
+                simd_512.gflops >= tiled_512.gflops * 1.5,
+                "nanokernel ({}, {:.2} GFLOP/s) under 1.5x tiled scalar \
+                 ({:.2} GFLOP/s) at 512^3",
+                simd_512.policy,
+                simd_512.gflops,
+                tiled_512.gflops
+            );
+        }
+    }
+
     // Human-readable figure + CSV like every other bench.
     let mut table = CsvTable::new(&["size", "policy", "best_seconds", "gflops", "speedup_vs_naive"]);
     for row in &rows {
@@ -222,9 +281,12 @@ fn main() {
         chart: bar_chart(&format!("GFLOP/s, {top}^3 f32 GEMM by kernel policy"), &bar_refs, 40),
         summary: format!(
             "micro-kernel engine throughput, naive vs tiled vs threaded vs the \
-             auto-compiled plan ({threads} hw threads); every policy bit-checked \
-             against naive; plan asserted never slower than naive at 512^3; \
-             bound (prepacked) B asserted never slower than inline B at 512^3"
+             auto-compiled plan vs the simd nanokernel ({threads} hw threads); \
+             scalar policies bit-checked against naive, the simd row checked \
+             against the fma_relaxed ULP contract before timing; plan asserted \
+             never slower than naive at 512^3; bound (prepacked) B asserted \
+             never slower than inline B at 512^3; simd asserted never slower \
+             than tiled (and >= 1.5x in full mode) at 512^3 on FMA hardware"
         ),
     };
     bench_common::emit(&output);
@@ -252,7 +314,8 @@ fn main() {
             .find(|r| {
                 r.size == size
                     && (r.policy == policy
-                        || (policy == "plan" && r.policy.starts_with("plan:")))
+                        || (policy == "plan" && r.policy.starts_with("plan:"))
+                        || (policy == "simd" && r.policy.starts_with("simd:")))
             })
             .map(|r| r.gflops)
             .unwrap_or(0.0);
@@ -275,7 +338,11 @@ fn main() {
         ("hw_threads", json::num(threads as f64)),
         (
             "policies",
-            json::s("naive | tiled (default blocking) | threaded (auto) | plan:<compiled>"),
+            json::s(
+                "naive | tiled (default blocking) | threaded (auto) | \
+                 plan:<compiled> | simd:<isa> (fma_relaxed nanokernel; absent \
+                 under MLIR_GEMM_FORCE_ISA=scalar)",
+            ),
         ),
         (
             "source",
@@ -301,6 +368,7 @@ fn main() {
                 ("tiled", json::num(speedup_at(headline, "tiled"))),
                 ("threaded", json::num(speedup_at(headline, "threaded"))),
                 ("plan", json::num(speedup_at(headline, "plan"))),
+                ("simd", json::num(speedup_at(headline, "simd"))),
             ]),
         ),
         (
@@ -310,6 +378,7 @@ fn main() {
                 ("tiled", json::num(speedup_at(top, "tiled"))),
                 ("threaded", json::num(speedup_at(top, "threaded"))),
                 ("plan", json::num(speedup_at(top, "plan"))),
+                ("simd", json::num(speedup_at(top, "simd"))),
             ]),
         ),
     ]);

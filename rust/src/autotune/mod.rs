@@ -21,8 +21,9 @@
 
 use std::time::Instant;
 
-use crate::plan::{ExecutionPlan, PassTrace};
+use crate::plan::{ExecutionPlan, NumericsClass, PassTrace};
 use crate::runtime::kernel::{self, Blocking, KernelPolicy};
+use crate::runtime::nanokernel;
 use crate::schedule::{Dtype, Schedule};
 use crate::sim::{simulate, DeviceModel, SimResult};
 use crate::util::prng::Rng;
@@ -111,9 +112,13 @@ pub fn cpu_blockings() -> Vec<Blocking> {
 /// Measure every CPU blocking (plus the naive reference) on an
 /// m x n x k problem and rank by GFLOP/s, best first.  `threads == 1`
 /// sweeps the single-thread tiled kernel; any other value sweeps the
-/// threaded kernel with that thread count (0 = auto).  Each candidate
-/// gets one warmup plus `iters` timed runs; the minimum counts (the
-/// paper's protocol keeps the best-performing variant).
+/// threaded kernel with that thread count (0 = auto).  When the host
+/// (or the `MLIR_GEMM_FORCE_ISA` override) offers a nanokernel ISA,
+/// every blocking is additionally swept through the `simd:<isa>` kernel
+/// — the ISA-aware sweep ranks the `fma_relaxed` candidates against the
+/// scalar ones on the same wall clock.  Each candidate gets one warmup
+/// plus `iters` timed runs; the minimum counts (the paper's protocol
+/// keeps the best-performing variant).
 pub fn sweep_cpu(
     m: usize,
     n: usize,
@@ -126,6 +131,7 @@ pub fn sweep_cpu(
     let b = rng.normal_matrix(k, n);
     let mut out = vec![0.0f32; m * n];
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let simd_isa = nanokernel::detect().unwrap_or(None);
     let mut policies = vec![KernelPolicy::Naive];
     for bs in cpu_blockings() {
         policies.push(if threads == 1 {
@@ -133,6 +139,9 @@ pub fn sweep_cpu(
         } else {
             KernelPolicy::Threaded(bs, threads)
         });
+        if let Some(isa) = simd_isa {
+            policies.push(KernelPolicy::Simd(bs, if threads == 1 { 1 } else { threads }, isa));
+        }
     }
     let mut cands: Vec<CpuCandidate> = policies
         .into_iter()
@@ -159,6 +168,13 @@ pub fn sweep_cpu(
 /// the plan's real shape (min-of-`iters` wall clock, one warmup), and
 /// the fastest kernel wins the plan slot.  The sweep is recorded in the
 /// plan's provenance trace; everything else about the plan is preserved.
+///
+/// Refinement respects the plan's numerics class: SIMD candidates are
+/// only entered when the plan is already `fma_relaxed` (the caller opted
+/// into FMA numerics at compile time).  The refined plan's class tracks
+/// the winning kernel, so refinement may *tighten* `fma_relaxed` back to
+/// `bit_exact` (a scalar kernel won) but can never relax a `bit_exact`
+/// plan — that would silently void the bitwise contracts pinned on it.
 pub fn refine_measured(plan: &ExecutionPlan, iters: usize) -> ExecutionPlan {
     let (m, n, k) = (plan.m, plan.n, plan.k);
     if m == 0 || n == 0 || k == 0 {
@@ -172,6 +188,18 @@ pub fn refine_measured(plan: &ExecutionPlan, iters: usize) -> ExecutionPlan {
     ] {
         if !candidates.contains(&c) {
             candidates.push(c);
+        }
+    }
+    if plan.numerics == NumericsClass::FmaRelaxed {
+        if let Ok(Some(isa)) = nanokernel::detect() {
+            let threads = match plan.kernel {
+                KernelPolicy::Threaded(_, t) | KernelPolicy::Simd(_, t, _) => t,
+                _ => 1,
+            };
+            let c = KernelPolicy::Simd(Blocking::default(), threads, isa);
+            if !candidates.contains(&c) {
+                candidates.push(c);
+            }
         }
     }
     let n_candidates = candidates.len();
@@ -200,6 +228,10 @@ pub fn refine_measured(plan: &ExecutionPlan, iters: usize) -> ExecutionPlan {
     // The prepack decision tracks the kernel: a swap to/from the direct
     // kernel flips whether bound weights materialize panels.
     refined.prepack = !matches!(best.1, KernelPolicy::Naive);
+    // The numerics class tracks the kernel too.  Because SIMD candidates
+    // only enter for fma_relaxed plans, this can tighten the class
+    // (scalar won an fma_relaxed plan's sweep) but never relax it.
+    refined.numerics = NumericsClass::of(&best.1);
     refined.trace.push(PassTrace {
         pass: "measure-refine".to_string(),
         decision: best.1.name(),
@@ -287,7 +319,15 @@ mod tests {
     #[test]
     fn cpu_sweep_measures_and_ranks_every_blocking() {
         let cands = sweep_cpu(48, 48, 48, 1, 1);
-        assert_eq!(cands.len(), cpu_blockings().len() + 1, "naive + every blocking");
+        // The sweep is ISA-aware: when the host (or the env override)
+        // offers a nanokernel, every blocking appears twice — once
+        // scalar, once simd.
+        let per_blocking = 1 + nanokernel::detect().unwrap_or(None).is_some() as usize;
+        assert_eq!(
+            cands.len(),
+            cpu_blockings().len() * per_blocking + 1,
+            "naive + every blocking (x2 when an ISA is available)"
+        );
         assert!(cands.iter().any(|c| c.policy == KernelPolicy::Naive));
         for c in &cands {
             assert!(c.gflops > 0.0 && c.seconds > 0.0, "{c:?}");
@@ -311,6 +351,34 @@ mod tests {
         // Degenerate shapes pass through untouched.
         let zero = compile(&GemmKey::plain(0, 0, 0), &PlanEnv::pinned()).unwrap();
         assert_eq!(refine_measured(&zero, 1), zero);
+    }
+
+    #[test]
+    fn refinement_never_relaxes_a_bit_exact_plan() {
+        use crate::plan::{compile, GemmKey, PlanEnv};
+        // A default-compiled plan is bit_exact; refinement must not
+        // introduce a SIMD kernel (that would silently change numerics).
+        let plan = compile(&GemmKey::plain(48, 48, 48), &PlanEnv::pinned()).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::BitExact);
+        let refined = refine_measured(&plan, 1);
+        assert!(
+            !matches!(refined.kernel, KernelPolicy::Simd(..)),
+            "bit_exact refinement picked {:?}",
+            refined.kernel
+        );
+        assert_eq!(refined.numerics, NumericsClass::BitExact);
+    }
+
+    #[test]
+    fn refinement_of_fma_relaxed_tracks_the_winning_kernel_class() {
+        use crate::plan::{compile, GemmKey, PlanEnv, PlanOverride};
+        let env = PlanEnv::pinned().with_force(PlanOverride::Simd);
+        let plan = compile(&GemmKey::plain(48, 48, 48), &env).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::FmaRelaxed);
+        let refined = refine_measured(&plan, 1);
+        // Whatever kernel wins, the recorded class must agree with it.
+        assert_eq!(refined.numerics, NumericsClass::of(&refined.kernel));
+        assert_eq!(refined.trace.last().unwrap().pass, "measure-refine");
     }
 
     #[test]

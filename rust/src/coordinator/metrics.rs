@@ -48,6 +48,21 @@ pub struct PlanLoad {
     pub bytes_saved: f64,
 }
 
+/// GEMM work rolled up by the ISA lowering that executed it (`isa
+/// <label>` report lines).  The label is the plan's pass-6 decision:
+/// `scalar` for bit_exact scalar kernels, `simd:<isa>` for nanokernel
+/// plans — the rollup answers "how much of the served work ran on the
+/// explicit-SIMD backend" without walking every plan entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IsaLoad {
+    /// Completed GEMM requests.
+    pub requests: u64,
+    /// Total GEMM flops (2·m·n·k per request).
+    pub flops: f64,
+    /// Executor busy time spent on that work, seconds.
+    pub busy_sec: f64,
+}
+
 #[derive(Debug)]
 struct Inner {
     submitted: u64,
@@ -62,6 +77,8 @@ struct Inner {
     per_device: BTreeMap<usize, DeviceLoad>,
     /// GEMM work keyed by the execution plan that ran it.
     per_plan: BTreeMap<String, PlanLoad>,
+    /// GEMM work keyed by the plan's ISA lowering label.
+    per_isa: BTreeMap<String, IsaLoad>,
 }
 
 impl Default for Inner {
@@ -78,6 +95,7 @@ impl Default for Inner {
             per_variant: BTreeMap::new(),
             per_device: BTreeMap::new(),
             per_plan: BTreeMap::new(),
+            per_isa: BTreeMap::new(),
         }
     }
 }
@@ -100,6 +118,7 @@ pub struct MetricsSnapshot {
     pub per_variant: BTreeMap<String, u64>,
     pub per_device: BTreeMap<usize, DeviceLoad>,
     pub per_plan: BTreeMap<String, PlanLoad>,
+    pub per_isa: BTreeMap<String, IsaLoad>,
 }
 
 impl Metrics {
@@ -138,24 +157,35 @@ impl Metrics {
 
     /// Make a compiled plan visible in the report even before (or
     /// without) any work executing under it (the server preseeds every
-    /// registry plan at startup).
-    pub fn on_plan_seen(&self, plan_id: &str) {
-        self.inner
-            .lock()
-            .unwrap()
-            .per_plan
-            .entry(plan_id.to_string())
-            .or_default();
+    /// registry plan at startup).  `isa` is the plan's pass-6 lowering
+    /// label (`scalar` or `simd:<isa>`); it seeds the ISA rollup so the
+    /// report shows which backends are in play from the start.
+    pub fn on_plan_seen(&self, plan_id: &str, isa: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_plan.entry(plan_id.to_string()).or_default();
+        g.per_isa.entry(isa.to_string()).or_default();
     }
 
     /// Account completed GEMM work under the plan that actually executed
-    /// it (the plan travels with the work item, read at execution time).
-    pub fn on_plan_work(&self, plan_id: &str, requests: u64, flops: f64, busy_sec: f64) {
+    /// it (the plan travels with the work item, read at execution time),
+    /// and roll the same work up under the plan's ISA lowering label.
+    pub fn on_plan_work(
+        &self,
+        plan_id: &str,
+        isa: &str,
+        requests: u64,
+        flops: f64,
+        busy_sec: f64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let load = g.per_plan.entry(plan_id.to_string()).or_default();
         load.requests += requests;
         load.flops += flops;
         load.busy_sec += busy_sec;
+        let rollup = g.per_isa.entry(isa.to_string()).or_default();
+        rollup.requests += requests;
+        rollup.flops += flops;
+        rollup.busy_sec += busy_sec;
     }
 
     /// Account the prepacked-panel cache outcome of completed requests
@@ -195,6 +225,7 @@ impl Metrics {
             per_variant: g.per_variant.clone(),
             per_device: g.per_device.clone(),
             per_plan: g.per_plan.clone(),
+            per_isa: g.per_isa.clone(),
         }
     }
 }
@@ -243,6 +274,22 @@ impl MetricsSnapshot {
                     load.pack_hits,
                     load.pack_misses,
                     load.bytes_saved / 1e6
+                ));
+            }
+        }
+        for (isa, load) in &self.per_isa {
+            if load.busy_sec > 0.0 && load.flops > 0.0 {
+                out.push_str(&format!(
+                    "isa {isa}: {} reqs, {:.2} GFLOP, {:.2} GFLOP/s busy-throughput\n",
+                    load.requests,
+                    load.flops / 1e9,
+                    load.flops / load.busy_sec / 1e9
+                ));
+            } else {
+                out.push_str(&format!(
+                    "isa {isa}: {} reqs, {:.2} GFLOP\n",
+                    load.requests,
+                    load.flops / 1e9
                 ));
             }
         }
@@ -321,11 +368,11 @@ mod tests {
     #[test]
     fn plan_work_is_segmented_per_plan_id() {
         let m = Metrics::new();
-        m.on_plan_seen("64x64x64/f16:naive");
-        m.on_plan_work("64x64x64/f16:naive", 2, 2.0e9, 0.5);
+        m.on_plan_seen("64x64x64/f16:naive", "scalar");
+        m.on_plan_work("64x64x64/f16:naive", "scalar", 2, 2.0e9, 0.5);
         // A plan swap (refinement) opens a new entry instead of blending
         // the old plan's totals under the new id.
-        m.on_plan_work("512x512x512/f16:tiled:128,256,1024", 1, 3.0e9, 0.25);
+        m.on_plan_work("512x512x512/f16:tiled:128,256,1024", "scalar", 1, 3.0e9, 0.25);
         let s = m.snapshot();
         assert_eq!(s.per_plan["64x64x64/f16:naive"].requests, 2);
         assert!((s.per_plan["64x64x64/f16:naive"].flops - 2.0e9).abs() < 1.0);
@@ -344,12 +391,33 @@ mod tests {
     #[test]
     fn plan_visible_before_any_work() {
         let m = Metrics::new();
-        m.on_plan_seen("1024x1024x1024/f16:threaded:128,256,1024,4");
+        m.on_plan_seen("1024x1024x1024/f16:threaded:128,256,1024,4", "scalar");
         let report = m.snapshot().report();
         assert!(
             report.contains("plan 1024x1024x1024/f16:threaded:128,256,1024,4: 0 reqs"),
             "{report}"
         );
+        // The seeded ISA label shows up too, before any work runs.
+        assert!(report.contains("isa scalar: 0 reqs"), "{report}");
+    }
+
+    #[test]
+    fn isa_rollup_aggregates_across_plans() {
+        // Two scalar plans and one simd plan: the per-isa rollup blends
+        // same-label plans but keeps the labels apart.
+        let m = Metrics::new();
+        m.on_plan_work("p_naive", "scalar", 2, 2.0e9, 0.5);
+        m.on_plan_work("p_tiled", "scalar", 1, 1.0e9, 0.25);
+        m.on_plan_work("p_simd", "simd:avx2", 4, 8.0e9, 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.per_isa["scalar"].requests, 3);
+        assert!((s.per_isa["scalar"].flops - 3.0e9).abs() < 1.0);
+        assert_eq!(s.per_isa["simd:avx2"].requests, 4);
+        let report = s.report();
+        // scalar: 3 GFLOP / 0.75 s = 4 GFLOP/s; simd: 8 GFLOP / 0.5 s = 16
+        assert!(report.contains("isa scalar: 3 reqs"), "{report}");
+        assert!(report.contains("isa simd:avx2: 4 reqs"), "{report}");
+        assert!(report.contains("16.00 GFLOP/s"), "{report}");
     }
 
     #[test]

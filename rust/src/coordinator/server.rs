@@ -97,9 +97,13 @@ pub struct ServerConfig {
     pub rerank_measured: bool,
     /// Execution-plan override (`--plan` CLI plumbing).  `Auto` runs the
     /// full pass pipeline per GemmKey; a forced kernel still compiles a
-    /// per-key plan (with the override recorded in its trace).  Plans are
-    /// bit-identical — this changes throughput only, which the metrics
-    /// report attributes per plan id.
+    /// per-key plan (with the override recorded in its trace).  Scalar
+    /// overrides are bit-identical — they change throughput only, which
+    /// the metrics report attributes per plan id and per ISA.  `Simd`
+    /// (and forced `simd:<isa>` kernels) opt the server into the
+    /// `fma_relaxed` numerics class: results honor the documented
+    /// ULP-tolerance contract instead of bitwise identity (see
+    /// docs/PLAN_SCHEMA.md and DESIGN.md §10).
     pub plan: PlanOverride,
 }
 
@@ -161,6 +165,9 @@ struct ShardedJob {
     /// The request-level plan id (metrics attribute the completed
     /// request here; per-shard flops go to each shard plan's id).
     plan_id: String,
+    /// The request-level plan's ISA lowering label (`scalar` or
+    /// `simd:<isa>`), feeding the per-ISA metrics rollup.
+    isa_label: String,
     /// Pack-cache outcome of this request, recorded once on completion:
     /// (hits, misses, payload bytes saved).
     pack: (u64, u64, f64),
@@ -214,7 +221,7 @@ impl Server {
         // Preseed the report with every registry-compiled plan so an idle
         // key is still visible.
         for (_key, p) in registry.plans() {
-            metrics.on_plan_seen(&p.id());
+            metrics.on_plan_seen(&p.id(), &p.isa_label());
         }
         let (submit_tx, submit_rx) = mpsc::channel::<Job>();
 
@@ -273,6 +280,7 @@ impl Server {
                                 {
                                     m.on_plan_work(
                                         &task.eplan.id(),
+                                        &task.eplan.isa_label(),
                                         0,
                                         2.0 * sm as f64 * sn as f64 * sk as f64,
                                         busy,
@@ -700,7 +708,14 @@ fn dispatch_sharded(
     let shared = Arc::new(ShardedJob {
         id,
         variant: variant.to_string(),
-        plan_id: request_plan.map(|p| p.id()).unwrap_or_else(|| "unplanned".into()),
+        plan_id: request_plan
+            .as_ref()
+            .map(|p| p.id())
+            .unwrap_or_else(|| "unplanned".into()),
+        isa_label: request_plan
+            .as_ref()
+            .map(|p| p.isa_label())
+            .unwrap_or_else(|| "scalar".into()),
         pack,
         submitted_at,
         exec_started: Mutex::new(None),
@@ -792,7 +807,7 @@ fn finish_shard(
             // Flops and busy time were attributed per shard plan as each
             // one executed; here only the completed request is counted,
             // under the request-level plan id.
-            metrics.on_plan_work(&sj.plan_id, 1, 0.0, 0.0);
+            metrics.on_plan_work(&sj.plan_id, &sj.isa_label, 1, 0.0, 0.0);
             let (hits, misses, saved) = sj.pack;
             metrics.on_pack(&sj.plan_id, hits, misses, saved);
         }
@@ -972,6 +987,10 @@ fn run_batch(
         .as_ref()
         .map(|p| p.id())
         .unwrap_or_else(|| "unplanned".to_string());
+    let isa_label = eplan
+        .as_ref()
+        .map(|p| p.isa_label())
+        .unwrap_or_else(|| "scalar".to_string());
     let result = if is_bound {
         match &eplan {
             None => Err(anyhow!("weight-bound batch for {variant} has no compiled plan")),
@@ -1030,6 +1049,7 @@ fn run_batch(
                 // (swapped) plan segments instead of blending.
                 metrics.on_plan_work(
                     &plan_id,
+                    &isa_label,
                     outs.len() as u64,
                     item_flops * outs.len() as f64,
                     timing.exec_seconds,

@@ -40,7 +40,7 @@ const SPEC: &[Spec] = &[
     ("requests", true, "serve: number of synthetic requests (default 64)"),
     ("workers", true, "serve: worker threads (default 2)"),
     ("devices", true, "serve: device contexts; >1 shards large GEMMs (default 1)"),
-    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]] (was --kernel)"),
+    ("plan", true, "plan override: auto|naive|tiled[:MC,KC,NC]|threaded[:MC,KC,NC[,T]]|simd[:ISA[:MC,KC,NC[,T]]] (simd opts into fma_relaxed numerics; see docs/PLAN_SCHEMA.md)"),
     ("bind", false, "serve: bind each shape's B as a constant weight at startup; traffic then ships A (+C) only"),
     ("refine", false, "plan: measured refinement pass over the compiled plan"),
     ("target", true, "autotune: gpu (modeled tile space) | cpu (measured block sweep); default gpu"),
@@ -386,6 +386,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         eplan.kernel.name(),
         naive * 1e3,
         if measured > 0.0 { naive / measured } else { 0.0 },
+    );
+    println!(
+        "isa {} | numerics {}",
+        eplan.isa_label(),
+        eplan.numerics.name()
     );
     Ok(())
 }

@@ -14,26 +14,45 @@
 //! | packing              | global -> shared memory staging   | packed panels vs direct loop |
 //! | thread partitioning  | grid mapping                      | row-band count               |
 //! | epilogue attachment  | epilogue fusion (Table 1 col 4)   | fuse bias+activation into the kernel's write-back |
+//! | prepack              | bind-time operand staging         | materialize B panels at weight-bind |
+//! | isa                  | warp tile -> `mma.sync` lowering  | `scalar` or `simd:<isa>` micro kernel + numerics class |
 //!
+//! (See docs/PLAN_SCHEMA.md for the field-by-field JSON reference.)
 //! The result is an [`ExecutionPlan`]: an inspectable value (JSON
 //! round-trippable, with a per-pass provenance trace) cached per
 //! [`GemmKey`] in `coordinator::registry` and threaded *explicitly*
 //! through every execution path.  There is no global state anywhere in
 //! this module.
 //!
-//! **Bit-exactness.**  A plan never changes numerics: every lowered
-//! kernel is bit-identical to the naive i-k-j loop (the
-//! `runtime::kernel` module invariant), and the fused epilogue is
-//! applied exactly once per output element *after* that element's full
-//! k-reduction (per disjoint row band, in the band's own thread), which
-//! is the same per-element operation sequence as a separate epilogue
-//! pass.  Sharding's epilogue-replay contract is untouched because shard
-//! programs carry no epilogue and the reduction replays the tail.
-//! Pinned by `rust/tests/kernel_equivalence.rs` across compiled plans.
+//! **Numerics classes.**  Every plan carries a [`NumericsClass`]:
+//!
+//! * `bit_exact` — the lowered kernel is bit-identical to the naive
+//!   i-k-j loop (the `runtime::kernel` module invariant), and the fused
+//!   epilogue is applied exactly once per output element *after* that
+//!   element's full k-reduction (per disjoint row band, in the band's
+//!   own thread), which is the same per-element operation sequence as a
+//!   separate epilogue pass.  Sharding's epilogue-replay contract is
+//!   untouched because shard programs carry no epilogue and the
+//!   reduction replays the tail.  Pinned by
+//!   `rust/tests/kernel_equivalence.rs` and the fuzz-differential sweep
+//!   across compiled plans.  The pipeline compiles `bit_exact` plans
+//!   unless SIMD is explicitly requested — pass 6 keeps the scalar
+//!   micro kernel by default so the serving path's bitwise contracts
+//!   hold without opt-in.
+//! * `fma_relaxed` — pass 6 lowered the register tile to an
+//!   explicit-SIMD nanokernel (`runtime::nanokernel`): same
+//!   increasing-k term order, but each term contracted with a fused
+//!   multiply-add, so the output is verified against the naive oracle
+//!   by the condition-scaled ULP-tolerance contract
+//!   (`nanokernel::verify_fma_relaxed`, DESIGN.md §10) instead of by
+//!   bits.  Requested with `--plan simd` ([`PlanOverride::Simd`]) or a
+//!   forced `simd:<isa>` policy; refinement may *tighten* a plan's
+//!   class (fma_relaxed -> bit_exact) but never silently relax it.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, MR, PrepackedB};
+use crate::runtime::nanokernel::{self, Isa};
 use crate::schedule::Dtype;
 use crate::util::json::{self, Json};
 
@@ -91,19 +110,29 @@ impl GemmKey {
 }
 
 /// Operator-facing plan override (`--plan` CLI flag): `auto` runs the
-/// full pass pipeline; anything else forces the lowered kernel while the
-/// pipeline still records *why* in the trace.
+/// full pass pipeline; `simd` runs the same pipeline but asks pass 6 to
+/// lower the register tile to a nanokernel (the ISA itself still comes
+/// from detection / [`IsaPref`]); anything else forces the lowered
+/// kernel while the pipeline still records *why* in the trace.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlanOverride {
     Auto,
+    /// Full pipeline + SIMD lowering in pass 6 (`--plan simd`).  The
+    /// compiled plan is classed `fma_relaxed` unless the scalar
+    /// fallback is forced (env/[`IsaPref::Scalar`]).
+    Simd,
     Force(KernelPolicy),
 }
 
 impl PlanOverride {
-    /// `auto` | `naive` | `tiled[:MC,KC,NC]` | `threaded[:MC,KC,NC[,T]]`.
+    /// `auto` | `simd` | `naive` | `tiled[:MC,KC,NC]` |
+    /// `threaded[:MC,KC,NC[,T]]` | `simd:<isa>[:MC,KC,NC[,T]]`.
     pub fn parse(text: &str) -> Result<PlanOverride> {
         if text == "auto" {
             return Ok(PlanOverride::Auto);
+        }
+        if text == "simd" {
+            return Ok(PlanOverride::Simd);
         }
         let policy = KernelPolicy::parse(text)?;
         Ok(PlanOverride::Force(policy))
@@ -112,9 +141,24 @@ impl PlanOverride {
     pub fn name(&self) -> String {
         match self {
             PlanOverride::Auto => "auto".to_string(),
+            PlanOverride::Simd => "simd".to_string(),
             PlanOverride::Force(p) => p.name(),
         }
     }
+}
+
+/// How pass 6 resolves the nanokernel ISA when SIMD is requested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsaPref {
+    /// Probe the host ([`nanokernel::detect`], which also honors the
+    /// `MLIR_GEMM_FORCE_ISA` env override).  The production default.
+    Detect,
+    /// Keep the scalar micro kernel even when SIMD is requested; the
+    /// plan stays `bit_exact`.
+    Scalar,
+    /// Pin the ISA without probing — golden/pinned environments use
+    /// this so compiled plans are identical on every build host.
+    Fixed(Isa),
 }
 
 /// Everything the pass pipeline may consult about the execution
@@ -135,6 +179,8 @@ pub struct PlanEnv {
     pub l3_bytes: usize,
     /// `--plan` override; `Auto` runs the full pipeline.
     pub force: PlanOverride,
+    /// How pass 6 picks the nanokernel ISA when SIMD is requested.
+    pub isa: IsaPref,
 }
 
 impl Default for PlanEnv {
@@ -147,16 +193,20 @@ impl Default for PlanEnv {
             l2_bytes: 256 * 1024,
             l3_bytes: 8 * 1024 * 1024,
             force: PlanOverride::Auto,
+            isa: IsaPref::Detect,
         }
     }
 }
 
 impl PlanEnv {
-    /// Fully deterministic environment (4 hw threads, default caches):
-    /// used by the golden-plan tests so compiled decisions are stable
-    /// across build hosts.
+    /// Fully deterministic environment (4 hw threads, default caches,
+    /// ISA pinned to avx2 — no host probe): used by the golden-plan
+    /// tests so compiled decisions are stable across build hosts.
+    /// (Execution of such a plan on a non-AVX2 host still works: the
+    /// dispatch layer degrades the body to portable, bits change only
+    /// within the fma_relaxed tolerance.)
     pub fn pinned() -> PlanEnv {
-        PlanEnv { hw_threads: 4, ..Default::default() }
+        PlanEnv { hw_threads: 4, isa: IsaPref::Fixed(Isa::Avx2Fma), ..Default::default() }
     }
 
     /// Environment for an executor embedded in a worker pool of
@@ -170,11 +220,57 @@ impl PlanEnv {
         self
     }
 
+    pub fn with_isa(mut self, isa: IsaPref) -> PlanEnv {
+        self.isa = isa;
+        self
+    }
+
     fn resolved_hw(&self) -> usize {
         if self.hw_threads > 0 {
             self.hw_threads
         } else {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// The numerics contract a compiled plan promises (see the module doc
+/// and DESIGN.md §10).  A pure function of the lowered kernel
+/// ([`NumericsClass::of`]): scalar kernels are `bit_exact`, SIMD
+/// kernels `fma_relaxed`.  Serialized plans carry it explicitly so the
+/// contract is visible without knowing the kernel-name grammar; an
+/// inconsistent pair is a deserialization error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumericsClass {
+    /// Output bit-identical to the naive i-k-j oracle (the
+    /// `runtime::kernel` module invariant).
+    BitExact,
+    /// Output within the condition-scaled FMA tolerance of the oracle
+    /// (`runtime::nanokernel::verify_fma_relaxed`).
+    FmaRelaxed,
+}
+
+impl NumericsClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NumericsClass::BitExact => "bit_exact",
+            NumericsClass::FmaRelaxed => "fma_relaxed",
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<NumericsClass> {
+        match text {
+            "bit_exact" => Ok(NumericsClass::BitExact),
+            "fma_relaxed" => Ok(NumericsClass::FmaRelaxed),
+            _ => bail!("unknown numerics class {text:?} (bit_exact | fma_relaxed)"),
+        }
+    }
+
+    /// The class a kernel policy implies.
+    pub fn of(kernel: &KernelPolicy) -> NumericsClass {
+        match kernel {
+            KernelPolicy::Simd(..) => NumericsClass::FmaRelaxed,
+            _ => NumericsClass::BitExact,
         }
     }
 }
@@ -215,6 +311,12 @@ pub struct ExecutionPlan {
     /// lowered kernel packs B.  Packing is a pure i/j rearrangement, so
     /// prepacked execution is bit-identical to packing per call.
     pub prepack: bool,
+    /// Pass 6's contract: `bit_exact` plans are verified bitwise
+    /// against the naive oracle, `fma_relaxed` plans by the
+    /// condition-scaled tolerance.  Always equal to
+    /// `NumericsClass::of(&self.kernel)` — stored (and serialized)
+    /// explicitly so the promise is inspectable and pinned.
+    pub numerics: NumericsClass,
     /// Coarse host cost estimate (the `mlir-gemm plan` command prints it
     /// next to a measurement).
     pub predicted_seconds: f64,
@@ -257,6 +359,15 @@ impl ExecutionPlan {
         )
     }
 
+    /// The metrics/reporting label of pass 6's decision: `"scalar"` for
+    /// the bit-exact micro kernel, `"simd:<isa>"` for a nanokernel.
+    pub fn isa_label(&self) -> String {
+        match self.kernel {
+            KernelPolicy::Simd(_, _, isa) => format!("simd:{}", isa.name()),
+            _ => "scalar".to_string(),
+        }
+    }
+
     /// Does this plan describe the given GEMM contract?  Execution paths
     /// check this before running so a mis-threaded plan is an explicit
     /// error, never silent cross-contamination.
@@ -292,6 +403,7 @@ impl ExecutionPlan {
             kernel,
             fuse_epilogue,
             prepack: !matches!(kernel, KernelPolicy::Naive),
+            numerics: NumericsClass::of(&kernel),
             predicted_seconds: predict_seconds(key, &kernel),
             trace: vec![trace(
                 "manual",
@@ -349,7 +461,9 @@ impl ExecutionPlan {
         }
         match self.kernel {
             KernelPolicy::Naive => None,
-            KernelPolicy::Tiled(bs) | KernelPolicy::Threaded(bs, _) => {
+            KernelPolicy::Tiled(bs)
+            | KernelPolicy::Threaded(bs, _)
+            | KernelPolicy::Simd(bs, _, _) => {
                 Some(PrepackedB::pack(b, self.k, self.n, bs))
             }
         }
@@ -380,6 +494,7 @@ impl ExecutionPlan {
             ("kernel", json::s(&self.kernel.name())),
             ("fuse_epilogue", Json::Bool(self.fuse_epilogue)),
             ("prepack", Json::Bool(self.prepack)),
+            ("numerics", json::s(self.numerics.name())),
             ("predicted_seconds", json::num(self.predicted_seconds)),
             ("trace", Json::Arr(trace)),
         ])
@@ -439,6 +554,26 @@ impl ExecutionPlan {
             // Absent in pre-prepack plan files: default off (speed-only —
             // a missing flag can never change bits).
             prepack: j.get("prepack").and_then(Json::as_bool).unwrap_or(false),
+            // Absent in pre-pass-6 plan files: the class is implied by
+            // the kernel (same back-compat rule as `prepack`).  Present
+            // but inconsistent with the kernel is an error — a plan
+            // must not promise bit-exactness its kernel breaks.
+            numerics: match j.get("numerics").and_then(Json::as_str) {
+                None => NumericsClass::of(&kernel),
+                Some(text) => {
+                    let class = NumericsClass::parse(text)?;
+                    if class != NumericsClass::of(&kernel) {
+                        bail!(
+                            "plan numerics class {:?} is inconsistent with kernel \
+                             {:?} (which implies {:?})",
+                            text,
+                            kernel.name(),
+                            NumericsClass::of(&kernel).name()
+                        );
+                    }
+                    class
+                }
+            },
             predicted_seconds: j
                 .get("predicted_seconds")
                 .and_then(Json::as_f64)
@@ -495,7 +630,9 @@ fn pass_tile_selection(
     if let Some(policy) = forced {
         let blocking = match policy {
             KernelPolicy::Naive => Blocking::default(),
-            KernelPolicy::Tiled(b) | KernelPolicy::Threaded(b, _) => b,
+            KernelPolicy::Tiled(b)
+            | KernelPolicy::Threaded(b, _)
+            | KernelPolicy::Simd(b, _, _) => b,
         };
         return (
             blocking,
@@ -588,7 +725,7 @@ fn pass_threading(
 ) -> (usize, PassTrace) {
     if let Some(policy) = forced {
         let bands = match policy {
-            KernelPolicy::Threaded(_, t) => t,
+            KernelPolicy::Threaded(_, t) | KernelPolicy::Simd(_, t, _) => t,
             _ => 1,
         };
         return (
@@ -690,16 +827,117 @@ fn pass_prepack(key: &GemmKey, kernel: &KernelPolicy) -> (bool, PassTrace) {
     (packs, t)
 }
 
+/// Pass 6 — isa: lower the register tile to an explicit-SIMD nanokernel
+/// (`runtime::nanokernel`) or keep the bit-exact scalar micro kernel.
+/// The conservative default is scalar: SIMD changes bits (FMA
+/// contraction), so it is opt-in (`--plan simd` / a forced `simd:<isa>`
+/// policy), and the pass records the resulting [`NumericsClass`] as
+/// part of its decision.  Runs *after* the kernel shape is known but
+/// *before* the prepack pass in `compile` (prepack must see the final
+/// kernel); in the recorded trace it appears last, as pass 6.
+fn pass_isa(
+    env: &PlanEnv,
+    forced: Option<KernelPolicy>,
+    simd_requested: bool,
+    auto_kernel: KernelPolicy,
+    blocking: Blocking,
+    bands: usize,
+) -> Result<(KernelPolicy, NumericsClass, PassTrace)> {
+    if let Some(policy) = forced {
+        let class = NumericsClass::of(&policy);
+        let label = match policy {
+            KernelPolicy::Simd(_, _, isa) => format!("simd:{}", isa.name()),
+            _ => "scalar".to_string(),
+        };
+        return Ok((
+            policy,
+            class,
+            trace(
+                "isa",
+                format!("{label} [{}]", class.name()),
+                format!("forced by plan override {}", policy.name()),
+            ),
+        ));
+    }
+    if !simd_requested {
+        return Ok((
+            auto_kernel,
+            NumericsClass::BitExact,
+            trace(
+                "isa",
+                "scalar [bit_exact]".to_string(),
+                "scalar micro kernel preserves the bit-exact contract; opt in to \
+                 nanokernels with --plan simd"
+                    .to_string(),
+            ),
+        ));
+    }
+    // SIMD requested: resolve the ISA per the environment's preference.
+    let (resolved, how) = match env.isa {
+        IsaPref::Scalar => (None, "IsaPref::Scalar".to_string()),
+        IsaPref::Fixed(isa) => (Some(isa), format!("pinned to {}", isa.name())),
+        IsaPref::Detect => {
+            let det = nanokernel::detect()?;
+            let env_forced = std::env::var(nanokernel::FORCE_ISA_ENV)
+                .map(|v| !v.trim().is_empty())
+                .unwrap_or(false);
+            let how = match det {
+                None => format!("{}=scalar forced the fallback", nanokernel::FORCE_ISA_ENV),
+                Some(isa) if env_forced => {
+                    format!("{}={} pinned it", nanokernel::FORCE_ISA_ENV, isa.name())
+                }
+                Some(isa) => {
+                    format!("host probe (is_x86_feature_detected) picked {}", isa.name())
+                }
+            };
+            (det, how)
+        }
+    };
+    match resolved {
+        Some(isa) => {
+            // Lower even problems the scalar pipeline would run naive:
+            // the nanokernel consumes packed panels regardless, and the
+            // operator explicitly asked for SIMD.
+            let kernel = KernelPolicy::Simd(blocking, bands, isa);
+            Ok((
+                kernel,
+                NumericsClass::FmaRelaxed,
+                trace(
+                    "isa",
+                    format!("simd:{} [fma_relaxed]", isa.name()),
+                    format!(
+                        "simd requested; {how}; FMA contraction breaks bit-exactness, \
+                         verified by the condition-scaled tolerance instead"
+                    ),
+                ),
+            ))
+        }
+        None => Ok((
+            auto_kernel,
+            NumericsClass::BitExact,
+            trace(
+                "isa",
+                "scalar [bit_exact]".to_string(),
+                format!("simd requested but the scalar fallback is forced ({how})"),
+            ),
+        )),
+    }
+}
+
 /// Coarse host cost estimate used for predicted-vs-measured reporting;
-/// deliberately simple (effective GFLOP/s per kernel class).
+/// deliberately simple (effective GFLOP/s per kernel class).  The SIMD
+/// rate models the 4x16 FMA register tile at roughly 4x the scalar
+/// tiled kernel's throughput per band.
 fn predict_seconds(key: &GemmKey, kernel: &KernelPolicy) -> f64 {
     const TILED_FLOPS_PER_SEC: f64 = 4.0e9;
     const NAIVE_FLOPS_PER_SEC: f64 = 1.5e9;
+    const SIMD_FLOPS_PER_SEC: f64 = 16.0e9;
     let flops = 2.0 * key.m as f64 * key.n as f64 * key.k as f64;
     match *kernel {
         KernelPolicy::Naive => flops / NAIVE_FLOPS_PER_SEC,
         KernelPolicy::Tiled(_) => flops / TILED_FLOPS_PER_SEC,
         KernelPolicy::Threaded(_, t) => flops / (TILED_FLOPS_PER_SEC * t.max(1) as f64),
+        KernelPolicy::Simd(_, t, _) => flops / (SIMD_FLOPS_PER_SEC * t.max(1) as f64),
     }
 }
 
@@ -707,14 +945,15 @@ fn predict_seconds(key: &GemmKey, kernel: &KernelPolicy) -> f64 {
 /// pipeline.  Deterministic for a fixed environment; errors only when a
 /// forced override carries an invalid blocking.
 pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
-    let forced = match env.force {
-        PlanOverride::Auto => None,
+    let (forced, simd_requested) = match env.force {
+        PlanOverride::Auto => (None, false),
+        PlanOverride::Simd => (None, true),
         PlanOverride::Force(p) => {
             p.validate()?;
-            Some(p)
+            (Some(p), false)
         }
     };
-    let mut plan_trace = Vec::with_capacity(5);
+    let mut plan_trace = Vec::with_capacity(6);
     let (blocking, t1) = pass_tile_selection(key, env, forced);
     plan_trace.push(t1);
     let (packed, t2) = pass_packing(key, env, forced);
@@ -723,14 +962,21 @@ pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
     plan_trace.push(t3);
     let (fuse_epilogue, t4) = pass_epilogue(key);
     plan_trace.push(t4);
-    let kernel = match forced {
+    let auto_kernel = match forced {
         Some(p) => p,
         None if !packed => KernelPolicy::Naive,
         None if bands > 1 => KernelPolicy::Threaded(blocking, bands),
         None => KernelPolicy::Tiled(blocking),
     };
+    // Pass 6 runs before pass 5 records its decision: prepack is a pure
+    // function of the *final* kernel (a SIMD lowering packs B even where
+    // the scalar pipeline would have gone naive).  The trace keeps
+    // pipeline order, with isa last.
+    let (kernel, numerics, t6) =
+        pass_isa(env, forced, simd_requested, auto_kernel, blocking, bands)?;
     let (prepack, t5) = pass_prepack(key, &kernel);
     plan_trace.push(t5);
+    plan_trace.push(t6);
     Ok(ExecutionPlan {
         m: key.m,
         n: key.n,
@@ -741,6 +987,7 @@ pub fn compile(key: &GemmKey, env: &PlanEnv) -> Result<ExecutionPlan> {
         kernel,
         fuse_epilogue,
         prepack,
+        numerics,
         predicted_seconds: predict_seconds(key, &kernel),
         trace: plan_trace,
     })
@@ -756,9 +1003,12 @@ mod tests {
         assert_eq!(plan.kernel, KernelPolicy::Naive);
         assert!(!plan.fuse_epilogue);
         assert!(!plan.prepack, "direct kernels never prepack");
-        assert_eq!(plan.trace.len(), 5);
+        assert_eq!(plan.numerics, NumericsClass::BitExact);
+        assert_eq!(plan.trace.len(), 6);
         assert!(plan.trace[1].decision.contains("direct"), "{:?}", plan.trace[1]);
         assert_eq!(plan.trace[4].pass, "prepack");
+        assert_eq!(plan.trace[5].pass, "isa");
+        assert!(plan.trace[5].decision.contains("scalar"), "{:?}", plan.trace[5]);
     }
 
     #[test]
@@ -820,8 +1070,106 @@ mod tests {
     #[test]
     fn override_with_zero_blocking_is_a_compile_error() {
         assert!(PlanOverride::parse("tiled:0,128,256").is_err());
+        assert!(PlanOverride::parse("simd:avx2:0,128,256").is_err());
         assert!(PlanOverride::parse("nonsense").is_err());
         assert_eq!(PlanOverride::parse("auto").unwrap(), PlanOverride::Auto);
+        assert_eq!(PlanOverride::parse("simd").unwrap(), PlanOverride::Simd);
+    }
+
+    #[test]
+    fn simd_override_lowers_to_a_nanokernel_with_fma_relaxed_class() {
+        // pinned() fixes the ISA (no host probe): deterministic goldens.
+        let env = PlanEnv::pinned().with_force(PlanOverride::Simd);
+        let plan = compile(&GemmKey::plain(512, 512, 512), &env).unwrap();
+        match plan.kernel {
+            KernelPolicy::Simd(b, t, isa) => {
+                assert_eq!(isa, Isa::Avx2Fma);
+                assert_eq!(t, 4, "pass 3's band count carries into the simd kernel");
+                assert!(b.validate().is_ok());
+            }
+            other => panic!("expected a simd kernel, got {other:?}"),
+        }
+        assert_eq!(plan.numerics, NumericsClass::FmaRelaxed);
+        assert_eq!(plan.isa_label(), "simd:avx2");
+        assert!(plan.prepack, "simd kernels pack B, so bound weights prepack");
+        assert_eq!(plan.trace.len(), 6);
+        assert!(plan.trace[5].decision.contains("fma_relaxed"), "{:?}", plan.trace[5]);
+
+        // Even a cache-resident problem lowers to simd when asked: the
+        // operator's explicit request wins over the packing heuristic.
+        let small = compile(&GemmKey::plain(24, 24, 24), &env).unwrap();
+        assert!(matches!(small.kernel, KernelPolicy::Simd(..)), "{:?}", small.kernel);
+        assert!(small.prepack, "prepack follows the final (simd) kernel");
+    }
+
+    #[test]
+    fn scalar_isa_pref_keeps_the_bit_exact_pipeline_result() {
+        let env = PlanEnv::pinned()
+            .with_force(PlanOverride::Simd)
+            .with_isa(IsaPref::Scalar);
+        let plan = compile(&GemmKey::plain(512, 512, 512), &env).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::BitExact);
+        assert_eq!(plan.isa_label(), "scalar");
+        assert!(
+            matches!(plan.kernel, KernelPolicy::Threaded(..)),
+            "falls back to the auto pipeline's kernel, got {:?}",
+            plan.kernel
+        );
+        assert!(plan.trace[5].reason.contains("scalar fallback"), "{:?}", plan.trace[5]);
+        // And the same plan as plain auto — forcing scalar under a simd
+        // request is exactly "ignore the simd request".
+        let auto = compile(&GemmKey::plain(512, 512, 512), &PlanEnv::pinned()).unwrap();
+        assert_eq!(plan.kernel, auto.kernel);
+    }
+
+    #[test]
+    fn forced_simd_policy_compiles_with_its_own_blocking_and_class() {
+        let forced = PlanOverride::parse("simd:portable:64,128,256,2").unwrap();
+        let plan = compile(
+            &GemmKey::plain(256, 256, 256),
+            &PlanEnv::pinned().with_force(forced),
+        )
+        .unwrap();
+        assert_eq!(
+            plan.kernel,
+            KernelPolicy::Simd(Blocking { mc: 64, kc: 128, nc: 256 }, 2, Isa::Portable)
+        );
+        assert_eq!(plan.numerics, NumericsClass::FmaRelaxed);
+        assert_eq!(plan.isa_label(), "simd:portable");
+        assert!(plan.trace[5].reason.contains("forced"), "{:?}", plan.trace[5]);
+    }
+
+    #[test]
+    fn numerics_class_follows_the_kernel_and_round_trips() {
+        assert_eq!(NumericsClass::parse("bit_exact").unwrap(), NumericsClass::BitExact);
+        assert_eq!(NumericsClass::parse("fma_relaxed").unwrap(), NumericsClass::FmaRelaxed);
+        assert!(NumericsClass::parse("loose").is_err());
+        assert_eq!(NumericsClass::of(&KernelPolicy::Naive), NumericsClass::BitExact);
+        assert_eq!(
+            NumericsClass::of(&KernelPolicy::Simd(Blocking::default(), 0, Isa::Neon)),
+            NumericsClass::FmaRelaxed
+        );
+
+        let env = PlanEnv::pinned().with_force(PlanOverride::Simd);
+        let plan = compile(&GemmKey::plain(512, 512, 512), &env).unwrap();
+        let text = plan.to_json().to_string();
+        assert!(text.contains("\"numerics\""), "{text}");
+        let back = ExecutionPlan::from_text(&text).unwrap();
+        assert_eq!(back.numerics, NumericsClass::FmaRelaxed);
+        assert_eq!(plan, back);
+
+        // A legacy plan file without the field gets the kernel-implied
+        // class; an inconsistent pair is rejected.
+        let legacy = text.replace("\"numerics\": \"fma_relaxed\", ", "");
+        if legacy != text {
+            let back = ExecutionPlan::from_text(&legacy).unwrap();
+            assert_eq!(back.numerics, NumericsClass::FmaRelaxed);
+        }
+        let lying = text.replace("fma_relaxed", "bit_exact");
+        assert!(
+            ExecutionPlan::from_text(&lying).is_err(),
+            "a simd kernel must not claim bit_exact"
+        );
     }
 
     #[test]

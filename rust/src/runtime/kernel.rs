@@ -22,7 +22,8 @@
 //! * **row-partitioned threads**      ~ the grid: each thread owns a
 //!   disjoint band of C rows and runs the blocked kernel on it.
 //!
-//! **Bit-exactness invariant.**  Every kernel in this module produces
+//! **Bit-exactness invariant (scalar policies).**  Every *scalar*
+//! kernel in this module — `Naive`, `Tiled`, `Threaded` — produces
 //! output bit-identical to the naive i-k-j loop for all f32 inputs: each
 //! output element accumulates its k-terms one at a time, in increasing-k
 //! order, with a plain (non-fused) multiply and add.  Blocking iterates
@@ -30,11 +31,24 @@
 //! increasing k; packing rearranges i/j layout only; threads partition
 //! rows, and no output element is touched by two threads.  Nothing in
 //! the hierarchy regroups a sum, so the f32 rounding sequence per element
-//! is exactly the naive kernel's.  `KernelPolicy` selection is therefore
-//! semantically invisible — it changes speed, never bits — which is what
-//! lets the plan compiler (`crate::plan`) treat kernel choice as a pure
-//! performance decision and lets the autotuner sweep block sizes the way
-//! the paper sweeps GPU tiles.
+//! is exactly the naive kernel's.  Scalar `KernelPolicy` selection is
+//! therefore semantically invisible — it changes speed, never bits —
+//! which is what lets the plan compiler (`crate::plan`) treat kernel
+//! choice as a pure performance decision and lets the autotuner sweep
+//! block sizes the way the paper sweeps GPU tiles.
+//!
+//! The one deliberate exception is [`KernelPolicy::Simd`], which swaps
+//! the innermost register tile for an explicit-SIMD nanokernel
+//! ([`super::nanokernel`]).  Those bodies keep the same increasing-k
+//! grouping but contract each term with a *fused* multiply-add, so
+//! their output is near-but-not-bit-identical to naive; the plan
+//! compiler classes such plans `fma_relaxed` and they are verified by
+//! the condition-scaled tolerance contract
+//! ([`super::nanokernel::verify_fma_relaxed`]), never by bits.  The
+//! blocking/packing/threading layers above the micro kernel are shared
+//! verbatim, which is why threaded-SIMD is bitwise identical to
+//! single-thread SIMD and prepacked-SIMD to raw-SIMD (pinned below):
+//! the relaxation is confined to the innermost loop's rounding.
 //!
 //! This module holds *mechanism only*: the raw kernels and the
 //! [`KernelPolicy`] selector they lower to.  *Policy* — which kernel a
@@ -44,6 +58,8 @@
 //! every caller passes its plan's selector explicitly.
 
 use anyhow::{anyhow, bail, Result};
+
+use super::nanokernel::{self, Isa, Nanokernel};
 
 /// Register-tile rows: C rows updated together by the micro kernel.
 pub const MR: usize = 4;
@@ -125,8 +141,11 @@ impl Blocking {
     }
 }
 
-/// Which kernel executes a GEMM.  All policies are bit-identical; they
-/// differ only in speed (see the module invariant).
+/// Which kernel executes a GEMM.  The scalar policies (`Naive`,
+/// `Tiled`, `Threaded`) are bit-identical and differ only in speed (see
+/// the module invariant); `Simd` runs an explicit-SIMD nanokernel and
+/// is `fma_relaxed` — near-identical under the tolerance contract, not
+/// bitwise.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelPolicy {
     /// The reference i-k-j scalar loop.
@@ -135,6 +154,11 @@ pub enum KernelPolicy {
     Tiled(Blocking),
     /// Tiled with C rows partitioned across threads (0 = auto).
     Threaded(Blocking, usize),
+    /// Tiled + row-banded (0 = auto, 1 = single thread) with the
+    /// innermost register tile lowered to the named ISA's nanokernel.
+    /// An ISA the host cannot run degrades to the portable body at
+    /// dispatch time ([`nanokernel::kernel_for`]).
+    Simd(Blocking, usize, Isa),
 }
 
 impl Default for KernelPolicy {
@@ -149,8 +173,12 @@ impl Default for KernelPolicy {
 
 impl KernelPolicy {
     /// Parse an operator-facing policy string:
-    /// `naive` | `tiled[:MC,KC,NC]` | `threaded[:MC,KC,NC[,T]]`
-    /// (T = thread count, 0 or omitted = auto).
+    /// `naive` | `tiled[:MC,KC,NC]` | `threaded[:MC,KC,NC[,T]]` |
+    /// `simd:<isa>[:MC,KC,NC[,T]]`
+    /// (T = thread count, 0 or omitted = auto; isa = portable | avx2 |
+    /// avx512 | neon).  Bare `simd` is not a policy — it is the plan
+    /// *override* that asks pass 6 to pick the ISA
+    /// (`crate::plan::PlanOverride::Simd`).
     pub fn parse(text: &str) -> Result<KernelPolicy> {
         let (head, rest) = match text.split_once(':') {
             Some((h, r)) => (h, Some(r)),
@@ -190,9 +218,39 @@ impl KernelPolicy {
                     _ => bail!("threaded wants MC,KC,NC[,T], got {r:?}"),
                 }
             }
+            ("simd", Some(r)) => {
+                let (isa_text, blocks) = match r.split_once(':') {
+                    Some((i, b)) => (i, Some(b)),
+                    None => (r, None),
+                };
+                let isa = Isa::parse(isa_text)?;
+                match blocks {
+                    None => Ok(KernelPolicy::Simd(Blocking::default(), 0, isa)),
+                    Some(b) => {
+                        let v = nums(b)?;
+                        match v.len() {
+                            3 => Ok(KernelPolicy::Simd(
+                                Blocking::new(v[0], v[1], v[2])?,
+                                0,
+                                isa,
+                            )),
+                            4 => Ok(KernelPolicy::Simd(
+                                Blocking::new(v[0], v[1], v[2])?,
+                                v[3],
+                                isa,
+                            )),
+                            _ => bail!("simd wants <isa>[:MC,KC,NC[,T]], got {r:?}"),
+                        }
+                    }
+                }
+            }
+            ("simd", None) => bail!(
+                "bare \"simd\" is a plan override, not a kernel policy; name an \
+                 isa (simd:avx2[:MC,KC,NC[,T]]) or use --plan simd"
+            ),
             _ => bail!(
                 "unknown kernel policy {text:?} (naive | tiled[:MC,KC,NC] | \
-                 threaded[:MC,KC,NC[,T]])"
+                 threaded[:MC,KC,NC[,T]] | simd:<isa>[:MC,KC,NC[,T]])"
             ),
         }
     }
@@ -205,6 +263,9 @@ impl KernelPolicy {
             KernelPolicy::Threaded(b, t) => {
                 format!("threaded:{},{},{},{t}", b.mc, b.kc, b.nc)
             }
+            KernelPolicy::Simd(b, t, isa) => {
+                format!("simd:{}:{},{},{},{t}", isa.name(), b.mc, b.kc, b.nc)
+            }
         }
     }
 
@@ -214,7 +275,9 @@ impl KernelPolicy {
     pub fn validate(&self) -> Result<()> {
         match self {
             KernelPolicy::Naive => Ok(()),
-            KernelPolicy::Tiled(b) | KernelPolicy::Threaded(b, _) => b.validate(),
+            KernelPolicy::Tiled(b)
+            | KernelPolicy::Threaded(b, _)
+            | KernelPolicy::Simd(b, _, _) => b.validate(),
         }
     }
 }
@@ -309,9 +372,45 @@ impl PrepackedB {
     }
 }
 
+/// The register-tile engine one blocked sweep lowers to: the scalar
+/// bit-exact [`macro_kernel`] or one resolved nanokernel body.  The
+/// blocking/packing/banding layers are engine-agnostic — [`Micro`] is
+/// the only seam where the two numerics classes diverge.
+#[derive(Clone, Copy)]
+enum Micro {
+    Scalar,
+    Nano(&'static dyn Nanokernel),
+}
+
+impl Micro {
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        match self {
+            Micro::Scalar => {
+                macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack)
+            }
+            Micro::Nano(nano) => {
+                nano.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack)
+            }
+        }
+    }
+}
+
 /// `out[i, j] += sum_k a[i, k] * b[k, j]` over row-major slices, f32
 /// accumulate, k-terms in increasing-k order (bit-identical across
-/// policies).  The policy comes from an explicit
+/// scalar policies; `Simd` is tolerance-verified instead — see the
+/// module doc).  The policy comes from an explicit
 /// [`crate::plan::ExecutionPlan`] — there is no ambient global.
 pub fn matmul(
     policy: KernelPolicy,
@@ -349,11 +448,17 @@ pub fn matmul_b(
     match (policy, b) {
         (KernelPolicy::Naive, BOperand::Raw(b)) => gemm_naive(out, a, b, m, n, k),
         (KernelPolicy::Naive, BOperand::Prepacked(pre)) => {
-            gemm_tiled_pre(out, a, pre, m, n, k)
+            gemm_tiled_pre(out, a, pre, m, n, k, Micro::Scalar)
         }
-        (KernelPolicy::Tiled(bs), b) => gemm_tiled_b(out, a, b, m, n, k, bs.clamped()),
+        (KernelPolicy::Tiled(bs), b) => {
+            gemm_tiled_b(out, a, b, m, n, k, bs.clamped(), Micro::Scalar)
+        }
         (KernelPolicy::Threaded(bs, t), b) => {
-            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, None)
+            gemm_banded(out, a, b, m, n, k, bs.clamped(), t, Micro::Scalar, None)
+        }
+        (KernelPolicy::Simd(bs, t, isa), b) => {
+            let micro = Micro::Nano(nanokernel::kernel_for(isa));
+            gemm_banded(out, a, b, m, n, k, bs.clamped(), t, micro, None)
         }
     }
 }
@@ -407,15 +512,19 @@ pub fn matmul_fused_b(
             tail(out);
         }
         (KernelPolicy::Naive, BOperand::Prepacked(pre)) => {
-            gemm_tiled_pre(out, a, pre, m, n, k);
+            gemm_tiled_pre(out, a, pre, m, n, k, Micro::Scalar);
             tail(out);
         }
         (KernelPolicy::Tiled(bs), b) => {
-            gemm_tiled_b(out, a, b, m, n, k, bs.clamped());
+            gemm_tiled_b(out, a, b, m, n, k, bs.clamped(), Micro::Scalar);
             tail(out);
         }
         (KernelPolicy::Threaded(bs, t), b) => {
-            gemm_threaded(out, a, b, m, n, k, bs.clamped(), t, Some(tail))
+            gemm_banded(out, a, b, m, n, k, bs.clamped(), t, Micro::Scalar, Some(tail))
+        }
+        (KernelPolicy::Simd(bs, t, isa), b) => {
+            let micro = Micro::Nano(nanokernel::kernel_for(isa));
+            gemm_banded(out, a, b, m, n, k, bs.clamped(), t, micro, Some(tail))
         }
     }
 }
@@ -606,6 +715,7 @@ fn macro_kernel(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn gemm_tiled(
     out: &mut [f32],
     a: &[f32],
@@ -614,6 +724,7 @@ fn gemm_tiled(
     n: usize,
     k: usize,
     bs: Blocking,
+    micro: Micro,
 ) {
     let Blocking { mc, kc, nc } = bs;
     let mut apack = vec![0.0f32; round_up(mc.min(m), MR) * kc.min(k)];
@@ -628,7 +739,7 @@ fn gemm_tiled(
             for ic in (0..m).step_by(mc) {
                 let mcb = mc.min(m - ic);
                 pack_a(&mut apack, a, k, ic, mcb, pc, kcb);
-                macro_kernel(out, n, ic, mcb, jc, ncb, kcb, &apack, &bpack);
+                micro.run(out, n, ic, mcb, jc, ncb, kcb, &apack, &bpack);
             }
         }
     }
@@ -645,6 +756,7 @@ fn gemm_tiled_pre(
     m: usize,
     n: usize,
     k: usize,
+    micro: Micro,
 ) {
     let Blocking { mc, kc, nc } = pre.blocking;
     let n_pb = ceil_div(k, kc);
@@ -657,13 +769,14 @@ fn gemm_tiled_pre(
             for ic in (0..m).step_by(mc) {
                 let mcb = mc.min(m - ic);
                 pack_a(&mut apack, a, k, ic, mcb, pc, kcb);
-                macro_kernel(out, n, ic, mcb, jc, ncb, kcb, &apack, bpack);
+                micro.run(out, n, ic, mcb, jc, ncb, kcb, &apack, bpack);
             }
         }
     }
 }
 
 /// Dispatch one single-thread tiled GEMM over either B form.
+#[allow(clippy::too_many_arguments)]
 fn gemm_tiled_b(
     out: &mut [f32],
     a: &[f32],
@@ -672,15 +785,20 @@ fn gemm_tiled_b(
     n: usize,
     k: usize,
     bs: Blocking,
+    micro: Micro,
 ) {
     match b {
-        BOperand::Raw(b) => gemm_tiled(out, a, b, m, n, k, bs),
-        BOperand::Prepacked(pre) => gemm_tiled_pre(out, a, pre, m, n, k),
+        BOperand::Raw(b) => gemm_tiled(out, a, b, m, n, k, bs, micro),
+        BOperand::Prepacked(pre) => gemm_tiled_pre(out, a, pre, m, n, k, micro),
     }
 }
 
+/// Row-banded execution of one blocked GEMM under any [`Micro`] engine
+/// (formerly `gemm_threaded`, which was scalar-only).  Band count 0 =
+/// auto; 1 (or a problem too small to fan out) degrades to the
+/// single-thread path.
 #[allow(clippy::too_many_arguments)]
-fn gemm_threaded(
+fn gemm_banded(
     out: &mut [f32],
     a: &[f32],
     b: BOperand,
@@ -689,6 +807,7 @@ fn gemm_threaded(
     k: usize,
     bs: Blocking,
     threads: usize,
+    micro: Micro,
     tail: Option<&(dyn Fn(&mut [f32]) + Sync)>,
 ) {
     let hw = if threads == 0 {
@@ -700,7 +819,7 @@ fn gemm_threaded(
     let by_work = (flops / MIN_FLOPS_PER_THREAD) as usize;
     let bands = hw.min(by_work.max(1)).min(ceil_div(m, MR)).max(1);
     if bands <= 1 {
-        gemm_tiled_b(out, a, b, m, n, k, bs);
+        gemm_tiled_b(out, a, b, m, n, k, bs, micro);
         if let Some(tail) = tail {
             tail(out);
         }
@@ -708,7 +827,9 @@ fn gemm_threaded(
     }
     // MR-aligned row bands: each thread owns a disjoint band of C (and
     // the matching band of A), so no element is touched twice and the
-    // per-element operation sequence is the single-thread kernel's.  The
+    // per-element operation sequence is the single-thread kernel's —
+    // under the scalar engine *and* under a nanokernel, which is why
+    // threaded-SIMD stays bitwise identical to single-thread SIMD.  The
     // fused tail runs per band right after the band's k-reduction: still
     // exactly once per element, after all of its k-terms.  Every band
     // reads the whole of B, so a prepacked B is shared across the bands
@@ -718,7 +839,7 @@ fn gemm_threaded(
         for (oband, aband) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
             let bm = oband.len() / n;
             scope.spawn(move || {
-                gemm_tiled_b(oband, aband, b, bm, n, k, bs);
+                gemm_tiled_b(oband, aband, b, bm, n, k, bs, micro);
                 if let Some(tail) = tail {
                     tail(oband);
                 }
@@ -855,7 +976,18 @@ mod tests {
 
     #[test]
     fn policy_parse_and_name_roundtrip() {
-        for text in ["naive", "tiled", "tiled:64,128,256", "threaded", "threaded:64,128,256", "threaded:64,128,256,4"] {
+        for text in [
+            "naive",
+            "tiled",
+            "tiled:64,128,256",
+            "threaded",
+            "threaded:64,128,256",
+            "threaded:64,128,256,4",
+            "simd:avx2",
+            "simd:portable:32,64,128",
+            "simd:avx512:64,128,256,2",
+            "simd:neon:8,8,8,0",
+        ] {
             let p = KernelPolicy::parse(text).unwrap();
             let p2 = KernelPolicy::parse(&p.name()).unwrap();
             assert_eq!(p, p2, "{text}");
@@ -869,11 +1001,30 @@ mod tests {
             KernelPolicy::parse("threaded:1,2,3,9").unwrap(),
             KernelPolicy::Threaded(Blocking { mc: 1, kc: 2, nc: 3 }, 9)
         );
+        assert_eq!(
+            KernelPolicy::parse("simd:avx2:1,2,3,9").unwrap(),
+            KernelPolicy::Simd(Blocking { mc: 1, kc: 2, nc: 3 }, 9, Isa::Avx2Fma)
+        );
+        assert_eq!(
+            KernelPolicy::parse("simd:portable").unwrap(),
+            KernelPolicy::Simd(DEFAULT_BLOCKING, 0, Isa::Portable)
+        );
     }
 
     #[test]
     fn policy_parse_rejects_garbage() {
-        for text in ["", "fast", "tiled:1,2", "tiled:a,b,c", "threaded:1", "naive:1,2,3"] {
+        for text in [
+            "",
+            "fast",
+            "tiled:1,2",
+            "tiled:a,b,c",
+            "threaded:1",
+            "naive:1,2,3",
+            "simd",           // bare simd is a plan override, not a policy
+            "simd:sse9",      // unknown isa
+            "simd:avx2:1,2",  // short block spec
+            "simd:avx2:0,2,3", // zero tile
+        ] {
             assert!(KernelPolicy::parse(text).is_err(), "{text:?} parsed");
         }
     }
@@ -1004,6 +1155,92 @@ mod tests {
             &tail,
         );
         assert!(got.iter().all(|&v| v == 0.0), "tail skipped on empty reduction");
+    }
+
+    /// Every ISA the dispatch layer can resolve on any host.
+    fn all_isas() -> [Isa; 4] {
+        [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon]
+    }
+
+    #[test]
+    fn threaded_simd_is_bitwise_identical_to_single_thread_simd() {
+        // Row banding partitions elements, never op sequences — so the
+        // fma_relaxed class still gets deterministic, thread-count-
+        // independent bits.  (Tolerance vs naive is pinned separately in
+        // nanokernel::tests and tests/numerics_tolerance.rs.)
+        for &(m, n, k) in &[(5, 17, 9), (33, 23, 21), (40, 40, 40)] {
+            let mut rng = Rng::new(0x51D0 + (m * 1000 + n * 10 + k) as u64);
+            let (a, b, c) = random_case(&mut rng, m, n, k);
+            let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+            for isa in all_isas() {
+                let want = run(KernelPolicy::Simd(bs, 1, isa), &c, &a, &b, m, n, k);
+                for t in [2, 3] {
+                    let got = run(KernelPolicy::Simd(bs, t, isa), &c, &a, &b, m, n, k);
+                    assert!(
+                        want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                        "simd:{} bands={t} drifted from single-thread at {m}x{n}x{k}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_simd_is_bitwise_identical_to_raw_simd() {
+        // Prepacking rearranges i/j layout only; the nanokernel reads the
+        // same panel values in the same order either way.
+        for &(m, n, k) in &[(5, 17, 9), (33, 23, 21)] {
+            let mut rng = Rng::new(0x51D1 + (m * 1000 + n * 10 + k) as u64);
+            let (a, b, c) = random_case(&mut rng, m, n, k);
+            let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+            let pre = PrepackedB::pack(&b, k, n, bs);
+            for isa in all_isas() {
+                for t in [1, 2] {
+                    let policy = KernelPolicy::Simd(bs, t, isa);
+                    let want = run(policy, &c, &a, &b, m, n, k);
+                    let mut got = c.clone();
+                    matmul_b(policy, &mut got, &a, BOperand::Prepacked(&pre), m, n, k);
+                    assert!(
+                        want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                        "prepacked simd:{} t={t} drifted at {m}x{n}x{k}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tail_under_simd_runs_exactly_once_per_element() {
+        // Same once-per-band tail contract as the scalar policies: fused
+        // must equal unfused-then-tail, bitwise, per ISA and band count.
+        for &(m, n, k) in &[(13, 9, 11), (33, 7, 21), (8, 8, 0)] {
+            let mut rng = Rng::new(0x51D2 + (m * 100 + n * 10 + k) as u64);
+            let (a, b, c) = random_case(&mut rng, m, n, k);
+            let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+            for isa in all_isas() {
+                for t in [1, 3] {
+                    let policy = KernelPolicy::Simd(bs, t, isa);
+                    let mut want = c.clone();
+                    matmul(policy, &mut want, &a, &b, m, n, k);
+                    for v in want.iter_mut() {
+                        *v = (*v + 1.0).max(0.0);
+                    }
+                    let mut got = c.clone();
+                    matmul_fused(policy, &mut got, &a, &b, m, n, k, &|band: &mut [f32]| {
+                        for v in band.iter_mut() {
+                            *v = (*v + 1.0).max(0.0);
+                        }
+                    });
+                    assert!(
+                        want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                        "fused simd:{} t={t} drifted at {m}x{n}x{k}",
+                        isa.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

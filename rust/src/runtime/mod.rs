@@ -18,6 +18,7 @@
 pub mod exec;
 pub mod kernel;
 pub mod manifest;
+pub mod nanokernel;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -30,6 +31,7 @@ use crate::plan::{ExecutionPlan, PlanEnv, PlanOverride};
 
 pub use exec::{BoundB, Epilogue, GEMM_B_INPUT_SLOT, Program, TransformerBound};
 pub use kernel::{Blocking, BOperand, KernelPolicy, PrepackedB};
+pub use nanokernel::Isa;
 pub use manifest::{load_manifest, ArtifactKind, ArtifactMeta, TensorSpec};
 
 /// A host-side f32 tensor (row-major).

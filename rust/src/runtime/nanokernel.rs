@@ -1,0 +1,719 @@
+//! Explicit-SIMD nanokernels: the innermost register-tile bodies the
+//! plan compiler's pass 6 ("isa") can lower to, replacing the scalar
+//! [`crate::runtime::kernel`] micro kernel with `core::arch` intrinsics
+//! (DESIGN.md §10).
+//!
+//! The paper's lowest lowering level maps a warp tile onto `mma.sync`
+//! tensor-core ops; Thangamani et al. ("Library Liberation", arxiv
+//! 2511.13764) and Kuzma et al. (arxiv 2305.18236) do the same on CPUs
+//! with a small set of *nanokernels* — fixed register-shaped FMA bodies
+//! selected by an explicit compiler pass rather than left to the
+//! autovectorizer.  This module is that bottom layer for the host
+//! engine:
+//!
+//! * [`Isa`] — the nanokernel instruction-set menu (AVX2+FMA today;
+//!   AVX-512 and NEON ride behind the same trait as delegating stubs);
+//! * [`detect`] — runtime CPU-feature probe
+//!   (`is_x86_feature_detected!`), overridable with
+//!   `MLIR_GEMM_FORCE_ISA` for tests/CI;
+//! * [`Nanokernel`] — the macro-kernel trait: one cache block over the
+//!   exact packed-panel layouts `kernel::pack_a` / `kernel::pack_b`
+//!   already produce (MR-interleaved A, row-major KCxNC B);
+//! * [`gamma`] / [`verify_fma_relaxed`] — the `fma_relaxed` numerics
+//!   contract: a condition-scaled error bound every SIMD kernel must
+//!   satisfy against the naive oracle (see DESIGN.md §10 for the
+//!   derivation), used by the tolerance harness *and* the benches.
+//!
+//! **Numerics.**  These bodies contract k-terms with fused
+//! multiply-adds in the same increasing-k order as the scalar kernel —
+//! the *grouping* of the sum is untouched, only the per-term rounding
+//! changes (one rounding per FMA instead of a rounded multiply plus a
+//! rounded add).  That deliberately breaks the engine's bit-exactness
+//! invariant, which is why a plan lowered through here is classed
+//! `fma_relaxed` (`crate::plan::NumericsClass`) and verified by
+//! tolerance, never by bits.
+
+use anyhow::{bail, Result};
+
+use super::kernel::MR;
+
+/// Env var overriding [`detect`]: `scalar` forces the scalar fallback
+/// (pass 6 keeps the bit-exact kernel), an ISA name pins that ISA, an
+/// empty value is treated as unset.  Used by the CI matrix leg and the
+/// ISA-dispatch tests.
+pub const FORCE_ISA_ENV: &str = "MLIR_GEMM_FORCE_ISA";
+
+/// A nanokernel instruction set.  `Portable` is the always-available
+/// safe-Rust 4-wide body; `Avx2Fma` is the real intrinsic kernel;
+/// `Avx512` / `Neon` are explicit-opt-in stubs that currently delegate
+/// (AVX-512 to the AVX2 body, NEON to the portable body) so the trait
+/// surface and plan schema are already shaped for them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    Portable,
+    Avx2Fma,
+    Avx512,
+    Neon,
+}
+
+impl Isa {
+    /// Canonical name, as recorded in plan JSON and metrics labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Portable => "portable",
+            Isa::Avx2Fma => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Isa> {
+        match text {
+            "portable" => Ok(Isa::Portable),
+            "avx2" => Ok(Isa::Avx2Fma),
+            "avx512" => Ok(Isa::Avx512),
+            "neon" => Ok(Isa::Neon),
+            _ => bail!(
+                "unknown isa {text:?} (portable | avx2 | avx512 | neon | scalar)"
+            ),
+        }
+    }
+}
+
+/// Can `isa`'s body actually execute on this host?  The stubs delegate
+/// (NEON to portable everywhere; AVX-512 to the AVX2 body), so their
+/// availability is their delegate's.
+pub fn hw_available(isa: Isa) -> bool {
+    match isa {
+        Isa::Portable | Isa::Neon => true,
+        Isa::Avx2Fma | Isa::Avx512 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// Runtime ISA selection for the plan compiler's pass 6:
+/// `Ok(None)` means "stay scalar" (forced via `MLIR_GEMM_FORCE_ISA=scalar`),
+/// `Ok(Some(isa))` the best nanokernel this host can run.  The
+/// auto-probe only ever returns `Avx2Fma` (when AVX2 and FMA are both
+/// present) or `Portable`; the AVX-512/NEON stubs are explicit opt-in
+/// (`MLIR_GEMM_FORCE_ISA=avx512` etc. or a forced `simd:<isa>` policy).
+/// An unparseable override is an error, not a silent fallback.
+pub fn detect() -> Result<Option<Isa>> {
+    if let Ok(v) = std::env::var(FORCE_ISA_ENV) {
+        let v = v.trim();
+        if !v.is_empty() {
+            if v == "scalar" {
+                return Ok(None);
+            }
+            return Isa::parse(v).map(Some);
+        }
+    }
+    Ok(Some(if hw_available(Isa::Avx2Fma) { Isa::Avx2Fma } else { Isa::Portable }))
+}
+
+/// One cache block of `out += Apanel @ Bpanel` over the packed layouts
+/// of `kernel::pack_a` (MR-row interleaved, `apack[p * MR + i]`) and
+/// `kernel::pack_b` (row-major, `bpack[p * ncb + j]`).  Same contract
+/// as the scalar `macro_kernel`: rows `ic..ic+mcb`, columns
+/// `jc..jc+ncb` of `out` (leading dimension `ldc`), k-terms applied in
+/// increasing-p order.  Implementations may fuse each multiply-add but
+/// must not regroup the reduction — that keeps the `fma_relaxed` error
+/// bound (see [`verify_fma_relaxed`]) tight and k-order deterministic.
+pub trait Nanokernel: Sync {
+    fn isa(&self) -> Isa;
+
+    #[allow(clippy::too_many_arguments)]
+    fn macro_kernel(
+        &self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    );
+}
+
+/// Resolve an ISA to its executable nanokernel body.  An ISA the host
+/// cannot run degrades to the portable body — a plan compiled on (or
+/// for) a bigger machine still executes correctly here, it just runs
+/// the safe fallback.  Resolution is per-matmul-call, so the choice
+/// costs one branch, not one probe per macro-kernel invocation
+/// (`hw_available` memoizes inside `is_x86_feature_detected!`).
+pub fn kernel_for(isa: Isa) -> &'static dyn Nanokernel {
+    if !hw_available(isa) {
+        return &PORTABLE;
+    }
+    match isa {
+        Isa::Portable => &PORTABLE,
+        Isa::Avx2Fma => &AVX2,
+        Isa::Avx512 => &AVX512,
+        Isa::Neon => &NEON,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable nanokernel: safe Rust, 4-wide accumulator tile
+// ---------------------------------------------------------------------------
+
+/// The always-available fallback: an MR x 4-lane accumulator tile in
+/// safe Rust, plain multiply+add in increasing-k order.  On today's
+/// compilers this is bit-identical to the scalar kernel (same ops, same
+/// order) — but it is *contractually* `fma_relaxed`, so a future
+/// `mul_add` or autovectorizer-friendly rewrite cannot silently break a
+/// pinned promise.
+pub struct PortableNano;
+
+static PORTABLE: PortableNano = PortableNano;
+
+/// 4 f32 lanes: the portable stand-in for one vector register.
+const PW: usize = 4;
+
+impl Nanokernel for PortableNano {
+    fn isa(&self) -> Isa {
+        Isa::Portable
+    }
+
+    fn macro_kernel(
+        &self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        let full_panels = mcb / MR;
+        for pi in 0..full_panels {
+            let i0 = ic + pi * MR;
+            let ap = &apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+            let mut j = 0;
+            while j + PW <= ncb {
+                // Load the MR x PW C tile into "registers", stream the
+                // whole k block against it, store once.
+                let mut acc = [[0.0f32; PW]; MR];
+                for (r, lane) in acc.iter_mut().enumerate() {
+                    let base = (i0 + r) * ldc + jc + j;
+                    lane.copy_from_slice(&out[base..base + PW]);
+                }
+                for p in 0..kcb {
+                    let brow = &bpack[p * ncb + j..p * ncb + j + PW];
+                    for (r, lane) in acc.iter_mut().enumerate() {
+                        let av = ap[p * MR + r];
+                        for (x, &bv) in lane.iter_mut().zip(brow) {
+                            *x += av * bv;
+                        }
+                    }
+                }
+                for (r, lane) in acc.iter().enumerate() {
+                    let base = (i0 + r) * ldc + jc + j;
+                    out[base..base + PW].copy_from_slice(lane);
+                }
+                j += PW;
+            }
+            while j < ncb {
+                for r in 0..MR {
+                    let idx = (i0 + r) * ldc + jc + j;
+                    let mut x = out[idx];
+                    for p in 0..kcb {
+                        x += ap[p * MR + r] * bpack[p * ncb + j];
+                    }
+                    out[idx] = x;
+                }
+                j += 1;
+            }
+        }
+        // Ragged row tail (mcb % MR != 0): scalar, same k order.
+        for i in full_panels * MR..mcb {
+            let (pi, ir) = (i / MR, i % MR);
+            let ap = &apack[pi * MR * kcb..];
+            for j in 0..ncb {
+                let idx = (ic + i) * ldc + jc + j;
+                let mut x = out[idx];
+                for p in 0..kcb {
+                    x += ap[p * MR + ir] * bpack[p * ncb + j];
+                }
+                out[idx] = x;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA nanokernel: 4x16 register tile (8 ymm accumulators)
+// ---------------------------------------------------------------------------
+
+/// The real intrinsic kernel: a 4x16 C tile held in 8 ymm registers
+/// across the whole k block — per k step, 2 B loads + 4 A broadcasts +
+/// 8 `vfmadd231ps`.  Falls back to [`PortableNano`] off x86-64 (only
+/// reachable through a deliberately mis-resolved call; [`kernel_for`]
+/// never hands this body to a host without AVX2+FMA).
+pub struct Avx2FmaNano;
+
+static AVX2: Avx2FmaNano = Avx2FmaNano;
+
+impl Nanokernel for Avx2FmaNano {
+    fn isa(&self) -> Isa {
+        Isa::Avx2Fma
+    }
+
+    #[allow(unused_variables)]
+    fn macro_kernel(
+        &self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert!(hw_available(Isa::Avx2Fma), "AVX2 body on a non-AVX2 host");
+            // SAFETY: kernel_for() only resolves to this body when the
+            // host reports avx2+fma; slice extents are checked inside.
+            unsafe {
+                avx2::macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        PORTABLE.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    use super::MR;
+
+    // The 8-accumulator layout below hard-codes four C rows.
+    const _: () = assert!(MR == 4, "the AVX2 nanokernel is shaped for MR == 4");
+
+    /// The 4x16 FMA macro kernel.  The accumulation per output element
+    /// is `x = fma(a_p, b_p, x)` for p = 0..kcb in increasing order:
+    /// the scalar kernel's exact summation grouping, with each
+    /// multiply-add fused (single rounding).  The j remainder and the
+    /// ragged row tail use scalar `f32::mul_add`, which compiles to
+    /// `vfmadd` inside this `target_feature` fn — the whole block has
+    /// uniform one-rounding-per-term semantics.
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports avx2+fma.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn macro_kernel(
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        let full_panels = mcb / MR;
+        for pi in 0..full_panels {
+            let i0 = ic + pi * MR;
+            let ap = &apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+            // Bounds for the whole row quad once; the pointer math below
+            // stays inside out[i0*ldc .. (i0+3)*ldc + jc + ncb].
+            assert!((i0 + MR - 1) * ldc + jc + ncb <= out.len(), "C tile bounds");
+            assert!(kcb * ncb <= bpack.len(), "B panel bounds");
+            let obase = out.as_mut_ptr();
+            let o0 = obase.add(i0 * ldc + jc);
+            let o1 = obase.add((i0 + 1) * ldc + jc);
+            let o2 = obase.add((i0 + 2) * ldc + jc);
+            let o3 = obase.add((i0 + 3) * ldc + jc);
+            let bbase = bpack.as_ptr();
+            let mut j = 0usize;
+            while j + 16 <= ncb {
+                let mut c00 = _mm256_loadu_ps(o0.add(j));
+                let mut c01 = _mm256_loadu_ps(o0.add(j + 8));
+                let mut c10 = _mm256_loadu_ps(o1.add(j));
+                let mut c11 = _mm256_loadu_ps(o1.add(j + 8));
+                let mut c20 = _mm256_loadu_ps(o2.add(j));
+                let mut c21 = _mm256_loadu_ps(o2.add(j + 8));
+                let mut c30 = _mm256_loadu_ps(o3.add(j));
+                let mut c31 = _mm256_loadu_ps(o3.add(j + 8));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                for _p in 0..kcb {
+                    let b0 = _mm256_loadu_ps(bp);
+                    let b1 = _mm256_loadu_ps(bp.add(8));
+                    let a0 = _mm256_set1_ps(*apk);
+                    let a1 = _mm256_set1_ps(*apk.add(1));
+                    let a2 = _mm256_set1_ps(*apk.add(2));
+                    let a3 = _mm256_set1_ps(*apk.add(3));
+                    c00 = _mm256_fmadd_ps(a0, b0, c00);
+                    c01 = _mm256_fmadd_ps(a0, b1, c01);
+                    c10 = _mm256_fmadd_ps(a1, b0, c10);
+                    c11 = _mm256_fmadd_ps(a1, b1, c11);
+                    c20 = _mm256_fmadd_ps(a2, b0, c20);
+                    c21 = _mm256_fmadd_ps(a2, b1, c21);
+                    c30 = _mm256_fmadd_ps(a3, b0, c30);
+                    c31 = _mm256_fmadd_ps(a3, b1, c31);
+                    bp = bp.add(ncb);
+                    apk = apk.add(MR);
+                }
+                _mm256_storeu_ps(o0.add(j), c00);
+                _mm256_storeu_ps(o0.add(j + 8), c01);
+                _mm256_storeu_ps(o1.add(j), c10);
+                _mm256_storeu_ps(o1.add(j + 8), c11);
+                _mm256_storeu_ps(o2.add(j), c20);
+                _mm256_storeu_ps(o2.add(j + 8), c21);
+                _mm256_storeu_ps(o3.add(j), c30);
+                _mm256_storeu_ps(o3.add(j + 8), c31);
+                j += 16;
+            }
+            while j + 8 <= ncb {
+                let mut c0 = _mm256_loadu_ps(o0.add(j));
+                let mut c1 = _mm256_loadu_ps(o1.add(j));
+                let mut c2 = _mm256_loadu_ps(o2.add(j));
+                let mut c3 = _mm256_loadu_ps(o3.add(j));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                for _p in 0..kcb {
+                    let b0 = _mm256_loadu_ps(bp);
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*apk), b0, c0);
+                    c1 = _mm256_fmadd_ps(_mm256_set1_ps(*apk.add(1)), b0, c1);
+                    c2 = _mm256_fmadd_ps(_mm256_set1_ps(*apk.add(2)), b0, c2);
+                    c3 = _mm256_fmadd_ps(_mm256_set1_ps(*apk.add(3)), b0, c3);
+                    bp = bp.add(ncb);
+                    apk = apk.add(MR);
+                }
+                _mm256_storeu_ps(o0.add(j), c0);
+                _mm256_storeu_ps(o1.add(j), c1);
+                _mm256_storeu_ps(o2.add(j), c2);
+                _mm256_storeu_ps(o3.add(j), c3);
+                j += 8;
+            }
+            while j < ncb {
+                for r in 0..MR {
+                    let op = obase.add((i0 + r) * ldc + jc + j);
+                    let mut x = *op;
+                    for p in 0..kcb {
+                        x = ap[p * MR + r].mul_add(*bbase.add(p * ncb + j), x);
+                    }
+                    *op = x;
+                }
+                j += 1;
+            }
+        }
+        for i in full_panels * MR..mcb {
+            let (pi, ir) = (i / MR, i % MR);
+            let ap = &apack[pi * MR * kcb..];
+            for j in 0..ncb {
+                let idx = (ic + i) * ldc + jc + j;
+                let mut x = out[idx];
+                for p in 0..kcb {
+                    x = ap[p * MR + ir].mul_add(bpack[p * ncb + j], x);
+                }
+                out[idx] = x;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 / NEON stubs: same trait, delegating bodies
+// ---------------------------------------------------------------------------
+
+/// AVX-512 stub: keeps the plan-schema slot (`simd:avx512`) and the
+/// dispatch seam; the body currently delegates to the AVX2 kernel
+/// (every AVX-512F machine runs AVX2+FMA).  A real 4x32 zmm tile drops
+/// in here without touching the plan compiler.
+pub struct Avx512Nano;
+
+static AVX512: Avx512Nano = Avx512Nano;
+
+impl Nanokernel for Avx512Nano {
+    fn isa(&self) -> Isa {
+        Isa::Avx512
+    }
+
+    fn macro_kernel(
+        &self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        AVX2.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+    }
+}
+
+/// NEON stub: delegates to the portable body (which a NEON
+/// autovectorizer handles well); the `simd:neon` plan slot is already
+/// wired for an intrinsic `float32x4_t` tile.
+pub struct NeonNano;
+
+static NEON: NeonNano = NeonNano;
+
+impl Nanokernel for NeonNano {
+    fn isa(&self) -> Isa {
+        Isa::Neon
+    }
+
+    fn macro_kernel(
+        &self,
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        PORTABLE.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fma_relaxed tolerance contract
+// ---------------------------------------------------------------------------
+
+/// Higham's gamma_n for f32: `n*u / (1 - n*u)` with unit roundoff
+/// `u = 2^-24`.  Bounds the relative error of an n-term dot product
+/// evaluated in any order with rounded (or fused) multiply-adds.
+pub fn gamma(terms: usize) -> f64 {
+    const U: f64 = (f32::EPSILON as f64) / 2.0; // 2^-24
+    let nu = terms as f64 * U;
+    assert!(nu < 1.0, "gamma({terms}) out of range");
+    nu / (1.0 - nu)
+}
+
+/// Distance between two f32s in units in the last place (monotone bit
+/// mapping; 0 = bit-identical).  Reported by tolerance failures so a
+/// drift reads as "N ulp", not raw decimals.
+pub fn ulp_distance(x: f32, y: f32) -> u64 {
+    fn ordered(v: f32) -> i64 {
+        let b = v.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7FFF_FFFF) as i64)
+        } else {
+            b as i64
+        }
+    }
+    (ordered(x) - ordered(y)).unsigned_abs()
+}
+
+/// Verify `got` (an `fma_relaxed` kernel's output for
+/// `C + A@B [+ bias]`) against `want` (the bit-exact naive oracle)
+/// under the condition-scaled bound derived in DESIGN.md §10:
+///
+/// ```text
+/// |got[i,j] - want[i,j]| <= 2 * gamma(k + 2) * scale[i,j] + tiny
+/// scale[i,j] = |c[i,j]| + sum_p |a[i,p]| * |b[p,j]|  (+ |bias[j]|)
+/// ```
+///
+/// Both sides approximate the same exact sum; each carries at most
+/// `gamma(k+2) * scale` of rounding error (k product terms + the C seed
+/// + the bias term), so their difference is bounded by twice that.  The
+/// scale is the *absolute-value* reduction — a raw ULP bound against
+/// the oracle would be unbounded under cancellation, which is exactly
+/// why the contract is condition-scaled (DESIGN.md §10).  `tiny`
+/// absorbs subnormal scales.
+///
+/// Returns the maximum observed ULP distance (for bench reporting);
+/// errors with element, ULP distance, and bound on the first violation.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_fma_relaxed(
+    got: &[f32],
+    want: &[f32],
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Result<u64> {
+    assert_eq!(got.len(), m * n, "got length");
+    assert_eq!(want.len(), m * n, "want length");
+    assert_eq!(a.len(), m * k, "A length");
+    assert_eq!(b.len(), k * n, "B length");
+    assert_eq!(c.len(), m * n, "C length");
+    const TINY: f64 = 1e-30;
+    // The scale matrix is itself a naive i-k-j sweep, over |.| values.
+    let mut scale: Vec<f64> = c.iter().map(|v| f64::from(v.abs())).collect();
+    for i in 0..m {
+        for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let aa = f64::from(av.abs());
+            let brow = &b[p * n..(p + 1) * n];
+            for (s, &bv) in scale[i * n..(i + 1) * n].iter_mut().zip(brow) {
+                *s += aa * f64::from(bv.abs());
+            }
+        }
+    }
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n, "bias length");
+        for row in scale.chunks_mut(n) {
+            for (s, &bv) in row.iter_mut().zip(bias) {
+                *s += f64::from(bv.abs());
+            }
+        }
+    }
+    let g = 2.0 * gamma(k + 2);
+    let mut max_ulp = 0u64;
+    for (idx, ((&gv, &wv), &s)) in got.iter().zip(want).zip(&scale).enumerate() {
+        let err = (f64::from(gv) - f64::from(wv)).abs();
+        let bound = g * s + TINY;
+        if err > bound {
+            bail!(
+                "fma_relaxed tolerance violated at element {idx} \
+                 ({}, {} = {} ulp apart): |diff| {err:.3e} > bound {bound:.3e} \
+                 (scale {s:.3e}, 2*gamma(k+2) {g:.3e}, k {k})",
+                gv,
+                wv,
+                ulp_distance(gv, wv)
+            );
+        }
+        max_ulp = max_ulp.max(ulp_distance(gv, wv));
+    }
+    Ok(max_ulp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernel::{matmul, KernelPolicy};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
+        }
+        assert!(Isa::parse("sse9").is_err());
+        assert!(Isa::parse("scalar").is_err(), "scalar is a detect() outcome, not an Isa");
+    }
+
+    #[test]
+    fn kernel_for_degrades_to_portable_when_unavailable() {
+        // Whatever the host, every ISA resolves to a runnable body.
+        for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
+            let nano = kernel_for(isa);
+            assert!(
+                hw_available(nano.isa()),
+                "{:?} resolved to a body the host cannot run",
+                isa
+            );
+        }
+        assert_eq!(kernel_for(Isa::Portable).isa(), Isa::Portable);
+    }
+
+    #[test]
+    fn gamma_is_small_and_monotone() {
+        assert!(gamma(1) > 0.0);
+        assert!(gamma(512) < 1e-4);
+        assert!(gamma(8) < gamma(9));
+        // 512-term f32 dot product: ~3e-5 relative.
+        assert!((gamma(514) - 514.0 * 5.96e-8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ulp_distance_counts_representable_steps() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert!(ulp_distance(1.0, -1.0) > 1 << 24);
+    }
+
+    /// Drive one nanokernel through the full packed-panel path by
+    /// running the public matmul with a Simd policy pinned to it.
+    fn simd_vs_naive(isa: Isa, m: usize, n: usize, k: usize, seed: u64) -> u64 {
+        use crate::runtime::kernel::Blocking;
+        let mut rng = Rng::new(seed);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let mut want = c.clone();
+        matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        let mut got = c.clone();
+        matmul(
+            KernelPolicy::Simd(Blocking { mc: 8, kc: 4, nc: 16 }, 1, isa),
+            &mut got,
+            &a,
+            &b,
+            m,
+            n,
+            k,
+        );
+        verify_fma_relaxed(&got, &want, &a, &b, &c, None, m, n, k).unwrap_or_else(|e| {
+            panic!("{:?} at {m}x{n}x{k}: {e}", isa);
+        })
+    }
+
+    #[test]
+    fn every_nanokernel_meets_the_tolerance_contract_on_ragged_shapes() {
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (1, 17, 5),
+            (19, 1, 7),
+            (4, 16, 8),
+            (5, 17, 9),
+            (4, 35, 12), // 16-wide + 8-wide + scalar j remainders in one row
+            (33, 7, 21),
+            (40, 40, 40),
+        ] {
+            for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
+                simd_vs_naive(isa, m, n, k, 0x51D + (m * 1000 + n * 10 + k) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn portable_body_is_currently_bit_identical_to_naive() {
+        // Not a contract (the contract is the tolerance above) — but the
+        // portable body uses plain mul+add in naive k order today, so a
+        // nonzero ULP distance means its loop structure regrouped.
+        for &(m, n, k) in &[(5, 17, 9), (33, 7, 21), (40, 40, 40)] {
+            let max_ulp = simd_vs_naive(Isa::Portable, m, n, k, 0x90A7);
+            assert_eq!(max_ulp, 0, "portable drifted at {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn tolerance_harness_rejects_a_genuinely_wrong_result() {
+        let (m, n, k) = (6, 6, 6);
+        let mut rng = Rng::new(0xBAD);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let c = rng.normal_matrix(m, n);
+        let mut want = c.clone();
+        matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        let mut wrong = want.clone();
+        wrong[7] += 0.25; // far past any rounding bound at k=6
+        assert!(
+            verify_fma_relaxed(&wrong, &want, &a, &b, &c, None, m, n, k).is_err(),
+            "harness accepted a 0.25 absolute error"
+        );
+    }
+}

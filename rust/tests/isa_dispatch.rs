@@ -1,0 +1,158 @@
+//! Runtime ISA dispatch: the `MLIR_GEMM_FORCE_ISA` override and the
+//! plan compiler's pass 6 around it.
+//!
+//! These tests mutate process environment, so they live in their own
+//! integration binary (one process per binary) and serialize on a
+//! mutex — `cargo test` runs tests of one binary on parallel threads,
+//! and `std::env::set_var` is process-global.
+
+use std::sync::Mutex;
+
+use mlir_gemm::plan::{compile, GemmKey, IsaPref, NumericsClass, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::kernel::{self, KernelPolicy};
+use mlir_gemm::runtime::nanokernel::{self, Isa, FORCE_ISA_ENV};
+use mlir_gemm::util::prng::Rng;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `MLIR_GEMM_FORCE_ISA` set to `value` (None = unset),
+/// restoring the prior state afterwards even if `f` panics midway
+/// (the lock guard is dropped poisoned; later tests recover it).
+fn with_force_isa<T>(value: Option<&str>, f: impl FnOnce() -> T) -> T {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prior = std::env::var(FORCE_ISA_ENV).ok();
+    match value {
+        Some(v) => std::env::set_var(FORCE_ISA_ENV, v),
+        None => std::env::remove_var(FORCE_ISA_ENV),
+    }
+    let out = f();
+    match prior {
+        Some(v) => std::env::set_var(FORCE_ISA_ENV, v),
+        None => std::env::remove_var(FORCE_ISA_ENV),
+    }
+    out
+}
+
+/// A PlanEnv that requests SIMD lowering and resolves the ISA through
+/// the runtime probe (the env override path under test), with the rest
+/// of the environment pinned for determinism.
+fn simd_detect_env() -> PlanEnv {
+    PlanEnv::pinned().with_force(PlanOverride::Simd).with_isa(IsaPref::Detect)
+}
+
+#[test]
+fn forced_scalar_compiles_bit_exact_plans_bit_identical_to_naive() {
+    with_force_isa(Some("scalar"), || {
+        let plan = compile(&GemmKey::plain(96, 64, 48), &simd_detect_env()).unwrap();
+        // SIMD was requested, but the override forces the fallback: the
+        // plan stays in the bit_exact class on a scalar kernel...
+        assert_eq!(plan.numerics, NumericsClass::BitExact);
+        assert_eq!(plan.isa_label(), "scalar");
+        assert!(
+            !matches!(plan.kernel, KernelPolicy::Simd(..)),
+            "forced scalar still lowered to {:?}",
+            plan.kernel
+        );
+        // ...and honors the class contract: bit-identical to naive.
+        let (m, n, k) = (96, 64, 48);
+        let mut rng = Rng::new(0x15A);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        kernel::matmul(plan.kernel, &mut got, &a, &b, m, n, k);
+        kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        assert_eq!(got, want, "scalar-fallback plan diverged from naive");
+    });
+}
+
+#[test]
+fn env_isa_name_pins_the_nanokernel_choice() {
+    with_force_isa(Some("portable"), || {
+        let plan = compile(&GemmKey::plain(64, 64, 64), &simd_detect_env()).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::FmaRelaxed);
+        assert_eq!(plan.isa_label(), "simd:portable");
+        assert!(matches!(plan.kernel, KernelPolicy::Simd(_, _, Isa::Portable)));
+        let isa_trace = plan.trace.last().unwrap();
+        assert_eq!(isa_trace.pass, "isa");
+        assert!(
+            isa_trace.reason.contains(FORCE_ISA_ENV),
+            "trace should credit the env override: {}",
+            isa_trace.reason
+        );
+    });
+}
+
+#[test]
+fn invalid_override_fails_simd_compiles_but_never_auto() {
+    with_force_isa(Some("sse9"), || {
+        // Requesting SIMD consults the probe, which must refuse the
+        // unparseable override loudly...
+        let err = compile(&GemmKey::plain(64, 64, 64), &simd_detect_env()).unwrap_err();
+        assert!(err.to_string().contains("sse9"), "unhelpful error: {err}");
+        // ...but an Auto compile never reads the probe: a stray env var
+        // cannot break default (bit_exact) plan compilation.
+        let env = PlanEnv::pinned().with_isa(IsaPref::Detect);
+        let plan = compile(&GemmKey::plain(64, 64, 64), &env).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::BitExact);
+    });
+}
+
+#[test]
+fn detection_round_trips_the_env_override() {
+    with_force_isa(Some("scalar"), || {
+        assert_eq!(nanokernel::detect().unwrap(), None);
+    });
+    with_force_isa(Some("avx512"), || {
+        assert_eq!(nanokernel::detect().unwrap(), Some(Isa::Avx512));
+    });
+    // Empty / whitespace-only counts as unset: the auto-probe answers.
+    for unset in [None, Some(""), Some("   ")] {
+        with_force_isa(unset, || {
+            let probed = nanokernel::detect().unwrap();
+            let expect = if nanokernel::hw_available(Isa::Avx2Fma) {
+                Some(Isa::Avx2Fma)
+            } else {
+                Some(Isa::Portable)
+            };
+            assert_eq!(probed, expect);
+        });
+    }
+}
+
+#[test]
+fn dispatch_degrades_unavailable_isas_to_the_portable_body() {
+    // Plans pinned to an ISA the host lacks still execute — `kernel_for`
+    // hands back the portable body instead of faulting.  (On an AVX2
+    // host this checks the identity resolution path instead.)
+    for isa in [Isa::Avx2Fma, Isa::Avx512, Isa::Neon, Isa::Portable] {
+        let nano = nanokernel::kernel_for(isa);
+        if nanokernel::hw_available(isa) {
+            assert_eq!(nano.isa(), isa);
+        } else {
+            assert_eq!(nano.isa(), Isa::Portable, "{isa:?} should degrade");
+        }
+    }
+}
+
+#[test]
+fn forced_simd_policy_executes_on_any_host() {
+    // A forced simd:<isa> kernel policy is executable regardless of the
+    // host: unavailable ISAs run the portable body, and the result obeys
+    // the fma_relaxed tolerance against naive (portable is exactly the
+    // unfused 4-wide kernel, so this is a generous bound).
+    let (m, n, k) = (40, 33, 21);
+    let mut rng = Rng::new(0xD15);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let zeros = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+    for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
+        let policy = KernelPolicy::parse(&format!("simd:{}:8,4,16,1", isa.name())).unwrap();
+        let mut got = vec![0.0f32; m * n];
+        kernel::matmul(policy, &mut got, &a, &b, m, n, k);
+        nanokernel::verify_fma_relaxed(&got, &want, &a, &b, &zeros, None, m, n, k)
+            .unwrap_or_else(|e| panic!("{isa:?}: {e}"));
+    }
+}

@@ -13,10 +13,15 @@
 //! deliberately-unfused off-path) against the naive reference over the
 //! shape sweep.  No global state anywhere: each comparison constructs
 //! its plans explicitly.
+//!
+//! This whole suite is pinned to the `bit_exact` numerics class: no
+//! environment here opts into SIMD, so every compiled plan must carry
+//! `NumericsClass::BitExact` (asserted below).  The `fma_relaxed` half
+//! of the contract lives in the `numerics_tolerance` harness.
 
 use mlir_gemm::coordinator::sharding::{build_shard_tasks, reduce_outputs};
 use mlir_gemm::coordinator::ShardPlan;
-use mlir_gemm::plan::{compile, ExecutionPlan, GemmKey, PlanEnv, PlanOverride};
+use mlir_gemm::plan::{compile, ExecutionPlan, GemmKey, NumericsClass, PlanEnv, PlanOverride};
 use mlir_gemm::runtime::kernel::{self, Blocking, KernelPolicy};
 use mlir_gemm::runtime::{Epilogue, Program, Tensor};
 use mlir_gemm::schedule::Dtype;
@@ -327,6 +332,17 @@ fn assert_compiled_plans_match(m: usize, n: usize, k: usize) -> Result<(), Strin
         let want = p.execute_planned(&inputs, &naive).unwrap();
         for env in plan_envs() {
             let eplan = compile(&p.gemm_key().unwrap(), &env).unwrap();
+            // None of these environments opts into SIMD, so the class
+            // must be bit_exact — that is what licenses the bitwise
+            // comparison below.
+            if eplan.numerics != NumericsClass::BitExact {
+                return Err(format!(
+                    "plan {} (env force={}) compiled {} without a SIMD opt-in",
+                    eplan.id(),
+                    env.force.name(),
+                    eplan.numerics.name(),
+                ));
+            }
             let got = p.execute_planned(&inputs, &eplan).unwrap();
             for (idx, (w, g)) in want[0].data.iter().zip(&got[0].data).enumerate() {
                 if w.to_bits() != g.to_bits() {
@@ -357,5 +373,6 @@ fn compilation_is_deterministic() {
         let a = compile(&key, &PlanEnv::pinned()).unwrap();
         let b = compile(&key, &PlanEnv::pinned()).unwrap();
         assert_eq!(a, b, "non-deterministic compilation for {key:?}");
+        assert_eq!(a.numerics, NumericsClass::BitExact, "default compile for {key:?}");
     }
 }

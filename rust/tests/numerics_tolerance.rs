@@ -1,0 +1,190 @@
+//! The `fma_relaxed` numerics-class contract, exercised end to end.
+//!
+//! `bit_exact` plans are covered by the fuzz-differential and
+//! kernel-equivalence suites (bitwise identity to the naive i-k-j
+//! oracle).  This harness is the other half of the contract: every
+//! nanokernel result must sit within the condition-scaled tolerance
+//!
+//!   |got - want| <= 2 * gamma(k+2) * scale + tiny
+//!   scale[i,j] = |c[i,j]| + sum_p |a[i,p]| * |b[p,j]| (+ |bias[j]|)
+//!
+//! derived in DESIGN.md §10, over the same shape family the fuzz
+//! differential sweeps (ragged panels, degenerate dims, unit rows).
+//! It also pins the structural invariants that hold even under FMA:
+//! threading and prepacking never touch per-element operation order, so
+//! threaded-SIMD and prepacked-SIMD remain bitwise identical to the
+//! plain SIMD run — the tolerance is spent on FMA contraction only.
+
+use mlir_gemm::plan::{compile, GemmKey, NumericsClass, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::kernel::{self, BOperand, Blocking, KernelPolicy, PrepackedB};
+use mlir_gemm::runtime::nanokernel::{self, Isa};
+use mlir_gemm::util::prng::Rng;
+
+/// The fuzz differential's hand-picked adversarial shapes: unit dims,
+/// single-row/column panels, blocks that straddle every tile boundary
+/// of the default 8/4/16 test blocking, plus the 16+8+scalar j-ladder.
+const SPECIAL: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 17, 5),
+    (19, 1, 7),
+    (4, 16, 8),
+    (5, 17, 9),
+    (33, 7, 21),
+    (40, 40, 40),
+    (4, 35, 12),
+];
+
+/// ISAs every host can execute: the portable body always, AVX2 when the
+/// hardware is really there (it degrades to portable otherwise, which
+/// would silently test the same body twice).
+fn testable_isas() -> Vec<Isa> {
+    let mut isas = vec![Isa::Portable];
+    if nanokernel::hw_available(Isa::Avx2Fma) {
+        isas.push(Isa::Avx2Fma);
+    }
+    isas
+}
+
+fn naive_with_seed(c: &[f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut want = c.to_vec();
+    kernel::matmul(KernelPolicy::Naive, &mut want, a, b, m, n, k);
+    want
+}
+
+#[test]
+fn every_nanokernel_meets_the_tolerance_over_the_fuzz_shape_family() {
+    let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+    let mut rng = Rng::new(0xF5A2D);
+    // The special shapes plus a band of random ones, like the fuzz sweep.
+    let mut shapes: Vec<(usize, usize, usize)> = SPECIAL.to_vec();
+    for _ in 0..12 {
+        let m = 1 + (rng.next_u64() % 48) as usize;
+        let n = 1 + (rng.next_u64() % 48) as usize;
+        let k = 1 + (rng.next_u64() % 48) as usize;
+        shapes.push((m, n, k));
+    }
+    for &(m, n, k) in &shapes {
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        // Nonzero C seed: the contract covers the accumulate form.
+        let c = rng.normal_matrix(m, n);
+        let want = naive_with_seed(&c, &a, &b, m, n, k);
+        for isa in testable_isas() {
+            for t in [1usize, 3] {
+                let mut got = c.clone();
+                kernel::matmul(KernelPolicy::Simd(bs, t, isa), &mut got, &a, &b, m, n, k);
+                let ulp =
+                    nanokernel::verify_fma_relaxed(&got, &want, &a, &b, &c, None, m, n, k)
+                        .unwrap_or_else(|e| {
+                            panic!("{isa:?} t={t} at {m}x{n}x{k}: {e}")
+                        });
+                // Small-k products of N(0,1) values cannot legally drift
+                // far; a huge ULP count here means a broken kernel that
+                // happens to sit under a loose bound.
+                assert!(ulp < 1 << 16, "{isa:?} at {m}x{n}x{k}: {ulp} ulp");
+            }
+        }
+    }
+}
+
+#[test]
+fn threading_and_prepacking_do_not_spend_any_tolerance() {
+    // Row banding and panel prepacking reorder *scheduling*, never the
+    // per-element operation sequence: under SIMD they stay bitwise
+    // identical to the plain single-thread SIMD run.
+    let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+    let mut rng = Rng::new(0xBEEF);
+    for &(m, n, k) in &[(5usize, 17usize, 9usize), (33, 23, 21), (64, 48, 40)] {
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        for isa in testable_isas() {
+            let mut base = vec![0.0f32; m * n];
+            kernel::matmul(KernelPolicy::Simd(bs, 1, isa), &mut base, &a, &b, m, n, k);
+            let mut threaded = vec![0.0f32; m * n];
+            kernel::matmul(KernelPolicy::Simd(bs, 3, isa), &mut threaded, &a, &b, m, n, k);
+            assert_eq!(base, threaded, "{isa:?} threading changed bits at {m}x{n}x{k}");
+            let packed = PrepackedB::pack(&b, k, n, bs);
+            let mut pre = vec![0.0f32; m * n];
+            kernel::matmul_b(
+                KernelPolicy::Simd(bs, 1, isa),
+                &mut pre,
+                &a,
+                BOperand::Prepacked(&packed),
+                m,
+                n,
+                k,
+            );
+            assert_eq!(base, pre, "{isa:?} prepacking changed bits at {m}x{n}x{k}");
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_under_simd_honors_the_bias_tolerance() {
+    // The fused tail applies bias exactly once per element after the
+    // relaxed GEMM; the bias term joins the tolerance scale.
+    let bs = Blocking { mc: 8, kc: 4, nc: 16 };
+    let mut rng = Rng::new(0xB1A5);
+    for &(m, n, k) in &[(5usize, 17usize, 9usize), (33, 7, 21), (40, 40, 40)] {
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let bias = rng.normal_matrix(1, n);
+        let tail = |out: &mut [f32]| {
+            for row in out.chunks_mut(n) {
+                for (v, &bv) in row.iter_mut().zip(&bias) {
+                    *v += bv;
+                }
+            }
+        };
+        let zeros = vec![0.0f32; m * n];
+        let mut want = zeros.clone();
+        kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        tail(&mut want);
+        for isa in testable_isas() {
+            let mut got = zeros.clone();
+            kernel::matmul_fused(
+                KernelPolicy::Simd(bs, 2, isa),
+                &mut got,
+                &a,
+                &b,
+                m,
+                n,
+                k,
+                &tail,
+            );
+            nanokernel::verify_fma_relaxed(
+                &got,
+                &want,
+                &a,
+                &b,
+                &zeros,
+                Some(&bias),
+                m,
+                n,
+                k,
+            )
+            .unwrap_or_else(|e| panic!("{isa:?} fused at {m}x{n}x{k}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn compiled_simd_plans_carry_and_honor_the_fma_relaxed_class() {
+    // End to end through the plan compiler: a --plan simd compile yields
+    // an fma_relaxed plan whose executed kernel meets the tolerance.
+    let env = PlanEnv::pinned().with_force(PlanOverride::Simd);
+    let mut rng = Rng::new(0x51D);
+    for &(m, n, k) in &[(24usize, 24usize, 24usize), (96, 64, 48), (128, 96, 112)] {
+        let plan = compile(&GemmKey::plain(m, n, k), &env).unwrap();
+        assert_eq!(plan.numerics, NumericsClass::FmaRelaxed, "{m}x{n}x{k}");
+        assert!(plan.isa_label().starts_with("simd:"), "{}", plan.isa_label());
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let zeros = vec![0.0f32; m * n];
+        let mut got = zeros.clone();
+        kernel::matmul(plan.kernel, &mut got, &a, &b, m, n, k);
+        let want = naive_with_seed(&zeros, &a, &b, m, n, k);
+        nanokernel::verify_fma_relaxed(&got, &want, &a, &b, &zeros, None, m, n, k)
+            .unwrap_or_else(|e| panic!("plan {} at {m}x{n}x{k}: {e}", plan.id()));
+    }
+}

@@ -36,6 +36,9 @@ fn compiled_plans_round_trip_through_json() {
         PlanEnv::pinned(),
         PlanEnv::for_pool(4),
         PlanEnv::pinned().with_force(PlanOverride::parse("threaded:64,128,256,2").unwrap()),
+        // SIMD opt-in: pinned ISA, fma_relaxed plans must round-trip too.
+        PlanEnv::pinned().with_force(PlanOverride::Simd),
+        PlanEnv::pinned().with_force(PlanOverride::parse("simd:portable:64,128,256,2").unwrap()),
     ];
     for key in &keys {
         for env in &envs {
@@ -44,17 +47,23 @@ fn compiled_plans_round_trip_through_json() {
             let back = ExecutionPlan::from_text(&text).unwrap();
             assert_eq!(plan, back, "round trip drifted for {key:?}");
             // and the serialized form is itself valid JSON that keeps the
-            // per-pass provenance
+            // per-pass provenance and the numerics class
             let parsed = json::parse(&text).unwrap();
             let trace = parsed.get("trace").and_then(Json::as_arr).unwrap();
             assert_eq!(trace.len(), plan.trace.len());
-            assert!(plan.trace.len() >= 4, "pipeline records all four passes");
+            assert!(plan.trace.len() >= 6, "pipeline records all six passes");
+            assert_eq!(
+                parsed.get("numerics").and_then(Json::as_str),
+                Some(plan.numerics.name()),
+                "numerics class missing from the serialized plan"
+            );
         }
     }
 }
 
 // ---------------------------------------------------------------------------
 // Golden plans: the paper's Table 1 shape family under the pinned env
+// (see golden/README.md; field reference in docs/PLAN_SCHEMA.md)
 // ---------------------------------------------------------------------------
 
 const GOLDENS: &[&str] = &[
@@ -62,6 +71,7 @@ const GOLDENS: &[&str] = &[
     include_str!("golden/plan_512x512x512_f16_f32_bias_relu.json"),
     include_str!("golden/plan_256x256x256_f16_f32_none.json"),
     include_str!("golden/plan_64x64x64_f32_f32_none.json"),
+    include_str!("golden/plan_512x512x512_f32_f32_none_simd.json"),
 ];
 
 #[test]
@@ -78,7 +88,14 @@ fn golden_plans_for_table1_shapes() {
             dtype_acc: Dtype::parse(get_s("dtype_acc")).unwrap(),
             epilogue: get_s("epilogue").to_string(),
         };
-        let plan = compile(&key, &PlanEnv::pinned()).unwrap();
+        // A golden may carry the plan override it was compiled under
+        // (the simd golden does); absent means the auto pipeline.
+        let force = g
+            .get("force")
+            .and_then(Json::as_str)
+            .map(|f| PlanOverride::parse(f).unwrap())
+            .unwrap_or(PlanOverride::Auto);
+        let plan = compile(&key, &PlanEnv::pinned().with_force(force)).unwrap();
         assert_eq!(
             plan.kernel.name(),
             get_s("kernel"),
@@ -94,7 +111,12 @@ fn golden_plans_for_table1_shapes() {
             g.get("prepack").and_then(Json::as_bool).unwrap(),
             "prepack decision drifted for {key:?}"
         );
-        assert!(plan.trace.len() >= 5, "pipeline records all five passes");
+        assert_eq!(
+            plan.numerics.name(),
+            get_s("numerics"),
+            "numerics class drifted for {key:?}"
+        );
+        assert!(plan.trace.len() >= 6, "pipeline records all six passes");
     }
 }
 

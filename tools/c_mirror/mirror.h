@@ -1,0 +1,43 @@
+/* Shared declarations for the C mirror of the Rust GEMM engine.
+ * See README.md in this directory for what the mirror is for and how
+ * faithfully it tracks rust/src/runtime/{kernel,nanokernel}.rs. */
+#ifndef MIRROR_H
+#define MIRROR_H
+
+#include <stddef.h>
+
+#define MR 4
+#define NR 4
+
+typedef struct {
+    size_t mc, kc, nc;
+} blocking_t;
+
+/* kernel.rs DEFAULT_BLOCKING */
+#define DEFAULT_BLOCKING ((blocking_t){128, 256, 1024})
+
+/* naive i-k-j reference: out += a @ b (out holds C on entry) */
+void gemm_naive(float *out, const float *a, const float *b,
+                size_t m, size_t n, size_t k);
+
+/* scalar tiled kernel (pack_a/pack_b + MRxNR micro kernel), one thread */
+void gemm_tiled(float *out, const float *a, const float *b,
+                size_t m, size_t n, size_t k, blocking_t bs);
+
+/* row-banded threading over the tiled kernel; threads==0 probes nproc.
+ * avx2 != 0 swaps the macro kernel for the AVX2+FMA nanokernel. */
+void gemm_banded(float *out, const float *a, const float *b,
+                 size_t m, size_t n, size_t k, blocking_t bs,
+                 size_t threads, int avx2);
+
+/* portable 4-wide nanokernel (nanokernel.rs PortableNano), one thread */
+void gemm_portable_nano(float *out, const float *a, const float *b,
+                        size_t m, size_t n, size_t k, blocking_t bs);
+
+/* nanokernel.rs avx2::macro_kernel — defined in mirror_avx2.c, which is
+ * the only translation unit built with -mavx2 -mfma */
+void avx2_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                       size_t jc, size_t ncb, size_t kcb,
+                       const float *apack, const float *bpack);
+
+#endif

@@ -1,0 +1,106 @@
+/* Line-by-line C mirror of nanokernel.rs avx2::macro_kernel — the
+ * 4x16 AVX2+FMA register tile (8 ymm accumulators, 2 B loads + 4 A
+ * broadcasts + 8 vfmadd231ps per k step), the 8-wide j remainder, the
+ * scalar fmaf() j tail, and the ragged-row fmaf() tail.
+ *
+ * This is the ONLY translation unit built with -mavx2 -mfma.  It still
+ * uses -ffp-contract=off: every fused multiply-add below is explicit
+ * (an intrinsic or fmaf), exactly as in the Rust body, so the mirror's
+ * rounding sequence is the one the fma_relaxed contract describes.
+ */
+#include "mirror.h"
+
+#include <immintrin.h>
+#include <math.h>
+
+void avx2_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                       size_t jc, size_t ncb, size_t kcb,
+                       const float *apack, const float *bpack) {
+    size_t full_panels = mcb / MR;
+    for (size_t pi = 0; pi < full_panels; pi++) {
+        size_t i0 = ic + pi * MR;
+        const float *ap = apack + pi * MR * kcb;
+        float *o0 = out + i0 * ldc + jc;
+        float *o1 = o0 + ldc, *o2 = o1 + ldc, *o3 = o2 + ldc;
+        size_t j = 0;
+        for (; j + 16 <= ncb; j += 16) {
+            __m256 c00 = _mm256_loadu_ps(o0 + j);
+            __m256 c01 = _mm256_loadu_ps(o0 + j + 8);
+            __m256 c10 = _mm256_loadu_ps(o1 + j);
+            __m256 c11 = _mm256_loadu_ps(o1 + j + 8);
+            __m256 c20 = _mm256_loadu_ps(o2 + j);
+            __m256 c21 = _mm256_loadu_ps(o2 + j + 8);
+            __m256 c30 = _mm256_loadu_ps(o3 + j);
+            __m256 c31 = _mm256_loadu_ps(o3 + j + 8);
+            const float *bp = bpack + j;
+            const float *apk = ap;
+            for (size_t p = 0; p < kcb; p++) {
+                __m256 b0 = _mm256_loadu_ps(bp);
+                __m256 b1 = _mm256_loadu_ps(bp + 8);
+                __m256 a0 = _mm256_set1_ps(apk[0]);
+                __m256 a1 = _mm256_set1_ps(apk[1]);
+                __m256 a2 = _mm256_set1_ps(apk[2]);
+                __m256 a3 = _mm256_set1_ps(apk[3]);
+                c00 = _mm256_fmadd_ps(a0, b0, c00);
+                c01 = _mm256_fmadd_ps(a0, b1, c01);
+                c10 = _mm256_fmadd_ps(a1, b0, c10);
+                c11 = _mm256_fmadd_ps(a1, b1, c11);
+                c20 = _mm256_fmadd_ps(a2, b0, c20);
+                c21 = _mm256_fmadd_ps(a2, b1, c21);
+                c30 = _mm256_fmadd_ps(a3, b0, c30);
+                c31 = _mm256_fmadd_ps(a3, b1, c31);
+                bp += ncb;
+                apk += MR;
+            }
+            _mm256_storeu_ps(o0 + j, c00);
+            _mm256_storeu_ps(o0 + j + 8, c01);
+            _mm256_storeu_ps(o1 + j, c10);
+            _mm256_storeu_ps(o1 + j + 8, c11);
+            _mm256_storeu_ps(o2 + j, c20);
+            _mm256_storeu_ps(o2 + j + 8, c21);
+            _mm256_storeu_ps(o3 + j, c30);
+            _mm256_storeu_ps(o3 + j + 8, c31);
+        }
+        for (; j + 8 <= ncb; j += 8) {
+            __m256 c0 = _mm256_loadu_ps(o0 + j);
+            __m256 c1 = _mm256_loadu_ps(o1 + j);
+            __m256 c2 = _mm256_loadu_ps(o2 + j);
+            __m256 c3 = _mm256_loadu_ps(o3 + j);
+            const float *bp = bpack + j;
+            const float *apk = ap;
+            for (size_t p = 0; p < kcb; p++) {
+                __m256 b0 = _mm256_loadu_ps(bp);
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(apk[0]), b0, c0);
+                c1 = _mm256_fmadd_ps(_mm256_set1_ps(apk[1]), b0, c1);
+                c2 = _mm256_fmadd_ps(_mm256_set1_ps(apk[2]), b0, c2);
+                c3 = _mm256_fmadd_ps(_mm256_set1_ps(apk[3]), b0, c3);
+                bp += ncb;
+                apk += MR;
+            }
+            _mm256_storeu_ps(o0 + j, c0);
+            _mm256_storeu_ps(o1 + j, c1);
+            _mm256_storeu_ps(o2 + j, c2);
+            _mm256_storeu_ps(o3 + j, c3);
+        }
+        for (; j < ncb; j++) {
+            for (size_t r = 0; r < MR; r++) {
+                float *op = out + (i0 + r) * ldc + jc + j;
+                float x = *op;
+                for (size_t p = 0; p < kcb; p++)
+                    x = fmaf(ap[p * MR + r], bpack[p * ncb + j], x);
+                *op = x;
+            }
+        }
+    }
+    for (size_t i = full_panels * MR; i < mcb; i++) {
+        size_t pi = i / MR, ir = i % MR;
+        const float *ap = apack + pi * MR * kcb;
+        for (size_t j = 0; j < ncb; j++) {
+            size_t idx = (ic + i) * ldc + jc + j;
+            float x = out[idx];
+            for (size_t p = 0; p < kcb; p++)
+                x = fmaf(ap[p * MR + ir], bpack[p * ncb + j], x);
+            out[idx] = x;
+        }
+    }
+}

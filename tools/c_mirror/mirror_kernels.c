@@ -1,0 +1,259 @@
+/* Line-by-line C mirror of rust/src/runtime/kernel.rs (naive, packed
+ * tiled, row-banded) and the portable nanokernel from
+ * rust/src/runtime/nanokernel.rs.
+ *
+ * This translation unit is deliberately built at the baseline x86-64
+ * level with -ffp-contract=off: rustc never contracts a*b+c into an
+ * FMA, so neither may the mirror's scalar paths — bit-identity with
+ * the naive reference is part of what the mirror validates.
+ */
+#include "mirror.h"
+
+#include <pthread.h>
+#include <stdlib.h>
+#include <string.h>
+#include <unistd.h>
+
+static size_t ceil_div(size_t x, size_t d) { return x / d + (x % d != 0); }
+static size_t round_up(size_t x, size_t m) { return ceil_div(x, m) * m; }
+static size_t min_sz(size_t a, size_t b) { return a < b ? a : b; }
+
+void gemm_naive(float *out, const float *a, const float *b,
+                size_t m, size_t n, size_t k) {
+    for (size_t i = 0; i < m; i++) {
+        float *orow = out + i * n;
+        for (size_t p = 0; p < k; p++) {
+            const float av = a[i * k + p];
+            const float *brow = b + p * n;
+            for (size_t j = 0; j < n; j++)
+                orow[j] += av * brow[j];
+        }
+    }
+}
+
+/* kernel.rs pack_a: MR-row panels, p-major inside a panel, zero-padded */
+static void pack_a(float *apack, const float *a, size_t lda, size_t ic,
+                   size_t mcb, size_t pc, size_t kcb) {
+    size_t panels = ceil_div(mcb, MR);
+    for (size_t pi = 0; pi < panels; pi++) {
+        float *dst = apack + pi * MR * kcb;
+        size_t i0 = ic + pi * MR;
+        size_t rows = min_sz(MR, ic + mcb - i0);
+        for (size_t p = 0; p < kcb; p++) {
+            float *d = dst + p * MR;
+            for (size_t i = 0; i < rows; i++)
+                d[i] = a[(i0 + i) * lda + pc + p];
+            for (size_t i = rows; i < MR; i++)
+                d[i] = 0.0f;
+        }
+    }
+}
+
+/* kernel.rs pack_b: contiguous kcb x ncb row-major panel */
+static void pack_b(float *bpack, const float *b, size_t ldb, size_t pc,
+                   size_t kcb, size_t jc, size_t ncb) {
+    for (size_t p = 0; p < kcb; p++)
+        memcpy(bpack + p * ncb, b + (pc + p) * ldb + jc, ncb * sizeof(float));
+}
+
+static void saxpy(float *orow, float av, const float *brow, size_t ncb) {
+    for (size_t j = 0; j < ncb; j++)
+        orow[j] += av * brow[j];
+}
+
+/* kernel.rs micro_kernel: MR C rows x NR staged k-steps, plain mul+add
+ * in increasing-k order */
+static void micro_kernel(const float *ab, const float *bp, size_t ncb,
+                         float *o0, float *o1, float *o2, float *o3) {
+    const float *b0 = bp, *b1 = bp + ncb, *b2 = bp + 2 * ncb, *b3 = bp + 3 * ncb;
+    for (size_t j = 0; j < ncb; j++) {
+        const float bv0 = b0[j], bv1 = b1[j], bv2 = b2[j], bv3 = b3[j];
+        float x0 = o0[j];
+        x0 += ab[0] * bv0;
+        x0 += ab[4] * bv1;
+        x0 += ab[8] * bv2;
+        x0 += ab[12] * bv3;
+        o0[j] = x0;
+        float x1 = o1[j];
+        x1 += ab[1] * bv0;
+        x1 += ab[5] * bv1;
+        x1 += ab[9] * bv2;
+        x1 += ab[13] * bv3;
+        o1[j] = x1;
+        float x2 = o2[j];
+        x2 += ab[2] * bv0;
+        x2 += ab[6] * bv1;
+        x2 += ab[10] * bv2;
+        x2 += ab[14] * bv3;
+        o2[j] = x2;
+        float x3 = o3[j];
+        x3 += ab[3] * bv0;
+        x3 += ab[7] * bv1;
+        x3 += ab[11] * bv2;
+        x3 += ab[15] * bv3;
+        o3[j] = x3;
+    }
+}
+
+/* kernel.rs macro_kernel (the scalar Micro engine) */
+static void scalar_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                                size_t jc, size_t ncb, size_t kcb,
+                                const float *apack, const float *bpack) {
+    size_t full_panels = mcb / MR;
+    for (size_t pi = 0; pi < full_panels; pi++) {
+        size_t i0 = ic + pi * MR;
+        const float *ap = apack + pi * MR * kcb;
+        float *o0 = out + i0 * ldc + jc;
+        float *o1 = o0 + ldc, *o2 = o1 + ldc, *o3 = o2 + ldc;
+        size_t p = 0;
+        for (; p + NR <= kcb; p += NR)
+            micro_kernel(ap + p * MR, bpack + p * ncb, ncb, o0, o1, o2, o3);
+        for (; p < kcb; p++) {
+            const float *brow = bpack + p * ncb;
+            saxpy(o0, ap[p * MR], brow, ncb);
+            saxpy(o1, ap[p * MR + 1], brow, ncb);
+            saxpy(o2, ap[p * MR + 2], brow, ncb);
+            saxpy(o3, ap[p * MR + 3], brow, ncb);
+        }
+    }
+    for (size_t i = full_panels * MR; i < mcb; i++) {
+        size_t pi = i / MR, ir = i % MR;
+        const float *ap = apack + pi * MR * kcb;
+        float *orow = out + (ic + i) * ldc + jc;
+        for (size_t p = 0; p < kcb; p++)
+            saxpy(orow, ap[p * MR + ir], bpack + p * ncb, ncb);
+    }
+}
+
+/* nanokernel.rs PortableNano::macro_kernel: MR x 4-lane accumulator
+ * tile, plain mul+add, k-streamed with one load/store of the C tile */
+#define PW 4
+static void portable_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                                  size_t jc, size_t ncb, size_t kcb,
+                                  const float *apack, const float *bpack) {
+    size_t full_panels = mcb / MR;
+    for (size_t pi = 0; pi < full_panels; pi++) {
+        size_t i0 = ic + pi * MR;
+        const float *ap = apack + pi * MR * kcb;
+        size_t j = 0;
+        for (; j + PW <= ncb; j += PW) {
+            float acc[MR][PW];
+            for (size_t r = 0; r < MR; r++)
+                memcpy(acc[r], out + (i0 + r) * ldc + jc + j, PW * sizeof(float));
+            for (size_t p = 0; p < kcb; p++) {
+                const float *brow = bpack + p * ncb + j;
+                for (size_t r = 0; r < MR; r++) {
+                    const float av = ap[p * MR + r];
+                    for (size_t x = 0; x < PW; x++)
+                        acc[r][x] += av * brow[x];
+                }
+            }
+            for (size_t r = 0; r < MR; r++)
+                memcpy(out + (i0 + r) * ldc + jc + j, acc[r], PW * sizeof(float));
+        }
+        for (; j < ncb; j++) {
+            for (size_t r = 0; r < MR; r++) {
+                float x = out[(i0 + r) * ldc + jc + j];
+                for (size_t p = 0; p < kcb; p++)
+                    x += ap[p * MR + r] * bpack[p * ncb + j];
+                out[(i0 + r) * ldc + jc + j] = x;
+            }
+        }
+    }
+    for (size_t i = full_panels * MR; i < mcb; i++) {
+        size_t pi = i / MR, ir = i % MR;
+        const float *ap = apack + pi * MR * kcb;
+        for (size_t j = 0; j < ncb; j++) {
+            size_t idx = (ic + i) * ldc + jc + j;
+            float x = out[idx];
+            for (size_t p = 0; p < kcb; p++)
+                x += ap[p * MR + ir] * bpack[p * ncb + j];
+            out[idx] = x;
+        }
+    }
+}
+
+typedef void (*macro_fn)(float *, size_t, size_t, size_t, size_t, size_t,
+                         size_t, const float *, const float *);
+
+/* kernel.rs gemm_tiled: jc -> pc (increasing k) -> ic cache blocks */
+static void tiled_with(float *out, const float *a, const float *b,
+                       size_t m, size_t n, size_t k, blocking_t bs,
+                       macro_fn engine) {
+    size_t mc = bs.mc, kc = bs.kc, nc = bs.nc;
+    float *apack = malloc(round_up(min_sz(mc, m), MR) * min_sz(kc, k) * sizeof(float));
+    float *bpack = malloc(min_sz(nc, n) * min_sz(kc, k) * sizeof(float));
+    for (size_t jc = 0; jc < n; jc += nc) {
+        size_t ncb = min_sz(nc, n - jc);
+        for (size_t pc = 0; pc < k; pc += kc) {
+            size_t kcb = min_sz(kc, k - pc);
+            pack_b(bpack, b, n, pc, kcb, jc, ncb);
+            for (size_t ic = 0; ic < m; ic += mc) {
+                size_t mcb = min_sz(mc, m - ic);
+                pack_a(apack, a, k, ic, mcb, pc, kcb);
+                engine(out, n, ic, mcb, jc, ncb, kcb, apack, bpack);
+            }
+        }
+    }
+    free(apack);
+    free(bpack);
+}
+
+void gemm_tiled(float *out, const float *a, const float *b,
+                size_t m, size_t n, size_t k, blocking_t bs) {
+    tiled_with(out, a, b, m, n, k, bs, scalar_macro_kernel);
+}
+
+void gemm_portable_nano(float *out, const float *a, const float *b,
+                        size_t m, size_t n, size_t k, blocking_t bs) {
+    tiled_with(out, a, b, m, n, k, bs, portable_macro_kernel);
+}
+
+/* kernel.rs gemm_banded: MR-aligned disjoint row bands */
+typedef struct {
+    float *out;
+    const float *a, *b;
+    size_t m, n, k;
+    blocking_t bs;
+    macro_fn engine;
+} band_job_t;
+
+static void *band_main(void *arg) {
+    band_job_t *jb = arg;
+    tiled_with(jb->out, jb->a, jb->b, jb->m, jb->n, jb->k, jb->bs, jb->engine);
+    return NULL;
+}
+
+void gemm_banded(float *out, const float *a, const float *b,
+                 size_t m, size_t n, size_t k, blocking_t bs,
+                 size_t threads, int avx2) {
+    macro_fn engine = avx2 ? avx2_macro_kernel : scalar_macro_kernel;
+    size_t hw = threads;
+    if (hw == 0) {
+        long v = sysconf(_SC_NPROCESSORS_ONLN);
+        hw = v > 0 ? (size_t)v : 1;
+    }
+    double flops = 2.0 * (double)m * (double)n * (double)k;
+    size_t by_work = (size_t)(flops / 4e6); /* MIN_FLOPS_PER_THREAD */
+    size_t bands = min_sz(hw, by_work > 0 ? by_work : 1);
+    bands = min_sz(bands, ceil_div(m, MR));
+    if (bands < 1)
+        bands = 1;
+    if (bands == 1) {
+        tiled_with(out, a, b, m, n, k, bs, engine);
+        return;
+    }
+    size_t rows_per = round_up(ceil_div(m, bands), MR);
+    size_t nbands = ceil_div(m, rows_per);
+    pthread_t tids[64];
+    band_job_t jobs[64];
+    for (size_t bidx = 0; bidx < nbands; bidx++) {
+        size_t row0 = bidx * rows_per;
+        size_t bm = min_sz(rows_per, m - row0);
+        jobs[bidx] = (band_job_t){out + row0 * n, a + row0 * k, b,
+                                  bm, n, k, bs, engine};
+        pthread_create(&tids[bidx], NULL, band_main, &jobs[bidx]);
+    }
+    for (size_t bidx = 0; bidx < nbands; bidx++)
+        pthread_join(tids[bidx], NULL);
+}

@@ -1,0 +1,237 @@
+/* Driver for the C mirror: validates the nanokernel numerics claims,
+ * then measures the exec_kernel policy ladder for BENCH_exec_kernel.json.
+ *
+ * Checks (all mirroring Rust test assertions):
+ *   1. tiled scalar == naive, bitwise (packed-path mirror fidelity);
+ *   2. banded == single-thread, bitwise, scalar AND avx2 engines;
+ *   3. portable nanokernel == naive, bitwise (plain mul+add, same order);
+ *   4. avx2 nanokernel passes verify_fma_relaxed on the ragged shape
+ *      family + the bench sizes; max observed ULP reported.
+ *
+ * Usage: mirror [--verify-only]
+ */
+#include "mirror.h"
+
+#include <inttypes.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* util/prng.rs: splitmix64 + Box-Muller-free normal approx is not
+ * needed here — any deterministic distribution works for the checks,
+ * and the timings are data-independent.  Keep it simple and portable. */
+static uint64_t rng_state;
+static uint64_t next_u64(void) {
+    uint64_t z = (rng_state += 0x9E3779B97F4A7C15ull);
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ull;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBull;
+    return z ^ (z >> 31);
+}
+static float next_unit(void) {
+    return (float)((next_u64() >> 40) * (1.0 / (1 << 24))) * 2.0f - 1.0f;
+}
+static float *rand_matrix(size_t rows, size_t cols) {
+    float *m = malloc(rows * cols * sizeof(float));
+    for (size_t i = 0; i < rows * cols; i++)
+        m[i] = next_unit();
+    return m;
+}
+
+static uint64_t ulp_distance(float x, float y) {
+    uint32_t bx, by;
+    memcpy(&bx, &x, 4);
+    memcpy(&by, &y, 4);
+    int64_t ox = (bx & 0x80000000u) ? -(int64_t)(bx & 0x7FFFFFFFu) : (int64_t)bx;
+    int64_t oy = (by & 0x80000000u) ? -(int64_t)(by & 0x7FFFFFFFu) : (int64_t)by;
+    int64_t d = ox - oy;
+    return (uint64_t)(d < 0 ? -d : d);
+}
+
+/* nanokernel.rs gamma / verify_fma_relaxed (bias-free form) */
+static double gamma_n(size_t terms) {
+    const double u = 5.9604644775390625e-8; /* 2^-24 */
+    double nu = (double)terms * u;
+    return nu / (1.0 - nu);
+}
+
+static int verify_fma_relaxed(const float *got, const float *want,
+                              const float *a, const float *b, const float *c,
+                              size_t m, size_t n, size_t k, uint64_t *max_ulp) {
+    double *scale = malloc(m * n * sizeof(double));
+    for (size_t i = 0; i < m * n; i++)
+        scale[i] = fabs((double)c[i]);
+    for (size_t i = 0; i < m; i++)
+        for (size_t p = 0; p < k; p++) {
+            double aa = fabs((double)a[i * k + p]);
+            const float *brow = b + p * n;
+            for (size_t j = 0; j < n; j++)
+                scale[i * n + j] += aa * fabs((double)brow[j]);
+        }
+    double g = 2.0 * gamma_n(k + 2);
+    *max_ulp = 0;
+    int ok = 1;
+    for (size_t idx = 0; idx < m * n; idx++) {
+        double err = fabs((double)got[idx] - (double)want[idx]);
+        double bound = g * scale[idx] + 1e-30;
+        if (err > bound) {
+            fprintf(stderr,
+                    "FAIL tolerance at %zu: |diff| %.3e > bound %.3e "
+                    "(%" PRIu64 " ulp, k=%zu)\n",
+                    idx, err, bound, ulp_distance(got[idx], want[idx]), k);
+            ok = 0;
+            break;
+        }
+        uint64_t u = ulp_distance(got[idx], want[idx]);
+        if (u > *max_ulp)
+            *max_ulp = u;
+    }
+    free(scale);
+    return ok;
+}
+
+static int bitwise_equal(const float *x, const float *y, size_t len) {
+    return memcmp(x, y, len * sizeof(float)) == 0;
+}
+
+static double now_sec(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+static int g_failures = 0;
+static void check(int ok, const char *what) {
+    printf("%s  %s\n", ok ? "ok  " : "FAIL", what);
+    if (!ok)
+        g_failures++;
+}
+
+static void verify_shape(size_t m, size_t n, size_t k) {
+    rng_state = 0x51D + m * 1000 + n * 10 + k;
+    float *a = rand_matrix(m, k);
+    float *b = rand_matrix(k, n);
+    float *c = rand_matrix(m, n);
+    size_t len = m * n;
+    float *want = malloc(len * sizeof(float));
+    float *got = malloc(len * sizeof(float));
+    char label[128];
+    blocking_t small = {8, 4, 16};
+
+    memcpy(want, c, len * sizeof(float));
+    gemm_naive(want, a, b, m, n, k);
+
+    memcpy(got, c, len * sizeof(float));
+    gemm_tiled(got, a, b, m, n, k, small);
+    snprintf(label, sizeof label, "tiled(8,4,16) bitwise == naive at %zux%zux%zu", m, n, k);
+    check(bitwise_equal(got, want, len), label);
+
+    memcpy(got, c, len * sizeof(float));
+    gemm_portable_nano(got, a, b, m, n, k, small);
+    snprintf(label, sizeof label, "portable nano bitwise == naive at %zux%zux%zu", m, n, k);
+    check(bitwise_equal(got, want, len), label);
+
+    memcpy(got, c, len * sizeof(float));
+    gemm_banded(got, a, b, m, n, k, small, 3, 1);
+    float *single = malloc(len * sizeof(float));
+    memcpy(single, c, len * sizeof(float));
+    gemm_banded(single, a, b, m, n, k, small, 1, 1);
+    snprintf(label, sizeof label, "banded avx2 (t=3) bitwise == single at %zux%zux%zu", m, n, k);
+    check(bitwise_equal(got, single, len), label);
+
+    uint64_t max_ulp = 0;
+    snprintf(label, sizeof label, "avx2 nano meets fma_relaxed bound at %zux%zux%zu", m, n, k);
+    check(verify_fma_relaxed(single, want, a, b, c, m, n, k, &max_ulp), label);
+    printf("      max ulp vs oracle: %" PRIu64 "\n", max_ulp);
+
+    free(a); free(b); free(c); free(want); free(got); free(single);
+}
+
+typedef struct {
+    const char *name;
+    blocking_t bs;
+    size_t threads;
+    int avx2;
+    int naive;
+} policy_t;
+
+static void bench_size(size_t size) {
+    rng_state = 0xBE7C4 + size;
+    float *a = rand_matrix(size, size);
+    float *b = rand_matrix(size, size);
+    float *c = rand_matrix(size, size);
+    float *out = malloc(size * size * sizeof(float));
+    float *want = malloc(size * size * sizeof(float));
+    double flops = 2.0 * (double)size * (double)size * (double)size;
+
+    memcpy(want, c, size * size * sizeof(float));
+    gemm_naive(want, a, b, size, size, size);
+
+    policy_t policies[] = {
+        {"naive", DEFAULT_BLOCKING, 1, 0, 1},
+        {"tiled", DEFAULT_BLOCKING, 1, 0, 0},
+        {"threaded", DEFAULT_BLOCKING, 0, 0, 0},
+        {"simd:avx2", DEFAULT_BLOCKING, 0, 1, 0},
+    };
+    for (size_t pi = 0; pi < sizeof policies / sizeof *policies; pi++) {
+        policy_t *p = &policies[pi];
+        double best = 1e30;
+        int reps = 0;
+        double budget = now_sec() + (size >= 2048 ? 8.0 : 3.0);
+        do {
+            memcpy(out, c, size * size * sizeof(float));
+            double t0 = now_sec();
+            if (p->naive)
+                gemm_naive(out, a, b, size, size, size);
+            else if (p->threads == 1 && !p->avx2)
+                gemm_tiled(out, a, b, size, size, size, p->bs);
+            else
+                gemm_banded(out, a, b, size, size, size, p->bs, p->threads, p->avx2);
+            double dt = now_sec() - t0;
+            if (dt < best)
+                best = dt;
+            reps++;
+        } while (reps < 3 || (now_sec() < budget && reps < 12));
+        if (p->avx2) {
+            uint64_t max_ulp;
+            if (!verify_fma_relaxed(out, want, a, b, c, size, size, size, &max_ulp))
+                g_failures++;
+            printf("{\"size\": %zu, \"policy\": \"%s\", \"best_seconds\": %.6f, "
+                   "\"gflops\": %.3f, \"max_ulp\": %" PRIu64 "}\n",
+                   size, p->name, best, flops / best / 1e9, max_ulp);
+        } else {
+            if (!bitwise_equal(out, want, size * size)) {
+                fprintf(stderr, "FAIL %s not bitwise at %zu\n", p->name, size);
+                g_failures++;
+            }
+            printf("{\"size\": %zu, \"policy\": \"%s\", \"best_seconds\": %.6f, "
+                   "\"gflops\": %.3f}\n",
+                   size, p->name, best, flops / best / 1e9);
+        }
+        fflush(stdout);
+    }
+    free(a); free(b); free(c); free(out); free(want);
+}
+
+int main(int argc, char **argv) {
+    /* the ragged shape family from nanokernel.rs tests + bench sizes */
+    size_t shapes[][3] = {
+        {1, 1, 1}, {1, 17, 5}, {19, 1, 7}, {4, 16, 8}, {5, 17, 9},
+        {4, 35, 12}, {33, 7, 21}, {40, 40, 40}, {96, 64, 48}, {128, 96, 112},
+    };
+    for (size_t i = 0; i < sizeof shapes / sizeof *shapes; i++)
+        verify_shape(shapes[i][0], shapes[i][1], shapes[i][2]);
+    if (argc > 1 && strcmp(argv[1], "--verify-only") == 0) {
+        printf(g_failures ? "VERIFY: %d failure(s)\n" : "VERIFY: all checks passed\n",
+               g_failures);
+        return g_failures != 0;
+    }
+    size_t sizes[] = {256, 512, 1024, 2048};
+    for (size_t i = 0; i < sizeof sizes / sizeof *sizes; i++)
+        bench_size(sizes[i]);
+    printf(g_failures ? "DONE: %d failure(s)\n" : "DONE: all checks passed\n",
+           g_failures);
+    return g_failures != 0;
+}
