@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify verify-scalar build test pytest fuzz artifacts artifacts-quick bench-smoke plans lint fmt clean
+.PHONY: verify verify-scalar build test pytest fuzz artifacts artifacts-quick bench-smoke plans program-plans lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -52,6 +52,11 @@ bench-smoke:
 # reports/plans/ (requires built artifacts: `make artifacts`).
 plans:
 	$(CARGO) run --release --bin mlir-gemm -- plans --artifacts artifacts --out-dir reports
+
+# Emit the graph-level ProgramPlan for every composite-program artifact
+# (transformer tprogs) to reports/plans/ (requires `make artifacts`).
+program-plans:
+	$(CARGO) run --release --bin mlir-gemm -- program-plans --artifacts artifacts --out-dir reports
 
 lint:
 	$(CARGO) fmt --check && $(CARGO) clippy -- -D warnings

@@ -21,6 +21,7 @@ use mlir_gemm::harness::{bar_chart, CsvTable, FigureOutput};
 use mlir_gemm::plan::{compile, GemmKey, PlanEnv};
 use mlir_gemm::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, PrepackedB};
 use mlir_gemm::runtime::nanokernel::{self, Isa};
+use mlir_gemm::runtime::{Program, Tensor};
 use mlir_gemm::util::json::{self, Json};
 use mlir_gemm::util::prng::Rng;
 
@@ -197,6 +198,85 @@ fn main() {
         });
     }
 
+    // Transformer smoke (runs in smoke mode too): the graph-level
+    // ProgramPlan path (shared QKV activation cast, lifetime-based
+    // scratch arena, plan-driven op loop) against the seed hand loop it
+    // replaced.  Bit check first — the default-conservative plan is
+    // contractually bit-identical to the seed oracle — then the gate:
+    // planned throughput must be at least the seed's (5% slack for
+    // shared-runner noise; the win is allocations + redundant casts
+    // removed, so "never slower" is the honest claim at this scale).
+    {
+        let (seq, d_model, d_ff, n_heads) = (64usize, 64usize, 128usize, 4usize);
+        let program = Program::Transformer {
+            seq,
+            d_model,
+            d_ff,
+            n_heads,
+            dtype_in: mlir_gemm::schedule::Dtype::F16,
+        };
+        let mut rng = Rng::new(0x7F0); // "tf0"
+        let mut mk = |shape: Vec<usize>| {
+            let len: usize = shape.iter().product();
+            let data: Vec<f32> = (0..len).map(|_| rng.normal() as f32 * 0.1).collect();
+            Tensor { shape, data }
+        };
+        let inputs: Vec<Tensor> = program
+            .input_shapes()
+            .into_iter()
+            .map(&mut mk)
+            .collect();
+        let env = PlanEnv::default();
+        let pplan = program
+            .compile_program_plan(&env)
+            .expect("transformer program plan compiles");
+        let seed_out = program
+            .execute_transformer_seed(&inputs, &env)
+            .expect("seed hand loop executes");
+        let planned_out = program
+            .execute_program_planned(&inputs, &pplan)
+            .expect("planned transformer executes");
+        assert!(
+            seed_out[0]
+                .data
+                .iter()
+                .zip(&planned_out[0].data)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "planned transformer drifted from the seed hand loop at \
+             seq={seq} d_model={d_model} d_ff={d_ff} heads={n_heads}"
+        );
+        let flops = pplan.flops_per_item();
+        let tf_iters = iters.max(3);
+        let mut best_seed = f64::INFINITY;
+        let mut best_planned = f64::INFINITY;
+        for _ in 0..tf_iters {
+            let t = Instant::now();
+            let _ = program.execute_transformer_seed(&inputs, &env).unwrap();
+            best_seed = best_seed.min(t.elapsed().as_secs_f64());
+            let t = Instant::now();
+            let _ = program.execute_program_planned(&inputs, &pplan).unwrap();
+            best_planned = best_planned.min(t.elapsed().as_secs_f64());
+        }
+        assert!(
+            best_planned <= best_seed * 1.05,
+            "ProgramPlan-driven transformer ({best_planned:.6}s) slower than the \
+             seed hand loop ({best_seed:.6}s) at seq={seq} d_model={d_model} \
+             d_ff={d_ff} heads={n_heads}"
+        );
+        rows.push(Row {
+            size: seq,
+            policy: "transformer:seed".into(),
+            seconds: best_seed,
+            gflops: flops / best_seed / 1e9,
+        });
+        rows.push(Row {
+            size: seq,
+            policy: "transformer:planned".into(),
+            seconds: best_planned,
+            gflops: flops / best_planned / 1e9,
+        });
+    }
+
     // Acceptance gate (runs in smoke mode too): the auto-compiled plan
     // must never be slower than naive at 512^3 — the plan compiler's
     // whole point is that its decisions dominate the reference loop.
@@ -286,7 +366,9 @@ fn main() {
              against the fma_relaxed ULP contract before timing; plan asserted \
              never slower than naive at 512^3; bound (prepacked) B asserted \
              never slower than inline B at 512^3; simd asserted never slower \
-             than tiled (and >= 1.5x in full mode) at 512^3 on FMA hardware"
+             than tiled (and >= 1.5x in full mode) at 512^3 on FMA hardware; \
+             the ProgramPlan-driven transformer asserted bit-identical to and \
+             never slower than the seed hand loop at seq=64"
         ),
     };
     bench_common::emit(&output);
@@ -341,7 +423,9 @@ fn main() {
             json::s(
                 "naive | tiled (default blocking) | threaded (auto) | \
                  plan:<compiled> | simd:<isa> (fma_relaxed nanokernel; absent \
-                 under MLIR_GEMM_FORCE_ISA=scalar)",
+                 under MLIR_GEMM_FORCE_ISA=scalar) | transformer:seed / \
+                 transformer:planned (graph-level ProgramPlan vs the hand loop, \
+                 seq=64 d_model=64 d_ff=128 heads=4 f16)",
             ),
         ),
         (

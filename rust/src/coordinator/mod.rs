@@ -16,7 +16,7 @@ pub mod sharding;
 pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
 pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot, PlanLoad};
 pub use registry::{GemmKey, Registry, RegistryEntry};
-pub use server::{GemmRequest, GemmResponse, Server, ServerConfig};
+pub use server::{GemmRequest, GemmResponse, ProgramRequest, Server, ServerConfig};
 pub use sharding::{
     modeled_speedup, modeled_times, plan_for, ShardConfig, ShardPlan, ShardPool,
     ShardStrategy, SplitDim,

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use crate::plan::program::ProgramPlan;
 use crate::plan::{self, ExecutionPlan, PlanEnv};
 use crate::runtime::{ArtifactKind, ArtifactMeta, BoundB, Epilogue, Program, Tensor};
 use crate::schedule::Dtype;
@@ -45,6 +46,12 @@ pub struct Registry {
     /// through the server's `Arc<Registry>`; a rebind swaps the `Arc`,
     /// so newly routed requests can never see the old panels.
     bound: Mutex<HashMap<GemmKey, Arc<BoundB>>>,
+    /// Graph-level plans for composite artifacts, keyed by artifact name
+    /// (composite programs have no `GemmKey`; the manifest entry alone
+    /// cannot recompile them, so the server caches the load-time plan
+    /// here on first route).  Interior mutability for the same reason as
+    /// `bound`: caching happens through the server's `Arc<Registry>`.
+    program_plans: Mutex<HashMap<String, Arc<ProgramPlan>>>,
     plan_env: PlanEnv,
 }
 
@@ -231,6 +238,20 @@ impl Registry {
     /// weight-bound requests for the key fail explicitly afterwards.
     pub fn unbind_weights(&self, key: &GemmKey) -> bool {
         self.bound.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Cache a composite artifact's compiled graph plan under its name.
+    pub fn cache_program_plan(&self, artifact: &str, pplan: Arc<ProgramPlan>) {
+        self.program_plans
+            .lock()
+            .unwrap()
+            .insert(artifact.to_string(), pplan);
+    }
+
+    /// The cached graph plan for a composite artifact (`None` until the
+    /// first route or an explicit [`Registry::cache_program_plan`]).
+    pub fn program_plan(&self, artifact: &str) -> Option<Arc<ProgramPlan>> {
+        self.program_plans.lock().unwrap().get(artifact).cloned()
     }
 
     /// Every cached (key, plan) pair — `make plans` / metrics preseeding.

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::plan::program::ProgramPlan;
 use crate::plan::{self, ExecutionPlan, PlanEnv, PlanOverride};
 use crate::runtime::{
     BoundB, ExecTiming, KernelPolicy, Program, Runtime, Tensor, TensorSpec,
@@ -57,6 +58,17 @@ pub struct GemmRequest {
     pub use_baseline: bool,
 }
 
+/// A composite-program request (`ProgramPlan`-driven serving): run a
+/// named non-GEMM artifact — today the transformer — on its full input
+/// list.  Routed by artifact name instead of [`GemmKey`]; the dispatcher
+/// attaches the registry-cached graph plan the same way GEMM jobs get
+/// their [`ExecutionPlan`].
+#[derive(Debug)]
+pub struct ProgramRequest {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+}
+
 #[derive(Debug)]
 pub struct GemmResponse {
     pub id: u64,
@@ -67,14 +79,24 @@ pub struct GemmResponse {
     pub total_latency: Duration,
 }
 
+/// What a job asks the pool to run: a routed GEMM or a whole composite
+/// program.
+enum JobKind {
+    Gemm(GemmRequest),
+    Program(ProgramRequest),
+}
+
 struct Job {
     id: u64,
-    request: GemmRequest,
+    kind: JobKind,
     submitted_at: Instant,
     reply: Sender<GemmResponse>,
-    /// The compiled plan this job executes under, attached by the
+    /// The compiled plan a GEMM job executes under, attached by the
     /// dispatcher at routing time (registry-cached per GemmKey).
     plan: Option<Arc<ExecutionPlan>>,
+    /// The compiled graph plan a composite-program job executes under,
+    /// attached at routing time (registry-cached per artifact name).
+    pplan: Option<Arc<ProgramPlan>>,
     /// The bound weights a `b: None` request executes against, captured
     /// at routing time — a rebind after routing never swaps a job's
     /// operand mid-flight.
@@ -307,16 +329,27 @@ impl Server {
             let mut rr = 0usize;
             'main: loop {
                 let mut enqueue = |mut job: Job| {
-                    match route(&reg, &env, &job.request) {
-                        Ok((v, p, bw)) => {
-                            job.plan = Some(p);
-                            job.bound = bw;
-                            batcher.push(Queued {
-                                variant: v,
-                                enqueued_at: job.submitted_at,
-                                payload: job,
+                    let routed = match &job.kind {
+                        JobKind::Gemm(req) => {
+                            route(&reg, &env, req).map(|(v, p, bw)| {
+                                job.plan = Some(p);
+                                job.bound = bw;
+                                v
                             })
                         }
+                        JobKind::Program(req) => {
+                            route_program(&rt, &reg, req).map(|(v, pp)| {
+                                job.pplan = Some(pp);
+                                v
+                            })
+                        }
+                    };
+                    match routed {
+                        Ok(v) => batcher.push(Queued {
+                            variant: v,
+                            enqueued_at: job.submitted_at,
+                            payload: job,
+                        }),
                         Err(e) => {
                             met.on_fail();
                             let _ = job.reply.send(GemmResponse {
@@ -423,15 +456,28 @@ impl Server {
 
     /// Submit a request; the response arrives on the returned channel.
     pub fn submit(&self, request: GemmRequest) -> Receiver<GemmResponse> {
+        self.submit_kind(JobKind::Gemm(request))
+    }
+
+    /// Submit a composite-program request ([`ProgramRequest`]); the
+    /// response arrives on the returned channel.  Program jobs batch per
+    /// artifact and execute under the registry-cached [`ProgramPlan`],
+    /// with per-plan metrics attribution separate from GEMM traffic.
+    pub fn submit_program(&self, request: ProgramRequest) -> Receiver<GemmResponse> {
+        self.submit_kind(JobKind::Program(request))
+    }
+
+    fn submit_kind(&self, kind: JobKind) -> Receiver<GemmResponse> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.on_submit();
         let job = Job {
             id,
-            request,
+            kind,
             submitted_at: Instant::now(),
             reply: tx,
             plan: None,  // attached by the dispatcher at routing time
+            pplan: None, // ditto (composite-program jobs)
             bound: None, // ditto
         };
         if let Err(mpsc::SendError(job)) = self.submit_tx.send(job) {
@@ -455,6 +501,12 @@ impl Server {
     /// Convenience: submit and block for the result.
     pub fn call(&self, request: GemmRequest) -> Result<GemmResponse> {
         let rx = self.submit(request);
+        rx.recv().map_err(|_| anyhow!("server shut down"))
+    }
+
+    /// Convenience: submit a composite-program request and block.
+    pub fn call_program(&self, request: ProgramRequest) -> Result<GemmResponse> {
+        let rx = self.submit_program(request);
         rx.recv().map_err(|_| anyhow!("server shut down"))
     }
 
@@ -549,6 +601,30 @@ fn route(
     Ok((variant, eplan, bound))
 }
 
+/// Route a composite-program request: the variant is the artifact name,
+/// and the plan is the graph-level [`ProgramPlan`] — registry-cached per
+/// artifact, populated from the runtime's load-time compilation on first
+/// route.  A GEMM artifact routed here is an explicit error (it has a
+/// [`GemmKey`] and belongs on the [`GemmRequest`] path).
+fn route_program(
+    rt: &Runtime,
+    registry: &Registry,
+    req: &ProgramRequest,
+) -> Result<(String, Arc<ProgramPlan>)> {
+    if let Some(pp) = registry.program_plan(&req.artifact) {
+        return Ok((req.artifact.clone(), pp));
+    }
+    let artifact = rt.load(&req.artifact)?;
+    let pp = artifact.program_plan().cloned().ok_or_else(|| {
+        anyhow!(
+            "artifact {:?} is not a composite program (submit it as a GemmRequest)",
+            req.artifact
+        )
+    })?;
+    registry.cache_program_plan(&req.artifact, pp.clone());
+    Ok((req.artifact.clone(), pp))
+}
+
 /// Dispatch one released batch: shard it across the pool when the shard
 /// planner says so, otherwise send the whole batch to one device queue
 /// (round-robin).  Returns false when the workers are gone.
@@ -641,8 +717,22 @@ fn dispatch_sharded(
     device_txs: &[Sender<WorkItem>],
     metrics: &Metrics,
 ) {
-    let Job { id, request, submitted_at, reply, plan: request_plan, bound } = job;
-    let GemmRequest { a, b, c, bias, .. } = request;
+    let Job { id, kind, submitted_at, reply, plan: request_plan, bound, .. } = job;
+    let JobKind::Gemm(GemmRequest { a, b, c, bias, .. }) = kind else {
+        // Unreachable: the shard planner only fires for GEMM programs,
+        // and program jobs route to artifacts without one.  Fail loudly
+        // rather than silently dropping the reply if that ever changes.
+        metrics.on_fail();
+        let _ = reply.send(GemmResponse {
+            id,
+            output: Err(anyhow!("composite-program jobs cannot shard")),
+            variant: variant.to_string(),
+            queue_wait: Duration::ZERO,
+            exec_time: Duration::ZERO,
+            total_latency: submitted_at.elapsed(),
+        });
+        return;
+    };
     let now = Instant::now();
     let tasks = match (&b, &bound) {
         // Weight-bound request: row shards share the bind-time operand,
@@ -841,6 +931,17 @@ fn run_batch(
 ) {
     metrics.on_batch(batch.len());
     let exec_started = Instant::now();
+    // Program jobs never mix with GEMM jobs: the batcher groups by
+    // variant, and an artifact routes exclusively down one path (a
+    // composite program has no GemmKey; a GEMM has no ProgramPlan).
+    let is_program = batch
+        .first()
+        .map(|q| matches!(q.payload.kind, JobKind::Program(_)))
+        .unwrap_or(false);
+    if is_program {
+        run_program_batch(rt, metrics, device, variant, batch, exec_started);
+        return;
+    }
     // Bound and inline jobs never share a batch: routing appends
     // BOUND_SUFFIX to the variant, so the batcher keeps them apart.  The
     // form itself is read off the jobs (ground truth), not the name —
@@ -889,13 +990,27 @@ fn run_batch(
     // job of a variant carries the same registry-cached plan.
     let mut batch_plan: Option<Arc<ExecutionPlan>> = None;
     for q in batch {
-        let Job { id, request, submitted_at, reply, plan, bound } = q.payload;
+        let Job { id, kind, submitted_at, reply, plan, bound, .. } = q.payload;
         if batch_plan.is_none() {
             batch_plan = plan;
         }
         // Tensors are moved, not cloned: the request is consumed (hot-path
         // allocation discipline — EXPERIMENTS.md §Perf L3).
-        let GemmRequest { a, b, c, bias, .. } = request;
+        let JobKind::Gemm(GemmRequest { a, b, c, bias, .. }) = kind else {
+            // Defensive: `is_program` keyed off the first job, and the
+            // batcher never mixes variants — but a mismatch must fail
+            // the job, not the process.
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(anyhow!("program job in a GEMM batch")),
+                variant: variant.to_string(),
+                queue_wait: exec_started.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+            continue;
+        };
         let (inputs, job_bound) = match (is_bound, b, bound) {
             (true, _, Some(bw)) => {
                 // Weight-bound form: A + C (+ bias); B comes from the
@@ -1109,6 +1224,171 @@ fn run_batch(
         Err(e) => {
             // Whole-batch failure after per-item validation (artifact-level
             // problem): every surviving item reports the same error.
+            let msg = format!("{e:#}");
+            let exec_time = call_started.elapsed();
+            for (id, submitted_at, reply) in jobs {
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(anyhow!("{msg}")),
+                    variant: variant.to_string(),
+                    queue_wait: exec_started.duration_since(submitted_at),
+                    exec_time,
+                    total_latency: submitted_at.elapsed(),
+                });
+            }
+        }
+    }
+}
+
+/// Execute one batch of composite-program jobs under the graph-level
+/// [`ProgramPlan`] they were routed with.
+///
+/// Mirrors [`run_batch`]'s shape — per-item validation first, one batched
+/// execution, per-job fan-out — but attribution comes from the program
+/// plan (its id, ISA label, and whole-graph flops) so transformer traffic
+/// segments separately from plain GEMM traffic in the metrics.
+fn run_program_batch(
+    rt: &Runtime,
+    metrics: &Metrics,
+    device: usize,
+    variant: &str,
+    batch: Vec<Queued<Job>>,
+    exec_started: Instant,
+) {
+    // Program variants carry the artifact name verbatim (never
+    // BOUND_SUFFIX — binding is a runtime-level form, not a route).
+    let artifact = match rt.load(variant) {
+        Ok(a) => a,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for q in batch {
+                let Job { id, submitted_at, reply, .. } = q.payload;
+                metrics.on_fail();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output: Err(anyhow!("{msg}")),
+                    variant: variant.to_string(),
+                    queue_wait: exec_started.duration_since(submitted_at),
+                    exec_time: Duration::ZERO,
+                    total_latency: submitted_at.elapsed(),
+                });
+            }
+            return;
+        }
+    };
+    let specs: Vec<&TensorSpec> = artifact.meta.inputs.iter().collect();
+    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
+        Vec::with_capacity(batch.len());
+    let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
+    // One program plan per batch: every job of a variant carries the same
+    // registry-cached Arc.
+    let mut batch_pplan: Option<Arc<ProgramPlan>> = None;
+    for q in batch {
+        let Job { id, kind, submitted_at, reply, pplan, .. } = q.payload;
+        if batch_pplan.is_none() {
+            batch_pplan = pplan;
+        }
+        let JobKind::Program(ProgramRequest { inputs, .. }) = kind else {
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(anyhow!("GEMM job in a program batch")),
+                variant: variant.to_string(),
+                queue_wait: exec_started.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+            continue;
+        };
+        let valid = inputs.len() == specs.len()
+            && inputs
+                .iter()
+                .zip(specs.iter().copied())
+                .all(|(t, spec)| t.matches(spec));
+        if valid {
+            jobs.push((id, submitted_at, reply));
+            items.push(inputs);
+        } else {
+            metrics.on_fail();
+            let _ = reply.send(GemmResponse {
+                id,
+                output: Err(anyhow!(
+                    "request tensors do not match artifact {variant}"
+                )),
+                variant: variant.to_string(),
+                queue_wait: exec_started.duration_since(submitted_at),
+                exec_time: Duration::ZERO,
+                total_latency: submitted_at.elapsed(),
+            });
+        }
+    }
+    if items.is_empty() {
+        return;
+    }
+    // The routed plan drives execution when it still describes this
+    // artifact's program (a reload can change shapes under a cached
+    // route); otherwise fall back to the artifact's load-time plan via
+    // the runtime dispatcher.
+    let pp = batch_pplan
+        .filter(|p| p.matches(artifact.program()))
+        .or_else(|| artifact.program_plan().cloned());
+    let call_started = Instant::now();
+    let result = match &pp {
+        Some(pp) => artifact
+            .program()
+            .execute_batch_program_planned(&items, pp)
+            .map(|outs| {
+                let timing = ExecTiming {
+                    pack_seconds: 0.0,
+                    exec_seconds: call_started.elapsed().as_secs_f64(),
+                    unpack_seconds: 0.0,
+                };
+                (outs, timing)
+            }),
+        None => rt.execute_batch_timed_planned(&artifact, &items, None),
+    };
+    match result {
+        Ok((outs, timing)) => {
+            metrics.on_device_task(device, timing.exec_seconds);
+            if let Some(pp) = &pp {
+                metrics.on_plan_work(
+                    &pp.id(),
+                    &pp.isa_label(),
+                    outs.len() as u64,
+                    pp.flops_per_item() * outs.len() as f64,
+                    timing.exec_seconds,
+                );
+            }
+            let exec_time = call_started.elapsed();
+            for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {
+                let queue_wait = exec_started.duration_since(submitted_at);
+                let total = submitted_at.elapsed();
+                let output = if out.is_empty() {
+                    Err(anyhow!("artifact {variant} returned no outputs"))
+                } else {
+                    Ok(out.remove(0))
+                };
+                match &output {
+                    Ok(_) => metrics.on_complete(
+                        variant,
+                        total.as_secs_f64(),
+                        queue_wait.as_secs_f64(),
+                        exec_time.as_secs_f64(),
+                    ),
+                    Err(_) => metrics.on_fail(),
+                }
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output,
+                    variant: variant.to_string(),
+                    queue_wait,
+                    exec_time,
+                    total_latency: total,
+                });
+            }
+        }
+        Err(e) => {
             let msg = format!("{e:#}");
             let exec_time = call_started.elapsed();
             for (id, submitted_at, reply) in jobs {

@@ -5,8 +5,10 @@
 //!   bench      regenerate a paper figure/table (fig2|fig3|fig4|table1|all)
 //!   autotune   search the tile space for a problem size
 //!   sim        simulate one kernel configuration
-//!   plan       compile the execution plan for one GEMM and measure it
+//!   plan       compile the execution plan for one GEMM (or the graph-level
+//!              ProgramPlan for a *.tprog.json artifact path) and print it
 //!   plans      emit compiled plans for every registry key to reports/
+//!   program-plans  emit graph-level ProgramPlans for composite artifacts
 //!   run        execute one artifact by name on random inputs
 //!   list       list artifacts in the manifest
 
@@ -64,7 +66,7 @@ fn main() {
         println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
         println!(
             "subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | \
-             plan <MxNxK> | plans | run <artifact> | list"
+             plan <MxNxK | artifact.tprog.json> | plans | program-plans | run <artifact> | list"
         );
         return;
     }
@@ -116,6 +118,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "plan" => cmd_plan(args),
         "plans" => cmd_plans(args),
+        "program-plans" => cmd_program_plans(args),
         "run" => cmd_run(args),
         other => bail!("unknown subcommand {other:?}"),
     }
@@ -333,11 +336,19 @@ fn parse_dims(s: &str) -> Result<(usize, usize, usize)> {
 /// Compile (and optionally refine) the execution plan for one GEMM, then
 /// print the plan JSON, its per-pass provenance, and predicted-vs-
 /// measured cost (plan kernel vs naive on random operands).
+///
+/// Alternatively takes a path to a `*.tprog.json` artifact file: a GEMM
+/// descriptor plans through the same per-key pipeline; a composite
+/// (transformer) descriptor compiles its graph-level [`ProgramPlan`] and
+/// prints the plan JSON plus the per-pass provenance trace.
 fn cmd_plan(args: &Args) -> Result<()> {
     let spec = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: plan <MxNxK> [--in DT] [--acc DT] [--epilogue E] [--plan OVERRIDE]"))?;
+        .ok_or_else(|| anyhow!("usage: plan <MxNxK | artifact.tprog.json> [--in DT] [--acc DT] [--epilogue E] [--plan OVERRIDE]"))?;
+    if std::path::Path::new(spec).is_file() {
+        return cmd_plan_artifact(args, spec);
+    }
     let (m, n, k) = parse_dims(spec)?;
     let dtype_in = Dtype::parse(args.get_or("in", "f16"))
         .ok_or_else(|| anyhow!("unknown input dtype"))?;
@@ -392,6 +403,76 @@ fn cmd_plan(args: &Args) -> Result<()> {
         eplan.isa_label(),
         eplan.numerics.name()
     );
+    Ok(())
+}
+
+/// Plan a `*.tprog.json` artifact file directly: compile whichever plan
+/// kind the descriptor calls for and print it with its pass trace.
+fn cmd_plan_artifact(args: &Args, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read {path:?}: {e}"))?;
+    let root = mlir_gemm::util::json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let name = root
+        .get("name")
+        .and_then(mlir_gemm::util::json::Json::as_str)
+        .ok_or_else(|| anyhow!("{path:?} has no artifact name"))?
+        .to_string();
+    let program = mlir_gemm::runtime::Program::from_text(&text, &name)?;
+    let env = PlanEnv::default().with_force(plan_override(args)?);
+    match program.gemm_key() {
+        Some(_) => {
+            let eplan = program.compile_plan(&env)?;
+            println!("{}", eplan.to_json());
+            println!();
+            print!("{}", eplan.render_trace());
+            println!();
+            println!("artifact {name} | isa {} | numerics {}", eplan.isa_label(), eplan.numerics.name());
+        }
+        None => {
+            let pplan = program.compile_program_plan(&env)?;
+            println!("{}", pplan.to_json());
+            println!();
+            print!("{}", pplan.render_trace());
+            println!();
+            println!(
+                "artifact {name} | {} | isa {} | numerics {} | {:.1} MFLOP/item | {} scratch slots",
+                pplan.id(),
+                pplan.isa_label(),
+                pplan.numerics.name(),
+                pplan.flops_per_item() / 1e6,
+                pplan.arena.len(),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Emit the compiled graph-level plan for every composite-program
+/// artifact (`make program-plans`).
+fn cmd_program_plans(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let env = PlanEnv::default().with_force(plan_override(args)?);
+    let out_dir = PathBuf::from(args.get_or("out-dir", "reports")).join("plans");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut count = 0usize;
+    for meta in rt.artifacts() {
+        let artifact = match rt.load(&meta.name) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let pplan = match artifact.program().compile_program_plan(&env) {
+            Ok(p) => p,
+            Err(_) => continue, // plain GEMM artifact: covered by `plans`
+        };
+        let fname = format!("program_plan_{}.json", meta.name.replace(['/', '.'], "_"));
+        std::fs::write(out_dir.join(&fname), format!("{}\n", pplan.to_json()))?;
+        println!("{:<56} {}", fname, pplan.id());
+        count += 1;
+    }
+    if count == 0 {
+        bail!("no composite-program artifacts (build artifacts first: make artifacts)");
+    }
+    println!("\nwrote {count} program plans -> {}", out_dir.display());
     Ok(())
 }
 

@@ -49,6 +49,8 @@
 //!   forced `simd:<isa>` policy; refinement may *tighten* a plan's
 //!   class (fma_relaxed -> bit_exact) but never silently relax it.
 
+pub mod program;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::kernel::{self, Blocking, BOperand, KernelPolicy, MR, PrepackedB};

@@ -20,6 +20,7 @@
 
 use std::borrow::Cow;
 
+use crate::plan::program::ProgramPlan;
 use crate::plan::{self, ExecutionPlan, GemmKey, PlanEnv};
 use crate::runtime::kernel::{BOperand, PrepackedB};
 use crate::schedule::Dtype;
@@ -209,6 +210,70 @@ fn internal_plan(
         ExecutionPlan::manual(&key, crate::runtime::kernel::KernelPolicy::Naive, false)
             .expect("the naive plan is always valid")
     })
+}
+
+thread_local! {
+    /// Activation (A-operand) casts performed by the most recent
+    /// plan-driven transformer execution on this thread.  Casts happen
+    /// on the calling thread, so the counter is race-free under the
+    /// parallel test harness.
+    static TF_ACTIVATION_CASTS: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+
+/// Test/bench hook: how many activation casts the last plan-driven
+/// transformer execution on this thread performed.  The cast-hoist pass
+/// guarantees exactly one per GEMM-chain input (4 for the encoder block:
+/// x shared across q/k/v, ctx, hn, up) — pinned by the counter test in
+/// `tests/program_plan.rs`.
+#[doc(hidden)]
+pub fn transformer_activation_casts() -> usize {
+    TF_ACTIVATION_CASTS.with(|c| c.get())
+}
+
+/// The lifetime-based scratch arena behind the ProgramPlan buffer-reuse
+/// pass.  `take` hands out the first free slot (growing the pool when
+/// none is free) zero-filled to `len` — bit-identical to a fresh
+/// `vec![0.0; len]` — and `put` returns it.  Because the executor takes
+/// and returns buffers in the exact birth/death order the compile-time
+/// pass scheduled, the slot assignment it produces at run time is the
+/// same first-fit assignment recorded in the plan's `arena` section.
+struct ScratchArena {
+    slots: Vec<Vec<f32>>,
+    free: Vec<bool>,
+}
+
+impl ScratchArena {
+    fn new() -> Self {
+        ScratchArena { slots: Vec::new(), free: Vec::new() }
+    }
+
+    /// Claim a free slot zero-filled to `len` elements.
+    fn take(&mut self, len: usize) -> (usize, Vec<f32>) {
+        let slot = match self.free.iter().position(|&f| f) {
+            Some(slot) => slot,
+            None => {
+                self.slots.push(Vec::new());
+                self.free.push(true);
+                self.slots.len() - 1
+            }
+        };
+        self.free[slot] = false;
+        let mut buf = std::mem::take(&mut self.slots[slot]);
+        buf.clear();
+        buf.resize(len, 0.0);
+        (slot, buf)
+    }
+
+    /// Return a buffer claimed with [`ScratchArena::take`].
+    fn put(&mut self, slot: usize, buf: Vec<f32>) {
+        self.slots[slot] = buf;
+        self.free[slot] = true;
+    }
+
+    /// Distinct slots ever claimed (the arena footprint).
+    fn slots_used(&self) -> usize {
+        self.slots.len()
+    }
 }
 
 /// Run one planned GEMM body over an f32 accumulator: the matmul through
@@ -487,6 +552,84 @@ impl Program {
         plan::compile(&key, env)
     }
 
+    /// Compile the graph-level plan of a composite program under `env`:
+    /// the whole-program analogue of [`Program::compile_plan`], running
+    /// the op-graph / cast-hoist / buffer-reuse / pipeline passes on top
+    /// of the per-GEMM pipeline.  GEMM programs are an error here — they
+    /// compile a per-GEMM [`ExecutionPlan`] instead.
+    pub fn compile_program_plan(&self, env: &PlanEnv) -> Result<ProgramPlan> {
+        plan::program::compile_program(self, env)
+    }
+
+    /// Execute a composite program under an explicit, already-compiled
+    /// [`ProgramPlan`] — the transformer analogue of
+    /// [`Program::execute_planned`], and the serving hot path for
+    /// composite variants.  The plan must describe this exact program; a
+    /// mismatch is an error, never silent cross-contamination.
+    pub fn execute_program_planned(
+        &self,
+        inputs: &[Tensor],
+        pplan: &ProgramPlan,
+    ) -> Result<Vec<Tensor>> {
+        let Program::Transformer { seq, d_model, .. } = *self else {
+            bail!("execute_program_planned is for composite programs; gemm programs take execute_planned");
+        };
+        self.validate_inputs(inputs)?;
+        if !pplan.matches(self) {
+            bail!(
+                "program plan {} does not describe this transformer program",
+                pplan.id()
+            );
+        }
+        let out = exec_transformer_planned(
+            &inputs[0].data,
+            TfWeights {
+                w_qkv: BOperand::Raw(&inputs[1].data),
+                w_out: BOperand::Raw(&inputs[2].data),
+                w_up: BOperand::Raw(&inputs[3].data),
+                w_dn: BOperand::Raw(&inputs[5].data),
+                cast_weights: true,
+                b_up: &inputs[4].data,
+                b_dn: &inputs[6].data,
+            },
+            pplan,
+        )?;
+        Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
+    }
+
+    /// Batched [`Program::execute_program_planned`]: one compiled graph
+    /// plan drives every item (the batch analogue the per-GEMM path gets
+    /// from [`Program::execute_batch_planned`]).
+    pub fn execute_batch_program_planned(
+        &self,
+        items: &[Vec<Tensor>],
+        pplan: &ProgramPlan,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        items
+            .iter()
+            .map(|inputs| self.execute_program_planned(inputs, pplan))
+            .collect()
+    }
+
+    /// The pre-ProgramPlan transformer hand loop: per-op plans compiled
+    /// inline, per-op allocations, per-GEMM activation casts.  Kept as
+    /// the seed oracle — the bit-exactness pins and the bench smoke gate
+    /// compare the plan-driven path against it.
+    #[doc(hidden)]
+    pub fn execute_transformer_seed(
+        &self,
+        inputs: &[Tensor],
+        env: &PlanEnv,
+    ) -> Result<Vec<Tensor>> {
+        let Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } = *self
+        else {
+            bail!("execute_transformer_seed is for transformer programs");
+        };
+        self.validate_inputs(inputs)?;
+        let out = exec_transformer(inputs, seq, d_model, d_ff, n_heads, dtype_in, env);
+        Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
+    }
+
     /// Execute on host tensors under the default plan environment.
     pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.execute_with_env(inputs, &PlanEnv::default())
@@ -501,11 +644,14 @@ impl Program {
                 let eplan = self.compile_plan(env)?;
                 self.execute_planned(inputs, &eplan)
             }
-            Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } => {
-                self.validate_inputs(inputs)?;
-                let out =
-                    exec_transformer(inputs, seq, d_model, d_ff, n_heads, dtype_in, env);
-                Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
+            Program::Transformer { .. } => {
+                // Composite programs compile the whole-graph plan and run
+                // plan-driven.  Bit-identical to the seed hand loop: the
+                // plan's per-op keys match the loop's internal plans, and
+                // cast hoisting / buffer reuse do not change any bit (see
+                // DESIGN.md §11).
+                let pplan = self.compile_program_plan(env)?;
+                self.execute_program_planned(inputs, &pplan)
             }
         }
     }
@@ -703,7 +849,15 @@ impl Program {
                 let eplan = self.compile_plan(env)?;
                 self.execute_batch_planned(items, &eplan)
             }
-            _ => items.iter().map(|inputs| self.execute_with_env(inputs, env)).collect(),
+            Program::Gemm { .. } => {
+                items.iter().map(|inputs| self.execute_with_env(inputs, env)).collect()
+            }
+            Program::Transformer { .. } => {
+                // One graph-level plan compiles once and drives the whole
+                // batch.
+                let pplan = self.compile_program_plan(env)?;
+                self.execute_batch_program_planned(items, &pplan)
+            }
         }
     }
 
@@ -721,7 +875,11 @@ impl Program {
     ) -> Result<Vec<Vec<Tensor>>> {
         let Program::Gemm { m, n, k, dtype_in, dtype_acc, epilogue, fused } = *self
         else {
-            return items.iter().map(|inputs| self.execute(inputs)).collect();
+            // Composite programs: compile the graph plan once (default
+            // environment, matching `execute`) and drive every item with
+            // it rather than re-planning per item.
+            let pplan = self.compile_program_plan(&PlanEnv::default())?;
+            return self.execute_batch_program_planned(items, &pplan);
         };
         if items.len() < 2 {
             return items.iter().map(|inputs| self.execute_planned(inputs, eplan)).collect();
@@ -896,11 +1054,11 @@ fn exec_gemm(
 
 /// Transformer weights bound once at load: the four pipeline-GEMM
 /// weights (`w_qkv`, `w_out`, `w_up`, `w_dn`) are `dtype_in`-cast and
-/// prepacked under their internal plans, the bias vectors are copied
-/// through, and [`Program::execute_transformer_bound`] then serves any
-/// number of activations against the shared panels — bit-identical to
-/// [`Program::execute_with_env`] with the weights shipped per call
-/// (pinned by the test below).
+/// prepacked under the graph plan's per-op plans, the bias vectors are
+/// copied through, and [`Program::execute_transformer_bound`] then
+/// serves any number of activations against the shared panels —
+/// bit-identical to [`Program::execute_with_env`] with the weights
+/// shipped per call (pinned by the test below).
 #[derive(Debug, Clone)]
 pub struct TransformerBound {
     w_qkv: BoundB,
@@ -909,57 +1067,55 @@ pub struct TransformerBound {
     w_dn: BoundB,
     b_up: Vec<f32>,
     b_dn: Vec<f32>,
-    qkv_plan: ExecutionPlan,
-    attn_plan: ExecutionPlan,
-    up_plan: ExecutionPlan,
-    dn_plan: ExecutionPlan,
-    /// For the per-call attention plans (no weights to bind there).
-    env: PlanEnv,
+    /// The graph-level plan the weights were bound under; bound
+    /// execution is driven by it.
+    pplan: ProgramPlan,
+}
+
+impl TransformerBound {
+    /// The compiled graph plan this binding executes under.
+    pub fn program_plan(&self) -> &ProgramPlan {
+        &self.pplan
+    }
 }
 
 impl Program {
     /// Bind a transformer's weights once: `weights` is the input list
     /// minus the leading activation (`w_qkv, w_out, w_up, b_up, w_dn,
-    /// b_dn`, the order of [`Program::input_shapes`]).
+    /// b_dn`, the order of [`Program::input_shapes`]).  The graph plan
+    /// compiles here, and each weight binds under its op's plan.
     pub fn bind_transformer_weights(
         &self,
         weights: &[Tensor],
         env: &PlanEnv,
     ) -> Result<TransformerBound> {
-        let Program::Transformer { seq, d_model, d_ff, dtype_in, .. } = *self else {
+        let Program::Transformer { dtype_in, .. } = *self else {
             bail!("bind_transformer_weights is for transformer programs");
         };
         let all_shapes = self.input_shapes();
         validate_against(weights, &all_shapes[1..])
             .map_err(|e| anyhow!("transformer weights: {e}"))?;
-        let d3 = 3 * d_model;
-        let qkv_plan = internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env);
-        let attn_plan = internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env);
-        let up_plan = internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env);
-        let dn_plan = internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env);
+        let pplan = self.compile_program_plan(env)?;
         Ok(TransformerBound {
-            w_qkv: bind_weight(&qkv_plan, &weights[0].data, dtype_in),
-            w_out: bind_weight(&attn_plan, &weights[1].data, dtype_in),
-            w_up: bind_weight(&up_plan, &weights[2].data, dtype_in),
-            w_dn: bind_weight(&dn_plan, &weights[4].data, dtype_in),
+            w_qkv: bind_weight(pplan.op_plan("qkv")?, &weights[0].data, dtype_in),
+            w_out: bind_weight(pplan.op_plan("attn_out")?, &weights[1].data, dtype_in),
+            w_up: bind_weight(pplan.op_plan("ffn_up")?, &weights[2].data, dtype_in),
+            w_dn: bind_weight(pplan.op_plan("ffn_dn")?, &weights[4].data, dtype_in),
             b_up: weights[3].data.clone(),
             b_dn: weights[5].data.clone(),
-            qkv_plan,
-            attn_plan,
-            up_plan,
-            dn_plan,
-            env: env.clone(),
+            pplan,
         })
     }
 
     /// Execute the transformer against weights bound at load: only the
-    /// activation travels per call.
+    /// activation travels per call, and the binding's own graph plan
+    /// drives the execution.
     pub fn execute_transformer_bound(
         &self,
         x: &Tensor,
         bound: &TransformerBound,
     ) -> Result<Vec<Tensor>> {
-        let Program::Transformer { seq, d_model, d_ff, n_heads, dtype_in } = *self else {
+        let Program::Transformer { seq, d_model, d_ff, .. } = *self else {
             bail!("execute_transformer_bound is for transformer programs");
         };
         if x.shape != [seq, d_model] || x.data.len() != seq * d_model {
@@ -969,14 +1125,16 @@ impl Program {
                 x.data.len()
             );
         }
-        // Weight shapes are seq-independent, so the binding's plans must
-        // be checked too: a bind from a different-seq program would
-        // otherwise pass here and assert deep in the kernel.
-        if bound.qkv_plan.m != seq || (bound.w_qkv.k, bound.w_up.n) != (d_model, d_ff)
+        // The binding's plan must describe this exact program, and the
+        // bound operands must agree with the shape too: a bind from a
+        // different-shape program would otherwise pass here and assert
+        // deep in the kernel.
+        if !bound.pplan.matches(self)
+            || (bound.w_qkv.k, bound.w_up.n) != (d_model, d_ff)
         {
             bail!("bound transformer weights do not match this program's shape");
         }
-        let out = exec_transformer_core(
+        let out = exec_transformer_planned(
             &x.data,
             TfWeights {
                 w_qkv: bound.w_qkv.operand(),
@@ -987,14 +1145,8 @@ impl Program {
                 b_up: &bound.b_up,
                 b_dn: &bound.b_dn,
             },
-            Some([&bound.qkv_plan, &bound.attn_plan, &bound.up_plan, &bound.dn_plan]),
-            seq,
-            d_model,
-            d_ff,
-            n_heads,
-            dtype_in,
-            &bound.env,
-        );
+            &bound.pplan,
+        )?;
         Ok(vec![Tensor { shape: vec![seq, d_model], data: out }])
     }
 }
@@ -1018,6 +1170,11 @@ struct TfWeights<'a> {
 /// `dtype_in` rounding on every pipeline-GEMM input).  Each internal GEMM
 /// runs under its own compiled plan; plan choice is bit-invisible, so the
 /// output is independent of `env` (pinned by the equivalence test below).
+///
+/// This is the seed hand loop, kept verbatim as the oracle the
+/// plan-driven path ([`exec_transformer_planned`]) must match bit for
+/// bit.  Production entry points all route through the ProgramPlan path;
+/// this one is reachable via [`Program::execute_transformer_seed`].
 fn exec_transformer(
     inputs: &[Tensor],
     seq: usize,
@@ -1038,7 +1195,6 @@ fn exec_transformer(
             b_up: &inputs[4].data,
             b_dn: &inputs[6].data,
         },
-        None,
         seq,
         d_model,
         d_ff,
@@ -1048,15 +1204,12 @@ fn exec_transformer(
     )
 }
 
-/// The transformer body, shared by the per-call and weight-bound entry
-/// points.  `weight_plans` is `[qkv, attn-out, ffn-up, ffn-dn]` when the
-/// caller bound them at load; otherwise they compile here from `env`
-/// (deterministic, so both paths run identical plans).
+/// The seed transformer body: per-op plans compile inline from `env`
+/// (deterministic, so repeated runs use identical plans).
 #[allow(clippy::too_many_arguments)]
 fn exec_transformer_core(
     x: &[f32],
     w: TfWeights,
-    weight_plans: Option<[&ExecutionPlan; 4]>,
     seq: usize,
     d_model: usize,
     d_ff: usize,
@@ -1071,19 +1224,10 @@ fn exec_transformer_core(
 
     // One compiled plan per internal GEMM shape (the attention plans are
     // reused across heads).
-    let compiled;
-    let [qkv_plan, attn_plan, up_plan, dn_plan] = match weight_plans {
-        Some(plans) => plans,
-        None => {
-            compiled = [
-                internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env),
-                internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env),
-                internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env),
-                internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env),
-            ];
-            [&compiled[0], &compiled[1], &compiled[2], &compiled[3]]
-        }
-    };
+    let qkv_plan = &internal_plan(seq, d3, d_model, dtype_in, Dtype::F32, env);
+    let attn_plan = &internal_plan(seq, d_model, d_model, dtype_in, Dtype::F32, env);
+    let up_plan = &internal_plan(seq, d_ff, d_model, dtype_in, Dtype::F32, env);
+    let dn_plan = &internal_plan(seq, d_model, d_ff, dtype_in, Dtype::F32, env);
     let scores_plan = internal_plan(seq, seq, d_head, Dtype::F32, Dtype::F32, env);
     let ctx_plan = internal_plan(seq, d_head, seq, Dtype::F32, Dtype::F32, env);
 
@@ -1197,6 +1341,215 @@ fn exec_transformer_core(
         *o += hv;
     }
     dn
+}
+
+/// The plan-driven transformer body: every orchestration decision comes
+/// from the compiled [`ProgramPlan`] instead of being hand-coded —
+/// per-op kernel plans from the op-graph pass, one shared activation
+/// cast per chain input from the cast-hoist pass, and scratch buffers
+/// from the lifetime arena of the buffer-reuse pass.  The pipeline pass
+/// is conservative (`materialize` everywhere), so the arithmetic — cast
+/// values, GEMM accumulation order, softmax/layernorm/epilogue tails —
+/// is exactly the seed hand loop's, and the output is bit-identical to
+/// [`exec_transformer`] (pinned by tests here and in
+/// `tests/program_plan.rs`).
+fn exec_transformer_planned(
+    x: &[f32],
+    w: TfWeights,
+    pplan: &ProgramPlan,
+) -> Result<Vec<f32>> {
+    let (seq, d_model, d_ff, n_heads) =
+        (pplan.seq, pplan.d_model, pplan.d_ff, pplan.n_heads);
+    let dtype_in = pplan.dtype_in;
+    let b_up = w.b_up;
+    let b_dn = w.b_dn;
+    let d_head = d_model / n_heads;
+    let d3 = 3 * d_model;
+
+    // Pass (a): every kernel plan comes from the op graph.
+    let qkv_plan = pplan.op_plan("qkv")?;
+    let scores_plan = pplan.op_plan("scores")?;
+    let ctx_plan = pplan.op_plan("ctx")?;
+    let attn_plan = pplan.op_plan("attn_out")?;
+    let up_plan = pplan.op_plan("ffn_up")?;
+    let dn_plan = pplan.op_plan("ffn_dn")?;
+
+    TF_ACTIVATION_CASTS.with(|c| c.set(0));
+    let cast = dtype_in != Dtype::F32;
+    let mut arena = ScratchArena::new();
+
+    // Pass (b): one hoisted activation cast per chain input, into an
+    // arena slot.  The cast values are the same round-to-nearest-even
+    // bits the seed loop's per-GEMM `cast_slice` produced.
+    let cast_act = |arena: &mut ScratchArena, src: &[f32]| -> (usize, Vec<f32>) {
+        TF_ACTIVATION_CASTS.with(|c| c.set(c.get() + 1));
+        let (slot, mut buf) = arena.take(0);
+        cast_extend(dtype_in, &mut buf, src);
+        (slot, buf)
+    };
+
+    // One planned GEMM over an already-cast activation; raw weights
+    // still cast per GEMM on the per-call path (idempotent, so the bits
+    // match bind-time casting).
+    let gemm_w = |eplan: &ExecutionPlan, out: &mut [f32], a16: &[f32], wop: BOperand| {
+        match wop {
+            BOperand::Raw(wr) if !w.cast_weights => {
+                eplan.matmul_b(out, a16, BOperand::Raw(wr));
+            }
+            BOperand::Raw(wr) => {
+                let w16 = cast_slice(dtype_in, wr);
+                eplan.matmul_b(out, a16, BOperand::Raw(&w16[..]));
+            }
+            pre => eplan.matmul_b(out, a16, pre),
+        }
+    };
+
+    // QKV projection: q, k and v share the single hoisted x cast.
+    let mut x_cast: Option<(usize, Vec<f32>)> = None;
+    if cast {
+        x_cast = Some(cast_act(&mut arena, x));
+    }
+    let x16: &[f32] = x_cast.as_ref().map(|(_, b)| b.as_slice()).unwrap_or(x);
+    let (qkv_slot, mut qkv) = arena.take(seq * d3);
+    gemm_w(qkv_plan, &mut qkv, x16, w.w_qkv);
+    if let Some((slot, buf)) = x_cast.take() {
+        arena.put(slot, buf);
+    }
+
+    // Scaled dot-product attention per head — arithmetic identical to
+    // the seed loop (see the comment there); only the buffer provenance
+    // differs, and arena slots are zero-filled exactly like the seed's
+    // fresh vectors.  The take order matches the birth order the
+    // buffer-reuse pass scheduled, so the run-time slot assignment is
+    // the one recorded in `pplan.arena`.
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let (q_slot, mut q_h) = arena.take(seq * d_head);
+    let (kt_slot, mut kt_h) = arena.take(d_head * seq);
+    let (v_slot, mut v_h) = arena.take(seq * d_head);
+    let (sc_slot, mut scores) = arena.take(seq * seq);
+    let (ch_slot, mut ctx_h) = arena.take(seq * d_head);
+    let (de_slot, mut denom) = arena.take(seq);
+    let (ctx_slot, mut ctx) = arena.take(seq * d_model);
+    for h in 0..n_heads {
+        let q_off = h * d_head;
+        let k_off = d_model + h * d_head;
+        let v_off = 2 * d_model + h * d_head;
+        for i in 0..seq {
+            for dd in 0..d_head {
+                q_h[i * d_head + dd] = qkv[i * d3 + q_off + dd];
+                kt_h[dd * seq + i] = qkv[i * d3 + k_off + dd];
+                v_h[i * d_head + dd] = qkv[i * d3 + v_off + dd];
+            }
+        }
+        scores.fill(0.0);
+        scores_plan.matmul(&mut scores, &q_h, &kt_h);
+        for (i, row) in scores.chunks_mut(seq).enumerate() {
+            for s in row.iter_mut() {
+                *s *= scale;
+            }
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f32;
+            for s in row.iter_mut() {
+                *s = (*s - max).exp();
+                den += *s;
+            }
+            denom[i] = den;
+        }
+        ctx_h.fill(0.0);
+        ctx_plan.matmul(&mut ctx_h, &scores, &v_h);
+        for i in 0..seq {
+            for dd in 0..d_head {
+                ctx[i * d_model + q_off + dd] = ctx_h[i * d_head + dd] / denom[i];
+            }
+        }
+    }
+    arena.put(qkv_slot, qkv);
+    arena.put(q_slot, q_h);
+    arena.put(kt_slot, kt_h);
+    arena.put(v_slot, v_h);
+    arena.put(sc_slot, scores);
+    arena.put(ch_slot, ctx_h);
+    arena.put(de_slot, denom);
+
+    // Attention output projection + residual.
+    let mut ctx_cast: Option<(usize, Vec<f32>)> = None;
+    if cast {
+        ctx_cast = Some(cast_act(&mut arena, &ctx));
+    }
+    let ctx16: &[f32] = ctx_cast.as_ref().map(|(_, b)| b.as_slice()).unwrap_or(&ctx);
+    let (ao_slot, mut attn_out) = arena.take(seq * d_model);
+    gemm_w(attn_plan, &mut attn_out, ctx16, w.w_out);
+    arena.put(ctx_slot, ctx);
+    if let Some((slot, buf)) = ctx_cast.take() {
+        arena.put(slot, buf);
+    }
+    let (hr_slot, mut h_res) = arena.take(seq * d_model);
+    for ((hv, &xv), &av) in h_res.iter_mut().zip(x).zip(&attn_out) {
+        *hv = xv + av;
+    }
+    arena.put(ao_slot, attn_out);
+
+    // Pre-FFN layer norm.
+    let (hn_slot, mut hn) = arena.take(seq * d_model);
+    for (hn_row, h_row) in hn.chunks_mut(d_model).zip(h_res.chunks(d_model)) {
+        let mu = h_row.iter().sum::<f32>() / d_model as f32;
+        let var =
+            h_row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d_model as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (o, &v) in hn_row.iter_mut().zip(h_row) {
+            *o = (v - mu) * inv;
+        }
+    }
+
+    // FFN up (fused bias+ReLU) and down (fused bias), then the residual.
+    let mut hn_cast: Option<(usize, Vec<f32>)> = None;
+    if cast {
+        hn_cast = Some(cast_act(&mut arena, &hn));
+    }
+    let hn16: &[f32] = hn_cast.as_ref().map(|(_, b)| b.as_slice()).unwrap_or(&hn);
+    let (up_slot, mut up) = arena.take(seq * d_ff);
+    gemm_w(up_plan, &mut up, hn16, w.w_up);
+    arena.put(hn_slot, hn);
+    if let Some((slot, buf)) = hn_cast.take() {
+        arena.put(slot, buf);
+    }
+    for row in up.chunks_mut(d_ff) {
+        for (v, &bv) in row.iter_mut().zip(b_up) {
+            *v = (*v + bv).max(0.0);
+        }
+    }
+    let mut up_cast: Option<(usize, Vec<f32>)> = None;
+    if cast {
+        up_cast = Some(cast_act(&mut arena, &up));
+    }
+    let up16: &[f32] = up_cast.as_ref().map(|(_, b)| b.as_slice()).unwrap_or(&up);
+    // The block output is returned, not scratch — it lives outside the
+    // arena (and outside the plan's slot count).
+    let mut dn = vec![0.0f32; seq * d_model];
+    gemm_w(dn_plan, &mut dn, up16, w.w_dn);
+    arena.put(up_slot, up);
+    if let Some((slot, buf)) = up_cast.take() {
+        arena.put(slot, buf);
+    }
+    for row in dn.chunks_mut(d_model) {
+        for (v, &bv) in row.iter_mut().zip(b_dn) {
+            *v += bv;
+        }
+    }
+    for (o, &hv) in dn.iter_mut().zip(&h_res) {
+        *o += hv;
+    }
+    arena.put(hr_slot, h_res);
+
+    // The run-time footprint must be the compile-time pass's answer.
+    if !pplan.arena.is_empty() {
+        debug_assert_eq!(
+            arena.slots_used(),
+            pplan.arena.len(),
+            "executor scratch footprint diverged from the buffer-reuse pass"
+        );
+    }
+    Ok(dn)
 }
 
 #[cfg(test)]

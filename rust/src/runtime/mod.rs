@@ -27,6 +27,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::plan::program::ProgramPlan;
 use crate::plan::{ExecutionPlan, PlanEnv, PlanOverride};
 
 pub use exec::{BoundB, Epilogue, GEMM_B_INPUT_SLOT, Program, TransformerBound};
@@ -68,13 +69,15 @@ impl Tensor {
 }
 
 /// One loaded artifact: manifest entry + validated executable program +
-/// the execution plan compiled for it at load time (GEMM programs only;
-/// composite programs plan per internal GEMM at execution).
+/// the plan compiled for it at load time — a per-GEMM [`ExecutionPlan`]
+/// for GEMM programs, a graph-level [`ProgramPlan`] for composite
+/// programs.
 #[derive(Debug)]
 pub struct LoadedArtifact {
     pub meta: ArtifactMeta,
     program: Program,
     plan: Option<Arc<ExecutionPlan>>,
+    program_plan: Option<Arc<ProgramPlan>>,
 }
 
 impl LoadedArtifact {
@@ -83,9 +86,15 @@ impl LoadedArtifact {
     }
 
     /// The plan this artifact executes under unless a caller supplies an
-    /// explicit one (`execute_timed_planned`).
+    /// explicit one (`execute_timed_planned`).  GEMM programs only.
     pub fn plan(&self) -> Option<&Arc<ExecutionPlan>> {
         self.plan.as_ref()
+    }
+
+    /// The graph-level plan a composite artifact executes under (`None`
+    /// for GEMM programs, which carry [`LoadedArtifact::plan`] instead).
+    pub fn program_plan(&self) -> Option<&Arc<ProgramPlan>> {
+        self.program_plan.as_ref()
     }
 }
 
@@ -182,11 +191,13 @@ impl Runtime {
         let program = Program::from_text(&text, &meta.name)
             .with_context(|| format!("parsing artifact program {}", meta.path.display()))?;
         check_contract(&meta, &program)?;
-        // Compile the execution plan once, at load time: the serving hot
-        // path never recompiles (composite programs return None here and
-        // plan per internal GEMM instead).
+        // Compile the plan once, at load time: the serving hot path never
+        // recompiles.  GEMM programs get a per-GEMM ExecutionPlan,
+        // composite programs a graph-level ProgramPlan.
         let plan = program.compile_plan(&self.plan_env).ok().map(Arc::new);
-        let arc = Arc::new(LoadedArtifact { meta, program, plan });
+        let program_plan =
+            program.compile_program_plan(&self.plan_env).ok().map(Arc::new);
+        let arc = Arc::new(LoadedArtifact { meta, program, plan, program_plan });
         self.loaded
             .lock()
             .unwrap()
@@ -250,9 +261,10 @@ impl Runtime {
         }
         let t1 = Instant::now();
 
-        let outputs = match eplan {
-            Some(p) => artifact.program.execute_planned(inputs, p),
-            None => artifact.program.execute_with_env(inputs, &self.plan_env),
+        let outputs = match (eplan, artifact.program_plan.as_deref()) {
+            (Some(p), _) => artifact.program.execute_planned(inputs, p),
+            (None, Some(pp)) => artifact.program.execute_program_planned(inputs, pp),
+            (None, None) => artifact.program.execute_with_env(inputs, &self.plan_env),
         }
         .with_context(|| format!("executing {}", meta.name))?;
         let t2 = Instant::now();
@@ -330,9 +342,14 @@ impl Runtime {
         }
         let t1 = Instant::now();
 
-        let outputs = match eplan {
-            Some(p) => artifact.program.execute_batch_planned(items, p),
-            None => artifact.program.execute_batch_with_env(items, &self.plan_env),
+        let outputs = match (eplan, artifact.program_plan.as_deref()) {
+            (Some(p), _) => artifact.program.execute_batch_planned(items, p),
+            (None, Some(pp)) => {
+                artifact.program.execute_batch_program_planned(items, pp)
+            }
+            (None, None) => {
+                artifact.program.execute_batch_with_env(items, &self.plan_env)
+            }
         }
         .with_context(|| format!("executing {} (batch of {})", meta.name, items.len()))?;
         let t2 = Instant::now();

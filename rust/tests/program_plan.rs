@@ -1,0 +1,377 @@
+//! Graph-level `ProgramPlan` integration pins.
+//!
+//! The transformer program no longer executes through a hand loop: it
+//! compiles a whole-program plan (op-graph extraction, cast hoisting,
+//! lifetime-based buffer reuse, pipeline decisions) and both the inline
+//! and weight-bound paths execute under it.  This suite pins the
+//! contract at the integration level:
+//!
+//! * the plan is a first-class value — JSON round-trippable, with the
+//!   graph passes' decisions golden-pinned for the standard shape;
+//! * with the pipeline passes in their default conservative setting the
+//!   planned output is bit-identical to the seed hand-loop oracle,
+//!   inline and weight-bound;
+//! * cast hoisting is observable: the QKV projections share exactly one
+//!   A-operand cast (counted at the executor, recorded in the plan);
+//! * a server interleaving a transformer variant with a plain GEMM
+//!   variant attributes work to the two plans separately.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mlir_gemm::coordinator::{
+    GemmKey, GemmRequest, ProgramRequest, Server, ServerConfig,
+};
+use mlir_gemm::plan::program::ProgramPlan;
+use mlir_gemm::plan::{NumericsClass, PlanEnv, PlanOverride};
+use mlir_gemm::runtime::kernel::{Blocking, KernelPolicy};
+use mlir_gemm::runtime::{exec, Program, Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+
+/// The standard transformer shape every pin below uses (the exec.rs
+/// suite's shape: 4 heads of width 4, FFN expansion 2x).
+const SEQ: usize = 8;
+const D_MODEL: usize = 16;
+const D_FF: usize = 32;
+const N_HEADS: usize = 4;
+
+fn program(dtype_in: Dtype) -> Program {
+    Program::Transformer {
+        seq: SEQ,
+        d_model: D_MODEL,
+        d_ff: D_FF,
+        n_heads: N_HEADS,
+        dtype_in,
+    }
+}
+
+fn inputs(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut mk = |shape: Vec<usize>| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        Tensor { shape, data }
+    };
+    vec![
+        mk(vec![SEQ, D_MODEL]),
+        mk(vec![D_MODEL, 3 * D_MODEL]),
+        mk(vec![D_MODEL, D_MODEL]),
+        mk(vec![D_MODEL, D_FF]),
+        mk(vec![D_FF]),
+        mk(vec![D_FF, D_MODEL]),
+        mk(vec![D_MODEL]),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// First-class value: JSON round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn program_plan_round_trips_through_json() {
+    for &dtype_in in &[Dtype::F16, Dtype::F32] {
+        let pplan = program(dtype_in)
+            .compile_program_plan(&PlanEnv::pinned())
+            .unwrap();
+        let text = pplan.to_json().to_string();
+        let back = ProgramPlan::from_text(&text).unwrap();
+        assert_eq!(back, pplan, "round trip dropped state for {dtype_in:?}");
+        assert_eq!(back.to_json().to_string(), text, "re-serialization drifted");
+    }
+    // A document whose stated numerics contradict its op plans must be
+    // rejected — a plan cannot promise bit-exactness its kernels break.
+    let text = program(Dtype::F16)
+        .compile_program_plan(&PlanEnv::pinned())
+        .unwrap()
+        .to_json()
+        .to_string();
+    // Keys serialize sorted, so the first "numerics" is the program-level
+    // one ("numerics" < "ops"); the op plans keep claiming bit_exact.
+    let lied = text.replacen("\"numerics\":\"bit_exact\"", "\"numerics\":\"fma_relaxed\"", 1);
+    assert!(ProgramPlan::from_text(&lied).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Golden: graph-pass decisions for the standard shape under the pinned env
+// (decision pin, same idiom as golden/plan_*.json; see golden/README.md)
+// ---------------------------------------------------------------------------
+
+const GOLDEN: &str = include_str!("golden/program_plan_8x16x32x4_f16.json");
+
+#[test]
+fn golden_program_plan_for_the_standard_transformer_shape() {
+    let golden = ProgramPlan::from_text(GOLDEN).unwrap();
+    let compiled = program(Dtype::F16)
+        .compile_program_plan(&PlanEnv::pinned())
+        .unwrap();
+    assert_eq!(compiled.id(), golden.id());
+    assert_eq!(compiled.numerics, golden.numerics, "program numerics drifted");
+    assert_eq!(compiled.ops.len(), golden.ops.len(), "op-graph extraction drifted");
+    for (c, g) in compiled.ops.iter().zip(&golden.ops) {
+        assert_eq!(c.name, g.name, "op order drifted");
+        assert_eq!(c.count, g.count, "gemm count drifted for op {}", c.name);
+        assert_eq!(
+            (c.plan.m, c.plan.n, c.plan.k, c.plan.dtype_in),
+            (g.plan.m, g.plan.n, g.plan.k, g.plan.dtype_in),
+            "lowered shape drifted for op {}",
+            c.name
+        );
+        assert_eq!(
+            c.plan.kernel.name(),
+            g.plan.kernel.name(),
+            "kernel decision drifted for op {}",
+            c.name
+        );
+        assert_eq!(
+            c.plan.numerics, g.plan.numerics,
+            "numerics class drifted for op {}",
+            c.name
+        );
+    }
+    assert_eq!(compiled.cast_hoists, golden.cast_hoists, "cast-hoist pass drifted");
+    assert_eq!(compiled.arena, golden.arena, "buffer-reuse pass drifted");
+    assert_eq!(compiled.pipeline, golden.pipeline, "pipeline pass drifted");
+    // Provenance: the compiled plan records all four graph passes (the
+    // golden pins decisions, not prose).
+    for pass in ["op-graph", "cast-hoist", "buffer-reuse", "pipeline"] {
+        assert!(
+            compiled.trace.iter().any(|t| t.pass == pass),
+            "missing trace entry for pass {pass:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exactness: planned output == seed hand-loop oracle, inline + bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_transformer_is_bit_identical_to_the_seed_oracle() {
+    let envs = vec![
+        PlanEnv::default(),
+        PlanEnv::pinned(),
+        PlanEnv::pinned().with_force(PlanOverride::Force(KernelPolicy::Tiled(
+            Blocking { mc: 8, kc: 4, nc: 16 },
+        ))),
+    ];
+    for &dtype_in in &[Dtype::F16, Dtype::F32] {
+        let p = program(dtype_in);
+        let ins = inputs(0x5EED);
+        for env in &envs {
+            let seed = p.execute_transformer_seed(&ins, env).unwrap();
+            let pplan = p.compile_program_plan(env).unwrap();
+            assert_eq!(pplan.numerics, NumericsClass::BitExact);
+
+            let planned = p.execute_program_planned(&ins, &pplan).unwrap();
+            assert_eq!(seed[0].shape, planned[0].shape);
+            for (i, (w, g)) in seed[0].data.iter().zip(&planned[0].data).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "inline planned drifted from seed at {i} ({dtype_in:?})"
+                );
+            }
+
+            let bound = p.bind_transformer_weights(&ins[1..], env).unwrap();
+            assert_eq!(bound.program_plan(), &pplan, "bind compiled a different plan");
+            let got = p.execute_transformer_bound(&ins[0], &bound).unwrap();
+            for (i, (w, g)) in seed[0].data.iter().zip(&got[0].data).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "bound planned drifted from seed at {i} ({dtype_in:?})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cast hoisting: QKV shares exactly one A cast
+// ---------------------------------------------------------------------------
+
+#[test]
+fn qkv_projections_share_exactly_one_hoisted_activation_cast() {
+    // f16: the plan records the hoist (one shared x cast feeds q/k/v,
+    // saving two of the three per-projection casts) and the executor
+    // performs exactly four activation casts in total: x (shared by the
+    // fused QKV gemm), ctx, hn, and up.
+    let p = program(Dtype::F16);
+    let pplan = p.compile_program_plan(&PlanEnv::pinned()).unwrap();
+    assert_eq!(pplan.cast_hoists.len(), 1);
+    let h = &pplan.cast_hoists[0];
+    assert_eq!(h.operand, "x");
+    assert_eq!(h.users, vec!["q", "k", "v"]);
+    assert_eq!(h.casts_saved, 2);
+    let hoist_trace = pplan
+        .trace
+        .iter()
+        .find(|t| t.pass == "cast-hoist")
+        .expect("cast-hoist pass must be traced");
+    assert!(
+        hoist_trace.decision.contains("1 shared"),
+        "trace decision {:?} does not record the shared cast",
+        hoist_trace.decision
+    );
+    p.execute_program_planned(&inputs(7), &pplan).unwrap();
+    assert_eq!(
+        exec::transformer_activation_casts(),
+        4,
+        "planned f16 execution must cast exactly x, ctx, hn, up"
+    );
+
+    // f32: nothing to hoist, nothing cast.
+    let p32 = program(Dtype::F32);
+    let pplan32 = p32.compile_program_plan(&PlanEnv::pinned()).unwrap();
+    assert!(pplan32.cast_hoists.is_empty());
+    p32.execute_program_planned(&inputs(7), &pplan32).unwrap();
+    assert_eq!(exec::transformer_activation_casts(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Server: transformer variant + plain GEMM variant, interleaved, with
+// separate per-plan attribution
+// ---------------------------------------------------------------------------
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "small",
+      "file": "small.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [24, 24], "dtype": "f32"}],
+      "m": 24, "n": 24, "k": 24, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "tf_layer",
+      "file": "tf_layer.tprog.json",
+      "kind": "transformer",
+      "inputs": [
+        {"shape": [8, 16], "dtype": "f32"},
+        {"shape": [16, 48], "dtype": "f32"},
+        {"shape": [16, 16], "dtype": "f32"},
+        {"shape": [16, 32], "dtype": "f32"},
+        {"shape": [32], "dtype": "f32"},
+        {"shape": [32, 16], "dtype": "f32"},
+        {"shape": [16], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [8, 16], "dtype": "f32"}],
+      "seq": 8, "d_model": 16, "d_ff": 32
+    }
+  ]
+}"#;
+
+const SMALL: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "small",
+  "program": {
+    "type": "gemm", "m": 24, "n": 24, "k": 24,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const TF: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "tf_layer",
+  "program": {
+    "type": "transformer",
+    "seq": 8, "d_model": 16, "d_ff": 32, "n_heads": 4, "dtype_in": "f16"
+  }
+}"#;
+
+#[test]
+fn server_interleaves_transformer_and_gemm_with_separate_plan_metrics() {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_program_plan_srv_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("small.tprog.json"), SMALL).unwrap();
+    std::fs::write(dir.join("tf_layer.tprog.json"), TF).unwrap();
+
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    // What the server must serve: the load-time compiled ProgramPlan (the
+    // same Arc route_program caches in the registry).
+    let tf_artifact = rt.load("tf_layer").unwrap();
+    let tf_pplan = tf_artifact.program_plan().expect("transformer compiles a plan");
+    let gemm_key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+
+    let mut server = Server::start(
+        rt.clone(),
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig { workers: 3, ..Default::default() },
+    );
+    let gemm_plan = server.registry().plan(&gemm_key).unwrap();
+
+    let per_side = 8usize;
+    let mut rng = Rng::new(0x17E);
+    let mut pending = Vec::new();
+    for i in 0..2 * per_side {
+        if i % 2 == 0 {
+            let ins = inputs(1000 + i as u64);
+            let want = tf_artifact
+                .program()
+                .execute_program_planned(&ins, tf_pplan)
+                .unwrap();
+            let rx = server.submit_program(ProgramRequest {
+                artifact: "tf_layer".to_string(),
+                inputs: ins,
+            });
+            pending.push((vec![8usize, 16], want[0].data.clone(), rx));
+        } else {
+            let a = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+            let b = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+            let c = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+            let mut want = c.data.clone();
+            mlir_gemm::runtime::kernel::matmul(
+                KernelPolicy::Naive,
+                &mut want,
+                &a.data,
+                &b.data,
+                24,
+                24,
+                24,
+            );
+            let rx = server.submit(GemmRequest {
+                key: gemm_key.clone(),
+                a,
+                b: Some(b),
+                c,
+                bias: None,
+                use_baseline: true,
+            });
+            pending.push((vec![24usize, 24], want, rx));
+        }
+    }
+    for (shape, want, rx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let out = resp.output.expect("request should succeed");
+        assert_eq!(out.shape, shape);
+        assert_eq!(out.data, want, "served {shape:?} output drifted");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2 * per_side as u64);
+    assert_eq!(m.failed, 0);
+    // Separate attribution: the transformer's work lands under the
+    // program plan's id, the GEMM's under its execution plan's id.
+    assert_eq!(
+        m.per_plan.get(&tf_pplan.id()).map(|l| l.requests),
+        Some(per_side as u64),
+        "per_plan: {:?}",
+        m.per_plan
+    );
+    assert_eq!(
+        m.per_plan.get(&gemm_plan.id()).map(|l| l.requests),
+        Some(per_side as u64),
+        "per_plan: {:?}",
+        m.per_plan
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -19,6 +19,7 @@
 #include <stdlib.h>
 #include <string.h>
 #include <time.h>
+#include <unistd.h>
 
 /* util/prng.rs: splitmix64 + Box-Muller-free normal approx is not
  * needed here — any deterministic distribution works for the checks,
@@ -157,6 +158,103 @@ typedef struct {
     int naive;
 } policy_t;
 
+/* --- plan passes 1-3 (rust/src/plan/mod.rs under PlanEnv::default):
+ * tile selection over autotune::cpu_blockings under the traffic model,
+ * the packing decision, and thread partitioning.  Scalar lowering only
+ * (the auto pipeline never lowers to SIMD), mirroring the bench's
+ * plan:<compiled> row which compiles with PlanEnv::default() on f32.
+ * Python twin: python/tests/test_plan_mirror.py compile_plan(). */
+
+#define PLAN_L2_BYTES (256 * 1024)
+#define PLAN_L3_BYTES (8 * 1024 * 1024)
+#define MIN_FLOPS_PER_THREAD 4e6
+
+static size_t ceil_div(size_t x, size_t d) { return d == 0 ? 0 : (x + d - 1) / d; }
+
+/* plan::traffic_elems — modeled element traffic of one blocked sweep */
+static double traffic_elems(size_t m, size_t n, size_t k, blocking_t bs) {
+    double a = (double)(m * k) * (double)ceil_div(n, bs.nc);
+    double b = (double)(k * n);
+    double c = 2.0 * (double)(m * n) * (double)ceil_div(k, bs.kc);
+    return a + b + c;
+}
+
+typedef struct {
+    blocking_t bs;   /* pass 1 */
+    int packed;      /* pass 2 */
+    size_t bands;    /* pass 3 (1 when !packed) */
+    char kernel[64]; /* lowered KernelPolicy name */
+} plan_t;
+
+static plan_t plan_compile(size_t m, size_t n, size_t k, size_t hw) {
+    /* autotune::cpu_blockings, same enumeration order */
+    static const size_t mcs[] = {64, 128, 256};
+    static const size_t kcs[] = {128, 256, 512};
+    static const size_t ncs[] = {256, 1024};
+    blocking_t best = {0, 0, 0};
+    double best_traffic = 0.0;
+    size_t best_panels = 0;
+    int have = 0;
+    /* Pass 1: feasible candidates (A panel in L2/2, B panel in L3/2)
+     * ranked by traffic; ties toward smaller packed panels, then the
+     * larger mc/kc/nc — the strict total order plan.rs min_by_key uses.
+     * The full candidate set never goes entirely infeasible, so the
+     * Rust fallback-to-all branch is unreachable here. */
+    for (size_t i = 0; i < 3; i++)
+        for (size_t j = 0; j < 3; j++)
+            for (size_t l = 0; l < 2; l++) {
+                blocking_t b = {mcs[i], kcs[j], ncs[l]};
+                if (b.mc * b.kc * 4 > PLAN_L2_BYTES / 2 ||
+                    b.kc * b.nc * 4 > PLAN_L3_BYTES / 2)
+                    continue;
+                double t = traffic_elems(m, n, k, b);
+                size_t panels = (b.mc * b.kc + b.kc * b.nc) * 4;
+                int wins =
+                    !have || t < best_traffic ||
+                    (t == best_traffic &&
+                     (panels < best_panels ||
+                      (panels == best_panels &&
+                       (b.mc > best.mc ||
+                        (b.mc == best.mc &&
+                         (b.kc > best.kc ||
+                          (b.kc == best.kc && b.nc > best.nc)))))));
+                if (wins) {
+                    best = b;
+                    best_traffic = t;
+                    best_panels = panels;
+                    have = 1;
+                }
+            }
+    plan_t p;
+    p.bs = best;
+    /* Pass 2: operand footprint within half of L2 runs the direct kernel */
+    p.packed = 4.0 * ((double)(m * k) + (double)(k * n) + (double)(m * n)) >
+               (double)(PLAN_L2_BYTES / 2);
+    /* Pass 3 (pool_threads == 1 in the default env) */
+    if (!p.packed) {
+        p.bands = 1;
+    } else {
+        size_t by_work =
+            (size_t)(2.0 * (double)m * (double)n * (double)k / MIN_FLOPS_PER_THREAD);
+        if (by_work < 1)
+            by_work = 1;
+        size_t bands = hw < by_work ? hw : by_work;
+        size_t row_panels = ceil_div(m, MR);
+        if (bands > row_panels)
+            bands = row_panels;
+        p.bands = bands < 1 ? 1 : bands;
+    }
+    if (!p.packed)
+        snprintf(p.kernel, sizeof p.kernel, "naive");
+    else if (p.bands > 1)
+        snprintf(p.kernel, sizeof p.kernel, "threaded:%zu,%zu,%zu,%zu",
+                 p.bs.mc, p.bs.kc, p.bs.nc, p.bands);
+    else
+        snprintf(p.kernel, sizeof p.kernel, "tiled:%zu,%zu,%zu",
+                 p.bs.mc, p.bs.kc, p.bs.nc);
+    return p;
+}
+
 static void bench_size(size_t size) {
     rng_state = 0xBE7C4 + size;
     float *a = rand_matrix(size, size);
@@ -212,6 +310,42 @@ static void bench_size(size_t size) {
         }
         fflush(stdout);
     }
+
+    /* plan:<compiled> — what the exec_kernel bench's plan row runs: the
+     * kernel lowered by plan passes 1-3 under the default environment.
+     * Scalar lowering, so bit-equality vs naive is the check. */
+    {
+        long nproc = sysconf(_SC_NPROCESSORS_ONLN);
+        size_t hw = nproc > 0 ? (size_t)nproc : 1;
+        plan_t p = plan_compile(size, size, size, hw);
+        char name[80];
+        snprintf(name, sizeof name, "plan:%s", p.kernel);
+        double best = 1e30;
+        int reps = 0;
+        double budget = now_sec() + (size >= 2048 ? 8.0 : 3.0);
+        do {
+            memcpy(out, c, size * size * sizeof(float));
+            double t0 = now_sec();
+            if (!p.packed)
+                gemm_naive(out, a, b, size, size, size);
+            else if (p.bands == 1)
+                gemm_tiled(out, a, b, size, size, size, p.bs);
+            else
+                gemm_banded(out, a, b, size, size, size, p.bs, p.bands, 0);
+            double dt = now_sec() - t0;
+            if (dt < best)
+                best = dt;
+            reps++;
+        } while (reps < 3 || (now_sec() < budget && reps < 12));
+        if (!bitwise_equal(out, want, size * size)) {
+            fprintf(stderr, "FAIL %s not bitwise at %zu\n", name, size);
+            g_failures++;
+        }
+        printf("{\"size\": %zu, \"policy\": \"%s\", \"best_seconds\": %.6f, "
+               "\"gflops\": %.3f}\n",
+               size, name, best, flops / best / 1e9);
+        fflush(stdout);
+    }
     free(a); free(b); free(c); free(out); free(want);
 }
 
@@ -223,6 +357,17 @@ int main(int argc, char **argv) {
     };
     for (size_t i = 0; i < sizeof shapes / sizeof *shapes; i++)
         verify_shape(shapes[i][0], shapes[i][1], shapes[i][2]);
+    /* plan passes 1-3 against the pinned-env decision points the Python
+     * mirror and the Rust goldens agree on (hw pinned to 4 like
+     * PlanEnv::pinned so the checks are host-independent) */
+    check(strcmp(plan_compile(64, 64, 64, 4).kernel, "naive") == 0,
+          "plan(64^3) lowers to the direct kernel");
+    check(strcmp(plan_compile(256, 256, 256, 4).kernel, "threaded:64,256,256,4") == 0,
+          "plan(256^3, hw=4) == threaded:64,256,256,4");
+    check(strcmp(plan_compile(512, 512, 512, 4).kernel, "threaded:64,512,1024,4") == 0,
+          "plan(512^3, hw=4) == threaded:64,512,1024,4");
+    check(plan_compile(8, 2048, 2048, 4).bands == 2,
+          "plan(8x2048x2048) caps bands at ceil(m/MR) = 2");
     if (argc > 1 && strcmp(argv[1], "--verify-only") == 0) {
         printf(g_failures ? "VERIFY: %d failure(s)\n" : "VERIFY: all checks passed\n",
                g_failures);
