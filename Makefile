@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify verify-scalar build test pytest fuzz artifacts artifacts-quick bench-smoke plans program-plans lint fmt clean
+.PHONY: verify verify-scalar build test pytest fuzz check-protocol artifacts artifacts-quick bench-smoke plans program-plans lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -32,6 +32,20 @@ pytest:
 # MLIR_GEMM_FUZZ_SEED=<seed> make fuzz.
 fuzz:
 	$(CARGO) test -q --test fuzz_differential
+
+# Protocol checker (rust/src/check/, DESIGN.md §12): exhaustively
+# explore every interleaving of the coordinator protocol model at the
+# full 3-client × 2-device bound, prove the five invariants non-vacuously
+# across the scenario matrix, then replay a clean shutdown-vs-submit
+# schedule against the real server.  The bug-hunt legs re-introduce the
+# PR 5 stop-flag break (and the stale-rebind / containment bugs) behind
+# test hooks and demand a counterexample — the stop-flag one also
+# replays against the real server to show real stranded jobs.
+check-protocol:
+	$(CARGO) run --release --bin mlir-gemm -- check-protocol
+	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug stop-flag
+	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug stale-rebind
+	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug no-containment
 
 # AOT-lower the full artifact set (tprog descriptors + manifest) for the
 # Rust runtime's measured subsets and integration tests.

@@ -151,5 +151,6 @@ fn request(rng: &mut Rng, key: &GemmKey, bound: bool) -> GemmRequest {
         c: Tensor::zeros(vec![key.m, key.n]),
         bias,
         use_baseline: false,
+        deadline: None,
     }
 }

@@ -50,6 +50,7 @@ fn main() {
         c: Tensor::zeros(vec![size, size]),
         bias: None,
         use_baseline: false,
+        deadline: None,
     };
     for _ in 0..2 {
         server.call(mk_req(&mut rng)).unwrap().output.unwrap();

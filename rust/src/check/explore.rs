@@ -1,0 +1,311 @@
+//! Breadth-first enumeration of every interleaving of a bounded
+//! protocol configuration.
+//!
+//! Plain explicit-state model checking: start from
+//! [`State::initial`](super::protocol::State::initial), expand with
+//! [`enabled_actions`](super::protocol::enabled_actions) +
+//! [`apply`](super::protocol::apply), dedup states by hash, keep parent
+//! pointers so a violation reconstructs its schedule as a
+//! counterexample trace.  BFS (not DFS) so the first counterexample
+//! found is a *shortest* one — the trace the replay harness and a human
+//! reader work from.
+//!
+//! The state budget is a hard error, never a silent truncation: a run
+//! that exhausts `max_states` proved nothing, and says so.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{anyhow, Result};
+
+use super::protocol::{
+    apply, check_safety, check_terminal, enabled_actions, Action, Coverage,
+    ModelConfig, State,
+};
+
+/// A violated invariant plus the shortest schedule reaching it.
+#[derive(Clone, Debug)]
+pub struct Counterexample {
+    /// The violated invariant's description (starts with its stable
+    /// name, e.g. `no-stranded-shutdown: ...`).
+    pub invariant: String,
+    /// The schedule from the initial state to the violating one.
+    pub trace: Vec<Action>,
+    /// The violating state itself.
+    pub end: State,
+}
+
+impl Counterexample {
+    /// The invariant's stable name (the part before `:`).
+    pub fn invariant_name(&self) -> &str {
+        self.invariant.split(':').next().unwrap_or(&self.invariant)
+    }
+
+    /// Multi-line human rendering of the schedule.
+    pub fn render(&self) -> String {
+        let mut out = format!("violated: {}\nschedule ({} steps):\n", self.invariant,
+            self.trace.len());
+        for (i, a) in self.trace.iter().enumerate() {
+            out.push_str(&format!("  {:>2}. {}\n", i + 1, a.describe()));
+        }
+        out.push_str(&format!("end state: {:?}\n", self.end));
+        out
+    }
+}
+
+/// What one exhaustive exploration established.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    /// Distinct states reached.
+    pub states: usize,
+    /// Transitions taken (including ones into already-seen states).
+    pub transitions: usize,
+    /// Terminal states (no enabled action) found and checked.
+    pub terminals: usize,
+    /// Longest schedule explored (BFS depth of the deepest state).
+    pub max_depth: usize,
+    /// Which interesting situations actually occurred (vacuity guard).
+    pub coverage: Coverage,
+    /// The first (shortest) violation, if any invariant broke.
+    pub violation: Option<Counterexample>,
+}
+
+impl CheckReport {
+    pub fn passed(&self) -> bool {
+        self.violation.is_none()
+    }
+}
+
+/// Exhaustively explore `cfg`, checking the safety invariants on every
+/// state and the terminal invariants on every terminal state.
+///
+/// Returns `Err` only when the exploration itself fails (state budget
+/// exceeded, or a livelocked model with no terminal state) — a found
+/// violation is a successful check run and comes back as
+/// `report.violation`.
+pub fn explore(cfg: &ModelConfig, max_states: usize) -> Result<CheckReport> {
+    let initial = State::initial(cfg);
+
+    let mut states: Vec<State> = vec![initial.clone()];
+    let mut index: HashMap<State, usize> = HashMap::from([(initial, 0usize)]);
+    let mut parent: Vec<Option<(usize, Action)>> = vec![None];
+    let mut depth: Vec<usize> = vec![0];
+    let mut frontier: VecDeque<usize> = VecDeque::from([0]);
+
+    let mut transitions = 0usize;
+    let mut terminals = 0usize;
+    let mut max_depth = 0usize;
+    let mut coverage = Coverage::default();
+
+    let trace_to = |parent: &[Option<(usize, Action)>], mut at: usize| {
+        let mut rev = Vec::new();
+        while let Some((p, a)) = parent[at] {
+            rev.push(a);
+            at = p;
+        }
+        rev.reverse();
+        rev
+    };
+
+    if let Some(v) = check_safety(cfg, &states[0]) {
+        return Ok(CheckReport {
+            states: 1,
+            transitions: 0,
+            terminals: 0,
+            max_depth: 0,
+            coverage,
+            violation: Some(Counterexample {
+                invariant: v,
+                trace: Vec::new(),
+                end: states[0].clone(),
+            }),
+        });
+    }
+
+    while let Some(at) = frontier.pop_front() {
+        let acts = enabled_actions(cfg, &states[at]);
+        if acts.is_empty() {
+            terminals += 1;
+            if let Some(v) = check_terminal(cfg, &states[at]) {
+                return Ok(CheckReport {
+                    states: states.len(),
+                    transitions,
+                    terminals,
+                    max_depth,
+                    coverage,
+                    violation: Some(Counterexample {
+                        invariant: v,
+                        trace: trace_to(&parent, at),
+                        end: states[at].clone(),
+                    }),
+                });
+            }
+            continue;
+        }
+        for a in acts {
+            let next = apply(cfg, &states[at], &a);
+            transitions += 1;
+            coverage.observe(cfg, &states[at], &a, &next);
+            if index.contains_key(&next) {
+                continue;
+            }
+            if states.len() >= max_states {
+                return Err(anyhow!(
+                    "state budget exceeded: >{max_states} distinct states for \
+                     {cfg:?} — nothing was proven; shrink the configuration or \
+                     raise --max-states"
+                ));
+            }
+            let id = states.len();
+            let d = depth[at] + 1;
+            max_depth = max_depth.max(d);
+            index.insert(next.clone(), id);
+            states.push(next.clone());
+            parent.push(Some((at, a)));
+            depth.push(d);
+            if let Some(v) = check_safety(cfg, &next) {
+                return Ok(CheckReport {
+                    states: states.len(),
+                    transitions,
+                    terminals,
+                    max_depth,
+                    coverage,
+                    violation: Some(Counterexample {
+                        invariant: v,
+                        trace: trace_to(&parent, id),
+                        end: next,
+                    }),
+                });
+            }
+            frontier.push_back(id);
+        }
+    }
+
+    if terminals == 0 {
+        return Err(anyhow!(
+            "exploration found no terminal state for {cfg:?} — the model \
+             livelocks; the terminal invariants were never checked"
+        ));
+    }
+
+    Ok(CheckReport {
+        states: states.len(),
+        transitions,
+        terminals,
+        max_depth,
+        coverage,
+        violation: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::protocol::Bugs;
+    use super::*;
+
+    // Debug builds (plain `cargo test`) run these, so every config here
+    // stays tiny: 2 clients x 1-2 devices explores in well under a
+    // second even unoptimized.
+
+    #[test]
+    fn base_scenario_holds_and_is_not_vacuous() {
+        let cfg = ModelConfig::new(2, 1);
+        let r = explore(&cfg, 200_000).unwrap();
+        assert!(r.passed(), "{:?}", r.violation);
+        assert!(r.terminals > 0 && r.states > 10);
+        assert!(
+            r.coverage.multi_job_batch,
+            "two jobs must batch together in some schedule"
+        );
+        assert!(
+            r.coverage.shutdown_with_backlog && r.coverage.late_submit_error,
+            "shutdown must race both a buffered and an unsent submit: {:?}",
+            r.coverage
+        );
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let cfg = ModelConfig::new(2, 2).with_rebind();
+        let a = explore(&cfg, 500_000).unwrap();
+        let b = explore(&cfg, 500_000).unwrap();
+        assert_eq!(a.states, b.states);
+        assert_eq!(a.transitions, b.transitions);
+        assert_eq!(a.terminals, b.terminals);
+        assert!(a.passed());
+        assert!(a.coverage.rebind_raced_dispatch, "{:?}", a.coverage);
+    }
+
+    #[test]
+    fn stop_flag_break_yields_a_replayable_counterexample() {
+        let bugs = Bugs { stop_flag_break: true, ..Default::default() };
+        let cfg = ModelConfig::new(2, 1).with_bugs(bugs);
+        let r = explore(&cfg, 200_000).unwrap();
+        let cx = r.violation.expect("the PR 5 bug must be found");
+        assert_eq!(cx.invariant_name(), "no-stranded-shutdown");
+        assert!(
+            cx.trace.contains(&Action::Shutdown)
+                && cx.trace.contains(&Action::StopFlagBreak),
+            "trace must schedule shutdown then the buggy break: {:?}",
+            cx.trace
+        );
+        // BFS guarantees a shortest trace.  Stranding is a *terminal*
+        // invariant and a state with a Fresh client is never terminal,
+        // so the shortest violating schedule is 4 steps: one submit
+        // buffered, shutdown, the buggy break, and the second client's
+        // late submit (answered ShutdownErr) to close the state out.
+        assert_eq!(cx.trace.len(), 4, "{}", cx.render());
+    }
+
+    #[test]
+    fn stale_rebind_bug_is_found() {
+        let bugs = Bugs { stale_rebind: true, ..Default::default() };
+        let cfg = ModelConfig::new(2, 1).with_rebind().with_bugs(bugs);
+        let r = explore(&cfg, 500_000).unwrap();
+        let cx = r.violation.expect("stale rebind must be found");
+        assert_eq!(cx.invariant_name(), "no-stale-weights");
+        assert!(cx.trace.contains(&Action::Rebind), "{}", cx.render());
+    }
+
+    #[test]
+    fn no_containment_bug_is_found() {
+        let bugs = Bugs { no_containment: true, ..Default::default() };
+        let cfg = ModelConfig::new(2, 1).with_poison().with_bugs(bugs);
+        let r = explore(&cfg, 200_000).unwrap();
+        let cx = r.violation.expect("missing containment must be found");
+        assert_eq!(cx.invariant_name(), "containment");
+    }
+
+    #[test]
+    fn poison_with_containment_passes_and_covers() {
+        let cfg = ModelConfig::new(2, 1).with_poison();
+        let r = explore(&cfg, 200_000).unwrap();
+        assert!(r.passed(), "{:?}", r.violation);
+        assert!(r.coverage.poisoned_job && r.coverage.multi_job_batch);
+    }
+
+    #[test]
+    fn deadline_and_overflow_scenarios_pass_and_cover() {
+        let r = explore(&ModelConfig::new(2, 1).with_deadline(), 200_000).unwrap();
+        assert!(r.passed(), "{:?}", r.violation);
+        assert!(r.coverage.expired_job);
+
+        let r = explore(&ModelConfig::new(2, 1).with_capacity(1), 200_000).unwrap();
+        assert!(r.passed(), "{:?}", r.violation);
+        assert!(r.coverage.queue_full_rejection);
+    }
+
+    #[test]
+    fn sharded_scenario_passes_and_covers() {
+        let cfg = ModelConfig::new(2, 2).with_sharding();
+        let r = explore(&cfg, 500_000).unwrap();
+        assert!(r.passed(), "{:?}", r.violation);
+        assert!(r.coverage.shard_reduction);
+    }
+
+    #[test]
+    fn state_budget_is_a_hard_error() {
+        let cfg = ModelConfig::new(2, 2);
+        let err = explore(&cfg, 8).unwrap_err();
+        assert!(format!("{err}").contains("state budget exceeded"));
+    }
+}

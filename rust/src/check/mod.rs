@@ -1,0 +1,28 @@
+//! Protocol checker for the coordinator: an explicit-state model of
+//! the serving protocol, an exhaustive interleaving explorer over
+//! bounded configurations, and a replay harness that drives model
+//! counterexamples against the real [`crate::coordinator::Server`]
+//! through its deterministic fault-injection hooks.
+//!
+//! * [`protocol`] — the transition system (states, actions, the five
+//!   protocol invariants, re-introducible historical bugs);
+//! * [`explore`]  — BFS over every schedule of a bounded
+//!   configuration, with shortest-counterexample traces and coverage
+//!   flags guarding against vacuous passes;
+//! * [`replay`]   — pin the real server to a counterexample schedule
+//!   via [`FaultPlan`](crate::coordinator::FaultPlan) and observe the
+//!   violation (or, on fixed code, its absence) for real.
+//!
+//! Entry point: `mlir-gemm check-protocol` (see `main.rs`), which runs
+//! the sound scenario matrix plus one replay leg, or hunts a named
+//! re-introduced bug with `--bug`.
+
+pub mod explore;
+pub mod protocol;
+pub mod replay;
+
+pub use explore::{explore, CheckReport, Counterexample};
+pub use protocol::{
+    enabled_actions, Action, Bugs, Coverage, JobState, ModelConfig, Resp, State,
+};
+pub use replay::{replay_shutdown_vs_submit, ReplayOutcome};

@@ -1,0 +1,759 @@
+//! Transition-system model of the coordinator protocol.
+//!
+//! The model mirrors the concurrency skeleton of
+//! [`crate::coordinator::server`] — not the numerics.  One `State` is a
+//! snapshot of everything the real threads share:
+//!
+//! * per-job progress (`JobState`): fresh -> buffered in the bounded
+//!   submit channel -> routed into the batcher (capturing the bind
+//!   epoch, exactly where the real dispatcher's enqueue closure calls
+//!   `route()`) -> executing on a device (or fanned out into shards)
+//!   -> answered (`Resp`);
+//! * the submit-channel FIFO and the batcher queue (job ids, in order);
+//! * one in-flight batch slot per device;
+//! * the registry bind epoch (first bind = 1, a rebind bumps it);
+//! * the shutdown/stop flags and whether the dispatcher thread is
+//!   still alive.
+//!
+//! `enabled_actions` + `apply` define the interleaving semantics; the
+//! BFS in [`crate::check::explore`] enumerates every schedule of a
+//! bounded configuration and checks the five protocol invariants:
+//!
+//! 1. **accounting** — at every terminal state,
+//!    `completed + failed + rejected == submitted`;
+//! 2. **every-submit-answered** — no response channel is ever dropped:
+//!    every submitted job reaches a `Resp`;
+//! 3. **no-stranded-shutdown** — a shutdown may fail late jobs
+//!    explicitly but can never leave one buffered forever;
+//! 4. **no-stale-weights** — a job executes under the bind epoch it was
+//!    *routed* with, even when a rebind lands in between;
+//! 5. **containment** — a job that panics mid-batch fails alone; its
+//!    batchmates still complete.
+//!
+//! [`Bugs`] re-introduces three historical/candidate defects as model
+//! variants (and, for the stop-flag one, as a real-code test hook in
+//! `FaultPlan`), so the checker demonstrably *can* find the violation
+//! and the counterexample schedule replays against the real server.
+//!
+//! Soundness of the bound: every shared structure in the real server is
+//! symmetric in job identity and device identity, and the protocol
+//! state machine is finite once job count, device count, and queue
+//! capacity are fixed.  The interesting races each need at most three
+//! concurrent parties (two jobs + one control action such as rebind or
+//! shutdown), so a 3-client x 2-device x capacity-2 bound covers every
+//! race shape the implementation can exhibit; larger configurations
+//! only replicate the same shapes with more symmetric players.
+
+/// Bounded model configuration: which scenario of the protocol to
+/// explore, and which (off-by-default) historical bugs to re-introduce.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Number of clients; each submits exactly one job (job id = client
+    /// id).
+    pub clients: u8,
+    /// Number of worker devices (one in-flight batch slot each; shard
+    /// fan-out width in `sharded` mode).
+    pub devices: u8,
+    /// Bounded submit-channel capacity (`ServerConfig::queue_capacity`).
+    pub queue_capacity: u8,
+    /// Max jobs the batcher releases into one batch.
+    pub max_batch: u8,
+    /// Jobs fan out into one shard per device with a last-finisher
+    /// reduction, instead of executing as whole batches.
+    pub sharded: bool,
+    /// Jobs route against bound weights: the bind epoch (starting at 1)
+    /// is captured at routing time and must be the one they execute
+    /// under.
+    pub bound: bool,
+    /// A one-shot concurrent rebind action exists (bumps the bind
+    /// epoch; requires `bound`).
+    pub rebind: bool,
+    /// Job 0 panics during execution (the poison job).
+    pub poison: bool,
+    /// Job 0 carries an already-expired deadline and must be answered
+    /// `Expired`, never executed.
+    pub deadline: bool,
+    /// A one-shot shutdown action exists and may interleave anywhere.
+    pub shutdown: bool,
+    /// Re-introduced defects under test.
+    pub bugs: Bugs,
+}
+
+/// Historical/candidate defects the checker must be able to catch.
+/// All off by default; each one changes the *model* semantics the same
+/// way the corresponding code change would, so a violation found here
+/// names a real schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bugs {
+    /// The PR 5 dispatcher bug: break out of the dispatch loop as soon
+    /// as the stop flag is up and the *batcher* is empty — stranding
+    /// jobs still buffered in the submit channel.  Mirrored in real
+    /// code by `FaultPlan::stop_flag_break`.
+    pub stop_flag_break: bool,
+    /// Execute under the registry's *current* weights instead of the
+    /// `Arc<BoundB>` captured at routing — stale-panel hazard when a
+    /// rebind races dispatch.
+    pub stale_rebind: bool,
+    /// No panic containment: one poisoned job takes its whole batch
+    /// down instead of being quarantined.
+    pub no_containment: bool,
+}
+
+impl ModelConfig {
+    /// Base scenario: `clients` jobs racing `devices` workers with a
+    /// concurrent shutdown, ample queue capacity, batches of up to 2.
+    pub fn new(clients: u8, devices: u8) -> Self {
+        ModelConfig {
+            clients,
+            devices: devices.max(1),
+            queue_capacity: clients.max(1),
+            max_batch: 2,
+            sharded: false,
+            bound: false,
+            rebind: false,
+            poison: false,
+            deadline: false,
+            shutdown: true,
+            bugs: Bugs::default(),
+        }
+    }
+
+    /// Weight-bound jobs plus a concurrent rebind racing dispatch.
+    pub fn with_rebind(mut self) -> Self {
+        self.bound = true;
+        self.rebind = true;
+        self
+    }
+
+    /// Job 0 panics during execution.
+    pub fn with_poison(mut self) -> Self {
+        self.poison = true;
+        self
+    }
+
+    /// Job 0 arrives with an already-expired deadline.
+    pub fn with_deadline(mut self) -> Self {
+        self.deadline = true;
+        self
+    }
+
+    /// Jobs fan out into per-device shards with a last-finisher
+    /// reduction.
+    pub fn with_sharding(mut self) -> Self {
+        self.sharded = true;
+        self
+    }
+
+    /// Shrink the submit queue to force `Rejected` responses.
+    pub fn with_capacity(mut self, cap: u8) -> Self {
+        self.queue_capacity = cap.max(1);
+        self
+    }
+
+    /// Re-introduce a set of defects.
+    pub fn with_bugs(mut self, bugs: Bugs) -> Self {
+        self.bugs = bugs;
+        self
+    }
+
+    fn poisoned(&self, job: u8) -> bool {
+        self.poison && job == 0
+    }
+
+    fn expired(&self, job: u8) -> bool {
+        self.deadline && job == 0
+    }
+}
+
+/// Terminal response of one job — the model's `GemmResponse`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Resp {
+    /// Executed; carries the epoch captured at routing and the epoch of
+    /// the weights actually used.  The no-stale-weights invariant is
+    /// `routed == exec`.
+    Completed { routed: u8, exec: u8 },
+    /// The job itself panicked and was quarantined (explicit failure).
+    Poisoned,
+    /// Failed only because a *batchmate* panicked — produced solely by
+    /// [`Bugs::no_containment`]; its existence is the containment
+    /// violation.
+    Collateral,
+    /// Deadline expired before execution (explicit failure).
+    Expired,
+    /// Bounded admission: queue at capacity (explicit rejection).
+    Rejected,
+    /// Submitted after shutdown closed the channel (explicit failure).
+    ShutdownErr,
+}
+
+/// Where one job currently is in the pipeline.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum JobState {
+    /// Client has not called submit yet.
+    Fresh,
+    /// Buffered in the bounded submit channel.
+    Queued,
+    /// Routed into the batcher; `epoch` is the bind epoch captured by
+    /// `route()` at the channel -> batcher boundary.
+    Routed { epoch: u8 },
+    /// Member of an in-flight batch on some device.
+    Executing { epoch: u8 },
+    /// Fanned out; `left` shards still running (last finisher reduces).
+    Sharding { epoch: u8, left: u8 },
+    /// Answered.
+    Done(Resp),
+}
+
+/// One interleaving step.  `Submit`/`Rebind`/`Shutdown` are client
+/// threads; `Route`/`Release`/`FanOut`/`StopFlagBreak`/`DrainExit` are
+/// the dispatcher; `ExecBatch`/`ExecShard` are workers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Action {
+    Submit { client: u8 },
+    Rebind,
+    Shutdown,
+    /// Dispatcher pops the channel head and routes it (or answers its
+    /// expired deadline).
+    Route,
+    /// Dispatcher releases the head batch (up to `max_batch` jobs) to a
+    /// free device.
+    Release { device: u8 },
+    /// Dispatcher fans the head job out into one shard per device.
+    FanOut,
+    /// A device finishes its in-flight batch.
+    ExecBatch { device: u8 },
+    /// One shard of `job` finishes; the last one reduces and replies.
+    ExecShard { job: u8 },
+    /// The re-introduced PR 5 bug: dispatcher exits on
+    /// `stop && batcher.is_empty()` with jobs still in the channel.
+    StopFlagBreak,
+    /// Clean dispatcher exit: channel closed *and* drained, batcher
+    /// flushed.
+    DrainExit,
+}
+
+impl Action {
+    /// Human-readable step for counterexample traces.
+    pub fn describe(&self) -> String {
+        match self {
+            Action::Submit { client } => format!("client {client} submits job {client}"),
+            Action::Rebind => "client rebinds the weights (epoch +1)".into(),
+            Action::Shutdown => {
+                "shutdown: stop flag raised, submit channel closed".into()
+            }
+            Action::Route => "dispatcher routes the channel-head job".into(),
+            Action::Release { device } => {
+                format!("dispatcher releases a batch to device {device}")
+            }
+            Action::FanOut => "dispatcher fans the head job out into shards".into(),
+            Action::ExecBatch { device } => {
+                format!("device {device} executes its batch")
+            }
+            Action::ExecShard { job } => {
+                format!("one shard of job {job} finishes")
+            }
+            Action::StopFlagBreak => {
+                "dispatcher takes the buggy stop-flag break (batcher empty, \
+                 channel NOT empty)"
+                    .into()
+            }
+            Action::DrainExit => "dispatcher drains and exits cleanly".into(),
+        }
+    }
+}
+
+/// Full protocol state — hashable so the explorer can dedup
+/// interleavings that converge.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct State {
+    pub jobs: Vec<JobState>,
+    /// Submit-channel FIFO (job ids).
+    pub queue: Vec<u8>,
+    /// Batcher queue (job ids, routed order).
+    pub batcher: Vec<u8>,
+    /// Per-device in-flight batch (job ids), `None` = free.
+    pub slots: Vec<Option<Vec<u8>>>,
+    pub bind_epoch: u8,
+    /// Shutdown happened: stop flag up, channel closed.
+    pub shutdown_taken: bool,
+    pub dispatcher_alive: bool,
+}
+
+impl State {
+    pub fn initial(cfg: &ModelConfig) -> State {
+        State {
+            jobs: vec![JobState::Fresh; cfg.clients as usize],
+            queue: Vec::new(),
+            batcher: Vec::new(),
+            slots: vec![None; cfg.devices as usize],
+            bind_epoch: if cfg.bound { 1 } else { 0 },
+            shutdown_taken: false,
+            dispatcher_alive: true,
+        }
+    }
+
+    /// (submitted, completed, failed, rejected) as the real metrics
+    /// would count them.
+    pub fn tally(&self) -> (u64, u64, u64, u64) {
+        let mut submitted = 0;
+        let mut completed = 0;
+        let mut failed = 0;
+        let mut rejected = 0;
+        for j in &self.jobs {
+            if !matches!(j, JobState::Fresh) {
+                submitted += 1;
+            }
+            match j {
+                JobState::Done(Resp::Completed { .. }) => completed += 1,
+                JobState::Done(Resp::Rejected) => rejected += 1,
+                JobState::Done(
+                    Resp::Poisoned | Resp::Collateral | Resp::Expired | Resp::ShutdownErr,
+                ) => failed += 1,
+                _ => {}
+            }
+        }
+        (submitted, completed, failed, rejected)
+    }
+}
+
+/// Every action enabled in `s` — the branching of the interleaving
+/// exploration.  An empty result means `s` is terminal.
+pub fn enabled_actions(cfg: &ModelConfig, s: &State) -> Vec<Action> {
+    let mut acts = Vec::new();
+    for c in 0..cfg.clients {
+        if matches!(s.jobs[c as usize], JobState::Fresh) {
+            acts.push(Action::Submit { client: c });
+        }
+    }
+    if cfg.rebind && s.bind_epoch < 2 && !s.shutdown_taken {
+        acts.push(Action::Rebind);
+    }
+    if cfg.shutdown && !s.shutdown_taken {
+        acts.push(Action::Shutdown);
+    }
+    if s.dispatcher_alive {
+        if !s.queue.is_empty() {
+            acts.push(Action::Route);
+        }
+        if !s.batcher.is_empty() {
+            if cfg.sharded {
+                acts.push(Action::FanOut);
+            } else {
+                for d in 0..cfg.devices {
+                    if s.slots[d as usize].is_none() {
+                        acts.push(Action::Release { device: d });
+                    }
+                }
+            }
+        }
+        if cfg.bugs.stop_flag_break && s.shutdown_taken && s.batcher.is_empty() {
+            acts.push(Action::StopFlagBreak);
+        }
+        if s.shutdown_taken && s.queue.is_empty() && s.batcher.is_empty() {
+            acts.push(Action::DrainExit);
+        }
+    }
+    for (d, slot) in s.slots.iter().enumerate() {
+        if slot.is_some() {
+            acts.push(Action::ExecBatch { device: d as u8 });
+        }
+    }
+    for (j, js) in s.jobs.iter().enumerate() {
+        if matches!(js, JobState::Sharding { left, .. } if *left > 0) {
+            acts.push(Action::ExecShard { job: j as u8 });
+        }
+    }
+    acts
+}
+
+/// The successor of `s` under `a`.  Panics on a non-enabled action —
+/// the explorer only feeds it results of [`enabled_actions`].
+pub fn apply(cfg: &ModelConfig, s: &State, a: &Action) -> State {
+    let mut n = s.clone();
+    match *a {
+        Action::Submit { client } => {
+            let c = client as usize;
+            n.jobs[c] = if n.shutdown_taken {
+                // try_send on the swapped-out sender: Disconnected ->
+                // explicit shutdown error, counted as failed.
+                JobState::Done(Resp::ShutdownErr)
+            } else if n.queue.len() >= cfg.queue_capacity as usize {
+                // try_send Full -> bounded-admission rejection.
+                JobState::Done(Resp::Rejected)
+            } else {
+                n.queue.push(client);
+                JobState::Queued
+            };
+        }
+        Action::Rebind => n.bind_epoch += 1,
+        Action::Shutdown => n.shutdown_taken = true,
+        Action::Route => {
+            let j = n.queue.remove(0);
+            n.jobs[j as usize] = if cfg.expired(j) {
+                // Deadline gate at the channel -> batcher boundary.
+                JobState::Done(Resp::Expired)
+            } else {
+                // route() captures the bind epoch *here* — the routed
+                // Arc<BoundB> travels with the job from this point on.
+                n.batcher.push(j);
+                JobState::Routed { epoch: n.bind_epoch }
+            };
+        }
+        Action::Release { device } => {
+            let take = (cfg.max_batch as usize).min(n.batcher.len());
+            let batch: Vec<u8> = n.batcher.drain(..take).collect();
+            for &j in &batch {
+                let JobState::Routed { epoch } = n.jobs[j as usize] else {
+                    unreachable!("batcher held a non-routed job");
+                };
+                n.jobs[j as usize] = JobState::Executing { epoch };
+            }
+            n.slots[device as usize] = Some(batch);
+        }
+        Action::FanOut => {
+            let j = n.batcher.remove(0);
+            let JobState::Routed { epoch } = n.jobs[j as usize] else {
+                unreachable!("batcher held a non-routed job");
+            };
+            n.jobs[j as usize] = JobState::Sharding { epoch, left: cfg.devices };
+        }
+        Action::ExecBatch { device } => {
+            let batch = n.slots[device as usize].take().expect("exec on a free device");
+            let any_poison = batch.iter().any(|&j| cfg.poisoned(j));
+            for &j in &batch {
+                let JobState::Executing { epoch } = n.jobs[j as usize] else {
+                    unreachable!("in-flight batch held a non-executing job");
+                };
+                n.jobs[j as usize] = JobState::Done(if cfg.poisoned(j) {
+                    // catch_unwind contains the panic; the job fails
+                    // alone with an explicit ERR_POISONED response.
+                    Resp::Poisoned
+                } else if any_poison && cfg.bugs.no_containment {
+                    // Without quarantine the whole batch dies.
+                    Resp::Collateral
+                } else {
+                    Resp::Completed {
+                        routed: epoch,
+                        exec: if cfg.bugs.stale_rebind {
+                            // Buggy variant: re-fetch weights from the
+                            // registry at execution time.
+                            n.bind_epoch
+                        } else {
+                            epoch
+                        },
+                    }
+                });
+            }
+        }
+        Action::ExecShard { job } => {
+            let j = job as usize;
+            let JobState::Sharding { epoch, left } = n.jobs[j] else {
+                unreachable!("shard exec on a non-sharding job");
+            };
+            n.jobs[j] = if left > 1 {
+                JobState::Sharding { epoch, left: left - 1 }
+            } else {
+                // Last finisher reduces the partials and replies once.
+                JobState::Done(if cfg.poisoned(job) {
+                    Resp::Poisoned
+                } else {
+                    Resp::Completed {
+                        routed: epoch,
+                        exec: if cfg.bugs.stale_rebind { n.bind_epoch } else { epoch },
+                    }
+                })
+            };
+        }
+        Action::StopFlagBreak | Action::DrainExit => n.dispatcher_alive = false,
+    }
+    n
+}
+
+/// Safety invariants, checked on *every* reachable state.  Returns the
+/// violated invariant's description, or `None`.
+pub fn check_safety(_cfg: &ModelConfig, s: &State) -> Option<String> {
+    for (j, js) in s.jobs.iter().enumerate() {
+        match js {
+            JobState::Done(Resp::Completed { routed, exec }) if routed != exec => {
+                return Some(format!(
+                    "no-stale-weights: job {j} was routed with bind epoch {routed} \
+                     but executed under epoch {exec} — a rebind between routing and \
+                     execution leaked stale prepacked panels"
+                ));
+            }
+            JobState::Done(Resp::Collateral) => {
+                return Some(format!(
+                    "containment: job {j} failed because a batchmate panicked — a \
+                     poison job must be quarantined, not take its batch down"
+                ));
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Terminal invariants, checked where no action is enabled.  Returns
+/// the violated invariant's description, or `None`.
+pub fn check_terminal(cfg: &ModelConfig, s: &State) -> Option<String> {
+    for (j, js) in s.jobs.iter().enumerate() {
+        if !matches!(js, JobState::Done(_)) {
+            return Some(if s.shutdown_taken && !s.dispatcher_alive {
+                format!(
+                    "no-stranded-shutdown: job {j} stranded in {js:?} after shutdown \
+                     — submitted, never answered, reply channel leaked"
+                )
+            } else {
+                format!(
+                    "every-submit-answered: job {j} ended in {js:?} without a \
+                     response"
+                )
+            });
+        }
+    }
+    let (submitted, completed, failed, rejected) = s.tally();
+    if submitted != cfg.clients as u64 || completed + failed + rejected != submitted {
+        return Some(format!(
+            "accounting: submitted {submitted} != completed {completed} + failed \
+             {failed} + rejected {rejected} (clients {})",
+            cfg.clients
+        ));
+    }
+    None
+}
+
+/// Which interesting situations the exploration actually visited — the
+/// vacuity guard.  A scenario that "passes" without ever filling the
+/// queue or racing a rebind proved nothing; the CLI and the tests
+/// assert the flags relevant to each scenario.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Coverage {
+    /// A batch with >= 2 jobs executed.
+    pub multi_job_batch: bool,
+    /// A batch or shard executed after a rebind had bumped the epoch
+    /// past its routed epoch — the stale-panel race window actually
+    /// opened.
+    pub rebind_raced_dispatch: bool,
+    /// Bounded admission rejected a submit.
+    pub queue_full_rejection: bool,
+    /// Shutdown fired while jobs were still buffered in the channel.
+    pub shutdown_with_backlog: bool,
+    /// A submit after shutdown got the explicit error.
+    pub late_submit_error: bool,
+    /// A deadline-expired job was answered without executing.
+    pub expired_job: bool,
+    /// A poisoned job produced its explicit quarantine failure.
+    pub poisoned_job: bool,
+    /// A sharded job completed via the last-finisher reduction.
+    pub shard_reduction: bool,
+}
+
+impl Coverage {
+    /// Fold one transition `(s, a) -> n` into the flags.
+    pub fn observe(&mut self, cfg: &ModelConfig, s: &State, a: &Action, n: &State) {
+        match *a {
+            Action::Submit { client } => {
+                match n.jobs[client as usize] {
+                    JobState::Done(Resp::Rejected) => self.queue_full_rejection = true,
+                    JobState::Done(Resp::ShutdownErr) => self.late_submit_error = true,
+                    _ => {}
+                }
+            }
+            Action::Shutdown => {
+                if !s.queue.is_empty() {
+                    self.shutdown_with_backlog = true;
+                }
+            }
+            Action::Route => {
+                if let Some(&j) = s.queue.first() {
+                    if matches!(n.jobs[j as usize], JobState::Done(Resp::Expired)) {
+                        self.expired_job = true;
+                    }
+                }
+            }
+            Action::ExecBatch { device } => {
+                if let Some(batch) = &s.slots[device as usize] {
+                    if batch.len() >= 2 {
+                        self.multi_job_batch = true;
+                    }
+                    for &j in batch {
+                        if let JobState::Executing { epoch } = s.jobs[j as usize] {
+                            if epoch < s.bind_epoch {
+                                self.rebind_raced_dispatch = true;
+                            }
+                        }
+                        if matches!(n.jobs[j as usize], JobState::Done(Resp::Poisoned))
+                        {
+                            self.poisoned_job = true;
+                        }
+                    }
+                }
+            }
+            Action::ExecShard { job } => {
+                if let JobState::Sharding { epoch, .. } = s.jobs[job as usize] {
+                    if epoch < s.bind_epoch {
+                        self.rebind_raced_dispatch = true;
+                    }
+                }
+                match n.jobs[job as usize] {
+                    JobState::Done(Resp::Completed { .. }) => {
+                        self.shard_reduction = true;
+                    }
+                    JobState::Done(Resp::Poisoned) => {
+                        self.poisoned_job = true;
+                        self.shard_reduction = true;
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+        let _ = cfg;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_matches_config() {
+        let cfg = ModelConfig::new(2, 1).with_rebind();
+        let s = State::initial(&cfg);
+        assert_eq!(s.jobs, vec![JobState::Fresh; 2]);
+        assert_eq!(s.bind_epoch, 1, "bound configs start at bind epoch 1");
+        assert!(s.dispatcher_alive && !s.shutdown_taken);
+        let unbound = State::initial(&ModelConfig::new(2, 1));
+        assert_eq!(unbound.bind_epoch, 0);
+    }
+
+    #[test]
+    fn submit_route_release_exec_answers_the_job() {
+        let cfg = ModelConfig::new(1, 1);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        assert_eq!(s1.jobs[0], JobState::Queued);
+        let s2 = apply(&cfg, &s1, &Action::Route);
+        assert_eq!(s2.jobs[0], JobState::Routed { epoch: 0 });
+        let s3 = apply(&cfg, &s2, &Action::Release { device: 0 });
+        assert_eq!(s3.jobs[0], JobState::Executing { epoch: 0 });
+        let s4 = apply(&cfg, &s3, &Action::ExecBatch { device: 0 });
+        assert_eq!(
+            s4.jobs[0],
+            JobState::Done(Resp::Completed { routed: 0, exec: 0 })
+        );
+        assert!(enabled_actions(&cfg, &s4).len() == 1, "only Shutdown remains");
+        assert!(check_terminal(&cfg, &apply(&cfg, &s4, &Action::Shutdown)).is_none());
+    }
+
+    #[test]
+    fn queue_overflow_rejects_and_late_submit_errors() {
+        let cfg = ModelConfig::new(3, 1).with_capacity(1);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        let s2 = apply(&cfg, &s1, &Action::Submit { client: 1 });
+        assert_eq!(s2.jobs[1], JobState::Done(Resp::Rejected), "capacity 1 is full");
+        let s3 = apply(&cfg, &s2, &Action::Shutdown);
+        let s4 = apply(&cfg, &s3, &Action::Submit { client: 2 });
+        assert_eq!(s4.jobs[2], JobState::Done(Resp::ShutdownErr));
+        // Job 0 still drains after shutdown: buffered items survive.
+        assert!(enabled_actions(&cfg, &s4).contains(&Action::Route));
+    }
+
+    #[test]
+    fn stale_rebind_bug_produces_the_safety_violation() {
+        let bugs = Bugs { stale_rebind: true, ..Default::default() };
+        let cfg = ModelConfig::new(1, 1).with_rebind().with_bugs(bugs);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        let s2 = apply(&cfg, &s1, &Action::Route);
+        let s3 = apply(&cfg, &s2, &Action::Rebind); // race lands here
+        let s4 = apply(&cfg, &s3, &Action::Release { device: 0 });
+        let s5 = apply(&cfg, &s4, &Action::ExecBatch { device: 0 });
+        let v = check_safety(&cfg, &s5).expect("stale exec must violate");
+        assert!(v.starts_with("no-stale-weights"), "{v}");
+        // Same schedule without the bug: routed == exec, no violation.
+        let fixed = ModelConfig::new(1, 1).with_rebind();
+        let mut s = State::initial(&fixed);
+        for a in [
+            Action::Submit { client: 0 },
+            Action::Route,
+            Action::Rebind,
+            Action::Release { device: 0 },
+            Action::ExecBatch { device: 0 },
+        ] {
+            s = apply(&fixed, &s, &a);
+        }
+        assert!(check_safety(&fixed, &s).is_none());
+        assert_eq!(
+            s.jobs[0],
+            JobState::Done(Resp::Completed { routed: 1, exec: 1 })
+        );
+    }
+
+    #[test]
+    fn poison_is_quarantined_unless_the_containment_bug_is_on() {
+        let cfg = ModelConfig::new(2, 1).with_poison();
+        let mut s = State::initial(&cfg);
+        for a in [
+            Action::Submit { client: 0 },
+            Action::Submit { client: 1 },
+            Action::Route,
+            Action::Route,
+            Action::Release { device: 0 },
+        ] {
+            s = apply(&cfg, &s, &a);
+        }
+        let done = apply(&cfg, &s, &Action::ExecBatch { device: 0 });
+        assert_eq!(done.jobs[0], JobState::Done(Resp::Poisoned));
+        assert!(matches!(
+            done.jobs[1],
+            JobState::Done(Resp::Completed { .. })
+        ));
+        assert!(check_safety(&cfg, &done).is_none());
+
+        let buggy = cfg
+            .clone()
+            .with_bugs(Bugs { no_containment: true, ..Default::default() });
+        let bad = apply(&buggy, &s, &Action::ExecBatch { device: 0 });
+        assert_eq!(bad.jobs[1], JobState::Done(Resp::Collateral));
+        let v = check_safety(&buggy, &bad).expect("collateral must violate");
+        assert!(v.starts_with("containment"), "{v}");
+    }
+
+    #[test]
+    fn stop_flag_break_strands_the_buffered_job() {
+        let bugs = Bugs { stop_flag_break: true, ..Default::default() };
+        let cfg = ModelConfig::new(1, 1).with_bugs(bugs);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        let s2 = apply(&cfg, &s1, &Action::Shutdown);
+        let acts = enabled_actions(&cfg, &s2);
+        assert!(acts.contains(&Action::StopFlagBreak), "{acts:?}");
+        let s3 = apply(&cfg, &s2, &Action::StopFlagBreak);
+        // Dispatcher dead, job 0 still queued: no action can save it.
+        let remaining = enabled_actions(&cfg, &s3);
+        assert!(remaining.is_empty(), "{remaining:?}");
+        let v = check_terminal(&cfg, &s3).expect("stranded job must violate");
+        assert!(v.starts_with("no-stranded-shutdown"), "{v}");
+    }
+
+    #[test]
+    fn shard_reduction_answers_exactly_once() {
+        let cfg = ModelConfig::new(1, 2).with_sharding();
+        let mut s = State::initial(&cfg);
+        for a in [Action::Submit { client: 0 }, Action::Route, Action::FanOut] {
+            s = apply(&cfg, &s, &a);
+        }
+        assert_eq!(s.jobs[0], JobState::Sharding { epoch: 0, left: 2 });
+        let s1 = apply(&cfg, &s, &Action::ExecShard { job: 0 });
+        assert_eq!(s1.jobs[0], JobState::Sharding { epoch: 0, left: 1 });
+        let s2 = apply(&cfg, &s1, &Action::ExecShard { job: 0 });
+        assert!(matches!(
+            s2.jobs[0],
+            JobState::Done(Resp::Completed { routed: 0, exec: 0 })
+        ));
+        assert!(!enabled_actions(&cfg, &s2)
+            .contains(&Action::ExecShard { job: 0 }));
+    }
+}

@@ -1,0 +1,214 @@
+//! Replay model counterexamples against the real coordinator.
+//!
+//! The model checker works on an abstraction; this module closes the
+//! loop by driving the *real* [`Server`](crate::coordinator::Server)
+//! through the schedule a counterexample names, using the
+//! [`FaultPlan`](crate::coordinator::FaultPlan) hooks to pin the
+//! nondeterminism the schedule depends on:
+//!
+//! * `hold_dispatch_until_shutdown` parks the dispatcher so every
+//!   submit of the schedule lands in the bounded channel first
+//!   (the model's `Submit*; Shutdown` prefix);
+//! * `stop_flag_break` re-introduces the PR 5 dispatcher bug behind
+//!   the off-by-default plan flag (the model's `StopFlagBreak` step).
+//!
+//! With the bug armed, the real server strands every held job — their
+//! reply channels die unanswered and `submitted` permanently exceeds
+//! `completed + failed + rejected`.  With the bug off, the *same*
+//! schedule drains cleanly: every job is answered and the accounting
+//! identity holds.  That pair of runs is the evidence that (a) the
+//! model's violation is real, not an artifact, and (b) the shipped
+//! code actually contains the fix.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    FaultPlan, GemmKey, GemmRequest, MetricsSnapshot, Server, ServerConfig,
+};
+use crate::runtime::{Runtime, Tensor};
+use crate::schedule::Dtype;
+use crate::sim::DeviceModel;
+use crate::util::prng::Rng;
+
+/// The one artifact the replay server loads: a 24x24x24 f32 baseline
+/// GEMM — small enough that a full replay leg is milliseconds.
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "replay24",
+      "file": "replay24.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [24, 24], "dtype": "f32"}],
+      "m": 24, "n": 24, "k": 24, "dtype_in": "f32", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const TPROG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "replay24",
+  "program": {
+    "type": "gemm", "m": 24, "n": 24, "k": 24,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+/// What one replay run of the shutdown-vs-submit schedule observed.
+#[derive(Clone, Debug)]
+pub struct ReplayOutcome {
+    /// Jobs submitted (all buffered before the dispatcher ran).
+    pub jobs: usize,
+    /// Reply channels that delivered a response (success or explicit
+    /// error).
+    pub answered: usize,
+    /// Reply channels that died without any response — the stranding
+    /// the stop-flag break causes.  Must be 0 on correct code.
+    pub lost: usize,
+    /// Server metrics after shutdown.
+    pub snapshot: MetricsSnapshot,
+}
+
+impl ReplayOutcome {
+    /// The protocol contract the checker proves: nobody stranded and
+    /// `submitted == completed + failed + rejected`.
+    pub fn accounting_holds(&self) -> bool {
+        self.lost == 0
+            && self.snapshot.completed + self.snapshot.failed + self.snapshot.rejected
+                == self.snapshot.submitted
+    }
+}
+
+/// A scratch artifact store that cleans up after itself even on panic.
+struct TempStore(PathBuf);
+
+impl TempStore {
+    fn create() -> Result<TempStore> {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "mlir_gemm_replay_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating replay store {}", dir.display()))?;
+        std::fs::write(dir.join("manifest.json"), MANIFEST)?;
+        std::fs::write(dir.join("replay24.tprog.json"), TPROG)?;
+        Ok(TempStore(dir))
+    }
+}
+
+impl Drop for TempStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Drive the real server through the model's shortest stop-flag-break
+/// counterexample (`Submit x jobs; Shutdown; StopFlagBreak`), or —
+/// with `stop_flag_break = false` — through the identical schedule on
+/// correct code.
+///
+/// The schedule is made deterministic, not probabilistic: the
+/// dispatcher is held until `shutdown()` releases it, so every submit
+/// is buffered in the channel when the stop flag goes up, exactly the
+/// state the model names.
+pub fn replay_shutdown_vs_submit(
+    jobs: usize,
+    stop_flag_break: bool,
+) -> Result<ReplayOutcome> {
+    let store = TempStore::create()?;
+    let rt = Arc::new(Runtime::open(&store.0)?);
+    let mut server = Server::start(
+        rt,
+        &DeviceModel::rtx3090(),
+        ServerConfig {
+            workers: 1,
+            queue_capacity: jobs.max(1),
+            faults: FaultPlan {
+                stop_flag_break,
+                hold_dispatch_until_shutdown: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0x5EED_CE11);
+    let mut rxs = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let a = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24))?;
+        let b = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24))?;
+        let c = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24))?;
+        rxs.push(server.submit(GemmRequest {
+            key: key.clone(),
+            a,
+            b: Some(b),
+            c,
+            bias: None,
+            use_baseline: true,
+            deadline: None,
+        }));
+    }
+
+    // The model's Shutdown step: raises the stop flag, releases the
+    // held dispatcher, closes the channel, joins every thread.  On
+    // buggy code the dispatcher wakes, sees `stop && batcher.empty()`,
+    // and exits with all `jobs` submits still buffered.
+    let snapshot = server.shutdown();
+
+    let mut answered = 0usize;
+    let mut lost = 0usize;
+    for rx in rxs {
+        // All threads are joined: each channel either already holds its
+        // response or is disconnected-empty, i.e. stranded.
+        match rx.try_recv() {
+            Ok(_) => answered += 1,
+            Err(_) => lost += 1,
+        }
+    }
+
+    Ok(ReplayOutcome { jobs, answered, lost, snapshot })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_schedule_answers_everyone() {
+        let out = replay_shutdown_vs_submit(4, false).unwrap();
+        assert_eq!(out.lost, 0, "{out:?}");
+        assert_eq!(out.answered, 4);
+        assert!(out.accounting_holds(), "{out:?}");
+        assert_eq!(out.snapshot.completed, 4, "held jobs drain through shutdown");
+    }
+
+    #[test]
+    fn buggy_schedule_strands_every_held_job() {
+        let out = replay_shutdown_vs_submit(4, true).unwrap();
+        assert_eq!(out.lost, 4, "{out:?}");
+        assert_eq!(out.answered, 0);
+        assert!(
+            !out.accounting_holds(),
+            "the stop-flag break must break the accounting identity: {out:?}"
+        );
+        assert_eq!(out.snapshot.submitted, 4);
+        assert_eq!(
+            out.snapshot.completed + out.snapshot.failed + out.snapshot.rejected,
+            0,
+            "{out:?}"
+        );
+    }
+}

@@ -60,6 +60,31 @@ impl<T> Batcher<T> {
         self.queue.is_empty()
     }
 
+    /// Remove and return every queued item whose deadline (as computed
+    /// by `deadline_of`) is at or before `now`.  The dispatcher sweeps
+    /// this between batching decisions so a job that expires *inside*
+    /// the batching window is answered `DeadlineExceeded` promptly
+    /// instead of burning a worker on stale output.  Relative order of
+    /// survivors is preserved; expired items come back in queue order.
+    pub fn take_expired<F>(&mut self, now: Instant, deadline_of: F) -> Vec<Queued<T>>
+    where
+        F: Fn(&T) -> Option<Instant>,
+    {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(item) = self.queue.pop_front() {
+            match deadline_of(&item.payload) {
+                Some(dl) if dl <= now => expired.push(item),
+                _ => rest.push_back(item),
+            }
+        }
+        self.queue = rest;
+        expired
+    }
+
     /// Form the next batch at time `now`.
     ///
     /// Policy: scan the distinct variants in queue order (the head variant
@@ -303,6 +328,41 @@ mod tests {
             other => panic!("expected Wait, got {other:?}"),
         }
         assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn take_expired_sweeps_only_past_deadline_items() {
+        // payload = optional deadline offset in ms from t0
+        let t0 = Instant::now();
+        let mut b: Batcher<Option<u64>> = Batcher::new(cfg(8, 1000));
+        let push = |b: &mut Batcher<Option<u64>>, dl: Option<u64>| {
+            b.push(Queued {
+                variant: "v1".into(),
+                enqueued_at: t0,
+                payload: dl,
+            });
+        };
+        push(&mut b, Some(5)); // expires at t0+5ms
+        push(&mut b, None); // no deadline
+        push(&mut b, Some(50)); // still live at sweep time
+        push(&mut b, Some(1)); // expires at t0+1ms
+        let now = t0 + Duration::from_millis(10);
+        let expired =
+            b.take_expired(now, |dl: &Option<u64>| dl.map(|ms| t0 + Duration::from_millis(ms)));
+        let offsets: Vec<Option<u64>> = expired.iter().map(|q| q.payload).collect();
+        assert_eq!(offsets, vec![Some(5), Some(1)], "queue order preserved");
+        assert_eq!(b.len(), 2, "survivors stay queued");
+        // survivors still batch normally
+        match b.next_batch(now + Duration::from_millis(2000)) {
+            BatchDecision::Run { batch, .. } => assert_eq!(batch.len(), 2),
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn take_expired_on_empty_queue_is_empty() {
+        let mut b: Batcher<Option<u64>> = Batcher::new(cfg(4, 10));
+        assert!(b.take_expired(Instant::now(), |_| None).is_empty());
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Deterministic fault injection for the serving coordinator.
+//!
+//! The protocol checker ([`crate::check`]) proves invariants over a
+//! *model* of the coordinator; this layer is the bridge back to the real
+//! code: a [`FaultPlan`] threaded through [`super::server::ServerConfig`]
+//! perturbs the live `Server` at explicit fault points — poison a job so
+//! its batch execution panics, slow a device, delay routing or reply
+//! delivery to widen race windows, or (behind test-only hooks) re-create
+//! historical bugs — so the model's counterexample schedules can be
+//! replayed against the production dispatcher/worker threads.
+//!
+//! Every decision is a pure function of the plan's `seed` and a stable
+//! event identity (the job id for poisoning, a per-fault-point event
+//! counter for delays), never of wall-clock time or thread scheduling:
+//! a failing stress run prints its seed and replays exactly with
+//! `MLIR_GEMM_FAULT_SEED=<seed>` (see [`seed_from_env`]).
+//!
+//! The default plan is a no-op on every path: a production server pays
+//! one branch per fault point and nothing else.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Once;
+use std::time::Duration;
+
+/// Marker prefix carried by every injected panic payload; the test-side
+/// panic-hook filter ([`silence_injected_panics`]) and log scrapers key
+/// off it.
+pub const INJECTED_PANIC_MARK: &str = "injected fault";
+
+/// Per-category salts so each fault point draws from an independent
+/// seed-derived stream.
+const POISON_TAG: u64 = 0x01;
+const SLOW_TAG: u64 = 0x02;
+const REPLY_TAG: u64 = 0x03;
+const ROUTE_TAG: u64 = 0x04;
+
+/// A deterministic schedule of injected faults for one server run.
+///
+/// `*_one_in = 0` disables that fault point entirely (the default).
+/// `*_one_in = n` fires the fault on every n-th event of that category,
+/// phase-shifted by the seed, so different seeds pick different victims
+/// while any one seed replays bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Root of every per-category decision stream.
+    pub seed: u64,
+    /// Poison one job in `n` (keyed by job id): executing any batch that
+    /// contains a poisoned job panics, exercising the server's panic
+    /// containment and per-item quarantine.
+    pub poison_one_in: u32,
+    /// Slow device: stall one batch execution in `n` by `slow_exec`.
+    pub slow_exec_one_in: u32,
+    pub slow_exec: Duration,
+    /// Delayed channel delivery: stall one response send in `n`.
+    pub delay_reply_one_in: u32,
+    pub delay_reply: Duration,
+    /// Stall one routing decision in `n` *after* the job captured its
+    /// plan and bound weights — the window in which a concurrent rebind
+    /// lands, exercising the routed-Arc capture contract.
+    pub delay_route_one_in: u32,
+    pub delay_route: Duration,
+    /// TEST HOOK: re-introduce the PR 5 shutdown bug — the dispatcher
+    /// breaks as soon as the stop flag is up and the batcher is empty,
+    /// stranding jobs still buffered in the submit channel (their reply
+    /// channels drop without a response).  Exists so the protocol
+    /// checker's counterexample for that bug replays against the real
+    /// server; never set outside tests/`check-protocol --bug`.
+    pub stop_flag_break: bool,
+    /// TEST HOOK: park the dispatcher until `Server::shutdown` runs, so
+    /// a replay can force the "everything submitted before the
+    /// dispatcher moves" schedule deterministically (the schedule the
+    /// model checker's stop-flag counterexample needs).
+    pub hold_dispatch_until_shutdown: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            poison_one_in: 0,
+            slow_exec_one_in: 0,
+            slow_exec: Duration::ZERO,
+            delay_reply_one_in: 0,
+            delay_reply: Duration::ZERO,
+            delay_route_one_in: 0,
+            delay_route: Duration::ZERO,
+            stop_flag_break: false,
+            hold_dispatch_until_shutdown: false,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when every fault point is disabled (the production default).
+    pub fn is_noop(&self) -> bool {
+        self.poison_one_in == 0
+            && self.slow_exec_one_in == 0
+            && self.delay_reply_one_in == 0
+            && self.delay_route_one_in == 0
+            && !self.stop_flag_break
+            && !self.hold_dispatch_until_shutdown
+    }
+
+    /// Whether this plan poisons the job with the given id.  Pure in
+    /// (seed, id): tests compute the expected poison set up front and
+    /// assert the server quarantined exactly those jobs.
+    pub fn poisons(&self, job_id: u64) -> bool {
+        hits(self.poison_one_in, phase(self.seed, POISON_TAG), job_id)
+    }
+}
+
+/// The fault seed for this process: `MLIR_GEMM_FAULT_SEED` when set (a
+/// decimal or `0x`-prefixed integer), else `default`.  Stress tests
+/// print the seed they resolved so a failure replays exactly.
+pub fn seed_from_env(default: u64) -> u64 {
+    match std::env::var("MLIR_GEMM_FAULT_SEED") {
+        Ok(v) => {
+            let v = v.trim();
+            let parsed = if let Some(hex) = v.strip_prefix("0x") {
+                u64::from_str_radix(hex, 16).ok()
+            } else {
+                v.parse::<u64>().ok()
+            };
+            parsed.unwrap_or(default)
+        }
+        Err(_) => default,
+    }
+}
+
+/// SplitMix64 step — the same expansion the repo's PRNG uses for seeds.
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Per-category phase shift: which residue class of events fires.
+fn phase(seed: u64, tag: u64) -> u64 {
+    splitmix(seed ^ tag.wrapping_mul(0xA5A5_A5A5_A5A5_A5A5))
+}
+
+/// Event `n` fires iff the (phase-shifted) counter lands on the residue.
+fn hits(one_in: u32, phase: u64, n: u64) -> bool {
+    one_in > 0 && n.wrapping_add(phase) % u64::from(one_in) == 0
+}
+
+/// Live injection state for one server: the plan plus per-fault-point
+/// event counters and the two test-hook latches.  Shared by the
+/// dispatcher and every worker via `Arc`.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    slow_ctr: AtomicU64,
+    reply_ctr: AtomicU64,
+    route_ctr: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_delays: AtomicU64,
+    /// Raised by `Server::shutdown` before the submit channel closes.
+    /// Inert unless `plan.stop_flag_break` re-arms the PR 5 break.
+    stop: AtomicBool,
+    /// Parks the dispatcher while true (hold-until-shutdown hook).
+    hold: AtomicBool,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        let hold = plan.hold_dispatch_until_shutdown;
+        FaultState {
+            plan,
+            slow_ctr: AtomicU64::new(0),
+            reply_ctr: AtomicU64::new(0),
+            route_ctr: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            hold: AtomicBool::new(hold),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Panic if any of `ids` is poisoned — called from inside the
+    /// contained batch-execution closure, so the panic models a crash in
+    /// the executor itself and takes the same unwinding path a real
+    /// kernel bug would.
+    pub fn poison_gate(&self, ids: &[u64]) {
+        for &id in ids {
+            if self.plan.poisons(id) {
+                self.injected_panics.fetch_add(1, Ordering::Relaxed);
+                panic!(
+                    "{INJECTED_PANIC_MARK}: poison job {id} (seed {:#x})",
+                    self.plan.seed
+                );
+            }
+        }
+    }
+
+    /// Slow-device fault point: one batch execution in `n` stalls.
+    pub fn slow_exec(&self) {
+        let n = self.slow_ctr.fetch_add(1, Ordering::Relaxed);
+        if hits(self.plan.slow_exec_one_in, phase(self.plan.seed, SLOW_TAG), n) {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.slow_exec);
+        }
+    }
+
+    /// Delayed-delivery fault point: one response send in `n` stalls.
+    pub fn delay_reply(&self) {
+        let n = self.reply_ctr.fetch_add(1, Ordering::Relaxed);
+        if hits(self.plan.delay_reply_one_in, phase(self.plan.seed, REPLY_TAG), n) {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.delay_reply);
+        }
+    }
+
+    /// Routing-window fault point: one routed job in `n` lingers between
+    /// capturing its plan/weights and entering the batcher.
+    pub fn delay_route(&self) {
+        let n = self.route_ctr.fetch_add(1, Ordering::Relaxed);
+        if hits(self.plan.delay_route_one_in, phase(self.plan.seed, ROUTE_TAG), n) {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.delay_route);
+        }
+    }
+
+    /// Injected panics so far — tests assert the schedule actually fired
+    /// (a green run that injected nothing proves nothing).
+    pub fn injected_panics(&self) -> u64 {
+        self.injected_panics.load(Ordering::Relaxed)
+    }
+
+    /// Injected delays so far (slow-exec + delayed replies + routing
+    /// stalls).
+    pub fn injected_delays(&self) -> u64 {
+        self.injected_delays.load(Ordering::Relaxed)
+    }
+
+    /// `Server::shutdown` raises the stop flag before closing the submit
+    /// channel — the exact ordering under which PR 5's break stranded
+    /// buffered jobs — and releases a held dispatcher.
+    pub fn on_shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.hold.store(false, Ordering::Release);
+    }
+
+    /// True when the stop-flag-break hook is armed *and* the stop flag
+    /// is up: the dispatcher re-creates the PR 5 early break.
+    pub fn stop_flag_break_armed(&self) -> bool {
+        self.plan.stop_flag_break && self.stop.load(Ordering::Acquire)
+    }
+
+    /// Park the calling thread while the dispatch hold is engaged.
+    pub fn wait_dispatch_released(&self) {
+        while self.hold.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+static SILENCE: Once = Once::new();
+
+/// Install a process-wide panic-hook filter that swallows the default
+/// "thread panicked" report for *injected* panics (they are expected and
+/// caught) while delegating every real panic to the previous hook.
+/// Idempotent; fault-injection tests call it first thing.
+pub fn silence_injected_panics() {
+    SILENCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED_PANIC_MARK))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains(INJECTED_PANIC_MARK))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_noop());
+        assert!((0..100).all(|id| !plan.poisons(id)));
+        let st = FaultState::new(plan);
+        st.slow_exec();
+        st.delay_reply();
+        st.delay_route();
+        st.poison_gate(&[0, 1, 2]);
+        assert_eq!(st.injected_panics(), 0);
+        assert_eq!(st.injected_delays(), 0);
+    }
+
+    #[test]
+    fn poison_set_is_deterministic_and_seed_dependent() {
+        let plan_a = FaultPlan { seed: 1, poison_one_in: 4, ..FaultPlan::default() };
+        let plan_b = FaultPlan { seed: 1, poison_one_in: 4, ..FaultPlan::default() };
+        let set = |p: &FaultPlan| (0..64).filter(|&i| p.poisons(i)).collect::<Vec<u64>>();
+        assert_eq!(set(&plan_a), set(&plan_b));
+        // one in four jobs, exactly
+        assert_eq!(set(&plan_a).len(), 16);
+        // consecutive poisoned ids are 4 apart (residue class)
+        assert!(set(&plan_a).windows(2).all(|w| w[1] - w[0] == 4));
+        // a different seed picks a different residue at least sometimes
+        let shifted = (2..64u64)
+            .map(|s| FaultPlan { seed: s, poison_one_in: 4, ..FaultPlan::default() })
+            .any(|p| set(&p) != set(&plan_a));
+        assert!(shifted, "every seed chose the same victims");
+    }
+
+    #[test]
+    fn poison_gate_panics_only_for_poisoned_ids() {
+        silence_injected_panics();
+        let plan = FaultPlan { seed: 7, poison_one_in: 3, ..FaultPlan::default() };
+        let victim = (0..16).find(|&i| plan.poisons(i)).unwrap();
+        let clean: Vec<u64> = (0..16).filter(|&i| !plan.poisons(i)).collect();
+        let st = FaultState::new(plan);
+        st.poison_gate(&clean);
+        assert_eq!(st.injected_panics(), 0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            st.poison_gate(&[victim]);
+        }));
+        assert!(caught.is_err(), "poisoned id must panic");
+        assert_eq!(st.injected_panics(), 1);
+    }
+
+    #[test]
+    fn counters_fire_one_in_n() {
+        let plan = FaultPlan {
+            seed: 3,
+            slow_exec_one_in: 4,
+            slow_exec: Duration::ZERO,
+            ..FaultPlan::default()
+        };
+        let st = FaultState::new(plan);
+        for _ in 0..16 {
+            st.slow_exec();
+        }
+        assert_eq!(st.injected_delays(), 4);
+    }
+
+    #[test]
+    fn stop_flag_arms_only_with_the_hook() {
+        let st = FaultState::new(FaultPlan::default());
+        st.on_shutdown();
+        assert!(!st.stop_flag_break_armed(), "hook off: flag is inert");
+        let st = FaultState::new(FaultPlan {
+            stop_flag_break: true,
+            ..FaultPlan::default()
+        });
+        assert!(!st.stop_flag_break_armed(), "not raised yet");
+        st.on_shutdown();
+        assert!(st.stop_flag_break_armed());
+    }
+
+    #[test]
+    fn hold_engages_and_releases() {
+        let st = FaultState::new(FaultPlan {
+            hold_dispatch_until_shutdown: true,
+            ..FaultPlan::default()
+        });
+        assert!(st.hold.load(Ordering::Acquire));
+        st.on_shutdown();
+        // released: wait returns immediately
+        st.wait_dispatch_released();
+    }
+
+    #[test]
+    fn seed_env_parses_decimal_and_hex() {
+        // Only meaningful when the replay override is not in use.
+        if std::env::var("MLIR_GEMM_FAULT_SEED").is_err() {
+            assert_eq!(seed_from_env(42), 42);
+        }
+    }
+}

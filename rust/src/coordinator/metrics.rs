@@ -68,11 +68,21 @@ struct Inner {
     submitted: u64,
     completed: u64,
     failed: u64,
+    /// Submissions refused at admission (bounded queue full).  Disjoint
+    /// from `failed`: the accounting invariant is
+    /// `submitted == completed + failed + rejected`.
+    rejected: u64,
+    /// Jobs answered `DeadlineExceeded` before execution.  A subset of
+    /// `failed` (every expiry also counts as a failure).
+    deadline_expired: u64,
     batches: u64,
     batch_sizes: Reservoir,
     latencies_sec: Reservoir,
     queue_waits_sec: Reservoir,
     exec_sec: Reservoir,
+    /// Queue wait accumulated by jobs whose deadline expired while they
+    /// sat queued — attribution for *why* deadlines blew.
+    expired_wait_sec: Reservoir,
     per_variant: BTreeMap<String, u64>,
     per_device: BTreeMap<usize, DeviceLoad>,
     /// GEMM work keyed by the execution plan that ran it.
@@ -87,11 +97,14 @@ impl Default for Inner {
             submitted: 0,
             completed: 0,
             failed: 0,
+            rejected: 0,
+            deadline_expired: 0,
             batches: 0,
             batch_sizes: Reservoir::new(RESERVOIR_CAPACITY, 0xB47C),
             latencies_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x1A7E),
             queue_waits_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x9A17),
             exec_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xE7EC),
+            expired_wait_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xDEAD),
             per_variant: BTreeMap::new(),
             per_device: BTreeMap::new(),
             per_plan: BTreeMap::new(),
@@ -110,11 +123,18 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Admission rejections (queue full); `submitted == completed +
+    /// failed + rejected` once the server drains.
+    pub rejected: u64,
+    /// Deadline-expired responses (subset of `failed`).
+    pub deadline_expired: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub latency: Option<Summary>,
     pub queue_wait: Option<Summary>,
     pub exec: Option<Summary>,
+    /// Queue wait of deadline-expired jobs.
+    pub expired_wait: Option<Summary>,
     pub per_variant: BTreeMap<String, u64>,
     pub per_device: BTreeMap<usize, DeviceLoad>,
     pub per_plan: BTreeMap<String, PlanLoad>,
@@ -153,6 +173,24 @@ impl Metrics {
 
     pub fn on_fail(&self) {
         self.inner.lock().unwrap().failed += 1;
+    }
+
+    /// Submission refused at admission: the bounded submit queue was
+    /// full.  Rejections are their own accounting bucket, never blended
+    /// into `failed` — the invariant becomes
+    /// `submitted == completed + failed + rejected`.
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// A job's deadline passed while it was queued; it was answered
+    /// `DeadlineExceeded` without executing.  Counts as a failure (the
+    /// client got an error) and attributes the queue wait it burned.
+    pub fn on_deadline_expired(&self, queue_wait_sec: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.failed += 1;
+        g.deadline_expired += 1;
+        g.expired_wait_sec.push(queue_wait_sec);
     }
 
     /// Make a compiled plan visible in the report even before (or
@@ -217,11 +255,14 @@ impl Metrics {
             submitted: g.submitted,
             completed: g.completed,
             failed: g.failed,
+            rejected: g.rejected,
+            deadline_expired: g.deadline_expired,
             batches: g.batches,
             mean_batch_size: g.batch_sizes.mean(),
             latency: g.latencies_sec.summary(),
             queue_wait: g.queue_waits_sec.summary(),
             exec: g.exec_sec.summary(),
+            expired_wait: g.expired_wait_sec.summary(),
             per_variant: g.per_variant.clone(),
             per_device: g.per_device.clone(),
             per_plan: g.per_plan.clone(),
@@ -234,9 +275,20 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests: {} submitted, {} completed, {} failed\n",
-            self.submitted, self.completed, self.failed
+            "requests: {} submitted, {} completed, {} failed, {} rejected\n",
+            self.submitted, self.completed, self.failed, self.rejected
         ));
+        if self.deadline_expired > 0 {
+            if let Some(w) = &self.expired_wait {
+                out.push_str(&format!(
+                    "deadline expired: {} (queue wait p50 {:.3} ms)\n",
+                    self.deadline_expired,
+                    w.p50 * 1e3
+                ));
+            } else {
+                out.push_str(&format!("deadline expired: {}\n", self.deadline_expired));
+            }
+        }
         out.push_str(&format!(
             "batches: {} (mean size {:.2})\n",
             self.batches, self.mean_batch_size
@@ -327,6 +379,52 @@ mod tests {
         assert_eq!(s.per_variant["v1"], 2);
         let l = s.latency.unwrap();
         assert!((l.mean - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejections_are_disjoint_from_failures() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.on_submit();
+        }
+        m.on_complete("v", 0.01, 0.0, 0.01);
+        m.on_fail();
+        m.on_reject();
+        m.on_reject();
+        m.on_reject();
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.completed + s.failed + s.rejected, s.submitted);
+        assert!(
+            s.report().contains("5 submitted, 1 completed, 1 failed, 3 rejected"),
+            "{}",
+            s.report()
+        );
+    }
+
+    #[test]
+    fn deadline_expiry_counts_as_failure_and_attributes_wait() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_deadline_expired(0.004);
+        m.on_deadline_expired(0.008);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_expired, 2);
+        assert_eq!(s.failed, 2, "every expiry is also a failure");
+        let w = s.expired_wait.unwrap();
+        assert!((w.mean - 0.006).abs() < 1e-12);
+        let report = s.report();
+        assert!(report.contains("deadline expired: 2"), "{report}");
+    }
+
+    #[test]
+    fn report_omits_deadline_line_when_none_expired() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete("v", 0.01, 0.0, 0.01);
+        assert!(!m.snapshot().report().contains("deadline expired"));
     }
 
     #[test]

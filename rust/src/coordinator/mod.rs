@@ -5,18 +5,25 @@
 //! * `batcher`  — dynamic same-variant batching (pure state machine);
 //! * `sharding` — shard planner + multi-device execution pool;
 //! * `server`   — dispatcher + per-device worker queues over the runtime;
-//! * `metrics`  — request/latency/per-device accounting.
+//! * `metrics`  — request/latency/per-device accounting;
+//! * `faults`   — deterministic fault-injection plan threaded through the
+//!   server so model-checker counterexamples replay against real code.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod registry;
 pub mod server;
 pub mod sharding;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+pub use faults::{seed_from_env, silence_injected_panics, FaultPlan, FaultState};
 pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot, PlanLoad};
 pub use registry::{GemmKey, Registry, RegistryEntry};
-pub use server::{GemmRequest, GemmResponse, ProgramRequest, Server, ServerConfig};
+pub use server::{
+    GemmRequest, GemmResponse, ProgramRequest, Server, ServerConfig, ERR_DEADLINE,
+    ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
+};
 pub use sharding::{
     modeled_speedup, modeled_times, plan_for, ShardConfig, ShardPlan, ShardPool,
     ShardStrategy, SplitDim,

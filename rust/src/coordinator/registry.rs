@@ -44,8 +44,12 @@ pub struct Registry {
     /// prepacked once, shared immutably with every in-flight request
     /// that routed after the bind.  Interior mutability so binding works
     /// through the server's `Arc<Registry>`; a rebind swaps the `Arc`,
-    /// so newly routed requests can never see the old panels.
-    bound: Mutex<HashMap<GemmKey, Arc<BoundB>>>,
+    /// so newly routed requests can never see the old panels.  Each
+    /// slot carries a monotonically increasing *bind epoch* (first bind
+    /// = 1) captured at routing time and echoed on responses — the
+    /// observable that lets the protocol checker's "no stale panels
+    /// across a rebind" invariant be asserted end-to-end.
+    bound: Mutex<HashMap<GemmKey, BoundSlot>>,
     /// Graph-level plans for composite artifacts, keyed by artifact name
     /// (composite programs have no `GemmKey`; the manifest entry alone
     /// cannot recompile them, so the server caches the load-time plan
@@ -53,6 +57,15 @@ pub struct Registry {
     /// `bound`: caching happens through the server's `Arc<Registry>`.
     program_plans: Mutex<HashMap<String, Arc<ProgramPlan>>>,
     plan_env: PlanEnv,
+}
+
+/// One key's bound-weight slot: the current weights (None after an
+/// unbind) and the bind epoch, which survives unbinds so it never
+/// repeats across the key's lifetime.
+#[derive(Debug, Default)]
+struct BoundSlot {
+    epoch: u64,
+    weights: Option<Arc<BoundB>>,
 }
 
 impl Registry {
@@ -224,20 +237,51 @@ impl Registry {
         };
         let program = program_for(key)?;
         let bound = Arc::new(program.bind_b(b, &eplan)?);
-        self.bound.lock().unwrap().insert(key.clone(), bound.clone());
+        let mut g = self.bound.lock().unwrap();
+        let slot = g.entry(key.clone()).or_default();
+        slot.epoch += 1;
+        slot.weights = Some(bound.clone());
+        drop(g);
         Ok(bound)
     }
 
     /// The currently bound weights for a key (None after `unbind_weights`
     /// or when nothing was ever bound).
     pub fn bound_weights(&self, key: &GemmKey) -> Option<Arc<BoundB>> {
-        self.bound.lock().unwrap().get(key).cloned()
+        self.bound.lock().unwrap().get(key).and_then(|s| s.weights.clone())
+    }
+
+    /// The bound weights *and* their bind epoch, read atomically under
+    /// one lock acquisition.  The server captures this pair at routing
+    /// time: because `bind_weights` publishes (epoch, Arc) together
+    /// under the same mutex, any bind that completed before a route
+    /// is visible to it with its own epoch — a route can never pair an
+    /// old epoch with new panels or vice versa.
+    pub fn bound_weights_versioned(&self, key: &GemmKey) -> Option<(u64, Arc<BoundB>)> {
+        self.bound
+            .lock()
+            .unwrap()
+            .get(key)
+            .and_then(|s| s.weights.clone().map(|w| (s.epoch, w)))
+    }
+
+    /// The key's current bind epoch: 0 if never bound, otherwise the
+    /// count of `bind_weights` calls ever made for it (unbinds do not
+    /// reset it).
+    pub fn bound_epoch(&self, key: &GemmKey) -> u64 {
+        self.bound.lock().unwrap().get(key).map(|s| s.epoch).unwrap_or(0)
     }
 
     /// Drop a key's bound weights.  Returns whether anything was bound;
     /// weight-bound requests for the key fail explicitly afterwards.
+    /// The slot's epoch is preserved so a later rebind keeps counting up.
     pub fn unbind_weights(&self, key: &GemmKey) -> bool {
-        self.bound.lock().unwrap().remove(key).is_some()
+        self.bound
+            .lock()
+            .unwrap()
+            .get_mut(key)
+            .map(|s| s.weights.take().is_some())
+            .unwrap_or(false)
     }
 
     /// Cache a composite artifact's compiled graph plan under its name.
@@ -476,6 +520,30 @@ mod tests {
         let small = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
         let bs = reg.bind_weights(&small, &Tensor::zeros(vec![24, 24])).unwrap();
         assert!(!bs.is_prepacked(), "direct plans bind cast-only weights");
+    }
+
+    #[test]
+    fn bind_epochs_count_monotonically_across_unbinds() {
+        let reg = Registry::with_env(PlanEnv::pinned());
+        let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+        assert_eq!(reg.bound_epoch(&key), 0, "never bound");
+        assert!(reg.bound_weights_versioned(&key).is_none());
+        let b = Tensor::zeros(vec![24, 24]);
+        let first = reg.bind_weights(&key, &b).unwrap();
+        let (e1, w1) = reg.bound_weights_versioned(&key).unwrap();
+        assert_eq!(e1, 1, "first bind opens epoch 1");
+        assert!(Arc::ptr_eq(&w1, &first));
+        let second = reg.bind_weights(&key, &b).unwrap();
+        let (e2, w2) = reg.bound_weights_versioned(&key).unwrap();
+        assert_eq!(e2, 2, "rebind bumps the epoch");
+        assert!(Arc::ptr_eq(&w2, &second));
+        assert!(!Arc::ptr_eq(&w2, &first));
+        // unbind clears weights but not the epoch counter
+        assert!(reg.unbind_weights(&key));
+        assert!(reg.bound_weights_versioned(&key).is_none());
+        assert_eq!(reg.bound_epoch(&key), 2);
+        reg.bind_weights(&key, &b).unwrap();
+        assert_eq!(reg.bound_epoch(&key), 3, "epoch never repeats");
     }
 
     #[test]

@@ -12,8 +12,9 @@
 //! channels.  This is the paper's missing run-time half: it generated
 //! kernels, we also serve them — across a pool of devices.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -28,9 +29,22 @@ use crate::runtime::{
 use crate::sim::DeviceModel;
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+use super::faults::{FaultPlan, FaultState};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{GemmKey, Registry};
 use super::sharding::{self, ShardConfig, ShardPlan};
+
+/// Stable error-class prefixes.  The vendored `anyhow` shim carries no
+/// typed downcast, so error classes are part of the message contract:
+/// clients and tests match on these prefixes (`msg.contains(...)`), and
+/// changing one is a breaking API change.
+pub const ERR_QUEUE_FULL: &str = "queue full";
+/// See [`ERR_QUEUE_FULL`].
+pub const ERR_DEADLINE: &str = "deadline exceeded";
+/// See [`ERR_QUEUE_FULL`].
+pub const ERR_POISONED: &str = "poisoned job";
+/// See [`ERR_QUEUE_FULL`].
+pub const ERR_SHUTDOWN: &str = "server is shut down";
 
 /// Routing-name suffix for weight-bound jobs: bound and inline requests
 /// for one variant batch separately (their executable input forms
@@ -56,6 +70,13 @@ pub struct GemmRequest {
     pub bias: Option<Tensor>,
     /// Route to the library baseline instead of the generated kernel.
     pub use_baseline: bool,
+    /// Optional latency budget.  A job whose deadline passes while it is
+    /// still queued (in the submit channel, the batcher, or a device
+    /// queue) is answered with an explicit [`ERR_DEADLINE`] error before
+    /// execution — stale output is never silently computed.  A deadline
+    /// that expires *during* execution does not abort the kernel; the
+    /// check gates execution start only.
+    pub deadline: Option<Instant>,
 }
 
 /// A composite-program request (`ProgramPlan`-driven serving): run a
@@ -77,6 +98,37 @@ pub struct GemmResponse {
     pub queue_wait: Duration,
     pub exec_time: Duration,
     pub total_latency: Duration,
+    /// For weight-bound jobs: the registry bind epoch of the `BoundB`
+    /// this job was routed with *and executed under* (first bind = 1).
+    /// `None` for inline and failed-before-routing jobs.  This makes the
+    /// rebind contract observable end-to-end: a response produced from
+    /// weights bound before the client's last completed `bind_weights`
+    /// call would carry a stale (smaller) epoch.
+    pub bound_epoch: Option<u64>,
+}
+
+impl GemmResponse {
+    /// An error response with zero exec time — the shape every
+    /// pre-execution failure (routing, validation, rejection, expiry)
+    /// takes.  Callers that failed *during* execution override
+    /// `exec_time` via struct update.
+    fn failure(
+        id: u64,
+        variant: &str,
+        err: anyhow::Error,
+        submitted_at: Instant,
+        queue_wait: Duration,
+    ) -> GemmResponse {
+        GemmResponse {
+            id,
+            output: Err(err),
+            variant: variant.to_string(),
+            queue_wait,
+            exec_time: Duration::ZERO,
+            total_latency: submitted_at.elapsed(),
+            bound_epoch: None,
+        }
+    }
 }
 
 /// What a job asks the pool to run: a routed GEMM or a whole composite
@@ -101,6 +153,13 @@ struct Job {
     /// at routing time — a rebind after routing never swaps a job's
     /// operand mid-flight.
     bound: Option<Arc<BoundB>>,
+    /// The registry bind epoch of `bound`, captured in the same registry
+    /// lock acquisition — echoed on the response so the capture contract
+    /// is checkable from outside.
+    bound_epoch: Option<u64>,
+    /// The request's latency budget (GEMM jobs only), checked at every
+    /// queue boundary before execution.
+    deadline: Option<Instant>,
 }
 
 #[derive(Debug, Clone)]
@@ -127,6 +186,16 @@ pub struct ServerConfig {
     /// ULP-tolerance contract instead of bitwise identity (see
     /// docs/PLAN_SCHEMA.md and DESIGN.md §10).
     pub plan: PlanOverride,
+    /// Bounded admission: at most this many jobs buffer in the submit
+    /// channel.  `submit` never blocks — when the queue is full the
+    /// request is rejected immediately with an explicit
+    /// [`ERR_QUEUE_FULL`] response and counted in
+    /// `MetricsSnapshot::rejected` (the accounting invariant is
+    /// `submitted == completed + failed + rejected`).  Clamped to ≥ 1.
+    pub queue_capacity: usize,
+    /// Deterministic fault-injection schedule (see [`super::faults`]).
+    /// The default injects nothing.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServerConfig {
@@ -138,6 +207,8 @@ impl Default for ServerConfig {
             shard: ShardConfig::default(),
             rerank_measured: false,
             plan: PlanOverride::Auto,
+            queue_capacity: 1024,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -193,6 +264,9 @@ struct ShardedJob {
     /// Pack-cache outcome of this request, recorded once on completion:
     /// (hits, misses, payload bytes saved).
     pack: (u64, u64, f64),
+    /// Bind epoch of the routed weights (weight-bound requests only),
+    /// echoed on the response by the last finisher.
+    bound_epoch: Option<u64>,
     submitted_at: Instant,
     /// Set by the first worker to start a shard: splits queue wait from
     /// execution time the same way the batch path does.
@@ -209,10 +283,12 @@ struct ShardedJob {
 }
 
 pub struct Server {
-    submit_tx: Sender<Job>,
+    submit_tx: SyncSender<Job>,
+    queue_capacity: usize,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
     registry: Arc<Registry>,
+    faults: Arc<FaultState>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -240,12 +316,17 @@ impl Server {
     ) -> Server {
         let plan_env = Arc::new(cfg.plan_env());
         let metrics = Arc::new(Metrics::new());
+        let faults = Arc::new(FaultState::new(cfg.faults.clone()));
         // Preseed the report with every registry-compiled plan so an idle
         // key is still visible.
         for (_key, p) in registry.plans() {
             metrics.on_plan_seen(&p.id(), &p.isa_label());
         }
-        let (submit_tx, submit_rx) = mpsc::channel::<Job>();
+        // Bounded admission: submit() uses try_send, so a full buffer is
+        // an immediate, explicit rejection — never unbounded memory and
+        // never a blocked client thread.
+        let queue_capacity = cfg.queue_capacity.max(1);
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<Job>(queue_capacity);
 
         // Per-device work queues; worker threads spread across them so
         // every device context has at least one executor.
@@ -265,6 +346,7 @@ impl Server {
                 let rx = rx.clone();
                 let m = metrics.clone();
                 let worker_env = plan_env.clone();
+                let flt = faults.clone();
                 workers.push(std::thread::spawn(move || loop {
                     let msg = {
                         let guard = rx.lock().unwrap();
@@ -273,7 +355,7 @@ impl Server {
                     let Ok(item) = msg else { break };
                     match item {
                         WorkItem::Batch { variant, batch } => {
-                            run_batch(&rt, &m, &worker_env, dev, &variant, batch);
+                            run_batch(&rt, &m, &worker_env, &flt, dev, &variant, batch);
                         }
                         WorkItem::Shard(task) => {
                             let started = Instant::now();
@@ -284,12 +366,31 @@ impl Server {
                                     *g = Some(started);
                                 }
                             }
-                            let result = sharding::execute_shard(
-                                &task.program,
-                                &task.eplan,
-                                &task.inputs,
-                                task.bound.as_deref(),
-                            );
+                            // Shard execution is contained the same way
+                            // batches are: a panic (injected poison or a
+                            // real kernel bug) becomes an explicit Err for
+                            // this shard, the last-finisher reduction turns
+                            // it into an error response, and the worker
+                            // thread survives to serve the next item.
+                            let result = catch_unwind(AssertUnwindSafe(|| {
+                                flt.slow_exec();
+                                flt.poison_gate(&[task.job.id]);
+                                sharding::execute_shard(
+                                    &task.program,
+                                    &task.eplan,
+                                    &task.inputs,
+                                    task.bound.as_deref(),
+                                )
+                            }))
+                            .unwrap_or_else(|_| {
+                                Err(anyhow!(
+                                    "{ERR_POISONED}: shard {} of request {} \
+                                     panicked during execution; shard failed, \
+                                     worker recovered",
+                                    task.shard_idx,
+                                    task.job.id
+                                ))
+                            });
                             let busy = started.elapsed().as_secs_f64();
                             m.on_device_task(dev, busy);
                             // Per-shard plan attribution: true executor
@@ -323,18 +424,63 @@ impl Server {
         let env = plan_env.clone();
         let batcher_cfg = cfg.batcher.clone();
         let shard_cfg = cfg.shard.clone();
+        let flt = faults.clone();
         let dispatcher = std::thread::spawn(move || {
+            // Hold-until-shutdown hook: fault replays park the dispatcher
+            // here so every submit of a schedule lands in the channel
+            // before routing starts.  No-op unless the plan engages it.
+            flt.wait_dispatch_released();
             let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
             let mut poll = Duration::from_millis(1);
             let mut rr = 0usize;
             'main: loop {
+                // No stop-flag break in this loop: the dispatcher exits
+                // only on Disconnected below.  Shutdown signals by
+                // dropping the submit sender, and the channel hands over
+                // every already-buffered job before reporting
+                // Disconnected — so a submit that raced the shutdown can
+                // never be dropped without a response (a stop-flag break
+                // could strand buffered jobs and leak their reply
+                // channels; pinned by the server stress test).
+                //
+                // TEST HOOK (FaultPlan::stop_flag_break): the protocol
+                // checker proves that exact break is a bug by
+                // re-introducing it here, behind an off-by-default plan
+                // flag, and replaying the model's counterexample schedule
+                // (hold every submit in the channel, raise the stop flag,
+                // release the dispatcher) against this code.  Guarded so
+                // production servers never take the branch.
+                if flt.stop_flag_break_armed() && batcher.is_empty() {
+                    break 'main;
+                }
                 let mut enqueue = |mut job: Job| {
+                    // Deadline gate at the channel -> batcher boundary: a
+                    // job that expired while buffered is answered now,
+                    // never routed.
+                    if let Some(dl) = job.deadline {
+                        let now = Instant::now();
+                        if dl <= now {
+                            let wait = now.duration_since(job.submitted_at);
+                            met.on_deadline_expired(wait.as_secs_f64());
+                            let _ = job.reply.send(GemmResponse::failure(
+                                job.id,
+                                "",
+                                deadline_error(wait),
+                                job.submitted_at,
+                                wait,
+                            ));
+                            return;
+                        }
+                    }
                     let routed = match &job.kind {
                         JobKind::Gemm(req) => {
-                            route(&reg, &env, req).map(|(v, p, bw)| {
-                                job.plan = Some(p);
-                                job.bound = bw;
-                                v
+                            route(&reg, &env, req).map(|r| {
+                                job.plan = Some(r.plan);
+                                if let Some((epoch, bw)) = r.bound {
+                                    job.bound_epoch = Some(epoch);
+                                    job.bound = Some(bw);
+                                }
+                                r.variant
                             })
                         }
                         JobKind::Program(req) => {
@@ -344,6 +490,10 @@ impl Server {
                             })
                         }
                     };
+                    // Fault point: linger between capturing the routing
+                    // decision (plan + bound weights + epoch) and the
+                    // batcher — the window a concurrent rebind races.
+                    flt.delay_route();
                     match routed {
                         Ok(v) => batcher.push(Queued {
                             variant: v,
@@ -352,14 +502,13 @@ impl Server {
                         }),
                         Err(e) => {
                             met.on_fail();
-                            let _ = job.reply.send(GemmResponse {
-                                id: job.id,
-                                output: Err(e),
-                                variant: String::new(),
-                                queue_wait: Duration::ZERO,
-                                exec_time: Duration::ZERO,
-                                total_latency: job.submitted_at.elapsed(),
-                            });
+                            let _ = job.reply.send(GemmResponse::failure(
+                                job.id,
+                                "",
+                                e,
+                                job.submitted_at,
+                                Duration::ZERO,
+                            ));
                         }
                     }
                 };
@@ -374,6 +523,23 @@ impl Server {
                     }
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => break,
+                }
+                // Deadline sweep inside the batching window: a job can
+                // expire *after* routing while the batcher waits for its
+                // group to fill.  Answer those now instead of burning a
+                // worker on stale output.
+                let now = Instant::now();
+                for q in batcher.take_expired(now, |j: &Job| j.deadline) {
+                    let job = q.payload;
+                    let wait = now.duration_since(job.submitted_at);
+                    met.on_deadline_expired(wait.as_secs_f64());
+                    let _ = job.reply.send(GemmResponse::failure(
+                        job.id,
+                        &q.variant,
+                        deadline_error(wait),
+                        job.submitted_at,
+                        wait,
+                    ));
                 }
                 loop {
                     match batcher.next_batch(Instant::now()) {
@@ -395,14 +561,6 @@ impl Server {
                         }
                     }
                 }
-                // No early stop-flag break here: the dispatcher exits
-                // only on Disconnected above.  Shutdown signals by
-                // dropping the submit sender, and the channel hands over
-                // every already-buffered job before reporting
-                // Disconnected — so a submit that raced the shutdown can
-                // never be dropped without a response (a stop-flag break
-                // could strand buffered jobs and leak their reply
-                // channels; pinned by the server stress test).
             }
             // Drain on shutdown: flush everything still queued.
             loop {
@@ -428,14 +586,13 @@ impl Server {
                         for q in batch {
                             let Job { id, submitted_at, reply, .. } = q.payload;
                             met.on_fail();
-                            let _ = reply.send(GemmResponse {
+                            let _ = reply.send(GemmResponse::failure(
                                 id,
-                                output: Err(anyhow!("server worker pool is gone")),
-                                variant: String::new(),
-                                queue_wait: Duration::ZERO,
-                                exec_time: Duration::ZERO,
-                                total_latency: submitted_at.elapsed(),
-                            });
+                                "",
+                                anyhow!("server worker pool is gone"),
+                                submitted_at,
+                                Duration::ZERO,
+                            ));
                         }
                     }
                     _ => break,
@@ -446,9 +603,11 @@ impl Server {
 
         Server {
             submit_tx,
+            queue_capacity,
             next_id: AtomicU64::new(0),
             metrics,
             registry,
+            faults,
             dispatcher: Some(dispatcher),
             workers,
         }
@@ -471,6 +630,10 @@ impl Server {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.on_submit();
+        let deadline = match &kind {
+            JobKind::Gemm(req) => req.deadline,
+            JobKind::Program(_) => None,
+        };
         let job = Job {
             id,
             kind,
@@ -479,21 +642,44 @@ impl Server {
             plan: None,  // attached by the dispatcher at routing time
             pplan: None, // ditto (composite-program jobs)
             bound: None, // ditto
+            bound_epoch: None, // ditto
+            deadline,
         };
-        if let Err(mpsc::SendError(job)) = self.submit_tx.send(job) {
-            // The dispatcher is gone (shutdown raced the submit).  Account
-            // the failure so `submitted` can never permanently exceed
-            // `completed + failed`, and hand the caller an explicit error
-            // instead of a silently dropped channel.
-            self.metrics.on_fail();
-            let _ = job.reply.send(GemmResponse {
-                id: job.id,
-                output: Err(anyhow!("server is shut down")),
-                variant: String::new(),
-                queue_wait: Duration::ZERO,
-                exec_time: Duration::ZERO,
-                total_latency: job.submitted_at.elapsed(),
-            });
+        match self.submit_tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => {
+                // Bounded admission: the queue is at capacity.  Reject
+                // immediately and explicitly — never block the client,
+                // never buffer unboundedly.  Rejections are their own
+                // metrics bucket, keeping
+                // `submitted == completed + failed + rejected` exact.
+                self.metrics.on_reject();
+                let _ = job.reply.send(GemmResponse::failure(
+                    job.id,
+                    "",
+                    anyhow!(
+                        "{ERR_QUEUE_FULL}: submit queue at capacity {}; \
+                         retry later or raise ServerConfig::queue_capacity",
+                        self.queue_capacity
+                    ),
+                    job.submitted_at,
+                    Duration::ZERO,
+                ));
+            }
+            Err(TrySendError::Disconnected(job)) => {
+                // The dispatcher is gone (shutdown raced the submit).
+                // Account the failure so `submitted` can never permanently
+                // exceed `completed + failed + rejected`, and hand the
+                // caller an explicit error instead of a dropped channel.
+                self.metrics.on_fail();
+                let _ = job.reply.send(GemmResponse::failure(
+                    job.id,
+                    "",
+                    anyhow!("{ERR_SHUTDOWN}"),
+                    job.submitted_at,
+                    Duration::ZERO,
+                ));
+            }
         }
         rx
     }
@@ -518,6 +704,12 @@ impl Server {
         &self.registry
     }
 
+    /// The live fault-injection state (counters of injected panics and
+    /// delays).  Tests use it to prove a seeded schedule actually fired.
+    pub fn faults(&self) -> &FaultState {
+        &self.faults
+    }
+
     /// Bind a constant B weight for `key` (the model-serving form: the
     /// weight matrix lives server-side).  Cast and — when the key's plan
     /// prepacks — panel-packed exactly once, here; every subsequent
@@ -539,12 +731,17 @@ impl Server {
     /// Idempotent; the server remains usable for `metrics()` afterwards,
     /// and late `submit` calls get explicit error responses.
     pub fn shutdown(&mut self) -> MetricsSnapshot {
+        // Raise the fault layer's stop flag *before* closing the channel
+        // (the PR 5 bug ordering, so the stop-flag-break hook reproduces
+        // it faithfully) and release a held dispatcher.  Both are no-ops
+        // under the default FaultPlan.
+        self.faults.on_shutdown();
         // Closing the submit channel is the one shutdown signal: the
         // dispatcher drains every job already buffered in the channel
         // (the mpsc contract delivers them before Disconnected), then
         // flushes the batcher and exits — no stop flag that could race
         // a concurrent submit into a dropped job.
-        let (dead_tx, _) = mpsc::channel();
+        let (dead_tx, _) = mpsc::sync_channel(1);
         let old = std::mem::replace(&mut self.submit_tx, dead_tx);
         drop(old);
         if let Some(d) = self.dispatcher.take() {
@@ -557,6 +754,23 @@ impl Server {
     }
 }
 
+/// The [`ERR_DEADLINE`] error every expiry site produces, with the queue
+/// wait the job burned — one shape, greppable, attributable.
+fn deadline_error(queue_wait: Duration) -> anyhow::Error {
+    anyhow!(
+        "{ERR_DEADLINE}: request expired after {:.3} ms queued, before execution",
+        queue_wait.as_secs_f64() * 1e3
+    )
+}
+
+/// One routing decision: the variant name, the compiled plan, and (for
+/// the weight-bound form) the captured weights with their bind epoch.
+struct RoutedGemm {
+    variant: String,
+    plan: Arc<ExecutionPlan>,
+    bound: Option<(u64, Arc<BoundB>)>,
+}
+
 /// Route a request to its artifact, its compiled plan, and (for the
 /// weight-bound request form) the currently bound weights.  Plans come
 /// from the registry cache; a key the registry somehow never compiled
@@ -567,7 +781,7 @@ fn route(
     registry: &Registry,
     env: &PlanEnv,
     req: &GemmRequest,
-) -> Result<(String, Arc<ExecutionPlan>, Option<Arc<BoundB>>)> {
+) -> Result<RoutedGemm> {
     let artifact = if req.use_baseline {
         registry
             .baseline(&req.key)
@@ -585,8 +799,12 @@ fn route(
     };
     // An inline B always wins: the request carries its own operand even
     // when weights happen to be bound (A/B testing, one-off overrides).
+    // The bound form captures (epoch, Arc) in one registry lock
+    // acquisition: a bind that completed before this route is visible
+    // here with its own epoch, so the response's `bound_epoch` lets the
+    // client verify no stale panels served its request.
     let bound = if req.b.is_none() {
-        Some(registry.bound_weights(&req.key).ok_or_else(|| {
+        Some(registry.bound_weights_versioned(&req.key).ok_or_else(|| {
             anyhow!(
                 "request for {:?} carried no B operand and no weights are bound \
                  (bind_weights first, or ship B inline)",
@@ -598,7 +816,7 @@ fn route(
     };
     let variant =
         if bound.is_some() { format!("{artifact}{BOUND_SUFFIX}") } else { artifact };
-    Ok((variant, eplan, bound))
+    Ok(RoutedGemm { variant, plan: eplan, bound })
 }
 
 /// Route a composite-program request: the variant is the artifact name,
@@ -683,14 +901,13 @@ fn handle_run(
                 for q in batch {
                     let Job { id, submitted_at, reply, .. } = q.payload;
                     met.on_fail();
-                    let _ = reply.send(GemmResponse {
+                    let _ = reply.send(GemmResponse::failure(
                         id,
-                        output: Err(anyhow!("device worker is gone")),
-                        variant: variant.clone(),
-                        queue_wait: Duration::ZERO,
-                        exec_time: Duration::ZERO,
-                        total_latency: submitted_at.elapsed(),
-                    });
+                        &variant,
+                        anyhow!("device worker is gone"),
+                        submitted_at,
+                        Duration::ZERO,
+                    ));
                 }
             }
             false
@@ -717,23 +934,48 @@ fn dispatch_sharded(
     device_txs: &[Sender<WorkItem>],
     metrics: &Metrics,
 ) {
-    let Job { id, kind, submitted_at, reply, plan: request_plan, bound, .. } = job;
+    let Job {
+        id,
+        kind,
+        submitted_at,
+        reply,
+        plan: request_plan,
+        bound,
+        bound_epoch,
+        deadline,
+        ..
+    } = job;
     let JobKind::Gemm(GemmRequest { a, b, c, bias, .. }) = kind else {
         // Unreachable: the shard planner only fires for GEMM programs,
         // and program jobs route to artifacts without one.  Fail loudly
         // rather than silently dropping the reply if that ever changes.
         metrics.on_fail();
-        let _ = reply.send(GemmResponse {
+        let _ = reply.send(GemmResponse::failure(
             id,
-            output: Err(anyhow!("composite-program jobs cannot shard")),
-            variant: variant.to_string(),
-            queue_wait: Duration::ZERO,
-            exec_time: Duration::ZERO,
-            total_latency: submitted_at.elapsed(),
-        });
+            variant,
+            anyhow!("composite-program jobs cannot shard"),
+            submitted_at,
+            Duration::ZERO,
+        ));
         return;
     };
     let now = Instant::now();
+    // Deadline gate at the fan-out boundary: a job that expired between
+    // routing and shard dispatch is answered, never split and executed.
+    if let Some(dl) = deadline {
+        if dl <= now {
+            let wait = now.duration_since(submitted_at);
+            metrics.on_deadline_expired(wait.as_secs_f64());
+            let _ = reply.send(GemmResponse::failure(
+                id,
+                variant,
+                deadline_error(wait),
+                submitted_at,
+                wait,
+            ));
+            return;
+        }
+    }
     let tasks = match (&b, &bound) {
         // Weight-bound request: row shards share the bind-time operand,
         // split-K shards slice its cast raw B — no per-request B at all.
@@ -764,14 +1006,13 @@ fn dispatch_sharded(
         Ok(t) => t,
         Err(e) => {
             metrics.on_fail();
-            let _ = reply.send(GemmResponse {
+            let _ = reply.send(GemmResponse::failure(
                 id,
-                output: Err(e),
-                variant: variant.to_string(),
-                queue_wait: now.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
+                variant,
+                e,
+                submitted_at,
+                now.duration_since(submitted_at),
+            ));
             return;
         }
     };
@@ -807,6 +1048,7 @@ fn dispatch_sharded(
             .map(|p| p.isa_label())
             .unwrap_or_else(|| "scalar".into()),
         pack,
+        bound_epoch,
         submitted_at,
         exec_started: Mutex::new(None),
         plan: splan.clone(),
@@ -911,6 +1153,7 @@ fn finish_shard(
             queue_wait,
             exec_time,
             total_latency: total,
+            bound_epoch: sj.bound_epoch,
         });
     }
 }
@@ -921,10 +1164,17 @@ fn finish_shard(
 /// alone instead of poisoning the batch; the survivors run through
 /// [`Runtime::execute_batch_timed`] (stacked operands, one pack/unpack)
 /// and fan back out to their per-request channels.
+///
+/// Execution runs inside `catch_unwind`: a panic (an injected poison job
+/// or a real executor bug) never kills the worker thread.  On panic the
+/// batch is *quarantined* — every item re-executes alone, each under its
+/// own containment, so the one poisoned job fails loudly with an
+/// [`ERR_POISONED`] response while the rest of the batch still completes.
 fn run_batch(
     rt: &Runtime,
     metrics: &Metrics,
     env: &PlanEnv,
+    faults: &FaultState,
     device: usize,
     variant: &str,
     batch: Vec<Queued<Job>>,
@@ -939,7 +1189,7 @@ fn run_batch(
         .map(|q| matches!(q.payload.kind, JobKind::Program(_)))
         .unwrap_or(false);
     if is_program {
-        run_program_batch(rt, metrics, device, variant, batch, exec_started);
+        run_program_batch(rt, metrics, faults, device, variant, batch, exec_started);
         return;
     }
     // Bound and inline jobs never share a batch: routing appends
@@ -956,14 +1206,13 @@ fn run_batch(
             for q in batch {
                 let Job { id, submitted_at, reply, .. } = q.payload;
                 metrics.on_fail();
-                let _ = reply.send(GemmResponse {
+                let _ = reply.send(GemmResponse::failure(
                     id,
-                    output: Err(anyhow!("{msg}")),
-                    variant: variant.to_string(),
-                    queue_wait: exec_started.duration_since(submitted_at),
-                    exec_time: Duration::ZERO,
-                    total_latency: submitted_at.elapsed(),
-                });
+                    variant,
+                    anyhow!("{msg}"),
+                    submitted_at,
+                    exec_started.duration_since(submitted_at),
+                ));
             }
             return;
         }
@@ -978,7 +1227,8 @@ fn run_batch(
         .filter(|(i, _)| !(is_bound && *i == crate::runtime::GEMM_B_INPUT_SLOT))
         .map(|(_, s)| s)
         .collect();
-    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
+    // (id, submitted_at, reply, routed bind epoch) per surviving item.
+    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>, Option<u64>)> =
         Vec::with_capacity(batch.len());
     let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
     // For bound batches: the BoundB Arc each valid item was routed with,
@@ -990,9 +1240,35 @@ fn run_batch(
     // job of a variant carries the same registry-cached plan.
     let mut batch_plan: Option<Arc<ExecutionPlan>> = None;
     for q in batch {
-        let Job { id, kind, submitted_at, reply, plan, bound, .. } = q.payload;
+        let Job {
+            id,
+            kind,
+            submitted_at,
+            reply,
+            plan,
+            bound,
+            bound_epoch,
+            deadline,
+            ..
+        } = q.payload;
         if batch_plan.is_none() {
             batch_plan = plan;
+        }
+        // Final deadline gate, at the queue -> executor boundary: the
+        // job may have expired while sitting in the device queue.
+        if let Some(dl) = deadline {
+            if dl <= exec_started {
+                let wait = exec_started.duration_since(submitted_at);
+                metrics.on_deadline_expired(wait.as_secs_f64());
+                let _ = reply.send(GemmResponse::failure(
+                    id,
+                    variant,
+                    deadline_error(wait),
+                    submitted_at,
+                    wait,
+                ));
+                continue;
+            }
         }
         // Tensors are moved, not cloned: the request is consumed (hot-path
         // allocation discipline — EXPERIMENTS.md §Perf L3).
@@ -1001,14 +1277,13 @@ fn run_batch(
             // batcher never mixes variants — but a mismatch must fail
             // the job, not the process.
             metrics.on_fail();
-            let _ = reply.send(GemmResponse {
+            let _ = reply.send(GemmResponse::failure(
                 id,
-                output: Err(anyhow!("program job in a GEMM batch")),
-                variant: variant.to_string(),
-                queue_wait: exec_started.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
+                variant,
+                anyhow!("program job in a GEMM batch"),
+                submitted_at,
+                exec_started.duration_since(submitted_at),
+            ));
             continue;
         };
         let (inputs, job_bound) = match (is_bound, b, bound) {
@@ -1025,16 +1300,13 @@ fn run_batch(
             }
             (true, _, None) | (false, None, _) => {
                 metrics.on_fail();
-                let _ = reply.send(GemmResponse {
+                let _ = reply.send(GemmResponse::failure(
                     id,
-                    output: Err(anyhow!(
-                        "request has no B operand for its routed form"
-                    )),
-                    variant: variant.to_string(),
-                    queue_wait: exec_started.duration_since(submitted_at),
-                    exec_time: Duration::ZERO,
-                    total_latency: submitted_at.elapsed(),
-                });
+                    variant,
+                    anyhow!("request has no B operand for its routed form"),
+                    submitted_at,
+                    exec_started.duration_since(submitted_at),
+                ));
                 continue;
             }
             (false, Some(b), _) => {
@@ -1051,23 +1323,20 @@ fn run_batch(
                 .zip(specs.iter().copied())
                 .all(|(t, spec)| t.matches(spec));
         if valid {
-            jobs.push((id, submitted_at, reply));
+            jobs.push((id, submitted_at, reply, bound_epoch));
             if let Some(bw) = job_bound {
                 bounds.push(bw);
             }
             items.push(inputs);
         } else {
             metrics.on_fail();
-            let _ = reply.send(GemmResponse {
+            let _ = reply.send(GemmResponse::failure(
                 id,
-                output: Err(anyhow!(
-                    "request tensors do not match artifact {variant}"
-                )),
-                variant: variant.to_string(),
-                queue_wait: exec_started.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
+                variant,
+                anyhow!("request tensors do not match artifact {variant}"),
+                submitted_at,
+                exec_started.duration_since(submitted_at),
+            ));
         }
     }
     if items.is_empty() {
@@ -1106,55 +1375,178 @@ fn run_batch(
         .as_ref()
         .map(|p| p.isa_label())
         .unwrap_or_else(|| "scalar".to_string());
-    let result = if is_bound {
-        match &eplan {
-            None => Err(anyhow!("weight-bound batch for {variant} has no compiled plan")),
-            Some(p) if bounds.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])) => {
-                // The overwhelmingly common case: one bind served the
-                // whole batch — a single batched call over it.
-                rt.execute_batch_timed_bound(&artifact, &items, p, &bounds[0])
-            }
-            Some(p) => {
-                // A rebind landed inside this batch window, so jobs
-                // carry different BoundB Arcs.  Execute each item under
-                // exactly the weights it was routed with — the rebind
-                // contract ("old panels never served to later routings")
-                // beats the lost batching of this rare split.
-                let mut outs = Vec::with_capacity(items.len());
-                let mut exec_seconds = 0.0f64;
-                let mut first_err = None;
-                for (item, bw) in items.iter().zip(&bounds) {
-                    match rt.execute_batch_timed_bound(
-                        &artifact,
-                        std::slice::from_ref(item),
-                        p,
-                        bw,
-                    ) {
-                        Ok((mut o, t)) => {
-                            exec_seconds += t.exec_seconds;
-                            outs.push(o.remove(0));
-                        }
-                        Err(e) => {
-                            first_err = Some(e);
-                            break;
+    // Whole-batch execution, contained.  The fault gates live *inside*
+    // the closure so an injected poison panic unwinds through the same
+    // path a real executor bug would.
+    let ids: Vec<u64> = jobs.iter().map(|(id, _, _, _)| *id).collect();
+    let exec_whole = || -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
+        faults.slow_exec();
+        faults.poison_gate(&ids);
+        if is_bound {
+            match &eplan {
+                None => {
+                    Err(anyhow!("weight-bound batch for {variant} has no compiled plan"))
+                }
+                Some(p) if bounds.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])) => {
+                    // The overwhelmingly common case: one bind served the
+                    // whole batch — a single batched call over it.
+                    rt.execute_batch_timed_bound(&artifact, &items, p, &bounds[0])
+                }
+                Some(p) => {
+                    // A rebind landed inside this batch window, so jobs
+                    // carry different BoundB Arcs.  Execute each item under
+                    // exactly the weights it was routed with — the rebind
+                    // contract ("old panels never served to later routings")
+                    // beats the lost batching of this rare split.
+                    let mut outs = Vec::with_capacity(items.len());
+                    let mut exec_seconds = 0.0f64;
+                    let mut first_err = None;
+                    for (item, bw) in items.iter().zip(&bounds) {
+                        match rt.execute_batch_timed_bound(
+                            &artifact,
+                            std::slice::from_ref(item),
+                            p,
+                            bw,
+                        ) {
+                            Ok((mut o, t)) => {
+                                exec_seconds += t.exec_seconds;
+                                outs.push(o.remove(0));
+                            }
+                            Err(e) => {
+                                first_err = Some(e);
+                                break;
+                            }
                         }
                     }
-                }
-                match first_err {
-                    Some(e) => Err(e),
-                    None => Ok((
-                        outs,
-                        ExecTiming {
-                            pack_seconds: 0.0,
-                            exec_seconds,
-                            unpack_seconds: 0.0,
-                        },
-                    )),
+                    match first_err {
+                        Some(e) => Err(e),
+                        None => Ok((
+                            outs,
+                            ExecTiming {
+                                pack_seconds: 0.0,
+                                exec_seconds,
+                                unpack_seconds: 0.0,
+                            },
+                        )),
+                    }
                 }
             }
+        } else {
+            rt.execute_batch_timed_planned(&artifact, &items, eplan.as_deref())
         }
-    } else {
-        rt.execute_batch_timed_planned(&artifact, &items, eplan.as_deref())
+    };
+    let result = match catch_unwind(AssertUnwindSafe(exec_whole)) {
+        Ok(result) => result,
+        Err(_) => {
+            // The batched execution panicked — an injected poison job or
+            // a real executor bug.  Quarantine: re-execute every item
+            // alone, each under its own containment, so the poisoned job
+            // fails loudly with an explicit error while the rest of the
+            // batch still completes.  Correctness and isolation over
+            // throughput — this path only runs after a panic.
+            let mut completed = 0u64;
+            let mut busy_total = 0.0f64;
+            for (idx, ((id, submitted_at, reply, epoch), item)) in
+                jobs.into_iter().zip(items.iter()).enumerate()
+            {
+                let item_started = Instant::now();
+                let one = catch_unwind(AssertUnwindSafe(
+                    || -> Result<Vec<Vec<Tensor>>> {
+                        faults.poison_gate(&[id]);
+                        if is_bound {
+                            let p = eplan.as_ref().ok_or_else(|| {
+                                anyhow!(
+                                    "weight-bound batch for {variant} has no compiled plan"
+                                )
+                            })?;
+                            rt.execute_batch_timed_bound(
+                                &artifact,
+                                std::slice::from_ref(item),
+                                p,
+                                &bounds[idx],
+                            )
+                            .map(|(o, _)| o)
+                        } else {
+                            rt.execute_batch_timed_planned(
+                                &artifact,
+                                std::slice::from_ref(item),
+                                eplan.as_deref(),
+                            )
+                            .map(|(o, _)| o)
+                        }
+                    },
+                ));
+                let busy = item_started.elapsed();
+                busy_total += busy.as_secs_f64();
+                let output = match one {
+                    Ok(Ok(mut outs)) => {
+                        if outs.is_empty() || outs[0].is_empty() {
+                            Err(anyhow!("artifact {variant} returned no outputs"))
+                        } else {
+                            Ok(outs.remove(0).remove(0))
+                        }
+                    }
+                    Ok(Err(e)) => Err(e),
+                    Err(_) => Err(anyhow!(
+                        "{ERR_POISONED}: request {id} panicked during batch \
+                         execution and was quarantined; the rest of the batch \
+                         was unaffected"
+                    )),
+                };
+                let queue_wait = exec_started.duration_since(submitted_at);
+                let total = submitted_at.elapsed();
+                match &output {
+                    Ok(_) => {
+                        metrics.on_complete(
+                            variant,
+                            total.as_secs_f64(),
+                            queue_wait.as_secs_f64(),
+                            busy.as_secs_f64(),
+                        );
+                        if item_flops > 0.0 {
+                            metrics.on_plan_work(
+                                &plan_id,
+                                &isa_label,
+                                1,
+                                item_flops,
+                                busy.as_secs_f64(),
+                            );
+                        }
+                        completed += 1;
+                    }
+                    Err(_) => metrics.on_fail(),
+                }
+                faults.delay_reply();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output,
+                    variant: variant.to_string(),
+                    queue_wait,
+                    exec_time: busy,
+                    total_latency: total,
+                    bound_epoch: epoch,
+                });
+            }
+            metrics.on_device_task(device, busy_total);
+            // Pack accounting for the completed survivors (mirrors the
+            // whole-batch path below).
+            match (bounds.first(), &eplan) {
+                (Some(bw), _) => {
+                    let hits = if bw.is_prepacked() { completed } else { 0 };
+                    metrics.on_pack(
+                        &plan_id,
+                        hits,
+                        0,
+                        (4 * bw.k() * bw.n()) as f64 * completed as f64,
+                    );
+                }
+                (None, Some(p)) if !matches!(p.kernel, KernelPolicy::Naive) => {
+                    metrics.on_pack(&plan_id, 0, completed, 0.0);
+                }
+                _ => {}
+            }
+            return;
+        }
     };
     match result {
         Ok((outs, timing)) => {
@@ -1194,7 +1586,9 @@ fn run_batch(
                 _ => {}
             }
             let exec_time = call_started.elapsed();
-            for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {
+            for ((id, submitted_at, reply, epoch), mut out) in
+                jobs.into_iter().zip(outs)
+            {
                 let queue_wait = exec_started.duration_since(submitted_at);
                 let total = submitted_at.elapsed();
                 let output = if out.is_empty() {
@@ -1211,6 +1605,7 @@ fn run_batch(
                     ),
                     Err(_) => metrics.on_fail(),
                 }
+                faults.delay_reply();
                 let _ = reply.send(GemmResponse {
                     id,
                     output,
@@ -1218,6 +1613,7 @@ fn run_batch(
                     queue_wait,
                     exec_time,
                     total_latency: total,
+                    bound_epoch: epoch,
                 });
             }
         }
@@ -1226,15 +1622,17 @@ fn run_batch(
             // problem): every surviving item reports the same error.
             let msg = format!("{e:#}");
             let exec_time = call_started.elapsed();
-            for (id, submitted_at, reply) in jobs {
+            for (id, submitted_at, reply, _epoch) in jobs {
                 metrics.on_fail();
                 let _ = reply.send(GemmResponse {
-                    id,
-                    output: Err(anyhow!("{msg}")),
-                    variant: variant.to_string(),
-                    queue_wait: exec_started.duration_since(submitted_at),
                     exec_time,
-                    total_latency: submitted_at.elapsed(),
+                    ..GemmResponse::failure(
+                        id,
+                        variant,
+                        anyhow!("{msg}"),
+                        submitted_at,
+                        exec_started.duration_since(submitted_at),
+                    )
                 });
             }
         }
@@ -1251,6 +1649,7 @@ fn run_batch(
 fn run_program_batch(
     rt: &Runtime,
     metrics: &Metrics,
+    faults: &FaultState,
     device: usize,
     variant: &str,
     batch: Vec<Queued<Job>>,
@@ -1265,14 +1664,13 @@ fn run_program_batch(
             for q in batch {
                 let Job { id, submitted_at, reply, .. } = q.payload;
                 metrics.on_fail();
-                let _ = reply.send(GemmResponse {
+                let _ = reply.send(GemmResponse::failure(
                     id,
-                    output: Err(anyhow!("{msg}")),
-                    variant: variant.to_string(),
-                    queue_wait: exec_started.duration_since(submitted_at),
-                    exec_time: Duration::ZERO,
-                    total_latency: submitted_at.elapsed(),
-                });
+                    variant,
+                    anyhow!("{msg}"),
+                    submitted_at,
+                    exec_started.duration_since(submitted_at),
+                ));
             }
             return;
         }
@@ -1291,14 +1689,13 @@ fn run_program_batch(
         }
         let JobKind::Program(ProgramRequest { inputs, .. }) = kind else {
             metrics.on_fail();
-            let _ = reply.send(GemmResponse {
+            let _ = reply.send(GemmResponse::failure(
                 id,
-                output: Err(anyhow!("GEMM job in a program batch")),
-                variant: variant.to_string(),
-                queue_wait: exec_started.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
+                variant,
+                anyhow!("GEMM job in a program batch"),
+                submitted_at,
+                exec_started.duration_since(submitted_at),
+            ));
             continue;
         };
         let valid = inputs.len() == specs.len()
@@ -1311,16 +1708,13 @@ fn run_program_batch(
             items.push(inputs);
         } else {
             metrics.on_fail();
-            let _ = reply.send(GemmResponse {
+            let _ = reply.send(GemmResponse::failure(
                 id,
-                output: Err(anyhow!(
-                    "request tensors do not match artifact {variant}"
-                )),
-                variant: variant.to_string(),
-                queue_wait: exec_started.duration_since(submitted_at),
-                exec_time: Duration::ZERO,
-                total_latency: submitted_at.elapsed(),
-            });
+                variant,
+                anyhow!("request tensors do not match artifact {variant}"),
+                submitted_at,
+                exec_started.duration_since(submitted_at),
+            ));
         }
     }
     if items.is_empty() {
@@ -1334,19 +1728,109 @@ fn run_program_batch(
         .filter(|p| p.matches(artifact.program()))
         .or_else(|| artifact.program_plan().cloned());
     let call_started = Instant::now();
-    let result = match &pp {
-        Some(pp) => artifact
-            .program()
-            .execute_batch_program_planned(&items, pp)
-            .map(|outs| {
-                let timing = ExecTiming {
-                    pack_seconds: 0.0,
-                    exec_seconds: call_started.elapsed().as_secs_f64(),
-                    unpack_seconds: 0.0,
+    // Contained, like the GEMM path: a panic quarantines the batch into
+    // per-item contained re-execution instead of killing the worker.
+    let ids: Vec<u64> = jobs.iter().map(|(id, _, _)| *id).collect();
+    let exec_one = |item: &Vec<Tensor>| -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
+        let t0 = Instant::now();
+        match &pp {
+            Some(pp) => artifact
+                .program()
+                .execute_batch_program_planned(std::slice::from_ref(item), pp)
+                .map(|outs| {
+                    let timing = ExecTiming {
+                        pack_seconds: 0.0,
+                        exec_seconds: t0.elapsed().as_secs_f64(),
+                        unpack_seconds: 0.0,
+                    };
+                    (outs, timing)
+                }),
+            None => rt.execute_batch_timed_planned(&artifact, std::slice::from_ref(item), None),
+        }
+    };
+    let whole = catch_unwind(AssertUnwindSafe(|| {
+        faults.slow_exec();
+        faults.poison_gate(&ids);
+        match &pp {
+            Some(pp) => artifact
+                .program()
+                .execute_batch_program_planned(&items, pp)
+                .map(|outs| {
+                    let timing = ExecTiming {
+                        pack_seconds: 0.0,
+                        exec_seconds: call_started.elapsed().as_secs_f64(),
+                        unpack_seconds: 0.0,
+                    };
+                    (outs, timing)
+                }),
+            None => rt.execute_batch_timed_planned(&artifact, &items, None),
+        }
+    }));
+    let result = match whole {
+        Ok(result) => result,
+        Err(_) => {
+            // Quarantine (see run_batch): the poisoned program job fails
+            // alone and loudly, the rest complete.
+            let mut busy_total = 0.0f64;
+            for ((id, submitted_at, reply), item) in jobs.into_iter().zip(items.iter()) {
+                let item_started = Instant::now();
+                let one = catch_unwind(AssertUnwindSafe(|| {
+                    faults.poison_gate(&[id]);
+                    exec_one(item)
+                }));
+                let busy = item_started.elapsed();
+                busy_total += busy.as_secs_f64();
+                let output = match one {
+                    Ok(Ok((mut outs, _))) => {
+                        if outs.is_empty() || outs[0].is_empty() {
+                            Err(anyhow!("artifact {variant} returned no outputs"))
+                        } else {
+                            Ok(outs.remove(0).remove(0))
+                        }
+                    }
+                    Ok(Err(e)) => Err(e),
+                    Err(_) => Err(anyhow!(
+                        "{ERR_POISONED}: request {id} panicked during batch \
+                         execution and was quarantined; the rest of the batch \
+                         was unaffected"
+                    )),
                 };
-                (outs, timing)
-            }),
-        None => rt.execute_batch_timed_planned(&artifact, &items, None),
+                let queue_wait = exec_started.duration_since(submitted_at);
+                let total = submitted_at.elapsed();
+                match &output {
+                    Ok(_) => {
+                        metrics.on_complete(
+                            variant,
+                            total.as_secs_f64(),
+                            queue_wait.as_secs_f64(),
+                            busy.as_secs_f64(),
+                        );
+                        if let Some(pp) = &pp {
+                            metrics.on_plan_work(
+                                &pp.id(),
+                                &pp.isa_label(),
+                                1,
+                                pp.flops_per_item(),
+                                busy.as_secs_f64(),
+                            );
+                        }
+                    }
+                    Err(_) => metrics.on_fail(),
+                }
+                faults.delay_reply();
+                let _ = reply.send(GemmResponse {
+                    id,
+                    output,
+                    variant: variant.to_string(),
+                    queue_wait,
+                    exec_time: busy,
+                    total_latency: total,
+                    bound_epoch: None,
+                });
+            }
+            metrics.on_device_task(device, busy_total);
+            return;
+        }
     };
     match result {
         Ok((outs, timing)) => {
@@ -1378,6 +1862,7 @@ fn run_program_batch(
                     ),
                     Err(_) => metrics.on_fail(),
                 }
+                faults.delay_reply();
                 let _ = reply.send(GemmResponse {
                     id,
                     output,
@@ -1385,6 +1870,7 @@ fn run_program_batch(
                     queue_wait,
                     exec_time,
                     total_latency: total,
+                    bound_epoch: None,
                 });
             }
         }
@@ -1394,12 +1880,14 @@ fn run_program_batch(
             for (id, submitted_at, reply) in jobs {
                 metrics.on_fail();
                 let _ = reply.send(GemmResponse {
-                    id,
-                    output: Err(anyhow!("{msg}")),
-                    variant: variant.to_string(),
-                    queue_wait: exec_started.duration_since(submitted_at),
                     exec_time,
-                    total_latency: submitted_at.elapsed(),
+                    ..GemmResponse::failure(
+                        id,
+                        variant,
+                        anyhow!("{msg}"),
+                        submitted_at,
+                        exec_started.duration_since(submitted_at),
+                    )
                 });
             }
         }

@@ -12,6 +12,8 @@
 //!   - [`plan`]        — execution-plan compiler: GemmKey -> compiled
 //!     [`plan::ExecutionPlan`] via an explicit pass pipeline;
 //!   - [`coordinator`] — GEMM service: registry, router, batcher, workers;
+//!   - [`check`]       — protocol model checker + fault-schedule replay
+//!     for the coordinator;
 //!   - [`sim`]         — analytic RTX 3090 model (the paper's hardware);
 //!   - [`autotune`]    — tile-space search over the model + plan refiner;
 //!   - [`harness`]     — measurement + figure builders (Fig 2/3/4, Table 1);
@@ -20,6 +22,7 @@
 //!     proptest-lite) for crates absent from the offline vendor set.
 
 pub mod autotune;
+pub mod check;
 pub mod coordinator;
 pub mod harness;
 pub mod plan;

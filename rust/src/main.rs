@@ -11,6 +11,10 @@
 //!   program-plans  emit graph-level ProgramPlans for composite artifacts
 //!   run        execute one artifact by name on random inputs
 //!   list       list artifacts in the manifest
+//!   check-protocol  exhaustively model-check the coordinator protocol over
+//!              bounded configurations + one deterministic fault replay
+//!              against the real server; --bug re-introduces a known defect
+//!              and expects its counterexample
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -50,6 +54,11 @@ const SPEC: &[Spec] = &[
     ("out-dir", true, "bench/plans: directory for output (default reports/)"),
     ("measured", false, "bench: include real-execution subsets"),
     ("top", true, "autotune: show top-N candidates (default 8)"),
+    ("clients", true, "check-protocol: model clients, 1..=5 (default 3)"),
+    ("jobs", true, "check-protocol: jobs in the real-server fault-replay leg (default 4)"),
+    ("capacity", true, "check-protocol: model submit-queue capacity (default = clients)"),
+    ("max-states", true, "check-protocol: state budget per scenario (default 2000000)"),
+    ("bug", true, "check-protocol: re-introduce a defect and demand its counterexample: stop-flag | stale-rebind | no-containment"),
     ("help", false, "show usage"),
 ];
 
@@ -66,7 +75,8 @@ fn main() {
         println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
         println!(
             "subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | \
-             plan <MxNxK | artifact.tprog.json> | plans | program-plans | run <artifact> | list"
+             plan <MxNxK | artifact.tprog.json> | plans | program-plans | run <artifact> | \
+             list | check-protocol"
         );
         return;
     }
@@ -120,6 +130,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "plans" => cmd_plans(args),
         "program-plans" => cmd_program_plans(args),
         "run" => cmd_run(args),
+        "check-protocol" => cmd_check_protocol(args),
         other => bail!("unknown subcommand {other:?}"),
     }
 }
@@ -529,6 +540,198 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Exhaustively model-check the coordinator protocol (see
+/// `src/check/`): a matrix of bounded scenarios, each explored over
+/// *every* interleaving, each guarded against vacuity by its coverage
+/// flags — then one deterministic fault replay of the hardest schedule
+/// (shutdown racing buffered submits) against the real server.
+///
+/// `--bug <name>` flips the check around: re-introduce a known defect
+/// in the model (and, for `stop-flag`, in the real dispatcher via the
+/// `FaultPlan` hook) and *demand* the checker produce a counterexample
+/// — proof the invariants have teeth.
+fn cmd_check_protocol(args: &Args) -> Result<()> {
+    use mlir_gemm::check::{
+        explore, replay_shutdown_vs_submit, Bugs, Coverage, ModelConfig,
+    };
+
+    let clients = args.get_usize("clients", 3)?;
+    let devices = args.get_usize("devices", 2)?;
+    let jobs = args.get_usize("jobs", 4)?;
+    let max_states = args.get_usize("max-states", 2_000_000)?;
+    let capacity = args.get_usize("capacity", 0)?; // 0 -> default (= clients)
+    if !(1..=5).contains(&clients) || !(1..=3).contains(&devices) {
+        bail!(
+            "bounded configurations only: --clients 1..=5, --devices 1..=3 \
+             (got {clients} x {devices}); the soundness argument in \
+             DESIGN.md S12 explains why small bounds suffice"
+        );
+    }
+    let mut base = ModelConfig::new(clients as u8, devices as u8);
+    if capacity > 0 {
+        base = base.with_capacity(capacity.min(255) as u8);
+    }
+
+    if let Some(bug) = args.get("bug") {
+        let (bugs, cfg) = match bug {
+            "stop-flag" => (
+                Bugs { stop_flag_break: true, ..Default::default() },
+                base.clone(),
+            ),
+            "stale-rebind" => (
+                Bugs { stale_rebind: true, ..Default::default() },
+                base.clone().with_rebind(),
+            ),
+            "no-containment" => (
+                Bugs { no_containment: true, ..Default::default() },
+                base.clone().with_poison(),
+            ),
+            other => bail!(
+                "unknown --bug {other:?} (stop-flag | stale-rebind | no-containment)"
+            ),
+        };
+        let cfg = cfg.with_bugs(bugs);
+        println!("hunting re-introduced bug {bug:?} in {clients} clients x {devices} devices...");
+        let t = Instant::now();
+        let r = explore(&cfg, max_states)?;
+        let cx = r.violation.ok_or_else(|| {
+            anyhow!(
+                "expected a counterexample for --bug {bug} but all {} states \
+                 ({} terminal) passed — the invariant lost its teeth",
+                r.states,
+                r.terminals
+            )
+        })?;
+        println!(
+            "counterexample found in {} states ({:.0} ms):\n",
+            r.states,
+            t.elapsed().as_secs_f64() * 1e3
+        );
+        println!("{}", cx.render());
+        if bug == "stop-flag" {
+            // Close the loop: the model's schedule, replayed against
+            // the real server with the dispatcher bug re-armed.
+            let out = replay_shutdown_vs_submit(jobs, true)?;
+            if out.lost == 0 || out.accounting_holds() {
+                bail!(
+                    "model found the violation but the real-server replay did \
+                     not reproduce it: {out:?}"
+                );
+            }
+            println!(
+                "replayed against the real server: {} of {} held jobs stranded \
+                 (reply channels dead), submitted={} but completed+failed+rejected={} \
+                 — the model's violation is real",
+                out.lost,
+                out.jobs,
+                out.snapshot.submitted,
+                out.snapshot.completed + out.snapshot.failed + out.snapshot.rejected
+            );
+        }
+        return Ok(());
+    }
+
+    // Sound matrix: every scenario must pass AND must visit the
+    // situation it exists to test (the coverage closure) — a pass that
+    // never opened the race window proves nothing.
+    type Cov = fn(&Coverage) -> Option<&'static str>;
+    let scenarios: Vec<(&str, ModelConfig, Cov)> = vec![
+        ("shutdown races submit", base.clone(), |c| {
+            if !c.shutdown_with_backlog {
+                Some("shutdown never caught buffered jobs")
+            } else if !c.late_submit_error {
+                Some("no submit ever raced past the closed channel")
+            } else if !c.multi_job_batch {
+                Some("no multi-job batch ever formed")
+            } else {
+                None
+            }
+        }),
+        ("rebind races dispatch", base.clone().with_rebind(), |c| {
+            (!c.rebind_raced_dispatch)
+                .then_some("no rebind ever landed between routing and execution")
+        }),
+        ("poisoned job is quarantined", base.clone().with_poison(), |c| {
+            if !c.poisoned_job {
+                Some("the poison job never executed")
+            } else if !c.multi_job_batch {
+                Some("the poison job never shared a batch")
+            } else {
+                None
+            }
+        }),
+        ("expired deadline answered early", base.clone().with_deadline(), |c| {
+            (!c.expired_job).then_some("the expired job was never swept")
+        }),
+        ("sharded last-finisher reduction", base.clone().with_sharding(), |c| {
+            (!c.shard_reduction).then_some("no sharded job ever completed")
+        }),
+        ("bounded admission overflow", base.clone().with_capacity(1), |c| {
+            (!c.queue_full_rejection).then_some("the queue never filled")
+        }),
+    ];
+
+    println!(
+        "model-checking the coordinator protocol: {clients} clients x {devices} \
+         devices, <= {max_states} states/scenario\n"
+    );
+    let mut total_states = 0usize;
+    for (name, cfg, cov) in scenarios {
+        let t = Instant::now();
+        let r = explore(&cfg, max_states)?;
+        if let Some(cx) = r.violation {
+            println!("FAIL {name}\n");
+            println!("{}", cx.render());
+            bail!("protocol invariant violated in scenario {name:?}");
+        }
+        if let Some(gap) = cov(&r.coverage) {
+            bail!(
+                "scenario {name:?} passed vacuously: {gap} \
+                 (coverage {:?})",
+                r.coverage
+            );
+        }
+        total_states += r.states;
+        println!(
+            "  ok {name:<34} {:>8} states, {:>9} transitions, {:>5} terminals, \
+             depth {:>3}, {:>6.0} ms",
+            r.states,
+            r.transitions,
+            r.terminals,
+            r.max_depth,
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // Replay leg: the hardest schedule (every submit buffered when the
+    // stop flag goes up) against the real server, bug hook OFF — every
+    // held job must drain to an answer and the accounting identity
+    // must hold.
+    let t = Instant::now();
+    let out = replay_shutdown_vs_submit(jobs, false)?;
+    if !out.accounting_holds() || out.answered != out.jobs {
+        bail!(
+            "real-server replay violated the protocol on correct code: {out:?}"
+        );
+    }
+    println!(
+        "  ok real-server fault replay          {:>4} held jobs all answered \
+         through shutdown, accounting exact, {:>6.0} ms",
+        out.jobs,
+        t.elapsed().as_secs_f64() * 1e3
+    );
+
+    println!(
+        "\nall interleavings of {total_states} reachable states verified:\n\
+         \x20 1. accounting: completed + failed + rejected == submitted\n\
+         \x20 2. every submit is answered (no dropped reply channel)\n\
+         \x20 3. shutdown strands no job\n\
+         \x20 4. jobs execute under the weights they were routed with\n\
+         \x20 5. a panicking job is quarantined; batchmates complete"
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let d = device(args)?;
     let rt = Arc::new(Runtime::open(&artifacts_dir(args))?);
@@ -545,6 +748,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             workers,
             devices,
             plan,
+            // cmd_serve fires its whole synthetic load before draining
+            // any response, so the bounded queue must hold all of it.
+            queue_capacity: n_requests.max(1024),
             ..Default::default()
         },
     );
@@ -593,6 +799,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c,
             bias,
             use_baseline: false,
+            deadline: None,
         }));
     }
     let mut ok = 0usize;

@@ -40,6 +40,7 @@ fn gemm_request(rng: &mut Rng, m: usize, n: usize, k: usize, baseline: bool) -> 
         c: Tensor::zeros(vec![m, n]),
         bias: None,
         use_baseline: baseline,
+        deadline: None,
     }
 }
 
@@ -231,6 +232,7 @@ fn sharded_server_matches_unsharded_execution_bitwise() {
                 c,
                 bias: None,
                 use_baseline: false,
+                deadline: None,
             })
             .unwrap();
         let out = resp.output.expect("sharded request should succeed");

@@ -237,6 +237,7 @@ fn interleaved_variants_with_different_plans_do_not_cross_contaminate() {
             c,
             bias: None,
             use_baseline: true,
+            deadline: None,
         });
         pending.push((key, want, rx));
     }

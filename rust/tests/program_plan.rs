@@ -346,6 +346,7 @@ fn server_interleaves_transformer_and_gemm_with_separate_plan_metrics() {
                 c,
                 bias: None,
                 use_baseline: true,
+                deadline: None,
             });
             pending.push((vec![24usize, 24], want, rx));
         }

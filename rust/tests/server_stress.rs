@@ -12,11 +12,24 @@
 //!   a hit, every inline one a miss, and the direct-kernel plan records
 //!   no hits at all;
 //! * successful outputs are bit-identical to the naive reference.
+//!
+//! The second half drives seeded [`FaultPlan`] schedules through the
+//! server — deterministic worker panics, delayed routing racing a
+//! rebind, a held dispatcher against a tiny bounded queue, expired
+//! deadlines, and execution jitter under shutdown — and asserts the
+//! graceful-degradation contract: every fault is an *explicit* error
+//! response in its own metrics bucket, never a dropped channel, and
+//! `submitted == completed + failed + rejected` always.  Every seeded
+//! test prints its seed; replay any failure with
+//! `MLIR_GEMM_FAULT_SEED=<seed> cargo test`.
 
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use mlir_gemm::coordinator::{GemmKey, GemmRequest, Server, ServerConfig};
+use mlir_gemm::coordinator::{
+    seed_from_env, silence_injected_panics, FaultPlan, GemmKey, GemmRequest, Server,
+    ServerConfig, ERR_DEADLINE, ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
+};
 use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
 use mlir_gemm::schedule::Dtype;
 use mlir_gemm::util::prng::Rng;
@@ -182,6 +195,7 @@ fn stress_mixed_bound_and_inline_with_midflight_shutdown() {
                         c,
                         bias: None,
                         use_baseline: true,
+                        deadline: None,
                     });
                     records.lock().unwrap().push(Record { big, bound, want, rx });
                     if i % 8 == 7 {
@@ -234,10 +248,11 @@ fn stress_mixed_bound_and_inline_with_midflight_shutdown() {
     let m = server.into_inner().unwrap().metrics();
     assert_eq!(m.submitted, records.len() as u64);
     assert_eq!(
-        m.completed + m.failed,
+        m.completed + m.failed + m.rejected,
         m.submitted,
-        "submitted == completed + failed must hold through shutdown"
+        "submitted == completed + failed + rejected must hold through shutdown"
     );
+    assert_eq!(m.rejected, 0, "default capacity must absorb this load");
     assert_eq!(m.completed, ok);
     assert_eq!(m.failed, failed);
 
@@ -283,5 +298,427 @@ fn stress_mixed_bound_and_inline_with_midflight_shutdown() {
         small_load.bytes_saved
     );
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Seeded fault schedules.
+// ---------------------------------------------------------------------------
+
+/// Fresh artifact store per test (tests share one process; each needs
+/// its own directory).
+fn fault_store(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_stress_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("small.tprog.json"), SMALL).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+    dir
+}
+
+fn start_server(dir: &std::path::Path, cfg: ServerConfig) -> Server {
+    let rt = Arc::new(Runtime::open(dir).unwrap());
+    Server::start(rt, &mlir_gemm::sim::DeviceModel::rtx3090(), cfg)
+}
+
+fn small_request(rng: &mut Rng, key: &GemmKey, deadline: Option<Instant>) -> (Vec<f32>, GemmRequest) {
+    let a = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+    let b = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+    let c = Tensor::new(vec![24, 24], rng.normal_matrix(24, 24)).unwrap();
+    let want = naive_reference(key, &a.data, &b.data, &c.data);
+    (
+        want,
+        GemmRequest {
+            key: key.clone(),
+            a,
+            b: Some(b),
+            c,
+            bias: None,
+            use_baseline: true,
+            deadline,
+        },
+    )
+}
+
+/// Injected panics are quarantined per job: with `poison_one_in: 5`
+/// over 20 sequential submits, *exactly* 4 deterministic jobs fail with
+/// the explicit `ERR_POISONED` error (whatever the seed: the hit set is
+/// `(id + phase) % 5 == 0`), every other job completes bit-identically,
+/// and the accounting identity is exact.
+#[test]
+fn seeded_poison_is_quarantined_per_job() {
+    silence_injected_panics();
+    let seed = seed_from_env(0xF417);
+    eprintln!("fault seed: {seed:#x} (replay: MLIR_GEMM_FAULT_SEED={seed})");
+    let plan = FaultPlan { seed, poison_one_in: 5, ..Default::default() };
+    let dir = fault_store("poison");
+    let mut server = start_server(
+        &dir,
+        ServerConfig { workers: 2, faults: plan.clone(), ..Default::default() },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    const N: u64 = 20;
+    let mut rng = Rng::new(0x90);
+    let mut pending = Vec::new();
+    for id in 0..N {
+        let (want, req) = small_request(&mut rng, &key, None);
+        // Sequential submits from one thread: job ids are 0..N in
+        // order, so the poison set is known up front.
+        pending.push((plan.poisons(id), want, server.submit(req)));
+    }
+
+    let mut poisoned = 0u64;
+    let mut completed = 0u64;
+    for (should_poison, want, rx) in &pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("lost response channel under poison faults");
+        match resp.output {
+            Ok(out) => {
+                assert!(
+                    !*should_poison,
+                    "job {} was scheduled to panic but completed",
+                    resp.id
+                );
+                assert_eq!(
+                    out.data, *want,
+                    "quarantine survivor {} must stay bit-identical",
+                    resp.id
+                );
+                completed += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    *should_poison,
+                    "job {} failed without being poisoned: {msg}",
+                    resp.id
+                );
+                assert!(
+                    msg.contains(ERR_POISONED),
+                    "poisoned job must fail with the explicit marker: {msg}"
+                );
+                poisoned += 1;
+            }
+        }
+    }
+    assert_eq!(poisoned, 4, "one in 5 of 20 ids, exactly");
+    assert_eq!(completed, N - 4);
+    assert!(
+        server.faults().injected_panics() >= poisoned,
+        "the gate must actually have fired"
+    );
+
+    let m = server.shutdown();
+    assert_eq!(m.submitted, N);
+    assert_eq!(m.completed, completed);
+    assert_eq!(m.failed, poisoned);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A rebind racing dispatch (widened by the `delay_route` fault, which
+/// lingers between epoch capture and the batcher) can split traffic
+/// across epochs, but every response's `bound_epoch` matches the
+/// weights its output was computed from, and requests submitted after
+/// the rebind completed always see the new epoch — no stale panels.
+#[test]
+fn rebind_racing_dispatch_never_serves_stale_panels() {
+    let seed = seed_from_env(0xB1D);
+    eprintln!("fault seed: {seed:#x} (replay: MLIR_GEMM_FAULT_SEED={seed})");
+    let plan = FaultPlan {
+        seed,
+        delay_route_one_in: 1,
+        delay_route: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let dir = fault_store("rebind");
+    let server = start_server(
+        &dir,
+        ServerConfig { workers: 2, faults: plan, ..Default::default() },
+    );
+
+    let key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    let mut wrng = Rng::new(0x1B);
+    let b1 = Tensor::new(vec![112, 96], wrng.normal_matrix(112, 96)).unwrap();
+    let b2 = Tensor::new(vec![112, 96], wrng.normal_matrix(112, 96)).unwrap();
+    server.bind_weights(&key, &b1).unwrap();
+
+    let mut rng = Rng::new(0x2B);
+
+    // Wave A: fully drained before the rebind — must all be epoch 1.
+    for _ in 0..4 {
+        let ((want1, _), req) = bound_req_in(&key, &b1, &b2, &mut rng);
+        let resp = server.submit(req).recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.bound_epoch, Some(1), "pre-rebind traffic is epoch 1");
+        assert_eq!(resp.output.unwrap().data, want1);
+    }
+
+    // Racy middle: submissions interleave with the rebind.  Each
+    // response must be internally consistent: epoch 1 -> b1's output,
+    // epoch 2 -> b2's output.  Anything else is a stale-panel leak.
+    let racy: Vec<_> = std::thread::scope(|scope| {
+        let submitter = scope.spawn(|| {
+            let mut rng = Rng::new(0x3B);
+            let mut out = Vec::new();
+            for i in 0..8 {
+                let (refs, req) = bound_req_in(&key, &b1, &b2, &mut rng);
+                out.push((refs, server.submit(req)));
+                if i % 2 == 1 {
+                    std::thread::yield_now();
+                }
+            }
+            out
+        });
+        scope.spawn(|| {
+            std::thread::sleep(Duration::from_millis(1));
+            server.bind_weights(&key, &b2).unwrap();
+        });
+        submitter.join().unwrap()
+    });
+    for ((want1, want2), rx) in racy {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let epoch = resp.bound_epoch.expect("bound job must echo its epoch");
+        let out = resp.output.unwrap().data;
+        match epoch {
+            1 => assert_eq!(out, want1, "epoch-1 response must use b1"),
+            2 => assert_eq!(out, want2, "epoch-2 response must use b2"),
+            other => panic!("impossible bind epoch {other}"),
+        }
+    }
+
+    // Wave C: submitted strictly after the rebind returned — the
+    // registry mutex gives the happens-before, so epoch 2 always.
+    for _ in 0..4 {
+        let ((_, want2), req) = bound_req_in(&key, &b1, &b2, &mut rng);
+        let resp = server.submit(req).recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(
+            resp.bound_epoch,
+            Some(2),
+            "post-rebind traffic can never see the old panels"
+        );
+        assert_eq!(resp.output.unwrap().data, want2);
+    }
+
+    let mut server = server;
+    let m = server.shutdown();
+    assert_eq!(m.completed, 16);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Weight-bound request for the rebind test, with the reference output
+/// under *both* candidate weights (the response's `bound_epoch` picks
+/// which one must match).
+fn bound_req_in(
+    key: &GemmKey,
+    b1: &Tensor,
+    b2: &Tensor,
+    rng: &mut Rng,
+) -> ((Vec<f32>, Vec<f32>), GemmRequest) {
+    let a = Tensor::new(vec![128, 112], rng.normal_matrix(128, 112)).unwrap();
+    let c = Tensor::new(vec![128, 96], rng.normal_matrix(128, 96)).unwrap();
+    let refs = (
+        naive_reference(key, &a.data, &b1.data, &c.data),
+        naive_reference(key, &a.data, &b2.data, &c.data),
+    );
+    (
+        refs,
+        GemmRequest {
+            key: key.clone(),
+            a,
+            b: None,
+            c,
+            bias: None,
+            use_baseline: true,
+            deadline: None,
+        },
+    )
+}
+
+/// Bounded admission is deterministic under a held dispatcher: capacity
+/// 2 + 8 sequential submits = exactly 6 immediate `ERR_QUEUE_FULL`
+/// rejections (already answered before shutdown), and the 2 buffered
+/// jobs drain to completion through shutdown.
+#[test]
+fn queue_overflow_rejects_deterministically() {
+    let plan = FaultPlan { hold_dispatch_until_shutdown: true, ..Default::default() };
+    let dir = fault_store("overflow");
+    let mut server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 2,
+            faults: plan,
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0xF0);
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        let (want, req) = small_request(&mut rng, &key, None);
+        pending.push((want, server.submit(req)));
+    }
+
+    // Rejections are synchronous: with the dispatcher parked, submits
+    // 3..8 found the queue full and were answered inside submit().
+    for (i, (_, rx)) in pending.iter().enumerate().skip(2) {
+        let resp = rx.try_recv().unwrap_or_else(|_| {
+            panic!("submit {i} over capacity must be rejected immediately")
+        });
+        let msg = format!("{:#}", resp.output.unwrap_err());
+        assert!(msg.contains(ERR_QUEUE_FULL), "{msg}");
+        assert!(msg.contains("capacity 2"), "{msg}");
+    }
+    let mid = server.metrics();
+    assert_eq!(mid.submitted, 8);
+    assert_eq!(mid.rejected, 6);
+
+    // Shutdown releases the held dispatcher; the 2 admitted jobs drain.
+    let m = server.shutdown();
+    for (want, rx) in pending.iter().take(2) {
+        let out = rx.try_recv().expect("admitted job lost").output.unwrap();
+        assert_eq!(out.data, *want);
+    }
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.rejected, 6);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A request whose deadline passes while it waits in the submit queue
+/// is answered with the explicit `ERR_DEADLINE` error before any
+/// execution, its burned queue wait is attributed in both the response
+/// and the `expired_wait` reservoir, and expiries count as failures.
+#[test]
+fn expired_deadlines_fail_explicitly_before_execution() {
+    let plan = FaultPlan { hold_dispatch_until_shutdown: true, ..Default::default() };
+    let dir = fault_store("deadline");
+    let mut server = start_server(
+        &dir,
+        ServerConfig { workers: 1, faults: plan, ..Default::default() },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0xD1);
+    let deadline = Instant::now() + Duration::from_millis(3);
+    let mut pending = Vec::new();
+    for _ in 0..4 {
+        let (_, req) = small_request(&mut rng, &key, Some(deadline));
+        pending.push(server.submit(req));
+    }
+    // Everyone expires while the dispatcher is held.
+    std::thread::sleep(Duration::from_millis(15));
+
+    let m = server.shutdown();
+    for rx in &pending {
+        let resp = rx.try_recv().expect("expired job lost its channel");
+        let msg = format!("{:#}", resp.output.unwrap_err());
+        assert!(msg.contains(ERR_DEADLINE), "{msg}");
+        assert!(
+            resp.queue_wait >= Duration::from_millis(3),
+            "burned queue wait must be attributed: {:?}",
+            resp.queue_wait
+        );
+        assert_eq!(resp.exec_time, Duration::ZERO, "expired jobs never execute");
+    }
+    assert_eq!(m.deadline_expired, 4);
+    assert_eq!(m.failed, 4);
+    assert_eq!(m.completed, 0);
+    assert!(
+        m.expired_wait.is_some(),
+        "expired queue-wait reservoir must be populated"
+    );
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The full seeded jitter schedule — slow executions, delayed routing,
+/// delayed replies, and deterministic poison — under a shutdown racing
+/// the clients: every channel still gets an answer, every failure is
+/// one of the explicit error classes, and the accounting identity is
+/// exact.
+#[test]
+fn seeded_jitter_with_poison_and_shutdown_keeps_accounting_exact() {
+    silence_injected_panics();
+    let seed = seed_from_env(0xCAFE);
+    eprintln!("fault seed: {seed:#x} (replay: MLIR_GEMM_FAULT_SEED={seed})");
+    let plan = FaultPlan {
+        seed,
+        poison_one_in: 7,
+        slow_exec_one_in: 4,
+        slow_exec: Duration::from_millis(2),
+        delay_route_one_in: 3,
+        delay_route: Duration::from_millis(1),
+        delay_reply_one_in: 3,
+        delay_reply: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let dir = fault_store("jitter");
+    let server = start_server(
+        &dir,
+        ServerConfig { workers: 3, faults: plan, ..Default::default() },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    const CLIENTS: u64 = 3;
+    const PER_CLIENT: usize = 8;
+    let server = Mutex::new(server);
+    let rxs = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for cid in 0..CLIENTS {
+            let server = &server;
+            let rxs = &rxs;
+            let key = &key;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x1177 + cid);
+                for _ in 0..PER_CLIENT {
+                    let (want, req) = small_request(&mut rng, key, None);
+                    let rx = server.lock().unwrap().submit(req);
+                    rxs.lock().unwrap().push((want, rx));
+                }
+            });
+        }
+        scope.spawn(|| {
+            std::thread::sleep(Duration::from_millis(2));
+            let _ = server.lock().unwrap().shutdown();
+        });
+    });
+
+    let rxs = rxs.into_inner().unwrap();
+    assert_eq!(rxs.len(), CLIENTS as usize * PER_CLIENT);
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    for (want, rx) in &rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("jitter schedule dropped a response channel");
+        match resp.output {
+            Ok(out) => {
+                assert_eq!(out.data, *want, "jittered success must stay exact");
+                completed += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains(ERR_POISONED) || msg.contains(ERR_SHUTDOWN),
+                    "failure must be an explicit, classified error: {msg}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    let m = server.into_inner().unwrap().metrics();
+    assert_eq!(m.submitted, rxs.len() as u64);
+    assert_eq!(m.completed, completed);
+    assert_eq!(m.failed, failed);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
     let _ = std::fs::remove_dir_all(&dir);
 }

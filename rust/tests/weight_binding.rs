@@ -68,6 +68,7 @@ fn request(key: &GemmKey, a: &Tensor, b: Option<Tensor>, c: &Tensor) -> GemmRequ
         c: c.clone(),
         bias: None,
         use_baseline: true,
+        deadline: None,
     }
 }
 
