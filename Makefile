@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify verify-scalar build test pytest fuzz check-protocol artifacts artifacts-quick bench-smoke plans program-plans lint fmt clean
+.PHONY: verify verify-scalar build test pytest fuzz check-protocol artifacts artifacts-quick bench-smoke plans program-plans plandb lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -71,6 +71,12 @@ plans:
 # (transformer tprogs) to reports/plans/ (requires `make artifacts`).
 program-plans:
 	$(CARGO) run --release --bin mlir-gemm -- program-plans --artifacts artifacts --out-dir reports
+
+# Pretty-print the persisted shadow-promotion decisions
+# (<artifacts>/reports/plandb.json, written by `serve` with shadow
+# tuning on — the default).
+plandb:
+	$(CARGO) run --release --bin mlir-gemm -- plandb --artifacts artifacts
 
 lint:
 	$(CARGO) fmt --check && $(CARGO) clippy -- -D warnings

@@ -58,14 +58,16 @@ def traffic_elems(m, n, k, blocking):
     return a + b + c
 
 
-def compile_plan(m, n, k, epilogue, force="auto"):
+def compile_plan(m, n, k, epilogue, force="auto", isa=PINNED_ISA):
     """plan::compile under PlanEnv::pinned().
 
     ``force`` mirrors the plan override: ``"auto"`` runs the scalar
     pipeline (bit_exact), ``"simd"`` opts into the pass-6 nanokernel
-    lowering under the pinned ISA (fma_relaxed).  Returns the fields the
-    golden files pin: the lowered kernel name, fuse_epilogue, prepack,
-    and the numerics class.
+    lowering under ``isa`` (fma_relaxed) — the pinned env fixes avx2,
+    but pass 6 pins exactly what IsaPref names, including ISAs the
+    compile host lacks (dispatch degrades at execution, not compile).
+    Returns the fields the golden files pin: the lowered kernel name,
+    fuse_epilogue, prepack, and the numerics class.
     """
     # Pass 1 — tile selection: feasible candidates ranked by traffic,
     # ties broken toward the smallest packed panels then the largest
@@ -120,7 +122,8 @@ def compile_plan(m, n, k, epilogue, force="auto"):
     # even for problems the scalar pipeline would run naive — with the
     # pass-1 blocking and pass-3 band count, and flips the class.
     if force == "simd":
-        kernel = f"simd:{PINNED_ISA}:{best[0]},{best[1]},{best[2]},{bands}"
+        assert isa in ("avx512", "avx2", "neon", "portable"), isa
+        kernel = f"simd:{isa}:{best[0]},{best[1]},{best[2]},{bands}"
         numerics = "fma_relaxed"
     else:
         assert force == "auto", f"unknown force {force!r}"
@@ -188,6 +191,19 @@ def test_simd_override_decision_points():
     assert small["prepack"]
     # The auto pipeline never lowers to SIMD: bit_exact is the default.
     assert compile_plan(512, 512, 512, "none")["numerics"] == "bit_exact"
+
+
+def test_simd_candidates_cover_every_nanokernel_isa():
+    # Pass 6 pins exactly what IsaPref names — the shadow tuner compiles
+    # its candidate for the *detected* host ISA, so every nanokernel body
+    # must lower with the same pass-1/pass-3 decisions.  The wide ISAs
+    # (avx512, neon) are legitimate compile targets even on hosts that
+    # lack them: plans are portable, dispatch degrades at execution.
+    for isa in ("avx512", "avx2", "neon", "portable"):
+        plan = compile_plan(512, 512, 512, "none", force="simd", isa=isa)
+        assert plan["kernel"] == f"simd:{isa}:64,512,1024,4"
+        assert plan["numerics"] == "fma_relaxed"
+        assert plan["prepack"]
 
 
 def test_every_prepack_decision_follows_the_kernel():
@@ -385,3 +401,55 @@ def test_program_plan_decision_points():
     # so the whole program stays bit_exact.
     assert all(o["kernel"] == "naive" for o in f16["ops"])
     assert f16["numerics"] == "bit_exact"
+
+
+# ---------------------------------------------------------------------------
+# Plan-DB mirror (rust/src/coordinator/shadow.rs, mlir-gemm-plandb-v1).
+#
+# The shadow tuner persists each promotion decision keyed by the GEMM
+# identity plus a hardware fingerprint.  The key is *derived* from the
+# record's fields and re-checked on load (a hand-edited record cannot
+# silently mislabel a plan), so the derivation itself is part of the
+# interchange format — mirror it here and pin it against the golden.
+
+
+def plandb_key(m, n, k, dtype_in, dtype_acc, epilogue, threads, isa):
+    """shadow::db_key — everything left of ``@`` is the GEMM key,
+    everything right is the hardware fingerprint the measurement is
+    valid for (pool width + resolved nanokernel ISA)."""
+    return f"{m}x{n}x{k}/{dtype_in}->{dtype_acc}+{epilogue}@t{threads}/{isa}"
+
+
+def test_golden_plandb_record_key_rederives():
+    path = GOLDEN_DIR / "plandb_v1.json"
+    g = json.loads(path.read_text())
+    assert g["format"] == "mlir-gemm-plandb-v1"
+    assert len(g["records"]) >= 1
+    for rec in g["records"]:
+        derived = plandb_key(
+            rec["m"], rec["n"], rec["k"],
+            rec["dtype_in"], rec["dtype_acc"], rec["epilogue"],
+            rec["threads"], rec["isa"],
+        )
+        assert rec["key"] == derived, (
+            f"stored key {rec['key']!r} does not re-derive from the "
+            f"record fields ({derived!r}) — the db_key grammar drifted"
+        )
+        # The embedded plan is a full mlir-gemm-plan-v1 document for the
+        # record's own shape: the same cross-contamination guard the
+        # Rust loader enforces via matches_gemm.
+        plan = rec["plan"]
+        assert plan["format"] == "mlir-gemm-plan-v1"
+        for field in ("m", "n", "k", "dtype_in", "dtype_acc", "epilogue"):
+            assert plan[field] == rec[field], field
+        # A promoted plan is always a nanokernel lowering: that is the
+        # only candidate the shadow tuner ever races — and the mirror's
+        # own pass pipeline agrees on the class such a kernel carries.
+        assert plan["kernel"].startswith("simd:")
+        assert plan["numerics"] == "fma_relaxed"
+        assert rec["isa"] in ("avx512", "avx2", "neon", "portable")
+        # Fingerprint sanity: measured throughput is recorded for both
+        # sides and the promoted side won (by at least the margin the
+        # hysteresis demands — don't over-pin the exact ratio here).
+        assert rec["candidate_gflops"] > rec["incumbent_gflops"]
+        assert rec["samples"] >= 1

@@ -7,13 +7,17 @@
 //! * `server`   — dispatcher + per-device worker queues over the runtime;
 //! * `metrics`  — request/latency/per-device accounting;
 //! * `faults`   — deterministic fault-injection plan threaded through the
-//!   server so model-checker counterexamples replay against real code.
+//!   server so model-checker counterexamples replay against real code;
+//! * `shadow`   — measured SIMD promotion: sample live traffic, verify +
+//!   time the SIMD candidate plan off the reply path, atomically promote
+//!   winners in the registry, persist them to the plan DB.
 
 pub mod batcher;
 pub mod faults;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod shadow;
 pub mod sharding;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
@@ -23,6 +27,10 @@ pub use registry::{GemmKey, Registry, RegistryEntry};
 pub use server::{
     GemmRequest, GemmResponse, ProgramRequest, Server, ServerConfig, ERR_DEADLINE,
     ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
+};
+pub use shadow::{
+    PlanDb, PlanRecord, ShadowConfig, ShadowState, ShadowTimes, PLANDB_FORMAT,
+    SHADOW_ENV,
 };
 pub use sharding::{
     modeled_speedup, modeled_times, plan_for, ShardConfig, ShardPlan, ShardPool,

@@ -50,6 +50,14 @@ pub struct Registry {
     /// observable that lets the protocol checker's "no stale panels
     /// across a rebind" invariant be asserted end-to-end.
     bound: Mutex<HashMap<GemmKey, BoundSlot>>,
+    /// Measured plan overlays (`promote_plan`): a key's shadow-promoted
+    /// plan shadows the compiled default in `plans` for every *new*
+    /// route and bind, while requests that captured the old `Arc` keep
+    /// executing under it — promotion is an atomic pointer swap, never
+    /// an in-place mutation.  Each slot carries a monotonically
+    /// increasing *plan epoch* (first promotion = 1) so tests and the
+    /// CLI can observe that a swap happened without racing on plan ids.
+    promoted: Mutex<HashMap<GemmKey, PromotedSlot>>,
     /// Graph-level plans for composite artifacts, keyed by artifact name
     /// (composite programs have no `GemmKey`; the manifest entry alone
     /// cannot recompile them, so the server caches the load-time plan
@@ -66,6 +74,16 @@ pub struct Registry {
 struct BoundSlot {
     epoch: u64,
     weights: Option<Arc<BoundB>>,
+}
+
+/// One key's promoted-plan slot: the current overlay (None after a
+/// demotion) and the promotion epoch, which survives demotions so it
+/// never repeats across the key's lifetime — the same shape as
+/// [`BoundSlot`], for the same protocol-observability reasons.
+#[derive(Debug, Default)]
+struct PromotedSlot {
+    epoch: u64,
+    plan: Option<Arc<ExecutionPlan>>,
 }
 
 impl Registry {
@@ -220,6 +238,63 @@ impl Registry {
         self.plans.get(key).cloned()
     }
 
+    /// Install a measured plan overlay for `key` and return the new plan
+    /// epoch.  The swap is atomic under the slot mutex: routes that read
+    /// the slot after this call serve the new plan, in-flight work keeps
+    /// the `Arc` it captured at routing time — old and new plans execute
+    /// concurrently during the handover, observably (per-plan metrics),
+    /// and neither is ever mutated.
+    pub fn promote_plan(&self, key: &GemmKey, plan: Arc<ExecutionPlan>) -> u64 {
+        let mut g = self.promoted.lock().unwrap();
+        let slot = g.entry(key.clone()).or_default();
+        slot.epoch += 1;
+        slot.plan = Some(plan);
+        slot.epoch
+    }
+
+    /// The key's promoted plan, if a measured overlay is installed.
+    pub fn promoted_plan(&self, key: &GemmKey) -> Option<Arc<ExecutionPlan>> {
+        self.promoted.lock().unwrap().get(key).and_then(|s| s.plan.clone())
+    }
+
+    /// The key's promotion epoch: 0 if never promoted, otherwise the
+    /// count of `promote_plan` calls ever made for it (demotions do not
+    /// reset it).
+    pub fn plan_epoch(&self, key: &GemmKey) -> u64 {
+        self.promoted.lock().unwrap().get(key).map(|s| s.epoch).unwrap_or(0)
+    }
+
+    /// Drop a key's promoted overlay, falling back to the compiled
+    /// default for subsequent routes.  Returns whether an overlay was
+    /// installed; the epoch is preserved so a later re-promotion keeps
+    /// counting up.
+    pub fn demote_plan(&self, key: &GemmKey) -> bool {
+        self.promoted
+            .lock()
+            .unwrap()
+            .get_mut(key)
+            .map(|s| s.plan.take().is_some())
+            .unwrap_or(false)
+    }
+
+    /// The plan a *new* request for `key` would execute under: the
+    /// promoted overlay when one exists, the compiled default otherwise.
+    /// This is the single lookup the server's routing and weight binding
+    /// go through, so promotion changes both consistently.
+    pub fn serving_plan(&self, key: &GemmKey) -> Option<Arc<ExecutionPlan>> {
+        self.promoted_plan(key).or_else(|| self.plan(key))
+    }
+
+    /// Every key with a currently installed overlay, with its plan.
+    pub fn promoted_plans(&self) -> Vec<(GemmKey, Arc<ExecutionPlan>)> {
+        self.promoted
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, s)| s.plan.clone().map(|p| (k.clone(), p)))
+            .collect()
+    }
+
     /// Bind a constant B weight for `key`: validate its shape against
     /// the key (rejected here, at bind time), cast it to the key's
     /// `dtype_in` once, and — when the key's compiled plan's prepack
@@ -228,7 +303,7 @@ impl Registry {
     /// routing.  Returns the bound weights for callers that want to
     /// inspect them.
     pub fn bind_weights(&self, key: &GemmKey, b: &Tensor) -> Result<Arc<BoundB>> {
-        let eplan = match self.plan(key) {
+        let eplan = match self.serving_plan(key) {
             Some(p) => p,
             // Manually assembled registries may not have compiled this
             // key yet; compile under the registry's own environment so
@@ -544,6 +619,67 @@ mod tests {
         assert_eq!(reg.bound_epoch(&key), 2);
         reg.bind_weights(&key, &b).unwrap();
         assert_eq!(reg.bound_epoch(&key), 3, "epoch never repeats");
+    }
+
+    #[test]
+    fn promotion_overlays_the_compiled_plan_atomically() {
+        let mut reg = Registry::with_env(PlanEnv::pinned());
+        let key = GemmKey::plain(512, 512, 512);
+        reg.register(
+            key.clone(),
+            RegistryEntry {
+                artifact: "v".into(),
+                kind: ArtifactKind::Generated,
+                predicted_tflops: None,
+            },
+        );
+        let default_plan = reg.plan(&key).unwrap();
+        assert_eq!(reg.plan_epoch(&key), 0);
+        assert!(reg.promoted_plan(&key).is_none());
+        assert!(Arc::ptr_eq(&reg.serving_plan(&key).unwrap(), &default_plan));
+        let simd = Arc::new(
+            ExecutionPlan::manual(
+                &key,
+                KernelPolicy::parse("simd:portable:64,512,1024,1").unwrap(),
+                false,
+            )
+            .unwrap(),
+        );
+        assert_eq!(reg.promote_plan(&key, simd.clone()), 1);
+        // New routes see the overlay; the compiled default is untouched,
+        // so in-flight work holding its Arc is unaffected.
+        assert!(Arc::ptr_eq(&reg.serving_plan(&key).unwrap(), &simd));
+        assert!(Arc::ptr_eq(&reg.plan(&key).unwrap(), &default_plan));
+        assert_eq!(reg.promoted_plans().len(), 1);
+        // Demotion falls back; the epoch survives, like bind epochs.
+        assert!(reg.demote_plan(&key));
+        assert!(!reg.demote_plan(&key));
+        assert!(Arc::ptr_eq(&reg.serving_plan(&key).unwrap(), &default_plan));
+        assert_eq!(reg.plan_epoch(&key), 1);
+        assert_eq!(reg.promote_plan(&key, simd), 2);
+    }
+
+    #[test]
+    fn weight_binding_follows_the_promoted_plan() {
+        // A direct-kernel key binds cast-only weights under its compiled
+        // default; after promotion to a packing SIMD plan, a re-bind
+        // materializes panels — binding consults the serving plan.
+        let reg = Registry::with_env(PlanEnv::pinned());
+        let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+        let b = Tensor::zeros(vec![24, 24]);
+        let before = reg.bind_weights(&key, &b).unwrap();
+        assert!(!before.is_prepacked());
+        let simd = Arc::new(
+            ExecutionPlan::manual(
+                &key,
+                KernelPolicy::parse("simd:portable:64,256,256,1").unwrap(),
+                false,
+            )
+            .unwrap(),
+        );
+        reg.promote_plan(&key, simd);
+        let after = reg.bind_weights(&key, &b).unwrap();
+        assert!(after.is_prepacked(), "promoted packing plan must prepack");
     }
 
     #[test]

@@ -32,6 +32,7 @@ use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
 use super::faults::{FaultPlan, FaultState};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{GemmKey, Registry};
+use super::shadow::{ShadowConfig, ShadowState};
 use super::sharding::{self, ShardConfig, ShardPlan};
 
 /// Stable error-class prefixes.  The vendored `anyhow` shim carries no
@@ -196,6 +197,13 @@ pub struct ServerConfig {
     /// Deterministic fault-injection schedule (see [`super::faults`]).
     /// The default injects nothing.
     pub faults: FaultPlan,
+    /// Shadow tuning (see [`super::shadow`]): sampled re-measurement of
+    /// live traffic under the SIMD candidate plan, atomic promotion of
+    /// measured winners, persistence to the plan DB.  Disabled by
+    /// default (embedded/test servers opt in); production servers build
+    /// from [`ShadowConfig::from_env`], where it is on unless
+    /// `MLIR_GEMM_SHADOW=off`.
+    pub shadow: ShadowConfig,
 }
 
 impl Default for ServerConfig {
@@ -209,6 +217,7 @@ impl Default for ServerConfig {
             plan: PlanOverride::Auto,
             queue_capacity: 1024,
             faults: FaultPlan::default(),
+            shadow: ShadowConfig::default(),
         }
     }
 }
@@ -289,6 +298,7 @@ pub struct Server {
     metrics: Arc<Metrics>,
     registry: Arc<Registry>,
     faults: Arc<FaultState>,
+    shadow: Option<Arc<ShadowState>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -322,6 +332,19 @@ impl Server {
         for (_key, p) in registry.plans() {
             metrics.on_plan_seen(&p.id(), &p.isa_label());
         }
+        // Shadow tuning: one state shared by every worker.  Warm-load
+        // persisted promotions *before* any request can route, so a
+        // restarted server serves its measured plans from request one —
+        // with no re-measurement (warm-loaded keys start decided).
+        let shadow: Option<Arc<ShadowState>> = if cfg.shadow.enabled {
+            let st = Arc::new(ShadowState::new(cfg.shadow.clone(), cfg.total_threads()));
+            if let Err(e) = st.warm_load(&registry, &metrics) {
+                eprintln!("shadow: plan db warm load failed: {e:#}");
+            }
+            Some(st)
+        } else {
+            None
+        };
         // Bounded admission: submit() uses try_send, so a full buffer is
         // an immediate, explicit rejection — never unbounded memory and
         // never a blocked client thread.
@@ -347,6 +370,8 @@ impl Server {
                 let m = metrics.clone();
                 let worker_env = plan_env.clone();
                 let flt = faults.clone();
+                let reg = registry.clone();
+                let sh = shadow.clone();
                 workers.push(std::thread::spawn(move || loop {
                     let msg = {
                         let guard = rx.lock().unwrap();
@@ -355,7 +380,17 @@ impl Server {
                     let Ok(item) = msg else { break };
                     match item {
                         WorkItem::Batch { variant, batch } => {
-                            run_batch(&rt, &m, &worker_env, &flt, dev, &variant, batch);
+                            run_batch(
+                                &rt,
+                                &reg,
+                                &m,
+                                &worker_env,
+                                &flt,
+                                sh.as_deref(),
+                                dev,
+                                &variant,
+                                batch,
+                            );
                         }
                         WorkItem::Shard(task) => {
                             let started = Instant::now();
@@ -608,6 +643,7 @@ impl Server {
             metrics,
             registry,
             faults,
+            shadow,
             dispatcher: Some(dispatcher),
             workers,
         }
@@ -710,6 +746,13 @@ impl Server {
         &self.faults
     }
 
+    /// The shadow-tuning state, when enabled ([`ServerConfig::shadow`]).
+    /// Tests read its counters to prove sampling/promotion happened (or,
+    /// after a warm restart, that it did *not* re-measure).
+    pub fn shadow(&self) -> Option<&ShadowState> {
+        self.shadow.as_deref()
+    }
+
     /// Bind a constant B weight for `key` (the model-serving form: the
     /// weight matrix lives server-side).  Cast and — when the key's plan
     /// prepacks — panel-packed exactly once, here; every subsequent
@@ -793,7 +836,11 @@ fn route(
             .map(|e| e.artifact.clone())
             .ok_or_else(|| anyhow!("no kernel variant registered for {:?}", req.key))?
     };
-    let eplan = match registry.plan(&req.key) {
+    // `serving_plan` overlays any shadow-promoted plan on the compiled
+    // one; the Arc captured here is what this request executes under even
+    // if a promotion lands mid-flight (swap is atomic, routing is not
+    // retroactive).
+    let eplan = match registry.serving_plan(&req.key) {
         Some(p) => p,
         None => Arc::new(plan::compile(&req.key, env)?),
     };
@@ -1170,11 +1217,14 @@ fn finish_shard(
 /// batch is *quarantined* — every item re-executes alone, each under its
 /// own containment, so the one poisoned job fails loudly with an
 /// [`ERR_POISONED`] response while the rest of the batch still completes.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     rt: &Runtime,
+    registry: &Registry,
     metrics: &Metrics,
     env: &PlanEnv,
     faults: &FaultState,
+    shadow: Option<&ShadowState>,
     device: usize,
     variant: &str,
     batch: Vec<Queued<Job>>,
@@ -1586,6 +1636,24 @@ fn run_batch(
                 _ => {}
             }
             let exec_time = call_started.elapsed();
+            // Shadow tuning rides here: after the client-visible timing is
+            // captured (shadow work never inflates a reported latency) and
+            // before `outs` is consumed by the replies below.  The hook
+            // samples, re-executes under the SIMD candidate, verifies
+            // against the outputs we are about to serve, and promotes.
+            if let (Some(sh), Some(inc)) = (shadow, &eplan) {
+                sh.observe_batch(
+                    rt,
+                    registry,
+                    metrics,
+                    &artifact,
+                    inc,
+                    &items,
+                    &outs,
+                    bounds.first(),
+                    timing.exec_seconds,
+                );
+            }
             for ((id, submitted_at, reply, epoch), mut out) in
                 jobs.into_iter().zip(outs)
             {

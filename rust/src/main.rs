@@ -8,6 +8,8 @@
 //!   plan       compile the execution plan for one GEMM (or the graph-level
 //!              ProgramPlan for a *.tprog.json artifact path) and print it
 //!   plans      emit compiled plans for every registry key to reports/
+//!   plandb     print the shadow-promoted plan DB (measured SIMD winners
+//!              persisted by serve; see docs/PLAN_SCHEMA.md)
 //!   program-plans  emit graph-level ProgramPlans for composite artifacts
 //!   run        execute one artifact by name on random inputs
 //!   list       list artifacts in the manifest
@@ -23,7 +25,10 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use mlir_gemm::autotune;
-use mlir_gemm::coordinator::{GemmKey, GemmRequest, Registry, Server, ServerConfig};
+use mlir_gemm::coordinator::{
+    GemmKey, GemmRequest, PlanDb, Registry, Server, ServerConfig, ShadowConfig,
+    PLANDB_FORMAT,
+};
 use mlir_gemm::harness::{self, BenchConfig};
 use mlir_gemm::plan::{self, PlanEnv, PlanOverride};
 use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
@@ -75,8 +80,8 @@ fn main() {
         println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
         println!(
             "subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | \
-             plan <MxNxK | artifact.tprog.json> | plans | program-plans | run <artifact> | \
-             list | check-protocol"
+             plan <MxNxK | artifact.tprog.json> | plans | plandb | program-plans | \
+             run <artifact> | list | check-protocol"
         );
         return;
     }
@@ -128,6 +133,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "plan" => cmd_plan(args),
         "plans" => cmd_plans(args),
+        "plandb" => cmd_plandb(args),
         "program-plans" => cmd_program_plans(args),
         "run" => cmd_run(args),
         "check-protocol" => cmd_check_protocol(args),
@@ -517,6 +523,47 @@ fn cmd_plans(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Print the shadow-promoted plan DB (`make plandb`): every measured SIMD
+/// winner `serve` has persisted, with the measurements that won it the
+/// slot.  The DB lives next to the artifacts it was measured against
+/// (`<artifacts>/reports/plandb.json`) so a restarted server warm-loads
+/// exactly what it serves.
+fn cmd_plandb(args: &Args) -> Result<()> {
+    let path = artifacts_dir(args)
+        .join(mlir_gemm::coordinator::shadow::PLANDB_DEFAULT_PATH);
+    if !path.is_file() {
+        println!(
+            "no plan DB at {} (run `serve` with shadow tuning on — the \
+             default — and traffic will populate it)",
+            path.display()
+        );
+        return Ok(());
+    }
+    let db = PlanDb::load(&path)?;
+    println!("plan DB {} ({}, {} records)\n", path.display(), PLANDB_FORMAT, db.len());
+    println!(
+        "{:<44} {:<40} {:>9} {:>9} {:>7} {:>7}",
+        "key", "promoted plan", "inc GF/s", "new GF/s", "gain", "samples"
+    );
+    for rec in db.records() {
+        let gain = if rec.incumbent_gflops > 0.0 {
+            rec.candidate_gflops / rec.incumbent_gflops
+        } else {
+            0.0
+        };
+        println!(
+            "{:<44} {:<40} {:>9.2} {:>9.2} {:>6.2}x {:>7}",
+            rec.db_key(),
+            rec.plan.id(),
+            rec.incumbent_gflops,
+            rec.candidate_gflops,
+            gain,
+            rec.samples
+        );
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -741,6 +788,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let plan = plan_override(args)?;
     let bind = args.flag("bind");
 
+    // Shadow tuning is on by default for real serving (off with
+    // MLIR_GEMM_SHADOW=off): sampled traffic is re-measured under the
+    // SIMD candidate plan and winners are promoted + persisted to
+    // <artifacts>/reports/plandb.json for warm restarts.
+    let shadow = ShadowConfig::from_env(&artifacts_dir(args));
     let mut server = Server::start(
         rt.clone(),
         &d,
@@ -751,6 +803,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // cmd_serve fires its whole synthetic load before draining
             // any response, so the bounded queue must hold all of it.
             queue_capacity: n_requests.max(1024),
+            shadow,
             ..Default::default()
         },
     );
@@ -812,6 +865,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     println!("{ok}/{n_requests} requests succeeded\n");
+    if let Some(sh) = server.shadow() {
+        println!(
+            "shadow tuning ({}): {} warm-loaded, {} sampled, {} promoted, \
+             {} rejected -> {}",
+            sh.isa_name(),
+            sh.warm_loaded(),
+            sh.sampled(),
+            sh.promoted(),
+            sh.rejected(),
+            sh.config()
+                .plandb_path
+                .as_deref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "<unpersisted>".to_string()),
+        );
+    }
     let snapshot = server.shutdown();
     println!("{}", snapshot.report());
     Ok(())

@@ -11,10 +11,11 @@
 //! autovectorizer.  This module is that bottom layer for the host
 //! engine:
 //!
-//! * [`Isa`] — the nanokernel instruction-set menu (AVX2+FMA today;
-//!   AVX-512 and NEON ride behind the same trait as delegating stubs);
+//! * [`Isa`] — the nanokernel instruction-set menu: AVX2+FMA (tuned
+//!   4x24 ymm tile), AVX-512F (4x32 zmm tile, masked remainders), NEON
+//!   (`float32x4_t` 4x16 tile on aarch64), and the portable fallback;
 //! * [`detect`] — runtime CPU-feature probe
-//!   (`is_x86_feature_detected!`), overridable with
+//!   (`is_x86_feature_detected!` / `target_arch`), overridable with
 //!   `MLIR_GEMM_FORCE_ISA` for tests/CI;
 //! * [`Nanokernel`] — the macro-kernel trait: one cache block over the
 //!   exact packed-panel layouts `kernel::pack_a` / `kernel::pack_b`
@@ -24,14 +25,17 @@
 //!   satisfy against the naive oracle (see DESIGN.md §10 for the
 //!   derivation), used by the tolerance harness *and* the benches.
 //!
-//! **Numerics.**  These bodies contract k-terms with fused
-//! multiply-adds in the same increasing-k order as the scalar kernel —
-//! the *grouping* of the sum is untouched, only the per-term rounding
-//! changes (one rounding per FMA instead of a rounded multiply plus a
-//! rounded add).  That deliberately breaks the engine's bit-exactness
-//! invariant, which is why a plan lowered through here is classed
-//! `fma_relaxed` (`crate::plan::NumericsClass`) and verified by
-//! tolerance, never by bits.
+//! **Numerics.**  Each output element is accumulated as one chain of
+//! fused multiply-adds: `x = fma(a_p, b_p, x)` over the k terms in some
+//! fixed order.  A body may keep several *independent* accumulator
+//! registers live (the k-unrolled tiles do) but never splits one
+//! element's chain across registers, so every element still sees a
+//! single rounded-FMA accumulation — the shape Higham's any-order bound
+//! `gamma(k)` covers, regardless of term order (DESIGN.md §10).  That
+//! deliberately breaks the engine's bit-exactness invariant, which is
+//! why a plan lowered through here is classed `fma_relaxed`
+//! (`crate::plan::NumericsClass`) and verified by tolerance, never by
+//! bits.
 
 use anyhow::{bail, Result};
 
@@ -44,10 +48,10 @@ use super::kernel::MR;
 pub const FORCE_ISA_ENV: &str = "MLIR_GEMM_FORCE_ISA";
 
 /// A nanokernel instruction set.  `Portable` is the always-available
-/// safe-Rust 4-wide body; `Avx2Fma` is the real intrinsic kernel;
-/// `Avx512` / `Neon` are explicit-opt-in stubs that currently delegate
-/// (AVX-512 to the AVX2 body, NEON to the portable body) so the trait
-/// surface and plan schema are already shaped for them.
+/// safe-Rust 4-wide body; `Avx2Fma`, `Avx512`, and `Neon` are real
+/// intrinsic kernels (4x24 ymm, 4x32 zmm, and 4x16 `float32x4_t` tiles
+/// respectively), each degrading to the portable body through
+/// [`kernel_for`] on hosts that lack the feature.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Isa {
     Portable,
@@ -80,13 +84,13 @@ impl Isa {
     }
 }
 
-/// Can `isa`'s body actually execute on this host?  The stubs delegate
-/// (NEON to portable everywhere; AVX-512 to the AVX2 body), so their
-/// availability is their delegate's.
+/// Can `isa`'s body actually execute on this host?  Every arm probes
+/// the *real* hardware requirement of its intrinsic body; a body that
+/// would merely delegate no longer claims availability.
 pub fn hw_available(isa: Isa) -> bool {
     match isa {
-        Isa::Portable | Isa::Neon => true,
-        Isa::Avx2Fma | Isa::Avx512 => {
+        Isa::Portable => true,
+        Isa::Avx2Fma => {
             #[cfg(target_arch = "x86_64")]
             {
                 is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
@@ -96,15 +100,28 @@ pub fn hw_available(isa: Isa) -> bool {
                 false
             }
         }
+        Isa::Avx512 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx512f")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        // NEON is architecturally guaranteed on aarch64 and absent
+        // elsewhere; no runtime probe exists or is needed.
+        Isa::Neon => cfg!(target_arch = "aarch64"),
     }
 }
 
 /// Runtime ISA selection for the plan compiler's pass 6:
 /// `Ok(None)` means "stay scalar" (forced via `MLIR_GEMM_FORCE_ISA=scalar`),
 /// `Ok(Some(isa))` the best nanokernel this host can run.  The
-/// auto-probe only ever returns `Avx2Fma` (when AVX2 and FMA are both
-/// present) or `Portable`; the AVX-512/NEON stubs are explicit opt-in
-/// (`MLIR_GEMM_FORCE_ISA=avx512` etc. or a forced `simd:<isa>` policy).
+/// auto-probe walks the ladder widest-first — AVX-512F, then AVX2+FMA,
+/// then NEON, then the portable body — so the shadow tuner's candidate
+/// compilation naturally proposes the widest real kernel the host owns.
 /// An unparseable override is an error, not a silent fallback.
 pub fn detect() -> Result<Option<Isa>> {
     if let Ok(v) = std::env::var(FORCE_ISA_ENV) {
@@ -116,17 +133,26 @@ pub fn detect() -> Result<Option<Isa>> {
             return Isa::parse(v).map(Some);
         }
     }
-    Ok(Some(if hw_available(Isa::Avx2Fma) { Isa::Avx2Fma } else { Isa::Portable }))
+    for isa in [Isa::Avx512, Isa::Avx2Fma, Isa::Neon] {
+        if hw_available(isa) {
+            return Ok(Some(isa));
+        }
+    }
+    Ok(Some(Isa::Portable))
 }
 
 /// One cache block of `out += Apanel @ Bpanel` over the packed layouts
 /// of `kernel::pack_a` (MR-row interleaved, `apack[p * MR + i]`) and
 /// `kernel::pack_b` (row-major, `bpack[p * ncb + j]`).  Same contract
 /// as the scalar `macro_kernel`: rows `ic..ic+mcb`, columns
-/// `jc..jc+ncb` of `out` (leading dimension `ldc`), k-terms applied in
-/// increasing-p order.  Implementations may fuse each multiply-add but
-/// must not regroup the reduction — that keeps the `fma_relaxed` error
-/// bound (see [`verify_fma_relaxed`]) tight and k-order deterministic.
+/// `jc..jc+ncb` of `out` (leading dimension `ldc`).  Implementations
+/// may fuse each multiply-add and may apply the k terms in any fixed
+/// order, but each output element must remain a *single* FMA chain —
+/// never split one element's sum across partial accumulators that are
+/// added together at the end.  Under that shape the `fma_relaxed`
+/// bound (see [`verify_fma_relaxed`], Higham's any-order `gamma(k)`)
+/// holds for every conforming body, and a body run twice on the same
+/// host is deterministic.
 pub trait Nanokernel: Sync {
     fn isa(&self) -> Isa;
 
@@ -254,14 +280,16 @@ impl Nanokernel for PortableNano {
 }
 
 // ---------------------------------------------------------------------------
-// AVX2+FMA nanokernel: 4x16 register tile (8 ymm accumulators)
+// AVX2+FMA nanokernel: tuned 4x24 register tile (12 ymm accumulators)
 // ---------------------------------------------------------------------------
 
-/// The real intrinsic kernel: a 4x16 C tile held in 8 ymm registers
-/// across the whole k block — per k step, 2 B loads + 4 A broadcasts +
-/// 8 `vfmadd231ps`.  Falls back to [`PortableNano`] off x86-64 (only
-/// reachable through a deliberately mis-resolved call; [`kernel_for`]
-/// never hands this body to a host without AVX2+FMA).
+/// The tuned intrinsic kernel: a 4x24 C tile held in 12 ymm registers
+/// across the whole k block — per k step, 3 B loads + 4 A broadcasts +
+/// 12 `vfmadd231ps` (12 FMAs amortizing 7 non-FMA ops, vs 8:6 for the
+/// original 4x16 tile), k-unrolled by 4 with a software prefetch of
+/// the panel rows 4 k-steps ahead.  Falls back to [`PortableNano`] off
+/// x86-64 (only reachable through a deliberately mis-resolved call;
+/// [`kernel_for`] never hands this body to a host without AVX2+FMA).
 pub struct Avx2FmaNano;
 
 static AVX2: Avx2FmaNano = Avx2FmaNano;
@@ -304,16 +332,19 @@ mod avx2 {
 
     use super::MR;
 
-    // The 8-accumulator layout below hard-codes four C rows.
+    // The 12-accumulator layout below hard-codes four C rows.
     const _: () = assert!(MR == 4, "the AVX2 nanokernel is shaped for MR == 4");
 
-    /// The 4x16 FMA macro kernel.  The accumulation per output element
-    /// is `x = fma(a_p, b_p, x)` for p = 0..kcb in increasing order:
-    /// the scalar kernel's exact summation grouping, with each
-    /// multiply-add fused (single rounding).  The j remainder and the
-    /// ragged row tail use scalar `f32::mul_add`, which compiles to
-    /// `vfmadd` inside this `target_feature` fn — the whole block has
-    /// uniform one-rounding-per-term semantics.
+    /// The tuned 4x24 FMA macro kernel.  The accumulation per output
+    /// element is `x = fma(a_p, b_p, x)` for p = 0..kcb in increasing
+    /// order — one chain per element, each multiply-add fused (single
+    /// rounding).  The k loop is unrolled by 4 (the unroll repeats the
+    /// step body; it never splits a chain) and prefetches the A/B
+    /// panel rows 4 k-steps ahead.  The j remainders (8-wide, then
+    /// scalar) and the ragged row tail use the original narrower
+    /// bodies / scalar `f32::mul_add`, which compiles to `vfmadd`
+    /// inside this `target_feature` fn — the whole block has uniform
+    /// one-rounding-per-term semantics.
     ///
     /// # Safety
     /// Caller must ensure the host supports avx2+fma.
@@ -345,44 +376,78 @@ mod avx2 {
             let o3 = obase.add((i0 + 3) * ldc + jc);
             let bbase = bpack.as_ptr();
             let mut j = 0usize;
-            while j + 16 <= ncb {
+            while j + 24 <= ncb {
                 let mut c00 = _mm256_loadu_ps(o0.add(j));
                 let mut c01 = _mm256_loadu_ps(o0.add(j + 8));
+                let mut c02 = _mm256_loadu_ps(o0.add(j + 16));
                 let mut c10 = _mm256_loadu_ps(o1.add(j));
                 let mut c11 = _mm256_loadu_ps(o1.add(j + 8));
+                let mut c12 = _mm256_loadu_ps(o1.add(j + 16));
                 let mut c20 = _mm256_loadu_ps(o2.add(j));
                 let mut c21 = _mm256_loadu_ps(o2.add(j + 8));
+                let mut c22 = _mm256_loadu_ps(o2.add(j + 16));
                 let mut c30 = _mm256_loadu_ps(o3.add(j));
                 let mut c31 = _mm256_loadu_ps(o3.add(j + 8));
+                let mut c32 = _mm256_loadu_ps(o3.add(j + 16));
                 let mut bp = bbase.add(j);
                 let mut apk = ap.as_ptr();
-                for _p in 0..kcb {
-                    let b0 = _mm256_loadu_ps(bp);
-                    let b1 = _mm256_loadu_ps(bp.add(8));
-                    let a0 = _mm256_set1_ps(*apk);
-                    let a1 = _mm256_set1_ps(*apk.add(1));
-                    let a2 = _mm256_set1_ps(*apk.add(2));
-                    let a3 = _mm256_set1_ps(*apk.add(3));
-                    c00 = _mm256_fmadd_ps(a0, b0, c00);
-                    c01 = _mm256_fmadd_ps(a0, b1, c01);
-                    c10 = _mm256_fmadd_ps(a1, b0, c10);
-                    c11 = _mm256_fmadd_ps(a1, b1, c11);
-                    c20 = _mm256_fmadd_ps(a2, b0, c20);
-                    c21 = _mm256_fmadd_ps(a2, b1, c21);
-                    c30 = _mm256_fmadd_ps(a3, b0, c30);
-                    c31 = _mm256_fmadd_ps(a3, b1, c31);
-                    bp = bp.add(ncb);
-                    apk = apk.add(MR);
+                let mut p = 0usize;
+                macro_rules! step24 {
+                    () => {{
+                        let b0 = _mm256_loadu_ps(bp);
+                        let b1 = _mm256_loadu_ps(bp.add(8));
+                        let b2 = _mm256_loadu_ps(bp.add(16));
+                        let mut aa = _mm256_set1_ps(*apk);
+                        c00 = _mm256_fmadd_ps(aa, b0, c00);
+                        c01 = _mm256_fmadd_ps(aa, b1, c01);
+                        c02 = _mm256_fmadd_ps(aa, b2, c02);
+                        aa = _mm256_set1_ps(*apk.add(1));
+                        c10 = _mm256_fmadd_ps(aa, b0, c10);
+                        c11 = _mm256_fmadd_ps(aa, b1, c11);
+                        c12 = _mm256_fmadd_ps(aa, b2, c12);
+                        aa = _mm256_set1_ps(*apk.add(2));
+                        c20 = _mm256_fmadd_ps(aa, b0, c20);
+                        c21 = _mm256_fmadd_ps(aa, b1, c21);
+                        c22 = _mm256_fmadd_ps(aa, b2, c22);
+                        aa = _mm256_set1_ps(*apk.add(3));
+                        c30 = _mm256_fmadd_ps(aa, b0, c30);
+                        c31 = _mm256_fmadd_ps(aa, b1, c31);
+                        c32 = _mm256_fmadd_ps(aa, b2, c32);
+                        bp = bp.add(ncb);
+                        apk = apk.add(MR);
+                    }};
+                }
+                while p + 4 <= kcb {
+                    // wrapping_add: near the end of the panel these
+                    // prefetch addresses run past the pack buffer; the
+                    // instruction is architecturally fault-free but the
+                    // pointer must not be formed with `add`'s in-bounds
+                    // contract.
+                    _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(4 * ncb).cast());
+                    _mm_prefetch::<_MM_HINT_T0>(apk.wrapping_add(4 * MR).cast());
+                    step24!();
+                    step24!();
+                    step24!();
+                    step24!();
+                    p += 4;
+                }
+                while p < kcb {
+                    step24!();
+                    p += 1;
                 }
                 _mm256_storeu_ps(o0.add(j), c00);
                 _mm256_storeu_ps(o0.add(j + 8), c01);
+                _mm256_storeu_ps(o0.add(j + 16), c02);
                 _mm256_storeu_ps(o1.add(j), c10);
                 _mm256_storeu_ps(o1.add(j + 8), c11);
+                _mm256_storeu_ps(o1.add(j + 16), c12);
                 _mm256_storeu_ps(o2.add(j), c20);
                 _mm256_storeu_ps(o2.add(j + 8), c21);
+                _mm256_storeu_ps(o2.add(j + 16), c22);
                 _mm256_storeu_ps(o3.add(j), c30);
                 _mm256_storeu_ps(o3.add(j + 8), c31);
-                j += 16;
+                _mm256_storeu_ps(o3.add(j + 16), c32);
+                j += 24;
             }
             while j + 8 <= ncb {
                 let mut c0 = _mm256_loadu_ps(o0.add(j));
@@ -434,13 +499,17 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------------
-// AVX-512 / NEON stubs: same trait, delegating bodies
+// AVX-512F nanokernel: 4x32 register tile (8 zmm accumulators)
 // ---------------------------------------------------------------------------
 
-/// AVX-512 stub: keeps the plan-schema slot (`simd:avx512`) and the
-/// dispatch seam; the body currently delegates to the AVX2 kernel
-/// (every AVX-512F machine runs AVX2+FMA).  A real 4x32 zmm tile drops
-/// in here without touching the plan compiler.
+/// The AVX-512F kernel: a 4x32 C tile held in 8 zmm registers (4 rows
+/// x 2 zmm of 16 lanes) across the whole k block — per k step, 2 B
+/// loads + 4 A broadcasts + 8 `vfmadd231ps`, k-unrolled by 4 with
+/// prefetch like the AVX2 body.  The j remainder runs 16 masked lanes
+/// at a time (`__mmask16` maskz load / mask store), so partial columns
+/// never touch memory outside the tile; ragged rows fall back to
+/// scalar `mul_add`.  Falls back to [`PortableNano`] off x86-64;
+/// [`kernel_for`] never hands this body to a host without avx512f.
 pub struct Avx512Nano;
 
 static AVX512: Avx512Nano = Avx512Nano;
@@ -450,6 +519,7 @@ impl Nanokernel for Avx512Nano {
         Isa::Avx512
     }
 
+    #[allow(unused_variables)]
     fn macro_kernel(
         &self,
         out: &mut [f32],
@@ -462,13 +532,171 @@ impl Nanokernel for Avx512Nano {
         apack: &[f32],
         bpack: &[f32],
     ) {
-        AVX2.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert!(hw_available(Isa::Avx512), "AVX-512 body on a non-avx512f host");
+            // SAFETY: kernel_for() only resolves to this body when the
+            // host reports avx512f; slice extents are checked inside.
+            unsafe {
+                avx512::macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        PORTABLE.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
     }
 }
 
-/// NEON stub: delegates to the portable body (which a NEON
-/// autovectorizer handles well); the `simd:neon` plan slot is already
-/// wired for an intrinsic `float32x4_t` tile.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use core::arch::x86_64::*;
+
+    use super::MR;
+
+    // The 8-accumulator layout below hard-codes four C rows.
+    const _: () = assert!(MR == 4, "the AVX-512 nanokernel is shaped for MR == 4");
+
+    /// The 4x32 zmm FMA macro kernel.  Per output element one FMA
+    /// chain in increasing-k order; the k-unroll repeats the step
+    /// body without splitting any chain (see the module numerics note).
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports avx512f.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn macro_kernel(
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        let full_panels = mcb / MR;
+        for pi in 0..full_panels {
+            let i0 = ic + pi * MR;
+            let ap = &apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+            assert!((i0 + MR - 1) * ldc + jc + ncb <= out.len(), "C tile bounds");
+            assert!(kcb * ncb <= bpack.len(), "B panel bounds");
+            let obase = out.as_mut_ptr();
+            let o0 = obase.add(i0 * ldc + jc);
+            let o1 = obase.add((i0 + 1) * ldc + jc);
+            let o2 = obase.add((i0 + 2) * ldc + jc);
+            let o3 = obase.add((i0 + 3) * ldc + jc);
+            let bbase = bpack.as_ptr();
+            let mut j = 0usize;
+            while j + 32 <= ncb {
+                let mut c00 = _mm512_loadu_ps(o0.add(j));
+                let mut c01 = _mm512_loadu_ps(o0.add(j + 16));
+                let mut c10 = _mm512_loadu_ps(o1.add(j));
+                let mut c11 = _mm512_loadu_ps(o1.add(j + 16));
+                let mut c20 = _mm512_loadu_ps(o2.add(j));
+                let mut c21 = _mm512_loadu_ps(o2.add(j + 16));
+                let mut c30 = _mm512_loadu_ps(o3.add(j));
+                let mut c31 = _mm512_loadu_ps(o3.add(j + 16));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                let mut p = 0usize;
+                macro_rules! step512 {
+                    () => {{
+                        let b0 = _mm512_loadu_ps(bp);
+                        let b1 = _mm512_loadu_ps(bp.add(16));
+                        let a0 = _mm512_set1_ps(*apk);
+                        let a1 = _mm512_set1_ps(*apk.add(1));
+                        let a2 = _mm512_set1_ps(*apk.add(2));
+                        let a3 = _mm512_set1_ps(*apk.add(3));
+                        c00 = _mm512_fmadd_ps(a0, b0, c00);
+                        c01 = _mm512_fmadd_ps(a0, b1, c01);
+                        c10 = _mm512_fmadd_ps(a1, b0, c10);
+                        c11 = _mm512_fmadd_ps(a1, b1, c11);
+                        c20 = _mm512_fmadd_ps(a2, b0, c20);
+                        c21 = _mm512_fmadd_ps(a2, b1, c21);
+                        c30 = _mm512_fmadd_ps(a3, b0, c30);
+                        c31 = _mm512_fmadd_ps(a3, b1, c31);
+                        bp = bp.add(ncb);
+                        apk = apk.add(MR);
+                    }};
+                }
+                while p + 4 <= kcb {
+                    // wrapping_add: see the AVX2 body — prefetch
+                    // addresses may run past the pack buffer.
+                    _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(4 * ncb).cast());
+                    _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(4 * ncb + 16).cast());
+                    _mm_prefetch::<_MM_HINT_T0>(apk.wrapping_add(4 * MR).cast());
+                    step512!();
+                    step512!();
+                    step512!();
+                    step512!();
+                    p += 4;
+                }
+                while p < kcb {
+                    step512!();
+                    p += 1;
+                }
+                _mm512_storeu_ps(o0.add(j), c00);
+                _mm512_storeu_ps(o0.add(j + 16), c01);
+                _mm512_storeu_ps(o1.add(j), c10);
+                _mm512_storeu_ps(o1.add(j + 16), c11);
+                _mm512_storeu_ps(o2.add(j), c20);
+                _mm512_storeu_ps(o2.add(j + 16), c21);
+                _mm512_storeu_ps(o3.add(j), c30);
+                _mm512_storeu_ps(o3.add(j + 16), c31);
+                j += 32;
+            }
+            while j < ncb {
+                let rem = ncb - j;
+                let msk: __mmask16 =
+                    if rem >= 16 { 0xFFFF } else { (1u16 << rem) - 1 };
+                let mut c0 = _mm512_maskz_loadu_ps(msk, o0.add(j));
+                let mut c1 = _mm512_maskz_loadu_ps(msk, o1.add(j));
+                let mut c2 = _mm512_maskz_loadu_ps(msk, o2.add(j));
+                let mut c3 = _mm512_maskz_loadu_ps(msk, o3.add(j));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                for _p in 0..kcb {
+                    let b0 = _mm512_maskz_loadu_ps(msk, bp);
+                    c0 = _mm512_fmadd_ps(_mm512_set1_ps(*apk), b0, c0);
+                    c1 = _mm512_fmadd_ps(_mm512_set1_ps(*apk.add(1)), b0, c1);
+                    c2 = _mm512_fmadd_ps(_mm512_set1_ps(*apk.add(2)), b0, c2);
+                    c3 = _mm512_fmadd_ps(_mm512_set1_ps(*apk.add(3)), b0, c3);
+                    bp = bp.add(ncb);
+                    apk = apk.add(MR);
+                }
+                _mm512_mask_storeu_ps(o0.add(j), msk, c0);
+                _mm512_mask_storeu_ps(o1.add(j), msk, c1);
+                _mm512_mask_storeu_ps(o2.add(j), msk, c2);
+                _mm512_mask_storeu_ps(o3.add(j), msk, c3);
+                j += 16;
+            }
+        }
+        for i in full_panels * MR..mcb {
+            let (pi, ir) = (i / MR, i % MR);
+            let ap = &apack[pi * MR * kcb..];
+            for j in 0..ncb {
+                let idx = (ic + i) * ldc + jc + j;
+                let mut x = out[idx];
+                for p in 0..kcb {
+                    x = ap[p * MR + ir].mul_add(bpack[p * ncb + j], x);
+                }
+                out[idx] = x;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON nanokernel: 4x16 register tile (16 float32x4_t accumulators)
+// ---------------------------------------------------------------------------
+
+/// The NEON kernel: a 4x16 C tile held in 16 `float32x4_t` registers
+/// (4 rows x 4 vectors of 4 lanes) across the whole k block — per k
+/// step, 4 B loads + 4 A broadcasts + 16 `vfmaq_f32`.  The j
+/// remainders (4-wide, then scalar) and ragged rows use `mul_add`.
+/// Off aarch64 this delegates to [`PortableNano`] — and
+/// [`hw_available`] reports NEON unavailable there, so [`kernel_for`]
+/// routes around it anyway.
 pub struct NeonNano;
 
 static NEON: NeonNano = NeonNano;
@@ -478,6 +706,7 @@ impl Nanokernel for NeonNano {
         Isa::Neon
     }
 
+    #[allow(unused_variables)]
     fn macro_kernel(
         &self,
         out: &mut [f32],
@@ -490,7 +719,171 @@ impl Nanokernel for NeonNano {
         apack: &[f32],
         bpack: &[f32],
     ) {
+        #[cfg(target_arch = "aarch64")]
+        {
+            // SAFETY: NEON is architecturally guaranteed on aarch64;
+            // slice extents are checked inside.
+            unsafe {
+                neon::macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+            }
+        }
+        #[cfg(not(target_arch = "aarch64"))]
         PORTABLE.macro_kernel(out, ldc, ic, mcb, jc, ncb, kcb, apack, bpack);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use super::MR;
+
+    // The 16-accumulator layout below hard-codes four C rows.
+    const _: () = assert!(MR == 4, "the NEON nanokernel is shaped for MR == 4");
+
+    /// The 4x16 `float32x4_t` FMA macro kernel.  Per output element one
+    /// FMA chain in increasing-k order (see the module numerics note).
+    ///
+    /// # Safety
+    /// aarch64-only (guaranteed NEON); pointer math is bounds-checked
+    /// per row quad below.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn macro_kernel(
+        out: &mut [f32],
+        ldc: usize,
+        ic: usize,
+        mcb: usize,
+        jc: usize,
+        ncb: usize,
+        kcb: usize,
+        apack: &[f32],
+        bpack: &[f32],
+    ) {
+        let full_panels = mcb / MR;
+        for pi in 0..full_panels {
+            let i0 = ic + pi * MR;
+            let ap = &apack[pi * MR * kcb..(pi + 1) * MR * kcb];
+            assert!((i0 + MR - 1) * ldc + jc + ncb <= out.len(), "C tile bounds");
+            assert!(kcb * ncb <= bpack.len(), "B panel bounds");
+            let obase = out.as_mut_ptr();
+            let o0 = obase.add(i0 * ldc + jc);
+            let o1 = obase.add((i0 + 1) * ldc + jc);
+            let o2 = obase.add((i0 + 2) * ldc + jc);
+            let o3 = obase.add((i0 + 3) * ldc + jc);
+            let bbase = bpack.as_ptr();
+            let mut j = 0usize;
+            while j + 16 <= ncb {
+                let mut c00 = vld1q_f32(o0.add(j));
+                let mut c01 = vld1q_f32(o0.add(j + 4));
+                let mut c02 = vld1q_f32(o0.add(j + 8));
+                let mut c03 = vld1q_f32(o0.add(j + 12));
+                let mut c10 = vld1q_f32(o1.add(j));
+                let mut c11 = vld1q_f32(o1.add(j + 4));
+                let mut c12 = vld1q_f32(o1.add(j + 8));
+                let mut c13 = vld1q_f32(o1.add(j + 12));
+                let mut c20 = vld1q_f32(o2.add(j));
+                let mut c21 = vld1q_f32(o2.add(j + 4));
+                let mut c22 = vld1q_f32(o2.add(j + 8));
+                let mut c23 = vld1q_f32(o2.add(j + 12));
+                let mut c30 = vld1q_f32(o3.add(j));
+                let mut c31 = vld1q_f32(o3.add(j + 4));
+                let mut c32 = vld1q_f32(o3.add(j + 8));
+                let mut c33 = vld1q_f32(o3.add(j + 12));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                for _p in 0..kcb {
+                    let b0 = vld1q_f32(bp);
+                    let b1 = vld1q_f32(bp.add(4));
+                    let b2 = vld1q_f32(bp.add(8));
+                    let b3 = vld1q_f32(bp.add(12));
+                    let mut aa = vdupq_n_f32(*apk);
+                    c00 = vfmaq_f32(c00, aa, b0);
+                    c01 = vfmaq_f32(c01, aa, b1);
+                    c02 = vfmaq_f32(c02, aa, b2);
+                    c03 = vfmaq_f32(c03, aa, b3);
+                    aa = vdupq_n_f32(*apk.add(1));
+                    c10 = vfmaq_f32(c10, aa, b0);
+                    c11 = vfmaq_f32(c11, aa, b1);
+                    c12 = vfmaq_f32(c12, aa, b2);
+                    c13 = vfmaq_f32(c13, aa, b3);
+                    aa = vdupq_n_f32(*apk.add(2));
+                    c20 = vfmaq_f32(c20, aa, b0);
+                    c21 = vfmaq_f32(c21, aa, b1);
+                    c22 = vfmaq_f32(c22, aa, b2);
+                    c23 = vfmaq_f32(c23, aa, b3);
+                    aa = vdupq_n_f32(*apk.add(3));
+                    c30 = vfmaq_f32(c30, aa, b0);
+                    c31 = vfmaq_f32(c31, aa, b1);
+                    c32 = vfmaq_f32(c32, aa, b2);
+                    c33 = vfmaq_f32(c33, aa, b3);
+                    bp = bp.add(ncb);
+                    apk = apk.add(MR);
+                }
+                vst1q_f32(o0.add(j), c00);
+                vst1q_f32(o0.add(j + 4), c01);
+                vst1q_f32(o0.add(j + 8), c02);
+                vst1q_f32(o0.add(j + 12), c03);
+                vst1q_f32(o1.add(j), c10);
+                vst1q_f32(o1.add(j + 4), c11);
+                vst1q_f32(o1.add(j + 8), c12);
+                vst1q_f32(o1.add(j + 12), c13);
+                vst1q_f32(o2.add(j), c20);
+                vst1q_f32(o2.add(j + 4), c21);
+                vst1q_f32(o2.add(j + 8), c22);
+                vst1q_f32(o2.add(j + 12), c23);
+                vst1q_f32(o3.add(j), c30);
+                vst1q_f32(o3.add(j + 4), c31);
+                vst1q_f32(o3.add(j + 8), c32);
+                vst1q_f32(o3.add(j + 12), c33);
+                j += 16;
+            }
+            while j + 4 <= ncb {
+                let mut c0 = vld1q_f32(o0.add(j));
+                let mut c1 = vld1q_f32(o1.add(j));
+                let mut c2 = vld1q_f32(o2.add(j));
+                let mut c3 = vld1q_f32(o3.add(j));
+                let mut bp = bbase.add(j);
+                let mut apk = ap.as_ptr();
+                for _p in 0..kcb {
+                    let b0 = vld1q_f32(bp);
+                    c0 = vfmaq_f32(c0, vdupq_n_f32(*apk), b0);
+                    c1 = vfmaq_f32(c1, vdupq_n_f32(*apk.add(1)), b0);
+                    c2 = vfmaq_f32(c2, vdupq_n_f32(*apk.add(2)), b0);
+                    c3 = vfmaq_f32(c3, vdupq_n_f32(*apk.add(3)), b0);
+                    bp = bp.add(ncb);
+                    apk = apk.add(MR);
+                }
+                vst1q_f32(o0.add(j), c0);
+                vst1q_f32(o1.add(j), c1);
+                vst1q_f32(o2.add(j), c2);
+                vst1q_f32(o3.add(j), c3);
+                j += 4;
+            }
+            while j < ncb {
+                for r in 0..MR {
+                    let op = obase.add((i0 + r) * ldc + jc + j);
+                    let mut x = *op;
+                    for p in 0..kcb {
+                        x = ap[p * MR + r].mul_add(*bbase.add(p * ncb + j), x);
+                    }
+                    *op = x;
+                }
+                j += 1;
+            }
+        }
+        for i in full_panels * MR..mcb {
+            let (pi, ir) = (i / MR, i % MR);
+            let ap = &apack[pi * MR * kcb..];
+            for j in 0..ncb {
+                let idx = (ic + i) * ldc + jc + j;
+                let mut x = out[idx];
+                for p in 0..kcb {
+                    x = ap[p * MR + ir].mul_add(bpack[p * ncb + j], x);
+                }
+                out[idx] = x;
+            }
+        }
     }
 }
 
@@ -648,6 +1041,9 @@ mod tests {
 
     /// Drive one nanokernel through the full packed-panel path by
     /// running the public matmul with a Simd policy pinned to it.
+    /// nc = 64 so the widest register tiles (24-wide ymm, 32-wide zmm)
+    /// actually run, with every remainder ladder reachable via ragged
+    /// n; kc = 6 exercises the k-unroll epilogue (6 = 4 + 2).
     fn simd_vs_naive(isa: Isa, m: usize, n: usize, k: usize, seed: u64) -> u64 {
         use crate::runtime::kernel::Blocking;
         let mut rng = Rng::new(seed);
@@ -658,7 +1054,7 @@ mod tests {
         matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
         let mut got = c.clone();
         matmul(
-            KernelPolicy::Simd(Blocking { mc: 8, kc: 4, nc: 16 }, 1, isa),
+            KernelPolicy::Simd(Blocking { mc: 8, kc: 6, nc: 64 }, 1, isa),
             &mut got,
             &a,
             &b,
@@ -679,9 +1075,11 @@ mod tests {
             (19, 1, 7),
             (4, 16, 8),
             (5, 17, 9),
-            (4, 35, 12), // 16-wide + 8-wide + scalar j remainders in one row
+            (4, 35, 12), // 24-wide + 8-wide + scalar j remainders in one row
             (33, 7, 21),
             (40, 40, 40),
+            (5, 57, 13), // zmm main + full-mask + partial-mask j steps
+            (7, 100, 30), // every ladder rung incl. ragged rows + k-unroll
         ] {
             for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
                 simd_vs_naive(isa, m, n, k, 0x51D + (m * 1000 + n * 10 + k) as u64);

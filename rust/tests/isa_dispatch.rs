@@ -136,6 +136,81 @@ fn dispatch_degrades_unavailable_isas_to_the_portable_body() {
 }
 
 #[test]
+fn env_override_pins_wide_isas_and_execution_still_degrades() {
+    // Pass 6 pins exactly what the env override names — including ISAs
+    // the build host may lack (a plan is a portable artifact; where it
+    // *executes* decides the body).  Execution then degrades through
+    // `kernel_for`, staying inside the fma_relaxed contract.
+    let (m, n, k) = (48, 40, 24);
+    let mut rng = Rng::new(0xEA5);
+    let a = rng.normal_matrix(m, k);
+    let b = rng.normal_matrix(k, n);
+    let zeros = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+    for (name, isa) in [("avx512", Isa::Avx512), ("neon", Isa::Neon)] {
+        with_force_isa(Some(name), || {
+            let plan =
+                compile(&GemmKey::with_dtypes(m, n, k, mlir_gemm::schedule::Dtype::F32, mlir_gemm::schedule::Dtype::F32), &simd_detect_env()).unwrap();
+            assert_eq!(plan.isa_label(), format!("simd:{name}"));
+            assert!(matches!(plan.kernel, KernelPolicy::Simd(_, _, i) if i == isa));
+            assert_eq!(plan.numerics, NumericsClass::FmaRelaxed);
+            let mut got = vec![0.0f32; m * n];
+            kernel::matmul(plan.kernel, &mut got, &a, &b, m, n, k);
+            nanokernel::verify_fma_relaxed(&got, &want, &a, &b, &zeros, None, m, n, k)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        });
+    }
+}
+
+#[test]
+fn ragged_tails_stay_ulp_bounded_on_every_isa_body() {
+    // The shapes that exercise each body's remainder machinery: the
+    // AVX-512 masked j-tail (n % 32), the AVX2 24-column j-tail
+    // (n % 24), the NEON 16-column j-tail (n % 16), the scalar i-tail
+    // (m % 4), and odd-k unroll tails.  `verify_fma_relaxed` returns the
+    // worst ULP distance it charged against the condition-scaled bound;
+    // on these well-conditioned operands the reassociation error stays
+    // in the hundreds-of-ULP range (the C mirror observes ~6e2 on
+    // similar shapes under cancellation), so a loose absolute ceiling
+    // guards against a remainder path computing garbage that still
+    // sneaks under a large-k condition bound.
+    let shapes = [
+        (4, 32, 8),   // exact one avx512 j-block
+        (5, 33, 7),   // every tail at once, odd k
+        (7, 31, 16),  // j one short of the zmm block
+        (4, 17, 9),   // neon j-tail + ragged k
+        (9, 24, 12),  // exact avx2 j-block, i-tail
+        (3, 25, 21),  // avx2 j-tail of 1
+        (6, 16, 32),  // exact neon j-block
+        (1, 1, 1),    // degenerate minimum
+    ];
+    let mut rng = Rng::new(0x01B);
+    for (m, n, k) in shapes {
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let zeros = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        kernel::matmul(KernelPolicy::Naive, &mut want, &a, &b, m, n, k);
+        for isa in [Isa::Portable, Isa::Avx2Fma, Isa::Avx512, Isa::Neon] {
+            let policy =
+                KernelPolicy::parse(&format!("simd:{}:8,8,32,1", isa.name())).unwrap();
+            let mut got = vec![0.0f32; m * n];
+            kernel::matmul(policy, &mut got, &a, &b, m, n, k);
+            let ulps = nanokernel::verify_fma_relaxed(
+                &got, &want, &a, &b, &zeros, None, m, n, k,
+            )
+            .unwrap_or_else(|e| panic!("{isa:?} {m}x{n}x{k}: {e}"));
+            assert!(
+                ulps <= 4096,
+                "{isa:?} {m}x{n}x{k}: worst ULP distance {ulps} is far beyond \
+                 reassociation noise — a remainder lane is likely wrong"
+            );
+        }
+    }
+}
+
+#[test]
 fn forced_simd_policy_executes_on_any_host() {
     // A forced simd:<isa> kernel policy is executable regardless of the
     // host: unavailable ISAs run the portable body, and the result obeys

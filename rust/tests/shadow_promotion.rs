@@ -1,0 +1,414 @@
+//! Shadow promotion end-to-end: SIMD becomes the serving default by
+//! *measurement*, never by assertion.
+//!
+//! * a server with shadow tuning on samples live traffic, re-executes it
+//!   under the SIMD candidate plan off the reply path, verifies the
+//!   candidate under the `fma_relaxed` contract, and — once the margin
+//!   holds over enough samples — atomically promotes it in the registry;
+//! * the swap is atomic with respect to in-flight traffic: a request
+//!   keeps the plan `Arc` it captured at routing time, even when the
+//!   promotion lands before its reply is sent;
+//! * the decision is persisted to the plan DB (`mlir-gemm-plandb-v1`,
+//!   byte-stable serialization) keyed by problem + hardware fingerprint;
+//! * a restarted server warm-loads the DB and serves its first
+//!   weight-bound request under the promoted SIMD plan with *no*
+//!   re-measurement (`sampled() == 0` stays pinned);
+//! * the committed golden fixture pins the DB grammar for the Rust and
+//!   Python sides alike.
+//!
+//! Timings are pinned via [`ShadowTimes::Fixed`] and the ISA via
+//! [`IsaPref::Fixed`]`(Portable)`, so every decision here replays
+//! identically on any build host — real execution and `fma_relaxed`
+//! verification still happen; only the stopwatch and the probe are
+//! substituted.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mlir_gemm::coordinator::{
+    FaultPlan, GemmKey, GemmRequest, PlanDb, Server, ServerConfig, ShadowConfig,
+    ShadowTimes, PLANDB_FORMAT,
+};
+use mlir_gemm::plan::IsaPref;
+use mlir_gemm::runtime::nanokernel::{verify_fma_relaxed, Isa};
+use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::prng::Rng;
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "big",
+      "file": "big.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [128, 112], "dtype": "f32"},
+        {"shape": [112, 96], "dtype": "f32"},
+        {"shape": [128, 96], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [128, 96], "dtype": "f32"}],
+      "m": 128, "n": 96, "k": 112, "dtype_in": "f32", "dtype_acc": "f32"
+    }
+  ]
+}"#;
+
+const BIG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "big",
+  "program": {
+    "type": "gemm", "m": 128, "n": 96, "k": 112,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+fn big_key() -> GemmKey {
+    GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32)
+}
+
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_shadow_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+    dir
+}
+
+/// Deterministic shadow config: sample every batch, decide after
+/// `min_samples`, pinned stopwatch (candidate twice as fast — clears the
+/// 1.1 hysteresis), pinned portable ISA.
+fn shadow_cfg(dir: &std::path::Path, min_samples: u64) -> ShadowConfig {
+    ShadowConfig {
+        enabled: true,
+        sample_one_in: 1,
+        min_samples,
+        hysteresis: 1.10,
+        isa: IsaPref::Fixed(Isa::Portable),
+        timing: ShadowTimes::Fixed { incumbent: 1.0e-3, candidate: 0.5e-3 },
+        ..ShadowConfig::default()
+    }
+    .with_path(dir.join("reports").join("plandb.json"))
+}
+
+fn naive_reference(key: &GemmKey, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let mut out = c.to_vec();
+    mlir_gemm::runtime::kernel::matmul(
+        KernelPolicy::Naive,
+        &mut out,
+        a,
+        b,
+        key.m,
+        key.n,
+        key.k,
+    );
+    out
+}
+
+struct Operands {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+}
+
+fn operands(rng: &mut Rng, key: &GemmKey) -> Operands {
+    Operands {
+        a: rng.normal_matrix(key.m, key.k),
+        b: rng.normal_matrix(key.k, key.n),
+        c: vec![0.0f32; key.m * key.n],
+    }
+}
+
+fn inline_request(key: &GemmKey, ops: &Operands) -> GemmRequest {
+    GemmRequest {
+        key: key.clone(),
+        a: Tensor::new(vec![key.m, key.k], ops.a.clone()).unwrap(),
+        b: Some(Tensor::new(vec![key.k, key.n], ops.b.clone()).unwrap()),
+        c: Tensor::new(vec![key.m, key.n], ops.c.clone()).unwrap(),
+        bias: None,
+        use_baseline: false,
+        deadline: None,
+    }
+}
+
+#[test]
+fn shadow_promotes_the_measured_simd_winner_and_attributes_its_work() {
+    let dir = store_dir("promote");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig {
+            workers: 2,
+            shadow: shadow_cfg(&dir, 2),
+            ..Default::default()
+        },
+    );
+    let key = big_key();
+    let incumbent = server.registry().plan(&key).unwrap();
+    assert!(
+        !incumbent.isa_label().starts_with("simd"),
+        "the conservative default must not be SIMD before measurement"
+    );
+    let sh = server.shadow().expect("shadow state must exist when enabled");
+    assert_eq!(sh.isa_name(), "portable");
+
+    let mut rng = Rng::new(0x5AD);
+    // Two sampled batches reach min_samples; the candidate's pinned
+    // timing wins, so the decision on batch 2 is a promotion.
+    for i in 0..2 {
+        let ops = operands(&mut rng, &key);
+        let resp = server.call(inline_request(&key, &ops)).unwrap();
+        let out = resp.output.unwrap();
+        // Both requests routed before (or at) the deciding sample run
+        // under the scalar incumbent: bits identical to the naive oracle.
+        assert_eq!(
+            out.data,
+            naive_reference(&key, &ops.a, &ops.b, &ops.c),
+            "pre-promotion request {i} must serve incumbent (bit-exact) output"
+        );
+    }
+    assert_eq!(sh.sampled(), 2);
+    assert_eq!(sh.promoted(), 1);
+    assert_eq!(sh.rejected(), 0);
+    assert_eq!(server.registry().plan_epoch(&key), 1);
+    let promoted =
+        server.registry().promoted_plan(&key).expect("promotion must be installed");
+    assert_eq!(promoted.isa_label(), "simd:portable");
+    assert_eq!(
+        server.registry().serving_plan(&key).unwrap().id(),
+        promoted.id(),
+        "the promoted plan is what new routes serve"
+    );
+
+    // Shadow work is attributed to the candidate plan with zero requests
+    // (no reply was ever served off a shadow run).
+    let snap = server.metrics();
+    let cand_load = snap
+        .per_plan
+        .get(&promoted.id())
+        .expect("candidate plan visible in per-plan metrics");
+    assert_eq!(cand_load.requests, 0);
+    assert!(cand_load.flops > 0.0, "shadow flops are real measured work");
+    assert!(snap.per_plan.get(&incumbent.id()).unwrap().requests >= 2);
+
+    // The next request serves under the promoted SIMD plan: correct to
+    // the fma_relaxed contract, counted against the candidate plan id.
+    let ops = operands(&mut rng, &key);
+    let resp = server.call(inline_request(&key, &ops)).unwrap();
+    let out = resp.output.unwrap();
+    let want = naive_reference(&key, &ops.a, &ops.b, &ops.c);
+    verify_fma_relaxed(
+        &out.data,
+        &want,
+        &ops.a,
+        &ops.b,
+        &ops.c,
+        None,
+        key.m,
+        key.n,
+        key.k,
+    )
+    .expect("post-promotion output must verify under fma_relaxed");
+    assert_eq!(sh.sampled(), 2, "a decided key is never re-sampled");
+    assert_eq!(server.metrics().per_plan.get(&promoted.id()).unwrap().requests, 1);
+}
+
+#[test]
+fn promotion_swaps_atomically_under_in_flight_traffic() {
+    let dir = store_dir("atomic");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    // min_samples = 1: the very first sampled batch promotes — *before*
+    // that batch's own replies are sent (the hook runs ahead of the
+    // reply loop).  Routing delays are injected on every request to
+    // widen the route -> execute window the swap races against.
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig {
+            workers: 2,
+            shadow: shadow_cfg(&dir, 1),
+            faults: FaultPlan {
+                delay_route_one_in: 1,
+                delay_route: Duration::from_millis(20),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let key = big_key();
+    let mut rng = Rng::new(0xA70);
+
+    // R1 routes under the incumbent; the promotion lands mid-flight,
+    // after R1's routing and before its reply.  R1 must still execute
+    // under its routing-time plan: bits identical to the naive oracle.
+    let ops1 = operands(&mut rng, &key);
+    let r1 = server.call(inline_request(&key, &ops1)).unwrap();
+    assert_eq!(
+        r1.output.unwrap().data,
+        naive_reference(&key, &ops1.a, &ops1.b, &ops1.c),
+        "in-flight request must keep the plan captured at routing time"
+    );
+    let sh = server.shadow().unwrap();
+    assert_eq!(sh.promoted(), 1, "first sampled batch decides at min_samples=1");
+    assert_eq!(server.registry().plan_epoch(&key), 1);
+
+    // R2 routes after the swap: served under the promoted SIMD plan.
+    let ops2 = operands(&mut rng, &key);
+    let r2 = server.call(inline_request(&key, &ops2)).unwrap();
+    let out = r2.output.unwrap();
+    let want = naive_reference(&key, &ops2.a, &ops2.b, &ops2.c);
+    verify_fma_relaxed(
+        &out.data, &want, &ops2.a, &ops2.b, &ops2.c, None, key.m, key.n, key.k,
+    )
+    .unwrap();
+    let promoted = server.registry().promoted_plan(&key).unwrap();
+    assert!(
+        server.metrics().per_plan.get(&promoted.id()).unwrap().requests >= 1,
+        "post-swap traffic is attributed to the promoted plan"
+    );
+    assert!(
+        server.faults().injected_delays() >= 2,
+        "the routing-delay schedule must actually have fired"
+    );
+}
+
+#[test]
+fn plan_db_persists_the_decision_and_round_trips_byte_stable() {
+    let dir = store_dir("persist");
+    let db_path = dir.join("reports").join("plandb.json");
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig {
+            workers: 3,
+            shadow: shadow_cfg(&dir, 1),
+            ..Default::default()
+        },
+    );
+    let key = big_key();
+    let incumbent = server.registry().plan(&key).unwrap();
+    let mut rng = Rng::new(0xDB);
+    let ops = operands(&mut rng, &key);
+    server.call(inline_request(&key, &ops)).unwrap().output.unwrap();
+    assert_eq!(server.shadow().unwrap().promoted(), 1);
+
+    // Persisted at promotion time, not shutdown: a crash after the
+    // decision loses nothing.
+    let text = std::fs::read_to_string(&db_path).expect("plan db written on promotion");
+    let db = PlanDb::from_text(&text).unwrap();
+    assert_eq!(db.len(), 1);
+    let rec = db.records().next().unwrap();
+    assert_eq!(rec.key, key);
+    // Hardware fingerprint: pool width (max(workers, devices) = 3) and
+    // the pinned portable ISA.
+    assert_eq!(rec.threads, 3);
+    assert_eq!(rec.isa, "portable");
+    assert_eq!(rec.db_key(), "128x96x112/f32->f32+none@t3/portable");
+    assert_eq!(rec.incumbent_id, incumbent.id());
+    assert_eq!(rec.samples, 1);
+    assert!(
+        rec.candidate_gflops > rec.incumbent_gflops,
+        "the persisted measurement must show the winning margin"
+    );
+    assert_eq!(rec.plan.isa_label(), "simd:portable");
+
+    // Byte stability: the on-disk text IS the canonical serialization,
+    // and save -> load -> save is a fixed point.
+    assert_eq!(text, db.to_text());
+    assert_eq!(db.to_text(), PlanDb::from_text(&db.to_text()).unwrap().to_text());
+}
+
+#[test]
+fn golden_plandb_fixture_pins_the_format_for_both_mirrors() {
+    let text = include_str!("golden/plandb_v1.json");
+    let db = PlanDb::from_text(text).expect("committed golden DB must parse");
+    assert_eq!(db.len(), 1);
+    let rec = db.records().next().unwrap();
+    assert_eq!(rec.db_key(), "128x96x112/f32->f32+none@t3/portable");
+    assert_eq!(rec.key, big_key());
+    assert_eq!(rec.plan.kernel.name(), "simd:portable:64,256,256,3");
+    assert_eq!(rec.plan.isa_label(), "simd:portable");
+    assert!(rec.plan.prepack);
+    // Canonical round trip of the fixture's content.
+    let canon = db.to_text();
+    assert!(canon.contains(PLANDB_FORMAT));
+    assert_eq!(canon, PlanDb::from_text(&canon).unwrap().to_text());
+
+    // Grammar drift is a loud error, not a silent re-key: corrupt the
+    // stored key and the whole DB refuses to load.
+    let bad = text.replace("@t3/portable", "@t4/portable");
+    let err = PlanDb::from_text(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("does not match"));
+}
+
+#[test]
+fn warm_restart_serves_weight_bound_traffic_on_the_promoted_plan_without_remeasuring() {
+    let dir = store_dir("warm");
+    let key = big_key();
+    let mut rng = Rng::new(0x11A8);
+    let weights = rng.normal_matrix(key.k, key.n);
+    let cfg = || ServerConfig {
+        workers: 2,
+        shadow: shadow_cfg(&dir, 1),
+        ..Default::default()
+    };
+
+    // First life: traffic measures, promotes, persists.
+    {
+        let rt = Arc::new(Runtime::open(&dir).unwrap());
+        let mut server =
+            Server::start(rt, &mlir_gemm::sim::DeviceModel::rtx3090(), cfg());
+        let ops = operands(&mut rng, &key);
+        server.call(inline_request(&key, &ops)).unwrap().output.unwrap();
+        assert_eq!(server.shadow().unwrap().promoted(), 1);
+        server.shutdown();
+    }
+
+    // Second life: the promoted plan is installed from the DB before any
+    // traffic, and nothing is ever re-measured.
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    let server = Server::start(rt, &mlir_gemm::sim::DeviceModel::rtx3090(), cfg());
+    let sh = server.shadow().unwrap();
+    assert_eq!(sh.warm_loaded(), 1, "the fingerprint-matching record installs");
+    assert_eq!(sh.sampled(), 0, "warm load measures nothing");
+    let promoted = server
+        .registry()
+        .promoted_plan(&key)
+        .expect("promotion present before the first request routes");
+    assert_eq!(promoted.isa_label(), "simd:portable");
+    assert_eq!(server.registry().plan_epoch(&key), 1);
+
+    // Weight binding follows the promoted plan (prepacked panels), and
+    // the first weight-bound request serves under it.
+    server
+        .bind_weights(&key, &Tensor::new(vec![key.k, key.n], weights.clone()).unwrap())
+        .unwrap();
+    let a = rng.normal_matrix(key.m, key.k);
+    let c = vec![0.0f32; key.m * key.n];
+    let resp = server
+        .call(GemmRequest {
+            key: key.clone(),
+            a: Tensor::new(vec![key.m, key.k], a.clone()).unwrap(),
+            b: None,
+            c: Tensor::new(vec![key.m, key.n], c.clone()).unwrap(),
+            bias: None,
+            use_baseline: false,
+            deadline: None,
+        })
+        .unwrap();
+    let out = resp.output.unwrap();
+    let want = naive_reference(&key, &a, &weights, &c);
+    verify_fma_relaxed(
+        &out.data, &want, &a, &weights, &c, None, key.m, key.n, key.k,
+    )
+    .expect("warm-served weight-bound output verifies under fma_relaxed");
+    assert!(
+        server.metrics().per_plan.get(&promoted.id()).unwrap().requests >= 1,
+        "the first request after restart runs on the promoted plan"
+    );
+    assert_eq!(sh.sampled(), 0, "still no re-measurement after serving");
+}

@@ -16,6 +16,12 @@ typedef struct {
 /* kernel.rs DEFAULT_BLOCKING */
 #define DEFAULT_BLOCKING ((blocking_t){128, 256, 1024})
 
+/* nanokernel engines selectable in gemm_banded, mirroring the Isa enum
+ * (scalar == the Micro::Scalar macro kernel, not PortableNano) */
+#define ENGINE_SCALAR 0
+#define ENGINE_AVX2 1
+#define ENGINE_AVX512 2
+
 /* naive i-k-j reference: out += a @ b (out holds C on entry) */
 void gemm_naive(float *out, const float *a, const float *b,
                 size_t m, size_t n, size_t k);
@@ -25,10 +31,11 @@ void gemm_tiled(float *out, const float *a, const float *b,
                 size_t m, size_t n, size_t k, blocking_t bs);
 
 /* row-banded threading over the tiled kernel; threads==0 probes nproc.
- * avx2 != 0 swaps the macro kernel for the AVX2+FMA nanokernel. */
+ * engine is one of ENGINE_* and swaps the macro kernel for the matching
+ * nanokernel body (ENGINE_AVX512 requires mirror_have_avx512()). */
 void gemm_banded(float *out, const float *a, const float *b,
                  size_t m, size_t n, size_t k, blocking_t bs,
-                 size_t threads, int avx2);
+                 size_t threads, int engine);
 
 /* portable 4-wide nanokernel (nanokernel.rs PortableNano), one thread */
 void gemm_portable_nano(float *out, const float *a, const float *b,
@@ -39,5 +46,13 @@ void gemm_portable_nano(float *out, const float *a, const float *b,
 void avx2_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
                        size_t jc, size_t ncb, size_t kcb,
                        const float *apack, const float *bpack);
+
+/* nanokernel.rs avx512::macro_kernel — defined in mirror_avx512.c, the
+ * only translation unit built with -mavx512f.  Callers must gate on
+ * mirror_have_avx512() (runtime cpuid probe, safe to call anywhere). */
+void avx512_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                         size_t jc, size_t ncb, size_t kcb,
+                         const float *apack, const float *bpack);
+int mirror_have_avx512(void);
 
 #endif

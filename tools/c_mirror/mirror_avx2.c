@@ -1,7 +1,15 @@
 /* Line-by-line C mirror of nanokernel.rs avx2::macro_kernel — the
- * 4x16 AVX2+FMA register tile (8 ymm accumulators, 2 B loads + 4 A
- * broadcasts + 8 vfmadd231ps per k step), the 8-wide j remainder, the
- * scalar fmaf() j tail, and the ragged-row fmaf() tail.
+ * tuned 4x24 AVX2+FMA register tile (12 ymm accumulators, 3 B loads +
+ * 4 A broadcasts + 12 vfmadd231ps per k step), k-unrolled by 4 with a
+ * software prefetch of the B/A panel rows 4 k-steps ahead, then the
+ * 8-wide j remainder, the scalar fmaf() j tail, and the ragged-row
+ * fmaf() tail.
+ *
+ * Each of the 12 accumulators is an independent FMA chain in strict
+ * increasing-k order; the k-unroll only repeats the step body, it does
+ * not split or reassociate any accumulator, so the rounding sequence
+ * per output element is a single any-order FMA accumulation — exactly
+ * the shape the fma_relaxed bound (DESIGN.md §10) covers.
  *
  * This is the ONLY translation unit built with -mavx2 -mfma.  It still
  * uses -ffp-contract=off: every fused multiply-add below is explicit
@@ -23,43 +31,69 @@ void avx2_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
         float *o0 = out + i0 * ldc + jc;
         float *o1 = o0 + ldc, *o2 = o1 + ldc, *o3 = o2 + ldc;
         size_t j = 0;
-        for (; j + 16 <= ncb; j += 16) {
+        for (; j + 24 <= ncb; j += 24) {
             __m256 c00 = _mm256_loadu_ps(o0 + j);
             __m256 c01 = _mm256_loadu_ps(o0 + j + 8);
+            __m256 c02 = _mm256_loadu_ps(o0 + j + 16);
             __m256 c10 = _mm256_loadu_ps(o1 + j);
             __m256 c11 = _mm256_loadu_ps(o1 + j + 8);
+            __m256 c12 = _mm256_loadu_ps(o1 + j + 16);
             __m256 c20 = _mm256_loadu_ps(o2 + j);
             __m256 c21 = _mm256_loadu_ps(o2 + j + 8);
+            __m256 c22 = _mm256_loadu_ps(o2 + j + 16);
             __m256 c30 = _mm256_loadu_ps(o3 + j);
             __m256 c31 = _mm256_loadu_ps(o3 + j + 8);
+            __m256 c32 = _mm256_loadu_ps(o3 + j + 16);
             const float *bp = bpack + j;
             const float *apk = ap;
-            for (size_t p = 0; p < kcb; p++) {
-                __m256 b0 = _mm256_loadu_ps(bp);
-                __m256 b1 = _mm256_loadu_ps(bp + 8);
-                __m256 a0 = _mm256_set1_ps(apk[0]);
-                __m256 a1 = _mm256_set1_ps(apk[1]);
-                __m256 a2 = _mm256_set1_ps(apk[2]);
-                __m256 a3 = _mm256_set1_ps(apk[3]);
-                c00 = _mm256_fmadd_ps(a0, b0, c00);
-                c01 = _mm256_fmadd_ps(a0, b1, c01);
-                c10 = _mm256_fmadd_ps(a1, b0, c10);
-                c11 = _mm256_fmadd_ps(a1, b1, c11);
-                c20 = _mm256_fmadd_ps(a2, b0, c20);
-                c21 = _mm256_fmadd_ps(a2, b1, c21);
-                c30 = _mm256_fmadd_ps(a3, b0, c30);
-                c31 = _mm256_fmadd_ps(a3, b1, c31);
-                bp += ncb;
-                apk += MR;
+            size_t p = 0;
+#define STEP24                                                             \
+    do {                                                                   \
+        __m256 b0 = _mm256_loadu_ps(bp);                                   \
+        __m256 b1 = _mm256_loadu_ps(bp + 8);                               \
+        __m256 b2 = _mm256_loadu_ps(bp + 16);                              \
+        __m256 aa = _mm256_set1_ps(apk[0]);                                \
+        c00 = _mm256_fmadd_ps(aa, b0, c00);                                \
+        c01 = _mm256_fmadd_ps(aa, b1, c01);                                \
+        c02 = _mm256_fmadd_ps(aa, b2, c02);                                \
+        aa = _mm256_set1_ps(apk[1]);                                       \
+        c10 = _mm256_fmadd_ps(aa, b0, c10);                                \
+        c11 = _mm256_fmadd_ps(aa, b1, c11);                                \
+        c12 = _mm256_fmadd_ps(aa, b2, c12);                                \
+        aa = _mm256_set1_ps(apk[2]);                                       \
+        c20 = _mm256_fmadd_ps(aa, b0, c20);                                \
+        c21 = _mm256_fmadd_ps(aa, b1, c21);                                \
+        c22 = _mm256_fmadd_ps(aa, b2, c22);                                \
+        aa = _mm256_set1_ps(apk[3]);                                       \
+        c30 = _mm256_fmadd_ps(aa, b0, c30);                                \
+        c31 = _mm256_fmadd_ps(aa, b1, c31);                                \
+        c32 = _mm256_fmadd_ps(aa, b2, c32);                                \
+        bp += ncb;                                                         \
+        apk += MR;                                                         \
+    } while (0)
+            for (; p + 4 <= kcb; p += 4) {
+                _mm_prefetch((const char *)(bp + 4 * ncb), _MM_HINT_T0);
+                _mm_prefetch((const char *)(apk + 4 * MR), _MM_HINT_T0);
+                STEP24;
+                STEP24;
+                STEP24;
+                STEP24;
             }
+            for (; p < kcb; p++)
+                STEP24;
+#undef STEP24
             _mm256_storeu_ps(o0 + j, c00);
             _mm256_storeu_ps(o0 + j + 8, c01);
+            _mm256_storeu_ps(o0 + j + 16, c02);
             _mm256_storeu_ps(o1 + j, c10);
             _mm256_storeu_ps(o1 + j + 8, c11);
+            _mm256_storeu_ps(o1 + j + 16, c12);
             _mm256_storeu_ps(o2 + j, c20);
             _mm256_storeu_ps(o2 + j + 8, c21);
+            _mm256_storeu_ps(o2 + j + 16, c22);
             _mm256_storeu_ps(o3 + j, c30);
             _mm256_storeu_ps(o3 + j + 8, c31);
+            _mm256_storeu_ps(o3 + j + 16, c32);
         }
         for (; j + 8 <= ncb; j += 8) {
             __m256 c0 = _mm256_loadu_ps(o0 + j);

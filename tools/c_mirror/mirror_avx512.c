@@ -1,0 +1,124 @@
+/* Line-by-line C mirror of nanokernel.rs avx512::macro_kernel — the
+ * 4x32 AVX-512F register tile (8 zmm accumulators: 4 rows x 2 zmm of
+ * 16 lanes, 2 B loads + 4 A broadcasts + 8 vfmadd231ps per k step),
+ * k-unrolled by 4 with a software prefetch of the B/A panel rows 4
+ * k-steps ahead, a masked 16-lane j remainder (`__mmask16` maskz load
+ * / mask store, so partial columns never touch memory outside the
+ * tile), and the ragged-row fmaf() tail.
+ *
+ * Each accumulator is an independent FMA chain in strict increasing-k
+ * order; the unroll repeats the step body without reassociating any
+ * chain, so every output element sees one any-order FMA accumulation —
+ * the shape the fma_relaxed bound (DESIGN.md §10) covers.
+ *
+ * This is the ONLY translation unit built with -mavx512f.  Callers
+ * gate on mirror_have_avx512(); the probe itself needs no avx512
+ * codegen and is safe on any x86-64.  -ffp-contract=off as everywhere:
+ * all fusion below is explicit intrinsics or fmaf.
+ */
+#include "mirror.h"
+
+#include <immintrin.h>
+#include <math.h>
+
+int mirror_have_avx512(void) { return __builtin_cpu_supports("avx512f"); }
+
+void avx512_macro_kernel(float *out, size_t ldc, size_t ic, size_t mcb,
+                         size_t jc, size_t ncb, size_t kcb,
+                         const float *apack, const float *bpack) {
+    size_t full_panels = mcb / MR;
+    for (size_t pi = 0; pi < full_panels; pi++) {
+        size_t i0 = ic + pi * MR;
+        const float *ap = apack + pi * MR * kcb;
+        float *o0 = out + i0 * ldc + jc;
+        float *o1 = o0 + ldc, *o2 = o1 + ldc, *o3 = o2 + ldc;
+        size_t j = 0;
+        for (; j + 32 <= ncb; j += 32) {
+            __m512 c00 = _mm512_loadu_ps(o0 + j);
+            __m512 c01 = _mm512_loadu_ps(o0 + j + 16);
+            __m512 c10 = _mm512_loadu_ps(o1 + j);
+            __m512 c11 = _mm512_loadu_ps(o1 + j + 16);
+            __m512 c20 = _mm512_loadu_ps(o2 + j);
+            __m512 c21 = _mm512_loadu_ps(o2 + j + 16);
+            __m512 c30 = _mm512_loadu_ps(o3 + j);
+            __m512 c31 = _mm512_loadu_ps(o3 + j + 16);
+            const float *bp = bpack + j;
+            const float *apk = ap;
+            size_t p = 0;
+#define STEP512                                                            \
+    do {                                                                   \
+        __m512 b0 = _mm512_loadu_ps(bp);                                   \
+        __m512 b1 = _mm512_loadu_ps(bp + 16);                              \
+        __m512 a0 = _mm512_set1_ps(apk[0]);                                \
+        __m512 a1 = _mm512_set1_ps(apk[1]);                                \
+        __m512 a2 = _mm512_set1_ps(apk[2]);                                \
+        __m512 a3 = _mm512_set1_ps(apk[3]);                                \
+        c00 = _mm512_fmadd_ps(a0, b0, c00);                                \
+        c01 = _mm512_fmadd_ps(a0, b1, c01);                                \
+        c10 = _mm512_fmadd_ps(a1, b0, c10);                                \
+        c11 = _mm512_fmadd_ps(a1, b1, c11);                                \
+        c20 = _mm512_fmadd_ps(a2, b0, c20);                                \
+        c21 = _mm512_fmadd_ps(a2, b1, c21);                                \
+        c30 = _mm512_fmadd_ps(a3, b0, c30);                                \
+        c31 = _mm512_fmadd_ps(a3, b1, c31);                                \
+        bp += ncb;                                                         \
+        apk += MR;                                                         \
+    } while (0)
+            for (; p + 4 <= kcb; p += 4) {
+                _mm_prefetch((const char *)(bp + 4 * ncb), _MM_HINT_T0);
+                _mm_prefetch((const char *)(bp + 4 * ncb + 16), _MM_HINT_T0);
+                _mm_prefetch((const char *)(apk + 4 * MR), _MM_HINT_T0);
+                STEP512;
+                STEP512;
+                STEP512;
+                STEP512;
+            }
+            for (; p < kcb; p++)
+                STEP512;
+#undef STEP512
+            _mm512_storeu_ps(o0 + j, c00);
+            _mm512_storeu_ps(o0 + j + 16, c01);
+            _mm512_storeu_ps(o1 + j, c10);
+            _mm512_storeu_ps(o1 + j + 16, c11);
+            _mm512_storeu_ps(o2 + j, c20);
+            _mm512_storeu_ps(o2 + j + 16, c21);
+            _mm512_storeu_ps(o3 + j, c30);
+            _mm512_storeu_ps(o3 + j + 16, c31);
+        }
+        for (; j < ncb; j += 16) {
+            size_t rem = ncb - j;
+            __mmask16 msk = rem >= 16 ? (__mmask16)0xFFFF
+                                      : (__mmask16)((1u << rem) - 1);
+            __m512 c0 = _mm512_maskz_loadu_ps(msk, o0 + j);
+            __m512 c1 = _mm512_maskz_loadu_ps(msk, o1 + j);
+            __m512 c2 = _mm512_maskz_loadu_ps(msk, o2 + j);
+            __m512 c3 = _mm512_maskz_loadu_ps(msk, o3 + j);
+            const float *bp = bpack + j;
+            const float *apk = ap;
+            for (size_t p = 0; p < kcb; p++) {
+                __m512 b0 = _mm512_maskz_loadu_ps(msk, bp);
+                c0 = _mm512_fmadd_ps(_mm512_set1_ps(apk[0]), b0, c0);
+                c1 = _mm512_fmadd_ps(_mm512_set1_ps(apk[1]), b0, c1);
+                c2 = _mm512_fmadd_ps(_mm512_set1_ps(apk[2]), b0, c2);
+                c3 = _mm512_fmadd_ps(_mm512_set1_ps(apk[3]), b0, c3);
+                bp += ncb;
+                apk += MR;
+            }
+            _mm512_mask_storeu_ps(o0 + j, msk, c0);
+            _mm512_mask_storeu_ps(o1 + j, msk, c1);
+            _mm512_mask_storeu_ps(o2 + j, msk, c2);
+            _mm512_mask_storeu_ps(o3 + j, msk, c3);
+        }
+    }
+    for (size_t i = full_panels * MR; i < mcb; i++) {
+        size_t pi = i / MR, ir = i % MR;
+        const float *ap = apack + pi * MR * kcb;
+        for (size_t j = 0; j < ncb; j++) {
+            size_t idx = (ic + i) * ldc + jc + j;
+            float x = out[idx];
+            for (size_t p = 0; p < kcb; p++)
+                x = fmaf(ap[p * MR + ir], bpack[p * ncb + j], x);
+            out[idx] = x;
+        }
+    }
+}

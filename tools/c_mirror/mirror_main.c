@@ -6,7 +6,9 @@
  *   2. banded == single-thread, bitwise, scalar AND avx2 engines;
  *   3. portable nanokernel == naive, bitwise (plain mul+add, same order);
  *   4. avx2 nanokernel passes verify_fma_relaxed on the ragged shape
- *      family + the bench sizes; max observed ULP reported.
+ *      family + the bench sizes; max observed ULP reported;
+ *   5. avx512 nanokernel ditto, runtime-gated on mirror_have_avx512()
+ *      (skipped with an explicit line on hosts without avx512f).
  *
  * Usage: mirror [--verify-only]
  */
@@ -119,14 +121,17 @@ static void verify_shape(size_t m, size_t n, size_t k) {
     float *want = malloc(len * sizeof(float));
     float *got = malloc(len * sizeof(float));
     char label[128];
-    blocking_t small = {8, 4, 16};
+    /* nc = 64 reaches the widest register tiles (24-wide ymm, 32-wide
+     * zmm); kc = 6 exercises the k-unroll epilogue — in lockstep with
+     * nanokernel.rs simd_vs_naive. */
+    blocking_t small = {8, 6, 64};
 
     memcpy(want, c, len * sizeof(float));
     gemm_naive(want, a, b, m, n, k);
 
     memcpy(got, c, len * sizeof(float));
     gemm_tiled(got, a, b, m, n, k, small);
-    snprintf(label, sizeof label, "tiled(8,4,16) bitwise == naive at %zux%zux%zu", m, n, k);
+    snprintf(label, sizeof label, "tiled(8,6,64) bitwise == naive at %zux%zux%zu", m, n, k);
     check(bitwise_equal(got, want, len), label);
 
     memcpy(got, c, len * sizeof(float));
@@ -135,10 +140,10 @@ static void verify_shape(size_t m, size_t n, size_t k) {
     check(bitwise_equal(got, want, len), label);
 
     memcpy(got, c, len * sizeof(float));
-    gemm_banded(got, a, b, m, n, k, small, 3, 1);
+    gemm_banded(got, a, b, m, n, k, small, 3, ENGINE_AVX2);
     float *single = malloc(len * sizeof(float));
     memcpy(single, c, len * sizeof(float));
-    gemm_banded(single, a, b, m, n, k, small, 1, 1);
+    gemm_banded(single, a, b, m, n, k, small, 1, ENGINE_AVX2);
     snprintf(label, sizeof label, "banded avx2 (t=3) bitwise == single at %zux%zux%zu", m, n, k);
     check(bitwise_equal(got, single, len), label);
 
@@ -147,6 +152,21 @@ static void verify_shape(size_t m, size_t n, size_t k) {
     check(verify_fma_relaxed(single, want, a, b, c, m, n, k, &max_ulp), label);
     printf("      max ulp vs oracle: %" PRIu64 "\n", max_ulp);
 
+    if (mirror_have_avx512()) {
+        memcpy(got, c, len * sizeof(float));
+        gemm_banded(got, a, b, m, n, k, small, 3, ENGINE_AVX512);
+        memcpy(single, c, len * sizeof(float));
+        gemm_banded(single, a, b, m, n, k, small, 1, ENGINE_AVX512);
+        snprintf(label, sizeof label, "banded avx512 (t=3) bitwise == single at %zux%zux%zu", m, n, k);
+        check(bitwise_equal(got, single, len), label);
+        snprintf(label, sizeof label, "avx512 nano meets fma_relaxed bound at %zux%zux%zu", m, n, k);
+        check(verify_fma_relaxed(single, want, a, b, c, m, n, k, &max_ulp), label);
+        printf("      max ulp vs oracle: %" PRIu64 "\n", max_ulp);
+    } else {
+        printf("skip  avx512 nano checks at %zux%zux%zu (no avx512f on this host)\n",
+               m, n, k);
+    }
+
     free(a); free(b); free(c); free(want); free(got); free(single);
 }
 
@@ -154,7 +174,7 @@ typedef struct {
     const char *name;
     blocking_t bs;
     size_t threads;
-    int avx2;
+    int engine; /* ENGINE_* for banded; ignored for naive/tiled */
     int naive;
 } policy_t;
 
@@ -268,13 +288,18 @@ static void bench_size(size_t size) {
     gemm_naive(want, a, b, size, size, size);
 
     policy_t policies[] = {
-        {"naive", DEFAULT_BLOCKING, 1, 0, 1},
-        {"tiled", DEFAULT_BLOCKING, 1, 0, 0},
-        {"threaded", DEFAULT_BLOCKING, 0, 0, 0},
-        {"simd:avx2", DEFAULT_BLOCKING, 0, 1, 0},
+        {"naive", DEFAULT_BLOCKING, 1, ENGINE_SCALAR, 1},
+        {"tiled", DEFAULT_BLOCKING, 1, ENGINE_SCALAR, 0},
+        {"threaded", DEFAULT_BLOCKING, 0, ENGINE_SCALAR, 0},
+        {"simd:avx2", DEFAULT_BLOCKING, 0, ENGINE_AVX2, 0},
+        {"simd:avx512", DEFAULT_BLOCKING, 0, ENGINE_AVX512, 0},
     };
     for (size_t pi = 0; pi < sizeof policies / sizeof *policies; pi++) {
         policy_t *p = &policies[pi];
+        if (p->engine == ENGINE_AVX512 && !mirror_have_avx512()) {
+            printf("skip  %s at %zu (no avx512f on this host)\n", p->name, size);
+            continue;
+        }
         double best = 1e30;
         int reps = 0;
         double budget = now_sec() + (size >= 2048 ? 8.0 : 3.0);
@@ -283,16 +308,16 @@ static void bench_size(size_t size) {
             double t0 = now_sec();
             if (p->naive)
                 gemm_naive(out, a, b, size, size, size);
-            else if (p->threads == 1 && !p->avx2)
+            else if (p->threads == 1 && p->engine == ENGINE_SCALAR)
                 gemm_tiled(out, a, b, size, size, size, p->bs);
             else
-                gemm_banded(out, a, b, size, size, size, p->bs, p->threads, p->avx2);
+                gemm_banded(out, a, b, size, size, size, p->bs, p->threads, p->engine);
             double dt = now_sec() - t0;
             if (dt < best)
                 best = dt;
             reps++;
         } while (reps < 3 || (now_sec() < budget && reps < 12));
-        if (p->avx2) {
+        if (p->engine != ENGINE_SCALAR) {
             uint64_t max_ulp;
             if (!verify_fma_relaxed(out, want, a, b, c, size, size, size, &max_ulp))
                 g_failures++;
@@ -354,6 +379,7 @@ int main(int argc, char **argv) {
     size_t shapes[][3] = {
         {1, 1, 1}, {1, 17, 5}, {19, 1, 7}, {4, 16, 8}, {5, 17, 9},
         {4, 35, 12}, {33, 7, 21}, {40, 40, 40}, {96, 64, 48}, {128, 96, 112},
+        {5, 57, 13}, {7, 100, 30},
     };
     for (size_t i = 0; i < sizeof shapes / sizeof *shapes; i++)
         verify_shape(shapes[i][0], shapes[i][1], shapes[i][2]);
