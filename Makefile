@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify verify-scalar build test pytest fuzz check-protocol artifacts artifacts-quick bench-smoke plans program-plans plandb lint fmt clean
+.PHONY: verify verify-scalar build test pytest fuzz check-protocol artifacts artifacts-quick bench-smoke bench-serving plans program-plans plandb lint fmt clean
 
 # Tier-1 verify (ROADMAP.md): must pass from a fresh checkout.
 verify:
@@ -33,19 +33,22 @@ pytest:
 fuzz:
 	$(CARGO) test -q --test fuzz_differential
 
-# Protocol checker (rust/src/check/, DESIGN.md §12): exhaustively
+# Protocol checker (rust/src/check/, DESIGN.md §12–13): exhaustively
 # explore every interleaving of the coordinator protocol model at the
-# full 3-client × 2-device bound, prove the five invariants non-vacuously
-# across the scenario matrix, then replay a clean shutdown-vs-submit
-# schedule against the real server.  The bug-hunt legs re-introduce the
-# PR 5 stop-flag break (and the stale-rebind / containment bugs) behind
-# test hooks and demand a counterexample — the stop-flag one also
-# replays against the real server to show real stranded jobs.
+# full 3-client × 2-device bound, prove the six invariants non-vacuously
+# across the scenario matrix (including the continuous-batching
+# admission scenarios: priority tiers, tenant quotas, in-scheduler
+# deadline sweeps), then replay a clean shutdown-vs-submit schedule
+# against the real server.  The bug-hunt legs re-introduce the PR 5
+# stop-flag break (plus the stale-rebind / containment / FIFO-release
+# bugs) behind test hooks and demand a counterexample — the stop-flag
+# one also replays against the real server to show real stranded jobs.
 check-protocol:
 	$(CARGO) run --release --bin mlir-gemm -- check-protocol
 	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug stop-flag
 	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug stale-rebind
 	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug no-containment
+	$(CARGO) run --release --bin mlir-gemm -- check-protocol --bug fifo-release
 
 # AOT-lower the full artifact set (tprog descriptors + manifest) for the
 # Rust runtime's measured subsets and integration tests.
@@ -61,6 +64,14 @@ artifacts-quick:
 # nanokernel row is never slower than the tiled scalar kernel there.)
 bench-smoke:
 	MLIR_GEMM_SMOKE=1 $(CARGO) bench
+
+# Serving-tier latency bench (rust/benches/serving.rs): lone / paired /
+# open-loop zipfian load scenarios through a real server.  Gate (always
+# asserted, smoke included): lone and paired p50 beat the old 25 ms
+# fixed batching window.  Refresh the committed BENCH_serving.json with
+# MLIR_GEMM_RECORD_BASELINE=1 make bench-serving on a labeled runner.
+bench-serving:
+	MLIR_GEMM_SMOKE=1 $(CARGO) bench --bench serving
 
 # Emit the compiled execution plan for every registry key to
 # reports/plans/ (requires built artifacts: `make artifacts`).

@@ -164,6 +164,16 @@ class ArtifactWriter:
         schedule: Optional[Dict] = None,
         extra: Optional[Dict] = None,
     ) -> None:
+        # Manifest names are the runtime's routing keys; a duplicate
+        # would overwrite the first artifact's descriptor file and leave
+        # two manifest entries shadowing each other (the Rust loader
+        # rejects such manifests outright).  Fail before writing.
+        if any(e["name"] == name for e in self.entries):
+            raise ValueError(
+                f"duplicate artifact name {name!r}: every artifact must be "
+                "uniquely addressable"
+            )
+
         out_shapes = [_shape_entry(o) for o in jax.eval_shape(fn, *arg_shapes)]
         in_shapes = [_shape_entry(s) for s in arg_shapes]
 
@@ -218,7 +228,9 @@ class ArtifactWriter:
         print(f"manifest: {manifest} ({len(self.entries)} artifacts)")
 
 
-def _emit_generated(w: ArtifactWriter, config: PipelineConfig, kind="generated"):
+def _emit_generated(
+    w: ArtifactWriter, config: PipelineConfig, kind="generated", name_suffix=""
+):
     kernel, sched = generate_matmul_with_schedule(config)
     bias = config.epilogue != "none"
 
@@ -233,7 +245,7 @@ def _emit_generated(w: ArtifactWriter, config: PipelineConfig, kind="generated")
             return (kernel(a, b, c),)
 
     w.lower(
-        sched.name,
+        sched.name + name_suffix,
         as_f32_io(fn),
         _mm_shapes(config.m, config.n, config.k, bias),
         kind=kind,
@@ -298,7 +310,12 @@ def build_all(out_dir: str, quick: bool = False, emit_hlo: bool = False) -> None
             level, m=abl_size, n=abl_size, k=abl_size,
             tile_tb=(64, 64, 64), tile_warp=(32, 32, 32),
         )
-        _emit_generated(w, cfg, kind="ablation")
+        # Suffix every rung: the full-opt rung (level 7) has the same
+        # PipelineConfig — and therefore the same variant name — as the
+        # fig2 generated kernel at this size/tiling, and manifest names
+        # must stay unique (ArtifactWriter.lower and the Rust loader
+        # both reject collisions).
+        _emit_generated(w, cfg, kind="ablation", name_suffix=f"__abl{level}")
 
     print("== operator fusion (table1) ==")
     fsize = 256 if quick else 512

@@ -128,6 +128,51 @@ class TestArtifactWriter:
             w.lower("t0", fn, shapes, kind="baseline",
                     program=gemm_program(64, 64, 64))
 
+    def test_duplicate_names_rejected_before_overwrite(self, tmp_path):
+        # PR 1 quirk: ablation level 7 and the identically-configured
+        # generated kernel share a variant name.  A second lower() under
+        # the same name must fail up front — before it clobbers the
+        # first artifact's descriptor file — so the manifest can never
+        # carry two entries shadowing each other.
+        w = ArtifactWriter(str(tmp_path))
+        fn = as_f32_io(matmul_baseline(32, 32, 32))
+        shapes = [jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 3
+        w.lower("t0", fn, shapes, kind="generated",
+                program=gemm_program(32, 32, 32))
+        before = (tmp_path / "t0.tprog.json").read_text()
+        with pytest.raises(ValueError, match="duplicate artifact name"):
+            w.lower("t0", fn, shapes, kind="ablation",
+                    program=gemm_program(32, 32, 32))
+        assert (tmp_path / "t0.tprog.json").read_text() == before
+        assert len(w.entries) == 1
+
+    def test_ablation_suffix_disambiguates_full_opt_level(self, tmp_path):
+        # The build-time fix for the collision above: the ablation
+        # ladder suffixes every rung, so level 7 no longer reuses the
+        # fig2 variant name even though the configs are identical.
+        from compile.kernels import generate_matmul_with_schedule
+
+        w = ArtifactWriter(str(tmp_path))
+        cfg = PipelineConfig(m=64, n=64, k=64, tile_tb=(32, 32, 32),
+                             tile_warp=(16, 16, 16))
+        full = PipelineConfig.opt_level(
+            7, m=64, n=64, k=64, tile_tb=(32, 32, 32),
+            tile_warp=(16, 16, 16))
+        assert cfg.variant_name() == full.variant_name()  # the collision
+        for config, suffix, kind in [(cfg, "", "generated"),
+                                     (full, "__abl7", "ablation")]:
+            kernel, sched = generate_matmul_with_schedule(config)
+            fn = as_f32_io(lambda a, b, c, kernel=kernel: (kernel(a, b, c),))
+            shapes = [jax.ShapeDtypeStruct((64, 64), jnp.float32)] * 3
+            w.lower(sched.name + suffix, fn, shapes, kind=kind,
+                    program=gemm_program(64, 64, 64),
+                    schedule=sched.to_json_dict())
+        w.finish()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        names = [e["name"] for e in manifest["artifacts"]]
+        assert len(names) == len(set(names)) == 2
+        assert names[1] == names[0] + "__abl7"
+
     def test_hlo_side_channel(self, tmp_path):
         w = ArtifactWriter(str(tmp_path), emit_hlo=True)
         fn = as_f32_io(matmul_baseline(32, 32, 32))
@@ -175,6 +220,11 @@ class TestBuiltArtifacts:
         abl = [e for e in self._manifest()["artifacts"] if e["kind"] == "ablation"]
         levels = sorted(e["schedule"]["opt_level"] for e in abl)
         assert levels == list(range(8))
+
+    def test_artifact_names_unique(self):
+        names = [e["name"] for e in self._manifest()["artifacts"]]
+        dupes = {n for n in names if names.count(n) > 1}
+        assert not dupes, f"colliding artifact names: {sorted(dupes)}"
 
     def test_io_all_f32(self):
         for e in self._manifest()["artifacts"]:

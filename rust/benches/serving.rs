@@ -1,0 +1,417 @@
+//! Serving-tier latency bench: the continuous-batching dispatcher under
+//! the three traffic shapes the fixed-window design got wrong, measured
+//! end-to-end through a real [`Server`] over an inline two-variant
+//! manifest (self-contained: no AOT artifacts needed).
+//!
+//! * **lone** — a single request against an idle server.  Under the old
+//!   fixed-window dispatcher this paid the whole batching window before
+//!   execution; under continuous batching it dispatches the moment a
+//!   device is free.  The gate (enforced every run, smoke included):
+//!   lone p50 must come in *under* the configured window.
+//! * **paired** — two same-variant requests back-to-back.  The second
+//!   joins the next micro-batch instead of waiting out a fresh window.
+//! * **load** — the open-loop load generator: bursty zipfian arrivals
+//!   from many client threads, mixed weight-bound / inline / composite-
+//!   program traffic across tenants and priority tiers, reporting
+//!   p50/p95/p99 and throughput plus the rejection/deadline buckets.
+//!
+//! Writes `reports/serving.json` every run; with
+//! `MLIR_GEMM_RECORD_BASELINE=1` also refreshes the committed
+//! `BENCH_serving.json` at the repo root.
+
+mod bench_common;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mlir_gemm::coordinator::{
+    BatcherConfig, GemmKey, GemmRequest, Priority, Server, ServerConfig,
+    SubmitOpts,
+};
+use mlir_gemm::harness::{
+    run_load, LoadgenConfig, ProgramSpec,
+};
+use mlir_gemm::runtime::{Runtime, Tensor};
+use mlir_gemm::schedule::Dtype;
+use mlir_gemm::util::json::{self, Json};
+use mlir_gemm::util::prng::Rng;
+use mlir_gemm::util::stats::percentile;
+
+/// The fixed batching window the old dispatcher always waited out.  The
+/// scheduler now treats it as ordering slack only, so every latency
+/// here should land far below it; the gate asserts at least "below".
+const WINDOW: Duration = Duration::from_millis(25);
+
+const MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "small",
+      "file": "small.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"},
+        {"shape": [24, 24], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [24, 24], "dtype": "f32"}],
+      "m": 24, "n": 24, "k": 24, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "big",
+      "file": "big.tprog.json",
+      "kind": "baseline",
+      "inputs": [
+        {"shape": [128, 112], "dtype": "f32"},
+        {"shape": [112, 96], "dtype": "f32"},
+        {"shape": [128, 96], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [128, 96], "dtype": "f32"}],
+      "m": 128, "n": 96, "k": 112, "dtype_in": "f32", "dtype_acc": "f32"
+    },
+    {
+      "name": "tf_layer",
+      "file": "tf_layer.tprog.json",
+      "kind": "transformer",
+      "inputs": [
+        {"shape": [8, 16], "dtype": "f32"},
+        {"shape": [16, 48], "dtype": "f32"},
+        {"shape": [16, 16], "dtype": "f32"},
+        {"shape": [16, 32], "dtype": "f32"},
+        {"shape": [32], "dtype": "f32"},
+        {"shape": [32, 16], "dtype": "f32"},
+        {"shape": [16], "dtype": "f32"}
+      ],
+      "outputs": [{"shape": [8, 16], "dtype": "f32"}],
+      "seq": 8, "d_model": 16, "d_ff": 32
+    }
+  ]
+}"#;
+
+const SMALL: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "small",
+  "program": {
+    "type": "gemm", "m": 24, "n": 24, "k": 24,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const BIG: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "big",
+  "program": {
+    "type": "gemm", "m": 128, "n": 96, "k": 112,
+    "dtype_in": "f32", "dtype_acc": "f32", "epilogue": "none", "fused": true
+  }
+}"#;
+
+const TF: &str = r#"{
+  "format": "mlir-gemm-tprog-v1",
+  "name": "tf_layer",
+  "program": {
+    "type": "transformer",
+    "seq": 8, "d_model": 16, "d_ff": 32, "n_heads": 4, "dtype_in": "f16"
+  }
+}"#;
+
+fn start_server(workers: usize) -> Mutex<Server> {
+    let dir = std::env::temp_dir()
+        .join(format!("mlir_gemm_bench_serving_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("small.tprog.json"), SMALL).unwrap();
+    std::fs::write(dir.join("big.tprog.json"), BIG).unwrap();
+    std::fs::write(dir.join("tf_layer.tprog.json"), TF).unwrap();
+    let rt = Arc::new(Runtime::open(&dir).unwrap());
+    Mutex::new(Server::start(
+        rt,
+        &mlir_gemm::sim::DeviceModel::rtx3090(),
+        ServerConfig {
+            workers,
+            batcher: BatcherConfig { max_batch: 8, max_wait: WINDOW },
+            queue_capacity: 256,
+            ..Default::default()
+        },
+    ))
+}
+
+fn request(key: &GemmKey, rng: &mut Rng) -> GemmRequest {
+    GemmRequest {
+        key: key.clone(),
+        a: Tensor::new(vec![key.m, key.k], rng.normal_matrix(key.m, key.k))
+            .unwrap(),
+        b: Some(
+            Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))
+                .unwrap(),
+        ),
+        c: Tensor::new(vec![key.m, key.n], vec![0.0; key.m * key.n]).unwrap(),
+        bias: None,
+        use_baseline: false,
+        deadline: None,
+    }
+}
+
+struct ScenarioRow {
+    scenario: &'static str,
+    n: usize,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    max_ms: f64,
+}
+
+fn summarize(scenario: &'static str, mut ms: Vec<f64>) -> ScenarioRow {
+    assert!(!ms.is_empty(), "{scenario}: no samples");
+    ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ScenarioRow {
+        scenario,
+        n: ms.len(),
+        p50_ms: percentile(&ms, 0.50),
+        p95_ms: percentile(&ms, 0.95),
+        p99_ms: percentile(&ms, 0.99),
+        max_ms: *ms.last().unwrap(),
+    }
+}
+
+fn main() {
+    let smoke = bench_common::smoke();
+    let iters = if smoke { 20 } else { 200 };
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let big_key = GemmKey::with_dtypes(128, 96, 112, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0x5E41);
+
+    // --- lone: one request, idle server, wait for the reply each time.
+    let server = start_server(2);
+    let mut lone_ms = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let rx = server.lock().unwrap().submit(request(&key, &mut rng));
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        resp.output.as_ref().expect("lone request must complete");
+        lone_ms.push(resp.total_latency.as_secs_f64() * 1e3);
+    }
+    let lone = summarize("lone", lone_ms);
+
+    // --- paired: two same-variant requests back-to-back; both latencies
+    // count (the second must ride the next micro-batch, not a new
+    // window).
+    let mut paired_ms = Vec::with_capacity(2 * iters);
+    for _ in 0..iters {
+        let rx1 = server.lock().unwrap().submit(request(&key, &mut rng));
+        let rx2 = server.lock().unwrap().submit(request(&key, &mut rng));
+        for rx in [rx1, rx2] {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            resp.output.as_ref().expect("paired request must complete");
+            paired_ms.push(resp.total_latency.as_secs_f64() * 1e3);
+        }
+    }
+    let paired = summarize("paired", paired_ms);
+
+    // The headline gate: continuous batching must not charge the old
+    // fixed window to a request that could start immediately.
+    let window_ms = WINDOW.as_secs_f64() * 1e3;
+    assert!(
+        lone.p50_ms < window_ms,
+        "lone-request p50 {:.3} ms did not beat the {window_ms:.0} ms \
+         fixed window — the continuous-batching latency fix regressed",
+        lone.p50_ms
+    );
+    assert!(
+        paired.p50_ms < window_ms,
+        "paired-request p50 {:.3} ms did not beat the {window_ms:.0} ms \
+         fixed window",
+        paired.p50_ms
+    );
+
+    // --- load: open-loop bursty zipfian mix across tenants and tiers.
+    // Weights bound for both keys so the bound fraction is servable.
+    {
+        let s = server.lock().unwrap();
+        let mut wrng = Rng::new(0x57);
+        let small_b =
+            Tensor::new(vec![24, 24], wrng.normal_matrix(24, 24)).unwrap();
+        let big_b =
+            Tensor::new(vec![112, 96], wrng.normal_matrix(112, 96)).unwrap();
+        s.bind_weights(&key, &small_b).unwrap();
+        s.bind_weights(&big_key, &big_b).unwrap();
+    }
+    let tf_shapes: [&[usize]; 7] = [
+        &[8, 16],
+        &[16, 48],
+        &[16, 16],
+        &[16, 32],
+        &[32],
+        &[32, 16],
+        &[16],
+    ];
+    let mut prng = Rng::new(0x7F);
+    let tf_inputs: Vec<Tensor> = tf_shapes
+        .iter()
+        .map(|shape| {
+            let len: usize = shape.iter().product();
+            Tensor::new(
+                shape.to_vec(),
+                (0..len).map(|_| prng.next_f32()).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let load_cfg = LoadgenConfig {
+        clients: if smoke { 8 } else { 200 },
+        per_client: if smoke { 16 } else { 50 },
+        mean_gap: Duration::from_micros(if smoke { 300 } else { 800 }),
+        burst_prob: 0.15,
+        burst_len: 4,
+        zipf_s: 1.0,
+        bound_fraction: 0.5,
+        program_fraction: 0.1,
+        program: Some(ProgramSpec {
+            artifact: "tf_layer".to_string(),
+            inputs: tf_inputs,
+        }),
+        tenants: vec!["acme".to_string(), "globex".to_string()],
+        priorities: vec![Priority::High, Priority::Normal, Priority::Low],
+        deadline: None,
+        seed: 0xB0057,
+    };
+    let keys = [key.clone(), big_key.clone()];
+    let started = Instant::now();
+    let load = run_load(&server, &load_cfg, &keys);
+    println!(
+        "load scenario ({} clients x {} req): {}\n[{:.3} s total]\n",
+        load_cfg.clients,
+        load_cfg.per_client,
+        load.render(),
+        started.elapsed().as_secs_f64()
+    );
+    assert_eq!(
+        load.submitted,
+        load.completed + load.rejected + load.deadline_failed
+            + load.other_failed,
+        "loadgen accounting must balance"
+    );
+
+    // One direct high-priority probe after the storm: the server must
+    // still answer promptly once the open loop drains.
+    let rx = server.lock().unwrap().submit_with(
+        request(&key, &mut rng),
+        SubmitOpts { tenant: None, priority: Priority::High },
+    );
+    let probe = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    probe.output.expect("post-load probe must complete");
+
+    let snapshot = {
+        let mut s = server.into_inner().unwrap();
+        s.shutdown()
+    };
+    println!("{}", snapshot.report());
+
+    // --- reports --------------------------------------------------------
+    println!(
+        "lone:   n {:4}  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+        lone.n, lone.p50_ms, lone.p95_ms, lone.p99_ms, lone.max_ms
+    );
+    println!(
+        "paired: n {:4}  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+        paired.n, paired.p50_ms, paired.p95_ms, paired.p99_ms, paired.max_ms
+    );
+    println!(
+        "gate: lone p50 {:.3} ms and paired p50 {:.3} ms < {:.0} ms window: ok",
+        lone.p50_ms, paired.p50_ms, window_ms
+    );
+
+    let scenario_json = |r: &ScenarioRow| {
+        json::obj(vec![
+            ("scenario", json::s(r.scenario)),
+            ("n", json::num(r.n as f64)),
+            ("p50_ms", json::num((r.p50_ms * 1000.0).round() / 1000.0)),
+            ("p95_ms", json::num((r.p95_ms * 1000.0).round() / 1000.0)),
+            ("p99_ms", json::num((r.p99_ms * 1000.0).round() / 1000.0)),
+            ("max_ms", json::num((r.max_ms * 1000.0).round() / 1000.0)),
+        ])
+    };
+    let load_json = json::obj(vec![
+        ("scenario", json::s("load")),
+        ("clients", json::num(load_cfg.clients as f64)),
+        ("submitted", json::num(load.submitted as f64)),
+        ("completed", json::num(load.completed as f64)),
+        ("rejected", json::num(load.rejected as f64)),
+        ("deadline_failed", json::num(load.deadline_failed as f64)),
+        ("other_failed", json::num(load.other_failed as f64)),
+        ("throughput_rps", json::num(load.throughput_rps.round())),
+        ("p50_ms", json::num((load.p50_ms * 1000.0).round() / 1000.0)),
+        ("p95_ms", json::num((load.p95_ms * 1000.0).round() / 1000.0)),
+        ("p99_ms", json::num((load.p99_ms * 1000.0).round() / 1000.0)),
+        ("max_queue_depth", json::num(load.max_queue_depth as f64)),
+    ]);
+    let runner = std::env::var("MLIR_GEMM_RUNNER").unwrap_or_else(|_| {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        format!("unlabeled host, {threads} hw threads (set MLIR_GEMM_RUNNER to label)")
+    });
+    let doc = json::obj(vec![
+        ("bench", json::s("serving")),
+        ("smoke", Json::Bool(smoke)),
+        ("window_ms", json::num(window_ms)),
+        (
+            "gate",
+            json::s(
+                "lone p50_ms and paired p50_ms must be < window_ms: a lone \
+                 request (and the second of a back-to-back pair) dispatches \
+                 as soon as a device frees instead of waiting out the old \
+                 fixed batching window; asserted every run, smoke included",
+            ),
+        ),
+        (
+            "source",
+            json::s(
+                "rust/benches/serving.rs (make bench-serving); refresh the \
+                 committed baseline with MLIR_GEMM_RECORD_BASELINE=1 \
+                 cargo bench --bench serving",
+            ),
+        ),
+        ("runner", json::s(&runner)),
+        (
+            "workload",
+            json::s(
+                "lone/paired: 24^3 f32 inline requests against an idle \
+                 2-worker server, 25 ms ordering window; load: open-loop \
+                 zipfian(s=1.0) bursty arrivals over {24^3, 128x96x112} \
+                 with 50% weight-bound, 10% transformer-program traffic, \
+                 2 tenants, 3 priority tiers",
+            ),
+        ),
+        (
+            "results",
+            Json::Arr(vec![
+                scenario_json(&lone),
+                scenario_json(&paired),
+                load_json,
+            ]),
+        ),
+    ]);
+    let text = format!("{doc}\n");
+    let reports = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports");
+    let _ = std::fs::create_dir_all(&reports);
+    let json_path = reports.join("serving.json");
+    match std::fs::write(&json_path, &text) {
+        Ok(()) => println!("json -> {}", json_path.display()),
+        Err(e) => eprintln!("warning: cannot write {}: {e}", json_path.display()),
+    }
+    if std::env::var("MLIR_GEMM_RECORD_BASELINE")
+        .map(|v| v == "1")
+        .unwrap_or(false)
+    {
+        let baseline =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_serving.json");
+        match std::fs::write(&baseline, &text) {
+            Ok(()) => println!("baseline -> {}", baseline.display()),
+            Err(e) => {
+                eprintln!("warning: cannot write {}: {e}", baseline.display())
+            }
+        }
+    }
+}

@@ -17,7 +17,7 @@
 //!
 //! `enabled_actions` + `apply` define the interleaving semantics; the
 //! BFS in [`crate::check::explore`] enumerates every schedule of a
-//! bounded configuration and checks the five protocol invariants:
+//! bounded configuration and checks the six protocol invariants:
 //!
 //! 1. **accounting** — at every terminal state,
 //!    `completed + failed + rejected == submitted`;
@@ -29,8 +29,20 @@
 //!    *routed* with, even when a rebind lands in between;
 //! 5. **containment** — a job that panics mid-batch fails alone; its
 //!    batchmates still complete.
+//! 6. **no-priority-inversion-past-deadline** — a release never picks a
+//!    lower-priority job while a higher-priority job sits admitted in
+//!    the scheduler (which would burn the bypassed job's deadline
+//!    budget under lower-priority work).
 //!
-//! [`Bugs`] re-introduces three historical/candidate defects as model
+//! The continuous-batching dispatcher is modelled by the same actions
+//! with new admission semantics: a pre-expired deadline is answered
+//! `Expired` at `Submit` (it never consumes a bounded-channel slot), a
+//! per-tenant quota answers `QuotaRejected` at `Submit`, `Release`
+//! picks jobs in (priority, deadline-rank) order instead of FIFO
+//! prefix, and `Sweep` models `take_expired` removing a job whose
+//! deadline lapsed while it waited in the scheduler.
+//!
+//! [`Bugs`] re-introduces four historical/candidate defects as model
 //! variants (and, for the stop-flag one, as a real-code test hook in
 //! `FaultPlan`), so the checker demonstrably *can* find the violation
 //! and the counterexample schedule replays against the real server.
@@ -71,8 +83,23 @@ pub struct ModelConfig {
     /// Job 0 panics during execution (the poison job).
     pub poison: bool,
     /// Job 0 carries an already-expired deadline and must be answered
-    /// `Expired`, never executed.
+    /// `Expired` at admission (`Submit`), never consuming a channel
+    /// slot and never executing.
     pub deadline: bool,
+    /// Job 0's deadline lapses while it waits *inside* the scheduler:
+    /// the `Sweep` action (modelling `take_expired`) may remove it and
+    /// answer `Expired` — or a `Release` may beat the sweep and the job
+    /// completes.  Both orders must satisfy every invariant.
+    pub late_deadline: bool,
+    /// Priority tiers: job 0 is the low-priority job and every later
+    /// job is high priority (the arrival order that makes inversion
+    /// possible).  `Release` must pick high before low.
+    pub priority: bool,
+    /// Per-tenant admission quota (0 = off).  All modelled jobs share
+    /// one tenant; a submit finding `quota` jobs already admitted
+    /// (buffered or in the scheduler) is answered `QuotaRejected`
+    /// without consuming a channel slot.
+    pub quota: u8,
     /// A one-shot shutdown action exists and may interleave anywhere.
     pub shutdown: bool,
     /// Re-introduced defects under test.
@@ -97,6 +124,11 @@ pub struct Bugs {
     /// No panic containment: one poisoned job takes its whole batch
     /// down instead of being quarantined.
     pub no_containment: bool,
+    /// The pre-continuous-batching dispatcher's release order: take the
+    /// FIFO prefix of the scheduler queue, ignoring priority tiers — a
+    /// high-priority job behind a low-priority head is bypassed and its
+    /// deadline budget burns under lower-priority work.
+    pub fifo_release: bool,
 }
 
 impl ModelConfig {
@@ -113,6 +145,9 @@ impl ModelConfig {
             rebind: false,
             poison: false,
             deadline: false,
+            late_deadline: false,
+            priority: false,
+            quota: 0,
             shutdown: true,
             bugs: Bugs::default(),
         }
@@ -134,6 +169,30 @@ impl ModelConfig {
     /// Job 0 arrives with an already-expired deadline.
     pub fn with_deadline(mut self) -> Self {
         self.deadline = true;
+        self
+    }
+
+    /// Job 0's deadline lapses while it waits in the scheduler.
+    pub fn with_late_deadline(mut self) -> Self {
+        self.late_deadline = true;
+        self
+    }
+
+    /// Priority tiers: job 0 low, later jobs high.
+    pub fn with_priority(mut self) -> Self {
+        self.priority = true;
+        self
+    }
+
+    /// Per-tenant admission quota (all modelled jobs share one tenant).
+    pub fn with_quota(mut self, quota: u8) -> Self {
+        self.quota = quota;
+        self
+    }
+
+    /// Cap the number of jobs one release may batch together.
+    pub fn with_max_batch(mut self, max_batch: u8) -> Self {
+        self.max_batch = max_batch.max(1);
         self
     }
 
@@ -163,6 +222,23 @@ impl ModelConfig {
     fn expired(&self, job: u8) -> bool {
         self.deadline && job == 0
     }
+
+    fn late_expired(&self, job: u8) -> bool {
+        self.late_deadline && job == 0
+    }
+
+    /// Priority rank of a job, 0 = highest.  With `priority` on, job 0
+    /// is the low tier and every later job the high tier.
+    fn prio(&self, job: u8) -> u8 {
+        u8::from(self.priority && job == 0)
+    }
+
+    /// Jobs currently inside the admission scope (buffered in the
+    /// channel or waiting in the scheduler) — what the per-tenant
+    /// ledger counts.
+    fn admitted(&self, s: &State) -> usize {
+        s.queue.len() + s.batcher.len()
+    }
 }
 
 /// Terminal response of one job — the model's `GemmResponse`.
@@ -182,6 +258,9 @@ pub enum Resp {
     Expired,
     /// Bounded admission: queue at capacity (explicit rejection).
     Rejected,
+    /// Per-tenant admission quota exhausted (explicit rejection,
+    /// counted with `Rejected` in the accounting identity).
+    QuotaRejected,
     /// Submitted after shutdown closed the channel (explicit failure).
     ShutdownErr,
 }
@@ -215,9 +294,12 @@ pub enum Action {
     /// Dispatcher pops the channel head and routes it (or answers its
     /// expired deadline).
     Route,
-    /// Dispatcher releases the head batch (up to `max_batch` jobs) to a
-    /// free device.
+    /// Dispatcher releases a batch (up to `max_batch` jobs, picked in
+    /// (priority, deadline-rank) order) to a free device.
     Release { device: u8 },
+    /// Dispatcher sweeps a job whose deadline lapsed inside the
+    /// scheduler (`take_expired`) and answers it `Expired`.
+    Sweep,
     /// Dispatcher fans the head job out into one shard per device.
     FanOut,
     /// A device finishes its in-flight batch.
@@ -244,6 +326,9 @@ impl Action {
             Action::Route => "dispatcher routes the channel-head job".into(),
             Action::Release { device } => {
                 format!("dispatcher releases a batch to device {device}")
+            }
+            Action::Sweep => {
+                "dispatcher sweeps the scheduler-expired job (take_expired)".into()
             }
             Action::FanOut => "dispatcher fans the head job out into shards".into(),
             Action::ExecBatch { device } => {
@@ -277,6 +362,10 @@ pub struct State {
     /// Shutdown happened: stop flag up, channel closed.
     pub shutdown_taken: bool,
     pub dispatcher_alive: bool,
+    /// A release picked a lower-priority job while a strictly
+    /// higher-priority job stayed behind in the scheduler — the
+    /// no-priority-inversion-past-deadline violation.
+    pub inverted: bool,
 }
 
 impl State {
@@ -289,6 +378,7 @@ impl State {
             bind_epoch: if cfg.bound { 1 } else { 0 },
             shutdown_taken: false,
             dispatcher_alive: true,
+            inverted: false,
         }
     }
 
@@ -305,7 +395,7 @@ impl State {
             }
             match j {
                 JobState::Done(Resp::Completed { .. }) => completed += 1,
-                JobState::Done(Resp::Rejected) => rejected += 1,
+                JobState::Done(Resp::Rejected | Resp::QuotaRejected) => rejected += 1,
                 JobState::Done(
                     Resp::Poisoned | Resp::Collateral | Resp::Expired | Resp::ShutdownErr,
                 ) => failed += 1,
@@ -334,6 +424,9 @@ pub fn enabled_actions(cfg: &ModelConfig, s: &State) -> Vec<Action> {
     if s.dispatcher_alive {
         if !s.queue.is_empty() {
             acts.push(Action::Route);
+        }
+        if s.batcher.iter().any(|&j| cfg.late_expired(j)) {
+            acts.push(Action::Sweep);
         }
         if !s.batcher.is_empty() {
             if cfg.sharded {
@@ -373,7 +466,15 @@ pub fn apply(cfg: &ModelConfig, s: &State, a: &Action) -> State {
     match *a {
         Action::Submit { client } => {
             let c = client as usize;
-            n.jobs[c] = if n.shutdown_taken {
+            n.jobs[c] = if cfg.expired(client) {
+                // Admission-time deadline gate: a dead-on-arrival job
+                // is answered before it can consume a channel slot.
+                JobState::Done(Resp::Expired)
+            } else if cfg.quota > 0 && cfg.admitted(&n) >= cfg.quota as usize {
+                // Per-tenant ledger checked before try_send, so quota
+                // exhaustion rejects even after shutdown.
+                JobState::Done(Resp::QuotaRejected)
+            } else if n.shutdown_taken {
                 // try_send on the swapped-out sender: Disconnected ->
                 // explicit shutdown error, counted as failed.
                 JobState::Done(Resp::ShutdownErr)
@@ -389,19 +490,47 @@ pub fn apply(cfg: &ModelConfig, s: &State, a: &Action) -> State {
         Action::Shutdown => n.shutdown_taken = true,
         Action::Route => {
             let j = n.queue.remove(0);
-            n.jobs[j as usize] = if cfg.expired(j) {
-                // Deadline gate at the channel -> batcher boundary.
-                JobState::Done(Resp::Expired)
-            } else {
-                // route() captures the bind epoch *here* — the routed
-                // Arc<BoundB> travels with the job from this point on.
-                n.batcher.push(j);
-                JobState::Routed { epoch: n.bind_epoch }
-            };
+            // route() captures the bind epoch *here* — the routed
+            // Arc<BoundB> travels with the job from this point on.
+            // (The pre-expired deadline gate now lives at Submit.)
+            n.batcher.push(j);
+            n.jobs[j as usize] = JobState::Routed { epoch: n.bind_epoch };
+        }
+        Action::Sweep => {
+            let i = n
+                .batcher
+                .iter()
+                .position(|&j| cfg.late_expired(j))
+                .expect("sweep with no scheduler-expired job");
+            let j = n.batcher.remove(i);
+            n.jobs[j as usize] = JobState::Done(Resp::Expired);
         }
         Action::Release { device } => {
             let take = (cfg.max_batch as usize).min(n.batcher.len());
-            let batch: Vec<u8> = n.batcher.drain(..take).collect();
+            let batch: Vec<u8> = if cfg.bugs.fifo_release {
+                // Buggy pre-continuous dispatcher: FIFO prefix,
+                // priorities ignored.
+                n.batcher.drain(..take).collect()
+            } else {
+                // Continuous scheduler: pick by (priority, arrival
+                // rank) — arrival rank doubles as the deadline rank in
+                // the model, so this is EDF within a priority tier.
+                let mut order: Vec<usize> = (0..n.batcher.len()).collect();
+                order.sort_by_key(|&i| (cfg.prio(n.batcher[i]), i));
+                let picked: Vec<u8> =
+                    order[..take].iter().map(|&i| n.batcher[i]).collect();
+                n.batcher.retain(|j| !picked.contains(j));
+                picked
+            };
+            // Inversion detector: a picked job with strictly lower
+            // priority than something left behind burns the bypassed
+            // job's deadline budget.
+            if batch
+                .iter()
+                .any(|&p| n.batcher.iter().any(|&u| cfg.prio(u) < cfg.prio(p)))
+            {
+                n.inverted = true;
+            }
             for &j in &batch {
                 let JobState::Routed { epoch } = n.jobs[j as usize] else {
                     unreachable!("batcher held a non-routed job");
@@ -472,6 +601,15 @@ pub fn apply(cfg: &ModelConfig, s: &State, a: &Action) -> State {
 /// Safety invariants, checked on *every* reachable state.  Returns the
 /// violated invariant's description, or `None`.
 pub fn check_safety(_cfg: &ModelConfig, s: &State) -> Option<String> {
+    if s.inverted {
+        return Some(
+            "no-priority-inversion-past-deadline: a release picked a \
+             lower-priority job while a strictly higher-priority job stayed \
+             admitted in the scheduler — the bypassed job's deadline budget \
+             burned under lower-priority work"
+                .into(),
+        );
+    }
     for (j, js) in s.jobs.iter().enumerate() {
         match js {
             JobState::Done(Resp::Completed { routed, exec }) if routed != exec => {
@@ -540,8 +678,18 @@ pub struct Coverage {
     pub shutdown_with_backlog: bool,
     /// A submit after shutdown got the explicit error.
     pub late_submit_error: bool,
-    /// A deadline-expired job was answered without executing.
+    /// A deadline-expired job was answered without executing (at
+    /// admission for a pre-expired deadline).
     pub expired_job: bool,
+    /// A job whose deadline lapsed inside the scheduler was swept out
+    /// by `take_expired` and answered `Expired`.
+    pub swept_in_scheduler: bool,
+    /// The per-tenant quota rejected a submit.
+    pub tenant_quota_rejection: bool,
+    /// A release picked a high-priority job while a lower-priority job
+    /// (that arrived earlier) stayed behind — the priority path
+    /// actually reordered work.
+    pub priority_release: bool,
     /// A poisoned job produced its explicit quarantine failure.
     pub poisoned_job: bool,
     /// A sharded job completed via the last-finisher reduction.
@@ -555,7 +703,11 @@ impl Coverage {
             Action::Submit { client } => {
                 match n.jobs[client as usize] {
                     JobState::Done(Resp::Rejected) => self.queue_full_rejection = true,
+                    JobState::Done(Resp::QuotaRejected) => {
+                        self.tenant_quota_rejection = true;
+                    }
                     JobState::Done(Resp::ShutdownErr) => self.late_submit_error = true,
+                    JobState::Done(Resp::Expired) => self.expired_job = true,
                     _ => {}
                 }
             }
@@ -564,10 +716,18 @@ impl Coverage {
                     self.shutdown_with_backlog = true;
                 }
             }
-            Action::Route => {
-                if let Some(&j) = s.queue.first() {
-                    if matches!(n.jobs[j as usize], JobState::Done(Resp::Expired)) {
-                        self.expired_job = true;
+            Action::Sweep => self.swept_in_scheduler = true,
+            Action::Release { device } => {
+                if let Some(batch) = &n.slots[device as usize] {
+                    // Reordered release: a picked job outranks a job
+                    // left behind that arrived earlier.
+                    if batch
+                        .iter()
+                        .any(|&p| n.batcher.iter().any(|&u| {
+                            cfg.prio(p) < cfg.prio(u) && u < p
+                        }))
+                    {
+                        self.priority_release = true;
                     }
                 }
             }
@@ -736,6 +896,91 @@ mod tests {
         assert!(remaining.is_empty(), "{remaining:?}");
         let v = check_terminal(&cfg, &s3).expect("stranded job must violate");
         assert!(v.starts_with("no-stranded-shutdown"), "{v}");
+    }
+
+    #[test]
+    fn pre_expired_deadline_is_answered_at_submit_without_a_queue_slot() {
+        // Capacity 1 + 2 clients: the dead-on-arrival job 0 must not
+        // consume the only slot, so job 1 still queues.
+        let cfg = ModelConfig::new(2, 1).with_deadline().with_capacity(1);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        assert_eq!(s1.jobs[0], JobState::Done(Resp::Expired));
+        assert!(s1.queue.is_empty(), "expired submit must not occupy the queue");
+        let s2 = apply(&cfg, &s1, &Action::Submit { client: 1 });
+        assert_eq!(s2.jobs[1], JobState::Queued, "slot must still be free");
+    }
+
+    #[test]
+    fn quota_exhaustion_rejects_at_submit() {
+        let cfg = ModelConfig::new(3, 1).with_quota(1);
+        let s0 = State::initial(&cfg);
+        let s1 = apply(&cfg, &s0, &Action::Submit { client: 0 });
+        assert_eq!(s1.jobs[0], JobState::Queued);
+        let s2 = apply(&cfg, &s1, &Action::Submit { client: 1 });
+        assert_eq!(s2.jobs[1], JobState::Done(Resp::QuotaRejected));
+        // Routing keeps the job inside the admission scope (ledger
+        // counts scheduler occupancy too)...
+        let s3 = apply(&cfg, &s2, &Action::Route);
+        let s4 = apply(&cfg, &s3, &Action::Submit { client: 2 });
+        assert_eq!(s4.jobs[2], JobState::Done(Resp::QuotaRejected));
+        // ...and QuotaRejected tallies as a rejection.
+        let (submitted, _, _, rejected) = s4.tally();
+        assert_eq!((submitted, rejected), (3, 2));
+    }
+
+    #[test]
+    fn release_picks_priority_order_and_fifo_bug_trips_the_inversion() {
+        // Job 0 = low priority, job 1 = high; max_batch 1 forces a
+        // choice.  The continuous scheduler must pick job 1 first.
+        let cfg = ModelConfig::new(2, 1).with_priority().with_max_batch(1);
+        let mut s = State::initial(&cfg);
+        for a in [
+            Action::Submit { client: 0 },
+            Action::Submit { client: 1 },
+            Action::Route,
+            Action::Route,
+        ] {
+            s = apply(&cfg, &s, &a);
+        }
+        let good = apply(&cfg, &s, &Action::Release { device: 0 });
+        assert_eq!(good.slots[0], Some(vec![1]), "high priority releases first");
+        assert_eq!(good.batcher, vec![0]);
+        assert!(!good.inverted);
+        assert!(check_safety(&cfg, &good).is_none());
+
+        // Same schedule under the FIFO-release bug: job 0 bypasses the
+        // high-priority job 1 and the inversion invariant fires.
+        let buggy = cfg
+            .clone()
+            .with_bugs(Bugs { fifo_release: true, ..Default::default() });
+        let bad = apply(&buggy, &s, &Action::Release { device: 0 });
+        assert_eq!(bad.slots[0], Some(vec![0]));
+        assert!(bad.inverted);
+        let v = check_safety(&buggy, &bad).expect("inversion must violate");
+        assert!(v.starts_with("no-priority-inversion-past-deadline"), "{v}");
+    }
+
+    #[test]
+    fn late_deadline_sweep_expires_in_the_scheduler() {
+        let cfg = ModelConfig::new(2, 1).with_late_deadline();
+        let mut s = State::initial(&cfg);
+        for a in [
+            Action::Submit { client: 0 },
+            Action::Submit { client: 1 },
+            Action::Route,
+            Action::Route,
+        ] {
+            s = apply(&cfg, &s, &a);
+        }
+        assert!(enabled_actions(&cfg, &s).contains(&Action::Sweep));
+        let swept = apply(&cfg, &s, &Action::Sweep);
+        assert_eq!(swept.jobs[0], JobState::Done(Resp::Expired));
+        assert_eq!(swept.batcher, vec![1], "batchmate survives the sweep");
+        // The race can also resolve the other way: a release beats the
+        // sweep and the job completes — no Sweep remains afterwards.
+        let released = apply(&cfg, &s, &Action::Release { device: 0 });
+        assert!(!enabled_actions(&cfg, &released).contains(&Action::Sweep));
     }
 
     #[test]

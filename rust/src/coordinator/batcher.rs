@@ -1,25 +1,77 @@
-//! Dynamic batcher: groups queued requests by target kernel variant.
+//! Continuous-batching scheduler: deadline-ordered, priority-tiered
+//! grouping of queued requests by target kernel variant.
 //!
-//! Serving-system shape (vLLM-router-like): requests arrive on a queue;
-//! the dispatcher drains up to `max_batch` requests *for the same
-//! compiled variant* (or as many as are available within `max_wait`) and
-//! hands the group to one worker, amortizing dispatch overhead and keeping
-//! the executable's code hot.  FIFO order is preserved within a variant.
+//! Serving-system shape (vLLM-like continuous batching): requests
+//! arrive on a queue; whenever a device has a free execution slot the
+//! dispatcher asks for the *next release* and gets, immediately, the
+//! most urgent admissible job plus every same-variant job that can ride
+//! in its micro-batch (up to `max_batch`).  There is no batching
+//! window: a lone request dispatches the moment a device is free, and
+//! batches form exactly when the devices are the bottleneck — work
+//! accumulates while they are busy and drains in variant groups the
+//! moment they are not.  (The previous dispatcher held *every* request
+//! for up to `max_wait` hoping for batchmates; a lone request with
+//! co-traffic queued behind it always paid the full window.)
+//!
+//! Release order is earliest-deadline-first within the highest occupied
+//! priority tier.  A job without a deadline is ranked as if it were due
+//! `max_wait` after arrival — that keeps deadline-free traffic
+//! FIFO-fair among itself and lets explicitly urgent deadlines overtake
+//! it, without letting either class starve the other.  The scheduler is
+//! a pure state machine (I/O-free, fully unit-testable); the model in
+//! `crate::check::protocol` mirrors these semantics and the
+//! no-priority-inversion-past-deadline invariant pins the pick order.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// A queued item tagged with its routing decision.
+/// Priority tier of a request.  Order matters: `High` sorts before
+/// `Normal` sorts before `Low`, so ascending sort order is release
+/// order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Normal
+    }
+}
+
+impl Priority {
+    /// Stable label for metrics rollups.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// A queued item tagged with its routing decision and scheduling keys.
 #[derive(Debug)]
 pub struct Queued<T> {
     pub variant: String,
     pub enqueued_at: Instant,
+    pub priority: Priority,
+    pub deadline: Option<Instant>,
     pub payload: T,
 }
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Max same-variant jobs released into one micro-batch.
     pub max_batch: usize,
+    /// Deadline slack assumed for jobs that carry no explicit deadline:
+    /// they are ranked as if due `max_wait` after arrival.  This is an
+    /// *ordering* default only — nothing is ever held back waiting for
+    /// it to elapse.  (Pre-continuous-batching, this was a real dispatch
+    /// window every batch waited out; the field keeps its name so
+    /// existing configs read unchanged.)
     pub max_wait: Duration,
 }
 
@@ -32,24 +84,43 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pure batching state machine (I/O-free, fully unit-testable).
+/// One scheduler decision: the most urgent admissible job's variant and
+/// every same-variant job riding in its micro-batch, in release order.
 #[derive(Debug)]
-pub struct Batcher<T> {
-    cfg: BatcherConfig,
-    queue: VecDeque<Queued<T>>,
+pub struct Release<T> {
+    pub variant: String,
+    pub batch: Vec<Queued<T>>,
 }
 
-impl<T> Batcher<T> {
+struct Entry<T> {
+    /// Arrival tiebreak: earlier pushes release first among equal
+    /// (priority, effective-deadline) keys.
+    seq: u64,
+    q: Queued<T>,
+}
+
+/// Pure continuous-batching state machine (I/O-free, fully
+/// unit-testable).
+pub struct Scheduler<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Entry<T>>,
+    next_seq: u64,
+}
+
+impl<T> Scheduler<T> {
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
-        Batcher {
+        Scheduler {
             cfg,
             queue: VecDeque::new(),
+            next_seq: 0,
         }
     }
 
     pub fn push(&mut self, item: Queued<T>) {
-        self.queue.push_back(item);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Entry { seq, q: item });
     }
 
     pub fn len(&self) -> usize {
@@ -60,105 +131,76 @@ impl<T> Batcher<T> {
         self.queue.is_empty()
     }
 
-    /// Remove and return every queued item whose deadline (as computed
-    /// by `deadline_of`) is at or before `now`.  The dispatcher sweeps
-    /// this between batching decisions so a job that expires *inside*
-    /// the batching window is answered `DeadlineExceeded` promptly
-    /// instead of burning a worker on stale output.  Relative order of
-    /// survivors is preserved; expired items come back in queue order.
-    pub fn take_expired<F>(&mut self, now: Instant, deadline_of: F) -> Vec<Queued<T>>
-    where
-        F: Fn(&T) -> Option<Instant>,
-    {
+    /// The deadline a job is *ranked* by: its own, or arrival +
+    /// `max_wait` when it has none.
+    fn effective_deadline(&self, q: &Queued<T>) -> Instant {
+        q.deadline.unwrap_or(q.enqueued_at + self.cfg.max_wait)
+    }
+
+    /// Remove and return every queued item whose deadline is at or
+    /// before `now`.  The dispatcher sweeps this between releases so a
+    /// job that expires while waiting for a device is answered
+    /// `DeadlineExceeded` promptly instead of burning a worker on stale
+    /// output.  Relative order of survivors is preserved; expired items
+    /// come back in queue order.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Queued<T>> {
         if self.queue.is_empty() {
             return Vec::new();
         }
         let mut expired = Vec::new();
         let mut rest = VecDeque::with_capacity(self.queue.len());
-        while let Some(item) = self.queue.pop_front() {
-            match deadline_of(&item.payload) {
-                Some(dl) if dl <= now => expired.push(item),
-                _ => rest.push_back(item),
+        while let Some(e) = self.queue.pop_front() {
+            match e.q.deadline {
+                Some(dl) if dl <= now => expired.push(e.q),
+                _ => rest.push_back(e),
             }
         }
         self.queue = rest;
         expired
     }
 
-    /// Form the next batch at time `now`.
-    ///
-    /// Policy: scan the distinct variants in queue order (the head variant
-    /// first — it always holds the oldest deadline) and release the first
-    /// one that is *ready*: either `max_batch` items are queued for it, or
-    /// its oldest item has aged past `max_wait`.  Scanning past the head
-    /// fixes cross-variant head-of-line blocking: a full batch for variant
-    /// B queued behind a young lone request for variant A must not sit
-    /// blocked inside A's batching window.  FIFO order is preserved within
-    /// each variant, and the head variant cannot starve — its deadline
-    /// expires first and the scan always considers it first.
-    pub fn next_batch(&mut self, now: Instant) -> BatchDecision<T> {
-        if self.queue.is_empty() {
-            return BatchDecision::Idle;
-        }
-        // A lone request with nothing behind it gains nothing from the
-        // batch window: the dispatcher drains the submit channel before
-        // calling us, so any burst is already visible in the queue.
-        // Releasing immediately keeps single-stream latency flat
-        // (EXPERIMENTS.md §Perf L3 iteration 4).
-        if self.queue.len() == 1 {
-            let item = self.queue.pop_front().unwrap();
-            return BatchDecision::Run {
-                variant: item.variant.clone(),
-                batch: vec![item],
-            };
-        }
-        // Per-variant tally in first-occurrence (queue) order.
-        let mut tally: Vec<(&str, usize, Instant)> = Vec::new();
-        for q in &self.queue {
-            match tally.iter_mut().find(|(v, _, _)| *v == q.variant) {
-                Some((_, count, _)) => *count += 1,
-                None => tally.push((q.variant.as_str(), 1, q.enqueued_at)),
-            }
-        }
-        let ready = tally.iter().find(|(_, count, first)| {
-            *count >= self.cfg.max_batch
-                || now.duration_since(*first) >= self.cfg.max_wait
-        });
-        let Some(&(variant, count, _)) = ready else {
-            // Nothing ready.  The head holds the oldest item, so its
-            // deadline is the earliest; had it already expired it would
-            // have been ready above, making this subtraction safe.
-            let head_age =
-                now.duration_since(self.queue.front().unwrap().enqueued_at);
-            return BatchDecision::Wait(self.cfg.max_wait - head_age);
-        };
-        let variant = variant.to_string();
+    /// Release the next micro-batch, *now*.  `None` only when nothing
+    /// is queued — continuous batching never asks a free device to
+    /// wait.  The head job is the minimum of (priority,
+    /// effective deadline, arrival); the batch is every queued job of
+    /// the head's variant in that same order, up to `max_batch`.
+    pub fn next_release(&mut self, _now: Instant) -> Option<Release<T>> {
+        let head = self
+            .queue
+            .iter()
+            .min_by_key(|e| {
+                (e.q.priority, self.effective_deadline(&e.q), e.seq)
+            })?;
+        let variant = head.q.variant.clone();
 
-        let mut batch = Vec::with_capacity(count.min(self.cfg.max_batch));
+        // Collect the indices of the head variant's jobs in release
+        // order, cap at max_batch, then drain them preserving that
+        // order.
+        let mut picked: Vec<(Priority, Instant, u64)> = self
+            .queue
+            .iter()
+            .filter(|e| e.q.variant == variant)
+            .map(|e| (e.q.priority, self.effective_deadline(&e.q), e.seq))
+            .collect();
+        picked.sort_unstable();
+        picked.truncate(self.cfg.max_batch);
+
+        let mut batch: Vec<Queued<T>> = Vec::with_capacity(picked.len());
         let mut rest = VecDeque::with_capacity(self.queue.len());
-        while let Some(item) = self.queue.pop_front() {
-            if item.variant == variant && batch.len() < self.cfg.max_batch {
-                batch.push(item);
+        while let Some(e) = self.queue.pop_front() {
+            let key = (e.q.priority, self.effective_deadline(&e.q), e.seq);
+            if e.q.variant == variant && picked.binary_search(&key).is_ok() {
+                batch.push(e.q);
             } else {
-                rest.push_back(item);
+                rest.push_back(e);
             }
         }
         self.queue = rest;
-        BatchDecision::Run { variant, batch }
+        // Drain order is arrival order; present the batch in release
+        // (priority, deadline) order so batch[0] is the most urgent.
+        batch.sort_by_key(|q| (q.priority, self.effective_deadline(q)));
+        Some(Release { variant, batch })
     }
-}
-
-#[derive(Debug)]
-pub enum BatchDecision<T> {
-    /// Nothing queued.
-    Idle,
-    /// A batch could grow; revisit after the given duration.
-    Wait(Duration),
-    /// Execute this group now.
-    Run {
-        variant: String,
-        batch: Vec<Queued<T>>,
-    },
 }
 
 #[cfg(test)]
@@ -169,6 +211,28 @@ mod tests {
         Queued {
             variant: variant.into(),
             enqueued_at: at,
+            priority: Priority::Normal,
+            deadline: None,
+            payload: id,
+        }
+    }
+
+    fn qd(variant: &str, at: Instant, dl: Instant, id: usize) -> Queued<usize> {
+        Queued {
+            variant: variant.into(),
+            enqueued_at: at,
+            priority: Priority::Normal,
+            deadline: Some(dl),
+            payload: id,
+        }
+    }
+
+    fn qp(variant: &str, at: Instant, p: Priority, id: usize) -> Queued<usize> {
+        Queued {
+            variant: variant.into(),
+            enqueued_at: at,
+            priority: p,
+            deadline: None,
             payload: id,
         }
     }
@@ -180,200 +244,158 @@ mod tests {
         }
     }
 
-    #[test]
-    fn idle_when_empty() {
-        let mut b: Batcher<usize> = Batcher::new(cfg(4, 2));
-        assert!(matches!(b.next_batch(Instant::now()), BatchDecision::Idle));
+    fn ids(r: &Release<usize>) -> Vec<usize> {
+        r.batch.iter().map(|x| x.payload).collect()
     }
 
     #[test]
-    fn waits_for_more_of_same_variant() {
-        let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(4, 10));
-        b.push(q("v1", t0, 0));
-        b.push(q("v1", t0, 1));
-        match b.next_batch(t0 + Duration::from_millis(1)) {
-            BatchDecision::Wait(d) => assert!(d <= Duration::from_millis(9)),
-            other => panic!("expected Wait, got {other:?}"),
-        }
-        assert_eq!(b.len(), 2); // nothing consumed
+    fn none_when_empty() {
+        let mut s: Scheduler<usize> = Scheduler::new(cfg(4, 2));
+        assert!(s.next_release(Instant::now()).is_none());
     }
 
     #[test]
     fn lone_request_released_immediately() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(4, 10));
-        b.push(q("v1", t0, 0));
-        match b.next_batch(t0) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v1");
-                assert_eq!(batch.len(), 1);
-            }
-            other => panic!("expected Run, got {other:?}"),
-        }
-        assert!(b.is_empty());
+        let mut s = Scheduler::new(cfg(4, 10_000));
+        s.push(q("v1", t0, 0));
+        // Asked the same instant it arrived, with a 10 s window that
+        // would have held it under the old dispatcher.
+        let r = s.next_release(t0).expect("lone request must release now");
+        assert_eq!(r.variant, "v1");
+        assert_eq!(ids(&r), vec![0]);
+        assert!(s.is_empty());
     }
 
     #[test]
-    fn releases_after_max_wait() {
+    fn queued_pair_releases_without_any_window() {
+        // The old dispatcher's headline bug: two same-variant requests
+        // below max_batch waited out the full window.  Continuous
+        // batching releases both the moment a device asks.
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(4, 10));
-        b.push(q("v1", t0, 0));
-        b.push(q("v1", t0, 1));
-        match b.next_batch(t0 + Duration::from_millis(11)) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v1");
-                assert_eq!(batch.len(), 2);
-            }
-            other => panic!("expected Run, got {other:?}"),
-        }
+        let mut s = Scheduler::new(cfg(4, 10_000));
+        s.push(q("v1", t0, 0));
+        s.push(q("v1", t0, 1));
+        let r = s.next_release(t0).expect("must not wait for batchmates");
+        assert_eq!(ids(&r), vec![0, 1]);
+        assert!(s.is_empty());
     }
 
     #[test]
-    fn full_batch_released_immediately() {
+    fn batch_capped_at_max_batch_fifo_within_variant() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(2, 1000));
-        b.push(q("v1", t0, 0));
-        b.push(q("v1", t0, 1));
-        b.push(q("v1", t0, 2));
-        match b.next_batch(t0) {
-            BatchDecision::Run { batch, .. } => {
-                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![0, 1]);
-            }
-            other => panic!("expected Run, got {other:?}"),
-        }
-        assert_eq!(b.len(), 1); // third stays queued
+        let mut s = Scheduler::new(cfg(2, 1000));
+        s.push(q("v1", t0, 0));
+        s.push(q("v1", t0, 1));
+        s.push(q("v1", t0, 2));
+        let r = s.next_release(t0).unwrap();
+        assert_eq!(ids(&r), vec![0, 1]);
+        assert_eq!(s.len(), 1);
+        let r2 = s.next_release(t0).unwrap();
+        assert_eq!(ids(&r2), vec![2]);
     }
 
     #[test]
-    fn preserves_fifo_within_variant_and_leaves_others() {
+    fn gathers_same_variant_across_interleavings() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(8, 0));
-        b.push(q("v1", t0, 0));
-        b.push(q("v2", t0, 1));
-        b.push(q("v1", t0, 2));
-        match b.next_batch(t0) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v1");
-                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![0, 2]);
-            }
-            other => panic!("expected Run, got {other:?}"),
-        }
-        // v2 remains, now at the head
-        match b.next_batch(t0) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v2");
-                assert_eq!(batch[0].payload, 1);
-            }
-            other => panic!("expected Run, got {other:?}"),
-        }
-        assert!(b.is_empty());
+        let mut s = Scheduler::new(cfg(8, 0));
+        s.push(q("v1", t0, 0));
+        s.push(q("v2", t0, 1));
+        s.push(q("v1", t0, 2));
+        let r = s.next_release(t0).unwrap();
+        assert_eq!(r.variant, "v1");
+        assert_eq!(ids(&r), vec![0, 2]);
+        let r2 = s.next_release(t0).unwrap();
+        assert_eq!(r2.variant, "v2");
+        assert_eq!(ids(&r2), vec![1]);
+        assert!(s.is_empty());
     }
 
     #[test]
-    fn full_batch_behind_young_head_is_not_blocked() {
-        // Regression (cross-variant head-of-line blocking): v1 sits young
-        // inside its batch window, but v2 behind it already has max_batch
-        // ready items — v2 must run now, leaving v1 queued.
+    fn earliest_deadline_first_overrides_arrival_order() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(2, 1000));
-        b.push(q("v1", t0, 0));
-        b.push(q("v2", t0, 1));
-        b.push(q("v2", t0, 2));
-        match b.next_batch(t0 + Duration::from_millis(1)) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v2");
-                assert_eq!(batch.iter().map(|x| x.payload).collect::<Vec<_>>(), vec![1, 2]);
-            }
-            other => panic!("expected Run for v2, got {other:?}"),
-        }
-        // v1 is still queued (now a lone head, released on the next call)
-        assert_eq!(b.len(), 1);
-        match b.next_batch(t0 + Duration::from_millis(1)) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v1");
-                assert_eq!(batch[0].payload, 0);
-            }
-            other => panic!("expected Run for v1, got {other:?}"),
-        }
+        let mut s = Scheduler::new(cfg(8, 1));
+        // Far deadline arrives first, near deadline second: EDF must
+        // release the near one (v2) ahead of the earlier arrival.
+        s.push(qd("v1", t0, t0 + Duration::from_millis(500), 0));
+        s.push(qd("v2", t0, t0 + Duration::from_millis(5), 1));
+        let r = s.next_release(t0).unwrap();
+        assert_eq!(r.variant, "v2");
+        assert_eq!(ids(&r), vec![1]);
     }
 
     #[test]
-    fn expired_head_released_before_full_follower() {
-        // No starvation: once the head's window expires, it goes first
-        // even though a full batch for another variant is also ready.
+    fn deadline_free_jobs_rank_by_age_with_max_wait_slack() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(2, 10));
-        b.push(q("v1", t0, 0));
-        b.push(q("v2", t0, 1));
-        b.push(q("v2", t0, 2));
-        match b.next_batch(t0 + Duration::from_millis(11)) {
-            BatchDecision::Run { variant, batch } => {
-                assert_eq!(variant, "v1");
-                assert_eq!(batch.len(), 1);
-            }
-            other => panic!("expected Run for v1, got {other:?}"),
-        }
+        let mut s = Scheduler::new(cfg(8, 1));
+        // A deadline-free job is ranked as due at arrival + max_wait
+        // (t0+1ms) — more urgent than an explicit deadline 100ms out,
+        // so the deadline-free head is not starved by deadlined
+        // traffic.
+        s.push(q("v1", t0, 0));
+        s.push(qd("v2", t0, t0 + Duration::from_millis(100), 1));
+        let r = s.next_release(t0).unwrap();
+        assert_eq!(r.variant, "v1");
+        // ...but an explicit deadline tighter than the slack overtakes.
+        s.push(q("v1", t0, 2));
+        s.push(qd("v2", t0, t0 + Duration::from_micros(100), 3));
+        let r2 = s.next_release(t0).unwrap();
+        assert_eq!(r2.variant, "v2");
     }
 
     #[test]
-    fn waits_when_no_variant_is_ready() {
+    fn high_priority_releases_before_older_low_priority() {
         let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(3, 10));
-        b.push(q("v1", t0, 0));
-        b.push(q("v2", t0, 1));
-        b.push(q("v2", t0, 2));
-        match b.next_batch(t0 + Duration::from_millis(2)) {
-            BatchDecision::Wait(d) => assert!(d <= Duration::from_millis(8)),
-            other => panic!("expected Wait, got {other:?}"),
-        }
-        assert_eq!(b.len(), 3);
+        let mut s = Scheduler::new(cfg(8, 1));
+        s.push(qp("v1", t0, Priority::Low, 0));
+        s.push(qp("v2", t0 + Duration::from_millis(1), Priority::High, 1));
+        let r = s.next_release(t0 + Duration::from_millis(2)).unwrap();
+        assert_eq!(r.variant, "v2", "high priority first despite later arrival");
+        let r2 = s.next_release(t0 + Duration::from_millis(2)).unwrap();
+        assert_eq!(r2.variant, "v1");
+    }
+
+    #[test]
+    fn within_a_batch_release_order_is_priority_then_deadline() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new(cfg(8, 1));
+        s.push(qp("v1", t0, Priority::Low, 0));
+        s.push(qd("v1", t0, t0 + Duration::from_millis(9), 1));
+        s.push(qp("v1", t0, Priority::High, 2));
+        s.push(qd("v1", t0, t0 + Duration::from_millis(3), 3));
+        let r = s.next_release(t0).unwrap();
+        // High tier first, then the Normal tier by deadline, Low last.
+        assert_eq!(ids(&r), vec![2, 3, 1, 0]);
     }
 
     #[test]
     fn take_expired_sweeps_only_past_deadline_items() {
-        // payload = optional deadline offset in ms from t0
         let t0 = Instant::now();
-        let mut b: Batcher<Option<u64>> = Batcher::new(cfg(8, 1000));
-        let push = |b: &mut Batcher<Option<u64>>, dl: Option<u64>| {
-            b.push(Queued {
-                variant: "v1".into(),
-                enqueued_at: t0,
-                payload: dl,
-            });
-        };
-        push(&mut b, Some(5)); // expires at t0+5ms
-        push(&mut b, None); // no deadline
-        push(&mut b, Some(50)); // still live at sweep time
-        push(&mut b, Some(1)); // expires at t0+1ms
+        let mut s: Scheduler<usize> = Scheduler::new(cfg(8, 1000));
+        s.push(qd("v1", t0, t0 + Duration::from_millis(5), 0));
+        s.push(q("v1", t0, 1)); // no deadline: never swept
+        s.push(qd("v1", t0, t0 + Duration::from_millis(50), 2));
+        s.push(qd("v1", t0, t0 + Duration::from_millis(1), 3));
         let now = t0 + Duration::from_millis(10);
-        let expired =
-            b.take_expired(now, |dl: &Option<u64>| dl.map(|ms| t0 + Duration::from_millis(ms)));
-        let offsets: Vec<Option<u64>> = expired.iter().map(|q| q.payload).collect();
-        assert_eq!(offsets, vec![Some(5), Some(1)], "queue order preserved");
-        assert_eq!(b.len(), 2, "survivors stay queued");
-        // survivors still batch normally
-        match b.next_batch(now + Duration::from_millis(2000)) {
-            BatchDecision::Run { batch, .. } => assert_eq!(batch.len(), 2),
-            other => panic!("expected Run, got {other:?}"),
-        }
+        let expired = s.take_expired(now);
+        let offsets: Vec<usize> = expired.iter().map(|q| q.payload).collect();
+        assert_eq!(offsets, vec![0, 3], "queue order preserved");
+        assert_eq!(s.len(), 2, "survivors stay queued");
+        let r = s.next_release(now).unwrap();
+        assert_eq!(ids(&r), vec![2, 1], "survivor with the deadline is more urgent");
     }
 
     #[test]
     fn take_expired_on_empty_queue_is_empty() {
-        let mut b: Batcher<Option<u64>> = Batcher::new(cfg(4, 10));
-        assert!(b.take_expired(Instant::now(), |_| None).is_empty());
+        let mut s: Scheduler<usize> = Scheduler::new(cfg(4, 10));
+        assert!(s.take_expired(Instant::now()).is_empty());
     }
 
     #[test]
-    fn head_of_line_variant_decided_by_fifo() {
-        let t0 = Instant::now();
-        let mut b = Batcher::new(cfg(8, 0));
-        b.push(q("v2", t0, 9));
-        b.push(q("v1", t0, 1));
-        match b.next_batch(t0) {
-            BatchDecision::Run { variant, .. } => assert_eq!(variant, "v2"),
-            other => panic!("expected Run, got {other:?}"),
-        }
+    fn priority_order_is_high_normal_low() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.label(), "high");
     }
 }

@@ -63,6 +63,42 @@ pub struct IsaLoad {
     pub busy_sec: f64,
 }
 
+/// Per-priority-tier admission/dispatch tallies (`priority <tier>`
+/// report lines).  Submissions, scheduler releases, and deadline
+/// expiries segment per tier; the queue-wait stream (pushed at release
+/// time) is what the EDF ordering tests read — under load, `high` must
+/// wait less than `low`.
+#[derive(Debug, Clone, Default)]
+pub struct PriorityLoad {
+    pub submitted: u64,
+    /// Jobs released into a micro-batch.
+    pub released: u64,
+    /// Jobs answered `DeadlineExceeded` (at admission or queued).
+    pub expired: u64,
+    /// Queue wait observed at release time.
+    pub queue_wait: Option<Summary>,
+}
+
+/// Mutable accumulator behind [`PriorityLoad`].
+#[derive(Debug)]
+struct PrioInner {
+    submitted: u64,
+    released: u64,
+    expired: u64,
+    waits_sec: Reservoir,
+}
+
+impl Default for PrioInner {
+    fn default() -> Self {
+        PrioInner {
+            submitted: 0,
+            released: 0,
+            expired: 0,
+            waits_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x9107),
+        }
+    }
+}
+
 #[derive(Debug)]
 struct Inner {
     submitted: u64,
@@ -75,6 +111,10 @@ struct Inner {
     /// Jobs answered `DeadlineExceeded` before execution.  A subset of
     /// `failed` (every expiry also counts as a failure).
     deadline_expired: u64,
+    /// Jobs whose deadline was already past at `submit` — refused at
+    /// admission without consuming a queue slot.  A subset of
+    /// `deadline_expired`.
+    expired_at_admission: u64,
     batches: u64,
     batch_sizes: Reservoir,
     latencies_sec: Reservoir,
@@ -83,12 +123,19 @@ struct Inner {
     /// Queue wait accumulated by jobs whose deadline expired while they
     /// sat queued — attribution for *why* deadlines blew.
     expired_wait_sec: Reservoir,
+    /// Submit-queue depth sampled at each admission — the backpressure
+    /// stream (p95 near capacity means clients should shed).
+    queue_depths: Reservoir,
     per_variant: BTreeMap<String, u64>,
     per_device: BTreeMap<usize, DeviceLoad>,
     /// GEMM work keyed by the execution plan that ran it.
     per_plan: BTreeMap<String, PlanLoad>,
     /// GEMM work keyed by the plan's ISA lowering label.
     per_isa: BTreeMap<String, IsaLoad>,
+    /// Quota rejections per tenant (admission tier).
+    per_tenant_rejected: BTreeMap<String, u64>,
+    /// Admission/dispatch tallies per priority tier.
+    per_priority: BTreeMap<String, PrioInner>,
 }
 
 impl Default for Inner {
@@ -99,16 +146,20 @@ impl Default for Inner {
             failed: 0,
             rejected: 0,
             deadline_expired: 0,
+            expired_at_admission: 0,
             batches: 0,
             batch_sizes: Reservoir::new(RESERVOIR_CAPACITY, 0xB47C),
             latencies_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x1A7E),
             queue_waits_sec: Reservoir::new(RESERVOIR_CAPACITY, 0x9A17),
             exec_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xE7EC),
             expired_wait_sec: Reservoir::new(RESERVOIR_CAPACITY, 0xDEAD),
+            queue_depths: Reservoir::new(RESERVOIR_CAPACITY, 0xD397),
             per_variant: BTreeMap::new(),
             per_device: BTreeMap::new(),
             per_plan: BTreeMap::new(),
             per_isa: BTreeMap::new(),
+            per_tenant_rejected: BTreeMap::new(),
+            per_priority: BTreeMap::new(),
         }
     }
 }
@@ -128,6 +179,9 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     /// Deadline-expired responses (subset of `failed`).
     pub deadline_expired: u64,
+    /// Deadlines already past at `submit`, refused at admission without
+    /// consuming a queue slot (subset of `deadline_expired`).
+    pub expired_at_admission: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub latency: Option<Summary>,
@@ -135,10 +189,16 @@ pub struct MetricsSnapshot {
     pub exec: Option<Summary>,
     /// Queue wait of deadline-expired jobs.
     pub expired_wait: Option<Summary>,
+    /// Submit-queue depth sampled at each admission (backpressure).
+    pub queue_depth: Option<Summary>,
     pub per_variant: BTreeMap<String, u64>,
     pub per_device: BTreeMap<usize, DeviceLoad>,
     pub per_plan: BTreeMap<String, PlanLoad>,
     pub per_isa: BTreeMap<String, IsaLoad>,
+    /// Quota rejections per tenant.
+    pub per_tenant_rejected: BTreeMap<String, u64>,
+    /// Admission/dispatch tallies per priority tier.
+    pub per_priority: BTreeMap<String, PriorityLoad>,
 }
 
 impl Metrics {
@@ -191,6 +251,54 @@ impl Metrics {
         g.failed += 1;
         g.deadline_expired += 1;
         g.expired_wait_sec.push(queue_wait_sec);
+    }
+
+    /// A request arrived with its deadline already past and was refused
+    /// at admission — no queue slot or tenant budget consumed.  Counts
+    /// as a failure and a deadline expiry (zero queue wait burned, so
+    /// nothing lands in the expired-wait stream).
+    pub fn on_expired_at_admission(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.failed += 1;
+        g.deadline_expired += 1;
+        g.expired_at_admission += 1;
+    }
+
+    /// A tenant at its admission quota was refused.  Counts in the
+    /// global `rejected` bucket (the accounting invariant is unchanged)
+    /// and attributes the rejection to the tenant.
+    pub fn on_tenant_reject(&self, tenant: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.rejected += 1;
+        *g.per_tenant_rejected.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
+    /// Submit-queue depth observed at one admission (counting the job
+    /// being admitted).
+    pub fn on_queue_depth(&self, depth: usize) {
+        self.inner.lock().unwrap().queue_depths.push(depth as f64);
+    }
+
+    /// One request submitted in priority tier `tier`.
+    pub fn on_priority_submit(&self, tier: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_priority.entry(tier.to_string()).or_default().submitted += 1;
+    }
+
+    /// One job released into a micro-batch after `queue_wait_sec` in
+    /// tier `tier` — the per-tier wait stream the EDF/priority ordering
+    /// tests read.
+    pub fn on_priority_release(&self, tier: &str, queue_wait_sec: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let p = g.per_priority.entry(tier.to_string()).or_default();
+        p.released += 1;
+        p.waits_sec.push(queue_wait_sec);
+    }
+
+    /// One job in tier `tier` answered `DeadlineExceeded`.
+    pub fn on_priority_expired(&self, tier: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_priority.entry(tier.to_string()).or_default().expired += 1;
     }
 
     /// Make a compiled plan visible in the report even before (or
@@ -257,16 +365,34 @@ impl Metrics {
             failed: g.failed,
             rejected: g.rejected,
             deadline_expired: g.deadline_expired,
+            expired_at_admission: g.expired_at_admission,
             batches: g.batches,
             mean_batch_size: g.batch_sizes.mean(),
             latency: g.latencies_sec.summary(),
             queue_wait: g.queue_waits_sec.summary(),
             exec: g.exec_sec.summary(),
             expired_wait: g.expired_wait_sec.summary(),
+            queue_depth: g.queue_depths.summary(),
             per_variant: g.per_variant.clone(),
             per_device: g.per_device.clone(),
             per_plan: g.per_plan.clone(),
             per_isa: g.per_isa.clone(),
+            per_tenant_rejected: g.per_tenant_rejected.clone(),
+            per_priority: g
+                .per_priority
+                .iter()
+                .map(|(tier, p)| {
+                    (
+                        tier.clone(),
+                        PriorityLoad {
+                            submitted: p.submitted,
+                            released: p.released,
+                            expired: p.expired,
+                            queue_wait: p.waits_sec.summary(),
+                        },
+                    )
+                })
+                .collect(),
         }
     }
 }
@@ -288,6 +414,18 @@ impl MetricsSnapshot {
             } else {
                 out.push_str(&format!("deadline expired: {}\n", self.deadline_expired));
             }
+            if self.expired_at_admission > 0 {
+                out.push_str(&format!(
+                    "  refused pre-expired at admission: {}\n",
+                    self.expired_at_admission
+                ));
+            }
+        }
+        if let Some(d) = &self.queue_depth {
+            out.push_str(&format!(
+                "queue depth at admission: p50 {:.0}, p95 {:.0}, max {:.0}\n",
+                d.p50, d.p95, d.max
+            ));
         }
         out.push_str(&format!(
             "batches: {} (mean size {:.2})\n",
@@ -304,6 +442,25 @@ impl MetricsSnapshot {
         }
         if let Some(q) = &self.queue_wait {
             out.push_str(&format!("queue wait: p50 {:.3} ms\n", q.p50 * 1e3));
+        }
+        for (tier, p) in &self.per_priority {
+            match &p.queue_wait {
+                Some(w) => out.push_str(&format!(
+                    "priority {tier}: {} submitted, {} released, {} expired \
+                     (queue wait p50 {:.3} ms)\n",
+                    p.submitted,
+                    p.released,
+                    p.expired,
+                    w.p50 * 1e3
+                )),
+                None => out.push_str(&format!(
+                    "priority {tier}: {} submitted, {} released, {} expired\n",
+                    p.submitted, p.released, p.expired
+                )),
+            }
+        }
+        for (tenant, n) in &self.per_tenant_rejected {
+            out.push_str(&format!("  tenant {tenant}: {n} quota-rejected\n"));
         }
         for (plan_id, load) in &self.per_plan {
             if load.busy_sec > 0.0 && load.flops > 0.0 {
@@ -417,6 +574,79 @@ mod tests {
         assert!((w.mean - 0.006).abs() < 1e-12);
         let report = s.report();
         assert!(report.contains("deadline expired: 2"), "{report}");
+    }
+
+    #[test]
+    fn admission_expiry_is_a_deadline_failure_without_wait_attribution() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_expired_at_admission();
+        let s = m.snapshot();
+        assert_eq!(s.expired_at_admission, 1);
+        assert_eq!(s.deadline_expired, 1, "subset of deadline_expired");
+        assert_eq!(s.failed, 1, "subset of failed");
+        assert!(s.expired_wait.is_none(), "no queue wait was burned");
+        assert_eq!(s.completed + s.failed + s.rejected, s.submitted);
+        let report = s.report();
+        assert!(report.contains("refused pre-expired at admission: 1"), "{report}");
+    }
+
+    #[test]
+    fn tenant_rejections_land_in_the_global_bucket_and_per_tenant() {
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.on_submit();
+        }
+        m.on_complete("v", 0.01, 0.0, 0.01);
+        m.on_tenant_reject("acme");
+        m.on_tenant_reject("acme");
+        m.on_reject();
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 3, "tenant rejections count as rejections");
+        assert_eq!(s.per_tenant_rejected["acme"], 2);
+        assert_eq!(s.completed + s.failed + s.rejected, s.submitted);
+        assert!(s.report().contains("tenant acme: 2 quota-rejected"), "{}", s.report());
+    }
+
+    #[test]
+    fn queue_depth_stream_summarizes_backpressure() {
+        let m = Metrics::new();
+        m.on_queue_depth(1);
+        m.on_queue_depth(3);
+        m.on_queue_depth(8);
+        let s = m.snapshot();
+        let d = s.queue_depth.unwrap();
+        assert_eq!(d.n, 3);
+        assert_eq!(d.max, 8.0);
+        assert!(s.report().contains("queue depth at admission"), "{}", s.report());
+    }
+
+    #[test]
+    fn priority_tiers_segment_submits_releases_and_expiries() {
+        let m = Metrics::new();
+        m.on_priority_submit("high");
+        m.on_priority_submit("high");
+        m.on_priority_submit("low");
+        m.on_priority_release("high", 0.001);
+        m.on_priority_release("high", 0.003);
+        m.on_priority_release("low", 0.040);
+        m.on_priority_expired("low");
+        let s = m.snapshot();
+        assert_eq!(s.per_priority["high"].submitted, 2);
+        assert_eq!(s.per_priority["high"].released, 2);
+        assert_eq!(s.per_priority["high"].expired, 0);
+        assert_eq!(s.per_priority["low"].expired, 1);
+        let hw = s.per_priority["high"].queue_wait.as_ref().unwrap();
+        let lw = s.per_priority["low"].queue_wait.as_ref().unwrap();
+        assert!(
+            hw.p50 < lw.p50,
+            "high tier must wait less than low here: {} vs {}",
+            hw.p50,
+            lw.p50
+        );
+        let report = s.report();
+        assert!(report.contains("priority high: 2 submitted, 2 released"), "{report}");
+        assert!(report.contains("priority low:"), "{report}");
     }
 
     #[test]

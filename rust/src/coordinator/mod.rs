@@ -2,7 +2,8 @@
 //!
 //! * `registry` — shape/precision -> ranked kernel variants (autotuned
 //!   routing table);
-//! * `batcher`  — dynamic same-variant batching (pure state machine);
+//! * `batcher`  — continuous-batching scheduler: deadline-ordered,
+//!   priority-tiered same-variant micro-batches (pure state machine);
 //! * `sharding` — shard planner + multi-device execution pool;
 //! * `server`   — dispatcher + per-device worker queues over the runtime;
 //! * `metrics`  — request/latency/per-device accounting;
@@ -20,13 +21,14 @@ pub mod server;
 pub mod shadow;
 pub mod sharding;
 
-pub use batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+pub use batcher::{BatcherConfig, Priority, Queued, Release, Scheduler};
 pub use faults::{seed_from_env, silence_injected_panics, FaultPlan, FaultState};
-pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot, PlanLoad};
+pub use metrics::{DeviceLoad, Metrics, MetricsSnapshot, PlanLoad, PriorityLoad};
 pub use registry::{GemmKey, Registry, RegistryEntry};
 pub use server::{
-    GemmRequest, GemmResponse, ProgramRequest, Server, ServerConfig, ERR_DEADLINE,
-    ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
+    AdmissionConfig, GemmRequest, GemmResponse, ProgramRequest, Server,
+    ServerConfig, SubmitOpts, ERR_DEADLINE, ERR_POISONED, ERR_QUEUE_FULL,
+    ERR_SHUTDOWN,
 };
 pub use shadow::{
     PlanDb, PlanRecord, ShadowConfig, ShadowState, ShadowTimes, PLANDB_FORMAT,

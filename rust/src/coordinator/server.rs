@@ -1,17 +1,27 @@
-//! The GEMM service: router + batcher + sharded multi-device worker pool
-//! over the in-process runtime.
+//! The GEMM service: router + continuous-batching scheduler + sharded
+//! multi-device worker pool over the in-process runtime.
 //!
-//! Requests are submitted from any thread; a dispatcher routes each to the
-//! autotuned variant for its shape and batches same-variant requests.
-//! Batches go to one of N per-device work queues and execute as a single
-//! batched-GEMM runtime call (stacked operands, one pack/unpack).  Large
-//! GEMMs are instead sharded across the whole device pool
-//! ([`super::sharding`]): the dispatcher fans the per-shard tasks out to
-//! every device queue and the worker that finishes the last shard runs
-//! the reduction and replies.  Responses come back on per-request
-//! channels.  This is the paper's missing run-time half: it generated
-//! kernels, we also serve them — across a pool of devices.
+//! Requests are submitted from any thread; a dispatcher routes each to
+//! the autotuned variant for its shape and admits it into the
+//! continuous-batching scheduler ([`super::batcher`]).  The moment a
+//! device has a free execution slot the dispatcher releases the most
+//! urgent admissible micro-batch — earliest-deadline-first within the
+//! highest occupied priority tier, grouped by variant — so a lone
+//! request dispatches immediately instead of waiting out a batching
+//! window.  Batches go to the chosen device's work queue and execute as
+//! a single batched-GEMM runtime call (stacked operands, one
+//! pack/unpack).  Large GEMMs are instead sharded across the whole
+//! device pool ([`super::sharding`]): the dispatcher fans the per-shard
+//! tasks out to every device queue and the worker that finishes the
+//! last shard runs the reduction and replies.  Responses come back on
+//! per-request channels, each carrying the submit-queue depth observed
+//! at its admission as an explicit backpressure signal.  Admission is
+//! two-tier: a global bounded queue plus optional per-tenant quotas
+//! ([`AdmissionConfig`]), both rejecting explicitly, never blocking.
+//! This is the paper's missing run-time half: it generated kernels, we
+//! also serve them — across a pool of devices.
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
@@ -28,7 +38,7 @@ use crate::runtime::{
 };
 use crate::sim::DeviceModel;
 
-use super::batcher::{BatchDecision, Batcher, BatcherConfig, Queued};
+use super::batcher::{BatcherConfig, Priority, Queued, Scheduler};
 use super::faults::{FaultPlan, FaultState};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{GemmKey, Registry};
@@ -71,12 +81,14 @@ pub struct GemmRequest {
     pub bias: Option<Tensor>,
     /// Route to the library baseline instead of the generated kernel.
     pub use_baseline: bool,
-    /// Optional latency budget.  A job whose deadline passes while it is
-    /// still queued (in the submit channel, the batcher, or a device
-    /// queue) is answered with an explicit [`ERR_DEADLINE`] error before
-    /// execution — stale output is never silently computed.  A deadline
-    /// that expires *during* execution does not abort the kernel; the
-    /// check gates execution start only.
+    /// Optional latency budget.  A deadline already past at `submit` is
+    /// refused at admission without consuming any queue capacity; a job
+    /// whose deadline passes while it is still queued (in the submit
+    /// channel, the scheduler, or a device queue) is answered with an
+    /// explicit [`ERR_DEADLINE`] error before execution — stale output
+    /// is never silently computed.  A deadline that expires *during*
+    /// execution does not abort the kernel; the check gates execution
+    /// start only.
     pub deadline: Option<Instant>,
 }
 
@@ -106,6 +118,13 @@ pub struct GemmResponse {
     /// weights bound before the client's last completed `bind_weights`
     /// call would carry a stale (smaller) epoch.
     pub bound_epoch: Option<u64>,
+    /// Submit-queue depth observed at this request's admission (counting
+    /// the request itself) — the server's explicit backpressure signal.
+    /// Clients shed or slow down as it approaches
+    /// `ServerConfig::queue_capacity`; a rejected request reports the
+    /// full capacity.  0 for requests refused before entering the queue
+    /// (pre-expired deadline, tenant quota, shutdown race).
+    pub queue_depth: usize,
 }
 
 impl GemmResponse {
@@ -128,8 +147,35 @@ impl GemmResponse {
             exec_time: Duration::ZERO,
             total_latency: submitted_at.elapsed(),
             bound_epoch: None,
+            queue_depth: 0,
         }
     }
+}
+
+/// Per-submit admission options: which tenant the request bills against
+/// and which priority tier it dispatches in.  `Server::submit` uses the
+/// default (untenanted, [`Priority::Normal`]); [`Server::submit_with`]
+/// exposes the full surface.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Tenant the request's admitted occupancy bills against
+    /// ([`AdmissionConfig::tenant_quota`]).  `None` bills nothing and is
+    /// only subject to the global queue bound.
+    pub tenant: Option<String>,
+    /// Dispatch tier: the scheduler releases strictly by (priority,
+    /// effective deadline) within admissible work.
+    pub priority: Priority,
+}
+
+/// Admission-tier configuration: per-tenant quotas layered on the
+/// global bounded submit queue.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionConfig {
+    /// Max jobs one tenant may hold admitted (submit channel +
+    /// scheduler) at once; 0 disables per-tenant quotas.  A tenant at
+    /// quota gets a per-tenant [`ERR_QUEUE_FULL`] rejection naming the
+    /// tenant and the quota, while other tenants keep flowing.
+    pub tenant_quota: usize,
 }
 
 /// What a job asks the pool to run: a routed GEMM or a whole composite
@@ -161,6 +207,14 @@ struct Job {
     /// The request's latency budget (GEMM jobs only), checked at every
     /// queue boundary before execution.
     deadline: Option<Instant>,
+    /// Dispatch tier ([`SubmitOpts::priority`]), read by the scheduler.
+    priority: Priority,
+    /// Tenant the job's admitted occupancy bills against; the dispatcher
+    /// releases the billing the moment the job stops being admitted.
+    tenant: Option<String>,
+    /// Submit-queue depth sampled at admission, echoed on the response
+    /// as the backpressure signal.
+    admit_depth: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -194,6 +248,9 @@ pub struct ServerConfig {
     /// `MetricsSnapshot::rejected` (the accounting invariant is
     /// `submitted == completed + failed + rejected`).  Clamped to ≥ 1.
     pub queue_capacity: usize,
+    /// Per-tenant admission quotas on top of the global bound (see
+    /// [`AdmissionConfig`]).  Off by default.
+    pub admission: AdmissionConfig,
     /// Deterministic fault-injection schedule (see [`super::faults`]).
     /// The default injects nothing.
     pub faults: FaultPlan,
@@ -216,6 +273,7 @@ impl Default for ServerConfig {
             rerank_measured: false,
             plan: PlanOverride::Auto,
             queue_capacity: 1024,
+            admission: AdmissionConfig::default(),
             faults: FaultPlan::default(),
             shadow: ShadowConfig::default(),
         }
@@ -276,6 +334,8 @@ struct ShardedJob {
     /// Bind epoch of the routed weights (weight-bound requests only),
     /// echoed on the response by the last finisher.
     bound_epoch: Option<u64>,
+    /// Admission-time queue depth, echoed on the response.
+    admit_depth: usize,
     submitted_at: Instant,
     /// Set by the first worker to start a shard: splits queue wait from
     /// execution time the same way the batch path does.
@@ -299,8 +359,30 @@ pub struct Server {
     registry: Arc<Registry>,
     faults: Arc<FaultState>,
     shadow: Option<Arc<ShadowState>>,
+    /// Jobs currently buffered in the submit channel (incremented at
+    /// admission, decremented when the dispatcher drains one) — the
+    /// live depth behind every response's `queue_depth`.
+    queue_depth: Arc<AtomicUsize>,
+    /// Admitted-job count per tenant (submit channel + scheduler),
+    /// maintained only when `tenant_quota > 0`.
+    tenant_ledger: Arc<Mutex<HashMap<String, usize>>>,
+    tenant_quota: usize,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// Release one admitted job's tenant billing.  No-op for untenanted
+/// jobs and for tenants with no live entry (quota disabled).
+fn tenant_unbill(ledger: &Mutex<HashMap<String, usize>>, tenant: &Option<String>) {
+    if let Some(t) = tenant {
+        let mut g = ledger.lock().unwrap();
+        if let Some(n) = g.get_mut(t) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                g.remove(t);
+            }
+        }
+    }
 }
 
 impl Server {
@@ -350,6 +432,12 @@ impl Server {
         // never a blocked client thread.
         let queue_capacity = cfg.queue_capacity.max(1);
         let (submit_tx, submit_rx) = mpsc::sync_channel::<Job>(queue_capacity);
+        // Live submit-channel depth (the backpressure signal) and the
+        // per-tenant admitted-job ledger behind AdmissionConfig quotas.
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let tenant_ledger: Arc<Mutex<HashMap<String, usize>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let tenant_quota = cfg.admission.tenant_quota;
 
         // Per-device work queues; worker threads spread across them so
         // every device context has at least one executor.
@@ -357,14 +445,22 @@ impl Server {
         let total_threads = cfg.total_threads();
         let threads_base = total_threads / devices;
         let threads_rem = total_threads % devices;
+        // Free-slot accounting for continuous release: work items in
+        // flight per device, against that device's executor-thread count.
+        // Heuristic gate only (Relaxed; the worker decrements after it
+        // finishes an item), never a correctness invariant.
+        let device_threads: Vec<usize> = (0..devices)
+            .map(|dev| threads_base + usize::from(dev < threads_rem))
+            .collect();
+        let inflight: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..devices).map(|_| AtomicUsize::new(0)).collect());
         let mut device_txs: Vec<Sender<WorkItem>> = Vec::with_capacity(devices);
         let mut workers = Vec::new();
         for dev in 0..devices {
             let (tx, rx) = mpsc::channel::<WorkItem>();
             let rx = Arc::new(Mutex::new(rx));
             device_txs.push(tx);
-            let n_threads = threads_base + usize::from(dev < threads_rem);
-            for _ in 0..n_threads {
+            for _ in 0..device_threads[dev] {
                 let rt = runtime.clone();
                 let rx = rx.clone();
                 let m = metrics.clone();
@@ -372,6 +468,7 @@ impl Server {
                 let flt = faults.clone();
                 let reg = registry.clone();
                 let sh = shadow.clone();
+                let infl = inflight.clone();
                 workers.push(std::thread::spawn(move || loop {
                     let msg = {
                         let guard = rx.lock().unwrap();
@@ -448,11 +545,14 @@ impl Server {
                             finish_shard(&m, &task.job, task.shard_idx, result);
                         }
                     }
+                    // Free the execution slot this item occupied; the
+                    // dispatcher's continuous-release gate watches it.
+                    infl[dev].fetch_sub(1, Ordering::Relaxed);
                 }));
             }
         }
 
-        // Dispatcher: route + batch + shard fan-out.
+        // Dispatcher: route + continuous-release + shard fan-out.
         let reg = registry.clone();
         let met = metrics.clone();
         let rt = runtime.clone();
@@ -460,14 +560,21 @@ impl Server {
         let batcher_cfg = cfg.batcher.clone();
         let shard_cfg = cfg.shard.clone();
         let flt = faults.clone();
+        let depth = queue_depth.clone();
+        let ledger = tenant_ledger.clone();
+        let infl = inflight.clone();
         let dispatcher = std::thread::spawn(move || {
             // Hold-until-shutdown hook: fault replays park the dispatcher
             // here so every submit of a schedule lands in the channel
             // before routing starts.  No-op unless the plan engages it.
             flt.wait_dispatch_released();
-            let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
+            let mut sched: Scheduler<Job> = Scheduler::new(batcher_cfg);
             let mut poll = Duration::from_millis(1);
             let mut rr = 0usize;
+            // Release a job's tenant billing the moment it stops being
+            // admitted: released to a device, expired, or failed at
+            // routing.  Exactly once per admitted job.
+            let bill_out = |job: &Job| tenant_unbill(&ledger, &job.tenant);
             'main: loop {
                 // No stop-flag break in this loop: the dispatcher exits
                 // only on Disconnected below.  Shutdown signals by
@@ -485,18 +592,20 @@ impl Server {
                 // (hold every submit in the channel, raise the stop flag,
                 // release the dispatcher) against this code.  Guarded so
                 // production servers never take the branch.
-                if flt.stop_flag_break_armed() && batcher.is_empty() {
+                if flt.stop_flag_break_armed() && sched.is_empty() {
                     break 'main;
                 }
                 let mut enqueue = |mut job: Job| {
-                    // Deadline gate at the channel -> batcher boundary: a
-                    // job that expired while buffered is answered now,
+                    // Deadline gate at the channel -> scheduler boundary:
+                    // a job that expired while buffered is answered now,
                     // never routed.
                     if let Some(dl) = job.deadline {
                         let now = Instant::now();
                         if dl <= now {
                             let wait = now.duration_since(job.submitted_at);
                             met.on_deadline_expired(wait.as_secs_f64());
+                            met.on_priority_expired(job.priority.label());
+                            bill_out(&job);
                             let _ = job.reply.send(GemmResponse::failure(
                                 job.id,
                                 "",
@@ -527,16 +636,19 @@ impl Server {
                     };
                     // Fault point: linger between capturing the routing
                     // decision (plan + bound weights + epoch) and the
-                    // batcher — the window a concurrent rebind races.
+                    // scheduler — the window a concurrent rebind races.
                     flt.delay_route();
                     match routed {
-                        Ok(v) => batcher.push(Queued {
+                        Ok(v) => sched.push(Queued {
                             variant: v,
                             enqueued_at: job.submitted_at,
+                            priority: job.priority,
+                            deadline: job.deadline,
                             payload: job,
                         }),
                         Err(e) => {
                             met.on_fail();
+                            bill_out(&job);
                             let _ = job.reply.send(GemmResponse::failure(
                                 job.id,
                                 "",
@@ -549,25 +661,30 @@ impl Server {
                 };
                 match submit_rx.recv_timeout(poll) {
                     Ok(job) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
                         enqueue(job);
                         // Drain any burst that arrived together so the
-                        // batcher sees the whole group at once.
+                        // scheduler sees the whole group at once.
                         while let Ok(job) = submit_rx.try_recv() {
+                            depth.fetch_sub(1, Ordering::Relaxed);
                             enqueue(job);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
-                // Deadline sweep inside the batching window: a job can
-                // expire *after* routing while the batcher waits for its
-                // group to fill.  Answer those now instead of burning a
-                // worker on stale output.
+                // Deadline sweep: a job can expire *after* routing while
+                // it waits in the scheduler for a device to free up.
+                // Answer those now instead of burning a worker on stale
+                // output.
                 let now = Instant::now();
-                for q in batcher.take_expired(now, |j: &Job| j.deadline) {
+                for q in sched.take_expired(now) {
+                    let prio = q.priority;
                     let job = q.payload;
                     let wait = now.duration_since(job.submitted_at);
                     met.on_deadline_expired(wait.as_secs_f64());
+                    met.on_priority_expired(prio.label());
+                    bill_out(&job);
                     let _ = job.reply.send(GemmResponse::failure(
                         job.id,
                         &q.variant,
@@ -576,61 +693,81 @@ impl Server {
                         wait,
                     ));
                 }
+                // Continuous release: the moment a device has a free
+                // execution slot, hand it the most urgent admissible
+                // micro-batch.  A lone request dispatches immediately —
+                // no fixed window ever holds it back.
                 loop {
-                    match batcher.next_batch(Instant::now()) {
-                        BatchDecision::Idle => {
-                            poll = Duration::from_millis(1);
-                            break;
-                        }
-                        BatchDecision::Wait(d) => {
-                            poll = d.min(Duration::from_millis(1)).max(Duration::from_micros(100));
-                            break;
-                        }
-                        BatchDecision::Run { variant, batch } => {
-                            if !handle_run(
-                                &rt, &met, &env, &shard_cfg, &device_txs, &mut rr,
-                                variant, batch,
-                            ) {
-                                break 'main;
-                            }
-                        }
+                    let Some(dev) = (0..infl.len())
+                        .find(|&d| infl[d].load(Ordering::Relaxed) < device_threads[d])
+                    else {
+                        // Every executor is busy.  Poll fast while work
+                        // waits so the next free slot is claimed promptly.
+                        poll = if sched.is_empty() {
+                            Duration::from_millis(1)
+                        } else {
+                            Duration::from_micros(100)
+                        };
+                        break;
+                    };
+                    let Some(rel) = sched.next_release(Instant::now()) else {
+                        poll = Duration::from_millis(1);
+                        break;
+                    };
+                    let released_at = Instant::now();
+                    for q in &rel.batch {
+                        met.on_priority_release(
+                            q.priority.label(),
+                            released_at.duration_since(q.enqueued_at).as_secs_f64(),
+                        );
+                        bill_out(&q.payload);
+                    }
+                    if !handle_run(
+                        &rt, &met, &env, &shard_cfg, &device_txs, &infl, &mut rr,
+                        dev, rel.variant, rel.batch,
+                    ) {
+                        break 'main;
                     }
                 }
             }
-            // Drain on shutdown: flush everything still queued.
+            // Drain on shutdown: flush everything still queued, ignoring
+            // the free-slot gate (workers drain their queues before they
+            // exit, so queued-behind-busy is fine here).
             loop {
-                match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
-                    BatchDecision::Run { variant, batch } => {
-                        if !handle_run(
-                            &rt, &met, &env, &shard_cfg, &device_txs, &mut rr, variant,
-                            batch,
-                        ) {
-                            break;
-                        }
-                    }
-                    _ => break,
+                let Some(rel) = sched.next_release(Instant::now()) else { break };
+                let released_at = Instant::now();
+                for q in &rel.batch {
+                    met.on_priority_release(
+                        q.priority.label(),
+                        released_at.duration_since(q.enqueued_at).as_secs_f64(),
+                    );
+                    bill_out(&q.payload);
+                }
+                let dev = rr % device_txs.len();
+                rr = rr.wrapping_add(1);
+                if !handle_run(
+                    &rt, &met, &env, &shard_cfg, &device_txs, &infl, &mut rr, dev,
+                    rel.variant, rel.batch,
+                ) {
+                    break;
                 }
             }
             // If the workers died mid-stream, jobs may still sit in the
-            // batcher after the drain bailed: fail each one explicitly so
-            // submitted == completed + failed holds and callers get an
+            // scheduler after the drain bailed: fail each one explicitly
+            // so submitted == completed + failed holds and callers get an
             // error response instead of a dead channel.
-            loop {
-                match batcher.next_batch(Instant::now() + Duration::from_secs(3600)) {
-                    BatchDecision::Run { batch, .. } => {
-                        for q in batch {
-                            let Job { id, submitted_at, reply, .. } = q.payload;
-                            met.on_fail();
-                            let _ = reply.send(GemmResponse::failure(
-                                id,
-                                "",
-                                anyhow!("server worker pool is gone"),
-                                submitted_at,
-                                Duration::ZERO,
-                            ));
-                        }
-                    }
-                    _ => break,
+            while let Some(rel) = sched.next_release(Instant::now()) {
+                for q in rel.batch {
+                    bill_out(&q.payload);
+                    let Job { id, submitted_at, reply, .. } = q.payload;
+                    met.on_fail();
+                    let _ = reply.send(GemmResponse::failure(
+                        id,
+                        "",
+                        anyhow!("server worker pool is gone"),
+                        submitted_at,
+                        Duration::ZERO,
+                    ));
                 }
             }
             drop(device_txs);
@@ -644,6 +781,9 @@ impl Server {
             registry,
             faults,
             shadow,
+            queue_depth,
+            tenant_ledger,
+            tenant_quota,
             dispatcher: Some(dispatcher),
             workers,
         }
@@ -651,7 +791,17 @@ impl Server {
 
     /// Submit a request; the response arrives on the returned channel.
     pub fn submit(&self, request: GemmRequest) -> Receiver<GemmResponse> {
-        self.submit_kind(JobKind::Gemm(request))
+        self.submit_kind(JobKind::Gemm(request), SubmitOpts::default())
+    }
+
+    /// Submit with explicit admission options: the tenant the request
+    /// bills against and its dispatch priority tier ([`SubmitOpts`]).
+    pub fn submit_with(
+        &self,
+        request: GemmRequest,
+        opts: SubmitOpts,
+    ) -> Receiver<GemmResponse> {
+        self.submit_kind(JobKind::Gemm(request), opts)
     }
 
     /// Submit a composite-program request ([`ProgramRequest`]); the
@@ -659,27 +809,92 @@ impl Server {
     /// artifact and execute under the registry-cached [`ProgramPlan`],
     /// with per-plan metrics attribution separate from GEMM traffic.
     pub fn submit_program(&self, request: ProgramRequest) -> Receiver<GemmResponse> {
-        self.submit_kind(JobKind::Program(request))
+        self.submit_kind(JobKind::Program(request), SubmitOpts::default())
     }
 
-    fn submit_kind(&self, kind: JobKind) -> Receiver<GemmResponse> {
+    /// [`Server::submit_program`] with explicit admission options.
+    pub fn submit_program_with(
+        &self,
+        request: ProgramRequest,
+        opts: SubmitOpts,
+    ) -> Receiver<GemmResponse> {
+        self.submit_kind(JobKind::Program(request), opts)
+    }
+
+    fn submit_kind(&self, kind: JobKind, opts: SubmitOpts) -> Receiver<GemmResponse> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.on_submit();
+        self.metrics.on_priority_submit(opts.priority.label());
         let deadline = match &kind {
             JobKind::Gemm(req) => req.deadline,
             JobKind::Program(_) => None,
         };
+        let submitted_at = Instant::now();
+        // A deadline already in the past is answered here, at admission:
+        // it can never be served in time, so it must not consume a queue
+        // slot or tenant budget that a feasible request could use.
+        if let Some(dl) = deadline {
+            if dl <= submitted_at {
+                self.metrics.on_expired_at_admission();
+                self.metrics.on_priority_expired(opts.priority.label());
+                let _ = tx.send(GemmResponse::failure(
+                    id,
+                    "",
+                    anyhow!(
+                        "{ERR_DEADLINE}: deadline was already past at submit; \
+                         refused at admission, no queue capacity consumed"
+                    ),
+                    submitted_at,
+                    Duration::ZERO,
+                ));
+                return rx;
+            }
+        }
+        // Per-tenant quota, checked before the global try_send: one
+        // tenant at its admitted-job cap is rejected by name while other
+        // tenants keep flowing through the shared queue.
+        if self.tenant_quota > 0 {
+            if let Some(t) = &opts.tenant {
+                let mut g = self.tenant_ledger.lock().unwrap();
+                let n = g.entry(t.clone()).or_insert(0);
+                if *n >= self.tenant_quota {
+                    drop(g);
+                    self.metrics.on_tenant_reject(t);
+                    let _ = tx.send(GemmResponse::failure(
+                        id,
+                        "",
+                        anyhow!(
+                            "{ERR_QUEUE_FULL}: tenant {t:?} at quota {} admitted \
+                             jobs; retry after its in-flight work drains",
+                            self.tenant_quota
+                        ),
+                        submitted_at,
+                        Duration::ZERO,
+                    ));
+                    return rx;
+                }
+                *n += 1;
+            }
+        }
+        // Count the job into the live depth *before* try_send so the
+        // dispatcher's decrement (which can race this submit) never
+        // underflows; the failure arms below uncount it.
+        let admit_depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.metrics.on_queue_depth(admit_depth);
         let job = Job {
             id,
             kind,
-            submitted_at: Instant::now(),
+            submitted_at,
             reply: tx,
             plan: None,  // attached by the dispatcher at routing time
             pplan: None, // ditto (composite-program jobs)
             bound: None, // ditto
             bound_epoch: None, // ditto
             deadline,
+            priority: opts.priority,
+            tenant: opts.tenant,
+            admit_depth,
         };
         match self.submit_tx.try_send(job) {
             Ok(()) => {}
@@ -689,24 +904,31 @@ impl Server {
                 // never buffer unboundedly.  Rejections are their own
                 // metrics bucket, keeping
                 // `submitted == completed + failed + rejected` exact.
+                self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                tenant_unbill(&self.tenant_ledger, &job.tenant);
                 self.metrics.on_reject();
-                let _ = job.reply.send(GemmResponse::failure(
-                    job.id,
-                    "",
-                    anyhow!(
-                        "{ERR_QUEUE_FULL}: submit queue at capacity {}; \
-                         retry later or raise ServerConfig::queue_capacity",
-                        self.queue_capacity
-                    ),
-                    job.submitted_at,
-                    Duration::ZERO,
-                ));
+                let _ = job.reply.send(GemmResponse {
+                    queue_depth: self.queue_capacity,
+                    ..GemmResponse::failure(
+                        job.id,
+                        "",
+                        anyhow!(
+                            "{ERR_QUEUE_FULL}: submit queue at capacity {}; \
+                             retry later or raise ServerConfig::queue_capacity",
+                            self.queue_capacity
+                        ),
+                        job.submitted_at,
+                        Duration::ZERO,
+                    )
+                });
             }
             Err(TrySendError::Disconnected(job)) => {
                 // The dispatcher is gone (shutdown raced the submit).
                 // Account the failure so `submitted` can never permanently
                 // exceed `completed + failed + rejected`, and hand the
                 // caller an explicit error instead of a dropped channel.
+                self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                tenant_unbill(&self.tenant_ledger, &job.tenant);
                 self.metrics.on_fail();
                 let _ = job.reply.send(GemmResponse::failure(
                     job.id,
@@ -744,6 +966,12 @@ impl Server {
     /// delays).  Tests use it to prove a seeded schedule actually fired.
     pub fn faults(&self) -> &FaultState {
         &self.faults
+    }
+
+    /// Jobs currently buffered in the submit channel — the live depth
+    /// behind every response's `queue_depth` backpressure signal.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
     }
 
     /// The shadow-tuning state, when enabled ([`ServerConfig::shadow`]).
@@ -891,8 +1119,10 @@ fn route_program(
 }
 
 /// Dispatch one released batch: shard it across the pool when the shard
-/// planner says so, otherwise send the whole batch to one device queue
-/// (round-robin).  Returns false when the workers are gone.
+/// planner says so, otherwise send the whole batch to `dev` — the queue
+/// the dispatcher's free-slot gate picked.  Every send bumps that
+/// device's inflight counter (workers decrement on completion).
+/// Returns false when the workers are gone.
 #[allow(clippy::too_many_arguments)]
 fn handle_run(
     rt: &Runtime,
@@ -900,7 +1130,9 @@ fn handle_run(
     env: &PlanEnv,
     shard_cfg: &ShardConfig,
     device_txs: &[Sender<WorkItem>],
+    inflight: &[AtomicUsize],
     rr: &mut usize,
+    dev: usize,
     variant: String,
     batch: Vec<Queued<Job>>,
 ) -> bool {
@@ -925,7 +1157,7 @@ fn handle_run(
                     *rr += 1;
                     dispatch_sharded(
                         q.payload, &variant, &program, env, &splan, base, device_txs,
-                        met,
+                        inflight, met,
                     );
                 }
                 return true;
@@ -934,11 +1166,11 @@ fn handle_run(
         // Load errors fall through to the batch path, which reports them
         // per item.
     }
-    let dev = *rr % devices;
-    *rr += 1;
+    inflight[dev].fetch_add(1, Ordering::Relaxed);
     match device_txs[dev].send(WorkItem::Batch { variant, batch }) {
         Ok(()) => true,
         Err(mpsc::SendError(item)) => {
+            inflight[dev].fetch_sub(1, Ordering::Relaxed);
             // The device's workers are gone (e.g. a panic killed them):
             // fail every job in the recovered batch explicitly so the
             // submitted == completed + failed invariant survives, then
@@ -979,6 +1211,7 @@ fn dispatch_sharded(
     splan: &ShardPlan,
     device_base: usize,
     device_txs: &[Sender<WorkItem>],
+    inflight: &[AtomicUsize],
     metrics: &Metrics,
 ) {
     let Job {
@@ -990,6 +1223,7 @@ fn dispatch_sharded(
         bound,
         bound_epoch,
         deadline,
+        admit_depth,
         ..
     } = job;
     let JobKind::Gemm(GemmRequest { a, b, c, bias, .. }) = kind else {
@@ -1096,6 +1330,7 @@ fn dispatch_sharded(
             .unwrap_or_else(|| "scalar".into()),
         pack,
         bound_epoch,
+        admit_depth,
         submitted_at,
         exec_started: Mutex::new(None),
         plan: splan.clone(),
@@ -1118,7 +1353,9 @@ fn dispatch_sharded(
             bound: task_bound,
         });
         let dev = (shard.device + device_base) % device_txs.len();
+        inflight[dev].fetch_add(1, Ordering::Relaxed);
         if device_txs[dev].send(item).is_err() {
+            inflight[dev].fetch_sub(1, Ordering::Relaxed);
             finish_shard(metrics, &shared, idx, Err(anyhow!("device worker is gone")));
         }
     }
@@ -1201,6 +1438,7 @@ fn finish_shard(
             exec_time,
             total_latency: total,
             bound_epoch: sj.bound_epoch,
+            queue_depth: sj.admit_depth,
         });
     }
 }
@@ -1277,8 +1515,9 @@ fn run_batch(
         .filter(|(i, _)| !(is_bound && *i == crate::runtime::GEMM_B_INPUT_SLOT))
         .map(|(_, s)| s)
         .collect();
-    // (id, submitted_at, reply, routed bind epoch) per surviving item.
-    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>, Option<u64>)> =
+    // (id, submitted_at, reply, routed bind epoch, admission depth) per
+    // surviving item.
+    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>, Option<u64>, usize)> =
         Vec::with_capacity(batch.len());
     let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
     // For bound batches: the BoundB Arc each valid item was routed with,
@@ -1299,6 +1538,7 @@ fn run_batch(
             bound,
             bound_epoch,
             deadline,
+            admit_depth,
             ..
         } = q.payload;
         if batch_plan.is_none() {
@@ -1373,7 +1613,7 @@ fn run_batch(
                 .zip(specs.iter().copied())
                 .all(|(t, spec)| t.matches(spec));
         if valid {
-            jobs.push((id, submitted_at, reply, bound_epoch));
+            jobs.push((id, submitted_at, reply, bound_epoch, admit_depth));
             if let Some(bw) = job_bound {
                 bounds.push(bw);
             }
@@ -1428,7 +1668,7 @@ fn run_batch(
     // Whole-batch execution, contained.  The fault gates live *inside*
     // the closure so an injected poison panic unwinds through the same
     // path a real executor bug would.
-    let ids: Vec<u64> = jobs.iter().map(|(id, _, _, _)| *id).collect();
+    let ids: Vec<u64> = jobs.iter().map(|(id, _, _, _, _)| *id).collect();
     let exec_whole = || -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
         faults.slow_exec();
         faults.poison_gate(&ids);
@@ -1496,7 +1736,7 @@ fn run_batch(
             // throughput — this path only runs after a panic.
             let mut completed = 0u64;
             let mut busy_total = 0.0f64;
-            for (idx, ((id, submitted_at, reply, epoch), item)) in
+            for (idx, ((id, submitted_at, reply, epoch, depth), item)) in
                 jobs.into_iter().zip(items.iter()).enumerate()
             {
                 let item_started = Instant::now();
@@ -1575,6 +1815,7 @@ fn run_batch(
                     exec_time: busy,
                     total_latency: total,
                     bound_epoch: epoch,
+                    queue_depth: depth,
                 });
             }
             metrics.on_device_task(device, busy_total);
@@ -1654,7 +1895,7 @@ fn run_batch(
                     timing.exec_seconds,
                 );
             }
-            for ((id, submitted_at, reply, epoch), mut out) in
+            for ((id, submitted_at, reply, epoch, depth), mut out) in
                 jobs.into_iter().zip(outs)
             {
                 let queue_wait = exec_started.duration_since(submitted_at);
@@ -1682,6 +1923,7 @@ fn run_batch(
                     exec_time,
                     total_latency: total,
                     bound_epoch: epoch,
+                    queue_depth: depth,
                 });
             }
         }
@@ -1690,10 +1932,11 @@ fn run_batch(
             // problem): every surviving item reports the same error.
             let msg = format!("{e:#}");
             let exec_time = call_started.elapsed();
-            for (id, submitted_at, reply, _epoch) in jobs {
+            for (id, submitted_at, reply, _epoch, depth) in jobs {
                 metrics.on_fail();
                 let _ = reply.send(GemmResponse {
                     exec_time,
+                    queue_depth: depth,
                     ..GemmResponse::failure(
                         id,
                         variant,
@@ -1744,14 +1987,14 @@ fn run_program_batch(
         }
     };
     let specs: Vec<&TensorSpec> = artifact.meta.inputs.iter().collect();
-    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>)> =
+    let mut jobs: Vec<(u64, Instant, Sender<GemmResponse>, usize)> =
         Vec::with_capacity(batch.len());
     let mut items: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
     // One program plan per batch: every job of a variant carries the same
     // registry-cached Arc.
     let mut batch_pplan: Option<Arc<ProgramPlan>> = None;
     for q in batch {
-        let Job { id, kind, submitted_at, reply, pplan, .. } = q.payload;
+        let Job { id, kind, submitted_at, reply, pplan, admit_depth, .. } = q.payload;
         if batch_pplan.is_none() {
             batch_pplan = pplan;
         }
@@ -1772,7 +2015,7 @@ fn run_program_batch(
                 .zip(specs.iter().copied())
                 .all(|(t, spec)| t.matches(spec));
         if valid {
-            jobs.push((id, submitted_at, reply));
+            jobs.push((id, submitted_at, reply, admit_depth));
             items.push(inputs);
         } else {
             metrics.on_fail();
@@ -1798,7 +2041,7 @@ fn run_program_batch(
     let call_started = Instant::now();
     // Contained, like the GEMM path: a panic quarantines the batch into
     // per-item contained re-execution instead of killing the worker.
-    let ids: Vec<u64> = jobs.iter().map(|(id, _, _)| *id).collect();
+    let ids: Vec<u64> = jobs.iter().map(|(id, _, _, _)| *id).collect();
     let exec_one = |item: &Vec<Tensor>| -> Result<(Vec<Vec<Tensor>>, ExecTiming)> {
         let t0 = Instant::now();
         match &pp {
@@ -1840,7 +2083,9 @@ fn run_program_batch(
             // Quarantine (see run_batch): the poisoned program job fails
             // alone and loudly, the rest complete.
             let mut busy_total = 0.0f64;
-            for ((id, submitted_at, reply), item) in jobs.into_iter().zip(items.iter()) {
+            for ((id, submitted_at, reply, depth), item) in
+                jobs.into_iter().zip(items.iter())
+            {
                 let item_started = Instant::now();
                 let one = catch_unwind(AssertUnwindSafe(|| {
                     faults.poison_gate(&[id]);
@@ -1894,6 +2139,7 @@ fn run_program_batch(
                     exec_time: busy,
                     total_latency: total,
                     bound_epoch: None,
+                    queue_depth: depth,
                 });
             }
             metrics.on_device_task(device, busy_total);
@@ -1913,7 +2159,9 @@ fn run_program_batch(
                 );
             }
             let exec_time = call_started.elapsed();
-            for ((id, submitted_at, reply), mut out) in jobs.into_iter().zip(outs) {
+            for ((id, submitted_at, reply, depth), mut out) in
+                jobs.into_iter().zip(outs)
+            {
                 let queue_wait = exec_started.duration_since(submitted_at);
                 let total = submitted_at.elapsed();
                 let output = if out.is_empty() {
@@ -1939,16 +2187,18 @@ fn run_program_batch(
                     exec_time,
                     total_latency: total,
                     bound_epoch: None,
+                    queue_depth: depth,
                 });
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
             let exec_time = call_started.elapsed();
-            for (id, submitted_at, reply) in jobs {
+            for (id, submitted_at, reply, depth) in jobs {
                 metrics.on_fail();
                 let _ = reply.send(GemmResponse {
                     exec_time,
+                    queue_depth: depth,
                     ..GemmResponse::failure(
                         id,
                         variant,

@@ -1,0 +1,466 @@
+//! Open-loop load generator for the serving tier.
+//!
+//! Drives a running [`Server`] with the traffic shape the serving bench
+//! and the `mlir-gemm loadgen` CLI both use: many client threads, each
+//! submitting on its own deterministic open-loop arrival clock (the
+//! clock never waits for responses, so queueing delay shows up as
+//! latency instead of silently throttling the offered load), with
+//!
+//! * **zipfian key popularity** — a few hot GEMM variants take most of
+//!   the traffic, the tail stays warm enough to defeat a single-variant
+//!   fast path;
+//! * **bursty arrivals** — exponential inter-arrival gaps, with a
+//!   configurable probability that an arrival opens a back-to-back
+//!   burst (the fixed-window dispatcher's worst case: a lone request
+//!   after a burst used to eat the whole batching window);
+//! * **mixed request kinds** — weight-bound GEMMs, inline-B GEMMs, and
+//!   composite-program requests interleaved on the same queue, across
+//!   tenants and priority tiers.
+//!
+//! Everything is seeded: the same [`LoadgenConfig`] replays the same
+//! arrival schedule, key sequence, and kind mix bit-for-bit (timing of
+//! the *responses* of course varies with the machine).  Latency is the
+//! server-observed `total_latency` (submit to reply), so draining the
+//! response channels after the arrival schedule finishes does not
+//! inflate the percentiles.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    GemmKey, GemmRequest, GemmResponse, Priority, ProgramRequest, Server,
+    SubmitOpts, ERR_DEADLINE, ERR_QUEUE_FULL,
+};
+use crate::runtime::Tensor;
+use crate::util::prng::Rng;
+use crate::util::stats::percentile;
+
+/// A composite-program leg of the traffic mix: the artifact to submit
+/// and one precomputed input list (cloned per request).
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Requests per client (total offered = clients * per_client).
+    pub per_client: usize,
+    /// Mean exponential inter-arrival gap per client.  The offered rate
+    /// is `clients / mean_gap`, independent of server latency.
+    pub mean_gap: Duration,
+    /// Probability that an arrival opens a burst of `burst_len`
+    /// back-to-back (zero-gap) arrivals.
+    pub burst_prob: f64,
+    pub burst_len: usize,
+    /// Zipf exponent over the key set (0 = uniform; ~1 = classic zipf).
+    pub zipf_s: f64,
+    /// Fraction of GEMM requests submitted weight-bound (`b: None`);
+    /// the caller must have bound weights for every key first.
+    pub bound_fraction: f64,
+    /// Fraction of *all* requests submitted as composite programs
+    /// (requires `program`); the rest are GEMMs.
+    pub program_fraction: f64,
+    pub program: Option<ProgramSpec>,
+    /// Tenants to bill requests against, uniformly; empty = untenanted.
+    pub tenants: Vec<String>,
+    /// Priority tiers to draw from, uniformly; empty = all Normal.
+    pub priorities: Vec<Priority>,
+    /// Per-request latency budget; None = no deadline.
+    pub deadline: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            clients: 8,
+            per_client: 64,
+            mean_gap: Duration::from_micros(500),
+            burst_prob: 0.1,
+            burst_len: 4,
+            zipf_s: 1.0,
+            bound_fraction: 0.5,
+            program_fraction: 0.0,
+            program: None,
+            tenants: Vec::new(),
+            priorities: Vec::new(),
+            deadline: None,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Outcome of one load run, aggregated over every client.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub submitted: usize,
+    pub completed: usize,
+    /// `ERR_QUEUE_FULL` responses (global capacity or tenant quota).
+    pub rejected: usize,
+    /// `ERR_DEADLINE` responses (admission-refused or expired in queue).
+    pub deadline_failed: usize,
+    pub other_failed: usize,
+    /// Wall-clock from first submit to last response drained.
+    pub wall: Duration,
+    /// Completed requests per second of wall time.
+    pub throughput_rps: f64,
+    /// Server-observed submit-to-reply latency percentiles over
+    /// *completed* requests, milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Highest queue depth any response reported at its admission — the
+    /// backpressure signal's observed peak.
+    pub max_queue_depth: usize,
+}
+
+impl LoadReport {
+    pub fn render(&self) -> String {
+        format!(
+            "{} submitted: {} completed, {} rejected, {} deadline-failed, \
+             {} other-failed\n\
+             throughput {:.0} req/s over {:.3} s wall\n\
+             latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}\n\
+             peak queue depth {}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.deadline_failed,
+            self.other_failed,
+            self.throughput_rps,
+            self.wall.as_secs_f64(),
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.max_queue_depth,
+        )
+    }
+}
+
+/// Cumulative zipf distribution over `n` ranks with exponent `s`:
+/// `cdf[i]` is P(rank <= i); the last entry is exactly 1.0.
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    assert!(n > 0, "zipf over an empty key set");
+    let weights: Vec<f64> =
+        (1..=n).map(|rank| 1.0 / (rank as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    let mut cdf: Vec<f64> = weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect();
+    cdf[n - 1] = 1.0;
+    cdf
+}
+
+/// Rank sampled from a zipf CDF by a uniform draw in [0, 1).
+pub fn zipf_sample(cdf: &[f64], u: f64) -> usize {
+    cdf.partition_point(|&c| c <= u).min(cdf.len() - 1)
+}
+
+/// One client's deterministic arrival schedule: exponential gaps with
+/// zero-gap bursts, as offsets from the client's start.  Exposed (and
+/// unit-tested) separately from the threaded driver so the open-loop
+/// shape itself is checkable without a server.
+pub fn arrival_offsets(cfg: &LoadgenConfig, rng: &mut Rng) -> Vec<Duration> {
+    let mut offsets = Vec::with_capacity(cfg.per_client);
+    let mut t = Duration::ZERO;
+    let mut burst_left = 0usize;
+    for _ in 0..cfg.per_client {
+        if burst_left > 0 {
+            burst_left -= 1;
+        } else {
+            // Exponential gap via inverse CDF; clamp the log argument
+            // away from 0 so the gap stays finite.
+            let u = rng.next_f64().max(1e-12);
+            let gap = cfg.mean_gap.as_secs_f64() * -(u.ln());
+            t += Duration::from_secs_f64(gap);
+            if rng.next_f64() < cfg.burst_prob {
+                burst_left = cfg.burst_len.saturating_sub(1);
+            }
+        }
+        offsets.push(t);
+    }
+    offsets
+}
+
+fn classify(resp: &GemmResponse, report: &mut LoadReport) {
+    match &resp.output {
+        Ok(_) => report.completed += 1,
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.starts_with(ERR_QUEUE_FULL) {
+                report.rejected += 1;
+            } else if msg.starts_with(ERR_DEADLINE) {
+                report.deadline_failed += 1;
+            } else {
+                report.other_failed += 1;
+            }
+        }
+    }
+}
+
+/// Drive `cfg` against `server` over `keys` and aggregate the outcome.
+///
+/// The server is taken behind a `Mutex` (the repo's submission idiom —
+/// only the brief `submit` call itself is under the lock; dispatch and
+/// execution run free of it).  Weight-bound traffic requires the caller
+/// to have bound B weights for every key in `keys`.
+pub fn run_load(
+    server: &Mutex<Server>,
+    cfg: &LoadgenConfig,
+    keys: &[GemmKey],
+) -> LoadReport {
+    assert!(!keys.is_empty(), "loadgen needs at least one GEMM key");
+    assert!(
+        cfg.program_fraction == 0.0 || cfg.program.is_some(),
+        "program_fraction > 0 requires a ProgramSpec"
+    );
+    let cdf = zipf_cdf(keys.len(), cfg.zipf_s);
+
+    // Precompute one operand set per key; clients clone per request.
+    // Contents are irrelevant to the serving-path measurement, shapes
+    // are not.
+    let mut trng = Rng::new(cfg.seed ^ 0x7E45);
+    let operands: Vec<(Tensor, Tensor, Tensor)> = keys
+        .iter()
+        .map(|k| {
+            let a = Tensor::new(vec![k.m, k.k], trng.normal_matrix(k.m, k.k))
+                .expect("operand A");
+            let b = Tensor::new(vec![k.k, k.n], trng.normal_matrix(k.k, k.n))
+                .expect("operand B");
+            let c = Tensor::new(vec![k.m, k.n], vec![0.0; k.m * k.n])
+                .expect("operand C");
+            (a, b, c)
+        })
+        .collect();
+
+    let started = Instant::now();
+    let mut seeder = Rng::new(cfg.seed);
+    let client_rngs: Vec<Rng> = (0..cfg.clients).map(|_| seeder.fork()).collect();
+
+    let results: Vec<(Vec<Receiver<GemmResponse>>, usize)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = client_rngs
+                .into_iter()
+                .map(|mut rng| {
+                    let operands = &operands;
+                    let cdf = &cdf;
+                    scope.spawn(move || {
+                        let offsets = arrival_offsets(cfg, &mut rng);
+                        let begin = Instant::now();
+                        let mut rxs = Vec::with_capacity(offsets.len());
+                        let mut submitted = 0usize;
+                        for off in offsets {
+                            let due = begin + off;
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                            let opts = SubmitOpts {
+                                tenant: (!cfg.tenants.is_empty())
+                                    .then(|| rng.choice(&cfg.tenants).clone()),
+                                priority: if cfg.priorities.is_empty() {
+                                    Priority::Normal
+                                } else {
+                                    *rng.choice(&cfg.priorities)
+                                },
+                            };
+                            let rx = if rng.next_f64() < cfg.program_fraction {
+                                let spec = cfg.program.as_ref().unwrap();
+                                let req = ProgramRequest {
+                                    artifact: spec.artifact.clone(),
+                                    inputs: spec.inputs.clone(),
+                                };
+                                server
+                                    .lock()
+                                    .unwrap()
+                                    .submit_program_with(req, opts)
+                            } else {
+                                let idx = zipf_sample(cdf, rng.next_f64());
+                                let (a, b, c) = &operands[idx];
+                                let bound = rng.next_f64() < cfg.bound_fraction;
+                                let req = GemmRequest {
+                                    key: keys[idx].clone(),
+                                    a: a.clone(),
+                                    b: (!bound).then(|| b.clone()),
+                                    c: c.clone(),
+                                    bias: None,
+                                    use_baseline: false,
+                                    deadline: cfg
+                                        .deadline
+                                        .map(|d| Instant::now() + d),
+                                };
+                                server.lock().unwrap().submit_with(req, opts)
+                            };
+                            submitted += 1;
+                            rxs.push(rx);
+                        }
+                        (rxs, submitted)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("loadgen client panicked"))
+                .collect()
+        });
+
+    let mut report = LoadReport {
+        submitted: 0,
+        completed: 0,
+        rejected: 0,
+        deadline_failed: 0,
+        other_failed: 0,
+        wall: Duration::ZERO,
+        throughput_rps: 0.0,
+        p50_ms: 0.0,
+        p95_ms: 0.0,
+        p99_ms: 0.0,
+        max_ms: 0.0,
+        max_queue_depth: 0,
+    };
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    for (rxs, submitted) in results {
+        report.submitted += submitted;
+        for rx in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("response channel died — the server lost a request");
+            report.max_queue_depth = report.max_queue_depth.max(resp.queue_depth);
+            if resp.output.is_ok() {
+                latencies_ms.push(resp.total_latency.as_secs_f64() * 1e3);
+            }
+            classify(&resp, &mut report);
+        }
+    }
+    report.wall = started.elapsed();
+    report.throughput_rps =
+        report.completed as f64 / report.wall.as_secs_f64().max(1e-9);
+    if !latencies_ms.is_empty() {
+        latencies_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        report.p50_ms = percentile(&latencies_ms, 0.50);
+        report.p95_ms = percentile(&latencies_ms, 0.95);
+        report.p99_ms = percentile(&latencies_ms, 0.99);
+        report.max_ms = *latencies_ms.last().unwrap();
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_ends_at_one() {
+        let cdf = zipf_cdf(16, 1.0);
+        assert_eq!(cdf.len(), 16);
+        for w in cdf.windows(2) {
+            assert!(w[0] <= w[1], "cdf must be monotone: {cdf:?}");
+        }
+        assert_eq!(*cdf.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn zipf_skews_mass_to_the_head() {
+        let cdf = zipf_cdf(64, 1.0);
+        // With s = 1 over 64 ranks the top-4 keys carry ~44% of mass.
+        assert!(cdf[3] > 0.4, "head mass {}", cdf[3]);
+        let mut rng = Rng::new(9);
+        let mut head = 0usize;
+        let n = 10_000;
+        for _ in 0..n {
+            if zipf_sample(&cdf, rng.next_f64()) < 4 {
+                head += 1;
+            }
+        }
+        let frac = head as f64 / n as f64;
+        assert!(
+            (frac - cdf[3]).abs() < 0.05,
+            "sampled head fraction {frac} vs cdf {}",
+            cdf[3]
+        );
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let cdf = zipf_cdf(10, 0.0);
+        for (i, c) in cdf.iter().enumerate() {
+            assert!((c - (i + 1) as f64 / 10.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zipf_sample_covers_every_rank_and_stays_in_range() {
+        let cdf = zipf_cdf(5, 0.5);
+        let mut rng = Rng::new(11);
+        let mut seen = [false; 5];
+        for _ in 0..5_000 {
+            seen[zipf_sample(&cdf, rng.next_f64())] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "unvisited ranks: {seen:?}");
+        // The boundary draw u -> 1.0 must clamp into range.
+        assert_eq!(zipf_sample(&cdf, 1.0 - 1e-15), 4);
+    }
+
+    #[test]
+    fn arrival_schedule_is_deterministic_and_monotone() {
+        let cfg = LoadgenConfig {
+            per_client: 200,
+            burst_prob: 0.3,
+            burst_len: 5,
+            ..Default::default()
+        };
+        let a = arrival_offsets(&cfg, &mut Rng::new(42));
+        let b = arrival_offsets(&cfg, &mut Rng::new(42));
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_eq!(a.len(), 200);
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1], "arrival times must be non-decreasing");
+        }
+    }
+
+    #[test]
+    fn bursts_produce_zero_gap_arrivals() {
+        let cfg = LoadgenConfig {
+            per_client: 400,
+            burst_prob: 0.5,
+            burst_len: 4,
+            ..Default::default()
+        };
+        let offs = arrival_offsets(&cfg, &mut Rng::new(7));
+        let zero_gaps =
+            offs.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(
+            zero_gaps > 50,
+            "expected many back-to-back arrivals, got {zero_gaps}"
+        );
+    }
+
+    #[test]
+    fn mean_gap_matches_the_configured_rate() {
+        let cfg = LoadgenConfig {
+            per_client: 5_000,
+            mean_gap: Duration::from_micros(500),
+            burst_prob: 0.0,
+            ..Default::default()
+        };
+        let offs = arrival_offsets(&cfg, &mut Rng::new(3));
+        let mean =
+            offs.last().unwrap().as_secs_f64() / (offs.len() as f64 - 1.0);
+        assert!(
+            (mean - 500e-6).abs() < 50e-6,
+            "empirical mean gap {mean}s vs configured 500us"
+        );
+    }
+}

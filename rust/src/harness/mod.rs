@@ -4,10 +4,15 @@
 pub mod bench;
 pub mod csv;
 pub mod figures;
+pub mod loadgen;
 pub mod plot;
 
 pub use bench::{bench_artifact, measure, random_inputs, ArtifactBench, BenchConfig};
 pub use csv::{pretty, CsvTable};
+pub use loadgen::{
+    arrival_offsets, run_load, zipf_cdf, zipf_sample, LoadReport, LoadgenConfig,
+    ProgramSpec,
+};
 pub use figures::{
     ablation_schedule, figure2, figure2_sized, figure3, figure3_measured, figure4,
     figure4_sized, figure_sweep, figure_sweep_measured, paper_sizes, table1,

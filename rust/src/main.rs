@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   serve      run the GEMM service on synthetic traffic, print metrics
+//!   loadgen    open-loop bursty zipfian load against the server across
+//!              tenants and priority tiers; prints latency percentiles,
+//!              throughput, and the rejection/deadline buckets
 //!   bench      regenerate a paper figure/table (fig2|fig3|fig4|table1|all)
 //!   autotune   search the tile space for a problem size
 //!   sim        simulate one kernel configuration
@@ -20,16 +23,16 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use mlir_gemm::autotune;
 use mlir_gemm::coordinator::{
-    GemmKey, GemmRequest, PlanDb, Registry, Server, ServerConfig, ShadowConfig,
-    PLANDB_FORMAT,
+    AdmissionConfig, GemmKey, GemmRequest, PlanDb, Priority, Registry, Server,
+    ServerConfig, ShadowConfig, PLANDB_FORMAT,
 };
-use mlir_gemm::harness::{self, BenchConfig};
+use mlir_gemm::harness::{self, run_load, BenchConfig, LoadgenConfig};
 use mlir_gemm::plan::{self, PlanEnv, PlanOverride};
 use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
 use mlir_gemm::schedule::{Dtype, Schedule};
@@ -59,11 +62,18 @@ const SPEC: &[Spec] = &[
     ("out-dir", true, "bench/plans: directory for output (default reports/)"),
     ("measured", false, "bench: include real-execution subsets"),
     ("top", true, "autotune: show top-N candidates (default 8)"),
-    ("clients", true, "check-protocol: model clients, 1..=5 (default 3)"),
+    ("clients", true, "check-protocol: model clients, 1..=5 (default 3); loadgen: client threads (default 32)"),
+    ("zipf", true, "loadgen: zipf exponent over registry keys (default 1.0)"),
+    ("mean-gap-us", true, "loadgen: mean open-loop inter-arrival gap per client, microseconds (default 500)"),
+    ("burst-prob", true, "loadgen: probability an arrival opens a zero-gap burst (default 0.15)"),
+    ("tenants", true, "loadgen: comma-separated tenant names to bill requests against (default none)"),
+    ("tenant-quota", true, "loadgen: per-tenant admitted-job quota, 0 = off (default 0)"),
+    ("deadline-ms", true, "loadgen: per-request latency budget in ms (default none)"),
+    ("seed", true, "loadgen: workload seed (default 4269)"),
     ("jobs", true, "check-protocol: jobs in the real-server fault-replay leg (default 4)"),
-    ("capacity", true, "check-protocol: model submit-queue capacity (default = clients)"),
+    ("capacity", true, "check-protocol: model submit-queue capacity (default = clients); loadgen: server queue capacity (default 512)"),
     ("max-states", true, "check-protocol: state budget per scenario (default 2000000)"),
-    ("bug", true, "check-protocol: re-introduce a defect and demand its counterexample: stop-flag | stale-rebind | no-containment"),
+    ("bug", true, "check-protocol: re-introduce a defect and demand its counterexample: stop-flag | stale-rebind | no-containment | fifo-release"),
     ("help", false, "show usage"),
 ];
 
@@ -79,9 +89,9 @@ fn main() {
     if args.flag("help") || args.positional.is_empty() {
         println!("{}", usage("mlir-gemm", "MLIR GPU GEMM reproduction", SPEC));
         println!(
-            "subcommands: serve | bench <fig2|fig3|fig4|table1|all> | autotune | sim | \
-             plan <MxNxK | artifact.tprog.json> | plans | plandb | program-plans | \
-             run <artifact> | list | check-protocol"
+            "subcommands: serve | loadgen | bench <fig2|fig3|fig4|table1|all> | \
+             autotune | sim | plan <MxNxK | artifact.tprog.json> | plans | plandb | \
+             program-plans | run <artifact> | list | check-protocol"
         );
         return;
     }
@@ -131,6 +141,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "autotune" => cmd_autotune(args),
         "bench" => cmd_bench(args),
         "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "plan" => cmd_plan(args),
         "plans" => cmd_plans(args),
         "plandb" => cmd_plandb(args),
@@ -633,8 +644,13 @@ fn cmd_check_protocol(args: &Args) -> Result<()> {
                 Bugs { no_containment: true, ..Default::default() },
                 base.clone().with_poison(),
             ),
+            "fifo-release" => (
+                Bugs { fifo_release: true, ..Default::default() },
+                base.clone().with_priority().with_max_batch(1),
+            ),
             other => bail!(
-                "unknown --bug {other:?} (stop-flag | stale-rebind | no-containment)"
+                "unknown --bug {other:?} (stop-flag | stale-rebind | \
+                 no-containment | fifo-release)"
             ),
         };
         let cfg = cfg.with_bugs(bugs);
@@ -716,6 +732,22 @@ fn cmd_check_protocol(args: &Args) -> Result<()> {
         ("bounded admission overflow", base.clone().with_capacity(1), |c| {
             (!c.queue_full_rejection).then_some("the queue never filled")
         }),
+        (
+            "priority tiers release in order",
+            base.clone().with_priority().with_max_batch(1),
+            |c| {
+                (!c.priority_release)
+                    .then_some("no release ever reordered past a low-priority job")
+            },
+        ),
+        ("tenant quota exhaustion", base.clone().with_quota(1), |c| {
+            (!c.tenant_quota_rejection).then_some("the quota never rejected")
+        }),
+        (
+            "deadline lapses inside the scheduler",
+            base.clone().with_late_deadline(),
+            |c| (!c.swept_in_scheduler).then_some("no job was ever swept"),
+        ),
     ];
 
     println!(
@@ -776,6 +808,90 @@ fn cmd_check_protocol(args: &Args) -> Result<()> {
          \x20 4. jobs execute under the weights they were routed with\n\
          \x20 5. a panicking job is quarantined; batchmates complete"
     );
+    Ok(())
+}
+
+/// Open-loop load generator against a real server over the built
+/// artifact set: bursty zipfian arrivals from many client threads,
+/// weight-bound and inline GEMMs mixed across tenants and priority
+/// tiers, with the latency percentiles and rejection buckets printed at
+/// the end.  Offered load is independent of server latency (the arrival
+/// clocks never wait), so queueing shows up in p95/p99, not in a
+/// silently throttled request rate.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let d = device(args)?;
+    let rt = Arc::new(Runtime::open(&artifacts_dir(args))?);
+    let clients = args.get_usize("clients", 32)?;
+    let per_client = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", 2)?;
+    let devices = args.get_usize("devices", 1)?;
+    let tenant_quota = args.get_usize("tenant-quota", 0)?;
+    let plan = plan_override(args)?;
+    let tenants: Vec<String> = args
+        .get("tenants")
+        .map(|t| t.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
+    if tenant_quota > 0 && tenants.is_empty() {
+        bail!("--tenant-quota needs --tenants to bill against");
+    }
+
+    let server = Server::start(
+        rt,
+        &d,
+        ServerConfig {
+            workers,
+            devices,
+            plan,
+            queue_capacity: args.get_usize("capacity", 512)?,
+            admission: AdmissionConfig { tenant_quota },
+            ..Default::default()
+        },
+    );
+    let keys: Vec<GemmKey> = server.registry().keys().cloned().collect();
+    if keys.is_empty() {
+        bail!("no generated kernels registered (build artifacts first)");
+    }
+    // Bind every key's B so the weight-bound half of the mix is servable.
+    let mut rng = Rng::new(0xB1);
+    for key in &keys {
+        let b = Tensor::new(vec![key.k, key.n], rng.normal_matrix(key.k, key.n))?;
+        server.bind_weights(key, &b)?;
+    }
+
+    let cfg = LoadgenConfig {
+        clients,
+        per_client,
+        mean_gap: Duration::from_micros(args.get_usize("mean-gap-us", 500)? as u64),
+        burst_prob: args.get_f64("burst-prob", 0.15)?,
+        burst_len: 4,
+        zipf_s: args.get_f64("zipf", 1.0)?,
+        bound_fraction: 0.5,
+        program_fraction: 0.0,
+        program: None,
+        tenants,
+        priorities: vec![Priority::High, Priority::Normal, Priority::Low],
+        deadline: match args.get_usize("deadline-ms", 0)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms as u64)),
+        },
+        seed: args.get_usize("seed", 4269)? as u64,
+    };
+    println!(
+        "loadgen: {} clients x {} requests over {} keys ({} workers, \
+         zipf s={}, mean gap {:?})...",
+        cfg.clients,
+        cfg.per_client,
+        keys.len(),
+        workers,
+        cfg.zipf_s,
+        cfg.mean_gap,
+    );
+    let server = std::sync::Mutex::new(server);
+    let report = run_load(&server, &cfg, &keys);
+    println!("{}\n", report.render());
+    let mut server = server.into_inner().unwrap();
+    let snapshot = server.shutdown();
+    println!("{}", snapshot.report());
     Ok(())
 }
 

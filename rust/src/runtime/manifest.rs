@@ -103,6 +103,25 @@ pub fn parse_manifest(text: &str, base_dir: &Path) -> Result<Vec<ArtifactMeta>, 
         .get("artifacts")
         .and_then(Json::as_arr)
         .ok_or_else(|| ManifestError("missing artifacts".into()))?;
+    // Artifact names are the runtime's routing keys (registry variants,
+    // `Runtime::load`, program dispatch); a duplicate would silently
+    // shadow one kernel with another — e.g. the PR 1 AOT quirk where
+    // the ablation ladder's full-opt level shared its variant name with
+    // the identically-configured generated kernel.  Refuse the manifest
+    // outright instead.
+    let mut seen = std::collections::HashSet::new();
+    for a in arts {
+        if let Some(name) = a.get("name").and_then(Json::as_str) {
+            if !seen.insert(name) {
+                return Err(ManifestError(format!(
+                    "duplicate artifact name {name:?}: every manifest entry \
+                     must be uniquely addressable (rebuild artifacts with a \
+                     current python/compile/aot.py, which suffixes ablation \
+                     variants)"
+                )));
+            }
+        }
+    }
     arts.iter()
         .map(|a| {
             let name = a
@@ -208,5 +227,39 @@ mod tests {
     fn rejects_bad_kind() {
         let text = SAMPLE.replace("baseline", "bogus_kind");
         assert!(parse_manifest(&text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_artifact_names() {
+        // Two entries sharing a name (the PR 1 ablation/generated
+        // collision shape) must fail to parse, loudly and by name.
+        let dup = r#"{
+          "version": 1,
+          "artifacts": [
+            {
+              "name": "matmul_m256_o1111111",
+              "file": "a.tprog.json",
+              "kind": "generated",
+              "inputs": [{"shape": [256, 256], "dtype": "f32"}],
+              "outputs": [{"shape": [256, 256], "dtype": "f32"}],
+              "m": 256, "n": 256, "k": 256
+            },
+            {
+              "name": "matmul_m256_o1111111",
+              "file": "b.tprog.json",
+              "kind": "ablation",
+              "inputs": [{"shape": [256, 256], "dtype": "f32"}],
+              "outputs": [{"shape": [256, 256], "dtype": "f32"}],
+              "m": 256, "n": 256, "k": 256
+            }
+          ]
+        }"#;
+        let err = parse_manifest(dup, Path::new(".")).unwrap_err();
+        assert!(
+            err.0.contains("duplicate artifact name")
+                && err.0.contains("matmul_m256_o1111111"),
+            "{}",
+            err.0
+        );
     }
 }

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mlir_gemm::coordinator::{
-    BatchDecision, Batcher, BatcherConfig, GemmKey, GemmRequest, Queued, Server,
+    BatcherConfig, GemmKey, GemmRequest, Priority, Queued, Scheduler, Server,
     ServerConfig,
 };
 use mlir_gemm::runtime::{Runtime, Tensor};
@@ -258,7 +258,10 @@ fn sharded_server_matches_unsharded_execution_bitwise() {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn prop_batcher_never_reorders_within_variant_and_never_drops() {
+fn prop_scheduler_never_reorders_within_variant_and_never_drops() {
+    // Uniform priority, no deadlines: release order within a variant is
+    // pure FIFO, every release is immediate (continuous batching has no
+    // Wait state), and nothing is ever dropped.
     check(
         Config { cases: 64, ..Default::default() },
         |rng| {
@@ -279,44 +282,44 @@ fn prop_batcher_never_reorders_within_variant_and_never_drops() {
         },
         |(items, max_batch)| {
             let t0 = Instant::now();
-            let mut b: Batcher<usize> = Batcher::new(BatcherConfig {
+            let mut s: Scheduler<usize> = Scheduler::new(BatcherConfig {
                 max_batch: *max_batch,
                 max_wait: Duration::ZERO,
             });
             for (id, v) in items.iter().enumerate() {
-                b.push(Queued {
+                s.push(Queued {
                     variant: format!("v{v}"),
                     enqueued_at: t0,
+                    priority: Priority::Normal,
+                    deadline: None,
                     payload: id,
                 });
             }
             let mut seen: Vec<usize> = Vec::new();
             let mut per_variant_last: std::collections::HashMap<String, usize> =
                 Default::default();
-            loop {
-                match b.next_batch(t0 + Duration::from_secs(1)) {
-                    BatchDecision::Idle => break,
-                    BatchDecision::Wait(_) => {
-                        return Err("batcher waited with expired deadline".into())
+            while let Some(r) = s.next_release(t0) {
+                if r.batch.is_empty() || r.batch.len() > *max_batch {
+                    return Err(format!("batch size {}", r.batch.len()));
+                }
+                for item in r.batch {
+                    if item.variant != r.variant {
+                        return Err(format!(
+                            "mixed-variant batch: {} in {}",
+                            item.variant, r.variant
+                        ));
                     }
-                    BatchDecision::Run { variant, batch } => {
-                        if batch.is_empty() || batch.len() > *max_batch {
-                            return Err(format!("batch size {}", batch.len()));
-                        }
-                        for item in batch {
-                            // FIFO within variant
-                            if let Some(&last) = per_variant_last.get(&variant) {
-                                if item.payload <= last {
-                                    return Err(format!(
-                                        "reorder in {variant}: {} after {last}",
-                                        item.payload
-                                    ));
-                                }
-                            }
-                            per_variant_last.insert(variant.clone(), item.payload);
-                            seen.push(item.payload);
+                    // FIFO within variant
+                    if let Some(&last) = per_variant_last.get(&r.variant) {
+                        if item.payload <= last {
+                            return Err(format!(
+                                "reorder in {}: {} after {last}",
+                                r.variant, item.payload
+                            ));
                         }
                     }
+                    per_variant_last.insert(r.variant.clone(), item.payload);
+                    seen.push(item.payload);
                 }
             }
             if seen.len() != items.len() {
@@ -328,18 +331,21 @@ fn prop_batcher_never_reorders_within_variant_and_never_drops() {
 }
 
 #[test]
-fn prop_batcher_releases_any_full_variant_and_never_starves() {
-    // Regression for cross-variant head-of-line blocking: with a huge
-    // batching window, Wait is only legal while *no* variant has
-    // max_batch ready items — the pre-fix batcher waited on the head
-    // variant's window even when a different variant behind it was full.
+fn prop_scheduler_release_head_is_globally_most_urgent() {
+    // EDF within priority tiers, continuously: every release's first
+    // job carries the minimum (priority, effective deadline) key over
+    // everything still queued — no priority inversion, no deadline
+    // inversion past a tier — and the whole queue drains.
     check(
         Config { cases: 64, ..Default::default() },
         |rng| {
             let n = 2 + rng.below(30);
             let max_batch = 1 + rng.below(4);
             let variants = 1 + rng.below(3);
-            let items: Vec<usize> = (0..n).map(|_| rng.below(variants)).collect();
+            // (variant, priority 0..3, deadline offset in ms, 0 = none)
+            let items: Vec<(usize, usize, u64)> = (0..n)
+                .map(|_| (rng.below(variants), rng.below(3), rng.below(50) as u64))
+                .collect();
             (items, max_batch)
         },
         |(items, max_batch)| {
@@ -353,97 +359,58 @@ fn prop_batcher_releases_any_full_variant_and_never_starves() {
         },
         |(items, max_batch)| {
             let t0 = Instant::now();
-            let mut b: Batcher<usize> = Batcher::new(BatcherConfig {
+            let max_wait = Duration::from_millis(10);
+            let prio = |p: usize| match p {
+                0 => Priority::High,
+                1 => Priority::Normal,
+                _ => Priority::Low,
+            };
+            let mut s: Scheduler<usize> = Scheduler::new(BatcherConfig {
                 max_batch: *max_batch,
-                max_wait: Duration::from_secs(3600),
+                max_wait,
             });
-            for (id, v) in items.iter().enumerate() {
-                b.push(Queued {
+            // Shadow copy: id -> (priority, effective deadline).
+            let mut live: std::collections::HashMap<usize, (Priority, Instant)> =
+                Default::default();
+            for (id, &(v, p, dl)) in items.iter().enumerate() {
+                let deadline =
+                    (dl > 0).then(|| t0 + Duration::from_millis(dl));
+                s.push(Queued {
                     variant: format!("v{v}"),
                     enqueued_at: t0,
+                    priority: prio(p),
+                    deadline,
                     payload: id,
                 });
+                live.insert(id, (prio(p), deadline.unwrap_or(t0 + max_wait)));
             }
-            let mut released: std::collections::HashMap<String, usize> =
-                Default::default();
-            let mut per_variant_last: std::collections::HashMap<String, usize> =
-                Default::default();
-            let mut check_fifo = |variant: &String,
-                                  batch: &[Queued<usize>]|
-             -> Result<(), String> {
-                for item in batch {
-                    if let Some(&last) = per_variant_last.get(variant) {
-                        if item.payload <= last {
-                            return Err(format!(
-                                "reorder in {variant}: {} after {last}",
-                                item.payload
-                            ));
-                        }
-                    }
-                    per_variant_last.insert(variant.clone(), item.payload);
-                }
-                Ok(())
-            };
-            // Phase 1 (inside the window): full batches release, and a
-            // multi-item queue never releases a partial batch.
-            loop {
-                let queued = b.len();
-                match b.next_batch(t0) {
-                    BatchDecision::Run { variant, batch } => {
-                        if queued > 1 && batch.len() != *max_batch {
-                            return Err(format!(
-                                "partial batch of {} released inside the window",
-                                batch.len()
-                            ));
-                        }
-                        check_fifo(&variant, &batch)?;
-                        *released.entry(variant).or_insert(0) += batch.len();
-                    }
-                    BatchDecision::Wait(_) => break,
-                    BatchDecision::Idle => break,
-                }
-            }
-            // The HoL property: once we Wait, no variant may still hold a
-            // full batch.
-            if !b.is_empty() {
-                let mut remaining: std::collections::HashMap<String, usize> =
-                    Default::default();
-                for v in items.iter() {
-                    *remaining.entry(format!("v{v}")).or_insert(0) += 1;
-                }
-                for (v, n) in &released {
-                    *remaining.get_mut(v).unwrap() -= n;
-                }
-                for (v, n) in &remaining {
-                    if *n >= *max_batch {
-                        return Err(format!(
-                            "variant {v} blocked with {n} >= max_batch ready items"
-                        ));
-                    }
-                }
-            }
-            // Phase 2 (window expired): everything drains, FIFO preserved.
             let mut drained = 0usize;
-            loop {
-                match b.next_batch(t0 + Duration::from_secs(7200)) {
-                    BatchDecision::Idle => break,
-                    BatchDecision::Wait(_) => {
-                        return Err("waited with expired deadline".into())
+            while let Some(r) = s.next_release(t0) {
+                let head = r.batch.first().ok_or("empty release")?;
+                let head_key = live[&head.payload];
+                let (&best_id, &best_key) = live
+                    .iter()
+                    .min_by_key(|(id, &(p, d))| (p, d, **id))
+                    .expect("live set can't be empty while releases continue");
+                if (head_key.0, head_key.1, head.payload)
+                    != (best_key.0, best_key.1, best_id)
+                {
+                    return Err(format!(
+                        "release head {} {head_key:?} is not the most urgent \
+                         queued job {best_id} {best_key:?}",
+                        head.payload
+                    ));
+                }
+                for item in &r.batch {
+                    if item.variant != r.variant {
+                        return Err("mixed-variant batch".into());
                     }
-                    BatchDecision::Run { variant, batch } => {
-                        check_fifo(&variant, &batch)?;
-                        drained += batch.len();
-                    }
+                    live.remove(&item.payload);
+                    drained += 1;
                 }
             }
-            let phase1: usize = released.values().sum();
-            if phase1 + drained != items.len() {
-                return Err(format!(
-                    "dropped items: {} + {} != {}",
-                    phase1,
-                    drained,
-                    items.len()
-                ));
+            if drained != items.len() {
+                return Err(format!("dropped: {drained} of {}", items.len()));
             }
             Ok(())
         },

@@ -21,7 +21,13 @@ fn sound_scenario_matrix_passes_without_vacuity() {
         ("poison", base.clone().with_poison()),
         ("deadline", base.clone().with_deadline()),
         ("sharded", ModelConfig::new(2, 2).with_sharding()),
-        ("overflow", base.with_capacity(1)),
+        ("overflow", base.clone().with_capacity(1)),
+        // Continuous-batching admission scenarios (PR 10): priority
+        // tiers with a forced pick, per-tenant quota exhaustion, and a
+        // deadline lapsing inside the scheduler racing the release.
+        ("priority", base.clone().with_priority().with_max_batch(1)),
+        ("quota", ModelConfig::new(3, 1).with_quota(1)),
+        ("late-deadline", base.with_late_deadline()),
     ];
     for (name, cfg) in cases {
         let r = explore(&cfg, 500_000)
@@ -39,6 +45,11 @@ fn sound_scenario_matrix_passes_without_vacuity() {
             "deadline" => assert!(c.expired_job, "{name} vacuous: {c:?}"),
             "sharded" => assert!(c.shard_reduction, "{name} vacuous: {c:?}"),
             "overflow" => assert!(c.queue_full_rejection, "{name} vacuous: {c:?}"),
+            "priority" => assert!(c.priority_release, "{name} vacuous: {c:?}"),
+            "quota" => assert!(c.tenant_quota_rejection, "{name} vacuous: {c:?}"),
+            "late-deadline" => {
+                assert!(c.swept_in_scheduler, "{name} vacuous: {c:?}")
+            }
             _ => unreachable!(),
         }
     }
@@ -61,6 +72,11 @@ fn every_reintroduced_bug_is_caught_with_a_named_counterexample() {
             Bugs { no_containment: true, ..Default::default() },
             ModelConfig::new(2, 1).with_poison(),
             "containment",
+        ),
+        (
+            Bugs { fifo_release: true, ..Default::default() },
+            ModelConfig::new(2, 1).with_priority().with_max_batch(1),
+            "no-priority-inversion-past-deadline",
         ),
     ];
     for (bugs, cfg, want) in cases {

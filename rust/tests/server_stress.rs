@@ -27,8 +27,9 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use mlir_gemm::coordinator::{
-    seed_from_env, silence_injected_panics, FaultPlan, GemmKey, GemmRequest, Server,
-    ServerConfig, ERR_DEADLINE, ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
+    seed_from_env, silence_injected_panics, AdmissionConfig, BatcherConfig,
+    FaultPlan, GemmKey, GemmRequest, Priority, Server, ServerConfig, SubmitOpts,
+    ERR_DEADLINE, ERR_POISONED, ERR_QUEUE_FULL, ERR_SHUTDOWN,
 };
 use mlir_gemm::runtime::{KernelPolicy, Runtime, Tensor};
 use mlir_gemm::schedule::Dtype;
@@ -636,6 +637,425 @@ fn expired_deadlines_fail_explicitly_before_execution() {
         "expired queue-wait reservoir must be populated"
     );
     assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A deadline already in the past is refused *at admission*, inside
+/// `submit` itself: the explicit `ERR_DEADLINE` answer is synchronous,
+/// no queue slot is ever consumed (the live `queue_depth` stays zero
+/// throughout), and the refusals land in their own
+/// `expired_at_admission` bucket — they are deadline failures, never
+/// queue rejections.
+#[test]
+fn pre_expired_deadlines_are_refused_at_admission_without_queue_space() {
+    let plan = FaultPlan { hold_dispatch_until_shutdown: true, ..Default::default() };
+    let dir = fault_store("preexpired");
+    let mut server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 2,
+            faults: plan,
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0xA3);
+    for i in 0..6 {
+        let stale = Instant::now() - Duration::from_millis(5);
+        let (_, req) = small_request(&mut rng, &key, Some(stale));
+        let rx = server.submit(req);
+        let resp = rx
+            .try_recv()
+            .expect("pre-expired submit must be answered synchronously");
+        let msg = format!("{:#}", resp.output.unwrap_err());
+        assert!(msg.contains(ERR_DEADLINE), "{msg}");
+        assert!(msg.contains("admission"), "refusal must name the stage: {msg}");
+        assert_eq!(resp.queue_depth, 0, "refused before entering the queue");
+        assert_eq!(
+            server.queue_depth(),
+            0,
+            "pre-expired submit {i} must not occupy the queue"
+        );
+    }
+
+    // The capacity-2 queue is fully intact: two feasible jobs still
+    // admit even though six pre-expired ones were refused first.
+    let mut admitted = Vec::new();
+    for _ in 0..2 {
+        let (want, req) = small_request(&mut rng, &key, None);
+        admitted.push((want, server.submit(req)));
+    }
+    assert_eq!(server.queue_depth(), 2, "feasible jobs fill the queue normally");
+
+    let mid = server.metrics();
+    assert_eq!(mid.expired_at_admission, 6);
+    assert_eq!(mid.deadline_expired, 6, "admission refusals are deadline failures");
+    assert_eq!(mid.failed, 6);
+    assert_eq!(
+        mid.rejected, 0,
+        "an unmeetable deadline is not a queue rejection"
+    );
+
+    let m = server.shutdown();
+    for (want, rx) in &admitted {
+        let out = rx.try_recv().expect("admitted job lost").output.unwrap();
+        assert_eq!(out.data, *want);
+    }
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The headline latency bugfix, as a regression test: under the old
+/// fixed-window dispatcher a request whose deadline was shorter than
+/// the batching window *always* expired in queue — the window was
+/// charged to every request unconditionally.  Continuous batching
+/// dispatches the moment a device frees, so requests with a 500 ms
+/// budget complete comfortably even with a 10 s ordering window
+/// configured.
+#[test]
+fn deadlines_shorter_than_the_batch_window_now_complete() {
+    let dir = fault_store("shortdl");
+    let mut server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_secs(10),
+            },
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0xDD);
+    let mut pending = Vec::new();
+    for _ in 0..4 {
+        let deadline = Instant::now() + Duration::from_millis(500);
+        let (want, req) = small_request(&mut rng, &key, Some(deadline));
+        pending.push((want, server.submit(req)));
+    }
+    for (want, rx) in &pending {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let out = resp.output.expect(
+            "a deadline shorter than the configured window must now complete",
+        );
+        assert_eq!(out.data, *want);
+        assert!(
+            resp.total_latency < Duration::from_secs(10),
+            "latency {:?} ate the ordering window",
+            resp.total_latency
+        );
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 4);
+    assert_eq!(m.deadline_expired, 0);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Per-tenant quotas reject per tenant, not globally: with a quota of 2
+/// admitted jobs and a held dispatcher, tenant "acme"'s third submit is
+/// refused with an `ERR_QUEUE_FULL` error naming the tenant, while
+/// "globex" and untenanted traffic keep flowing into the same queue.
+#[test]
+fn tenant_quota_exhaustion_rejects_per_tenant_not_globally() {
+    let plan = FaultPlan { hold_dispatch_until_shutdown: true, ..Default::default() };
+    let dir = fault_store("quota");
+    let mut server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 16,
+            admission: AdmissionConfig { tenant_quota: 2 },
+            faults: plan,
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0x7A);
+    let acme = || SubmitOpts {
+        tenant: Some("acme".to_string()),
+        priority: Priority::Normal,
+    };
+    let globex = || SubmitOpts {
+        tenant: Some("globex".to_string()),
+        priority: Priority::Normal,
+    };
+
+    let mut admitted = Vec::new();
+    // acme fills its quota...
+    for _ in 0..2 {
+        let (want, req) = small_request(&mut rng, &key, None);
+        admitted.push((want, server.submit_with(req, acme())));
+    }
+    // ...then gets per-tenant rejections, synchronously, naming it.
+    for _ in 0..3 {
+        let (_, req) = small_request(&mut rng, &key, None);
+        let rx = server.submit_with(req, acme());
+        let resp = rx
+            .try_recv()
+            .expect("over-quota submit must be rejected synchronously");
+        let msg = format!("{:#}", resp.output.unwrap_err());
+        assert!(msg.contains(ERR_QUEUE_FULL), "{msg}");
+        assert!(msg.contains("acme"), "rejection must name the tenant: {msg}");
+        assert!(msg.contains("quota"), "{msg}");
+    }
+    // The queue itself is nowhere near full: globex and untenanted
+    // traffic still admit.
+    for _ in 0..2 {
+        let (want, req) = small_request(&mut rng, &key, None);
+        admitted.push((want, server.submit_with(req, globex())));
+    }
+    let (want, req) = small_request(&mut rng, &key, None);
+    admitted.push((want, server.submit(req)));
+    assert_eq!(server.queue_depth(), 5, "2 acme + 2 globex + 1 untenanted");
+
+    let mid = server.metrics();
+    assert_eq!(mid.rejected, 3);
+    assert_eq!(mid.per_tenant_rejected["acme"], 3);
+    assert!(
+        !mid.per_tenant_rejected.contains_key("globex"),
+        "globex was never rejected: {:?}",
+        mid.per_tenant_rejected
+    );
+
+    let m = server.shutdown();
+    for (want, rx) in &admitted {
+        let out = rx.try_recv().expect("admitted job lost").output.unwrap();
+        assert_eq!(out.data, *want);
+    }
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.rejected, 3);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Dispatch order under contention is priority tier first, earliest
+/// effective deadline within a tier — observable end-to-end through the
+/// per-response queue waits when every release is a single job through
+/// a single busy device.  A 40 ms injected execution per job spaces the
+/// releases far enough apart that the ordering comparison is robust on
+/// a noisy CI host.
+#[test]
+fn dispatch_order_is_priority_then_deadline_under_load() {
+    let seed = seed_from_env(0xEDF);
+    eprintln!("fault seed: {seed:#x} (replay: MLIR_GEMM_FAULT_SEED={seed})");
+    let plan = FaultPlan {
+        seed,
+        slow_exec_one_in: 1,
+        slow_exec: Duration::from_millis(40),
+        ..Default::default()
+    };
+    let dir = fault_store("edf");
+    let mut server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch: 1,
+                // Ordering slack only: no-deadline jobs sort as if due
+                // 10 s out, so explicit deadlines always beat them
+                // within a tier.
+                max_wait: Duration::from_secs(10),
+            },
+            faults: plan,
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    let mut rng = Rng::new(0xED);
+    let prio = |p: Priority| SubmitOpts { tenant: None, priority: p };
+
+    // Plug the single device, then pile up contenders while it runs.
+    let (_, plug) = small_request(&mut rng, &key, None);
+    let plug_rx = server.submit(plug);
+    std::thread::sleep(Duration::from_millis(4));
+
+    // Submission order is deliberately the *reverse* of the expected
+    // dispatch order; 40 ms of plug execution remain, so all four are
+    // in the scheduler before the device frees.
+    let (_, low_req) = small_request(&mut rng, &key, None);
+    let low = server.submit_with(low_req, prio(Priority::Low));
+    let far_deadline = Instant::now() + Duration::from_secs(5);
+    let (_, far_req) = small_request(&mut rng, &key, Some(far_deadline));
+    let far = server.submit(far_req);
+    let near_deadline = Instant::now() + Duration::from_secs(2);
+    let (_, near_req) = small_request(&mut rng, &key, Some(near_deadline));
+    let near = server.submit(near_req);
+    let (_, high_req) = small_request(&mut rng, &key, None);
+    let high = server.submit_with(high_req, prio(Priority::High));
+
+    let wait_of = |rx: &std::sync::mpsc::Receiver<
+        mlir_gemm::coordinator::GemmResponse,
+    >| {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        resp.output.expect("contended job must complete");
+        resp.queue_wait
+    };
+    plug_rx
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap()
+        .output
+        .expect("plug must complete");
+    let (w_high, w_near, w_far, w_low) =
+        (wait_of(&high), wait_of(&near), wait_of(&far), wait_of(&low));
+    let margin = Duration::from_millis(20);
+    assert!(
+        w_high + margin < w_near,
+        "high tier must dispatch before any normal job: {w_high:?} vs {w_near:?}"
+    );
+    assert!(
+        w_near + margin < w_far,
+        "within a tier the earlier deadline goes first: {w_near:?} vs {w_far:?}"
+    );
+    assert!(
+        w_far + margin < w_low,
+        "low tier dispatches last: {w_far:?} vs {w_low:?}"
+    );
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.per_priority["high"].released, 1);
+    assert_eq!(m.per_priority["low"].released, 1);
+    assert_eq!(m.per_priority["normal"].released, 3);
+    let hi = m.per_priority["high"].queue_wait.as_ref().unwrap();
+    let lo = m.per_priority["low"].queue_wait.as_ref().unwrap();
+    assert!(
+        hi.p50 < lo.p50,
+        "per-priority queue-wait rollup must reflect the tier order: \
+         high {} vs low {}",
+        hi.p50,
+        lo.p50
+    );
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Bursty multi-tenant, multi-priority traffic against a tiny queue,
+/// tight tenant quotas, and a seeded poison/jitter schedule, with
+/// shutdown racing the last burst: every response channel answers, the
+/// response-side tallies match the metrics buckets exactly, the
+/// accounting identity holds, and the per-priority submit counts sum to
+/// the global total.
+#[test]
+fn bursty_quota_and_fault_storm_keeps_accounting_exact() {
+    silence_injected_panics();
+    let seed = seed_from_env(0xB5457);
+    eprintln!("fault seed: {seed:#x} (replay: MLIR_GEMM_FAULT_SEED={seed})");
+    let plan = FaultPlan {
+        seed,
+        poison_one_in: 9,
+        slow_exec_one_in: 4,
+        slow_exec: Duration::from_millis(1),
+        delay_reply_one_in: 5,
+        delay_reply: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let dir = fault_store("burststorm");
+    let server = start_server(
+        &dir,
+        ServerConfig {
+            workers: 2,
+            queue_capacity: 4,
+            admission: AdmissionConfig { tenant_quota: 3 },
+            faults: plan,
+            ..Default::default()
+        },
+    );
+
+    let key = GemmKey::with_dtypes(24, 24, 24, Dtype::F32, Dtype::F32);
+    const CLIENTS: u64 = 3;
+    const BURSTS: usize = 4;
+    const BURST_LEN: usize = 4;
+    let tiers = [Priority::High, Priority::Normal, Priority::Low];
+    let server = Mutex::new(server);
+    let rxs = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for cid in 0..CLIENTS {
+            let server = &server;
+            let rxs = &rxs;
+            let key = &key;
+            let tiers = &tiers;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xB0B + cid);
+                let tenant = format!("tenant{}", cid % 2);
+                for burst in 0..BURSTS {
+                    // Whole burst back-to-back, then a gap: the shape
+                    // that overflows a capacity-4 queue and a quota of
+                    // 3 in spikes rather than steadily.
+                    for i in 0..BURST_LEN {
+                        let (want, req) = small_request(&mut rng, key, None);
+                        let opts = SubmitOpts {
+                            tenant: Some(tenant.clone()),
+                            priority: tiers[(burst + i) % tiers.len()],
+                        };
+                        let rx = server.lock().unwrap().submit_with(req, opts);
+                        rxs.lock().unwrap().push((want, rx));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            });
+        }
+        scope.spawn(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = server.lock().unwrap().shutdown();
+        });
+    });
+
+    let rxs = rxs.into_inner().unwrap();
+    assert_eq!(rxs.len(), CLIENTS as usize * BURSTS * BURST_LEN);
+    let (mut completed, mut rejected, mut failed) = (0u64, 0u64, 0u64);
+    let mut peak_depth = 0usize;
+    for (want, rx) in &rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("burst storm dropped a response channel");
+        peak_depth = peak_depth.max(resp.queue_depth);
+        match resp.output {
+            Ok(out) => {
+                assert_eq!(out.data, *want, "stormy success must stay exact");
+                completed += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains(ERR_QUEUE_FULL) {
+                    rejected += 1;
+                } else {
+                    assert!(
+                        msg.contains(ERR_POISONED) || msg.contains(ERR_SHUTDOWN),
+                        "failure must be an explicit, classified error: {msg}"
+                    );
+                    failed += 1;
+                }
+            }
+        }
+    }
+    // The depth signal is incremented before try_send and decremented by
+    // the dispatcher just after recv, so an admitted request can observe
+    // at most capacity + 1 (one job recv'd but not yet decremented) —
+    // never an unbounded value.
+    assert!(
+        peak_depth <= 4 + 1,
+        "backpressure signal must stay bounded by the configured capacity: {peak_depth}"
+    );
+
+    let m = server.into_inner().unwrap().metrics();
+    assert_eq!(m.submitted, rxs.len() as u64);
+    assert_eq!(m.completed, completed);
+    assert_eq!(m.rejected, rejected);
+    assert_eq!(m.failed, failed);
+    assert_eq!(m.completed + m.failed + m.rejected, m.submitted);
+    let tier_submitted: u64 = m.per_priority.values().map(|p| p.submitted).sum();
+    assert_eq!(
+        tier_submitted, m.submitted,
+        "every submit belongs to exactly one priority tier"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
